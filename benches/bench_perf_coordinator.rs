@@ -1,0 +1,76 @@
+//! §Perf — L3 micro-benchmarks: the coordinator-side hot paths that must
+//! never dominate PJRT execute time, plus the allocator/simulator/scheduler
+//! speed targets of DESIGN.md §8.
+
+use mxmoe::costmodel::micro::Specialization;
+use mxmoe::costmodel::GpuSpec;
+use mxmoe::kernelgen::{fused_plan, moe_problems};
+use mxmoe::moe::route;
+use mxmoe::quant::QuantScheme;
+use mxmoe::sched::{fifo_makespan, lpt_makespan};
+use mxmoe::tensor::matrix::matmul_nt;
+use mxmoe::tensor::Matrix;
+use mxmoe::util::timer::bench;
+use mxmoe::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xBE);
+    println!("# §Perf — L3 coordinator micro-benches");
+    println!("| path | config | mean | p99 |");
+
+    // routing (native hot path, per batch of 512 tokens, 60 experts)
+    let x = Matrix::randn(512, 128, 1.0, &mut rng);
+    let wr = Matrix::randn(60, 128, 0.2, &mut rng);
+    let s = bench(3, 20, || {
+        let r = route(&x, &wr, 4);
+        std::hint::black_box(r.per_token.len());
+    });
+    println!("| route 512 tok → 60 experts | top-4 | {:>9.1}us | {:>9.1}us |", s.mean * 1e6, s.p99 * 1e6);
+
+    // expert gather/scatter (dispatch bookkeeping)
+    let routing = route(&x, &wr, 4);
+    let s = bench(3, 20, || {
+        let mut out = Matrix::zeros(512, 128);
+        for (_e, (tokens, weights)) in routing.per_expert.iter().enumerate() {
+            if tokens.is_empty() {
+                continue;
+            }
+            let xe = x.gather_rows(tokens);
+            out.scatter_add_rows(tokens, &xe, weights);
+        }
+        std::hint::black_box(out.data[0]);
+    });
+    println!("| gather+scatter 60 experts | 512 tok | {:>9.1}us | {:>9.1}us |", s.mean * 1e6, s.p99 * 1e6);
+
+    // fused-plan generation (the kernel-generator analogue)
+    let gpu = GpuSpec::rtx4090();
+    let tokens = vec![34usize; 60];
+    let probs = moe_problems(&tokens, &vec![[QuantScheme::W4A16; 3]; 60], 2048, 2816);
+    let s = bench(2, 10, || {
+        let p = fused_plan(&gpu, &probs, Specialization::Specialized);
+        std::hint::black_box(p.tiles.len());
+    });
+    println!("| fused_plan 180 GEMMs | 60 experts | {:>9.1}us | {:>9.1}us |", s.mean * 1e6, s.p99 * 1e6);
+
+    // LPT scheduler at simulator scale
+    let costs: Vec<f64> = (0..100_000).map(|_| rng.range_f64(1e-7, 1e-5)).collect();
+    let s = bench(1, 5, || {
+        std::hint::black_box(lpt_makespan(&costs, 128));
+    });
+    println!("| LPT 100k tiles → 128 SMs | — | {:>9.1}ms | {:>9.1}ms |", s.mean * 1e3, s.p99 * 1e3);
+    let s = bench(1, 5, || {
+        std::hint::black_box(fifo_makespan(&costs, 128));
+    });
+    println!("| FIFO 100k tiles → 128 SMs | — | {:>9.1}ms | {:>9.1}ms |", s.mean * 1e3, s.p99 * 1e3);
+
+    // native matmul substrate (calibration/GPTQ hot path)
+    for (m, k, n) in [(512usize, 128usize, 64usize), (1024, 2048, 2048)] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let bt = Matrix::randn(n, k, 1.0, &mut rng);
+        let s = bench(2, 8, || {
+            std::hint::black_box(matmul_nt(&a, &bt).data[0]);
+        });
+        let gflops = 2.0 * (m * n * k) as f64 / s.mean / 1e9;
+        println!("| matmul_nt [{m},{k}]x[{n},{k}]ᵀ | {gflops:.1} GFLOP/s | {:>9.2}ms | {:>9.2}ms |", s.mean * 1e3, s.p99 * 1e3);
+    }
+}

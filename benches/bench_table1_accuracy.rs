@@ -1,0 +1,134 @@
+//! Tab. 1 — main accuracy comparison across the four models:
+//! GPTQ* (Hadamard+GPTQ, uniform) vs MxMoE at matched stored bits for
+//! weight-only 2.xx and 3.xx; QuaRot (Hadamard+RTN W4A4) vs MxMoE W5A5 for
+//! weight-activation. Metrics: held-out perplexity + probe accuracies.
+//!
+//! Paper shape to reproduce: at ~2.3 bits GPTQ* degrades sharply while
+//! MxMoE recovers a large fraction; at ~3.3 bits both are close to fp16;
+//! QuaRot W4A4 collapses while MxMoE ~5 bit is near-lossless.
+//!
+//! `MXMOE_FAST=1` restricts to one model. Full run covers all four.
+
+use anyhow::Result;
+use mxmoe::alloc::{allocate, calibrate, measure_sensitivity, Allocation, AllocatorConfig, Granularity};
+use mxmoe::costmodel::GpuSpec;
+use mxmoe::harness::{
+    build_quantized, evaluate, evaluate_fp32, hadamard_signs_for_seed, load_corpus, load_model,
+    AccuracyReport, QuantMethod,
+};
+use mxmoe::moe::ModelConfig;
+use mxmoe::quant::{QuantScheme, SchemeRegistry};
+
+const SEED: u64 = 11;
+const EVAL_SEQS: usize = 24;
+const PROBE_CASES: usize = 16;
+
+fn row(label: &str, rep: &AccuracyReport) {
+    println!(
+        "| {label:<22} | {:>5.2}-{:<5.2} | {:>7.3} | {:>6.3} | {:>6.3} | {:>6.3} | {:>6.3} |",
+        rep.avg_wbits,
+        rep.avg_abits,
+        rep.ppl,
+        rep.probes.bigram,
+        rep.probes.cloze,
+        rep.probes.copy,
+        rep.probes.mean()
+    );
+}
+
+fn run_model(name: &str) -> Result<()> {
+    let (cfg, lm) = load_model(name)?;
+    let corpus = load_corpus()?;
+    let seqs = corpus.sequences("train", cfg.seq_len);
+    let calib: Vec<&[u32]> = seqs.iter().take(8).copied().collect();
+    let gpu = GpuSpec::rtx4090();
+
+    // calibration in both bases (plain for alloc stats, rotated for GPTQ*)
+    let stats = calibrate(&lm, &calib, None)?;
+    let signs = hadamard_signs_for_seed(&cfg, SEED);
+    let stats_rot = calibrate(&lm, &calib, Some((&signs.0, &signs.1)))?;
+
+    println!("\n## {name}  (experts {}+{}, top-{})", cfg.n_experts, cfg.n_shared, cfg.topk);
+    println!("| method                 | #bits W-A   |   PPL↓  | bigram |  cloze |   copy |   avg↑ |");
+    println!("|------------------------|-------------|---------|--------|--------|--------|--------|");
+    row("baseline fp32", &evaluate_fp32(&lm, &corpus, EVAL_SEQS, PROBE_CASES));
+
+    // ---- weight-only rows at matched stored bits ----
+    // mini-dim storage floors: W2/W3 g128 clamp to k ⇒ ~2.33/3.33 avg bits
+    let wo_registry = SchemeRegistry::weight_only();
+    let sens = measure_sensitivity(&lm, &stats, &wo_registry)?;
+    for (uniform, target, label_g, label_m) in [
+        (QuantScheme::W3A16G128, 3.42, "GPTQ* 3.3b uniform", "MxMoE 3.3b mixed"),
+        (QuantScheme::W2A16G128, 2.42, "GPTQ* 2.3b uniform", "MxMoE 2.3b mixed"),
+    ] {
+        let uni = Allocation::uniform(&cfg, uniform);
+        let blocks = build_quantized(&lm, &uni, QuantMethod::HadamardGptq, &stats_rot, SEED)?;
+        row(label_g, &evaluate(&lm, &corpus, &uni, &blocks, EVAL_SEQS, PROBE_CASES));
+
+        let alloc = allocate(
+            &lm,
+            &gpu,
+            &wo_registry,
+            &stats,
+            &sens,
+            &AllocatorConfig {
+                r: 1.0, // paper: r=1 for extreme low-bit weight-only
+                target_avg_bits: target,
+                granularity: Granularity::LinearBlock,
+                batch_tokens: 512,
+            },
+        )?;
+        let blocks = build_quantized(&lm, &alloc, QuantMethod::HadamardGptq, &stats_rot, SEED)?;
+        row(label_m, &evaluate(&lm, &corpus, &alloc, &blocks, EVAL_SEQS, PROBE_CASES));
+    }
+
+    // ---- weight-activation rows ----
+    let quarot = Allocation::uniform(&cfg, QuantScheme::W4A4);
+    let blocks = build_quantized(&lm, &quarot, QuantMethod::HadamardRtn, &stats_rot, SEED)?;
+    row("QuaRot w4a4 uniform", &evaluate(&lm, &corpus, &quarot, &blocks, EVAL_SEQS, PROBE_CASES));
+
+    let wa_registry = SchemeRegistry::weight_activation();
+    let sens_wa = measure_sensitivity(&lm, &stats, &wa_registry)?;
+    let alloc = allocate(
+        &lm,
+        &gpu,
+        &wa_registry,
+        &stats,
+        &sens_wa,
+        &AllocatorConfig {
+            r: 0.75,
+            target_avg_bits: 5.0,
+            granularity: Granularity::LinearBlock,
+            batch_tokens: 512,
+        },
+    )?;
+    let blocks = build_quantized(&lm, &alloc, QuantMethod::Gptq, &stats, SEED)?;
+    row("MxMoE ~5b mixed W-A", &evaluate(&lm, &corpus, &alloc, &blocks, EVAL_SEQS, PROBE_CASES));
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    println!("# Tab. 1 — accuracy across models (mini-model reproduction)");
+    println!("# Tab. 2 — architectures:");
+    for c in ModelConfig::all_minis() {
+        println!(
+            "#   {:14} params {:>5.1}M  experts {}+{}  topk {}",
+            c.name,
+            c.param_count() as f64 / 1e6,
+            c.n_experts,
+            c.n_shared,
+            c.topk
+        );
+    }
+    let models: Vec<&str> = if mxmoe::harness::fast_mode() {
+        vec!["qwen15-mini"]
+    } else {
+        vec!["dsv2-mini", "qwen15-mini", "qwen2-mini", "mixtral-mini"]
+    };
+    for m in models {
+        if let Err(e) = run_model(m) {
+            println!("\n## {m}: SKIPPED ({e})");
+        }
+    }
+    Ok(())
+}

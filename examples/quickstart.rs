@@ -1,0 +1,71 @@
+//! Quickstart: load a trained mini MoE model, quantize its MoE blocks with
+//! MxMoE at 5 average bits, and compare perplexity against fp32 and a
+//! uniform baseline.
+//!
+//! ```bash
+//! make corpus models artifacts     # once
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use mxmoe::alloc::{allocate, calibrate, measure_sensitivity, Allocation, AllocatorConfig, Granularity};
+use mxmoe::costmodel::GpuSpec;
+use mxmoe::harness::{
+    build_quantized, evaluate, evaluate_fp32, load_corpus, load_model, QuantMethod,
+};
+use mxmoe::quant::{QuantScheme, SchemeRegistry};
+
+fn main() -> Result<()> {
+    let model = std::env::args().skip(1).find(|a| !a.starts_with('-')).unwrap_or_else(|| "qwen15-mini".into());
+    let (cfg, lm) = load_model(&model)?;
+    let corpus = load_corpus()?;
+    println!(
+        "model {model}: {} experts (+{} shared), top-{}",
+        cfg.n_experts, cfg.n_shared, cfg.topk
+    );
+
+    // 1. calibrate
+    let seqs = corpus.sequences("train", cfg.seq_len);
+    let calib: Vec<&[u32]> = seqs.iter().take(8).copied().collect();
+    println!("calibrating on {} sequences...", calib.len());
+    let stats = calibrate(&lm, &calib, None)?;
+
+    // 2. sensitivity + allocation (r = 0.75, 5-bit weight-activation)
+    let registry = SchemeRegistry::weight_activation();
+    let sens = measure_sensitivity(&lm, &stats, &registry)?;
+    let alloc = allocate(
+        &lm,
+        &GpuSpec::rtx4090(),
+        &registry,
+        &stats,
+        &sens,
+        &AllocatorConfig {
+            r: 0.75,
+            target_avg_bits: 5.0,
+            granularity: Granularity::LinearBlock,
+            batch_tokens: 512,
+        },
+    )?;
+    println!(
+        "MxMoE allocation: {:.2} avg weight bits, {:.2} avg act bits",
+        alloc.avg_weight_bits(&cfg),
+        alloc.avg_act_bits(&cfg)
+    );
+
+    // 3. quantize + evaluate
+    let fp32 = evaluate_fp32(&lm, &corpus, 16, 12);
+    println!("fp32     : ppl {:.3}  probes {:.3}", fp32.ppl, fp32.probes.mean());
+
+    let blocks = build_quantized(&lm, &alloc, QuantMethod::Gptq, &stats, 1)?;
+    let mx = evaluate(&lm, &corpus, &alloc, &blocks, 16, 12);
+    println!("MxMoE 5b : ppl {:.3}  probes {:.3}", mx.ppl, mx.probes.mean());
+
+    let uni = Allocation::uniform(&cfg, QuantScheme::W4A4);
+    let ublocks = build_quantized(&lm, &uni, QuantMethod::Rtn, &stats, 1)?;
+    let u = evaluate(&lm, &corpus, &uni, &ublocks, 16, 12);
+    println!("RTN w4a4 : ppl {:.3}  probes {:.3}", u.ppl, u.probes.mean());
+
+    assert!(mx.ppl <= u.ppl, "MxMoE should beat uniform w4a4");
+    println!("\nOK — MxMoE mixed precision beats uniform 4-bit at ~1 extra avg bit.");
+    Ok(())
+}

@@ -1,0 +1,97 @@
+"""AOT lowering: every runtime executable → HLO *text* in `artifacts/`.
+
+HLO text (NOT `lowered.compiler_ir("hlo")` protos, NOT `.serialize()`):
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Exports, per runtime scheme s ∈ {fp16, w4a16, w8a8, w4a4} and tile size
+m ∈ {16, 64, 256}: `expert_ffn_{s}_m{m}.hlo.txt` — one fused executable
+for a padded token tile through one expert (serving-model shapes:
+hidden=128, inter=64 — qwen15-mini). Plus the fused Group-GEMM whole-block
+executable and a smoke matmul for runtime tests.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.group_gemm import group_gemm
+from .model import RUNTIME_SCHEMES, example_args, expert_ffn_fn
+
+# serving-model shapes (qwen15-mini)
+HIDDEN = 128
+INTER = 64
+TILE_MS = (4, 16, 64, 256)
+# group-GEMM executable: fixed tile budget per launch
+GROUP_TILES = 64
+GROUP_TILE_M = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(path: str, lowered) -> None:
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def smoke_fn(x, y):
+    return (jnp.matmul(x, y) + 2.0,)
+
+
+def group_fp16_fn(x_tiles, expert_ids, gates, ups, downs):
+    g = group_gemm(x_tiles, expert_ids, gates)
+    u = group_gemm(x_tiles, expert_ids, ups)
+    h = g * (1.0 / (1.0 + jnp.exp(-g))) * u
+    return (group_gemm(h, expert_ids, downs),)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--experts", type=int, default=64, help="experts in the group executable")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    # smoke test artifact (runtime unit tests)
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    write(f"{args.out}/smoke_matmul.hlo.txt", jax.jit(smoke_fn).lower(spec, spec))
+
+    # per-scheme expert FFN tiles
+    for scheme in RUNTIME_SCHEMES:
+        fn = expert_ffn_fn(scheme)
+        for m in TILE_MS:
+            lowered = jax.jit(fn).lower(*example_args(scheme, m, HIDDEN, INTER))
+            write(f"{args.out}/expert_ffn_{scheme}_m{m}.hlo.txt", lowered)
+
+    # fused fp16 Group-GEMM whole-block executable
+    f32 = jnp.float32
+    e = args.experts
+    lowered = jax.jit(group_fp16_fn).lower(
+        jax.ShapeDtypeStruct((GROUP_TILES, GROUP_TILE_M, HIDDEN), f32),
+        jax.ShapeDtypeStruct((GROUP_TILES,), jnp.int32),
+        jax.ShapeDtypeStruct((e, INTER, HIDDEN), f32),
+        jax.ShapeDtypeStruct((e, INTER, HIDDEN), f32),
+        jax.ShapeDtypeStruct((e, HIDDEN, INTER), f32),
+    )
+    write(f"{args.out}/moe_group_fp16_t{GROUP_TILES}_m{GROUP_TILE_M}.hlo.txt", lowered)
+    print("AOT export complete")
+
+
+if __name__ == "__main__":
+    main()

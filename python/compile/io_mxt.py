@@ -1,0 +1,71 @@
+"""MXT tensor container — numpy side of the rust `ser::mxt` format.
+
+Layout (little-endian):
+    magic  b"MXT1"
+    u32    tensor count
+    per tensor:
+        u32 name_len, utf-8 name
+        u8  dtype (0=f32, 1=i8, 2=i32, 3=u8)
+        u32 ndim, u64 × ndim shape
+        u64 payload bytes, payload
+
+Byte-compatibility with rust is pinned by `python/tests/test_io_mxt.py`
+and `tests/mxt_roundtrip.rs`.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"MXT1"
+
+_DTYPES = {0: np.float32, 1: np.int8, 2: np.int32, 3: np.uint8}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int8): 1, np.dtype(np.int32): 2, np.dtype(np.uint8): 3}
+
+
+def save_mxt(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write named arrays (f32/i8/i32/u8) to an MXT file."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _CODES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            name_b = name.encode("utf-8")
+            f.write(struct.pack("<I", len(name_b)))
+            f.write(name_b)
+            f.write(struct.pack("<B", _CODES[arr.dtype]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            payload = arr.tobytes()
+            f.write(struct.pack("<Q", len(payload)))
+            f.write(payload)
+
+
+def load_mxt(path: str) -> dict[str, np.ndarray]:
+    """Read an MXT file into a dict of arrays."""
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError("bad MXT magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            (code,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            shape = tuple(struct.unpack("<Q", f.read(8))[0] for _ in range(ndim))
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            dtype = _DTYPES[code]
+            expected = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize if shape else np.dtype(dtype).itemsize
+            if ndim == 0:
+                expected = np.dtype(dtype).itemsize
+            if nbytes != int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize:
+                raise ValueError(f"{name}: payload {nbytes} != shape {shape}")
+            out[name] = np.frombuffer(f.read(nbytes), dtype=dtype).reshape(shape).copy()
+            del expected
+    return out

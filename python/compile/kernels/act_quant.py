@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: standalone per-token dynamic activation quantization.
+
+Used when the runtime wants quantized activations as an explicit artifact
+(e.g. feeding several same-precision GEMMs from one quantization pass,
+amortizing the amax reduction — the paper's runtime does the same before
+dispatching a token group to multiple experts)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _act_quant_kernel(x_ref, q_ref, s_ref, *, bits):
+    x = x_ref[...]
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.where(amax > 0, amax / qmax, 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x / s), -(2 ** (bits - 1)), qmax).astype(jnp.int8)
+    s_ref[...] = s
+
+
+def act_quant(x, *, bits, block_m=None):
+    """Per-token symmetric quantization: returns (codes int8 `[m,k]`,
+    scales f32 `[m,1]`)."""
+    m, k = x.shape
+    bm = block_m or m
+    assert m % bm == 0
+    return pl.pallas_call(
+        functools.partial(_act_quant_kernel, bits=bits),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x)

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: fused-dequant weight-only GEMM (W{2,4,8}A16).
+
+TPU adaptation of the paper's Marlin-class CUDA micro-kernel (§4.3,
+DESIGN.md §Hardware-Adaptation):
+
+* CUDA CTA tile + warp layout      → BlockSpec grid over (m-tile, n-tile);
+* shared-memory staging            → VMEM blocks (whole k panel per tile —
+  at the mini-model shapes a (bm=64, k=2048) int4 panel is 64 KiB, well
+  inside the ~16 MiB VMEM budget; DESIGN.md §8 documents footprints);
+* fused dequant in the MMA pipe    → in-kernel nibble/crumb unpacking with
+  shift/mask (the Kim et al. 2022 bit trick, vectorized) + scale/zero
+  multiply before the MXU `jnp.dot`;
+* tensor-core fp16 MMA             → `jnp.dot(..., preferred_element_type=f32)`.
+
+Weights arrive *physically packed* (uint8 carriers, little-end first,
+matching rust `quant::pack` and `ref.pack_codes`).
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _unpack(packed, bits, k):
+    """In-kernel unpack of uint8 carriers to uint codes `[n, k]`."""
+    per_byte = 8 // bits
+    shifts = (jnp.arange(per_byte) * bits).astype(jnp.uint32)
+    mask = jnp.uint32(2**bits - 1)
+    un = (packed.astype(jnp.uint32)[:, :, None] >> shifts[None, None, :]) & mask
+    return un.reshape(packed.shape[0], -1)[:, :k]
+
+
+def _dequant_gemm_kernel(x_ref, p_ref, s_ref, z_ref, o_ref, *, bits, group, k):
+    """One (bm, bn) output tile: unpack → dequant → MXU dot."""
+    codes = _unpack(p_ref[...], bits, k).astype(jnp.float32)  # [bn, k]
+    groups = k // group
+    cg = codes.reshape(codes.shape[0], groups, group)
+    w = (cg * s_ref[...][:, :, None] + z_ref[...][:, :, None]).reshape(codes.shape[0], k)
+    o_ref[...] = jnp.dot(x_ref[...], w.T, preferred_element_type=jnp.float32)
+
+
+def dequant_gemm(x, packed, scales, zeros, *, bits, group=-1, block_m=None, block_n=None):
+    """`y = x · dequant(W)ᵀ` with packed low-bit weights.
+
+    x: `[m, k]` f32; packed: `[n, k*bits/8]` uint8; scales/zeros:
+    `[n, k/group]` f32 (group ≤ 0 ⇒ one group of k). Returns `[m, n]` f32.
+    """
+    m, k = x.shape
+    n = packed.shape[0]
+    g = k if group <= 0 else group
+    assert k % g == 0 and scales.shape == (n, k // g) == zeros.shape
+    bm = block_m or m
+    bn = block_n or n
+    assert m % bm == 0 and n % bn == 0
+    per_byte = 8 // bits
+    kp = k // per_byte
+    gpb = k // g  # groups per row
+    kernel = functools.partial(_dequant_gemm_kernel, bits=bits, group=g, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kp), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, gpb), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, gpb), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, packed, scales, zeros)

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: the horizontally-fused Group-GEMM (§4.3's headline).
+
+One launch processes every expert's token tile: the host (rust L3
+coordinator) groups tokens by expert, pads each group to `tile_m`, and
+ships a flat tile list plus a per-tile expert-id vector. The kernel uses
+**scalar prefetch** to gather the right expert's weight block per tile —
+the TPU analogue of the paper's precision-aware tile scheduler routing CTA
+indices to micro-kernels (DESIGN.md §Hardware-Adaptation).
+
+Two variants: fp16 (fp32 carriers on CPU) and W4A16 fused-dequant. Mixed
+precision across *kernels* is the L3 scheduler's job (one executable per
+scheme, one shared task queue); within a scheme this kernel is the fused
+Group-GEMM."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _group_gemm_kernel(ids_ref, x_ref, w_ref, o_ref):
+    del ids_ref  # consumed by the index maps
+    o_ref[...] = jnp.dot(x_ref[0], w_ref[0].T, preferred_element_type=jnp.float32)[None]
+
+
+def group_gemm(x_tiles, expert_ids, weights):
+    """Grouped GEMM: `x_tiles [t, tile_m, k]`, `expert_ids [t] i32`,
+    `weights [E, n, k]` → `[t, tile_m, n]`. Tile i multiplies
+    `weights[expert_ids[i]]`."""
+    t, tile_m, k = x_tiles.shape
+    e, n, k2 = weights.shape
+    assert k == k2
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, tile_m, k), lambda i, ids: (i, 0, 0)),
+            pl.BlockSpec((1, n, k), lambda i, ids: (ids[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_m, n), lambda i, ids: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _group_gemm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, tile_m, n), jnp.float32),
+        interpret=True,
+    )(expert_ids, x_tiles, weights)
+
+
+def _group_dequant_kernel(ids_ref, x_ref, p_ref, s_ref, z_ref, o_ref, *, bits, group, k):
+    del ids_ref
+    from .dequant_gemm import _unpack
+
+    codes = _unpack(p_ref[0], bits, k).astype(jnp.float32)
+    groups = k // group
+    cg = codes.reshape(codes.shape[0], groups, group)
+    w = (cg * s_ref[0][:, :, None] + z_ref[0][:, :, None]).reshape(codes.shape[0], k)
+    o_ref[...] = jnp.dot(x_ref[0], w.T, preferred_element_type=jnp.float32)[None]
+
+
+def group_gemm_w4a16(x_tiles, expert_ids, packed, scales, zeros, *, bits=4, group=-1):
+    """Fused-dequant grouped GEMM: per-tile expert gather of *packed*
+    low-bit weights. packed `[E, n, k*bits/8]`, scales/zeros `[E, n, k/g]`."""
+    t, tile_m, k = x_tiles.shape
+    e, n, kp = packed.shape
+    g = k if group <= 0 else group
+    gpb = k // g
+    assert scales.shape == (e, n, gpb) == zeros.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, tile_m, k), lambda i, ids: (i, 0, 0)),
+            pl.BlockSpec((1, n, kp), lambda i, ids: (ids[i], 0, 0)),
+            pl.BlockSpec((1, n, gpb), lambda i, ids: (ids[i], 0, 0)),
+            pl.BlockSpec((1, n, gpb), lambda i, ids: (ids[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_m, n), lambda i, ids: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_group_dequant_kernel, bits=bits, group=g, k=k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, tile_m, n), jnp.float32),
+        interpret=True,
+    )(expert_ids, x_tiles, packed, scales, zeros)

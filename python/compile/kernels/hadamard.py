@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: randomized Hadamard rotation `x ← x·diag(s)·H/√k`.
+
+The online half of QuaRot incoherence processing (§4.2.2): activations are
+rotated on the fly before weight-activation quantization. In-kernel FWHT
+butterflies (log₂k static stages over the VMEM tile) instead of a dense
+k×k matmul — O(k log k) VPU work, no MXU, no extra HBM traffic."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hadamard_kernel(x_ref, s_ref, o_ref, *, k):
+    v = x_ref[...] * s_ref[...]
+    m = v.shape[0]
+    # FWHT: static unrolled butterfly stages (k is a compile-time constant)
+    h = 1
+    while h < k:
+        vg = v.reshape(m, k // (2 * h), 2, h)
+        a = vg[:, :, 0, :]
+        b = vg[:, :, 1, :]
+        v = jnp.stack([a + b, a - b], axis=2).reshape(m, k)
+        h *= 2
+    o_ref[...] = v * (1.0 / jnp.sqrt(jnp.float32(k)))
+
+
+def hadamard_rotate(x, signs, *, block_m=None):
+    """Rotate rows of `[m, k]` by `diag(signs)·H/√k` (k a power of two)."""
+    m, k = x.shape
+    assert k & (k - 1) == 0, "hadamard needs power-of-two k"
+    assert signs.shape == (k,)
+    bm = block_m or m
+    assert m % bm == 0
+    return pl.pallas_call(
+        functools.partial(_hadamard_kernel, k=k),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=True,
+    )(x, signs)

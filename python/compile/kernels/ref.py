@@ -1,0 +1,136 @@
+"""Pure-jnp oracles for every Pallas kernel (the L1 correctness ground
+truth). pytest checks kernel-vs-ref allclose under hypothesis sweeps."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------- quantization primitives ----------------
+
+def quant_params_sym(x, bits, axis=-1, keepdims=True):
+    """Symmetric per-slice scale: amax / qmax."""
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    return jnp.where(amax > 0, amax / qmax, 1.0)
+
+
+def fake_quant_sym(x, bits, axis=-1):
+    """Quantize→dequantize, symmetric, per-slice along `axis`."""
+    qmax = 2 ** (bits - 1) - 1
+    qmin = -(2 ** (bits - 1))
+    scale = quant_params_sym(x, bits, axis)
+    q = jnp.clip(jnp.round(x / scale), qmin, qmax)
+    return q * scale
+
+
+def quantize_sym(x, bits, axis=-1):
+    """Integer codes + scale, symmetric."""
+    qmax = 2 ** (bits - 1) - 1
+    qmin = -(2 ** (bits - 1))
+    scale = quant_params_sym(x, bits, axis)
+    q = jnp.clip(jnp.round(x / scale), qmin, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def quantize_asym_grouped(w, bits, group):
+    """Asymmetric (min-max) grouped weight quantization of `[n, k]` along k.
+
+    Returns (codes uint8 `[n, k]`, scales `[n, k//group]`, zeros same shape)
+    with dequant `w ≈ codes * scale + zero` (range forced to include 0).
+    """
+    n, k = w.shape
+    g = k if group <= 0 else group
+    assert k % g == 0
+    wg = w.reshape(n, k // g, g)
+    qmax = 2**bits - 1
+    lo = jnp.minimum(wg.min(axis=-1, keepdims=True), 0.0)
+    hi = jnp.maximum(wg.max(axis=-1, keepdims=True), 0.0)
+    scale = jnp.where(hi > lo, (hi - lo) / qmax, 1.0)
+    q = jnp.clip(jnp.round((wg - lo) / scale), 0, qmax).astype(jnp.uint8)
+    return (
+        q.reshape(n, k),
+        scale.squeeze(-1).astype(jnp.float32),
+        lo.squeeze(-1).astype(jnp.float32),
+    )
+
+
+def dequant_grouped(codes, scales, zeros):
+    """Inverse of `quantize_asym_grouped`."""
+    n, k = codes.shape
+    groups = scales.shape[1]
+    g = k // groups
+    cg = codes.reshape(n, groups, g).astype(jnp.float32)
+    return (cg * scales[:, :, None] + zeros[:, :, None]).reshape(n, k)
+
+
+# ---------------- packing ----------------
+
+def pack_codes(codes, bits):
+    """Pack uint codes into uint8, little-end first (matches rust
+    `quant::pack`): element 0 in the low bits of byte 0."""
+    per_byte = 8 // bits
+    n, k = codes.shape
+    assert k % per_byte == 0
+    c = codes.reshape(n, k // per_byte, per_byte).astype(jnp.uint32)
+    shifts = (jnp.arange(per_byte) * bits).astype(jnp.uint32)
+    packed = jnp.sum(c << shifts[None, None, :], axis=-1)
+    return packed.astype(jnp.uint8)
+
+
+def unpack_codes(packed, bits, k):
+    """Inverse of `pack_codes`."""
+    per_byte = 8 // bits
+    n = packed.shape[0]
+    p = packed.astype(jnp.uint32)
+    shifts = (jnp.arange(per_byte) * bits).astype(jnp.uint32)
+    mask = jnp.uint32(2**bits - 1)
+    un = (p[:, :, None] >> shifts[None, None, :]) & mask
+    return un.reshape(n, -1)[:, :k].astype(jnp.uint8)
+
+
+# ---------------- GEMM references ----------------
+
+def dequant_gemm_ref(x, codes, scales, zeros):
+    """W{2,4,8}A16 fused-dequant GEMM reference: y = x · dequant(W)ᵀ."""
+    w = dequant_grouped(codes, scales, zeros)
+    return x @ w.T
+
+
+def wa_gemm_ref(x, wq, wscale, bits):
+    """W{4,8}A{4,8} reference: dynamic per-token sym act quant, integer
+    matmul, rescale. `wq` int8 codes `[n, k]`, `wscale` `[n, 1]`."""
+    xq, xscale = quantize_sym(x, bits, axis=-1)
+    acc = jnp.dot(xq.astype(jnp.int32), wq.astype(jnp.int32).T)
+    return acc.astype(jnp.float32) * xscale * wscale.T
+
+
+def hadamard_matrix(k):
+    """Sylvester-construction Hadamard matrix (k a power of two)."""
+    assert k & (k - 1) == 0
+    h = jnp.array([[1.0]], dtype=jnp.float32)
+    while h.shape[0] < k:
+        h = jnp.block([[h, h], [h, -h]])
+    return h
+
+
+def hadamard_ref(x, signs):
+    """x · Q with Q = diag(signs)·H/√k (matches rust `quant::hadamard`)."""
+    k = x.shape[-1]
+    h = hadamard_matrix(k)
+    return (x * signs[None, :]) @ h / jnp.sqrt(jnp.float32(k))
+
+
+def expert_ffn_ref(x, gate_w, up_w, down_w):
+    """fp32 SwiGLU expert reference (Eq. 1)."""
+    g = x @ gate_w.T
+    u = x @ up_w.T
+    h = g * (1.0 / (1.0 + jnp.exp(-g))) * u
+    return h @ down_w.T
+
+
+def group_gemm_ref(x_tiles, expert_ids, weights):
+    """Grouped GEMM reference: tile i of `x_tiles` `[tiles, tile_m, k]`
+    (tokens grouped per expert and padded by the host) multiplies expert
+    `expert_ids[i]`'s weight from `weights` `[E, n, k]`."""
+    return jnp.einsum("tmk,tnk->tmn", x_tiles, weights[expert_ids])

@@ -1,0 +1,155 @@
+"""L2: the JAX compute graph exported to the rust runtime.
+
+Each exported function is one *expert FFN tile* under one quantization
+scheme: the unit the L3 coordinator schedules (a padded token tile through
+one expert's gate/up/down). Kernels from `kernels/` lower into the same
+HLO, so the whole expert is a single fused executable per (scheme, tile_m).
+
+Also exports the fused Group-GEMM whole-block executables (one launch for
+all experts of one scheme) used by the serving engine's batch path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dequant_gemm import dequant_gemm
+from .kernels.group_gemm import group_gemm
+from .kernels.hadamard import hadamard_rotate
+from .kernels.wa_gemm import wa_gemm
+from .kernels import ref
+
+# Schemes the runtime ships executables for (perf-path set; odd bitwidths
+# like GPTQ-3bit are accuracy-side only and never need a kernel).
+RUNTIME_SCHEMES = ("fp16", "w4a16", "w8a8", "w4a4")
+
+
+def _silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+# ---------------- expert FFN per scheme ----------------
+# Weight layouts per scheme (prepared offline by the rust quantizer or
+# `prepare_expert_weights` below):
+#   fp16  : gate/up `[inter, hidden]`, down `[hidden, inter]` f32
+#   w4a16 : packed uint8 + per-channel scales/zeros
+#   w8a8  : int8 codes + per-channel sym scales
+#   w4a4  : int8 carriers (int4 codes) + per-channel sym scales
+
+
+def expert_ffn_fp16(x, gate, up, down):
+    g = jnp.dot(x, gate.T, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, up.T, preferred_element_type=jnp.float32)
+    h = _silu(g) * u
+    return (jnp.dot(h, down.T, preferred_element_type=jnp.float32),)
+
+
+def expert_ffn_w4a16(x, gate_p, gate_s, gate_z, up_p, up_s, up_z, down_p, down_s, down_z):
+    g = dequant_gemm(x, gate_p, gate_s, gate_z, bits=4)
+    u = dequant_gemm(x, up_p, up_s, up_z, bits=4)
+    h = _silu(g) * u
+    return (dequant_gemm(h, down_p, down_s, down_z, bits=4),)
+
+
+def expert_ffn_w8a8(x, gate_q, gate_s, up_q, up_s, down_q, down_s):
+    g = wa_gemm(x, gate_q, gate_s, bits=8)
+    u = wa_gemm(x, up_q, up_s, bits=8)
+    h = _silu(g) * u
+    return (wa_gemm(h, down_q, down_s, bits=8),)
+
+
+def expert_ffn_w4a4(x, gate_q, gate_s, up_q, up_s, down_q, down_s):
+    g = wa_gemm(x, gate_q, gate_s, bits=4)
+    u = wa_gemm(x, up_q, up_s, bits=4)
+    h = _silu(g) * u
+    return (wa_gemm(h, down_q, down_s, bits=4),)
+
+
+def expert_ffn_w4a4_rot(x, signs_h, signs_i, gate_q, gate_s, up_q, up_s, down_q, down_s):
+    """W4A4 with online Hadamard rotation on both quantized axes (weights
+    must be pre-rotated to match)."""
+    xr = hadamard_rotate(x, signs_h)
+    g = wa_gemm(xr, gate_q, gate_s, bits=4)
+    u = wa_gemm(xr, up_q, up_s, bits=4)
+    h = _silu(g) * u
+    hr = hadamard_rotate(h, signs_i)
+    return (wa_gemm(hr, down_q, down_s, bits=4),)
+
+
+def moe_group_fp16(x_tiles, expert_ids, gates, ups, downs):
+    """Whole-block fused Group-GEMM (fp16): every expert's padded token
+    tile in one launch per linear."""
+    g = group_gemm(x_tiles, expert_ids, gates)
+    u = group_gemm(x_tiles, expert_ids, ups)
+    h = _silu(g) * u
+    return (group_gemm(h, expert_ids, downs),)
+
+
+# ---------------- offline weight preparation ----------------
+
+def prepare_expert_weights(scheme: str, gate, up, down):
+    """Quantize + lay out one expert's weights for `scheme`.
+
+    Returns the tuple of arrays the matching `expert_ffn_*` expects after
+    `x` (and after the sign vectors for rotated variants)."""
+    if scheme == "fp16":
+        return (gate, up, down)
+    if scheme == "w4a16":
+        out = []
+        for w in (gate, up, down):
+            codes, scales, zeros = ref.quantize_asym_grouped(w, 4, -1)
+            out += [ref.pack_codes(codes, 4), scales, zeros]
+        return tuple(out)
+    if scheme in ("w8a8", "w4a4"):
+        bits = 8 if scheme == "w8a8" else 4
+        out = []
+        for w in (gate, up, down):
+            q, s = ref.quantize_sym(w, bits, axis=-1)
+            out += [q, s]
+        return tuple(out)
+    raise ValueError(f"unknown runtime scheme '{scheme}'")
+
+
+def expert_ffn_fn(scheme: str):
+    """The jittable expert-FFN function for a runtime scheme."""
+    return {
+        "fp16": expert_ffn_fp16,
+        "w4a16": expert_ffn_w4a16,
+        "w8a8": expert_ffn_w8a8,
+        "w4a4": expert_ffn_w4a4,
+    }[scheme]
+
+
+def expert_ffn_ref(x, gate, up, down):
+    """fp32 oracle of the whole expert (shared with kernel tests)."""
+    return ref.expert_ffn_ref(x, gate, up, down)
+
+
+def example_args(scheme: str, m: int, hidden: int, inter: int):
+    """ShapeDtypeStructs for lowering `expert_ffn_fn(scheme)` at tile_m=m."""
+    f32 = jnp.float32
+    x = jax.ShapeDtypeStruct((m, hidden), f32)
+    if scheme == "fp16":
+        return (
+            x,
+            jax.ShapeDtypeStruct((inter, hidden), f32),
+            jax.ShapeDtypeStruct((inter, hidden), f32),
+            jax.ShapeDtypeStruct((hidden, inter), f32),
+        )
+    if scheme == "w4a16":
+        def trio(n, k):
+            return (
+                jax.ShapeDtypeStruct((n, k // 2), jnp.uint8),
+                jax.ShapeDtypeStruct((n, 1), f32),
+                jax.ShapeDtypeStruct((n, 1), f32),
+            )
+        return (x, *trio(inter, hidden), *trio(inter, hidden), *trio(hidden, inter))
+    if scheme in ("w8a8", "w4a4"):
+        def duo(n, k):
+            return (
+                jax.ShapeDtypeStruct((n, k), jnp.int8),
+                jax.ShapeDtypeStruct((n, 1), f32),
+            )
+        return (x, *duo(inter, hidden), *duo(inter, hidden), *duo(hidden, inter))
+    raise ValueError(scheme)

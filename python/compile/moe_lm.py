@@ -1,0 +1,171 @@
+"""Build-time JAX mini MoE LM — trainer-side twin of rust `moe::lm`.
+
+Architecture and weight naming are pinned to the rust implementation
+(`rust/src/moe/lm.rs`); parity is enforced by `tests/python_rust_parity.rs`
+against logits exported at training time. Training uses a dense
+(mask-weighted) mixture so routing stays differentiable; inference-time
+top-k dispatch in rust computes exactly the same function because
+non-selected experts get weight 0.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Config:
+    name: str
+    vocab: int = 512
+    hidden: int = 128
+    layers: int = 4
+    heads: int = 4
+    n_experts: int = 8
+    n_shared: int = 0
+    topk: int = 2
+    inter: int = 256
+    dense_first: bool = False
+    seq_len: int = 128
+
+
+CONFIGS = {
+    "mixtral-mini": Config("mixtral-mini", n_experts=8, n_shared=0, topk=2, inter=256),
+    "qwen15-mini": Config("qwen15-mini", n_experts=60, n_shared=4, topk=4, inter=64),
+    "qwen2-mini": Config("qwen2-mini", n_experts=64, n_shared=8, topk=8, inter=64),
+    "dsv2-mini": Config("dsv2-mini", n_experts=64, n_shared=2, topk=6, inter=64, dense_first=True),
+}
+
+
+def init_params(cfg: Config, key) -> dict:
+    """Initialize with the rust naming scheme (flat dict of arrays)."""
+    p = {}
+    h = cfg.hidden
+    std = 1.0 / np.sqrt(h)
+    keys = iter(jax.random.split(key, 16 + cfg.layers * (8 + 3 * (cfg.n_experts + cfg.n_shared + 1))))
+    p["embed"] = jax.random.normal(next(keys), (cfg.vocab, h)) * 1.0
+    p["head"] = jax.random.normal(next(keys), (cfg.vocab, h)) * std
+    p["ln_f"] = jnp.ones((h,))
+    for l in range(cfg.layers):
+        pre = f"layers.{l}."
+        p[pre + "ln1"] = jnp.ones((h,))
+        p[pre + "ln2"] = jnp.ones((h,))
+        for w in ("wq", "wk", "wv", "wo"):
+            p[pre + w] = jax.random.normal(next(keys), (h, h)) * std
+        if cfg.dense_first and l == 0:
+            di = cfg.inter * cfg.topk
+            p[pre + "dense.gate"] = jax.random.normal(next(keys), (di, h)) * std
+            p[pre + "dense.up"] = jax.random.normal(next(keys), (di, h)) * std
+            p[pre + "dense.down"] = jax.random.normal(next(keys), (h, di)) * (1.0 / np.sqrt(di))
+        else:
+            p[pre + "router"] = jax.random.normal(next(keys), (cfg.n_experts, h)) * std
+            sub = jax.random.split(next(keys), cfg.n_experts + cfg.n_shared)
+            for e in range(cfg.n_experts):
+                k1, k2, k3 = jax.random.split(sub[e], 3)
+                p[pre + f"expert.{e}.gate"] = jax.random.normal(k1, (cfg.inter, h)) * std
+                p[pre + f"expert.{e}.up"] = jax.random.normal(k2, (cfg.inter, h)) * std
+                p[pre + f"expert.{e}.down"] = jax.random.normal(k3, (h, cfg.inter)) * (1.0 / np.sqrt(cfg.inter))
+            for s in range(cfg.n_shared):
+                k1, k2, k3 = jax.random.split(sub[cfg.n_experts + s], 3)
+                p[pre + f"shared.{s}.gate"] = jax.random.normal(k1, (cfg.inter, h)) * std
+                p[pre + f"shared.{s}.up"] = jax.random.normal(k2, (cfg.inter, h)) * std
+                p[pre + f"shared.{s}.down"] = jax.random.normal(k3, (h, cfg.inter)) * (1.0 / np.sqrt(cfg.inter))
+    return p
+
+
+def rmsnorm(x, gain, eps=1e-6):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * gain
+
+
+def rope(x, heads, head_dim):
+    """Identical to rust `moe::lm::apply_rope` (pairs (2i, 2i+1), θ=10⁴)."""
+    t = x.shape[0]
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    i = jnp.arange(head_dim // 2, dtype=jnp.float32)[None, :]
+    theta = pos / jnp.power(10000.0, 2.0 * i / head_dim)
+    sin, cos = jnp.sin(theta), jnp.cos(theta)  # [t, hd/2]
+    xh = x.reshape(t, heads, head_dim // 2, 2)
+    a, b = xh[..., 0], xh[..., 1]
+    ar = a * cos[:, None, :] - b * sin[:, None, :]
+    br = a * sin[:, None, :] + b * cos[:, None, :]
+    return jnp.stack([ar, br], axis=-1).reshape(t, heads * head_dim)
+
+
+def silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def attention(p, pre, x, cfg: Config):
+    t = x.shape[0]
+    hd = cfg.hidden // cfg.heads
+    q = rope(x @ p[pre + "wq"].T, cfg.heads, hd)
+    k = rope(x @ p[pre + "wk"].T, cfg.heads, hd)
+    v = x @ p[pre + "wv"].T
+    qh = q.reshape(t, cfg.heads, hd).transpose(1, 0, 2)
+    kh = k.reshape(t, cfg.heads, hd).transpose(1, 0, 2)
+    vh = v.reshape(t, cfg.heads, hd).transpose(1, 0, 2)
+    scores = jnp.einsum("htd,hsd->hts", qh, kh) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None], scores, -jnp.inf)
+    att = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hts,hsd->htd", att, vh).transpose(1, 0, 2).reshape(t, cfg.hidden)
+    return ctx @ p[pre + "wo"].T
+
+
+def moe_ffn(p, pre, x, cfg: Config):
+    """Dense mask-weighted MoE (differentiable twin of top-k dispatch)."""
+    probs = jax.nn.softmax(x @ p[pre + "router"].T, axis=-1)  # [t, E]
+    topv, topi = jax.lax.top_k(probs, cfg.topk)
+    w = jnp.zeros_like(probs)
+    w = jnp.take_along_axis(
+        w, topi, axis=-1
+    )  # placeholder to keep shapes clear
+    weights = jnp.zeros_like(probs).at[jnp.arange(probs.shape[0])[:, None], topi].set(
+        topv / topv.sum(axis=-1, keepdims=True)
+    )
+    del w
+    gates = jnp.stack([p[pre + f"expert.{e}.gate"] for e in range(cfg.n_experts)])
+    ups = jnp.stack([p[pre + f"expert.{e}.up"] for e in range(cfg.n_experts)])
+    downs = jnp.stack([p[pre + f"expert.{e}.down"] for e in range(cfg.n_experts)])
+    g = jnp.einsum("th,eih->tei", x, gates)
+    u = jnp.einsum("th,eih->tei", x, ups)
+    hmid = silu(g) * u
+    y = jnp.einsum("tei,ehi->teh", hmid, downs)
+    out = jnp.einsum("teh,te->th", y, weights)
+    for s in range(cfg.n_shared):
+        gw, uw, dw = (p[pre + f"shared.{s}.{n}"] for n in ("gate", "up", "down"))
+        out = out + (silu(x @ gw.T) * (x @ uw.T)) @ dw.T
+    return out
+
+
+def dense_ffn(p, pre, x):
+    g = x @ p[pre + "dense.gate"].T
+    u = x @ p[pre + "dense.up"].T
+    return (silu(g) * u) @ p[pre + "dense.down"].T
+
+
+def forward(p, tokens, cfg: Config):
+    """Logits `[t, vocab]` for one sequence."""
+    x = p["embed"][tokens]
+    for l in range(cfg.layers):
+        pre = f"layers.{l}."
+        x = x + attention(p, pre, rmsnorm(x, p[pre + "ln1"]), cfg)
+        xn = rmsnorm(x, p[pre + "ln2"])
+        if cfg.dense_first and l == 0:
+            x = x + dense_ffn(p, pre, xn)
+        else:
+            x = x + moe_ffn(p, pre, xn, cfg)
+    return rmsnorm(x, p["ln_f"]) @ p["head"].T
+
+
+def loss_fn(p, batch, cfg: Config):
+    """Mean next-token cross-entropy over a `[b, t]` batch."""
+    logits = jax.vmap(lambda seq: forward(p, seq, cfg))(batch)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = batch[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1).squeeze(-1)
+    return nll.mean()

@@ -1,0 +1,103 @@
+"""Train the mini MoE LMs on the synthetic corpus and export MXT weights.
+
+Build-time only (`make models`). Reads `artifacts/corpus.mxt` written by
+`mxmoe gen-corpus`, trains with Adam on next-token CE, writes:
+
+* `artifacts/model_<name>.mxt`  — weights in the rust naming scheme
+* `artifacts/parity_<name>.mxt` — a fixed token sequence + this trainer's
+  logits, pinning python↔rust forward parity in `tests/python_rust_parity.rs`
+
+Usage: python -m compile.train_lm [--models a,b] [--steps N] [--out DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .io_mxt import load_mxt, save_mxt
+from .moe_lm import CONFIGS, Config, forward, init_params, loss_fn
+
+
+def adam_init(p):
+    zeros = {k: jnp.zeros_like(v) for k, v in p.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in p.items()}, "t": 0}
+
+
+def adam_step(p, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in p}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in p}
+    mhat = {k: m[k] / (1 - b1**t) for k in p}
+    vhat = {k: v[k] / (1 - b2**t) for k in p}
+    new_p = {k: p[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps) for k in p}
+    return new_p, {"m": m, "v": v, "t": t}
+
+
+def batches(train: np.ndarray, seq_len: int, batch: int, steps: int, seed: int):
+    """Deterministic batch sampler over the token stream."""
+    rng = np.random.default_rng(seed)
+    n_seq = len(train) // seq_len
+    view = train[: n_seq * seq_len].reshape(n_seq, seq_len)
+    for _ in range(steps):
+        idx = rng.integers(0, n_seq, size=batch)
+        yield jnp.asarray(view[idx])
+
+
+def train_one(name: str, corpus: dict, steps: int, batch: int, lr: float, out_dir: str):
+    cfg: Config = CONFIGS[name]
+    key = jax.random.PRNGKey(hash(name) % (2**31))
+    params = init_params(cfg, key)
+    opt = adam_init(params)
+    train = corpus["train"].astype(np.int32)
+
+    @jax.jit
+    def step(p, o, b):
+        loss, grads = jax.value_and_grad(lambda q: loss_fn(q, b, cfg))(p)
+        p2, o2 = adam_step(p, grads, o, lr)
+        return p2, o2, loss
+
+    t0 = time.time()
+    losses = []
+    for i, b in enumerate(batches(train, cfg.seq_len, batch, steps, seed=42)):
+        params, opt, loss = step(params, opt, b)
+        losses.append(float(loss))
+        if i % 20 == 0 or i == steps - 1:
+            print(f"[{name}] step {i:4d}/{steps} loss {float(loss):.4f} ({time.time()-t0:.0f}s)")
+    print(f"[{name}] loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0] * 0.9, f"{name}: training did not reduce loss"
+
+    # export weights
+    tensors = {k: np.asarray(v, dtype=np.float32) for k, v in params.items()}
+    save_mxt(f"{out_dir}/model_{name}.mxt", tensors)
+
+    # export parity pin: fixed sequence + logits
+    seq = np.asarray(corpus["valid"][: cfg.seq_len], dtype=np.int32)
+    logits = np.asarray(forward(params, jnp.asarray(seq), cfg), dtype=np.float32)
+    save_mxt(
+        f"{out_dir}/parity_{name}.mxt",
+        {"tokens": seq, "logits": logits, "final_loss": np.float32([losses[-1]])},
+    )
+    print(f"[{name}] wrote model + parity to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default=",".join(CONFIGS))
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--corpus", default="../artifacts/corpus.mxt")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    corpus = load_mxt(args.corpus)
+    for name in args.models.split(","):
+        train_one(name.strip(), corpus, args.steps, args.batch, args.lr, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""MXT format: python↔python roundtrip + byte-layout pin shared with rust
+(`rust/src/ser/mxt.rs` tests pin the same layout from the other side)."""
+
+import struct
+
+import numpy as np
+import pytest
+
+from compile.io_mxt import load_mxt, save_mxt
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "t.mxt")
+    tensors = {
+        "w": np.random.default_rng(0).normal(size=(3, 4)).astype(np.float32),
+        "ids": np.arange(-2, 6, dtype=np.int32),
+        "codes": np.arange(16, dtype=np.uint8).reshape(4, 4),
+        "q": (np.arange(8, dtype=np.int64) - 4).astype(np.int8),
+    }
+    save_mxt(path, tensors)
+    out = load_mxt(path)
+    assert set(out) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(out[k], tensors[k])
+        assert out[k].dtype == tensors[k].dtype
+
+
+def test_exact_byte_layout(tmp_path):
+    # one f32 tensor "a" of shape [2]: the byte stream is fully pinned
+    path = str(tmp_path / "pin.mxt")
+    save_mxt(path, {"a": np.array([1.0, -2.0], dtype=np.float32)})
+    with open(path, "rb") as f:
+        blob = f.read()
+    expected = (
+        b"MXT1"
+        + struct.pack("<I", 1)
+        + struct.pack("<I", 1)
+        + b"a"
+        + struct.pack("<B", 0)
+        + struct.pack("<I", 1)
+        + struct.pack("<Q", 2)
+        + struct.pack("<Q", 8)
+        + struct.pack("<ff", 1.0, -2.0)
+    )
+    assert blob == expected
+
+
+def test_rejects_bad_magic(tmp_path):
+    path = tmp_path / "bad.mxt"
+    path.write_bytes(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        load_mxt(str(path))
+
+
+def test_rejects_unsupported_dtype(tmp_path):
+    with pytest.raises(TypeError):
+        save_mxt(str(tmp_path / "x.mxt"), {"f64": np.zeros(2, dtype=np.float64)})

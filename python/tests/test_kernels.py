@@ -1,0 +1,234 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/bit-widths; assert_allclose against ref.py — the
+core correctness signal of the build-time stack.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.act_quant import act_quant
+from compile.kernels.dequant_gemm import dequant_gemm
+from compile.kernels.group_gemm import group_gemm, group_gemm_w4a16
+from compile.kernels.hadamard import hadamard_rotate
+from compile.kernels.wa_gemm import wa_gemm, wa_gemm_grouped, wa_group_gemm_ref_scales
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(key, *shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------- packing ----------------
+
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    n=st.integers(1, 6),
+    kb=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_pack_unpack_roundtrip(bits, n, kb, seed):
+    k = kb * 8  # divisible by any per_byte
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 2**bits, size=(n, k)), dtype=jnp.uint8)
+    packed = ref.pack_codes(codes, bits)
+    assert packed.shape == (n, k * bits // 8)
+    un = ref.unpack_codes(packed, bits, k)
+    np.testing.assert_array_equal(np.asarray(un), np.asarray(codes))
+
+
+def test_pack_layout_matches_rust():
+    # element 0 in the low nibble: [0xA, 0xB] -> 0xBA (rust quant::pack test)
+    p = ref.pack_codes(jnp.array([[0xA, 0xB]], dtype=jnp.uint8), 4)
+    assert int(p[0, 0]) == 0xBA
+
+
+# ---------------- dequant GEMM (W{2,4,8}A16) ----------------
+
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    m=st.sampled_from([1, 4, 16]),
+    n=st.sampled_from([8, 64]),
+    k=st.sampled_from([64, 128]),
+    group=st.sampled_from([-1, 32]),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_dequant_gemm_matches_ref(bits, m, n, k, group, seed):
+    w = rand(seed, n, k)
+    x = rand(seed + 1, m, k)
+    codes, scales, zeros = ref.quantize_asym_grouped(w, bits, group)
+    packed = ref.pack_codes(codes, bits)
+    y = dequant_gemm(x, packed, scales, zeros, bits=bits, group=group)
+    y_ref = ref.dequant_gemm_ref(x, codes, scales, zeros)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_dequant_gemm_tiled_grid():
+    # multi-tile grid must agree with single-tile
+    w = rand(7, 64, 128)
+    x = rand(8, 32, 128)
+    codes, scales, zeros = ref.quantize_asym_grouped(w, 4, -1)
+    packed = ref.pack_codes(codes, 4)
+    y1 = dequant_gemm(x, packed, scales, zeros, bits=4)
+    y2 = dequant_gemm(x, packed, scales, zeros, bits=4, block_m=8, block_n=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)
+
+
+def test_dequant_gemm_quantization_error_reasonable():
+    # end-to-end: 4-bit output close to fp32 GEMM in relative terms
+    w = rand(9, 64, 128, scale=0.1)
+    x = rand(10, 16, 128)
+    codes, scales, zeros = ref.quantize_asym_grouped(w, 4, 32)
+    packed = ref.pack_codes(codes, 4)
+    y = np.asarray(dequant_gemm(x, packed, scales, zeros, bits=4, group=32))
+    y_fp = np.asarray(x @ w.T)
+    rel = np.linalg.norm(y - y_fp) / np.linalg.norm(y_fp)
+    assert rel < 0.15, rel  # 4-bit RTN noise floor on N(0,0.1) weights
+
+
+# ---------------- weight-activation GEMM ----------------
+
+@given(
+    bits=st.sampled_from([4, 8]),
+    m=st.sampled_from([1, 8, 32]),
+    n=st.sampled_from([16, 64]),
+    k=st.sampled_from([64, 128]),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_wa_gemm_matches_ref(bits, m, n, k, seed):
+    x = rand(seed, m, k)
+    w = rand(seed + 1, n, k, scale=0.1)
+    wq, ws = ref.quantize_sym(w, bits, axis=-1)
+    y = wa_gemm(x, wq, ws, bits=bits)
+    y_ref = ref.wa_gemm_ref(x, wq, ws, bits)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+
+
+@given(
+    m=st.sampled_from([2, 8]),
+    n=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_wa_gemm_grouped_matches_ref(m, n, seed):
+    k, group = 256, 128
+    x = rand(seed, m, k)
+    w = rand(seed + 1, n, k, scale=0.1)
+    # group-quantized weights
+    wg = w.reshape(n, k // group, group)
+    qmax = 7
+    ws = jnp.maximum(jnp.max(jnp.abs(wg), axis=-1), 1e-9) / qmax
+    wq = jnp.clip(jnp.round(wg / ws[:, :, None]), -8, 7).astype(jnp.int8).reshape(n, k)
+    y = wa_gemm_grouped(x, wq, ws, bits=4, group=group)
+    y_ref = wa_group_gemm_ref_scales(x, wq, ws, 4, group)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-3, atol=1e-3)
+
+
+def test_wa_gemm_w8a8_accuracy_vs_fp32():
+    x = rand(11, 32, 128)
+    w = rand(12, 64, 128, scale=0.1)
+    wq, ws = ref.quantize_sym(w, 8, axis=-1)
+    y = np.asarray(wa_gemm(x, wq, ws, bits=8))
+    y_fp = np.asarray(x @ w.T)
+    rel = np.linalg.norm(y - y_fp) / np.linalg.norm(y_fp)
+    assert rel < 0.02, rel
+
+
+# ---------------- act quant ----------------
+
+@given(
+    bits=st.sampled_from([4, 8]),
+    m=st.sampled_from([1, 8, 64]),
+    k=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_act_quant_matches_ref(bits, m, k, seed):
+    x = rand(seed, m, k, scale=3.0)
+    q, s = act_quant(x, bits=bits)
+    q_ref, s_ref = ref.quantize_sym(x, bits, axis=-1)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-6)
+    # reconstruction bounded by half a step per element
+    recon = np.asarray(q, dtype=np.float32) * np.asarray(s)
+    assert np.max(np.abs(recon - np.asarray(x))) <= np.max(np.asarray(s)) * 0.5 + 1e-6
+
+
+# ---------------- hadamard ----------------
+
+@given(
+    m=st.sampled_from([1, 4, 16]),
+    k=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_hadamard_matches_ref(m, k, seed):
+    x = rand(seed, m, k)
+    rng = np.random.default_rng(seed)
+    signs = jnp.asarray(rng.choice([-1.0, 1.0], size=k).astype(np.float32))
+    y = hadamard_rotate(x, signs)
+    y_ref = ref.hadamard_ref(x, signs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_hadamard_preserves_gemm():
+    # (x·Q)·(W·Q)ᵀ == x·Wᵀ
+    x = rand(13, 8, 64)
+    w = rand(14, 16, 64)
+    rng = np.random.default_rng(5)
+    signs = jnp.asarray(rng.choice([-1.0, 1.0], size=64).astype(np.float32))
+    xr = hadamard_rotate(x, signs)
+    wr = hadamard_rotate(w, signs)
+    np.testing.assert_allclose(
+        np.asarray(xr @ wr.T), np.asarray(x @ w.T), rtol=1e-3, atol=1e-3
+    )
+
+
+# ---------------- group GEMM ----------------
+
+@given(
+    t=st.sampled_from([1, 4, 8]),
+    e=st.sampled_from([2, 5]),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_group_gemm_matches_ref(t, e, seed):
+    tile_m, k, n = 8, 64, 32
+    x = rand(seed, t, tile_m, k)
+    w = rand(seed + 1, e, n, k)
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, e, size=t), dtype=jnp.int32)
+    y = group_gemm(x, ids, w)
+    y_ref = ref.group_gemm_ref(x, ids, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_group_gemm_w4a16_matches_dequant():
+    t, tile_m, k, n, e = 6, 8, 128, 32, 3
+    x = rand(15, t, tile_m, k)
+    rng = np.random.default_rng(6)
+    ids = jnp.asarray(rng.integers(0, e, size=t), dtype=jnp.int32)
+    packed = []
+    scales = []
+    zeros = []
+    ws = []
+    for ei in range(e):
+        w = rand(20 + ei, n, k, scale=0.1)
+        codes, s, z = ref.quantize_asym_grouped(w, 4, -1)
+        packed.append(ref.pack_codes(codes, 4))
+        scales.append(s)
+        zeros.append(z)
+        ws.append(ref.dequant_grouped(codes, s, z))
+    packed, scales, zeros = jnp.stack(packed), jnp.stack(scales), jnp.stack(zeros)
+    wdq = jnp.stack(ws)
+    y = group_gemm_w4a16(x, ids, packed, scales, zeros, bits=4)
+    y_ref = jnp.einsum("tmk,tnk->tmn", x, wdq[ids])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,197 @@
+//! Calibration pass: offline statistics for the allocator and GPTQ
+//! (§4.2.1 "we employ a small calibration set ... expert activation
+//! patterns are gathered offline").
+
+use anyhow::Result;
+
+use crate::moe::block::LinearKind;
+use crate::moe::lm::Ffn;
+use crate::moe::MoeLm;
+use crate::quant::gptq::accumulate_hessian;
+use crate::quant::hadamard::rotate_activations;
+use crate::tensor::Matrix;
+
+/// Per-MoE-layer calibration data.
+pub struct LayerStats {
+    /// Transformer layer index.
+    pub layer: usize,
+    /// Tokens routed to each routed expert over the calibration set
+    /// (Fig. 1b right histogram).
+    pub activation_counts: Vec<usize>,
+    /// MoE-block inputs (concatenated over sequences, row-capped).
+    pub moe_inputs: Matrix,
+    /// GPTQ Hessians `Σ XᵀX` per (expert incl. shared, linear):
+    /// gate/up share the expert's input Hessian; down uses the intermediate.
+    pub hessians: Vec<[Matrix; 3]>,
+}
+
+/// Whole-model calibration data.
+pub struct CalibrationStats {
+    pub layers: Vec<LayerStats>,
+    /// Sequences used (for reporting).
+    pub n_sequences: usize,
+}
+
+/// Cap on stored MoE-input rows per layer (keeps sensitivity estimation
+/// cheap; the paper uses 128×4096-token sequences, we keep a sample).
+const MAX_INPUT_ROWS: usize = 1024;
+
+/// Run the calibration pass. When `hadamard_signs` is given
+/// (`(signs_hidden, signs_inter)` per the model's shared rotation), the
+/// Hessians are accumulated in the *rotated* basis, matching the
+/// rotate-then-GPTQ pipeline of §4.2.2.
+pub fn calibrate(
+    lm: &MoeLm,
+    seqs: &[&[u32]],
+    hadamard_signs: Option<(&[f32], &[f32])>,
+) -> Result<CalibrationStats> {
+    let cfg = &lm.cfg;
+    let total_experts = cfg.n_experts + cfg.n_shared;
+    let mut layers: Vec<LayerStats> = lm
+        .moe_blocks()
+        .iter()
+        .map(|(l, _)| LayerStats {
+            layer: *l,
+            activation_counts: vec![0; cfg.n_experts],
+            moe_inputs: Matrix::zeros(0, cfg.hidden),
+            hessians: (0..total_experts)
+                .map(|_| {
+                    [
+                        Matrix::zeros(cfg.hidden, cfg.hidden),
+                        Matrix::zeros(cfg.hidden, cfg.hidden),
+                        Matrix::zeros(cfg.inter, cfg.inter),
+                    ]
+                })
+                .collect(),
+        })
+        .collect();
+
+    for seq in seqs {
+        let (_, caps) = lm.forward_capture(seq);
+        for (li, cap) in caps.iter().enumerate() {
+            let stats = &mut layers[li];
+            debug_assert_eq!(stats.layer, cap.layer);
+            for (e, count) in cap.routing.activation_counts().iter().enumerate() {
+                stats.activation_counts[e] += count;
+            }
+            // stash block inputs (capped)
+            if stats.moe_inputs.rows < MAX_INPUT_ROWS {
+                let take = (MAX_INPUT_ROWS - stats.moe_inputs.rows).min(cap.moe_input.rows);
+                let mut data = stats.moe_inputs.data.clone();
+                data.extend_from_slice(&cap.moe_input.data[..take * cfg.hidden]);
+                stats.moe_inputs =
+                    Matrix::from_vec(stats.moe_inputs.rows + take, cfg.hidden, data);
+            }
+            // Hessians per expert
+            let block = match &lm.layers[cap.layer].ffn {
+                Ffn::Moe(b) => b,
+                Ffn::Dense(_) => unreachable!("capture only fires on MoE layers"),
+            };
+            for e in 0..total_experts {
+                let xe = if e < cfg.n_experts {
+                    let tokens = cap.routing.tokens_of(e);
+                    if tokens.is_empty() {
+                        continue;
+                    }
+                    cap.moe_input.gather_rows(tokens)
+                } else {
+                    cap.moe_input.clone() // shared experts see all tokens
+                };
+                let inter = block.expert_at(e).intermediate(&xe);
+                let (x_in, h_in) = match hadamard_signs {
+                    Some((sh, si)) => (
+                        rotate_activations(&xe, sh),
+                        rotate_activations(&inter, si),
+                    ),
+                    None => (xe, inter),
+                };
+                accumulate_hessian(&mut layers[li].hessians[e][LinearKind::Gate.idx()], &x_in);
+                // gate and up share inputs: copy instead of re-accumulating
+                let gate_h = layers[li].hessians[e][LinearKind::Gate.idx()].clone();
+                layers[li].hessians[e][LinearKind::Up.idx()] = gate_h;
+                accumulate_hessian(&mut layers[li].hessians[e][LinearKind::Down.idx()], &h_in);
+            }
+        }
+    }
+
+    Ok(CalibrationStats { layers, n_sequences: seqs.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::ModelConfig;
+    use crate::util::Rng;
+
+    fn tiny() -> (MoeLm, Vec<Vec<u32>>) {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            vocab: 32,
+            hidden: 16,
+            layers: 2,
+            heads: 2,
+            n_experts: 4,
+            n_shared: 1,
+            topk: 2,
+            inter: 8,
+            dense_first: false,
+            seq_len: 16,
+        };
+        let mut rng = Rng::new(140);
+        let lm = MoeLm::random(&cfg, &mut rng);
+        let seqs: Vec<Vec<u32>> = (0..4)
+            .map(|_| (0..16).map(|_| rng.below(32) as u32).collect())
+            .collect();
+        (lm, seqs)
+    }
+
+    #[test]
+    fn calibration_counts_and_shapes() {
+        let (lm, seqs) = tiny();
+        let refs: Vec<&[u32]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let stats = calibrate(&lm, &refs, None).unwrap();
+        assert_eq!(stats.layers.len(), 2);
+        for ls in &stats.layers {
+            // every token activates topk experts
+            assert_eq!(ls.activation_counts.iter().sum::<usize>(), 4 * 16 * 2);
+            assert_eq!(ls.moe_inputs.rows, 64);
+            assert_eq!(ls.hessians.len(), 5);
+            // gate hessian == up hessian, shapes right
+            assert_eq!(ls.hessians[0][0].rows, 16);
+            assert_eq!(ls.hessians[0][2].rows, 8);
+            assert_eq!(ls.hessians[1][0], ls.hessians[1][1]);
+        }
+    }
+
+    #[test]
+    fn shared_expert_hessian_sees_all_tokens() {
+        let (lm, seqs) = tiny();
+        let refs: Vec<&[u32]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let stats = calibrate(&lm, &refs, None).unwrap();
+        let ls = &stats.layers[0];
+        // shared expert (index 4) Hessian trace ≥ any routed expert's
+        let trace = |m: &Matrix| (0..m.rows).map(|i| m.at(i, i) as f64).sum::<f64>();
+        let shared_tr = trace(&ls.hessians[4][0]);
+        for e in 0..4 {
+            assert!(shared_tr >= trace(&ls.hessians[e][0]) - 1e-6);
+        }
+    }
+
+    #[test]
+    fn rotated_hessians_differ_but_same_trace_scale() {
+        let (lm, seqs) = tiny();
+        let refs: Vec<&[u32]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let mut rng = Rng::new(141);
+        let sh = crate::quant::hadamard::random_signs(16, &mut rng);
+        let si = crate::quant::hadamard::random_signs(8, &mut rng);
+        let plain = calibrate(&lm, &refs, None).unwrap();
+        let rot = calibrate(&lm, &refs, Some((&sh, &si))).unwrap();
+        let trace = |m: &Matrix| (0..m.rows).map(|i| m.at(i, i) as f64).sum::<f64>();
+        // rotation is orthogonal: total energy (trace of XᵀX) is preserved
+        let t_plain = trace(&plain.layers[0].hessians[4][0]);
+        let t_rot = trace(&rot.layers[0].hessians[4][0]);
+        assert!((t_plain - t_rot).abs() / t_plain < 1e-3, "{t_plain} vs {t_rot}");
+        // but the matrices themselves differ
+        assert!(plain.layers[0].hessians[4][0].l2_distance(&rot.layers[0].hessians[4][0]) > 1e-3);
+    }
+}

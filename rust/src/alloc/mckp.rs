@@ -1,0 +1,343 @@
+//! The allocation ILP (Eq. 7) as a multiple-choice knapsack.
+//!
+//! Exactly one scheme per linear block (group), minimize `L^r · T^(1−r)`
+//! subject to `Σ bytes ≤ budget`. The objective is non-linear but monotone
+//! in both `L = Σ Δ` and `T = Σ c/P`, so we sweep a scalarization weight λ
+//! and solve each linear MCKP `min λ·L̂ + (1−λ)·T̂` by Lagrangian relaxation
+//! of the memory constraint (bisection on the multiplier — each evaluation
+//! is a per-group argmin, so the whole solve is near-linear), followed by a
+//! greedy budget-slack repair. The best feasible solution under the true
+//! objective wins. An exact exponential solver validates optimality on
+//! small instances in tests.
+
+use anyhow::{bail, Result};
+
+use crate::quant::scheme::QuantScheme;
+
+/// One scheme choice for one linear block.
+#[derive(Clone, Copy, Debug)]
+pub struct Item {
+    pub scheme: QuantScheme,
+    /// Δ_{i,j,k} — quantization loss contribution.
+    pub delta: f64,
+    /// Runtime contribution (Σ best-tile cost / P), seconds.
+    pub time: f64,
+    /// Stored weight bytes.
+    pub bytes: f64,
+}
+
+/// A group = one linear block (or one expert at expert granularity).
+#[derive(Clone, Debug)]
+pub struct McKpGroup {
+    pub block: usize,
+    pub expert: usize,
+    /// 0/1/2 = gate/up/down; 3 = whole-expert group.
+    pub linear: usize,
+    pub items: Vec<Item>,
+}
+
+/// Allocation granularity (Tab. 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    LinearBlock,
+    Expert,
+}
+
+/// Solver output.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    pub choices: Vec<usize>,
+    pub l: f64,
+    pub t: f64,
+    pub bytes: f64,
+    pub objective: f64,
+}
+
+fn evaluate(groups: &[McKpGroup], choices: &[usize], r: f64) -> Solution {
+    let mut l = 0.0;
+    let mut t = 0.0;
+    let mut bytes = 0.0;
+    for (g, &c) in groups.iter().zip(choices) {
+        l += g.items[c].delta;
+        t += g.items[c].time;
+        bytes += g.items[c].bytes;
+    }
+    Solution { choices: choices.to_vec(), l, t, bytes, objective: objective(l, t, r) }
+}
+
+/// `L^r · T^(1−r)` with an epsilon guard (L can be 0 if everything stays fp16).
+pub fn objective(l: f64, t: f64, r: f64) -> f64 {
+    l.max(1e-12).powf(r) * t.max(1e-12).powf(1.0 - r)
+}
+
+/// Per-group argmin of `cost + μ·bytes`.
+fn lagrangian_pick(groups: &[McKpGroup], costs: &[Vec<f64>], mu: f64) -> Vec<usize> {
+    groups
+        .iter()
+        .enumerate()
+        .map(|(gi, g)| {
+            let mut best = 0;
+            let mut best_v = f64::INFINITY;
+            for (i, item) in g.items.iter().enumerate() {
+                let v = costs[gi][i] + mu * item.bytes;
+                if v < best_v {
+                    best_v = v;
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+fn total_bytes(groups: &[McKpGroup], choices: &[usize]) -> f64 {
+    groups.iter().zip(choices).map(|(g, &c)| g.items[c].bytes).sum()
+}
+
+/// Greedy repair: spend leftover budget on the largest scalar-cost
+/// reductions per extra byte.
+fn greedy_upgrade(groups: &[McKpGroup], costs: &[Vec<f64>], choices: &mut [usize], budget: f64) {
+    let mut used = total_bytes(groups, choices);
+    loop {
+        let mut best: Option<(usize, usize, f64)> = None; // (group, item, gain/byte)
+        for (gi, g) in groups.iter().enumerate() {
+            let cur = choices[gi];
+            for (i, item) in g.items.iter().enumerate() {
+                let extra = item.bytes - g.items[cur].bytes;
+                let gain = costs[gi][cur] - costs[gi][i];
+                if gain <= 0.0 || used + extra > budget {
+                    continue;
+                }
+                let rate = if extra <= 0.0 { f64::INFINITY } else { gain / extra };
+                if best.map_or(true, |(_, _, r)| rate > r) {
+                    best = Some((gi, i, rate));
+                }
+            }
+        }
+        match best {
+            Some((gi, i, _)) => {
+                used += groups[gi].items[i].bytes - groups[gi].items[choices[gi]].bytes;
+                choices[gi] = i;
+            }
+            None => break,
+        }
+    }
+}
+
+/// Solve the allocation MCKP. `r` ∈ [0,1]; `budget` in bytes.
+pub fn solve_mckp(groups: &[McKpGroup], r: f64, budget: f64) -> Result<Solution> {
+    if groups.is_empty() {
+        bail!("solve_mckp: no groups");
+    }
+    // feasibility: even the smallest-bytes choice must fit
+    let min_bytes: f64 = groups
+        .iter()
+        .map(|g| g.items.iter().map(|i| i.bytes).fold(f64::INFINITY, f64::min))
+        .sum();
+    if min_bytes > budget {
+        bail!("infeasible: minimum storage {min_bytes:.0} B exceeds budget {budget:.0} B");
+    }
+    // normalization scales so λ spans the trade-off meaningfully
+    let l_scale = groups
+        .iter()
+        .map(|g| g.items.iter().map(|i| i.delta).fold(f64::INFINITY, f64::min))
+        .sum::<f64>()
+        .max(1e-12);
+    let t_scale = groups
+        .iter()
+        .map(|g| g.items.iter().map(|i| i.time).fold(f64::INFINITY, f64::min))
+        .sum::<f64>()
+        .max(1e-12);
+
+    let mut best: Option<Solution> = None;
+    // λ sweep includes the pure-accuracy (r=1-ish) and pure-speed ends
+    let lambdas: Vec<f64> = if r >= 1.0 {
+        vec![1.0]
+    } else if r <= 0.0 {
+        vec![0.0]
+    } else {
+        (0..=10).map(|i| i as f64 / 10.0).collect()
+    };
+    for &lambda in &lambdas {
+        let costs: Vec<Vec<f64>> = groups
+            .iter()
+            .map(|g| {
+                g.items
+                    .iter()
+                    .map(|i| lambda * i.delta / l_scale + (1.0 - lambda) * i.time / t_scale)
+                    .collect()
+            })
+            .collect();
+        // μ = 0 first
+        let mut choices = lagrangian_pick(groups, &costs, 0.0);
+        if total_bytes(groups, &choices) > budget {
+            // bisect μ to meet the budget
+            let mut lo = 0.0f64;
+            let mut hi = 1e-6;
+            while total_bytes(groups, &lagrangian_pick(groups, &costs, hi)) > budget {
+                hi *= 4.0;
+                if hi > 1e12 {
+                    bail!("budget bisection diverged");
+                }
+            }
+            for _ in 0..60 {
+                let mid = 0.5 * (lo + hi);
+                if total_bytes(groups, &lagrangian_pick(groups, &costs, mid)) > budget {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            choices = lagrangian_pick(groups, &costs, hi);
+        }
+        greedy_upgrade(groups, &costs, &mut choices, budget);
+        let sol = evaluate(groups, &choices, r);
+        debug_assert!(sol.bytes <= budget * (1.0 + 1e-9));
+        if best.as_ref().map_or(true, |b| sol.objective < b.objective) {
+            best = Some(sol);
+        }
+    }
+    Ok(best.unwrap())
+}
+
+/// Exact exponential solver for validation (≤ ~8 groups).
+pub fn solve_exact(groups: &[McKpGroup], r: f64, budget: f64) -> Option<Solution> {
+    assert!(groups.len() <= 10, "exact solver is exponential");
+    let mut best: Option<Solution> = None;
+    let mut choices = vec![0usize; groups.len()];
+    fn rec(
+        groups: &[McKpGroup],
+        gi: usize,
+        choices: &mut Vec<usize>,
+        r: f64,
+        budget: f64,
+        best: &mut Option<Solution>,
+    ) {
+        if gi == groups.len() {
+            let sol = evaluate(groups, choices, r);
+            if sol.bytes <= budget && best.as_ref().map_or(true, |b| sol.objective < b.objective) {
+                *best = Some(sol);
+            }
+            return;
+        }
+        for i in 0..groups[gi].items.len() {
+            choices[gi] = i;
+            rec(groups, gi + 1, choices, r, budget, best);
+        }
+    }
+    rec(groups, 0, &mut choices, r, budget, &mut best);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_groups(n: usize, items: usize, rng: &mut Rng) -> Vec<McKpGroup> {
+        (0..n)
+            .map(|gi| McKpGroup {
+                block: 0,
+                expert: gi,
+                linear: 0,
+                items: (0..items)
+                    .map(|i| {
+                        // realistic structure: more bytes ⇒ less delta, and
+                        // a loose delta/time anticorrelation with noise
+                        let bytes = (i + 1) as f64 * 100.0;
+                        Item {
+                            scheme: QuantScheme::FP16,
+                            delta: rng.range_f64(0.5, 1.5) / (i + 1) as f64,
+                            time: rng.range_f64(0.5, 1.5) * (0.3 + 0.1 * i as f64),
+                            bytes,
+                        }
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn respects_budget() {
+        let mut rng = Rng::new(160);
+        let groups = random_groups(40, 4, &mut rng);
+        for budget in [4500.0, 8000.0, 16000.0] {
+            let sol = solve_mckp(&groups, 0.75, budget).unwrap();
+            assert!(sol.bytes <= budget + 1e-6, "bytes {} budget {budget}", sol.bytes);
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_errors() {
+        let mut rng = Rng::new(161);
+        let groups = random_groups(5, 3, &mut rng);
+        assert!(solve_mckp(&groups, 0.75, 100.0).is_err());
+    }
+
+    #[test]
+    fn r_one_minimizes_loss_only() {
+        let mut rng = Rng::new(162);
+        let groups = random_groups(30, 4, &mut rng);
+        let budget = 30.0 * 400.0; // everything affordable
+        let sol = solve_mckp(&groups, 1.0, budget).unwrap();
+        // with unlimited budget and r=1, every group takes its min-delta item
+        for (g, &c) in groups.iter().zip(&sol.choices) {
+            let min_d = g.items.iter().map(|i| i.delta).fold(f64::INFINITY, f64::min);
+            assert!((g.items[c].delta - min_d).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn r_zero_minimizes_time_only() {
+        let mut rng = Rng::new(163);
+        let groups = random_groups(30, 4, &mut rng);
+        let budget = 30.0 * 400.0;
+        let sol = solve_mckp(&groups, 0.0, budget).unwrap();
+        for (g, &c) in groups.iter().zip(&sol.choices) {
+            let min_t = g.items.iter().map(|i| i.time).fold(f64::INFINITY, f64::min);
+            assert!((g.items[c].time - min_t).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn near_optimal_vs_exact_small() {
+        let mut rng = Rng::new(164);
+        for trial in 0..10 {
+            let groups = random_groups(6, 3, &mut rng);
+            let budget = rng.range_f64(900.0, 1800.0);
+            let exact = match solve_exact(&groups, 0.75, budget) {
+                Some(s) => s,
+                None => continue,
+            };
+            let heur = solve_mckp(&groups, 0.75, budget).unwrap();
+            assert!(
+                heur.objective <= exact.objective * 1.15 + 1e-12,
+                "trial {trial}: heuristic {} vs exact {}",
+                heur.objective,
+                exact.objective
+            );
+        }
+    }
+
+    #[test]
+    fn tighter_budget_never_improves_objective() {
+        let mut rng = Rng::new(165);
+        let groups = random_groups(25, 4, &mut rng);
+        let loose = solve_mckp(&groups, 0.75, 25.0 * 400.0).unwrap();
+        let tight = solve_mckp(&groups, 0.75, 25.0 * 150.0).unwrap();
+        assert!(tight.objective >= loose.objective - 1e-12);
+    }
+
+    #[test]
+    fn smaller_r_trades_loss_for_time() {
+        let mut rng = Rng::new(166);
+        let groups = random_groups(50, 4, &mut rng);
+        let budget = 50.0 * 400.0;
+        let acc = solve_mckp(&groups, 1.0, budget).unwrap();
+        let fast = solve_mckp(&groups, 0.0, budget).unwrap();
+        assert!(fast.t <= acc.t + 1e-12);
+        assert!(acc.l <= fast.l + 1e-12);
+        let mid = solve_mckp(&groups, 0.5, budget).unwrap();
+        assert!(mid.t <= acc.t + 1e-12 && mid.l <= fast.l + 1e-12);
+    }
+}

@@ -1,0 +1,234 @@
+//! Quantization sensitivity Δ_{i,j,k} (Eq. 6): the L2 output distortion of
+//! an MoE block when exactly one linear block is quantized with one scheme.
+//!
+//! Efficient form: the block output is a sum of per-expert contributions,
+//! so quantizing one linear of expert `i` only changes expert `i`'s
+//! contribution — we compute each expert's fp32 output once and re-run only
+//! the perturbed expert per scheme.
+
+use anyhow::Result;
+
+use crate::moe::block::{LinearKind, MoeBlock};
+use crate::moe::lm::Ffn;
+use crate::moe::MoeLm;
+use crate::quant::scheme::{QuantScheme, SchemeRegistry};
+use crate::quant::uniform::{fake_quant_matrix, fake_quant_rows_act};
+use crate::tensor::matrix::matmul_nt;
+use crate::tensor::ops::silu;
+use crate::tensor::Matrix;
+use crate::util::threadpool::parallel_for;
+
+use super::calibrate::CalibrationStats;
+
+/// Δ values indexed `[block][expert][linear][scheme]` (scheme order follows
+/// the registry used at measurement).
+pub struct SensitivityTable {
+    pub schemes: Vec<QuantScheme>,
+    pub delta: Vec<Vec<[Vec<f64>; 3]>>,
+}
+
+impl SensitivityTable {
+    /// Δ for (block, expert, linear, scheme); fp16/unknown schemes are 0.
+    pub fn delta(&self, block: usize, expert: usize, linear: usize, s: &QuantScheme) -> f64 {
+        if s.is_fp16() {
+            return 0.0;
+        }
+        match self.schemes.iter().position(|x| x == s) {
+            Some(si) => self.delta[block][expert][linear][si],
+            None => 0.0,
+        }
+    }
+}
+
+/// Quantized forward of one expert with exactly one linear perturbed.
+fn expert_forward_one_quant(
+    block: &MoeBlock,
+    expert: usize,
+    x: &Matrix,
+    kind: LinearKind,
+    s: &QuantScheme,
+) -> Matrix {
+    let e = block.expert_at(expert);
+    let quant_w = |w: &Matrix| fake_quant_matrix(w, s.wbits, s.wgroup, s.wsym);
+    let maybe = |w: &Matrix, k: LinearKind| if k == kind { quant_w(w) } else { w.clone() };
+    let gate = maybe(&e.gate, LinearKind::Gate);
+    let up = maybe(&e.up, LinearKind::Up);
+    let down = maybe(&e.down, LinearKind::Down);
+    let x_g = if kind == LinearKind::Gate { fake_quant_rows_act(x, s.abits, s.agroup) } else { x.clone() };
+    let x_u = if kind == LinearKind::Up { fake_quant_rows_act(x, s.abits, s.agroup) } else { x.clone() };
+    let g = matmul_nt(&x_g, &gate);
+    let u = matmul_nt(&x_u, &up);
+    let mut h = Matrix::zeros(g.rows, g.cols);
+    for i in 0..g.data.len() {
+        h.data[i] = silu(g.data[i]) * u.data[i];
+    }
+    let h_in = if kind == LinearKind::Down { fake_quant_rows_act(&h, s.abits, s.agroup) } else { h };
+    matmul_nt(&h_in, &down)
+}
+
+/// Measure the full sensitivity table over the calibration inputs.
+pub fn measure_sensitivity(
+    lm: &MoeLm,
+    stats: &CalibrationStats,
+    registry: &SchemeRegistry,
+) -> Result<SensitivityTable> {
+    let cfg = &lm.cfg;
+    let total_experts = cfg.n_experts + cfg.n_shared;
+    let schemes: Vec<QuantScheme> =
+        registry.schemes.iter().copied().filter(|s| !s.is_fp16()).collect();
+    let mut table: Vec<Vec<[Vec<f64>; 3]>> = Vec::with_capacity(stats.layers.len());
+
+    for ls in &stats.layers {
+        let block = match &lm.layers[ls.layer].ffn {
+            Ffn::Moe(b) => b,
+            Ffn::Dense(_) => unreachable!(),
+        };
+        let x = &ls.moe_inputs;
+        let routing = crate::moe::route(x, &block.w_router, block.topk);
+        // fp32 contribution of each expert (weighted outputs on its tokens)
+        let mut fp32_out: Vec<Matrix> = Vec::with_capacity(total_experts);
+        let mut token_sets: Vec<(Vec<usize>, Vec<f32>)> = Vec::with_capacity(total_experts);
+        for e in 0..total_experts {
+            if e < cfg.n_experts {
+                let (tokens, weights) = &routing.per_expert[e];
+                let xe = x.gather_rows(tokens);
+                fp32_out.push(block.expert_at(e).forward(&xe));
+                token_sets.push((tokens.clone(), weights.clone()));
+            } else {
+                fp32_out.push(block.expert_at(e).forward(x));
+                token_sets.push(((0..x.rows).collect(), vec![1.0; x.rows]));
+            }
+        }
+
+        // Δ for every (expert, linear, scheme) in parallel
+        let mut layer_table: Vec<[Vec<f64>; 3]> = (0..total_experts)
+            .map(|_| {
+                [
+                    vec![0.0; schemes.len()],
+                    vec![0.0; schemes.len()],
+                    vec![0.0; schemes.len()],
+                ]
+            })
+            .collect();
+        {
+            let n_schemes = schemes.len();
+            let cells: Vec<(usize, usize, usize)> = (0..total_experts)
+                .flat_map(|e| {
+                    (0..3usize).flat_map(move |j| (0..n_schemes).map(move |si| (e, j, si)))
+                })
+                .collect();
+            let results: Vec<std::sync::Mutex<f64>> =
+                cells.iter().map(|_| std::sync::Mutex::new(0.0)).collect();
+            parallel_for(cells.len(), |ci| {
+                let (e, j, si) = cells[ci];
+                let (tokens, weights) = &token_sets[e];
+                if tokens.is_empty() {
+                    return;
+                }
+                let xe = x.gather_rows(tokens);
+                let kind = LinearKind::ALL[j];
+                let yq = expert_forward_one_quant(block, e, &xe, kind, &schemes[si]);
+                // Δ = || (ŷ − y) ⊙ gate_weights ||₂ over this expert's tokens
+                let mut d2 = 0.0f64;
+                for (t, &w) in weights.iter().enumerate() {
+                    for c in 0..yq.cols {
+                        let diff = ((yq.at(t, c) - fp32_out[e].at(t, c)) * w) as f64;
+                        d2 += diff * diff;
+                    }
+                }
+                *results[ci].lock().unwrap() = d2.sqrt();
+            });
+            for (ci, &(e, j, si)) in cells.iter().enumerate() {
+                layer_table[e][j][si] = *results[ci].lock().unwrap();
+            }
+        }
+        table.push(layer_table);
+    }
+
+    Ok(SensitivityTable { schemes, delta: table })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::calibrate::calibrate;
+    use crate::moe::ModelConfig;
+    use crate::util::Rng;
+
+    fn setup() -> (MoeLm, CalibrationStats) {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            vocab: 32,
+            hidden: 32,
+            layers: 2,
+            heads: 2,
+            n_experts: 6,
+            n_shared: 1,
+            topk: 2,
+            inter: 16,
+            dense_first: false,
+            seq_len: 16,
+        };
+        let mut rng = Rng::new(150);
+        let lm = MoeLm::random(&cfg, &mut rng);
+        let seqs: Vec<Vec<u32>> = (0..6)
+            .map(|_| (0..16).map(|_| rng.below(32) as u32).collect())
+            .collect();
+        let refs: Vec<&[u32]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let stats = calibrate(&lm, &refs, None).unwrap();
+        (lm, stats)
+    }
+
+    #[test]
+    fn sensitivity_monotone_in_bits() {
+        let (lm, stats) = setup();
+        let reg = SchemeRegistry {
+            schemes: vec![QuantScheme::W2A16, QuantScheme::W4A16, QuantScheme::W8A16],
+        };
+        let t = measure_sensitivity(&lm, &stats, &reg).unwrap();
+        let mut checked = 0;
+        for b in 0..t.delta.len() {
+            for e in 0..t.delta[b].len() {
+                for j in 0..3 {
+                    let d2 = t.delta(b, e, j, &QuantScheme::W2A16);
+                    let d4 = t.delta(b, e, j, &QuantScheme::W4A16);
+                    let d8 = t.delta(b, e, j, &QuantScheme::W8A16);
+                    if d2 == 0.0 {
+                        continue; // expert saw no tokens
+                    }
+                    assert!(d2 > d4 && d4 > d8, "({b},{e},{j}): {d2} {d4} {d8}");
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 10);
+    }
+
+    #[test]
+    fn sensitivity_heterogeneous_across_blocks() {
+        // Fig. 1a: the spread across linear blocks must be substantial
+        let (lm, stats) = setup();
+        let reg = SchemeRegistry { schemes: vec![QuantScheme::W4A4] };
+        let t = measure_sensitivity(&lm, &stats, &reg).unwrap();
+        let mut deltas: Vec<f64> = Vec::new();
+        for e in 0..t.delta[0].len() {
+            for j in 0..3 {
+                let d = t.delta(0, e, j, &QuantScheme::W4A4);
+                if d > 0.0 {
+                    deltas.push(d);
+                }
+            }
+        }
+        let max = deltas.iter().cloned().fold(0.0, f64::max);
+        let min = deltas.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 1.5, "sensitivity too homogeneous: {min}..{max}");
+    }
+
+    #[test]
+    fn fp16_has_zero_delta() {
+        let (lm, stats) = setup();
+        let reg = SchemeRegistry { schemes: vec![QuantScheme::W4A4] };
+        let t = measure_sensitivity(&lm, &stats, &reg).unwrap();
+        assert_eq!(t.delta(0, 0, 0, &QuantScheme::FP16), 0.0);
+    }
+}

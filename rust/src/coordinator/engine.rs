@@ -1,0 +1,176 @@
+//! The serving engine: native attention/routing + PJRT expert dispatch.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::alloc::Allocation;
+use crate::moe::block::MoeBlock;
+use crate::moe::{route, ModelConfig, MoeLm};
+use crate::runtime::{pick_tile, PreparedExpert, Runtime, RuntimeScheme, TILE_MS};
+use crate::tensor::Matrix;
+
+use super::metrics::Metrics;
+
+/// Per-(MoE-layer, expert) runtime assignment + prepared weight literals.
+struct ExpertSlot {
+    scheme: RuntimeScheme,
+    prepared: PreparedExpert,
+}
+
+/// The engine owns the model, the PJRT runtime, and the prepared
+/// mixed-precision expert artifacts. Single-threaded by design: the CPU
+/// PJRT client parallelizes internally (XLA intra-op pool plays the role
+/// of the SM array; the task queue discipline mirrors the fused tile
+/// scheduler — see DESIGN.md §Hardware-Adaptation).
+pub struct ServingEngine {
+    pub lm: MoeLm,
+    runtime: Runtime,
+    /// `slots[block_pos][expert]` — routed then shared, per MoE layer.
+    slots: Vec<Vec<ExpertSlot>>,
+    pub metrics: Metrics,
+}
+
+impl ServingEngine {
+    /// Build from a trained model + allocation. Quantizes every expert to
+    /// its allocated runtime family and pre-compiles the executables.
+    pub fn new(lm: MoeLm, artifacts: &Path, allocation: &Allocation) -> Result<ServingEngine> {
+        let runtime = Runtime::cpu(artifacts)?;
+        runtime.warmup_expert_ffn()?;
+        let mut slots = Vec::new();
+        for (pos, (_, block)) in lm.moe_blocks().iter().enumerate() {
+            let mut layer_slots = Vec::new();
+            for e in 0..block.total_experts() {
+                // map the allocated (possibly per-linear) schemes to the
+                // expert's runtime family: take the gate linear's family
+                // (runtime executables are per-expert uniform; per-linear
+                // mixing within an expert is an accuracy-side refinement)
+                let scheme = RuntimeScheme::from_quant(&allocation.schemes[pos][e][0]);
+                let prepared = PreparedExpert::prepare(block.expert_at(e), scheme)?;
+                layer_slots.push(ExpertSlot { scheme, prepared });
+            }
+            slots.push(layer_slots);
+        }
+        Ok(ServingEngine { lm, runtime, slots, metrics: Metrics::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    /// Scheme histogram for reporting.
+    pub fn scheme_counts(&self) -> Vec<(RuntimeScheme, usize)> {
+        let mut counts = Vec::new();
+        for s in RuntimeScheme::ALL {
+            let n = self
+                .slots
+                .iter()
+                .flat_map(|l| l.iter())
+                .filter(|slot| slot.scheme == s)
+                .count();
+            if n > 0 {
+                counts.push((s, n));
+            }
+        }
+        counts
+    }
+
+    /// Run one expert's FFN over `m` rows via PJRT, chunking into the
+    /// exported tile sizes and cropping padding.
+    fn run_expert(&mut self, block_pos: usize, expert: usize, x: &Matrix) -> Result<Matrix> {
+        let slot = &self.slots[block_pos][expert];
+        let hidden = x.cols;
+        let mut out = Matrix::zeros(x.rows, hidden);
+        let mut r0 = 0;
+        while r0 < x.rows {
+            let remaining = x.rows - r0;
+            // greedy decomposition: largest whole tile ≤ remaining, so
+            // 68 tokens run as 64 + 4 instead of one padded 256-tile
+            // (§Perf: padding 98% → ~2% on the serving path)
+            let tile_m = TILE_MS
+                .iter()
+                .rev()
+                .copied()
+                .find(|&t| t <= remaining)
+                .unwrap_or_else(|| pick_tile(remaining));
+            let rows = remaining.min(tile_m);
+            // pad to tile_m
+            let mut xt = Matrix::zeros(tile_m, hidden);
+            xt.data[..rows * hidden].copy_from_slice(&x.data[r0 * hidden..(r0 + rows) * hidden]);
+            let y = self
+                .runtime
+                .run_expert_ffn(slot.scheme, tile_m, &xt, &slot.prepared.literals)?;
+            out.data[r0 * hidden..(r0 + rows) * hidden]
+                .copy_from_slice(&y.data[..rows * hidden]);
+            self.metrics.expert_calls += 1;
+            self.metrics.padded_tokens += tile_m;
+            self.metrics.useful_rows += rows;
+            r0 += rows;
+        }
+        Ok(out)
+    }
+
+    /// MoE block forward with PJRT expert dispatch (the hook body).
+    fn moe_forward(&mut self, block_pos: usize, block: &MoeBlock, x: &Matrix) -> Result<Matrix> {
+        let routing = route(x, &block.w_router, block.topk);
+        let mut out = Matrix::zeros(x.rows, x.cols);
+        for (e, (tokens, weights)) in routing.per_expert.iter().enumerate() {
+            if tokens.is_empty() {
+                continue;
+            }
+            let xe = x.gather_rows(tokens);
+            let ye = self.run_expert(block_pos, e, &xe)?;
+            out.scatter_add_rows(tokens, &ye, weights);
+        }
+        for si in 0..block.shared.len() {
+            let ys = self.run_expert(block_pos, block.experts.len() + si, x)?;
+            out.add_scaled(&ys, 1.0);
+        }
+        Ok(out)
+    }
+
+    /// Forward a batch of sequences; expert FFNs run on PJRT with
+    /// cross-request token batching. Returns per-sequence logits.
+    pub fn forward_batch(&mut self, batch: &[&[u32]]) -> Result<Vec<Matrix>> {
+        // layer-position bookkeeping: map transformer layer → block pos
+        let block_pos: std::collections::HashMap<usize, usize> = self
+            .lm
+            .moe_blocks()
+            .iter()
+            .enumerate()
+            .map(|(pos, (l, _))| (*l, pos))
+            .collect();
+        let lm = unsafe { &*(&self.lm as *const MoeLm) }; // split borrow: lm is not mutated
+        let mut err: Option<anyhow::Error> = None;
+        let logits = lm.forward_batch_with_moe(batch, |l, block, x| {
+            if err.is_some() {
+                return Matrix::zeros(x.rows, x.cols);
+            }
+            match self.moe_forward(block_pos[&l], block, x) {
+                Ok(y) => y,
+                Err(e) => {
+                    err = Some(e);
+                    Matrix::zeros(x.rows, x.cols)
+                }
+            }
+        });
+        match err {
+            Some(e) => Err(e),
+            None => {
+                self.metrics.batches += 1;
+                Ok(logits)
+            }
+        }
+    }
+}
+
+/// Convenience: uniform-precision engine (baseline rows of Fig. 5).
+pub fn uniform_engine(
+    lm: MoeLm,
+    artifacts: &Path,
+    scheme: crate::quant::QuantScheme,
+) -> Result<ServingEngine> {
+    let cfg: ModelConfig = lm.cfg.clone();
+    let alloc = Allocation::uniform(&cfg, scheme);
+    ServingEngine::new(lm, artifacts, &alloc)
+}

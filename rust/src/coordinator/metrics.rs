@@ -1,0 +1,87 @@
+//! Serving metrics: latency distribution + throughput counters.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Rolling serving metrics (single-threaded engine owns it).
+pub struct Metrics {
+    start: Instant,
+    latencies: Vec<f64>,
+    pub tokens: usize,
+    pub requests: usize,
+    pub batches: usize,
+    pub expert_calls: usize,
+    /// Tile rows shipped to PJRT (incl. padding).
+    pub padded_tokens: usize,
+    /// Useful (non-padding) tile rows.
+    pub useful_rows: usize,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            start: Instant::now(),
+            latencies: Vec::new(),
+            tokens: 0,
+            requests: 0,
+            batches: 0,
+            expert_calls: 0,
+            padded_tokens: 0,
+            useful_rows: 0,
+        }
+    }
+
+    pub fn record_request(&mut self, latency_s: f64, tokens: usize) {
+        self.latencies.push(latency_s);
+        self.tokens += tokens;
+        self.requests += 1;
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn throughput_tps(&self) -> f64 {
+        self.tokens as f64 / self.elapsed().max(1e-9)
+    }
+
+    pub fn latency_summary(&self) -> Option<Summary> {
+        if self.latencies.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.latencies))
+        }
+    }
+
+    /// Fraction of expert-tile rows that were padding (tile-fill quality of
+    /// the batcher — the quantity slice-K/tile selection fights on GPU).
+    pub fn padding_ratio(&self) -> f64 {
+        if self.padded_tokens == 0 {
+            return 0.0;
+        }
+        1.0 - self.useful_rows as f64 / self.padded_tokens as f64
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.record_request(0.010, 128);
+        m.record_request(0.020, 128);
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.tokens, 256);
+        let s = m.latency_summary().unwrap();
+        assert!((s.mean - 0.015).abs() < 1e-9);
+    }
+}

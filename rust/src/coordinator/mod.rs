@@ -1,0 +1,15 @@
+//! L3 serving coordinator: request queue, dynamic batcher, expert
+//! grouping/padding, PJRT dispatch and metrics.
+//!
+//! This is the system half of MxMoE (§4.3): routing and batching live in
+//! rust, expert FFN compute runs through the AOT PJRT executables — one
+//! executable per (runtime scheme, tile_m), dispatched per the
+//! mixed-precision allocation. Python is nowhere on this path.
+
+pub mod engine;
+pub mod metrics;
+pub mod server;
+
+pub use engine::ServingEngine;
+pub use metrics::Metrics;
+pub use server::{Request, Response, ServeConfig, Server};

@@ -1,0 +1,187 @@
+//! Request server: queue + dynamic batcher in front of the engine.
+//!
+//! The engine (and its PJRT handles) are not `Send`, so the server thread
+//! *builds* the engine locally and owns it for its lifetime; clients talk
+//! over channels. The batcher implements the classic dynamic-batching
+//! policy: close a batch when it reaches `max_batch_seqs` or when the
+//! oldest queued request has waited `max_wait`.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::alloc::Allocation;
+use crate::moe::{ModelConfig, MoeLm};
+use crate::ser::MxtFile;
+
+use super::engine::ServingEngine;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub max_batch_seqs: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch_seqs: 8, max_wait: Duration::from_millis(20) }
+    }
+}
+
+/// A scoring request: token sequence in, next-token prediction + NLL out.
+pub struct Request {
+    pub tokens: Vec<u32>,
+    pub reply: mpsc::Sender<Response>,
+    pub arrived: Instant,
+}
+
+/// Response: argmax continuation of the last position + mean next-token
+/// NLL over the sequence (the serving analogue of scoring).
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub next_token: u32,
+    pub mean_nll: f64,
+    pub latency: Duration,
+}
+
+/// Handle to a running server thread.
+pub struct Server {
+    tx: mpsc::Sender<Request>,
+    handle: Option<thread::JoinHandle<ServerReport>>,
+}
+
+/// Final statistics returned at shutdown.
+#[derive(Clone, Debug)]
+pub struct ServerReport {
+    pub requests: usize,
+    pub tokens: usize,
+    pub throughput_tps: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub expert_calls: usize,
+    pub padding_ratio: f64,
+}
+
+impl Server {
+    /// Start the server thread: loads weights, builds the engine with the
+    /// given allocation, then serves until the request channel closes.
+    pub fn start(
+        cfg: ModelConfig,
+        weights_path: PathBuf,
+        artifacts: PathBuf,
+        allocation: Allocation,
+        serve_cfg: ServeConfig,
+    ) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let handle = thread::spawn(move || {
+            let weights = MxtFile::load(&weights_path).expect("load weights");
+            let lm = MoeLm::load_mxt(&cfg, &weights).expect("build model");
+            let mut engine =
+                ServingEngine::new(lm, &artifacts, &allocation).expect("build engine");
+            serve_loop(&mut engine, rx, &serve_cfg);
+            let lat = engine.metrics.latency_summary();
+            ServerReport {
+                requests: engine.metrics.requests,
+                tokens: engine.metrics.tokens,
+                throughput_tps: engine.metrics.throughput_tps(),
+                p50_latency_s: lat.as_ref().map(|s| s.p50).unwrap_or(0.0),
+                p99_latency_s: lat.as_ref().map(|s| s.p99).unwrap_or(0.0),
+                expert_calls: engine.metrics.expert_calls,
+                padding_ratio: engine.metrics.padding_ratio(),
+            }
+        });
+        Ok(Server { tx, handle: Some(handle) })
+    }
+
+    /// Submit a request; returns the reply receiver.
+    pub fn submit(&self, tokens: Vec<u32>) -> Result<mpsc::Receiver<Response>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request { tokens, reply, arrived: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("server closed"))?;
+        Ok(rx)
+    }
+
+    /// Close the queue and collect the final report.
+    pub fn shutdown(mut self) -> ServerReport {
+        drop(self.tx);
+        self.handle.take().unwrap().join().expect("server thread panicked")
+    }
+}
+
+fn serve_loop(engine: &mut ServingEngine, rx: mpsc::Receiver<Request>, cfg: &ServeConfig) {
+    loop {
+        // block for the first request of the batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // channel closed
+        };
+        let mut batch = vec![first];
+        // drain whatever is already queued (requests that arrived while the
+        // previous batch was executing must not serve as singletons — §Perf)
+        while batch.len() < cfg.max_batch_seqs {
+            match rx.try_recv() {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+        // then wait up to max_wait from *now* for stragglers
+        if batch.len() < cfg.max_batch_seqs {
+            let deadline = Instant::now() + cfg.max_wait;
+            while batch.len() < cfg.max_batch_seqs {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                match rx.recv_timeout(left) {
+                    Ok(r) => batch.push(r),
+                    Err(_) => break,
+                }
+            }
+        }
+        process_batch(engine, batch);
+    }
+}
+
+fn process_batch(engine: &mut ServingEngine, batch: Vec<Request>) {
+    let seqs: Vec<&[u32]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
+    match engine.forward_batch(&seqs) {
+        Ok(logits_batch) => {
+            for (req, logits) in batch.iter().zip(logits_batch) {
+                let t = req.tokens.len();
+                // argmax of the final position
+                let last = logits.row(t - 1);
+                let mut best = 0usize;
+                for i in 1..last.len() {
+                    if last[i] > last[best] {
+                        best = i;
+                    }
+                }
+                // mean next-token NLL
+                let mut nll = 0.0f64;
+                for pos in 0..t - 1 {
+                    let row = logits.row(pos);
+                    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+                    let z: f64 = row.iter().map(|&v| ((v as f64) - m).exp()).sum();
+                    nll -= (logits.at(pos, req.tokens[pos + 1] as usize) as f64 - m) - z.ln();
+                }
+                let latency = req.arrived.elapsed();
+                engine
+                    .metrics
+                    .record_request(latency.as_secs_f64(), req.tokens.len());
+                let _ = req.reply.send(Response {
+                    next_token: best as u32,
+                    mean_nll: nll / (t - 1).max(1) as f64,
+                    latency,
+                });
+            }
+        }
+        Err(e) => {
+            eprintln!("batch failed: {e:#}");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Hardware specifications of the modeled GPUs.
+
+use crate::quant::scheme::QuantScheme;
+
+/// Public datasheet constants of a target GPU.
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Streaming multiprocessors (the paper's `P`).
+    pub sms: usize,
+    /// HBM/GDDR bandwidth, bytes per second.
+    pub mem_bw: f64,
+    /// Dense fp16 tensor-core throughput, FLOP/s (fp16 accumulate).
+    pub fp16_flops: f64,
+    /// Dense int8 tensor-core throughput, OP/s.
+    pub int8_ops: f64,
+    /// Dense int4 throughput, OP/s (0 if unsupported).
+    pub int4_ops: f64,
+    /// Kernel launch overhead, seconds (sequential-launch penalty).
+    pub launch_overhead: f64,
+    /// Shared memory per SM, bytes (resource-configuration constraint).
+    pub smem_per_sm: usize,
+    /// Max warps per SM.
+    pub max_warps: usize,
+}
+
+impl GpuSpec {
+    /// Nvidia RTX 4090 (AD102): the paper's testbed.
+    pub fn rtx4090() -> GpuSpec {
+        GpuSpec {
+            name: "rtx4090".into(),
+            sms: 128,
+            mem_bw: 1.008e12,
+            fp16_flops: 165.2e12,
+            int8_ops: 660.6e12,
+            int4_ops: 1321.2e12,
+            launch_overhead: 4e-6,
+            smem_per_sm: 100 * 1024,
+            max_warps: 48,
+        }
+    }
+
+    /// Nvidia A100-SXM4-80G (no int4 tensor-core path exposed by the paper's
+    /// kernel set; FP8 unsupported — §4.2.1's example).
+    pub fn a100() -> GpuSpec {
+        GpuSpec {
+            name: "a100".into(),
+            sms: 108,
+            mem_bw: 2.039e12,
+            fp16_flops: 312e12,
+            int8_ops: 624e12,
+            int4_ops: 1248e12,
+            launch_overhead: 4e-6,
+            smem_per_sm: 164 * 1024,
+            max_warps: 64,
+        }
+    }
+
+    /// Peak MAC throughput (OP/s, counting mul+add as 2 ops) of the
+    /// arithmetic path a scheme executes on.
+    pub fn peak_ops(&self, s: &QuantScheme) -> f64 {
+        if s.weight_only() || s.is_fp16() {
+            // weight-only dequantizes to fp16 and uses the fp16 pipeline
+            self.fp16_flops
+        } else if s.wbits <= 4 && s.abits <= 4 && self.int4_ops > 0.0 {
+            self.int4_ops
+        } else {
+            // 5–8 bit weight-activation runs on the int8 path
+            self.int8_ops
+        }
+    }
+
+    /// Per-SM share of peak compute for a scheme.
+    pub fn sm_ops(&self, s: &QuantScheme) -> f64 {
+        self.peak_ops(s) / self.sms as f64
+    }
+
+    /// Per-SM share of memory bandwidth when all SMs stream concurrently.
+    pub fn sm_bw(&self) -> f64 {
+        self.mem_bw / self.sms as f64
+    }
+}
+
+/// Bytes moved by a GEMM `[m, n, k]` under scheme `s`: quantized weights
+/// (+ per-group metadata), activations at their own precision, fp16 output.
+pub fn gemm_bytes(s: &QuantScheme, m: usize, n: usize, k: usize) -> f64 {
+    let w_bytes = s.avg_weight_bits(k) / 8.0 * (n * k) as f64;
+    let a_bytes = s.avg_act_bits(k) / 8.0 * (m * k) as f64;
+    let o_bytes = 2.0 * (m * n) as f64;
+    w_bytes + a_bytes + o_bytes
+}
+
+/// MAC operations of a GEMM (×2 for multiply-add).
+pub fn gemm_ops(m: usize, n: usize, k: usize) -> f64 {
+    2.0 * (m as f64) * (n as f64) * (k as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_to_pipeline_mapping() {
+        let g = GpuSpec::rtx4090();
+        assert_eq!(g.peak_ops(&QuantScheme::FP16), g.fp16_flops);
+        assert_eq!(g.peak_ops(&QuantScheme::W4A16), g.fp16_flops);
+        assert_eq!(g.peak_ops(&QuantScheme::W8A8), g.int8_ops);
+        assert_eq!(g.peak_ops(&QuantScheme::W4A4), g.int4_ops);
+        assert_eq!(g.peak_ops(&QuantScheme::W5A5), g.int8_ops);
+    }
+
+    #[test]
+    fn bytes_scale_with_bits() {
+        let (m, n, k) = (64, 2816, 2048);
+        let b16 = gemm_bytes(&QuantScheme::FP16, m, n, k);
+        let b4 = gemm_bytes(&QuantScheme::W4A16, m, n, k);
+        // weight-dominated: 4-bit weights ≈ 1/4 the traffic of fp16
+        assert!(b4 < 0.35 * b16, "b4 {b4} vs b16 {b16}");
+    }
+
+    #[test]
+    fn sm_shares_partition_totals() {
+        let g = GpuSpec::rtx4090();
+        assert!((g.sm_bw() * g.sms as f64 - g.mem_bw).abs() < 1.0);
+        assert!((g.sm_ops(&QuantScheme::W8A8) * g.sms as f64 - g.int8_ops).abs() < 1.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! GPU cost model: hardware specs, roofline analysis, tile-level cost
+//! estimation and the micro-kernel efficiency model.
+//!
+//! This is the performance-side substitution for the paper's RTX-4090
+//! testbed (DESIGN.md §2): tile costs are derived analytically from public
+//! hardware constants (bandwidth, tensor-core throughput per precision, SM
+//! count) instead of on-device profiling. The model reproduces the paper's
+//! roofline crossovers (W4A16 vs W8A8 at A≈83, W2A16 vs W4A4 at A≈42 —
+//! verified by unit tests in `roofline.rs`), which is the property the
+//! bitwidth allocator actually depends on.
+
+pub mod gpu;
+pub mod micro;
+pub mod roofline;
+pub mod tile;
+
+pub use gpu::GpuSpec;
+pub use micro::{mma_efficiency, Specialization};
+pub use roofline::{crossover_m, gemm_time, preferred_scheme};
+pub use tile::{tile_cost, tile_candidates, TileConfig};

@@ -1,0 +1,214 @@
+//! Tile configurations and per-tile cost (`c_t` of §4.2.2).
+//!
+//! A GEMM `[m, n, k]` is decomposed into CTA tiles `[bm, bn]` sweeping the
+//! full `k` (optionally sliced by `slice_k`). Per-tile runtime is the tile
+//! roofline: max(compute at the scheme's MMA efficiency, memory at the
+//! per-SM bandwidth share), plus a small fixed scheduling overhead.
+
+use crate::quant::scheme::QuantScheme;
+
+use super::gpu::GpuSpec;
+use super::micro::{mma_efficiency, Specialization};
+
+/// A CTA tile configuration (the paper's `t ∈ T`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TileConfig {
+    pub bm: usize,
+    pub bn: usize,
+    pub bk: usize,
+    /// k-dimension split factor (slice-K, §4.3): >1 adds parallelism for
+    /// small GEMMs at the price of a partial-sum reduction pass.
+    pub slice_k: usize,
+    /// Warps per CTA — the resource-consistency quantity of Fig. 4.
+    pub warps: usize,
+}
+
+impl TileConfig {
+    /// Shared-memory footprint in bytes: double-buffered A and B panels at
+    /// the operand precisions (weight bits) + fp32 accumulator spill space.
+    pub fn smem_bytes(&self, s: &QuantScheme) -> usize {
+        let w_bits = if s.is_fp16() { 16 } else { s.wbits as usize };
+        let a_bits = if s.abits >= 16 { 16 } else { s.abits as usize };
+        let a_panel = self.bm * self.bk * a_bits / 8;
+        let b_panel = self.bn * self.bk * w_bits / 8;
+        2 * (a_panel + b_panel)
+    }
+}
+
+/// Fixed per-tile scheduling/epilogue overhead (seconds).
+const TILE_OVERHEAD: f64 = 0.4e-6;
+/// Extra cost factor of the slice-K partial-sum reduction.
+const SLICE_K_REDUCE: f64 = 0.06;
+
+/// Candidate tile configurations for a scheme — mirrors the shapes the
+/// paper's generator emits (weight-only kernels favour skinny `bm`,
+/// weight-activation kernels favour large square tiles; group-128 schemes
+/// cannot use `bk > 128`).
+pub fn tile_candidates(s: &QuantScheme) -> Vec<TileConfig> {
+    let mut out = Vec::new();
+    let bks: &[usize] = if s.wgroup > 0 { &[64, 128] } else { &[64, 128, 256] };
+    let shapes: &[(usize, usize, usize)] = if s.weight_only() && !s.is_fp16() {
+        // low-m friendly shapes (decode/memory-bound regime)
+        &[(16, 128, 4), (32, 128, 4), (64, 128, 4), (64, 256, 8), (128, 128, 8)]
+    } else {
+        &[(64, 128, 4), (128, 128, 8), (128, 256, 8), (64, 64, 4), (256, 128, 8)]
+    };
+    for &(bm, bn, warps) in shapes {
+        for &bk in bks {
+            for slice_k in [1usize, 2, 4] {
+                out.push(TileConfig { bm, bn, bk, slice_k, warps });
+            }
+        }
+    }
+    out
+}
+
+/// Compute-time (seconds, on one SM) and HBM bytes of ONE tile of a GEMM
+/// `[m, n, k]` under `s` with configuration `t`. The tile computes a
+/// `[bm, bn]` output block over `k / slice_k` of the reduction dimension.
+/// The simulator combines these under a launch-level roofline; the scalar
+/// [`tile_cost`] below is the ILP's `c_t`.
+pub fn tile_compute_bytes(
+    gpu: &GpuSpec,
+    s: &QuantScheme,
+    t: &TileConfig,
+    k: usize,
+    spec: Specialization,
+) -> (f64, f64) {
+    let keff = (k as f64 / t.slice_k as f64).max(1.0);
+    let ops = 2.0 * t.bm as f64 * t.bn as f64 * keff;
+    let compute = ops / (gpu.sm_ops(s) * mma_efficiency(s, spec)) + TILE_OVERHEAD;
+    // bytes: weight panel + activation panel + output block (fp16)
+    let w_bytes = s.avg_weight_bits(k) / 8.0 * t.bn as f64 * keff;
+    let a_bytes = s.avg_act_bits(k) / 8.0 * t.bm as f64 * keff;
+    let o_bytes = 2.0 * t.bm as f64 * t.bn as f64;
+    let reduce = if t.slice_k > 1 { SLICE_K_REDUCE * o_bytes * t.slice_k as f64 } else { 0.0 };
+    (compute, w_bytes + a_bytes + o_bytes + reduce)
+}
+
+/// How many SMs' worth of streaming saturates HBM (CUDA microbenchmark
+/// folklore: ~8–16 SMs; used as the single-SM bandwidth ceiling).
+pub const SATURATING_SMS: f64 = 8.0;
+
+/// Launch-level roofline over a set of tiles `(compute_s, bytes)`:
+///
+/// * compute term — LPT makespan of per-tile SM-compute costs,
+/// * aggregate memory term — total bytes / device bandwidth,
+/// * streaming floor — LPT makespan of per-tile bytes at the single-SM
+///   streaming ceiling (binds only when the launch underfills the GPU,
+///   the sequential-per-expert pathology of §3.3).
+pub fn launch_roofline(gpu: &GpuSpec, compute: &[f64], bytes: &[f64]) -> f64 {
+    let cmk = crate::sched::lpt_makespan(compute, gpu.sms);
+    let total_bytes: f64 = bytes.iter().sum();
+    let memory = total_bytes / gpu.mem_bw;
+    let sm_max_bw = gpu.mem_bw * SATURATING_SMS / gpu.sms as f64;
+    let floor_costs: Vec<f64> = bytes.iter().map(|b| b / sm_max_bw).collect();
+    let stream_floor = crate::sched::lpt_makespan(&floor_costs, gpu.sms);
+    cmk.max(memory).max(stream_floor)
+}
+
+/// Scalar per-tile cost (the ILP's `c_t`, §4.2.2): roofline with the
+/// all-SMs-streaming bandwidth share — the regime the approximation
+/// `T ≈ Σ c / P` assumes (tile count ≫ SM count).
+pub fn tile_cost(
+    gpu: &GpuSpec,
+    s: &QuantScheme,
+    t: &TileConfig,
+    k: usize,
+    spec: Specialization,
+) -> f64 {
+    let (compute, bytes) = tile_compute_bytes(gpu, s, t, k, spec);
+    compute.max(bytes / gpu.sm_bw())
+}
+
+/// Number of tiles a GEMM `[m, n, k]` decomposes into under `t`.
+pub fn tile_count(m: usize, n: usize, t: &TileConfig) -> usize {
+    let mt = (m + t.bm - 1) / t.bm;
+    let nt = (n + t.bn - 1) / t.bn;
+    mt * nt * t.slice_k
+}
+
+/// Best (total-cost, config) for a GEMM `[m, n, k]` under scheme `s`,
+/// optionally restricted to configs with exactly `warps` warps per CTA
+/// (the fused-kernel resource-consistency constraint).
+pub fn best_tile(
+    gpu: &GpuSpec,
+    s: &QuantScheme,
+    m: usize,
+    n: usize,
+    k: usize,
+    warps: Option<usize>,
+    spec: Specialization,
+) -> (f64, TileConfig) {
+    let mut best: Option<(f64, TileConfig)> = None;
+    for t in tile_candidates(s) {
+        if let Some(w) = warps {
+            if t.warps != w {
+                continue;
+            }
+        }
+        if t.smem_bytes(s) > gpu.smem_per_sm {
+            continue;
+        }
+        let total = tile_cost(gpu, s, &t, k, spec) * tile_count(m, n, &t) as f64;
+        if best.map_or(true, |(c, _)| total < c) {
+            best = Some((total, t));
+        }
+    }
+    best.expect("no feasible tile config")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_respect_group_constraint() {
+        for t in tile_candidates(&QuantScheme::W4A4G128) {
+            assert!(t.bk <= 128, "group-128 scheme cannot tile bk={}", t.bk);
+        }
+        assert!(tile_candidates(&QuantScheme::W4A4).iter().any(|t| t.bk == 256));
+    }
+
+    #[test]
+    fn cost_increases_with_k() {
+        let g = GpuSpec::rtx4090();
+        let t = TileConfig { bm: 128, bn: 128, bk: 64, slice_k: 1, warps: 8 };
+        let c1 = tile_cost(&g, &QuantScheme::W8A8, &t, 1024, Specialization::Specialized);
+        let c2 = tile_cost(&g, &QuantScheme::W8A8, &t, 4096, Specialization::Specialized);
+        assert!(c2 > c1 * 3.0);
+    }
+
+    #[test]
+    fn small_m_prefers_weight_only_small_bm() {
+        // memory-bound: the chosen tile for m=16 should have small bm
+        let g = GpuSpec::rtx4090();
+        let (_, t) = best_tile(&g, &QuantScheme::W4A16, 16, 2816, 2048, None, Specialization::Specialized);
+        assert!(t.bm <= 32, "chose bm={}", t.bm);
+    }
+
+    #[test]
+    fn slice_k_helps_tiny_gemm_total_tiles() {
+        // slice-K multiplies the tile count, providing SM parallelism
+        let t1 = TileConfig { bm: 64, bn: 128, bk: 64, slice_k: 1, warps: 4 };
+        let t4 = TileConfig { slice_k: 4, ..t1 };
+        assert_eq!(tile_count(64, 128, &t1), 1);
+        assert_eq!(tile_count(64, 128, &t4), 4);
+    }
+
+    #[test]
+    fn padding_waste_appears_in_tile_count() {
+        let t = TileConfig { bm: 128, bn: 128, bk: 64, slice_k: 1, warps: 8 };
+        assert_eq!(tile_count(1, 128, &t), 1); // 1 token still costs a full tile
+        assert_eq!(tile_count(129, 128, &t), 2);
+    }
+
+    #[test]
+    fn smem_fits_on_4090() {
+        let g = GpuSpec::rtx4090();
+        for s in [QuantScheme::FP16, QuantScheme::W4A4, QuantScheme::W8A8] {
+            let (_, t) = best_tile(&g, &s, 512, 2816, 2048, None, Specialization::Specialized);
+            assert!(t.smem_bytes(&s) <= g.smem_per_sm);
+        }
+    }
+}

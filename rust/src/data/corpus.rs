@@ -1,0 +1,229 @@
+//! Zipf–Markov synthetic corpus generator + container.
+//!
+//! Rust is the source of truth: `mxmoe gen-corpus` writes the corpus (train
+//! and validation token streams plus the empirical bigram table) to an MXT
+//! file; the JAX trainer (`python/compile/train_lm.py`) and all rust
+//! evaluation/calibration paths load the same file, so both sides see
+//! exactly the same data.
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::ser::mxt::{MxtFile, MxtTensor};
+use crate::util::Rng;
+
+/// Generation parameters.
+#[derive(Clone, Debug)]
+pub struct CorpusSpec {
+    pub vocab: usize,
+    /// Latent "topic" regimes; switching creates long-range structure.
+    pub regimes: usize,
+    /// Zipf exponent of the successor distributions.
+    pub zipf_s: f64,
+    /// Per-step probability of switching regime.
+    pub switch_p: f64,
+    pub seed: u64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> CorpusSpec {
+        CorpusSpec { vocab: 512, regimes: 8, zipf_s: 1.2, switch_p: 0.01, seed: 1234 }
+    }
+}
+
+/// Generated corpus: token streams + empirical bigram counts.
+pub struct Corpus {
+    pub spec_vocab: usize,
+    pub train: Vec<u32>,
+    pub valid: Vec<u32>,
+    /// Row-major `[vocab, vocab]` bigram counts over train.
+    pub bigram: Vec<u32>,
+}
+
+impl Corpus {
+    /// Deterministically generate a corpus.
+    pub fn generate(spec: &CorpusSpec, train_len: usize, valid_len: usize) -> Corpus {
+        let mut rng = Rng::new(spec.seed);
+        let v = spec.vocab;
+        // Zipf weights over successor *ranks* (shared shape everywhere).
+        let zipf: Vec<f64> = (1..=32.min(v)).map(|r| 1.0 / (r as f64).powf(spec.zipf_s)).collect();
+        // Global popularity permutation: candidate draws are skewed toward
+        // low popularity indices (u³ draw), so unigram frequencies are
+        // Zipf-like regardless of regime.
+        let pop_perm: Vec<u32> = {
+            let mut p: Vec<u32> = (0..v as u32).collect();
+            let mut r = Rng::new(spec.seed ^ 0xDEADBEEF);
+            r.shuffle(&mut p);
+            p
+        };
+        // Successor draw for (regime, token): pick a Zipf rank, then map it
+        // to a stable candidate token. Ranks 0–3 are regime-independent
+        // (core bigrams every regime shares, which makes the corpus's top
+        // successors strongly predictable); deeper ranks are regime-flavored.
+        let succ = |regime: usize, tok: u32, rng: &mut Rng| -> u32 {
+            let pick = rng.weighted(&zipf);
+            let seed = if pick < 4 {
+                spec.seed ^ (tok as u64).wrapping_mul(0xC2B2AE3D27D4EB4F)
+            } else {
+                spec.seed
+                    ^ (tok as u64).wrapping_mul(0xC2B2AE3D27D4EB4F)
+                    ^ (regime as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+            };
+            let mut h = Rng::new(seed);
+            // walk `pick+1` skewed draws so each rank maps to a stable token
+            let mut cand = 0usize;
+            for _ in 0..=pick {
+                let u = h.next_f64();
+                cand = ((u * u * u) * v as f64) as usize;
+            }
+            pop_perm[cand.min(v - 1)]
+        };
+        let gen_stream = |len: usize, rng: &mut Rng| -> Vec<u32> {
+            let mut out = Vec::with_capacity(len);
+            let mut tok = rng.below(v as u64) as u32;
+            let mut regime = rng.below(spec.regimes as u64) as usize;
+            for _ in 0..len {
+                out.push(tok);
+                if rng.next_f64() < spec.switch_p {
+                    regime = rng.below(spec.regimes as u64) as usize;
+                }
+                tok = succ(regime, tok, rng);
+            }
+            out
+        };
+        let train = gen_stream(train_len, &mut rng);
+        let valid = gen_stream(valid_len, &mut rng);
+        let mut bigram = vec![0u32; v * v];
+        for w in train.windows(2) {
+            bigram[w[0] as usize * v + w[1] as usize] += 1;
+        }
+        Corpus { spec_vocab: v, train, valid, bigram }
+    }
+
+    /// Non-overlapping sequences of `seq_len` from a split.
+    pub fn sequences<'a>(&'a self, split: &str, seq_len: usize) -> Vec<&'a [u32]> {
+        let stream: &[u32] = match split {
+            "train" => &self.train,
+            "valid" => &self.valid,
+            other => panic!("unknown split '{other}'"),
+        };
+        stream.chunks_exact(seq_len).collect()
+    }
+
+    /// Most likely successor of `tok` (bigram probe ground truth).
+    pub fn top_successor(&self, tok: u32) -> u32 {
+        let v = self.spec_vocab;
+        let row = &self.bigram[tok as usize * v..(tok as usize + 1) * v];
+        row.iter().enumerate().max_by_key(|(_, &c)| c).map(|(i, _)| i as u32).unwrap_or(0)
+    }
+
+    /// Total bigram observations of `tok` (to filter rare probe anchors).
+    pub fn successor_mass(&self, tok: u32) -> u32 {
+        let v = self.spec_vocab;
+        self.bigram[tok as usize * v..(tok as usize + 1) * v].iter().sum()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = MxtFile::new();
+        let as_i32 = |xs: &[u32]| xs.iter().map(|&x| x as i32).collect::<Vec<_>>();
+        f.insert("train", MxtTensor::from_i32(vec![self.train.len()], &as_i32(&self.train)));
+        f.insert("valid", MxtTensor::from_i32(vec![self.valid.len()], &as_i32(&self.valid)));
+        f.insert(
+            "bigram",
+            MxtTensor::from_i32(vec![self.spec_vocab, self.spec_vocab], &as_i32(&self.bigram)),
+        );
+        f.save(path)
+    }
+
+    pub fn load(path: &Path) -> Result<Corpus> {
+        let f = MxtFile::load(path)?;
+        let train: Vec<u32> = f.get("train")?.to_i32()?.iter().map(|&x| x as u32).collect();
+        let valid: Vec<u32> = f.get("valid")?.to_i32()?.iter().map(|&x| x as u32).collect();
+        let bt = f.get("bigram")?;
+        let vocab = bt.shape[0];
+        let bigram: Vec<u32> = bt.to_i32()?.iter().map(|&x| x as u32).collect();
+        Ok(Corpus { spec_vocab: vocab, train, valid, bigram })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let spec = CorpusSpec::default();
+        let a = Corpus::generate(&spec, 2000, 500);
+        let b = Corpus::generate(&spec, 2000, 500);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.valid, b.valid);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let spec = CorpusSpec { vocab: 64, ..Default::default() };
+        let c = Corpus::generate(&spec, 5000, 100);
+        assert!(c.train.iter().all(|&t| (t as usize) < 64));
+    }
+
+    #[test]
+    fn corpus_has_predictable_bigrams() {
+        // Markov structure ⇒ top successor carries a large share of mass
+        let c = Corpus::generate(&CorpusSpec::default(), 50_000, 100);
+        let mut predictable = 0;
+        let mut checked = 0;
+        for tok in 0..512u32 {
+            let mass = c.successor_mass(tok);
+            if mass < 50 {
+                continue;
+            }
+            checked += 1;
+            let top = c.top_successor(tok);
+            let top_count = c.bigram[tok as usize * 512 + top as usize];
+            if top_count as f64 / mass as f64 > 0.15 {
+                predictable += 1;
+            }
+        }
+        assert!(checked > 20, "too few frequent tokens: {checked}");
+        assert!(
+            predictable as f64 / checked as f64 > 0.8,
+            "{predictable}/{checked} predictable"
+        );
+    }
+
+    #[test]
+    fn unigram_distribution_is_skewed() {
+        let c = Corpus::generate(&CorpusSpec::default(), 50_000, 100);
+        let mut counts = vec![0usize; 512];
+        for &t in &c.train {
+            counts[t as usize] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top10: usize = counts[..10].iter().sum();
+        assert!(
+            top10 as f64 / 50_000.0 > 0.08,
+            "corpus not Zipf-skewed: top10 share {}",
+            top10 as f64 / 50_000.0
+        );
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("mxmoe_corpus_test.mxt");
+        let c = Corpus::generate(&CorpusSpec { vocab: 32, ..Default::default() }, 1000, 200);
+        c.save(&dir).unwrap();
+        let c2 = Corpus::load(&dir).unwrap();
+        assert_eq!(c.train, c2.train);
+        assert_eq!(c.valid, c2.valid);
+        assert_eq!(c.bigram, c2.bigram);
+        let _ = std::fs::remove_file(&dir);
+    }
+
+    #[test]
+    fn sequences_chunking() {
+        let c = Corpus::generate(&CorpusSpec { vocab: 32, ..Default::default() }, 1000, 205);
+        let seqs = c.sequences("valid", 50);
+        assert_eq!(seqs.len(), 4);
+        assert!(seqs.iter().all(|s| s.len() == 50));
+    }
+}

@@ -1,0 +1,11 @@
+//! Synthetic corpus substrate (the WikiText-2 substitution, see DESIGN.md §2).
+//!
+//! A Zipf-weighted first-order Markov chain over a small vocabulary produces
+//! sequences with realistic statistical structure: skewed unigram
+//! frequencies, strongly-preferred bigrams, and long-range "topic" drift via
+//! regime switching. Mini MoE LMs trained on it develop the expert
+//! specialization and heterogeneous activation patterns the paper exploits.
+
+pub mod corpus;
+
+pub use corpus::{Corpus, CorpusSpec};

@@ -1,0 +1,12 @@
+//! Model quality evaluation: perplexity and probe tasks.
+//!
+//! These are the substitutes for WikiText-2 PPL and the seven lm-eval tasks
+//! of Tab. 1 (see DESIGN.md §2): the claims under test are *relative*
+//! degradations between quantization methods, which these metrics expose on
+//! the mini models.
+
+pub mod ppl;
+pub mod probes;
+
+pub use ppl::{perplexity, perplexity_quantized};
+pub use probes::{probe_accuracy, ProbeReport};

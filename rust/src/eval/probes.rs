@@ -1,0 +1,141 @@
+//! Probe tasks — the downstream-accuracy analogues of Tab. 1's lm-eval suite.
+//!
+//! * **bigram** — given a frequent token, does the model's top-1 prediction
+//!   match the corpus's most likely successor? (local statistics)
+//! * **cloze** — top-1 accuracy on held-out validation continuations.
+//!   (general language modelling)
+//! * **copy** — induction: in `… A B … A`, predict `B` again. (in-context
+//!   pattern matching; famously sensitive to precision loss)
+
+use std::collections::HashMap;
+
+use crate::data::Corpus;
+use crate::moe::{MoeLm, QuantizedMoeBlock};
+use crate::util::Rng;
+
+/// Accuracy of the three probes (fractions in `[0,1]`).
+#[derive(Clone, Debug)]
+pub struct ProbeReport {
+    pub bigram: f64,
+    pub cloze: f64,
+    pub copy: f64,
+}
+
+impl ProbeReport {
+    pub fn mean(&self) -> f64 {
+        (self.bigram + self.cloze + self.copy) / 3.0
+    }
+}
+
+fn argmax(row: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for i in 1..row.len() {
+        if row[i] > row[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Run all probes on (optionally quantized) `lm`.
+pub fn probe_accuracy(
+    lm: &MoeLm,
+    corpus: &Corpus,
+    replacements: &HashMap<usize, &QuantizedMoeBlock>,
+    n_cases: usize,
+    seed: u64,
+) -> ProbeReport {
+    let mut rng = Rng::new(seed);
+    let seq_len = lm.cfg.seq_len.min(64);
+
+    // --- bigram: prime with a real context ending in a frequent token ---
+    let contexts = corpus.sequences("valid", seq_len);
+    let mut bigram_ok = 0usize;
+    let mut bigram_n = 0usize;
+    for _ in 0..n_cases {
+        let ctx = contexts[rng.below(contexts.len() as u64) as usize];
+        let last = ctx[ctx.len() - 1];
+        if corpus.successor_mass(last) < 30 {
+            continue;
+        }
+        let logits = lm.forward_quantized(ctx, replacements);
+        let pred = argmax(logits.row(ctx.len() - 1));
+        if pred == corpus.top_successor(last) {
+            bigram_ok += 1;
+        }
+        bigram_n += 1;
+    }
+
+    // --- cloze: top-1 accuracy on actual next tokens ---
+    let mut cloze_ok = 0usize;
+    let mut cloze_n = 0usize;
+    for _ in 0..n_cases {
+        let ctx = contexts[rng.below(contexts.len() as u64) as usize];
+        let logits = lm.forward_quantized(ctx, replacements);
+        // score the last 8 positions of the sequence
+        for pos in ctx.len().saturating_sub(9)..ctx.len() - 1 {
+            if argmax(logits.row(pos)) == ctx[pos + 1] {
+                cloze_ok += 1;
+            }
+            cloze_n += 1;
+        }
+    }
+
+    // --- copy/induction: splice a repeated rare pair into a real context ---
+    let mut copy_ok = 0usize;
+    let mut copy_n = 0usize;
+    for _ in 0..n_cases {
+        let ctx = contexts[rng.below(contexts.len() as u64) as usize];
+        let mut seq = ctx.to_vec();
+        let a = rng.below(lm.cfg.vocab as u64) as u32;
+        let b = rng.below(lm.cfg.vocab as u64) as u32;
+        let n = seq.len();
+        // plant "A B" early and "A" at the end → model should emit B
+        seq[n / 4] = a;
+        seq[n / 4 + 1] = b;
+        seq[n - 1] = a;
+        let logits = lm.forward_quantized(&seq, replacements);
+        if argmax(logits.row(n - 1)) == b {
+            copy_ok += 1;
+        }
+        copy_n += 1;
+    }
+
+    ProbeReport {
+        bigram: bigram_ok as f64 / bigram_n.max(1) as f64,
+        cloze: cloze_ok as f64 / cloze_n.max(1) as f64,
+        copy: copy_ok as f64 / copy_n.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CorpusSpec;
+    use crate::moe::ModelConfig;
+
+    #[test]
+    fn probes_run_and_bounded() {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            vocab: 64,
+            hidden: 16,
+            layers: 2,
+            heads: 2,
+            n_experts: 4,
+            n_shared: 0,
+            topk: 2,
+            inter: 8,
+            dense_first: false,
+            seq_len: 32,
+        };
+        let mut rng = Rng::new(120);
+        let lm = MoeLm::random(&cfg, &mut rng);
+        let corpus = Corpus::generate(&CorpusSpec { vocab: 64, ..Default::default() }, 20_000, 4_000);
+        let rep = probe_accuracy(&lm, &corpus, &HashMap::new(), 10, 7);
+        for v in [rep.bigram, rep.cloze, rep.copy] {
+            assert!((0.0..=1.0).contains(&v));
+        }
+        assert!((0.0..=1.0).contains(&rep.mean()));
+    }
+}

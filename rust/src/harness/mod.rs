@@ -1,0 +1,192 @@
+//! Shared experiment harness: artifact loading, quantized-model
+//! construction, and evaluation helpers used by `benches/` and `examples/`.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::alloc::{Allocation, CalibrationStats};
+use crate::data::Corpus;
+use crate::eval::{perplexity_quantized, probe_accuracy, ProbeReport};
+use crate::moe::block::{HadamardCtx, QuantizedMoeBlock, WeightQuantizer};
+use crate::moe::lm::Ffn;
+use crate::moe::{ModelConfig, MoeLm};
+use crate::ser::MxtFile;
+use crate::util::Rng;
+
+/// Repo-relative artifacts directory.
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// `MXMOE_FAST=1` shrinks evaluation workloads (CI mode).
+pub fn fast_mode() -> bool {
+    std::env::var("MXMOE_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Load a trained mini model (errors if `make models` hasn't run).
+pub fn load_model(name: &str) -> Result<(ModelConfig, MoeLm)> {
+    let cfg = ModelConfig::by_name(name)?;
+    let path = artifacts_dir().join(format!("model_{name}.mxt"));
+    let weights = MxtFile::load(&path)
+        .with_context(|| format!("{path:?} — run `make models` first"))?;
+    Ok((cfg.clone(), MoeLm::load_mxt(&cfg, &weights)?))
+}
+
+pub fn load_corpus() -> Result<Corpus> {
+    Corpus::load(&artifacts_dir().join("corpus.mxt")).context("run `make corpus` first")
+}
+
+/// Which weight quantizer an experiment row uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMethod {
+    /// Plain round-to-nearest.
+    Rtn,
+    /// GPTQ on calibration Hessians.
+    Gptq,
+    /// Random Hadamard rotation then GPTQ (the paper's MxMoE/GPTQ* setting).
+    HadamardGptq,
+    /// Random Hadamard rotation then RTN (QuaRot baseline).
+    HadamardRtn,
+}
+
+/// Hadamard sign vectors shared between calibration and quantization for a
+/// given seed (rotated Hessians must match rotated weights).
+pub fn hadamard_signs_for_seed(cfg: &ModelConfig, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed ^ 0x48414441);
+    (
+        crate::quant::hadamard::random_signs(cfg.hidden, &mut rng),
+        crate::quant::hadamard::random_signs(cfg.inter, &mut rng),
+    )
+}
+
+/// Build the quantized-block replacement map for `lm` under `allocation`,
+/// quantizing with `method`. For Hadamard* methods, `stats` must come from
+/// [`crate::alloc::calibrate`] called with [`hadamard_signs_for_seed`] of
+/// the same `seed` (so the GPTQ Hessians live in the rotated basis).
+pub fn build_quantized(
+    lm: &MoeLm,
+    allocation: &Allocation,
+    method: QuantMethod,
+    stats: &CalibrationStats,
+    seed: u64,
+) -> Result<Vec<QuantizedMoeBlock>> {
+    let signs = hadamard_signs_for_seed(&lm.cfg, seed);
+    let mut out = Vec::new();
+    for (pos, (layer, block)) in lm.moe_blocks().iter().enumerate() {
+        debug_assert_eq!(*layer, allocation.layers[pos]);
+        let hadamard = match method {
+            QuantMethod::HadamardGptq | QuantMethod::HadamardRtn => Some(HadamardCtx {
+                signs_hidden: signs.0.clone(),
+                signs_inter: signs.1.clone(),
+            }),
+            _ => None,
+        };
+        let quantizer = match method {
+            QuantMethod::Rtn | QuantMethod::HadamardRtn => WeightQuantizer::Rtn,
+            QuantMethod::Gptq | QuantMethod::HadamardGptq => WeightQuantizer::Gptq {
+                hessians: &stats.layers[pos].hessians,
+                damp: 0.01,
+            },
+        };
+        out.push(QuantizedMoeBlock::build(
+            block,
+            &allocation.schemes[pos],
+            &quantizer,
+            hadamard,
+        )?);
+    }
+    Ok(out)
+}
+
+/// Accuracy report of one experiment row.
+#[derive(Clone, Debug)]
+pub struct AccuracyReport {
+    pub ppl: f64,
+    pub probes: ProbeReport,
+    pub avg_wbits: f64,
+    pub avg_abits: f64,
+}
+
+/// Evaluate a quantized configuration: perplexity on held-out sequences +
+/// the probe suite.
+pub fn evaluate(
+    lm: &MoeLm,
+    corpus: &Corpus,
+    allocation: &Allocation,
+    blocks: &[QuantizedMoeBlock],
+    n_eval_seqs: usize,
+    n_probe_cases: usize,
+) -> AccuracyReport {
+    let replacements: HashMap<usize, &QuantizedMoeBlock> = allocation
+        .layers
+        .iter()
+        .zip(blocks)
+        .map(|(l, b)| (*l, b))
+        .collect();
+    let seqs = corpus.sequences("valid", lm.cfg.seq_len);
+    let eval: Vec<&[u32]> = seqs.iter().take(n_eval_seqs).copied().collect();
+    let ppl = perplexity_quantized(lm, &eval, &replacements);
+    let probes = probe_accuracy(lm, corpus, &replacements, n_probe_cases, 7);
+    AccuracyReport {
+        ppl,
+        probes,
+        avg_wbits: allocation.avg_weight_bits(&lm.cfg),
+        avg_abits: allocation.avg_act_bits(&lm.cfg),
+    }
+}
+
+/// fp32 baseline (no replacement map).
+pub fn evaluate_fp32(lm: &MoeLm, corpus: &Corpus, n_eval_seqs: usize, n_probe_cases: usize) -> AccuracyReport {
+    let seqs = corpus.sequences("valid", lm.cfg.seq_len);
+    let eval: Vec<&[u32]> = seqs.iter().take(n_eval_seqs).copied().collect();
+    let ppl = perplexity_quantized(lm, &eval, &HashMap::new());
+    let probes = probe_accuracy(lm, corpus, &HashMap::new(), n_probe_cases, 7);
+    AccuracyReport { ppl, probes, avg_wbits: 16.0, avg_abits: 16.0 }
+}
+
+/// Tokens-per-expert workloads of the MoE layers of a model for the
+/// simulator benches (from calibration activation frequencies, scaled to
+/// `batch_tokens`).
+pub fn expert_token_workload(
+    stats: &CalibrationStats,
+    cfg: &ModelConfig,
+    batch_tokens: usize,
+) -> Vec<Vec<usize>> {
+    stats
+        .layers
+        .iter()
+        .map(|ls| {
+            let total: usize = ls.activation_counts.iter().sum();
+            let mut tokens: Vec<usize> = ls
+                .activation_counts
+                .iter()
+                .map(|&c| {
+                    ((c as f64 / total.max(1) as f64) * batch_tokens as f64 * cfg.topk as f64)
+                        .round() as usize
+                })
+                .collect();
+            // shared experts see every token
+            tokens.extend(std::iter::repeat(batch_tokens).take(cfg.n_shared));
+            tokens
+        })
+        .collect()
+}
+
+/// Pretty table printer (pipe-separated, fixed width).
+pub fn print_row(cells: &[String], widths: &[usize]) {
+    let line: Vec<String> = cells
+        .iter()
+        .zip(widths)
+        .map(|(c, w)| format!("{c:>w$}", w = w))
+        .collect();
+    println!("| {} |", line.join(" | "));
+}
+
+impl Ffn {
+    /// convenience used by benches
+    pub fn is_moe(&self) -> bool {
+        matches!(self, Ffn::Moe(_))
+    }
+}

@@ -1,0 +1,280 @@
+//! Mixed-precision Group-GEMM execution-plan generation (§4.3).
+//!
+//! This is the TPU/simulator analogue of the paper's kernel generator: it
+//! takes the per-linear-block GEMM problems of an MoE block (shapes from
+//! routing, schemes from the allocator) and emits a *fused* tile-task list
+//! under the CUDA resource-consistency constraints:
+//!
+//! * **warp-count consistency** (Fig. 4): every micro-kernel in the fused
+//!   launch must use the same warps/CTA — the generator enumerates warp
+//!   counts and keeps the cheapest feasible one;
+//! * **shared-memory maximum**: the fused launch reserves the max smem of
+//!   the selected tile configs (tracked for reporting);
+//! * **slice-K**: the tile candidates include k-split variants, which the
+//!   per-problem optimizer picks exactly when they pay (small GEMMs).
+
+use crate::costmodel::gpu::GpuSpec;
+use crate::costmodel::micro::Specialization;
+use crate::costmodel::tile::{
+    best_tile, launch_roofline, tile_compute_bytes, tile_cost, tile_count, TileConfig,
+};
+use crate::quant::scheme::QuantScheme;
+
+/// One linear-block GEMM sub-problem of an MoE block.
+#[derive(Clone, Debug)]
+pub struct GemmProblem {
+    pub expert: usize,
+    /// 0 = gate, 1 = up, 2 = down.
+    pub linear: usize,
+    /// Tokens routed to this expert (`m`).
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub scheme: QuantScheme,
+}
+
+/// A scheduled tile task.
+#[derive(Clone, Copy, Debug)]
+pub struct TileTask {
+    pub problem: usize,
+    /// Scalar roofline cost (ILP granularity, scheduling key).
+    pub cost: f64,
+    /// Pure SM-compute seconds (launch-roofline compute term).
+    pub compute: f64,
+    /// HBM bytes moved (launch-roofline memory term).
+    pub bytes: f64,
+}
+
+/// A fused (single-launch) execution plan.
+#[derive(Clone, Debug)]
+pub struct ExecutionPlan {
+    pub tiles: Vec<TileTask>,
+    /// Chosen tile config per problem.
+    pub configs: Vec<TileConfig>,
+    /// Warps/CTA shared by every micro-kernel in the launch.
+    pub warp_count: usize,
+    /// Shared-memory reservation of the fused kernel (max over configs).
+    pub smem_bytes: usize,
+    /// Kernel launches this plan needs (1 = horizontally fused).
+    pub launches: usize,
+}
+
+impl ExecutionPlan {
+    pub fn total_tile_cost(&self) -> f64 {
+        self.tiles.iter().map(|t| t.cost).sum()
+    }
+
+    pub fn tile_costs(&self) -> Vec<f64> {
+        self.tiles.iter().map(|t| t.cost).collect()
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.tiles.iter().map(|t| t.bytes).sum()
+    }
+
+    pub fn compute_costs(&self) -> Vec<f64> {
+        self.tiles.iter().map(|t| t.compute).collect()
+    }
+
+    pub fn byte_costs(&self) -> Vec<f64> {
+        self.tiles.iter().map(|t| t.bytes).collect()
+    }
+}
+
+/// Build the expert GEMM problems of one MoE block from per-expert token
+/// counts and per-(expert, linear) schemes. `hidden`/`inter` give the
+/// gate/up (`[inter, hidden]`) and down (`[hidden, inter]`) shapes.
+pub fn moe_problems(
+    tokens_per_expert: &[usize],
+    schemes: &[[QuantScheme; 3]],
+    hidden: usize,
+    inter: usize,
+) -> Vec<GemmProblem> {
+    assert_eq!(tokens_per_expert.len(), schemes.len());
+    let mut out = Vec::new();
+    for (e, &m) in tokens_per_expert.iter().enumerate() {
+        if m == 0 {
+            continue;
+        }
+        for (j, (n, k)) in [(inter, hidden), (inter, hidden), (hidden, inter)].iter().enumerate() {
+            out.push(GemmProblem {
+                expert: e,
+                linear: j,
+                m,
+                n: *n,
+                k: *k,
+                scheme: schemes[e][j],
+            });
+        }
+    }
+    out
+}
+
+/// Candidate warp counts for the fused launch.
+const WARP_CHOICES: [usize; 3] = [4, 8, 16];
+
+/// Generate the fused mixed-precision Group-GEMM plan: per-problem optimal
+/// tiles under a common warp count, one kernel launch total.
+pub fn fused_plan(gpu: &GpuSpec, problems: &[GemmProblem], spec: Specialization) -> ExecutionPlan {
+    assert!(!problems.is_empty());
+    let mut best: Option<ExecutionPlan> = None;
+    for &warps in &WARP_CHOICES {
+        let mut tiles = Vec::new();
+        let mut configs = Vec::new();
+        let mut feasible = true;
+        let mut smem = 0usize;
+        for (pi, p) in problems.iter().enumerate() {
+            // some (scheme, warp) pairs have no candidate: infeasible
+            let has = crate::costmodel::tile::tile_candidates(&p.scheme)
+                .iter()
+                .any(|t| t.warps == warps && t.smem_bytes(&p.scheme) <= gpu.smem_per_sm);
+            if !has {
+                feasible = false;
+                break;
+            }
+            let (_, cfg) = best_tile(gpu, &p.scheme, p.m, p.n, p.k, Some(warps), spec);
+            let per_tile = tile_cost(gpu, &p.scheme, &cfg, p.k, spec);
+            let (compute, bytes) = tile_compute_bytes(gpu, &p.scheme, &cfg, p.k, spec);
+            let count = tile_count(p.m, p.n, &cfg);
+            for _ in 0..count {
+                tiles.push(TileTask { problem: pi, cost: per_tile, compute, bytes });
+            }
+            smem = smem.max(cfg.smem_bytes(&p.scheme));
+            configs.push(cfg);
+        }
+        if !feasible {
+            continue;
+        }
+        let plan = ExecutionPlan { tiles, configs, warp_count: warps, smem_bytes: smem, launches: 1 };
+        if best.as_ref().map_or(true, |b| plan.total_tile_cost() < b.total_tile_cost()) {
+            best = Some(plan);
+        }
+    }
+    best.expect("no feasible warp count for fused plan")
+}
+
+/// Per-problem plans — the sequential baseline (one launch per problem,
+/// vLLM-Marlin-MoE style). With only one GEMM per launch, the tile choice
+/// must fight GPU underfill, so each problem picks the config minimizing
+/// its *launch-level roofline* (Marlin's striped partitioning intent),
+/// not the aggregate tile cost.
+pub fn sequential_plans(gpu: &GpuSpec, problems: &[GemmProblem], spec: Specialization) -> Vec<ExecutionPlan> {
+    problems
+        .iter()
+        .enumerate()
+        .map(|(pi, p)| {
+            let mut best: Option<(f64, ExecutionPlan)> = None;
+            for cfg in crate::costmodel::tile::tile_candidates(&p.scheme) {
+                if cfg.smem_bytes(&p.scheme) > gpu.smem_per_sm {
+                    continue;
+                }
+                let per_tile = tile_cost(gpu, &p.scheme, &cfg, p.k, spec);
+                let (compute, bytes) = tile_compute_bytes(gpu, &p.scheme, &cfg, p.k, spec);
+                let count = tile_count(p.m, p.n, &cfg);
+                let plan = ExecutionPlan {
+                    tiles: (0..count)
+                        .map(|_| TileTask { problem: pi, cost: per_tile, compute, bytes })
+                        .collect(),
+                    configs: vec![cfg],
+                    warp_count: cfg.warps,
+                    smem_bytes: cfg.smem_bytes(&p.scheme),
+                    launches: 1,
+                };
+                let t = launch_roofline(gpu, &plan.compute_costs(), &plan.byte_costs());
+                if best.as_ref().map_or(true, |(bt, _)| t < *bt) {
+                    best = Some((t, plan));
+                }
+            }
+            best.expect("no feasible tile config").1
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn problems_512() -> Vec<GemmProblem> {
+        // Fig. 2 workload: 60 experts, [N,K] = [2816, 2048], 512 tokens top-4
+        let tokens = vec![34usize; 60];
+        let schemes = vec![[QuantScheme::W4A16; 3]; 60];
+        moe_problems(&tokens, &schemes, 2048, 2816)
+    }
+
+    #[test]
+    fn moe_problems_shapes() {
+        let p = problems_512();
+        assert_eq!(p.len(), 180);
+        assert_eq!((p[0].n, p[0].k), (2816, 2048)); // gate
+        assert_eq!((p[2].n, p[2].k), (2048, 2816)); // down
+        // zero-token experts vanish
+        let mut tokens = vec![8usize; 4];
+        tokens[2] = 0;
+        let q = moe_problems(&tokens, &vec![[QuantScheme::FP16; 3]; 4], 64, 128);
+        assert_eq!(q.len(), 9);
+    }
+
+    #[test]
+    fn fused_plan_single_launch_uniform_warps() {
+        let gpu = GpuSpec::rtx4090();
+        let plan = fused_plan(&gpu, &problems_512(), Specialization::Specialized);
+        assert_eq!(plan.launches, 1);
+        assert!(WARP_CHOICES.contains(&plan.warp_count));
+        assert!(plan.tiles.len() > gpu.sms, "tiles should exceed SM count");
+        assert!(plan.smem_bytes <= gpu.smem_per_sm);
+    }
+
+    #[test]
+    fn mixed_precision_fuses() {
+        let gpu = GpuSpec::rtx4090();
+        let tokens = vec![100usize, 5, 200, 1];
+        let schemes = vec![
+            [QuantScheme::W8A8; 3],
+            [QuantScheme::W4A16; 3],
+            [QuantScheme::W4A4; 3],
+            [QuantScheme::W2A16G128; 3],
+        ];
+        let probs = moe_problems(&tokens, &schemes, 2048, 2816);
+        let plan = fused_plan(&gpu, &probs, Specialization::Specialized);
+        assert_eq!(plan.launches, 1);
+        assert_eq!(plan.configs.len(), probs.len());
+        // every config shares the warp count
+        assert!(plan.configs.iter().all(|c| c.warps == plan.warp_count));
+    }
+
+    #[test]
+    fn sequential_plans_one_per_problem() {
+        let gpu = GpuSpec::rtx4090();
+        let probs = problems_512();
+        let plans = sequential_plans(&gpu, &probs, Specialization::Specialized);
+        assert_eq!(plans.len(), probs.len());
+    }
+
+    #[test]
+    fn small_gemm_uses_slice_k() {
+        // a 1-token expert over a big K: the chosen launch plan must be at
+        // least as good as every slice_k = 1 alternative (slice-K exists
+        // precisely to parallelize this shape)
+        let gpu = GpuSpec::rtx4090();
+        let sp = Specialization::Specialized;
+        let probs = vec![GemmProblem {
+            expert: 0,
+            linear: 0,
+            m: 1,
+            n: 256,
+            k: 8192,
+            scheme: QuantScheme::W4A16,
+        }];
+        let plans = sequential_plans(&gpu, &probs, sp);
+        let chosen = launch_roofline(&gpu, &plans[0].compute_costs(), &plans[0].byte_costs());
+        for cfg in crate::costmodel::tile::tile_candidates(&probs[0].scheme) {
+            if cfg.slice_k != 1 {
+                continue;
+            }
+            let (c, b) = tile_compute_bytes(&gpu, &probs[0].scheme, &cfg, probs[0].k, sp);
+            let n = tile_count(probs[0].m, probs[0].n, &cfg);
+            let t = launch_roofline(&gpu, &vec![c; n], &vec![b; n]);
+            assert!(chosen <= t + 1e-12, "chosen {chosen} worse than slice_k=1 cfg {cfg:?} {t}");
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! MxMoE: mixed-precision quantization for MoE with accuracy & performance
+//! co-design — full-system reproduction (rust L3 + JAX L2 + Pallas L1).
+pub mod alloc;
+pub mod costmodel;
+pub mod data;
+pub mod eval;
+pub mod harness;
+pub mod linalg;
+pub mod kernelgen;
+pub mod moe;
+pub mod sched;
+pub mod sim;
+pub mod coordinator;
+pub mod quant;
+pub mod runtime;
+pub mod ser;
+pub mod tensor;
+pub mod util;
+
+pub fn version() -> &'static str { env!("CARGO_PKG_VERSION") }

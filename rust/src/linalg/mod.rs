@@ -1,0 +1,192 @@
+//! Small dense linear-algebra kernels needed by GPTQ: Cholesky
+//! factorization, triangular solves, and SPD inversion with diagonal
+//! damping (the `percdamp` trick from the GPTQ reference implementation).
+
+use crate::tensor::Matrix;
+use anyhow::{bail, Result};
+
+/// Cholesky factorization `A = L·Lᵀ` of a symmetric positive-definite
+/// matrix; returns lower-triangular `L`. Fails on non-SPD input.
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    if a.rows != a.cols {
+        bail!("cholesky: matrix not square");
+    }
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j) as f64;
+            for k in 0..j {
+                s -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("cholesky: not positive definite at pivot {i} (s={s})");
+                }
+                *l.at_mut(i, j) = s.sqrt() as f32;
+            } else {
+                *l.at_mut(i, j) = (s / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L·x = b` for lower-triangular `L` (forward substitution).
+pub fn solve_lower(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= l.at(i, k) as f64 * x[k] as f64;
+        }
+        x[i] = (s / l.at(i, i) as f64) as f32;
+    }
+    x
+}
+
+/// Solve `Lᵀ·x = b` for lower-triangular `L` (backward substitution).
+pub fn solve_lower_t(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = b[i] as f64;
+        for k in i + 1..n {
+            s -= l.at(k, i) as f64 * x[k] as f64;
+        }
+        x[i] = (s / l.at(i, i) as f64) as f32;
+    }
+    x
+}
+
+/// Invert an SPD matrix via Cholesky: `A⁻¹ = L⁻ᵀ·L⁻¹`.
+pub fn spd_inverse(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows;
+    let l = cholesky(a)?;
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0f32; n];
+    for c in 0..n {
+        e.iter_mut().for_each(|v| *v = 0.0);
+        e[c] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_t(&l, &y);
+        for r in 0..n {
+            *inv.at_mut(r, c) = x[r];
+        }
+    }
+    Ok(inv)
+}
+
+/// GPTQ Hessian preparation: `H ← H + mean(diag(H))·damp·I`, handle dead
+/// columns (zero diagonal → 1), then return the **upper Cholesky factor of
+/// H⁻¹** (`U` with `H⁻¹ = Uᵀ·U`... stored as the standard GPTQ
+/// `Cholesky(H⁻¹, upper=True)`), which the GPTQ update loop consumes.
+pub fn gptq_hinv_cholesky(h: &Matrix, damp: f32) -> Result<Matrix> {
+    let n = h.rows;
+    let mut hh = h.clone();
+    let mean_diag: f64 = (0..n).map(|i| hh.at(i, i) as f64).sum::<f64>() / n as f64;
+    let lambda = (mean_diag * damp as f64).max(1e-8) as f32;
+    for i in 0..n {
+        if hh.at(i, i) == 0.0 {
+            *hh.at_mut(i, i) = 1.0;
+        }
+        *hh.at_mut(i, i) += lambda;
+    }
+    let inv = spd_inverse(&hh)?;
+    // upper factor: inv = Uᵀ U with U upper triangular ⇔ L = Uᵀ lower
+    let l = cholesky(&inv)?;
+    Ok(l.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matrix::matmul_nt;
+    use crate::util::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Matrix {
+        let a = Matrix::randn(n, n, 1.0, rng);
+        // A·Aᵀ + n·I is SPD
+        let mut s = matmul_nt(&a, &a);
+        for i in 0..n {
+            *s.at_mut(i, i) += n as f32;
+        }
+        s
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(8);
+        let a = random_spd(12, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let lt = l.transpose();
+        let recon = matmul_nt(&l, &lt.transpose());
+        for (x, y) in recon.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-2, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig −1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn solves_invert_l() {
+        let mut rng = Rng::new(9);
+        let a = random_spd(8, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f32> = (0..8).map(|i| i as f32 - 3.0).collect();
+        let y = solve_lower(&l, &b);
+        // check L·y = b
+        for i in 0..8 {
+            let mut s = 0.0;
+            for k in 0..=i {
+                s += l.at(i, k) * y[k];
+            }
+            assert!((s - b[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let mut rng = Rng::new(10);
+        let a = random_spd(10, &mut rng);
+        let inv = spd_inverse(&a).unwrap();
+        let prod = matmul_nt(&a, &inv.transpose()); // a · inv
+        for r in 0..10 {
+            for c in 0..10 {
+                let expect = if r == c { 1.0 } else { 0.0 };
+                assert!((prod.at(r, c) - expect).abs() < 1e-3, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn gptq_hinv_cholesky_is_upper() {
+        let mut rng = Rng::new(11);
+        let h = random_spd(6, &mut rng);
+        let u = gptq_hinv_cholesky(&h, 0.01).unwrap();
+        for r in 1..6 {
+            for c in 0..r {
+                assert_eq!(u.at(r, c), 0.0, "not upper at ({r},{c})");
+            }
+        }
+        assert!(u.at(0, 0) > 0.0);
+    }
+
+    #[test]
+    fn gptq_hinv_handles_dead_columns() {
+        // zero diagonal entry (dead input channel) must not break
+        let mut h = Matrix::zeros(4, 4);
+        for i in 0..3 {
+            *h.at_mut(i, i) = 2.0;
+        }
+        let u = gptq_hinv_cholesky(&h, 0.01).unwrap();
+        assert!(u.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,175 @@
+//! mxmoe CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   gen-corpus   write the synthetic corpus MXT (build-time input of the
+//!                JAX trainer; rust is the source of truth for the data)
+//!   allocate     run calibration + sensitivity + the MCKP allocator on a
+//!                trained mini model and dump the Tab.-7-style plan JSON
+//!   serve        pointer to the serving driver example
+//!   info         print model registry + environment
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use mxmoe::alloc::{allocate, calibrate, measure_sensitivity, AllocatorConfig, Granularity};
+use mxmoe::costmodel::GpuSpec;
+use mxmoe::data::{Corpus, CorpusSpec};
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::quant::SchemeRegistry;
+use mxmoe::ser::MxtFile;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "info".to_string());
+        let mut flags = HashMap::new();
+        while let Some(k) = it.next() {
+            let key = k
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got '{k}'"))?
+                .to_string();
+            let v = it.next().with_context(|| format!("--{key} needs a value"))?;
+            flags.insert(key, v);
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "gen-corpus" => gen_corpus(&args),
+        "allocate" => cmd_allocate(&args),
+        "serve" => {
+            println!("run: cargo run --release --example serve_mixed_precision");
+            Ok(())
+        }
+        "info" | "--help" | "-h" => {
+            println!("mxmoe {} — MxMoE reproduction (see README.md)", mxmoe::version());
+            println!("\nmodels:");
+            for c in ModelConfig::all_minis() {
+                println!(
+                    "  {:14} experts={}+{} topk={} hidden={} inter={} params={:.1}M",
+                    c.name,
+                    c.n_experts,
+                    c.n_shared,
+                    c.topk,
+                    c.hidden,
+                    c.inter,
+                    c.param_count() as f64 / 1e6
+                );
+            }
+            println!("\ncommands: gen-corpus | allocate | serve | info");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try: info)"),
+    }
+}
+
+fn gen_corpus(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get("out", "artifacts/corpus.mxt"));
+    let spec = CorpusSpec {
+        vocab: args.get_usize("vocab", 512)?,
+        seed: args.get_usize("seed", 1234)? as u64,
+        ..Default::default()
+    };
+    let train_len = args.get_usize("train-len", 400_000)?;
+    let valid_len = args.get_usize("valid-len", 60_000)?;
+    let corpus = Corpus::generate(&spec, train_len, valid_len);
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    corpus.save(&out)?;
+    println!(
+        "wrote {} (train {} tokens, valid {}, vocab {})",
+        out.display(),
+        train_len,
+        valid_len,
+        spec.vocab
+    );
+    Ok(())
+}
+
+fn load_model(args: &Args) -> Result<(ModelConfig, MoeLm, Corpus)> {
+    let name = args.get("model", "qwen15-mini");
+    let dir = PathBuf::from(args.get("artifacts", "artifacts"));
+    let cfg = ModelConfig::by_name(&name)?;
+    let weights = MxtFile::load(&dir.join(format!("model_{name}.mxt")))
+        .context("load model weights (run `make models` first)")?;
+    let lm = MoeLm::load_mxt(&cfg, &weights)?;
+    let corpus = Corpus::load(&dir.join("corpus.mxt")).context("load corpus.mxt")?;
+    Ok((cfg, lm, corpus))
+}
+
+fn cmd_allocate(args: &Args) -> Result<()> {
+    let (cfg, lm, corpus) = load_model(args)?;
+    let r = args.get_f64("r", 0.75)?;
+    let bits = args.get_f64("bits", 5.0)?;
+    let gran = match args.get("granularity", "linear").as_str() {
+        "linear" => Granularity::LinearBlock,
+        "expert" => Granularity::Expert,
+        g => bail!("unknown granularity '{g}'"),
+    };
+    let n_calib = args.get_usize("calib-seqs", 16)?;
+    let seqs = corpus.sequences("train", cfg.seq_len);
+    let calib: Vec<&[u32]> = seqs.iter().take(n_calib).copied().collect();
+
+    eprintln!("calibrating on {} sequences...", calib.len());
+    let stats = calibrate(&lm, &calib, None)?;
+    eprintln!("measuring sensitivity...");
+    let registry = if bits <= 4.5 {
+        SchemeRegistry::weight_only()
+    } else {
+        SchemeRegistry::weight_activation()
+    };
+    let sens = measure_sensitivity(&lm, &stats, &registry)?;
+    eprintln!("solving MCKP (r={r}, target {bits} bits)...");
+    let alloc = allocate(
+        &lm,
+        &GpuSpec::rtx4090(),
+        &registry,
+        &stats,
+        &sens,
+        &AllocatorConfig { r, target_avg_bits: bits, granularity: gran, batch_tokens: 512 },
+    )?;
+    println!("{}", alloc.to_json().pretty());
+    eprintln!(
+        "avg weight bits {:.3}, avg act bits {:.3}",
+        alloc.avg_weight_bits(&cfg),
+        alloc.avg_act_bits(&cfg)
+    );
+    Ok(())
+}

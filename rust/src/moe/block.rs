@@ -1,0 +1,349 @@
+//! The MoE block (Eq. 2) in full precision and in mixed precision.
+//!
+//! [`QuantizedMoeBlock`] is the accuracy-side realization of an MxMoE
+//! allocation: every linear block `(expert, gate|up|down)` carries its own
+//! [`QuantScheme`]; weights are (optionally Hadamard-rotated and) fake-
+//! quantized offline with RTN or GPTQ, activations are fake-quantized
+//! dynamically per token at each linear-block input, exactly mirroring what
+//! the generated kernels do in integer arithmetic.
+
+use anyhow::Result;
+
+use crate::quant::hadamard::{random_signs, rotate_activations, rotate_weight};
+use crate::quant::scheme::QuantScheme;
+use crate::quant::uniform::fake_quant_rows_act;
+use crate::quant::{gptq_quantize, rtn_quantize};
+use crate::tensor::matrix::matmul_nt;
+use crate::tensor::ops::silu;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+use super::expert::ExpertWeights;
+use super::router::{route, Routing};
+
+/// Which linear inside an expert (the paper's `j` index, N = 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinearKind {
+    Gate = 0,
+    Up = 1,
+    Down = 2,
+}
+
+impl LinearKind {
+    pub const ALL: [LinearKind; 3] = [LinearKind::Gate, LinearKind::Up, LinearKind::Down];
+
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LinearKind::Gate => "gate_proj",
+            LinearKind::Up => "up_proj",
+            LinearKind::Down => "down_proj",
+        }
+    }
+}
+
+/// Full-precision MoE block: router + routed experts + shared experts.
+#[derive(Clone, Debug)]
+pub struct MoeBlock {
+    /// `[n_experts, hidden]` router/gating weight.
+    pub w_router: Matrix,
+    pub experts: Vec<ExpertWeights>,
+    /// Always-active shared experts.
+    pub shared: Vec<ExpertWeights>,
+    pub topk: usize,
+}
+
+impl MoeBlock {
+    pub fn random(hidden: usize, inter: usize, n_experts: usize, n_shared: usize, topk: usize, rng: &mut Rng) -> MoeBlock {
+        MoeBlock {
+            w_router: Matrix::randn(n_experts, hidden, 1.0 / (hidden as f32).sqrt(), rng),
+            experts: (0..n_experts).map(|_| ExpertWeights::random(hidden, inter, rng)).collect(),
+            shared: (0..n_shared).map(|_| ExpertWeights::random(hidden, inter, rng)).collect(),
+            topk,
+        }
+    }
+
+    /// Total expert count including shared (allocation index space:
+    /// routed experts first, then shared).
+    pub fn total_experts(&self) -> usize {
+        self.experts.len() + self.shared.len()
+    }
+
+    pub fn expert_at(&self, i: usize) -> &ExpertWeights {
+        if i < self.experts.len() {
+            &self.experts[i]
+        } else {
+            &self.shared[i - self.experts.len()]
+        }
+    }
+
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        self.forward_with_routing(x).0
+    }
+
+    pub fn forward_with_routing(&self, x: &Matrix) -> (Matrix, Routing) {
+        let routing = route(x, &self.w_router, self.topk);
+        let mut out = Matrix::zeros(x.rows, x.cols);
+        for (e, (tokens, weights)) in routing.per_expert.iter().enumerate() {
+            if tokens.is_empty() {
+                continue;
+            }
+            let xe = x.gather_rows(tokens);
+            let ye = self.experts[e].forward(&xe);
+            out.scatter_add_rows(tokens, &ye, weights);
+        }
+        for s in &self.shared {
+            let ys = s.forward(x);
+            out.add_scaled(&ys, 1.0);
+        }
+        (out, routing)
+    }
+}
+
+/// How to quantize weights given (optionally) calibration Hessians.
+pub enum WeightQuantizer<'a> {
+    /// Plain round-to-nearest.
+    Rtn,
+    /// GPTQ with per-(expert, linear) Hessians in the *rotated* basis when
+    /// Hadamard is enabled. Indexed `[expert][linear]`, expert index covers
+    /// routed then shared experts.
+    Gptq { hessians: &'a [[Matrix; 3]], damp: f32 },
+}
+
+/// Per-block Hadamard rotation context: one sign vector per axis.
+#[derive(Clone, Debug)]
+pub struct HadamardCtx {
+    /// signs along the hidden axis (gate/up inputs).
+    pub signs_hidden: Vec<f32>,
+    /// signs along the intermediate axis (down inputs).
+    pub signs_inter: Vec<f32>,
+}
+
+impl HadamardCtx {
+    pub fn random(hidden: usize, inter: usize, rng: &mut Rng) -> HadamardCtx {
+        HadamardCtx {
+            signs_hidden: random_signs(hidden, rng),
+            signs_inter: random_signs(inter, rng),
+        }
+    }
+
+    fn signs_for(&self, kind: LinearKind) -> &[f32] {
+        match kind {
+            LinearKind::Gate | LinearKind::Up => &self.signs_hidden,
+            LinearKind::Down => &self.signs_inter,
+        }
+    }
+}
+
+/// A mixed-precision MoE block: per-linear-block schemes applied to weights
+/// offline, activations fake-quantized at runtime.
+pub struct QuantizedMoeBlock {
+    /// fp32 router (attention/gating stay full precision in the paper).
+    pub w_router: Matrix,
+    /// Fake-quantized expert weights, routed then shared.
+    pub qexperts: Vec<ExpertWeights>,
+    /// Scheme per (expert, linear): `schemes[i][j]`, same index space.
+    pub schemes: Vec<[QuantScheme; 3]>,
+    pub n_routed: usize,
+    pub topk: usize,
+    pub hadamard: Option<HadamardCtx>,
+}
+
+impl QuantizedMoeBlock {
+    /// Build from a full-precision block + per-linear-block scheme
+    /// assignment (`schemes.len() == block.total_experts()`).
+    pub fn build(
+        block: &MoeBlock,
+        schemes: &[[QuantScheme; 3]],
+        quantizer: &WeightQuantizer<'_>,
+        hadamard: Option<HadamardCtx>,
+    ) -> Result<QuantizedMoeBlock> {
+        assert_eq!(schemes.len(), block.total_experts());
+        let mut qexperts = Vec::with_capacity(block.total_experts());
+        for i in 0..block.total_experts() {
+            let e = block.expert_at(i);
+            let q = |w: &Matrix, kind: LinearKind| -> Result<Matrix> {
+                let scheme = &schemes[i][kind.idx()];
+                let w_in = match &hadamard {
+                    Some(ctx) => rotate_weight(w, ctx.signs_for(kind)),
+                    None => w.clone(),
+                };
+                match quantizer {
+                    WeightQuantizer::Rtn => Ok(rtn_quantize(&w_in, scheme)),
+                    WeightQuantizer::Gptq { hessians, damp } => {
+                        gptq_quantize(&w_in, &hessians[i][kind.idx()], scheme, *damp)
+                    }
+                }
+            };
+            qexperts.push(ExpertWeights {
+                gate: q(&e.gate, LinearKind::Gate)?,
+                up: q(&e.up, LinearKind::Up)?,
+                down: q(&e.down, LinearKind::Down)?,
+            });
+        }
+        Ok(QuantizedMoeBlock {
+            w_router: block.w_router.clone(),
+            qexperts,
+            schemes: schemes.to_vec(),
+            n_routed: block.experts.len(),
+            topk: block.topk,
+            hadamard,
+        })
+    }
+
+    /// One quantized linear: optional rotation → dynamic act quant → GEMM.
+    fn quant_linear(&self, x: &Matrix, w_q: &Matrix, scheme: &QuantScheme, kind: LinearKind) -> Matrix {
+        let x_in = match &self.hadamard {
+            Some(ctx) => rotate_activations(x, ctx.signs_for(kind)),
+            None => x.clone(),
+        };
+        let x_q = fake_quant_rows_act(&x_in, scheme.abits, scheme.agroup);
+        matmul_nt(&x_q, w_q)
+    }
+
+    fn expert_forward(&self, i: usize, x: &Matrix) -> Matrix {
+        let e = &self.qexperts[i];
+        let s = &self.schemes[i];
+        let g = self.quant_linear(x, &e.gate, &s[LinearKind::Gate.idx()], LinearKind::Gate);
+        let u = self.quant_linear(x, &e.up, &s[LinearKind::Up.idx()], LinearKind::Up);
+        let mut h = Matrix::zeros(g.rows, g.cols);
+        for idx in 0..g.data.len() {
+            h.data[idx] = silu(g.data[idx]) * u.data[idx];
+        }
+        self.quant_linear(&h, &e.down, &s[LinearKind::Down.idx()], LinearKind::Down)
+    }
+
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        self.forward_with_routing(x).0
+    }
+
+    pub fn forward_with_routing(&self, x: &Matrix) -> (Matrix, Routing) {
+        let routing = route(x, &self.w_router, self.topk);
+        let mut out = Matrix::zeros(x.rows, x.cols);
+        for (e, (tokens, weights)) in routing.per_expert.iter().enumerate() {
+            if tokens.is_empty() {
+                continue;
+            }
+            let xe = x.gather_rows(tokens);
+            let ye = self.expert_forward(e, &xe);
+            out.scatter_add_rows(tokens, &ye, weights);
+        }
+        for si in 0..self.qexperts.len() - self.n_routed {
+            let ys = self.expert_forward(self.n_routed + si, x);
+            out.add_scaled(&ys, 1.0);
+        }
+        (out, routing)
+    }
+}
+
+/// Uniform scheme assignment helper (all linear blocks get `scheme`).
+pub fn uniform_schemes(total_experts: usize, scheme: QuantScheme) -> Vec<[QuantScheme; 3]> {
+    vec![[scheme, scheme, scheme]; total_experts]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_block(rng: &mut Rng) -> MoeBlock {
+        MoeBlock::random(32, 16, 6, 1, 2, rng)
+    }
+
+    #[test]
+    fn fp16_quant_block_matches_fp32() {
+        let mut rng = Rng::new(90);
+        let block = tiny_block(&mut rng);
+        let x = Matrix::randn(20, 32, 1.0, &mut rng);
+        let q = QuantizedMoeBlock::build(
+            &block,
+            &uniform_schemes(block.total_experts(), QuantScheme::FP16),
+            &WeightQuantizer::Rtn,
+            None,
+        )
+        .unwrap();
+        let y = block.forward(&x);
+        let yq = q.forward(&x);
+        for (a, b) in y.data.iter().zip(&yq.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quant_error_monotone_in_bits() {
+        let mut rng = Rng::new(91);
+        let block = tiny_block(&mut rng);
+        let x = Matrix::randn(24, 32, 1.0, &mut rng);
+        let y = block.forward(&x);
+        let mut last = f64::INFINITY;
+        for scheme in [QuantScheme::W2A16, QuantScheme::W4A16, QuantScheme::W8A16] {
+            let q = QuantizedMoeBlock::build(
+                &block,
+                &uniform_schemes(block.total_experts(), scheme),
+                &WeightQuantizer::Rtn,
+                None,
+            )
+            .unwrap();
+            let err = y.l2_distance(&q.forward(&x));
+            assert!(err < last, "{scheme}: {err} !< {last}");
+            assert!(err > 0.0);
+            last = err;
+        }
+    }
+
+    #[test]
+    fn hadamard_forward_fp16_exact() {
+        // with fp16 schemes the rotation must cancel exactly
+        let mut rng = Rng::new(92);
+        let block = tiny_block(&mut rng);
+        let x = Matrix::randn(12, 32, 1.0, &mut rng);
+        let ctx = HadamardCtx::random(32, 16, &mut rng);
+        let q = QuantizedMoeBlock::build(
+            &block,
+            &uniform_schemes(block.total_experts(), QuantScheme::FP16),
+            &WeightQuantizer::Rtn,
+            Some(ctx),
+        )
+        .unwrap();
+        let y = block.forward(&x);
+        let yq = q.forward(&x);
+        for (a, b) in y.data.iter().zip(&yq.data) {
+            assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn mixed_schemes_respected_per_block() {
+        // giving one expert's down_proj 2 bits must hurt more than giving it 8
+        let mut rng = Rng::new(93);
+        let block = tiny_block(&mut rng);
+        let x = Matrix::randn(40, 32, 1.0, &mut rng);
+        let y = block.forward(&x);
+        let mut hi = uniform_schemes(block.total_experts(), QuantScheme::W8A16);
+        hi[0][2] = QuantScheme::W8A16;
+        let mut lo = hi.clone();
+        lo[0][2] = QuantScheme::W2A16;
+        let err_hi = {
+            let q = QuantizedMoeBlock::build(&block, &hi, &WeightQuantizer::Rtn, None).unwrap();
+            y.l2_distance(&q.forward(&x))
+        };
+        let err_lo = {
+            let q = QuantizedMoeBlock::build(&block, &lo, &WeightQuantizer::Rtn, None).unwrap();
+            y.l2_distance(&q.forward(&x))
+        };
+        assert!(err_lo > err_hi, "{err_lo} !> {err_hi}");
+    }
+
+    #[test]
+    fn shared_experts_always_contribute() {
+        let mut rng = Rng::new(94);
+        let mut block = tiny_block(&mut rng);
+        let x = Matrix::randn(10, 32, 1.0, &mut rng);
+        let y_with = block.forward(&x);
+        block.shared.clear();
+        let y_without = block.forward(&x);
+        assert!(y_with.l2_distance(&y_without) > 1e-3);
+    }
+}

@@ -1,0 +1,235 @@
+//! Model architecture configs.
+//!
+//! The four mini models mirror the expert topology of the paper's Tab. 2
+//! (experts, shared experts, top-k, DeepSeek's dense first layer) at
+//! laptop-trainable dimensions. Hidden/intermediate sizes are powers of two
+//! so Hadamard incoherence processing applies on every axis.
+
+use anyhow::{bail, Result};
+
+use crate::ser::Json;
+
+/// Architecture of a mini MoE language model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    /// Routed experts per MoE block.
+    pub n_experts: usize,
+    /// Always-active shared experts (Qwen/DeepSeek style).
+    pub n_shared: usize,
+    /// Routed experts activated per token.
+    pub topk: usize,
+    /// Expert FFN intermediate size.
+    pub inter: usize,
+    /// DeepSeek-V2 style: first layer uses a dense MLP instead of MoE.
+    pub dense_first: bool,
+    /// Training/eval sequence length.
+    pub seq_len: usize,
+}
+
+impl ModelConfig {
+    /// Mixtral-8×7B analogue: 8 experts, top-2, no shared experts.
+    pub fn mixtral_mini() -> ModelConfig {
+        ModelConfig {
+            name: "mixtral-mini".into(),
+            vocab: 512,
+            hidden: 128,
+            layers: 4,
+            heads: 4,
+            n_experts: 8,
+            n_shared: 0,
+            topk: 2,
+            inter: 256,
+            dense_first: false,
+            seq_len: 128,
+        }
+    }
+
+    /// Qwen1.5-MoE analogue: 60 routed + 4 shared, top-4.
+    pub fn qwen15_mini() -> ModelConfig {
+        ModelConfig {
+            name: "qwen15-mini".into(),
+            vocab: 512,
+            hidden: 128,
+            layers: 4,
+            heads: 4,
+            n_experts: 60,
+            n_shared: 4,
+            topk: 4,
+            inter: 64,
+            dense_first: false,
+            seq_len: 128,
+        }
+    }
+
+    /// Qwen2-MoE analogue: 64 routed + 8 shared, top-8.
+    pub fn qwen2_mini() -> ModelConfig {
+        ModelConfig {
+            name: "qwen2-mini".into(),
+            vocab: 512,
+            hidden: 128,
+            layers: 4,
+            heads: 4,
+            n_experts: 64,
+            n_shared: 8,
+            topk: 8,
+            inter: 64,
+            dense_first: false,
+            seq_len: 128,
+        }
+    }
+
+    /// DeepSeek-V2-Lite analogue: 64 routed + 2 shared, top-6, dense layer 0.
+    pub fn dsv2_mini() -> ModelConfig {
+        ModelConfig {
+            name: "dsv2-mini".into(),
+            vocab: 512,
+            hidden: 128,
+            layers: 4,
+            heads: 4,
+            n_experts: 64,
+            n_shared: 2,
+            topk: 6,
+            inter: 64,
+            dense_first: true,
+            seq_len: 128,
+        }
+    }
+
+    /// All four evaluation models (Tab. 1 / Tab. 2 order).
+    pub fn all_minis() -> Vec<ModelConfig> {
+        vec![
+            ModelConfig::dsv2_mini(),
+            ModelConfig::qwen15_mini(),
+            ModelConfig::qwen2_mini(),
+            ModelConfig::mixtral_mini(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Result<ModelConfig> {
+        for c in ModelConfig::all_minis() {
+            if c.name == name {
+                return Ok(c);
+            }
+        }
+        bail!("unknown model '{name}' (known: dsv2-mini, qwen15-mini, qwen2-mini, mixtral-mini)")
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Which layers carry a MoE block.
+    pub fn moe_layers(&self) -> Vec<usize> {
+        (0..self.layers)
+            .filter(|&l| !(self.dense_first && l == 0))
+            .collect()
+    }
+
+    /// Linear blocks per expert (gate/up/down), the paper's `N = 3`.
+    pub const LINEARS_PER_EXPERT: usize = 3;
+
+    /// Total parameter count (for reporting).
+    pub fn param_count(&self) -> usize {
+        let emb = self.vocab * self.hidden * 2; // embed + head
+        let attn = self.layers * (4 * self.hidden * self.hidden + 2 * self.hidden);
+        let expert = 3 * self.inter * self.hidden;
+        let moe: usize = self
+            .moe_layers()
+            .iter()
+            .map(|_| (self.n_experts + self.n_shared) * expert + self.n_experts * self.hidden)
+            .sum();
+        let dense: usize = if self.dense_first {
+            // dense MLP sized to match total expert compute per token
+            3 * self.inter * self.topk * self.hidden
+        } else {
+            0
+        };
+        emb + attn + moe + dense
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("layers", Json::num(self.layers as f64)),
+            ("heads", Json::num(self.heads as f64)),
+            ("n_experts", Json::num(self.n_experts as f64)),
+            ("n_shared", Json::num(self.n_shared as f64)),
+            ("topk", Json::num(self.topk as f64)),
+            ("inter", Json::num(self.inter as f64)),
+            ("dense_first", Json::Bool(self.dense_first)),
+            ("seq_len", Json::num(self.seq_len as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: v.req_str("name")?.to_string(),
+            vocab: v.req_usize("vocab")?,
+            hidden: v.req_usize("hidden")?,
+            layers: v.req_usize("layers")?,
+            heads: v.req_usize("heads")?,
+            n_experts: v.req_usize("n_experts")?,
+            n_shared: v.req_usize("n_shared")?,
+            topk: v.req_usize("topk")?,
+            inter: v.req_usize("inter")?,
+            dense_first: v.get("dense_first").and_then(Json::as_bool).unwrap_or(false),
+            seq_len: v.req_usize("seq_len")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_topologies_match_paper_table2() {
+        let m = ModelConfig::mixtral_mini();
+        assert_eq!((m.n_experts, m.n_shared, m.topk), (8, 0, 2));
+        let q1 = ModelConfig::qwen15_mini();
+        assert_eq!((q1.n_experts, q1.n_shared, q1.topk), (60, 4, 4));
+        let q2 = ModelConfig::qwen2_mini();
+        assert_eq!((q2.n_experts, q2.n_shared, q2.topk), (64, 8, 8));
+        let ds = ModelConfig::dsv2_mini();
+        assert_eq!((ds.n_experts, ds.n_shared, ds.topk), (64, 2, 6));
+        assert!(ds.dense_first);
+    }
+
+    #[test]
+    fn dense_first_drops_layer_zero() {
+        let ds = ModelConfig::dsv2_mini();
+        assert_eq!(ds.moe_layers(), vec![1, 2, 3]);
+        let m = ModelConfig::mixtral_mini();
+        assert_eq!(m.moe_layers(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for c in ModelConfig::all_minis() {
+            let j = c.to_json();
+            let c2 = ModelConfig::from_json(&j).unwrap();
+            assert_eq!(c, c2);
+        }
+    }
+
+    #[test]
+    fn by_name_errors_on_unknown() {
+        assert!(ModelConfig::by_name("gpt-5").is_err());
+        assert!(ModelConfig::by_name("dsv2-mini").is_ok());
+    }
+
+    #[test]
+    fn power_of_two_dims_for_hadamard() {
+        for c in ModelConfig::all_minis() {
+            assert!(c.hidden.is_power_of_two());
+            assert!(c.inter.is_power_of_two());
+        }
+    }
+}

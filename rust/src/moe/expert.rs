@@ -1,0 +1,91 @@
+//! Expert FFN weights and forward (the paper's Eq. 1:
+//! `down( silu(gate(x)) ⊙ up(x) )`).
+
+use crate::tensor::matrix::matmul_nt;
+use crate::tensor::ops::silu;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// SwiGLU expert: three linear blocks, weights stored `[out, in]` row-major
+/// (`y = x·Wᵀ`).
+#[derive(Clone, Debug)]
+pub struct ExpertWeights {
+    /// `[inter, hidden]`
+    pub gate: Matrix,
+    /// `[inter, hidden]`
+    pub up: Matrix,
+    /// `[hidden, inter]`
+    pub down: Matrix,
+}
+
+impl ExpertWeights {
+    pub fn random(hidden: usize, inter: usize, rng: &mut Rng) -> ExpertWeights {
+        let std_in = 1.0 / (hidden as f32).sqrt();
+        let std_out = 1.0 / (inter as f32).sqrt();
+        ExpertWeights {
+            gate: Matrix::randn(inter, hidden, std_in, rng),
+            up: Matrix::randn(inter, hidden, std_in, rng),
+            down: Matrix::randn(hidden, inter, std_out, rng),
+        }
+    }
+
+    /// Forward `[t, hidden] → [t, hidden]`.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        let g = matmul_nt(x, &self.gate);
+        let u = matmul_nt(x, &self.up);
+        let mut h = Matrix::zeros(g.rows, g.cols);
+        for i in 0..g.data.len() {
+            h.data[i] = silu(g.data[i]) * u.data[i];
+        }
+        matmul_nt(&h, &self.down)
+    }
+
+    /// The intermediate `h = silu(gate(x)) ⊙ up(x)` — the input of the
+    /// down-proj linear block (needed for GPTQ Hessians and down-proj
+    /// sensitivity).
+    pub fn intermediate(&self, x: &Matrix) -> Matrix {
+        let g = matmul_nt(x, &self.gate);
+        let u = matmul_nt(x, &self.up);
+        let mut h = Matrix::zeros(g.rows, g.cols);
+        for i in 0..g.data.len() {
+            h.data[i] = silu(g.data[i]) * u.data[i];
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(80);
+        let e = ExpertWeights::random(16, 32, &mut rng);
+        let x = Matrix::randn(5, 16, 1.0, &mut rng);
+        let y = e.forward(&x);
+        assert_eq!((y.rows, y.cols), (5, 16));
+    }
+
+    #[test]
+    fn forward_composes_from_intermediate() {
+        let mut rng = Rng::new(81);
+        let e = ExpertWeights::random(8, 16, &mut rng);
+        let x = Matrix::randn(3, 8, 1.0, &mut rng);
+        let h = e.intermediate(&x);
+        let y = matmul_nt(&h, &e.down);
+        let y2 = e.forward(&x);
+        for (a, b) in y.data.iter().zip(&y2.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn zero_input_zero_output() {
+        let mut rng = Rng::new(82);
+        let e = ExpertWeights::random(8, 16, &mut rng);
+        let x = Matrix::zeros(2, 8);
+        let y = e.forward(&x);
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+}

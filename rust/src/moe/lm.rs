@@ -1,0 +1,500 @@
+//! The mini MoE transformer LM: the accuracy-evaluation substrate.
+//!
+//! Architecture (must stay byte-compatible with the JAX trainer in
+//! `python/compile/moe_lm.py`, which writes the MXT weight files):
+//!
+//! ```text
+//! embed [vocab, hidden]
+//! per layer l:
+//!   ln1 [hidden] → MHA (wq,wk,wv,wo [hidden,hidden], RoPE θ=10000, causal) → +res
+//!   ln2 [hidden] → MoE block (or dense SwiGLU at layer 0 when dense_first) → +res
+//! ln_f [hidden] → head [vocab, hidden]
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ser::mxt::MxtFile;
+use crate::tensor::matrix::matmul_nt;
+use crate::tensor::ops::rmsnorm;
+use crate::tensor::{softmax_rows, Matrix};
+use crate::util::Rng;
+
+use super::block::{MoeBlock, QuantizedMoeBlock};
+use super::config::ModelConfig;
+use super::expert::ExpertWeights;
+use super::router::Routing;
+
+/// One transformer layer's weights.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub ln1: Vec<f32>,
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub ln2: Vec<f32>,
+    pub ffn: Ffn,
+}
+
+/// A layer's feed-forward: MoE or dense (DeepSeek's first layer).
+#[derive(Clone, Debug)]
+pub enum Ffn {
+    Moe(MoeBlock),
+    Dense(ExpertWeights),
+}
+
+/// The full model.
+pub struct MoeLm {
+    pub cfg: ModelConfig,
+    pub embed: Matrix,
+    pub layers: Vec<Layer>,
+    pub ln_f: Vec<f32>,
+    pub head: Matrix,
+}
+
+/// Captured state at one MoE layer during a forward pass.
+pub struct MoeCapture {
+    /// Layer index in the transformer.
+    pub layer: usize,
+    /// Input of the MoE block (after ln2) — gate/up linear-block input.
+    pub moe_input: Matrix,
+    pub routing: Routing,
+}
+
+impl MoeLm {
+    pub fn random(cfg: &ModelConfig, rng: &mut Rng) -> MoeLm {
+        let h = cfg.hidden;
+        let std = 1.0 / (h as f32).sqrt();
+        let layers = (0..cfg.layers)
+            .map(|l| Layer {
+                ln1: vec![1.0; h],
+                wq: Matrix::randn(h, h, std, rng),
+                wk: Matrix::randn(h, h, std, rng),
+                wv: Matrix::randn(h, h, std, rng),
+                wo: Matrix::randn(h, h, std, rng),
+                ln2: vec![1.0; h],
+                ffn: if cfg.dense_first && l == 0 {
+                    Ffn::Dense(ExpertWeights::random(h, cfg.inter * cfg.topk, rng))
+                } else {
+                    Ffn::Moe(MoeBlock::random(h, cfg.inter, cfg.n_experts, cfg.n_shared, cfg.topk, rng))
+                },
+            })
+            .collect();
+        MoeLm {
+            cfg: cfg.clone(),
+            embed: Matrix::randn(cfg.vocab, h, 1.0, rng),
+            layers,
+            ln_f: vec![1.0; h],
+            head: Matrix::randn(cfg.vocab, h, std, rng),
+        }
+    }
+
+    /// Load from an MXT weight file written by `python/compile/moe_lm.py`.
+    pub fn load_mxt(cfg: &ModelConfig, f: &MxtFile) -> Result<MoeLm> {
+        let mat = |name: &str, rows: usize, cols: usize| -> Result<Matrix> {
+            let (shape, vals) = f.f32(name)?;
+            if shape != vec![rows, cols] {
+                bail!("{name}: shape {shape:?}, expected [{rows}, {cols}]");
+            }
+            Ok(Matrix::from_vec(rows, cols, vals))
+        };
+        let vec1 = |name: &str, n: usize| -> Result<Vec<f32>> {
+            let (shape, vals) = f.f32(name)?;
+            if shape != vec![n] {
+                bail!("{name}: shape {shape:?}, expected [{n}]");
+            }
+            Ok(vals)
+        };
+        let h = cfg.hidden;
+        let mut layers = Vec::with_capacity(cfg.layers);
+        for l in 0..cfg.layers {
+            let p = |s: &str| format!("layers.{l}.{s}");
+            let ffn = if cfg.dense_first && l == 0 {
+                Ffn::Dense(ExpertWeights {
+                    gate: mat(&p("dense.gate"), cfg.inter * cfg.topk, h)?,
+                    up: mat(&p("dense.up"), cfg.inter * cfg.topk, h)?,
+                    down: mat(&p("dense.down"), h, cfg.inter * cfg.topk)?,
+                })
+            } else {
+                let mut experts = Vec::with_capacity(cfg.n_experts);
+                for e in 0..cfg.n_experts {
+                    experts.push(ExpertWeights {
+                        gate: mat(&p(&format!("expert.{e}.gate")), cfg.inter, h)?,
+                        up: mat(&p(&format!("expert.{e}.up")), cfg.inter, h)?,
+                        down: mat(&p(&format!("expert.{e}.down")), h, cfg.inter)?,
+                    });
+                }
+                let mut shared = Vec::with_capacity(cfg.n_shared);
+                for s in 0..cfg.n_shared {
+                    shared.push(ExpertWeights {
+                        gate: mat(&p(&format!("shared.{s}.gate")), cfg.inter, h)?,
+                        up: mat(&p(&format!("shared.{s}.up")), cfg.inter, h)?,
+                        down: mat(&p(&format!("shared.{s}.down")), h, cfg.inter)?,
+                    });
+                }
+                Ffn::Moe(MoeBlock {
+                    w_router: mat(&p("router"), cfg.n_experts, h)?,
+                    experts,
+                    shared,
+                    topk: cfg.topk,
+                })
+            };
+            layers.push(Layer {
+                ln1: vec1(&p("ln1"), h)?,
+                wq: mat(&p("wq"), h, h)?,
+                wk: mat(&p("wk"), h, h)?,
+                wv: mat(&p("wv"), h, h)?,
+                wo: mat(&p("wo"), h, h)?,
+                ln2: vec1(&p("ln2"), h)?,
+                ffn,
+            });
+        }
+        Ok(MoeLm {
+            cfg: cfg.clone(),
+            embed: mat("embed", cfg.vocab, h).context("embed")?,
+            layers,
+            ln_f: vec1("ln_f", h)?,
+            head: mat("head", cfg.vocab, h)?,
+        })
+    }
+
+    /// MoE blocks by layer index.
+    pub fn moe_blocks(&self) -> Vec<(usize, &MoeBlock)> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter_map(|(l, layer)| match &layer.ffn {
+                Ffn::Moe(b) => Some((l, b)),
+                Ffn::Dense(_) => None,
+            })
+            .collect()
+    }
+
+    /// Forward over one token sequence; returns logits `[T, vocab]`.
+    pub fn forward(&self, tokens: &[u32]) -> Matrix {
+        self.forward_inner(tokens, None, &HashMap::new()).0
+    }
+
+    /// Forward that captures every MoE block's input + routing
+    /// (calibration path).
+    pub fn forward_capture(&self, tokens: &[u32]) -> (Matrix, Vec<MoeCapture>) {
+        let mut caps = Vec::new();
+        let logits = self.forward_inner(tokens, Some(&mut caps), &HashMap::new()).0;
+        (logits, caps)
+    }
+
+    /// Forward with some MoE layers replaced by quantized blocks
+    /// (quantized-model evaluation path).
+    pub fn forward_quantized(&self, tokens: &[u32], replacements: &HashMap<usize, &QuantizedMoeBlock>) -> Matrix {
+        self.forward_inner(tokens, None, replacements).0
+    }
+
+    fn forward_inner(
+        &self,
+        tokens: &[u32],
+        mut capture: Option<&mut Vec<MoeCapture>>,
+        replacements: &HashMap<usize, &QuantizedMoeBlock>,
+    ) -> (Matrix, ()) {
+        let t = tokens.len();
+        let h = self.cfg.hidden;
+        let mut x = Matrix::zeros(t, h);
+        for (i, &tok) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
+        }
+        for (l, layer) in self.layers.iter().enumerate() {
+            // --- attention ---
+            let xn = rmsnorm(&x, &layer.ln1, 1e-6);
+            let att = self.attention(&xn, layer);
+            x.add_scaled(&att, 1.0);
+            // --- ffn ---
+            let xn = rmsnorm(&x, &layer.ln2, 1e-6);
+            let y = match (&layer.ffn, replacements.get(&l)) {
+                (_, Some(q)) => {
+                    let (y, routing) = q.forward_with_routing(&xn);
+                    if let Some(caps) = capture.as_deref_mut() {
+                        caps.push(MoeCapture { layer: l, moe_input: xn.clone(), routing });
+                    }
+                    y
+                }
+                (Ffn::Moe(b), None) => {
+                    let (y, routing) = b.forward_with_routing(&xn);
+                    if let Some(caps) = capture.as_deref_mut() {
+                        caps.push(MoeCapture { layer: l, moe_input: xn.clone(), routing });
+                    }
+                    y
+                }
+                (Ffn::Dense(d), None) => d.forward(&xn),
+            };
+            x.add_scaled(&y, 1.0);
+        }
+        let xf = rmsnorm(&x, &self.ln_f, 1e-6);
+        (matmul_nt(&xf, &self.head), ())
+    }
+
+    /// Batched forward with a custom MoE executor: attention/norm run
+    /// natively per sequence, while all sequences' MoE tokens are
+    /// *concatenated* per layer and handed to `moe_exec(layer_idx, block,
+    /// concat_rows)` — the hook the serving engine uses to dispatch expert
+    /// compute to PJRT executables with cross-request batching.
+    pub fn forward_batch_with_moe<F>(&self, batch: &[&[u32]], mut moe_exec: F) -> Vec<Matrix>
+    where
+        F: FnMut(usize, &MoeBlock, &Matrix) -> Matrix,
+    {
+        let h = self.cfg.hidden;
+        let mut xs: Vec<Matrix> = batch
+            .iter()
+            .map(|tokens| {
+                let mut x = Matrix::zeros(tokens.len(), h);
+                for (i, &tok) in tokens.iter().enumerate() {
+                    x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
+                }
+                x
+            })
+            .collect();
+        for (l, layer) in self.layers.iter().enumerate() {
+            for x in xs.iter_mut() {
+                let xn = rmsnorm(x, &layer.ln1, 1e-6);
+                let att = self.attention(&xn, layer);
+                x.add_scaled(&att, 1.0);
+            }
+            match &layer.ffn {
+                Ffn::Dense(d) => {
+                    for x in xs.iter_mut() {
+                        let xn = rmsnorm(x, &layer.ln2, 1e-6);
+                        x.add_scaled(&d.forward(&xn), 1.0);
+                    }
+                }
+                Ffn::Moe(block) => {
+                    // concatenate all sequences' tokens for one dispatch
+                    let total: usize = xs.iter().map(|x| x.rows).sum();
+                    let mut cat = Matrix::zeros(total, h);
+                    let mut off = 0;
+                    for x in &xs {
+                        let xn = rmsnorm(x, &layer.ln2, 1e-6);
+                        cat.data[off * h..(off + x.rows) * h].copy_from_slice(&xn.data);
+                        off += x.rows;
+                    }
+                    let y = moe_exec(l, block, &cat);
+                    assert_eq!((y.rows, y.cols), (total, h));
+                    let mut off = 0;
+                    for x in xs.iter_mut() {
+                        let rows = x.rows;
+                        for r in 0..rows {
+                            for c in 0..h {
+                                *x.at_mut(r, c) += y.at(off + r, c);
+                            }
+                        }
+                        off += rows;
+                    }
+                }
+            }
+        }
+        xs.into_iter()
+            .map(|x| {
+                let xf = rmsnorm(&x, &self.ln_f, 1e-6);
+                matmul_nt(&xf, &self.head)
+            })
+            .collect()
+    }
+
+    /// Causal multi-head attention with RoPE.
+    fn attention(&self, xn: &Matrix, layer: &Layer) -> Matrix {
+        let t = xn.rows;
+        let h = self.cfg.hidden;
+        let heads = self.cfg.heads;
+        let hd = self.cfg.head_dim();
+        let mut q = matmul_nt(xn, &layer.wq);
+        let mut k = matmul_nt(xn, &layer.wk);
+        let v = matmul_nt(xn, &layer.wv);
+        apply_rope(&mut q, heads, hd);
+        apply_rope(&mut k, heads, hd);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut ctx = Matrix::zeros(t, h);
+        for head in 0..heads {
+            let off = head * hd;
+            // scores[t1, t2] over the causal prefix
+            let mut scores = Matrix::zeros(t, t);
+            for t1 in 0..t {
+                for t2 in 0..=t1 {
+                    let mut s = 0.0;
+                    for d in 0..hd {
+                        s += q.at(t1, off + d) * k.at(t2, off + d);
+                    }
+                    *scores.at_mut(t1, t2) = s * scale;
+                }
+                for t2 in t1 + 1..t {
+                    *scores.at_mut(t1, t2) = f32::NEG_INFINITY;
+                }
+            }
+            softmax_rows(&mut scores);
+            for t1 in 0..t {
+                for t2 in 0..=t1 {
+                    let a = scores.at(t1, t2);
+                    if a == 0.0 {
+                        continue;
+                    }
+                    for d in 0..hd {
+                        *ctx.at_mut(t1, off + d) += a * v.at(t2, off + d);
+                    }
+                }
+            }
+        }
+        matmul_nt(&ctx, &layer.wo)
+    }
+}
+
+/// Rotary position embedding, θ = 10000, applied per head to pairs
+/// `(2i, 2i+1)` — identical to `python/compile/moe_lm.py::rope`.
+pub fn apply_rope(x: &mut Matrix, heads: usize, head_dim: usize) {
+    let t = x.rows;
+    for pos in 0..t {
+        let row = x.row_mut(pos);
+        for head in 0..heads {
+            let off = head * head_dim;
+            for i in 0..head_dim / 2 {
+                let theta = (pos as f32) / 10000f32.powf(2.0 * i as f32 / head_dim as f32);
+                let (sin, cos) = theta.sin_cos();
+                let a = row[off + 2 * i];
+                let b = row[off + 2 * i + 1];
+                row[off + 2 * i] = a * cos - b * sin;
+                row[off + 2 * i + 1] = a * sin + b * cos;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            vocab: 32,
+            hidden: 16,
+            layers: 2,
+            heads: 2,
+            n_experts: 4,
+            n_shared: 1,
+            topk: 2,
+            inter: 8,
+            dense_first: false,
+            seq_len: 12,
+        }
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let mut rng = Rng::new(100);
+        let lm = MoeLm::random(&tiny_cfg(), &mut rng);
+        let tokens: Vec<u32> = (0..10).map(|_| rng.below(32) as u32).collect();
+        let logits = lm.forward(&tokens);
+        assert_eq!((logits.rows, logits.cols), (10, 32));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // logits at position i must not depend on tokens after i
+        let mut rng = Rng::new(101);
+        let lm = MoeLm::random(&tiny_cfg(), &mut rng);
+        let t1: Vec<u32> = (0..8).map(|_| rng.below(32) as u32).collect();
+        let mut t2 = t1.clone();
+        t2[7] = (t2[7] + 1) % 32;
+        let l1 = lm.forward(&t1);
+        let l2 = lm.forward(&t2);
+        for pos in 0..7 {
+            for c in 0..32 {
+                assert!(
+                    (l1.at(pos, c) - l2.at(pos, c)).abs() < 1e-4,
+                    "position {pos} leaked future token"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn capture_collects_all_moe_layers() {
+        let mut rng = Rng::new(102);
+        let lm = MoeLm::random(&tiny_cfg(), &mut rng);
+        let tokens: Vec<u32> = (0..6).map(|_| rng.below(32) as u32).collect();
+        let (_, caps) = lm.forward_capture(&tokens);
+        assert_eq!(caps.len(), 2);
+        assert_eq!(caps[0].moe_input.rows, 6);
+        let counts = caps[0].routing.activation_counts();
+        assert_eq!(counts.iter().sum::<usize>(), 6 * 2);
+    }
+
+    #[test]
+    fn dense_first_layer_has_no_moe() {
+        let mut cfg = tiny_cfg();
+        cfg.dense_first = true;
+        let mut rng = Rng::new(103);
+        let lm = MoeLm::random(&cfg, &mut rng);
+        assert_eq!(lm.moe_blocks().len(), 1);
+        let (_, caps) = lm.forward_capture(&[1, 2, 3]);
+        assert_eq!(caps.len(), 1);
+        assert_eq!(caps[0].layer, 1);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_position_zero() {
+        let mut rng = Rng::new(104);
+        let mut x = Matrix::randn(4, 16, 1.0, &mut rng);
+        let orig = x.clone();
+        apply_rope(&mut x, 2, 8);
+        // position 0 unchanged
+        for c in 0..16 {
+            assert!((x.at(0, c) - orig.at(0, c)).abs() < 1e-6);
+        }
+        // rotation preserves per-row norm
+        for r in 0..4 {
+            let n1: f32 = orig.row(r).iter().map(|v| v * v).sum();
+            let n2: f32 = x.row(r).iter().map(|v| v * v).sum();
+            assert!((n1 - n2).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn mxt_roundtrip_via_save_load() {
+        use crate::ser::mxt::MxtTensor;
+        let mut rng = Rng::new(105);
+        let cfg = tiny_cfg();
+        let lm = MoeLm::random(&cfg, &mut rng);
+        // serialize to MXT and reload
+        let mut f = MxtFile::new();
+        f.insert("embed", MxtTensor::from_f32(vec![cfg.vocab, cfg.hidden], &lm.embed.data));
+        f.insert("ln_f", MxtTensor::from_f32(vec![cfg.hidden], &lm.ln_f));
+        f.insert("head", MxtTensor::from_f32(vec![cfg.vocab, cfg.hidden], &lm.head.data));
+        for (l, layer) in lm.layers.iter().enumerate() {
+            let p = |s: &str| format!("layers.{l}.{s}");
+            f.insert(&p("ln1"), MxtTensor::from_f32(vec![cfg.hidden], &layer.ln1));
+            f.insert(&p("ln2"), MxtTensor::from_f32(vec![cfg.hidden], &layer.ln2));
+            for (n, m) in [("wq", &layer.wq), ("wk", &layer.wk), ("wv", &layer.wv), ("wo", &layer.wo)] {
+                f.insert(&p(n), MxtTensor::from_f32(vec![m.rows, m.cols], &m.data));
+            }
+            if let Ffn::Moe(b) = &layer.ffn {
+                f.insert(&p("router"), MxtTensor::from_f32(vec![b.w_router.rows, b.w_router.cols], &b.w_router.data));
+                for (e, ew) in b.experts.iter().enumerate() {
+                    for (n, m) in [("gate", &ew.gate), ("up", &ew.up), ("down", &ew.down)] {
+                        f.insert(&p(&format!("expert.{e}.{n}")), MxtTensor::from_f32(vec![m.rows, m.cols], &m.data));
+                    }
+                }
+                for (s, ew) in b.shared.iter().enumerate() {
+                    for (n, m) in [("gate", &ew.gate), ("up", &ew.up), ("down", &ew.down)] {
+                        f.insert(&p(&format!("shared.{s}.{n}")), MxtTensor::from_f32(vec![m.rows, m.cols], &m.data));
+                    }
+                }
+            }
+        }
+        let lm2 = MoeLm::load_mxt(&cfg, &f).unwrap();
+        let tokens = [3u32, 1, 4, 1, 5];
+        let a = lm.forward(&tokens);
+        let b = lm2.forward(&tokens);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x, y);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Native MoE transformer substrate.
+//!
+//! This is the f32 reference implementation used for calibration,
+//! quantization (GPTQ needs layer inputs), sensitivity measurement (Δ of
+//! Eq. 6) and perplexity/probe evaluation. The serving hot path runs the
+//! same math through AOT-compiled PJRT executables (`crate::runtime`); this
+//! module is the ground truth those executables are checked against.
+
+pub mod block;
+pub mod config;
+pub mod expert;
+pub mod lm;
+pub mod router;
+
+pub use block::{LinearKind, MoeBlock, QuantizedMoeBlock};
+pub use config::ModelConfig;
+pub use expert::ExpertWeights;
+pub use lm::MoeLm;
+pub use router::{route, Routing};

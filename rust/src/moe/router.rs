@@ -1,0 +1,113 @@
+//! Token-to-expert routing (§2.2): softmax gating, top-k selection with
+//! renormalization, and per-expert token grouping for Group-GEMM dispatch.
+
+use crate::tensor::matrix::matmul_nt;
+use crate::tensor::ops::topk;
+use crate::tensor::{softmax_rows, Matrix};
+
+/// Routing decision for a batch of tokens.
+#[derive(Clone, Debug)]
+pub struct Routing {
+    /// Per token: the selected `(expert, gate_weight)` pairs (len = top-k).
+    pub per_token: Vec<Vec<(usize, f32)>>,
+    /// Per expert: indices of the tokens routed to it (the Group-GEMM
+    /// sub-problem rows) and the matching gate weights.
+    pub per_expert: Vec<(Vec<usize>, Vec<f32>)>,
+}
+
+impl Routing {
+    /// Tokens assigned to expert `e`.
+    pub fn tokens_of(&self, e: usize) -> &[usize] {
+        &self.per_expert[e].0
+    }
+
+    /// Activation counts per expert — the Fig. 1b histogram input.
+    pub fn activation_counts(&self) -> Vec<usize> {
+        self.per_expert.iter().map(|(t, _)| t.len()).collect()
+    }
+}
+
+/// Route `x` (`[tokens, hidden]`) through gate weights `w_router`
+/// (`[n_experts, hidden]`), selecting `k` experts per token with softmax
+/// probabilities renormalized over the selected set.
+pub fn route(x: &Matrix, w_router: &Matrix, k: usize) -> Routing {
+    let n_experts = w_router.rows;
+    assert!(k >= 1 && k <= n_experts);
+    let mut logits = matmul_nt(x, w_router);
+    softmax_rows(&mut logits);
+    let mut per_token = Vec::with_capacity(x.rows);
+    let mut per_expert: Vec<(Vec<usize>, Vec<f32>)> =
+        (0..n_experts).map(|_| (Vec::new(), Vec::new())).collect();
+    for t in 0..x.rows {
+        let picks = topk(logits.row(t), k);
+        let z: f32 = picks.iter().map(|p| p.1).sum();
+        let picks: Vec<(usize, f32)> =
+            picks.into_iter().map(|(e, w)| (e, w / z)).collect();
+        for &(e, w) in &picks {
+            per_expert[e].0.push(t);
+            per_expert[e].1.push(w);
+        }
+        per_token.push(picks);
+    }
+    Routing { per_token, per_expert }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn every_token_gets_k_experts() {
+        let mut rng = Rng::new(70);
+        let x = Matrix::randn(33, 16, 1.0, &mut rng);
+        let w = Matrix::randn(10, 16, 1.0, &mut rng);
+        let r = route(&x, &w, 3);
+        assert_eq!(r.per_token.len(), 33);
+        for picks in &r.per_token {
+            assert_eq!(picks.len(), 3);
+            let s: f32 = picks.iter().map(|p| p.1).sum();
+            assert!((s - 1.0).abs() < 1e-5, "weights renormalized");
+            // distinct experts
+            let mut es: Vec<usize> = picks.iter().map(|p| p.0).collect();
+            es.dedup();
+            assert_eq!(es.len(), 3);
+        }
+    }
+
+    #[test]
+    fn per_expert_grouping_consistent() {
+        let mut rng = Rng::new(71);
+        let x = Matrix::randn(50, 8, 1.0, &mut rng);
+        let w = Matrix::randn(6, 8, 1.0, &mut rng);
+        let r = route(&x, &w, 2);
+        let total: usize = r.activation_counts().iter().sum();
+        assert_eq!(total, 50 * 2);
+        // cross-check membership
+        for (e, (tokens, weights)) in r.per_expert.iter().enumerate() {
+            assert_eq!(tokens.len(), weights.len());
+            for (i, &t) in tokens.iter().enumerate() {
+                let found = r.per_token[t].iter().find(|p| p.0 == e).unwrap();
+                assert_eq!(found.1, weights[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn biased_router_skews_activation() {
+        // a router with one dominant direction produces skewed frequencies,
+        // the heterogeneity MxMoE exploits (Fig. 1b right)
+        let mut rng = Rng::new(72);
+        let x = Matrix::randn(200, 8, 1.0, &mut rng);
+        let mut w = Matrix::randn(16, 8, 0.1, &mut rng);
+        for c in 0..8 {
+            *w.at_mut(3, c) = 2.0; // expert 3 loved by everyone
+        }
+        let r = route(&x, &w, 2);
+        let counts = r.activation_counts();
+        let max = *counts.iter().max().unwrap();
+        let min_nonzero = counts.iter().copied().filter(|&c| c > 0).min().unwrap();
+        assert_eq!(counts[3], max);
+        assert!(max >= 10 * min_nonzero.max(1) || min_nonzero == max);
+    }
+}

@@ -1,0 +1,160 @@
+//! Randomized Hadamard incoherence processing (QuaRot-style, §4.2.2).
+//!
+//! For a linear layer `y = x·Wᵀ` we insert an orthogonal rotation
+//! `Q = diag(s)·H/√k` (random signs `s`, Walsh–Hadamard `H`) along the
+//! shared `k` axis: `y = (x·Q)·(W·Q)ᵀ` exactly, because `Q·Qᵀ = I`.
+//! Rotated weights have incoherent (outlier-free) rows, which makes
+//! low-bit uniform quantization dramatically more accurate.
+//!
+//! `k` must be a power of two (the paper disables online rotation when the
+//! model's shapes don't allow it; our mini models use power-of-two dims).
+
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// In-place fast Walsh–Hadamard transform (unnormalized butterflies).
+/// `xs.len()` must be a power of two.
+pub fn fwht(xs: &mut [f32]) {
+    let n = xs.len();
+    assert!(n.is_power_of_two(), "FWHT length {n} not a power of two");
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(h * 2) {
+            for j in i..i + h {
+                let x = xs[j];
+                let y = xs[j + h];
+                xs[j] = x + y;
+                xs[j + h] = x - y;
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// Draw the random ±1 diagonal for a k-dim rotation.
+pub fn random_signs(k: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..k).map(|_| rng.sign()).collect()
+}
+
+/// Apply `M ← M·Q` with `Q = diag(s)·H/√k`, rows independently:
+/// each row is sign-flipped, FWHT'd and scaled by `1/√k`.
+pub fn rotate_rows(m: &mut Matrix, signs: &[f32]) {
+    assert_eq!(m.cols, signs.len());
+    let inv_sqrt = 1.0 / (m.cols as f32).sqrt();
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        for (v, s) in row.iter_mut().zip(signs) {
+            *v *= s;
+        }
+        fwht(row);
+        for v in row.iter_mut() {
+            *v *= inv_sqrt;
+        }
+    }
+}
+
+/// Apply the inverse rotation `M ← M·Qᵀ` (`Qᵀ = H·diag(s)/√k`).
+pub fn rotate_rows_inverse(m: &mut Matrix, signs: &[f32]) {
+    assert_eq!(m.cols, signs.len());
+    let inv_sqrt = 1.0 / (m.cols as f32).sqrt();
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        fwht(row);
+        for (v, s) in row.iter_mut().zip(signs) {
+            *v *= s * inv_sqrt;
+        }
+    }
+}
+
+/// Rotate a weight matrix (`[n, k]`, k = input channels): `W ← W·Q`.
+pub fn rotate_weight(w: &Matrix, signs: &[f32]) -> Matrix {
+    let mut out = w.clone();
+    rotate_rows(&mut out, signs);
+    out
+}
+
+/// Rotate activations (`[tokens, k]`): `X ← X·Q`.
+pub fn rotate_activations(x: &Matrix, signs: &[f32]) -> Matrix {
+    let mut out = x.clone();
+    rotate_rows(&mut out, signs);
+    out
+}
+
+/// Can a k-dim axis be rotated (power-of-two constraint)?
+pub fn hadamard_compatible(k: usize) -> bool {
+    k.is_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matrix::matmul_nt;
+
+    #[test]
+    fn fwht_involution_up_to_n() {
+        let mut rng = Rng::new(50);
+        let n = 64;
+        let orig: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let mut xs = orig.clone();
+        fwht(&mut xs);
+        fwht(&mut xs);
+        for (a, b) in xs.iter().zip(&orig) {
+            assert!((a / n as f32 - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_gemm_exactly() {
+        let mut rng = Rng::new(51);
+        let (m, k, n) = (5, 128, 7);
+        let x = Matrix::randn(m, k, 1.0, &mut rng);
+        let w = Matrix::randn(n, k, 1.0, &mut rng);
+        let signs = random_signs(k, &mut rng);
+        let y = matmul_nt(&x, &w);
+        let y_rot = matmul_nt(&rotate_activations(&x, &signs), &rotate_weight(&w, &signs));
+        for (a, b) in y.data.iter().zip(&y_rot.data) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rotation_inverse_roundtrip() {
+        let mut rng = Rng::new(52);
+        let x = Matrix::randn(3, 32, 1.0, &mut rng);
+        let signs = random_signs(32, &mut rng);
+        let mut y = x.clone();
+        rotate_rows(&mut y, &signs);
+        rotate_rows_inverse(&mut y, &signs);
+        for (a, b) in y.data.iter().zip(&x.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let mut rng = Rng::new(53);
+        let x = Matrix::randn(4, 64, 1.0, &mut rng);
+        let signs = random_signs(64, &mut rng);
+        let y = rotate_activations(&x, &signs);
+        assert!((x.frob_norm() - y.frob_norm()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rotation_suppresses_outliers() {
+        // dense Gaussian rows with a few massive outlier channels: the
+        // outliers blow up the per-channel scale and drown the dense mass.
+        let mut rng = Rng::new(54);
+        let mut w = Matrix::randn(8, 256, 1.0, &mut rng);
+        for r in 0..8 {
+            w.row_mut(r)[17] = 100.0;
+            w.row_mut(r)[101] = -80.0;
+        }
+        let signs = random_signs(256, &mut rng);
+        let r = rotate_weight(&w, &signs);
+        assert!(r.max_abs() < w.max_abs(), "rotation must spread outliers");
+        // quantization error at 4 bits improves correspondingly
+        let e_raw = w.l2_distance(&crate::quant::uniform::fake_quant_matrix(&w, 4, -1, true));
+        let e_rot = r.l2_distance(&crate::quant::uniform::fake_quant_matrix(&r, 4, -1, true));
+        assert!(e_rot < e_raw, "rot {e_rot} !< raw {e_raw}");
+    }
+}

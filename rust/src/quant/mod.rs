@@ -1,0 +1,20 @@
+//! Quantization stack: uniform quantizers, RTN, GPTQ, randomized Hadamard
+//! incoherence processing, bit packing, and the hardware-supported scheme
+//! registry used by the bitwidth allocator.
+//!
+//! All weight quantizers operate on `[n, k]` row-major weight matrices of
+//! `y = x·Wᵀ` linear layers; groups run along the `k` (input-channel) axis,
+//! matching the paper's `w_gsize` notation (−1 = per-output-channel).
+
+pub mod gptq;
+pub mod hadamard;
+pub mod pack;
+pub mod rtn;
+pub mod scheme;
+pub mod uniform;
+
+pub use gptq::gptq_quantize;
+pub use hadamard::{fwht, random_signs, rotate_activations, rotate_weight};
+pub use rtn::rtn_quantize;
+pub use scheme::{QuantScheme, SchemeRegistry};
+pub use uniform::{fake_quant_matrix, fake_quant_rows_act, GroupSpec};

@@ -1,0 +1,112 @@
+//! Bit packing for 2/4/8-bit integer codes.
+//!
+//! The artifact path stores low-bit weights physically packed (two int4
+//! nibbles or four int2 crumbs per byte) exactly as the Pallas kernels
+//! unpack them (`python/compile/kernels/dequant_gemm.py`); this module is
+//! the rust side of that contract plus the memory-accounting ground truth.
+
+use anyhow::{bail, Result};
+
+/// Pack unsigned codes (`0 ≤ c < 2^bits`) into bytes, little-end first
+/// (element 0 occupies the least-significant bits of byte 0).
+pub fn pack(codes: &[i32], bits: u8) -> Result<Vec<u8>> {
+    let per_byte = match bits {
+        2 => 4,
+        4 => 2,
+        8 => 1,
+        _ => bail!("pack: unsupported bit width {bits}"),
+    };
+    let mask = (1u32 << bits) - 1;
+    let mut out = vec![0u8; (codes.len() + per_byte - 1) / per_byte];
+    for (i, &c) in codes.iter().enumerate() {
+        if c < 0 || (c as u32) > mask {
+            bail!("pack: code {c} out of range for {bits} bits");
+        }
+        let byte = i / per_byte;
+        let shift = (i % per_byte) as u32 * bits as u32;
+        out[byte] |= ((c as u32 & mask) << shift) as u8;
+    }
+    Ok(out)
+}
+
+/// Unpack `n` codes from packed bytes.
+pub fn unpack(packed: &[u8], bits: u8, n: usize) -> Result<Vec<i32>> {
+    let per_byte = match bits {
+        2 => 4,
+        4 => 2,
+        8 => 1,
+        _ => bail!("unpack: unsupported bit width {bits}"),
+    };
+    if packed.len() * per_byte < n {
+        bail!("unpack: need {n} codes, payload holds {}", packed.len() * per_byte);
+    }
+    let mask = (1u32 << bits) - 1;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let byte = packed[i / per_byte] as u32;
+        let shift = (i % per_byte) as u32 * bits as u32;
+        out.push(((byte >> shift) & mask) as i32);
+    }
+    Ok(out)
+}
+
+/// Offset signed symmetric codes into the unsigned packing range.
+pub fn to_unsigned(codes: &[i32], bits: u8) -> Vec<i32> {
+    let offset = 1i32 << (bits - 1);
+    codes.iter().map(|c| c + offset).collect()
+}
+
+/// Inverse of [`to_unsigned`].
+pub fn to_signed(codes: &[i32], bits: u8) -> Vec<i32> {
+    let offset = 1i32 << (bits - 1);
+    codes.iter().map(|c| c - offset).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = Rng::new(60);
+        for bits in [2u8, 4, 8] {
+            let hi = 1i32 << bits;
+            let codes: Vec<i32> = (0..1000).map(|_| rng.below(hi as u64) as i32).collect();
+            let packed = pack(&codes, bits).unwrap();
+            assert_eq!(packed.len(), (1000 * bits as usize + 7) / 8);
+            let un = unpack(&packed, bits, 1000).unwrap();
+            assert_eq!(codes, un);
+        }
+    }
+
+    #[test]
+    fn signed_offset_roundtrip() {
+        let codes = vec![-8, -1, 0, 7];
+        let u = to_unsigned(&codes, 4);
+        assert_eq!(u, vec![0, 7, 8, 15]);
+        assert_eq!(to_signed(&u, 4), codes);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(pack(&[4], 2).is_err());
+        assert!(pack(&[-1], 4).is_err());
+        assert!(pack(&[0], 3).is_err());
+    }
+
+    #[test]
+    fn odd_length_pads() {
+        let codes = vec![3, 1, 2];
+        let p = pack(&codes, 4).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(unpack(&p, 4, 3).unwrap(), codes);
+    }
+
+    #[test]
+    fn nibble_layout_is_little_end_first() {
+        // element 0 → low nibble, element 1 → high nibble
+        let p = pack(&[0xA, 0xB], 4).unwrap();
+        assert_eq!(p, vec![0xBA]);
+    }
+}

@@ -1,0 +1,35 @@
+//! Round-to-nearest (RTN) weight quantization — the baseline quantizer used
+//! in Tab. 4/5 and the fallback when no calibration data is available.
+
+use crate::tensor::Matrix;
+
+use super::scheme::QuantScheme;
+use super::uniform::fake_quant_matrix;
+
+/// Fake-quantize a weight matrix under `scheme` with plain RTN.
+pub fn rtn_quantize(w: &Matrix, scheme: &QuantScheme) -> Matrix {
+    fake_quant_matrix(w, scheme.wbits, scheme.wgroup, scheme.wsym)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn fp16_scheme_is_identity() {
+        let mut rng = Rng::new(30);
+        let w = Matrix::randn(4, 64, 1.0, &mut rng);
+        assert_eq!(rtn_quantize(&w, &QuantScheme::FP16), w);
+    }
+
+    #[test]
+    fn w8_close_w2_far() {
+        let mut rng = Rng::new(31);
+        let w = Matrix::randn(16, 128, 1.0, &mut rng);
+        let e8 = w.l2_distance(&rtn_quantize(&w, &QuantScheme::W8A8));
+        let e2 = w.l2_distance(&rtn_quantize(&w, &QuantScheme::W2A16G128));
+        assert!(e8 < 0.05 * w.frob_norm());
+        assert!(e2 > 4.0 * e8);
+    }
+}

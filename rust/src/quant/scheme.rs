@@ -1,0 +1,212 @@
+//! Quantization scheme descriptors and the hardware-supported registry.
+//!
+//! A scheme is the paper's `wXaY_gZ_{sym,asym}` notation: weight bits,
+//! activation bits, group sizes (−1 = per-channel/per-token) and symmetry.
+//! The registry lists the schemes a target GPU can execute efficiently
+//! (§4.2.1: "Let S denote the set of hardware-supported quantization
+//! schemes"), together with storage-overhead accounting used for the
+//! memory-budget constraint and the "average bits" reported in Tab. 1.
+
+use std::fmt;
+
+/// Group size along the quantized axis. −1 ⇒ one group per channel/token.
+pub type GroupSize = i32;
+
+/// One quantization scheme (weights + activations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct QuantScheme {
+    /// Weight bits (16 = keep fp16).
+    pub wbits: u8,
+    /// Activation bits (16 = keep fp16).
+    pub abits: u8,
+    /// Weight group size along k (−1 = per output channel row).
+    pub wgroup: GroupSize,
+    /// Activation group size along k (−1 = per token row).
+    pub agroup: GroupSize,
+    /// Symmetric weight quantization (no zero point).
+    pub wsym: bool,
+    /// Symmetric activation quantization.
+    pub asym_act: bool,
+}
+
+impl QuantScheme {
+    pub const fn new(wbits: u8, abits: u8, wgroup: GroupSize, agroup: GroupSize, wsym: bool) -> QuantScheme {
+        QuantScheme { wbits, abits, wgroup, agroup, wsym, asym_act: false }
+    }
+
+    /// Full precision pass-through.
+    pub const FP16: QuantScheme = QuantScheme::new(16, 16, -1, -1, true);
+    /// Weight-only 4-bit, per-channel asymmetric (Marlin-style W4A16).
+    pub const W4A16: QuantScheme = QuantScheme { wbits: 4, abits: 16, wgroup: -1, agroup: -1, wsym: false, asym_act: false };
+    /// Weight-only 4-bit, group-128 asymmetric (GPTQ default, 4.25 avg bits).
+    pub const W4A16G128: QuantScheme = QuantScheme { wbits: 4, abits: 16, wgroup: 128, agroup: -1, wsym: false, asym_act: false };
+    /// Weight-only 3-bit, group-128 asymmetric (3.25 avg bits).
+    pub const W3A16G128: QuantScheme = QuantScheme { wbits: 3, abits: 16, wgroup: 128, agroup: -1, wsym: false, asym_act: false };
+    /// Weight-only 2-bit, group-128 asymmetric (2.25 avg bits).
+    pub const W2A16G128: QuantScheme = QuantScheme { wbits: 2, abits: 16, wgroup: 128, agroup: -1, wsym: false, asym_act: false };
+    /// Weight-only 2-bit per-channel.
+    pub const W2A16: QuantScheme = QuantScheme { wbits: 2, abits: 16, wgroup: -1, agroup: -1, wsym: false, asym_act: false };
+    /// 8-bit weight-activation, per-channel/token symmetric (SmoothQuant-style).
+    pub const W8A8: QuantScheme = QuantScheme::new(8, 8, -1, -1, true);
+    /// 4-bit weight-activation, per-channel/token symmetric (QuaRot-style).
+    pub const W4A4: QuantScheme = QuantScheme::new(4, 4, -1, -1, true);
+    /// 4-bit weight-activation with group-128 scales (Atom-style).
+    pub const W4A4G128: QuantScheme = QuantScheme::new(4, 4, 128, 128, true);
+    /// Intermediate WA points used by Tab. 4/5 sweeps.
+    pub const W5A5: QuantScheme = QuantScheme::new(5, 5, -1, -1, true);
+    pub const W6A6: QuantScheme = QuantScheme::new(6, 6, -1, -1, true);
+    pub const W7A7: QuantScheme = QuantScheme::new(7, 7, -1, -1, true);
+    pub const W8A16: QuantScheme = QuantScheme { wbits: 8, abits: 16, wgroup: -1, agroup: -1, wsym: false, asym_act: false };
+
+    /// Canonical name, e.g. `w4a4_g128_sym`.
+    pub fn name(&self) -> String {
+        format!(
+            "w{}a{}_g{}_{}",
+            self.wbits,
+            self.abits,
+            self.wgroup,
+            if self.wsym { "sym" } else { "asym" }
+        )
+    }
+
+    /// Is this a weight-only scheme (activations stay fp16)?
+    pub fn weight_only(&self) -> bool {
+        self.abits == 16
+    }
+
+    pub fn is_fp16(&self) -> bool {
+        self.wbits == 16
+    }
+
+    /// Average stored bits per weight element including scale/zero-point
+    /// overhead (fp16 scale + fp16 zero per group), the paper's "#Bits"
+    /// accounting: g128 asym ⇒ +0.25 bits; per-channel amortizes over `k`.
+    pub fn avg_weight_bits(&self, k: usize) -> f64 {
+        if self.is_fp16() {
+            return 16.0;
+        }
+        let group = if self.wgroup <= 0 { k } else { (self.wgroup as usize).min(k) } as f64;
+        let meta_bits = if self.wsym { 16.0 } else { 32.0 }; // scale (+ zero)
+        self.wbits as f64 + meta_bits / group
+    }
+
+    /// Bytes to store a quantized `[n, k]` weight (packed payload + scales).
+    pub fn weight_bytes(&self, n: usize, k: usize) -> usize {
+        ((self.avg_weight_bits(k) * (n * k) as f64) / 8.0).ceil() as usize
+    }
+
+    /// Average activation bits (for reporting; activations are quantized
+    /// dynamically and never stored).
+    pub fn avg_act_bits(&self, k: usize) -> f64 {
+        if self.abits == 16 {
+            return 16.0;
+        }
+        let group = if self.agroup <= 0 { k } else { (self.agroup as usize).min(k) } as f64;
+        self.abits as f64 + 16.0 / group
+    }
+}
+
+impl fmt::Display for QuantScheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// The set `S` of schemes the target hardware supports, with helper
+/// sub-registries for the experiment configurations in the paper.
+#[derive(Clone, Debug)]
+pub struct SchemeRegistry {
+    pub schemes: Vec<QuantScheme>,
+}
+
+impl SchemeRegistry {
+    /// RTX-4090-like registry used in the paper's main experiments
+    /// (int2/4/8 tensor-core paths + fp16).
+    pub fn rtx4090() -> SchemeRegistry {
+        SchemeRegistry {
+            schemes: vec![
+                QuantScheme::FP16,
+                QuantScheme::W2A16G128,
+                QuantScheme::W3A16G128,
+                QuantScheme::W4A16,
+                QuantScheme::W4A16G128,
+                QuantScheme::W8A16,
+                QuantScheme::W8A8,
+                QuantScheme::W4A4,
+                QuantScheme::W4A4G128,
+            ],
+        }
+    }
+
+    /// Weight-only candidates for the Tab. 1 GPTQ-comparison rows
+    /// (target average bits 2.25 / 3.25).
+    pub fn weight_only() -> SchemeRegistry {
+        SchemeRegistry {
+            schemes: vec![
+                QuantScheme::W2A16G128,
+                QuantScheme::W3A16G128,
+                QuantScheme::W4A16G128,
+                QuantScheme::W4A16,
+                QuantScheme::W8A16,
+            ],
+        }
+    }
+
+    /// Weight-activation candidates for the 5-bit rows (mix of W4A4 variants
+    /// and W8A8, as in Tab. 7).
+    pub fn weight_activation() -> SchemeRegistry {
+        SchemeRegistry {
+            schemes: vec![QuantScheme::W4A4, QuantScheme::W4A4G128, QuantScheme::W8A8],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.schemes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.schemes.is_empty()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<QuantScheme> {
+        self.schemes.iter().copied().find(|s| s.name() == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gptq_bit_accounting_matches_paper() {
+        // paper: 3-bit g128 asym with 16-bit scale+zero = 3.25 avg bits
+        assert!((QuantScheme::W3A16G128.avg_weight_bits(2048) - 3.25).abs() < 1e-9);
+        assert!((QuantScheme::W2A16G128.avg_weight_bits(2048) - 2.25).abs() < 1e-9);
+        assert!((QuantScheme::W4A16G128.avg_weight_bits(2048) - 4.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_channel_overhead_amortizes() {
+        let b = QuantScheme::W4A4.avg_weight_bits(2048);
+        assert!(b > 4.0 && b < 4.01, "{b}");
+    }
+
+    #[test]
+    fn names_roundtrip_registry() {
+        let reg = SchemeRegistry::rtx4090();
+        for s in &reg.schemes {
+            assert_eq!(reg.by_name(&s.name()), Some(*s));
+        }
+        assert_eq!(reg.by_name("w9a9_g-1_sym"), None);
+    }
+
+    #[test]
+    fn weight_bytes_scale_with_bits() {
+        let n = 128;
+        let k = 256;
+        let b4 = QuantScheme::W4A4.weight_bytes(n, k);
+        let b8 = QuantScheme::W8A8.weight_bytes(n, k);
+        assert!(b8 > b4);
+        assert!(QuantScheme::FP16.weight_bytes(n, k) == n * k * 2);
+    }
+}

@@ -1,0 +1,259 @@
+//! Uniform (affine) quantization primitives: the `Q(·)` of §2.1.
+//!
+//! Symmetric: `q = clamp(round(x/Δ), −2^{b−1}, 2^{b−1}−1)`, `x̂ = q·Δ`.
+//! Asymmetric (min-max): `q = round((x − x_min)/Δ)`, `x̂ = q·Δ + x_min`.
+
+use crate::tensor::Matrix;
+
+use super::scheme::GroupSize;
+
+/// Resolved grouping along a length-`k` axis.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupSpec {
+    pub k: usize,
+    pub group: usize,
+}
+
+impl GroupSpec {
+    /// `group_size` uses the paper's convention: −1 ⇒ a single group of the
+    /// whole channel/token. Groups wider than the axis clamp to per-channel
+    /// (a g128 scheme applied to a k=64 projection degenerates gracefully).
+    pub fn new(k: usize, group_size: GroupSize) -> GroupSpec {
+        let group = if group_size <= 0 {
+            k
+        } else {
+            (group_size as usize).min(k)
+        };
+        assert!(group > 0 && k % group == 0, "k={k} not divisible by group={group}");
+        GroupSpec { k, group }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.k / self.group
+    }
+}
+
+/// Quantization parameters of one group.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    /// `zero` is the dequant offset: `x̂ = q·scale + zero` (0 for symmetric).
+    pub zero: f32,
+    pub qmin: i32,
+    pub qmax: i32,
+}
+
+/// Compute min-max parameters of a group.
+pub fn qparams(xs: &[f32], bits: u8, sym: bool) -> QParams {
+    debug_assert!(bits >= 2 && bits < 16);
+    if sym {
+        let qmax = (1i32 << (bits - 1)) - 1;
+        let qmin = -(1i32 << (bits - 1));
+        let amax = xs.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let scale = if amax > 0.0 { amax / qmax as f32 } else { 1.0 };
+        QParams { scale, zero: 0.0, qmin, qmax }
+    } else {
+        let qmax = (1i32 << bits) - 1;
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &x in xs {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        // quantization range must include 0 so that padding stays exact
+        lo = lo.min(0.0);
+        hi = hi.max(0.0);
+        let scale = if hi > lo { (hi - lo) / qmax as f32 } else { 1.0 };
+        QParams { scale, zero: lo, qmin: 0, qmax }
+    }
+}
+
+/// Quantize one value under `p`.
+#[inline]
+pub fn quantize_one(x: f32, p: &QParams) -> i32 {
+    let q = ((x - p.zero) / p.scale).round() as i32;
+    q.clamp(p.qmin, p.qmax)
+}
+
+/// Dequantize one code under `p`.
+#[inline]
+pub fn dequantize_one(q: i32, p: &QParams) -> f32 {
+    q as f32 * p.scale + p.zero
+}
+
+/// Fake-quantize (quantize → dequantize) a slice in place under `p`.
+pub fn fake_quant_slice(xs: &mut [f32], p: &QParams) {
+    for x in xs.iter_mut() {
+        *x = dequantize_one(quantize_one(*x, p), p);
+    }
+}
+
+/// Fake-quantize a `[n, k]` weight matrix with groups along `k`.
+/// `bits = 16` is a pass-through (fp16 kept as f32 here; fp16 rounding error
+/// is negligible at the model scales we evaluate and is modeled as exact).
+pub fn fake_quant_matrix(w: &Matrix, bits: u8, group_size: GroupSize, sym: bool) -> Matrix {
+    if bits >= 16 {
+        return w.clone();
+    }
+    let spec = GroupSpec::new(w.cols, group_size);
+    let mut out = w.clone();
+    for r in 0..w.rows {
+        let row = out.row_mut(r);
+        for g in 0..spec.num_groups() {
+            let seg = &mut row[g * spec.group..(g + 1) * spec.group];
+            let p = qparams(seg, bits, sym);
+            fake_quant_slice(seg, &p);
+        }
+    }
+    out
+}
+
+/// Dynamic per-token (row) activation fake-quant with groups along `k` —
+/// what the runtime does before a weight-activation GEMM.
+pub fn fake_quant_rows_act(x: &Matrix, bits: u8, group_size: GroupSize) -> Matrix {
+    if bits >= 16 {
+        return x.clone();
+    }
+    fake_quant_matrix(x, bits, group_size, true)
+}
+
+/// Full (non-fake) quantization of a weight matrix: integer codes plus
+/// per-group parameters. Used for packing/artifact export and tests.
+pub struct QuantizedWeight {
+    pub codes: Vec<i32>, // [n, k] row-major
+    pub params: Vec<QParams>, // [n, num_groups] row-major
+    pub group: usize,
+}
+
+pub fn quantize_matrix(w: &Matrix, bits: u8, group_size: GroupSize, sym: bool) -> QuantizedWeight {
+    assert!(bits < 16);
+    let spec = GroupSpec::new(w.cols, group_size);
+    let mut codes = vec![0i32; w.rows * w.cols];
+    let mut params = Vec::with_capacity(w.rows * spec.num_groups());
+    for r in 0..w.rows {
+        let row = w.row(r);
+        for g in 0..spec.num_groups() {
+            let seg = &row[g * spec.group..(g + 1) * spec.group];
+            let p = qparams(seg, bits, sym);
+            for (i, &x) in seg.iter().enumerate() {
+                codes[r * w.cols + g * spec.group + i] = quantize_one(x, &p);
+            }
+            params.push(p);
+        }
+    }
+    QuantizedWeight { codes, params, group: spec.group }
+}
+
+/// Reconstruct the fake-quant matrix from a [`QuantizedWeight`].
+pub fn dequantize_matrix(q: &QuantizedWeight, rows: usize, cols: usize) -> Matrix {
+    let groups_per_row = cols / q.group;
+    let mut out = Matrix::zeros(rows, cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            let p = &q.params[r * groups_per_row + c / q.group];
+            out.data[r * cols + c] = dequantize_one(q.codes[r * cols + c], p);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn sym_qparams_cover_range() {
+        let xs = [-3.0f32, 1.0, 2.5];
+        let p = qparams(&xs, 4, true);
+        assert_eq!(p.zero, 0.0);
+        assert_eq!(p.qmin, -8);
+        assert_eq!(p.qmax, 7);
+        // max-abs element reconstructs within half a step
+        let q = quantize_one(-3.0, &p);
+        assert!((dequantize_one(q, &p) + 3.0).abs() <= p.scale * 0.51);
+    }
+
+    #[test]
+    fn asym_includes_zero() {
+        let xs = [2.0f32, 3.0, 4.0];
+        let p = qparams(&xs, 4, false);
+        // range forced to include 0 ⇒ zero offset is 0 here
+        assert_eq!(p.zero, 0.0);
+        let q0 = quantize_one(0.0, &p);
+        assert_eq!(dequantize_one(q0, &p), 0.0);
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let mut rng = Rng::new(21);
+        for bits in [2u8, 3, 4, 8] {
+            let xs: Vec<f32> = (0..256).map(|_| rng.normal_f32() * 3.0).collect();
+            let p = qparams(&xs, bits, true);
+            for &x in &xs {
+                let xq = dequantize_one(quantize_one(x, &p), &p);
+                assert!(
+                    (x - xq).abs() <= p.scale * 0.5 + 1e-6,
+                    "bits={bits} x={x} xq={xq} scale={}",
+                    p.scale
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(22);
+        let w = Matrix::randn(16, 128, 1.0, &mut rng);
+        let mut last = f64::INFINITY;
+        for bits in [2u8, 3, 4, 8] {
+            let wq = fake_quant_matrix(&w, bits, -1, true);
+            let err = w.l2_distance(&wq);
+            assert!(err < last, "bits={bits}: {err} !< {last}");
+            last = err;
+        }
+    }
+
+    #[test]
+    fn grouping_reduces_error() {
+        let mut rng = Rng::new(23);
+        // heavy-tailed row: one outlier per row makes per-channel scales bad
+        let mut w = Matrix::randn(8, 256, 1.0, &mut rng);
+        for r in 0..8 {
+            w.row_mut(r)[0] *= 50.0;
+        }
+        let per_channel = w.l2_distance(&fake_quant_matrix(&w, 4, -1, true));
+        let grouped = w.l2_distance(&fake_quant_matrix(&w, 4, 128, true));
+        assert!(grouped < per_channel, "{grouped} !< {per_channel}");
+    }
+
+    #[test]
+    fn bits16_identity() {
+        let mut rng = Rng::new(24);
+        let w = Matrix::randn(4, 32, 1.0, &mut rng);
+        assert_eq!(fake_quant_matrix(&w, 16, -1, true), w);
+    }
+
+    #[test]
+    fn quantize_dequantize_matches_fake() {
+        let mut rng = Rng::new(25);
+        let w = Matrix::randn(6, 64, 2.0, &mut rng);
+        for &(bits, group, sym) in &[(4u8, -1i32, true), (3, 32, false), (8, 16, true)] {
+            let q = quantize_matrix(&w, bits, group, sym);
+            let deq = dequantize_matrix(&q, w.rows, w.cols);
+            let fake = fake_quant_matrix(&w, bits, group, sym);
+            for (a, b) in deq.data.iter().zip(&fake.data) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn codes_within_range() {
+        let mut rng = Rng::new(26);
+        let w = Matrix::randn(3, 32, 5.0, &mut rng);
+        let q = quantize_matrix(&w, 2, -1, false);
+        assert!(q.codes.iter().all(|&c| (0..=3).contains(&c)));
+        let qs = quantize_matrix(&w, 2, -1, true);
+        assert!(qs.codes.iter().all(|&c| (-2..=1).contains(&c)));
+    }
+}

@@ -1,0 +1,138 @@
+//! Offline preparation of expert weights into the literal layouts the AOT
+//! executables expect (mirrors `python/compile/model.py::prepare_expert_weights`
+//! — pinned by `tests/runtime_expert_parity.rs`).
+
+use anyhow::Result;
+
+use crate::moe::ExpertWeights;
+use crate::quant::pack::pack;
+use crate::quant::uniform::{qparams, quantize_one};
+use crate::tensor::Matrix;
+
+use super::{lit_f32, lit_i8, lit_u8, RuntimeScheme};
+
+/// One expert's weights, quantized and laid out for one runtime scheme.
+pub struct PreparedExpert {
+    pub scheme: RuntimeScheme,
+    pub literals: Vec<xla::Literal>,
+}
+
+/// Per-channel asymmetric quantization of `[n, k]` → (packed u8, scales, zeros)
+/// matching `ref.quantize_asym_grouped(w, bits, -1)` + `ref.pack_codes`.
+fn asym_pack(w: &Matrix, bits: u8) -> Result<(Vec<u8>, Vec<f32>, Vec<f32>)> {
+    let mut codes = Vec::with_capacity(w.rows * w.cols);
+    let mut scales = Vec::with_capacity(w.rows);
+    let mut zeros = Vec::with_capacity(w.rows);
+    for r in 0..w.rows {
+        let p = qparams(w.row(r), bits, false);
+        for &v in w.row(r) {
+            codes.push(quantize_one(v, &p));
+        }
+        scales.push(p.scale);
+        zeros.push(p.zero);
+    }
+    Ok((pack(&codes, bits)?, scales, zeros))
+}
+
+/// Per-channel symmetric int codes + scales, matching `ref.quantize_sym`.
+fn sym_codes(w: &Matrix, bits: u8) -> (Vec<i8>, Vec<f32>) {
+    let mut codes = Vec::with_capacity(w.rows * w.cols);
+    let mut scales = Vec::with_capacity(w.rows);
+    for r in 0..w.rows {
+        let p = qparams(w.row(r), bits, true);
+        for &v in w.row(r) {
+            codes.push(quantize_one(v, &p) as i8);
+        }
+        scales.push(p.scale);
+    }
+    (codes, scales)
+}
+
+impl PreparedExpert {
+    /// Quantize + lay out one expert for `scheme`. Literal order matches
+    /// `python/compile/model.py::example_args` (everything after `x`).
+    pub fn prepare(e: &ExpertWeights, scheme: RuntimeScheme) -> Result<PreparedExpert> {
+        let mut literals = Vec::new();
+        match scheme {
+            RuntimeScheme::Fp16 => {
+                for w in [&e.gate, &e.up, &e.down] {
+                    literals.push(lit_f32(&[w.rows, w.cols], &w.data)?);
+                }
+            }
+            RuntimeScheme::W4A16 => {
+                for w in [&e.gate, &e.up, &e.down] {
+                    let (packed, scales, zeros) = asym_pack(w, 4)?;
+                    literals.push(lit_u8(&[w.rows, w.cols / 2], &packed)?);
+                    literals.push(lit_f32(&[w.rows, 1], &scales)?);
+                    literals.push(lit_f32(&[w.rows, 1], &zeros)?);
+                }
+            }
+            RuntimeScheme::W8A8 | RuntimeScheme::W4A4 => {
+                let bits = if scheme == RuntimeScheme::W8A8 { 8 } else { 4 };
+                for w in [&e.gate, &e.up, &e.down] {
+                    let (codes, scales) = sym_codes(w, bits);
+                    literals.push(lit_i8(&[w.rows, w.cols], &codes)?);
+                    literals.push(lit_f32(&[w.rows, 1], &scales)?);
+                }
+            }
+        }
+        Ok(PreparedExpert { scheme, literals })
+    }
+
+    /// Native fake-quant twin of this preparation: what the executable
+    /// computes, for parity checks and fallback execution.
+    pub fn reference_forward(e: &ExpertWeights, scheme: RuntimeScheme, x: &Matrix) -> Matrix {
+        use crate::quant::scheme::QuantScheme;
+        use crate::quant::uniform::{fake_quant_matrix, fake_quant_rows_act};
+        use crate::tensor::matrix::matmul_nt;
+        use crate::tensor::ops::silu;
+        let (wq, aq): (Box<dyn Fn(&Matrix) -> Matrix>, Box<dyn Fn(&Matrix) -> Matrix>) =
+            match scheme {
+                RuntimeScheme::Fp16 => (Box::new(|w| w.clone()), Box::new(|x| x.clone())),
+                RuntimeScheme::W4A16 => (
+                    Box::new(|w| fake_quant_matrix(w, 4, -1, false)),
+                    Box::new(|x| x.clone()),
+                ),
+                RuntimeScheme::W8A8 => (
+                    Box::new(|w| fake_quant_matrix(w, 8, -1, true)),
+                    Box::new(|x| fake_quant_rows_act(x, 8, -1)),
+                ),
+                RuntimeScheme::W4A4 => (
+                    Box::new(|w| fake_quant_matrix(w, 4, -1, true)),
+                    Box::new(|x| fake_quant_rows_act(x, 4, -1)),
+                ),
+            };
+        let _ = QuantScheme::FP16;
+        let g = matmul_nt(&aq(x), &wq(&e.gate));
+        let u = matmul_nt(&aq(x), &wq(&e.up));
+        let mut h = Matrix::zeros(g.rows, g.cols);
+        for i in 0..g.data.len() {
+            h.data[i] = silu(g.data[i]) * u.data[i];
+        }
+        matmul_nt(&aq(&h), &wq(&e.down))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn asym_pack_shapes() {
+        let mut rng = Rng::new(170);
+        let w = Matrix::randn(8, 32, 1.0, &mut rng);
+        let (packed, scales, zeros) = asym_pack(&w, 4).unwrap();
+        assert_eq!(packed.len(), 8 * 16);
+        assert_eq!(scales.len(), 8);
+        assert_eq!(zeros.len(), 8);
+    }
+
+    #[test]
+    fn sym_codes_in_range() {
+        let mut rng = Rng::new(171);
+        let w = Matrix::randn(4, 16, 2.0, &mut rng);
+        let (codes, _) = sym_codes(&w, 4);
+        assert!(codes.iter().all(|&c| (-8..=7).contains(&c)));
+    }
+}

@@ -1,0 +1,219 @@
+//! PJRT runtime: loads AOT-compiled HLO text artifacts and executes them on
+//! the request path. Python never runs here — `make artifacts` produced the
+//! HLO once at build time (see `python/compile/aot.py`).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`.
+
+pub mod expert_weights;
+
+pub use expert_weights::PreparedExpert;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Matrix;
+
+/// Runtime scheme families shipped as executables (perf-path set; exotic
+/// accuracy-side schemes are evaluated natively, never served).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RuntimeScheme {
+    Fp16,
+    W4A16,
+    W8A8,
+    W4A4,
+}
+
+impl RuntimeScheme {
+    pub fn name(self) -> &'static str {
+        match self {
+            RuntimeScheme::Fp16 => "fp16",
+            RuntimeScheme::W4A16 => "w4a16",
+            RuntimeScheme::W8A8 => "w8a8",
+            RuntimeScheme::W4A4 => "w4a4",
+        }
+    }
+
+    pub const ALL: [RuntimeScheme; 4] =
+        [RuntimeScheme::Fp16, RuntimeScheme::W4A16, RuntimeScheme::W8A8, RuntimeScheme::W4A4];
+
+    /// Map an allocator scheme to its runtime executable family.
+    pub fn from_quant(s: &crate::quant::QuantScheme) -> RuntimeScheme {
+        if s.is_fp16() {
+            RuntimeScheme::Fp16
+        } else if s.weight_only() {
+            RuntimeScheme::W4A16
+        } else if s.wbits <= 4 && s.abits <= 4 {
+            RuntimeScheme::W4A4
+        } else {
+            RuntimeScheme::W8A8
+        }
+    }
+}
+
+/// Tile sizes the AOT export ships (`python/compile/aot.py::TILE_MS`).
+pub const TILE_MS: [usize; 4] = [4, 16, 64, 256];
+
+/// Smallest exported tile that fits `m` tokens (largest tile for overflow).
+pub fn pick_tile(m: usize) -> usize {
+    for t in TILE_MS {
+        if m <= t {
+            return t;
+        }
+    }
+    *TILE_MS.last().unwrap()
+}
+
+/// PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client over an artifacts directory.
+    pub fn cpu(artifacts_dir: &Path) -> Result<Runtime> {
+        if !artifacts_dir.exists() {
+            bail!("artifacts dir {artifacts_dir:?} missing — run `make artifacts`");
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu: {e}"))?;
+        Ok(Runtime { client, dir: artifacts_dir.to_path_buf(), cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (cached) an executable by artifact stem, e.g.
+    /// `expert_ffn_w4a16_m64`.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile every (scheme, tile) expert executable (hot-path warmup).
+    pub fn warmup_expert_ffn(&self) -> Result<usize> {
+        let mut n = 0;
+        for s in RuntimeScheme::ALL {
+            for m in TILE_MS {
+                self.executable(&format!("expert_ffn_{}_m{}", s.name(), m))?;
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Execute an expert-FFN executable: `x` tile + prepared weight
+    /// literals; returns the `[m, hidden]` output.
+    pub fn run_expert_ffn(
+        &self,
+        scheme: RuntimeScheme,
+        tile_m: usize,
+        x: &Matrix,
+        weights: &[xla::Literal],
+    ) -> Result<Matrix> {
+        assert_eq!(x.rows, tile_m);
+        let exe = self.executable(&format!("expert_ffn_{}_m{}", scheme.name(), tile_m))?;
+        let x_lit = lit_f32(&[x.rows, x.cols], &x.data)?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + weights.len());
+        args.push(&x_lit);
+        args.extend(weights.iter());
+        let result = exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e}"))?;
+        let vals = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+        let cols = vals.len() / x.rows;
+        Ok(Matrix::from_vec(x.rows, cols, vals))
+    }
+}
+
+// ---------------- literal helpers ----------------
+
+/// f32 literal of the given shape.
+pub fn lit_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, &bytes)
+        .map_err(|e| anyhow::anyhow!("lit_f32: {e}"))
+}
+
+/// int8 literal.
+pub fn lit_i8(dims: &[usize], data: &[i8]) -> Result<xla::Literal> {
+    assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes: Vec<u8> = data.iter().map(|&v| v as u8).collect();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, dims, &bytes)
+        .map_err(|e| anyhow::anyhow!("lit_i8: {e}"))
+}
+
+/// uint8 literal (packed low-bit weights).
+pub fn lit_u8(dims: &[usize], data: &[u8]) -> Result<xla::Literal> {
+    assert_eq!(dims.iter().product::<usize>(), data.len());
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, dims, data)
+        .map_err(|e| anyhow::anyhow!("lit_u8: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn pick_tile_rounds_up() {
+        assert_eq!(pick_tile(1), 4);
+        assert_eq!(pick_tile(16), 16);
+        assert_eq!(pick_tile(5), 16);
+        assert_eq!(pick_tile(17), 64);
+        assert_eq!(pick_tile(300), 256);
+    }
+
+    #[test]
+    fn scheme_mapping() {
+        use crate::quant::QuantScheme;
+        assert_eq!(RuntimeScheme::from_quant(&QuantScheme::FP16), RuntimeScheme::Fp16);
+        assert_eq!(RuntimeScheme::from_quant(&QuantScheme::W2A16G128), RuntimeScheme::W4A16);
+        assert_eq!(RuntimeScheme::from_quant(&QuantScheme::W8A8), RuntimeScheme::W8A8);
+        assert_eq!(RuntimeScheme::from_quant(&QuantScheme::W4A4G128), RuntimeScheme::W4A4);
+        assert_eq!(RuntimeScheme::from_quant(&QuantScheme::W5A5), RuntimeScheme::W8A8);
+    }
+
+    #[test]
+    fn smoke_artifact_executes() {
+        let dir = artifacts();
+        if !dir.join("smoke_matmul.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu(&dir).unwrap();
+        let exe = rt.executable("smoke_matmul").unwrap();
+        let x = lit_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let y = lit_f32(&[2, 2], &[1.0, 1.0, 1.0, 1.0]).unwrap();
+        let out = exe.execute::<&xla::Literal>(&[&x, &y]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap();
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![5.0, 5.0, 9.0, 9.0]);
+    }
+}

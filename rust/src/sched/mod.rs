@@ -1,0 +1,168 @@
+//! Tile scheduling — the makespan-minimization component of §4.3.
+//!
+//! Tiles with heterogeneous costs (different precisions, different tile
+//! shapes) must be mapped onto `P` SMs. The paper uses Graham's greedy LPT
+//! (longest processing time first) heuristic, near-optimal because the tile
+//! count far exceeds the SM count; we also provide FIFO (the naive order)
+//! and an exact branch-and-bound for small instances to quantify LPT's gap
+//! in tests.
+
+/// Greedy list scheduling in the given order: each task goes to the
+/// earliest-available machine. Returns the makespan.
+pub fn list_makespan(costs: &[f64], machines: usize) -> f64 {
+    assert!(machines > 0);
+    // binary-heap of (finish_time, machine) — use a simple Vec-based heap
+    // keyed on f64 via ordered wrapper
+    let mut finish = vec![0.0f64; machines];
+    for &c in costs {
+        // pick min-finish machine (machines ≤ a few hundred: linear scan is
+        // faster than heap churn for our sizes and trivially correct)
+        let (idx, _) = finish
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        finish[idx] += c;
+    }
+    finish.iter().cloned().fold(0.0, f64::max)
+}
+
+/// FIFO: list scheduling in submission order.
+pub fn fifo_makespan(costs: &[f64], machines: usize) -> f64 {
+    list_makespan(costs, machines)
+}
+
+/// LPT: sort descending, then list-schedule. Graham bound: ≤ 4/3 − 1/(3P)
+/// of optimal.
+pub fn lpt_makespan(costs: &[f64], machines: usize) -> f64 {
+    let mut sorted = costs.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    list_makespan(&sorted, machines)
+}
+
+/// LPT that also returns the per-machine assignment (simulator uses this to
+/// attribute tiles to SMs).
+pub fn lpt_assign(costs: &[f64], machines: usize) -> (f64, Vec<usize>) {
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by(|&a, &b| costs[b].partial_cmp(&costs[a]).unwrap());
+    let mut finish = vec![0.0f64; machines];
+    let mut assign = vec![0usize; costs.len()];
+    for &i in &order {
+        let (idx, _) = finish
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        finish[idx] += costs[i];
+        assign[i] = idx;
+    }
+    (finish.iter().cloned().fold(0.0, f64::max), assign)
+}
+
+/// Exact minimum makespan by branch-and-bound (small instances only — used
+/// to verify LPT's near-optimality, and mirroring the paper's remark that
+/// dynamic programming is optimal but too expensive).
+pub fn optimal_makespan_small(costs: &[f64], machines: usize) -> f64 {
+    assert!(costs.len() <= 16, "exact solver is exponential; use LPT");
+    let mut sorted = costs.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let lower = {
+        let sum: f64 = sorted.iter().sum();
+        (sum / machines as f64).max(sorted.first().copied().unwrap_or(0.0))
+    };
+    let mut best = lpt_makespan(costs, machines);
+    let mut loads = vec![0.0f64; machines];
+    fn bb(sorted: &[f64], i: usize, loads: &mut [f64], best: &mut f64, lower: f64) {
+        if *best <= lower {
+            return; // provably optimal already
+        }
+        if i == sorted.len() {
+            let mk = loads.iter().cloned().fold(0.0, f64::max);
+            if mk < *best {
+                *best = mk;
+            }
+            return;
+        }
+        let mut tried = Vec::new();
+        for m in 0..loads.len() {
+            // symmetry breaking: skip machines with identical load
+            if tried.iter().any(|&l: &f64| (l - loads[m]).abs() < 1e-12) {
+                continue;
+            }
+            tried.push(loads[m]);
+            if loads[m] + sorted[i] >= *best {
+                continue;
+            }
+            loads[m] += sorted[i];
+            bb(sorted, i + 1, loads, best, lower);
+            loads[m] -= sorted[i];
+        }
+    }
+    bb(&sorted, 0, &mut loads, &mut best, lower);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn single_machine_is_sum() {
+        let costs = [3.0, 1.0, 2.0];
+        assert!((lpt_makespan(&costs, 1) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lpt_beats_bad_fifo_order() {
+        // classic adversarial order: many small then one huge
+        let mut costs = vec![1.0; 16];
+        costs.push(8.0);
+        let fifo = fifo_makespan(&costs, 4);
+        let lpt = lpt_makespan(&costs, 4);
+        assert!(lpt <= fifo);
+        assert!((lpt - 8.0).abs() < 1e-9, "lpt {lpt}"); // 8 dominates; rest fit in parallel
+    }
+
+    #[test]
+    fn lpt_within_graham_bound_of_optimal() {
+        let mut rng = Rng::new(130);
+        for _ in 0..20 {
+            let n = 3 + rng.below(10) as usize;
+            let machines = 2 + rng.below(3) as usize;
+            let costs: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 5.0)).collect();
+            let opt = optimal_makespan_small(&costs, machines);
+            let lpt = lpt_makespan(&costs, machines);
+            let bound = 4.0 / 3.0 - 1.0 / (3.0 * machines as f64);
+            assert!(lpt <= opt * bound + 1e-9, "lpt {lpt} opt {opt} bound {bound}");
+            assert!(lpt >= opt - 1e-9);
+        }
+    }
+
+    #[test]
+    fn makespan_lower_bounds_hold() {
+        let mut rng = Rng::new(131);
+        let costs: Vec<f64> = (0..200).map(|_| rng.range_f64(0.1, 2.0)).collect();
+        let machines = 16;
+        let mk = lpt_makespan(&costs, machines);
+        let sum: f64 = costs.iter().sum();
+        let maxc = costs.iter().cloned().fold(0.0, f64::max);
+        assert!(mk >= sum / machines as f64 - 1e-9);
+        assert!(mk >= maxc - 1e-9);
+        // many small tiles ⇒ near-perfect balance (paper's justification for
+        // the T ≈ Σc/P approximation)
+        assert!(mk <= sum / machines as f64 * 1.1);
+    }
+
+    #[test]
+    fn assignment_is_consistent() {
+        let costs = [5.0, 3.0, 3.0, 2.0, 2.0];
+        let (mk, assign) = lpt_assign(&costs, 2);
+        let mut loads = [0.0f64; 2];
+        for (i, &m) in assign.iter().enumerate() {
+            loads[m] += costs[i];
+        }
+        assert!((loads.iter().cloned().fold(0.0, f64::max) - mk).abs() < 1e-12);
+        assert!((mk - 8.0).abs() < 1e-9, "optimal split 8/7, got {mk}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Serialization substrates (offline environment: no serde).
+//!
+//! * [`json`] — a small, strict JSON value model + parser + writer used for
+//!   configs, allocation plans, and experiment records.
+//! * [`mxt`] — the MXT binary tensor container: the interchange format
+//!   between the build-time Python side (`python/compile/io_mxt.py`) and the
+//!   rust runtime (trained weights, calibration corpora).
+
+pub mod json;
+pub mod mxt;
+
+pub use json::Json;
+pub use mxt::{MxtFile, MxtTensor};

@@ -1,0 +1,275 @@
+//! MXT — the minimal tensor container shared between the build-time Python
+//! side and the rust runtime.
+//!
+//! Layout (all little-endian):
+//! ```text
+//! magic   b"MXT1"
+//! u32     tensor count
+//! per tensor:
+//!   u32       name length, then UTF-8 name bytes
+//!   u8        dtype  (0 = f32, 1 = i8, 2 = i32, 3 = u8)
+//!   u32       ndim, then u64 × ndim shape
+//!   u64       payload length in bytes, then payload
+//! ```
+//! Python writer: `python/compile/io_mxt.py` (kept byte-compatible by the
+//! integration test `tests/mxt_roundtrip.rs` + `python/tests/test_io_mxt.py`).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"MXT1";
+
+/// Element type of an [`MxtTensor`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I8,
+    I32,
+    U8,
+}
+
+impl Dtype {
+    fn code(self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::I8 => 1,
+            Dtype::I32 => 2,
+            Dtype::U8 => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Dtype> {
+        Ok(match c {
+            0 => Dtype::F32,
+            1 => Dtype::I8,
+            2 => Dtype::I32,
+            3 => Dtype::U8,
+            _ => bail!("unknown MXT dtype code {c}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::I8 | Dtype::U8 => 1,
+        }
+    }
+}
+
+/// One named tensor: shape + raw little-endian payload.
+#[derive(Clone, Debug)]
+pub struct MxtTensor {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl MxtTensor {
+    pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> MxtTensor {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        MxtTensor { dtype: Dtype::F32, shape, data }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> MxtTensor {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        MxtTensor { dtype: Dtype::I32, shape, data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("tensor is {:?}, expected F32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != Dtype::I32 {
+            bail!("tensor is {:?}, expected I32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// A parsed MXT file: an ordered map of named tensors.
+#[derive(Clone, Debug, Default)]
+pub struct MxtFile {
+    pub tensors: BTreeMap<String, MxtTensor>,
+}
+
+impl MxtFile {
+    pub fn new() -> MxtFile {
+        MxtFile::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: MxtTensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&MxtTensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("MXT tensor '{name}' not found"))
+    }
+
+    /// Convenience: fetch a named tensor as f32 values + shape.
+    pub fn f32(&self, name: &str) -> Result<(Vec<usize>, Vec<f32>)> {
+        let t = self.get(name)?;
+        Ok((t.shape.clone(), t.to_f32()?))
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            let expected = t.numel() * t.dtype.size();
+            if t.data.len() != expected {
+                bail!("tensor '{name}': payload {} != shape implies {expected}", t.data.len());
+            }
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&[t.dtype.code()])?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            w.write_all(&(t.data.len() as u64).to_le_bytes())?;
+            w.write_all(&t.data)?;
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+        );
+        self.write_to(&mut f)?;
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<MxtFile> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic).context("read MXT magic")?;
+        if &magic != MAGIC {
+            bail!("bad MXT magic {magic:?}");
+        }
+        let count = read_u32(r)? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = read_u32(r)? as usize;
+            if name_len > 1 << 16 {
+                bail!("unreasonable MXT name length {name_len}");
+            }
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("MXT name utf-8")?;
+            let mut code = [0u8; 1];
+            r.read_exact(&mut code)?;
+            let dtype = Dtype::from_code(code[0])?;
+            let ndim = read_u32(r)? as usize;
+            if ndim > 8 {
+                bail!("unreasonable MXT rank {ndim}");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(r)? as usize);
+            }
+            let len = read_u64(r)? as usize;
+            let expected = shape.iter().product::<usize>() * dtype.size();
+            if len != expected {
+                bail!("tensor '{name}': payload {len} != shape implies {expected}");
+            }
+            let mut data = vec![0u8; len];
+            r.read_exact(&mut data)?;
+            tensors.insert(name, MxtTensor { dtype, shape, data });
+        }
+        Ok(MxtFile { tensors })
+    }
+
+    pub fn load(path: &Path) -> Result<MxtFile> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        MxtFile::read_from(&mut f)
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let mut f = MxtFile::new();
+        f.insert("w", MxtTensor::from_f32(vec![2, 3], &[1.0, -2.0, 3.5, 0.0, 1e-7, 9.0]));
+        f.insert("ids", MxtTensor::from_i32(vec![4], &[1, -1, 7, 0]));
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        let g = MxtFile::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(g.tensors.len(), 2);
+        let (shape, vals) = g.f32("w").unwrap();
+        assert_eq!(shape, vec![2, 3]);
+        assert_eq!(vals, vec![1.0, -2.0, 3.5, 0.0, 1e-7, 9.0]);
+        assert_eq!(g.get("ids").unwrap().to_i32().unwrap(), vec![1, -1, 7, 0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = b"NOPE\x00\x00\x00\x00".to_vec();
+        assert!(MxtFile::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_payload_mismatch() {
+        let mut f = MxtFile::new();
+        f.insert(
+            "w",
+            MxtTensor { dtype: Dtype::F32, shape: vec![3], data: vec![0u8; 4] },
+        );
+        let mut buf = Vec::new();
+        assert!(f.write_to(&mut buf).is_err());
+    }
+
+    #[test]
+    fn empty_file_roundtrips() {
+        let f = MxtFile::new();
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        let g = MxtFile::read_from(&mut buf.as_slice()).unwrap();
+        assert!(g.tensors.is_empty());
+    }
+}

@@ -1,0 +1,290 @@
+//! Row-major dense f32 matrix with a blocked, multithreaded matmul.
+
+use crate::util::threadpool::parallel_for;
+use crate::util::Rng;
+
+/// Row-major `rows × cols` f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(rows * cols, data.len(), "shape/payload mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// N(0, std²) initialization.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Matrix {
+        let data = (0..rows * cols).map(|_| rng.normal_f32() * std).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Select a subset of rows (token gathering for expert dispatch).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// `self += other * scale` (weighted expert-output accumulation).
+    pub fn add_scaled(&mut self, other: &Matrix, scale: f32) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b * scale;
+        }
+    }
+
+    /// Scatter-add rows of `src` into `self` at `idx`, scaled per row.
+    pub fn scatter_add_rows(&mut self, idx: &[usize], src: &Matrix, scales: &[f32]) {
+        assert_eq!(idx.len(), src.rows);
+        assert_eq!(idx.len(), scales.len());
+        assert_eq!(self.cols, src.cols);
+        for (i, (&r, &s)) in idx.iter().zip(scales).enumerate() {
+            let dst = self.row_mut(r);
+            for (d, v) in dst.iter_mut().zip(src.row(i)) {
+                *d += v * s;
+            }
+        }
+    }
+
+    /// Frobenius norm of `self - other` — the paper's Δ metric (Eq. 6).
+    pub fn l2_distance(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+}
+
+/// `C = A · Bᵀ` where `b_t` is stored as `[n, k]` (i.e. already transposed —
+/// the natural layout for `y = x · Wᵀ` linear layers with row-major weights).
+///
+/// Cache strategy: parallel over row blocks of A; inner loops walk
+/// contiguous k-panels of both operands; the 8-lane accumulator `dot` is
+/// the fastest variant on this target (§Perf tried 4×2 register blocking —
+/// both variants regressed; see EXPERIMENTS.md §Perf iteration log).
+pub fn matmul_nt(a: &Matrix, b_t: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b_t.cols, "inner dims: a [m,{}] vs b_t [n,{}]", a.cols, b_t.cols);
+    let (m, k, n) = (a.rows, a.cols, b_t.rows);
+    let mut out = Matrix::zeros(m, n);
+    // SAFETY-free parallelism: each task owns a disjoint row range of `out`.
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    const MB: usize = 16; // rows of A per task
+    let tasks = (m + MB - 1) / MB;
+    parallel_for(tasks, |t| {
+        let r0 = t * MB;
+        let r1 = (r0 + MB).min(m);
+        let out_ptr = &out_ptr;
+        for r in r0..r1 {
+            let arow = a.row(r);
+            let orow = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.0.add(r * n), n)
+            };
+            for c in 0..n {
+                let brow = b_t.row(c);
+                orow[c] = dot(arow, brow);
+            }
+        }
+    });
+    let _ = k;
+    out
+}
+
+/// `C = A · B` with `b` stored `[k, n]`. Implemented as accumulation over
+/// k-panels (ikj order) so B rows stream contiguously.
+pub fn matmul_nn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "inner dims");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Matrix::zeros(m, n);
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    const MB: usize = 16;
+    let tasks = (m + MB - 1) / MB;
+    parallel_for(tasks, |t| {
+        let r0 = t * MB;
+        let r1 = (r0 + MB).min(m);
+        let out_ptr = &out_ptr;
+        for r in r0..r1 {
+            let orow = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.0.add(r * n), n)
+            };
+            let arow = a.row(r);
+            for kk in 0..k {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = b.row(kk);
+                for c in 0..n {
+                    orow[c] += av * brow[c];
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Unrolled dot product; the compiler vectorizes the 8-wide accumulators.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let mut acc = [0.0f32; 8];
+    for i in 0..chunks {
+        let ai = &a[i * 8..i * 8 + 8];
+        let bi = &b[i * 8..i * 8 + 8];
+        for j in 0..8 {
+            acc[j] += ai[j] * bi[j];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Raw pointer wrapper so disjoint row ranges can be written from worker
+/// threads. Each `parallel_for` task touches rows `[r0, r1)` exclusively.
+struct SendPtr(*mut f32);
+unsafe impl Sync for SendPtr {}
+unsafe impl Send for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_nt(a: &Matrix, bt: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows, bt.rows);
+        for r in 0..a.rows {
+            for c in 0..bt.rows {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(r, k) * bt.at(c, k);
+                }
+                *out.at_mut(r, c) = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_nt_matches_naive() {
+        let mut rng = Rng::new(3);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 128, 40)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let bt = Matrix::randn(n, k, 1.0, &mut rng);
+            let c = matmul_nt(&a, &bt);
+            let c0 = naive_nt(&a, &bt);
+            for (x, y) in c.data.iter().zip(&c0.data) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nn_matches_nt_of_transpose() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(13, 21, 1.0, &mut rng);
+        let b = Matrix::randn(21, 17, 1.0, &mut rng);
+        let via_nn = matmul_nn(&a, &b);
+        let via_nt = matmul_nt(&a, &b.transpose());
+        for (x, y) in via_nn.data.iter().zip(&via_nt.data) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::randn(37, 53, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut rng = Rng::new(6);
+        let x = Matrix::randn(10, 4, 1.0, &mut rng);
+        let idx = vec![2usize, 7, 5];
+        let g = x.gather_rows(&idx);
+        assert_eq!(g.rows, 3);
+        assert_eq!(g.row(1), x.row(7));
+        let mut acc = Matrix::zeros(10, 4);
+        acc.scatter_add_rows(&idx, &g, &[1.0, 2.0, 1.0]);
+        for c in 0..4 {
+            assert!((acc.at(7, c) - 2.0 * x.at(7, c)).abs() < 1e-6);
+            assert_eq!(acc.at(0, c), 0.0);
+        }
+    }
+
+    #[test]
+    fn l2_distance_zero_iff_equal() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::randn(5, 5, 1.0, &mut rng);
+        assert_eq!(a.l2_distance(&a), 0.0);
+        let mut b = a.clone();
+        b.data[0] += 3.0;
+        assert!((a.l2_distance(&b) - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,12 @@
+//! Dense f32 tensor substrate.
+//!
+//! The native (non-PJRT) compute path — calibration forward passes, GPTQ,
+//! perplexity evaluation — runs on this small row-major matrix type. The
+//! matmul is cache-blocked and multithreaded (see [`matmul`]); everything
+//! else is straightforward elementwise code.
+
+pub mod matrix;
+pub mod ops;
+
+pub use matrix::Matrix;
+pub use ops::{rmsnorm, silu, softmax_rows};

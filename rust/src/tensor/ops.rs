@@ -1,0 +1,120 @@
+//! Elementwise / row-wise neural-net ops on [`Matrix`].
+
+use super::Matrix;
+
+/// In-place row-wise softmax (router gating).
+pub fn softmax_rows(x: &mut Matrix) {
+    for r in 0..x.rows {
+        let row = x.row_mut(r);
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut z = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            z += *v;
+        }
+        let inv = 1.0 / z;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// SiLU (swish) activation: `x * sigmoid(x)` — the σ in the paper's Eq. 1.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Row-wise RMSNorm with learned gain.
+pub fn rmsnorm(x: &Matrix, gain: &[f32], eps: f32) -> Matrix {
+    assert_eq!(x.cols, gain.len());
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        let orow = out.row_mut(r);
+        for c in 0..x.cols {
+            orow[c] = row[c] * inv * gain[c];
+        }
+    }
+    out
+}
+
+/// Top-k indices + values of a slice, descending (router top-k).
+pub fn topk(xs: &[f32], k: usize) -> Vec<(usize, f32)> {
+    assert!(k <= xs.len());
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    // partial selection: k is tiny (≤8) so a simple selection pass is fine
+    for i in 0..k {
+        let mut best = i;
+        for j in i + 1..xs.len() {
+            if xs[idx[j]] > xs[idx[best]] {
+                best = j;
+            }
+        }
+        idx.swap(i, best);
+    }
+    idx[..k].iter().map(|&i| (i, xs[i])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(1);
+        let mut x = Matrix::randn(6, 9, 3.0, &mut rng);
+        softmax_rows(&mut x);
+        for r in 0..x.rows {
+            let s: f32 = x.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(x.row(r).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let mut a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let mut b = Matrix::from_vec(1, 3, vec![101.0, 102.0, 103.0]);
+        softmax_rows(&mut a);
+        softmax_rows(&mut b);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn silu_known_values() {
+        assert_eq!(silu(0.0), 0.0);
+        assert!((silu(1.0) - 0.731058).abs() < 1e-4);
+        assert!(silu(-20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let x = Matrix::from_vec(1, 4, vec![2.0, 2.0, 2.0, 2.0]);
+        let out = rmsnorm(&x, &[1.0; 4], 1e-6);
+        for &v in &out.data {
+            assert!((v - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn topk_descending() {
+        let xs = [0.1, 0.9, 0.5, 0.7];
+        let t = topk(&xs, 3);
+        assert_eq!(t[0].0, 1);
+        assert_eq!(t[1].0, 3);
+        assert_eq!(t[2].0, 2);
+    }
+
+    #[test]
+    fn topk_full_is_sort() {
+        let xs = [3.0, 1.0, 2.0];
+        let t = topk(&xs, 3);
+        assert_eq!(t.iter().map(|p| p.0).collect::<Vec<_>>(), vec![0, 2, 1]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Small self-contained utilities: deterministic RNG, timing, summary
+//! statistics, and a scoped thread pool.
+//!
+//! The build environment is offline, so these replace `rand`, `criterion`'s
+//! statistics and `rayon` with dependency-free equivalents. All randomness in
+//! the library flows through [`Rng`] so experiments are reproducible from a
+//! single seed.
+
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use threadpool::ThreadPool;
+pub use timer::Timer;

@@ -1,0 +1,205 @@
+//! A minimal scoped work-stealing-free thread pool.
+//!
+//! Two entry points:
+//! * [`ThreadPool::run`] — submit boxed jobs, wait for all to finish
+//!   (coordinator worker pool, simulator SM workers).
+//! * [`parallel_for`] — data-parallel loop over an index range using scoped
+//!   threads (matmul row blocks, calibration batches). No allocation per
+//!   element; chunks are balanced statically.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Job(Job),
+    Shutdown,
+}
+
+/// Long-lived pool of worker threads fed over an mpsc channel.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        assert!(threads > 0);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                thread::spawn(move || loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    match msg {
+                        Ok(Msg::Job(job)) => {
+                            job();
+                            let (lock, cv) = &*pending;
+                            let mut p = lock.lock().unwrap();
+                            *p -= 1;
+                            if *p == 0 {
+                                cv.notify_all();
+                            }
+                        }
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        ThreadPool { tx, workers, pending }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job; does not block.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx.send(Msg::Job(Box::new(f))).expect("pool closed");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+
+    /// Submit a batch and wait for all of it.
+    pub fn run<F: FnOnce() + Send + 'static>(&self, jobs: Vec<F>) {
+        for j in jobs {
+            self.submit(j);
+        }
+        self.wait();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Default parallelism: physical cores as reported by the OS, capped so the
+/// test environment doesn't oversubscribe.
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Data-parallel `for i in 0..n` with dynamic chunk self-scheduling over
+/// scoped threads. `body(i)` must be safe to run concurrently for distinct
+/// `i`. Used on the matmul/calibration hot paths; falls back to serial for
+/// tiny `n`.
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, body: F) {
+    parallel_for_threads(n, default_threads(), body)
+}
+
+/// As [`parallel_for`] with an explicit thread count (benchmarks sweep this).
+pub fn parallel_for_threads<F: Fn(usize) + Sync>(n: usize, threads: usize, body: F) {
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 || n < 2 {
+        for i in 0..n {
+            body(i);
+        }
+        return;
+    }
+    // chunk ~4 tasks per thread for load balance without contention
+    let chunk = (n + threads * 4 - 1) / (threads * 4);
+    let chunk = chunk.max(1);
+    let counter = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = counter.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    body(i);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let jobs: Vec<_> = (0..100)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_wait_is_reusable() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 1..=3u64 {
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.wait();
+            assert_eq!(counter.load(Ordering::SeqCst), round * 10);
+        }
+    }
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_for_zero_and_one() {
+        parallel_for(0, |_| panic!("must not run"));
+        let hit = AtomicU64::new(0);
+        parallel_for(1, |i| {
+            assert_eq!(i, 0);
+            hit.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,70 @@
+//! Wall-clock timing helpers for the hand-rolled bench harness.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds since start.
+    pub fn ms(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    /// Elapsed microseconds since start.
+    pub fn us(&self) -> f64 {
+        self.secs() * 1e6
+    }
+}
+
+/// Measure `f` `iters` times after `warmup` unmeasured runs; returns the
+/// per-iteration wall-clock summary in **seconds**. Criterion-lite for the
+/// `harness = false` bench binaries.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    Summary::of(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.secs();
+        let b = t.secs();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut runs = 0usize;
+        let s = bench(2, 5, || runs += 1);
+        assert_eq!(runs, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+}

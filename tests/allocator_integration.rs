@@ -1,0 +1,230 @@
+//! Integration: the full allocation pipeline (calibrate → sensitivity →
+//! MCKP) on a small random model, asserting the paper's structural claims:
+//! budget adherence, r-monotonicity, and linear-block > expert granularity.
+
+use mxmoe::alloc::{
+    allocate, calibrate, measure_sensitivity, AllocatorConfig, Granularity,
+};
+use mxmoe::costmodel::GpuSpec;
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::quant::{QuantScheme, SchemeRegistry};
+use mxmoe::util::Rng;
+
+fn setup() -> (ModelConfig, MoeLm, Vec<Vec<u32>>) {
+    let cfg = ModelConfig {
+        name: "alloc-test".into(),
+        vocab: 64,
+        hidden: 64,
+        layers: 2,
+        heads: 2,
+        n_experts: 8,
+        n_shared: 1,
+        topk: 2,
+        inter: 32,
+        dense_first: false,
+        seq_len: 32,
+    };
+    let mut rng = Rng::new(0xA110C);
+    let lm = MoeLm::random(&cfg, &mut rng);
+    let seqs: Vec<Vec<u32>> = (0..6)
+        .map(|_| (0..32).map(|_| rng.below(64) as u32).collect())
+        .collect();
+    (cfg, lm, seqs)
+}
+
+#[test]
+fn full_pipeline_respects_budget_and_tradeoff() {
+    let (cfg, lm, seqs) = setup();
+    let refs: Vec<&[u32]> = seqs.iter().map(|s| s.as_slice()).collect();
+    let stats = calibrate(&lm, &refs, None).unwrap();
+    let registry = SchemeRegistry::weight_activation();
+    let sens = measure_sensitivity(&lm, &stats, &registry).unwrap();
+    let gpu = GpuSpec::rtx4090();
+
+    let mut alloc_cfg = AllocatorConfig {
+        r: 0.75,
+        target_avg_bits: 5.0,
+        granularity: Granularity::LinearBlock,
+        batch_tokens: 256,
+    };
+
+    let a5 = allocate(&lm, &gpu, &registry, &stats, &sens, &alloc_cfg).unwrap();
+    let bits5 = a5.avg_weight_bits(&cfg);
+    assert!(bits5 <= 5.3, "avg bits {bits5} exceeds ~5 target");
+    assert!(bits5 >= 4.0, "degenerate allocation: {bits5}");
+
+    // tighter budget ⇒ fewer bits
+    alloc_cfg.target_avg_bits = 4.5;
+    let a45 = allocate(&lm, &gpu, &registry, &stats, &sens, &alloc_cfg).unwrap();
+    assert!(a45.avg_weight_bits(&cfg) <= bits5 + 1e-9);
+
+    // mixed output: at 5 bits with {w4a4, w4a4g128, w8a8} candidates we
+    // expect both 4-bit and 8-bit schemes present (Tab. 7's shape)
+    let mut has4 = false;
+    let mut has8 = false;
+    for block in &a5.schemes {
+        for ex in block {
+            for s in ex {
+                if s.wbits == 4 {
+                    has4 = true;
+                }
+                if s.wbits == 8 {
+                    has8 = true;
+                }
+            }
+        }
+    }
+    assert!(has4 && has8, "allocation is not mixed: has4={has4} has8={has8}");
+}
+
+#[test]
+fn r_controls_accuracy_vs_time() {
+    let (_cfg, lm, seqs) = setup();
+    let refs: Vec<&[u32]> = seqs.iter().map(|s| s.as_slice()).collect();
+    let stats = calibrate(&lm, &refs, None).unwrap();
+    let registry = SchemeRegistry::weight_activation();
+    let sens = measure_sensitivity(&lm, &stats, &registry).unwrap();
+    let gpu = GpuSpec::rtx4090();
+
+    // evaluate L and T of an allocation under the same tables
+    let eval = |alloc: &mxmoe::alloc::Allocation| -> (f64, f64) {
+        let mut l = 0.0;
+        let mut t = 0.0;
+        for (bi, block) in alloc.schemes.iter().enumerate() {
+            let counts = &stats.layers[bi].activation_counts;
+            let total: usize = counts.iter().sum();
+            for (e, ex) in block.iter().enumerate() {
+                let m = if e >= counts.len() {
+                    256
+                } else {
+                    ((counts[e] as f64 / total as f64) * 256.0 * lm.cfg.topk as f64).max(1.0)
+                        as usize
+                };
+                for (j, s) in ex.iter().enumerate() {
+                    l += sens.delta(bi, e, j, s);
+                    let (n, k) = if j == 2 {
+                        (lm.cfg.hidden, lm.cfg.inter)
+                    } else {
+                        (lm.cfg.inter, lm.cfg.hidden)
+                    };
+                    let (cost, _) = mxmoe::costmodel::tile::best_tile(
+                        &gpu,
+                        s,
+                        m,
+                        n,
+                        k,
+                        None,
+                        mxmoe::costmodel::Specialization::Specialized,
+                    );
+                    t += cost / gpu.sms as f64;
+                }
+            }
+        }
+        (l, t)
+    };
+
+    let mk = |r: f64| {
+        allocate(
+            &lm,
+            &gpu,
+            &registry,
+            &stats,
+            &sens,
+            &AllocatorConfig {
+                r,
+                target_avg_bits: 6.0,
+                granularity: Granularity::LinearBlock,
+                batch_tokens: 256,
+            },
+        )
+        .unwrap()
+    };
+    let (l1, t1) = eval(&mk(1.0)); // pure accuracy
+    let (l0, t0) = eval(&mk(0.0)); // pure speed
+    assert!(l1 <= l0 + 1e-12, "r=1 must minimize loss: {l1} vs {l0}");
+    assert!(t0 <= t1 + 1e-12, "r=0 must minimize time: {t0} vs {t1}");
+}
+
+#[test]
+fn linear_granularity_beats_expert_granularity() {
+    // Tab. 3: finer granularity achieves lower loss at the same budget
+    let (_cfg, lm, seqs) = setup();
+    let refs: Vec<&[u32]> = seqs.iter().map(|s| s.as_slice()).collect();
+    let stats = calibrate(&lm, &refs, None).unwrap();
+    let registry = SchemeRegistry::weight_activation();
+    let sens = measure_sensitivity(&lm, &stats, &registry).unwrap();
+    let gpu = GpuSpec::rtx4090();
+
+    let loss_of = |g: Granularity| -> f64 {
+        let alloc = allocate(
+            &lm,
+            &gpu,
+            &registry,
+            &stats,
+            &sens,
+            &AllocatorConfig {
+                r: 1.0,
+                target_avg_bits: 5.0,
+                granularity: g,
+                batch_tokens: 256,
+            },
+        )
+        .unwrap();
+        let mut l = 0.0;
+        for (bi, block) in alloc.schemes.iter().enumerate() {
+            for (e, ex) in block.iter().enumerate() {
+                for (j, s) in ex.iter().enumerate() {
+                    l += sens.delta(bi, e, j, s);
+                }
+            }
+        }
+        l
+    };
+    let l_linear = loss_of(Granularity::LinearBlock);
+    let l_expert = loss_of(Granularity::Expert);
+    assert!(
+        l_linear <= l_expert + 1e-9,
+        "linear {l_linear} must not lose to expert {l_expert}"
+    );
+}
+
+#[test]
+fn weight_only_low_bit_allocations() {
+    // the 2.25 / 3.25-bit regimes of Tab. 1. At mini-model dims the
+    // scale/zero overhead of g128 doesn't amortize (down-proj k=64 ⇒
+    // +0.5 bits), so the achievable floor is ≈2.33/3.33; we target the
+    // matched 2.4/3.4 budgets (the GPTQ baseline pays the identical
+    // overhead, so Tab. 1 comparisons stay at equal stored bits).
+    let (cfg, lm, seqs) = setup();
+    let refs: Vec<&[u32]> = seqs.iter().map(|s| s.as_slice()).collect();
+    let stats = calibrate(&lm, &refs, None).unwrap();
+    let registry = SchemeRegistry::weight_only();
+    let sens = measure_sensitivity(&lm, &stats, &registry).unwrap();
+    let gpu = GpuSpec::rtx4090();
+    for target in [2.7f64, 3.7] { // tiny-dim overhead floor ≈2.67
+        let alloc = allocate(
+            &lm,
+            &gpu,
+            &registry,
+            &stats,
+            &sens,
+            &AllocatorConfig {
+                r: 1.0,
+                target_avg_bits: target,
+                granularity: Granularity::LinearBlock,
+                batch_tokens: 256,
+            },
+        )
+        .unwrap();
+        let bits = alloc.avg_weight_bits(&cfg);
+        assert!(bits <= target + 0.05, "target {target}: got {bits}");
+        // all chosen schemes are weight-only
+        for block in &alloc.schemes {
+            for ex in block {
+                for s in ex {
+                    assert!(s.weight_only());
+                }
+            }
+        }
+    }
+}

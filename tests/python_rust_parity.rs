@@ -1,0 +1,84 @@
+//! Integration: the rust native model must reproduce the JAX trainer's
+//! forward pass on the trained weights (parity tensors exported by
+//! `python/compile/train_lm.py`).
+
+use std::path::PathBuf;
+
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::ser::MxtFile;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn check_model(name: &str) {
+    let dir = artifacts();
+    let model_path = dir.join(format!("model_{name}.mxt"));
+    let parity_path = dir.join(format!("parity_{name}.mxt"));
+    if !model_path.exists() || !parity_path.exists() {
+        eprintln!("skipping {name}: run `make models` first");
+        return;
+    }
+    let cfg = ModelConfig::by_name(name).unwrap();
+    let lm = MoeLm::load_mxt(&cfg, &MxtFile::load(&model_path).unwrap()).unwrap();
+    let parity = MxtFile::load(&parity_path).unwrap();
+    let tokens: Vec<u32> = parity
+        .get("tokens")
+        .unwrap()
+        .to_i32()
+        .unwrap()
+        .iter()
+        .map(|&t| t as u32)
+        .collect();
+    let (shape, py_logits) = parity.f32("logits").unwrap();
+    assert_eq!(shape, vec![tokens.len(), cfg.vocab]);
+
+    let rust_logits = lm.forward(&tokens);
+    // float-op ordering differs between XLA and our matmul: compare the
+    // predictions and the numerical drift, not bit equality
+    let mut max_abs = 0.0f32;
+    let mut agree = 0usize;
+    for pos in 0..tokens.len() {
+        let rrow = rust_logits.row(pos);
+        let prow = &py_logits[pos * cfg.vocab..(pos + 1) * cfg.vocab];
+        let argmax = |row: &[f32]| {
+            (0..row.len()).max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap()).unwrap()
+        };
+        if argmax(rrow) == argmax(prow) {
+            agree += 1;
+        }
+        for c in 0..cfg.vocab {
+            max_abs = max_abs.max((rrow[c] - prow[c]).abs());
+        }
+    }
+    let agree_frac = agree as f64 / tokens.len() as f64;
+    assert!(
+        max_abs < 2e-2,
+        "{name}: jax/rust logit drift {max_abs} too large — architectures diverged"
+    );
+    assert!(
+        agree_frac > 0.95,
+        "{name}: argmax agreement only {agree_frac}"
+    );
+    println!("{name}: max |Δlogit| = {max_abs:.2e}, argmax agreement {agree_frac:.3}");
+}
+
+#[test]
+fn parity_mixtral_mini() {
+    check_model("mixtral-mini");
+}
+
+#[test]
+fn parity_qwen15_mini() {
+    check_model("qwen15-mini");
+}
+
+#[test]
+fn parity_qwen2_mini() {
+    check_model("qwen2-mini");
+}
+
+#[test]
+fn parity_dsv2_mini() {
+    check_model("dsv2-mini");
+}

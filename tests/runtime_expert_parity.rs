@@ -1,0 +1,88 @@
+//! Integration: the AOT PJRT expert-FFN executables must compute exactly
+//! what the rust fake-quant reference computes — this pins the whole
+//! L1 (Pallas) → L2 (jax) → HLO text → PJRT → rust chain end to end.
+
+use std::path::PathBuf;
+
+use mxmoe::moe::ExpertWeights;
+use mxmoe::runtime::{PreparedExpert, Runtime, RuntimeScheme};
+use mxmoe::tensor::Matrix;
+use mxmoe::util::Rng;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("expert_ffn_fp16_m16.hlo.txt").exists()
+}
+
+/// Serving shapes the AOT export used (qwen15-mini).
+const HIDDEN: usize = 128;
+const INTER: usize = 64;
+
+fn check_scheme(scheme: RuntimeScheme, tol: f32) {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu(&artifacts()).unwrap();
+    let mut rng = Rng::new(0xE0 + scheme as u64);
+    let e = ExpertWeights::random(HIDDEN, INTER, &mut rng);
+    let prepared = PreparedExpert::prepare(&e, scheme).unwrap();
+    for tile_m in [16usize, 64] {
+        let x = Matrix::randn(tile_m, HIDDEN, 1.0, &mut rng);
+        let y = rt.run_expert_ffn(scheme, tile_m, &x, &prepared.literals).unwrap();
+        let y_ref = PreparedExpert::reference_forward(&e, scheme, &x);
+        assert_eq!((y.rows, y.cols), (tile_m, HIDDEN));
+        let denom = y_ref.frob_norm().max(1e-6);
+        let rel = y.l2_distance(&y_ref) / denom;
+        assert!(
+            rel < tol as f64,
+            "{scheme:?} m={tile_m}: PJRT vs native rel err {rel}"
+        );
+    }
+}
+
+#[test]
+fn fp16_executable_matches_native() {
+    check_scheme(RuntimeScheme::Fp16, 1e-4);
+}
+
+#[test]
+fn w4a16_executable_matches_native() {
+    check_scheme(RuntimeScheme::W4A16, 1e-3);
+}
+
+#[test]
+fn w8a8_executable_matches_native() {
+    check_scheme(RuntimeScheme::W8A8, 1e-3);
+}
+
+#[test]
+fn w4a4_executable_matches_native() {
+    check_scheme(RuntimeScheme::W4A4, 1e-3);
+}
+
+#[test]
+fn quantized_schemes_actually_differ_from_fp16() {
+    // guard against the executables silently ignoring quantization
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu(&artifacts()).unwrap();
+    let mut rng = Rng::new(0xF0);
+    let e = ExpertWeights::random(HIDDEN, INTER, &mut rng);
+    let x = Matrix::randn(16, HIDDEN, 1.0, &mut rng);
+    let run = |s: RuntimeScheme| {
+        let p = PreparedExpert::prepare(&e, s).unwrap();
+        rt.run_expert_ffn(s, 16, &x, &p.literals).unwrap()
+    };
+    let y16 = run(RuntimeScheme::Fp16);
+    let y4 = run(RuntimeScheme::W4A4);
+    let y8 = run(RuntimeScheme::W8A8);
+    let d4 = y16.l2_distance(&y4) / y16.frob_norm();
+    let d8 = y16.l2_distance(&y8) / y16.frob_norm();
+    assert!(d4 > 1e-3, "w4a4 indistinguishable from fp16: {d4}");
+    assert!(d8 > 1e-6 && d8 < d4, "w8a8 error {d8} should be small but nonzero, < w4a4 {d4}");
+}

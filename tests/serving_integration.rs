@@ -1,0 +1,154 @@
+//! Integration: the full serving path — dynamic batcher + engine + PJRT
+//! executables — against the native model.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use mxmoe::alloc::Allocation;
+use mxmoe::coordinator::{ServeConfig, Server};
+use mxmoe::moe::lm::Ffn;
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::quant::QuantScheme;
+use mxmoe::ser::mxt::{MxtFile, MxtTensor};
+use mxmoe::util::Rng;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Serving-shape model (hidden=128, inter=64 — what the AOT export ships),
+/// small expert count to keep the test fast.
+fn serving_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "serve-test".into(),
+        vocab: 64,
+        hidden: 128,
+        layers: 2,
+        heads: 4,
+        n_experts: 6,
+        n_shared: 1,
+        topk: 2,
+        inter: 64,
+        dense_first: false,
+        seq_len: 24,
+    }
+}
+
+fn save_random_model(cfg: &ModelConfig, path: &PathBuf, rng: &mut Rng) -> MoeLm {
+    let lm = MoeLm::random(cfg, rng);
+    let mut f = MxtFile::new();
+    let m = |m: &mxmoe::tensor::Matrix| MxtTensor::from_f32(vec![m.rows, m.cols], &m.data);
+    f.insert("embed", m(&lm.embed));
+    f.insert("head", m(&lm.head));
+    f.insert("ln_f", MxtTensor::from_f32(vec![cfg.hidden], &lm.ln_f));
+    for (l, layer) in lm.layers.iter().enumerate() {
+        let p = |s: &str| format!("layers.{l}.{s}");
+        f.insert(&p("ln1"), MxtTensor::from_f32(vec![cfg.hidden], &layer.ln1));
+        f.insert(&p("ln2"), MxtTensor::from_f32(vec![cfg.hidden], &layer.ln2));
+        for (n, w) in [("wq", &layer.wq), ("wk", &layer.wk), ("wv", &layer.wv), ("wo", &layer.wo)] {
+            f.insert(&p(n), m(w));
+        }
+        if let Ffn::Moe(b) = &layer.ffn {
+            f.insert(&p("router"), m(&b.w_router));
+            for (e, ew) in b.experts.iter().enumerate() {
+                f.insert(&p(&format!("expert.{e}.gate")), m(&ew.gate));
+                f.insert(&p(&format!("expert.{e}.up")), m(&ew.up));
+                f.insert(&p(&format!("expert.{e}.down")), m(&ew.down));
+            }
+            for (s, ew) in b.shared.iter().enumerate() {
+                f.insert(&p(&format!("shared.{s}.gate")), m(&ew.gate));
+                f.insert(&p(&format!("shared.{s}.up")), m(&ew.up));
+                f.insert(&p(&format!("shared.{s}.down")), m(&ew.down));
+            }
+        }
+    }
+    f.save(path).unwrap();
+    lm
+}
+
+#[test]
+fn serve_fp16_matches_native_forward() {
+    if !artifacts().join("expert_ffn_fp16_m16.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = serving_cfg();
+    let mut rng = Rng::new(0x5EB5);
+    let weights_path = std::env::temp_dir().join("mxmoe_serve_test.mxt");
+    let lm = save_random_model(&cfg, &weights_path, &mut rng);
+
+    let server = Server::start(
+        cfg.clone(),
+        weights_path.clone(),
+        artifacts(),
+        Allocation::uniform(&cfg, QuantScheme::FP16),
+        ServeConfig { max_batch_seqs: 4, max_wait: Duration::from_millis(5) },
+    )
+    .unwrap();
+
+    // submit a few requests and compare predictions with the native model
+    let mut receivers = Vec::new();
+    let mut seqs = Vec::new();
+    for _ in 0..6 {
+        let seq: Vec<u32> = (0..cfg.seq_len).map(|_| rng.below(64) as u32).collect();
+        receivers.push(server.submit(seq.clone()).unwrap());
+        seqs.push(seq);
+    }
+    for (rx, seq) in receivers.iter().zip(&seqs) {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        let logits = lm.forward(seq);
+        let last = logits.row(seq.len() - 1);
+        let native_argmax =
+            (0..last.len()).max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap()).unwrap();
+        assert_eq!(
+            resp.next_token as usize, native_argmax,
+            "served prediction diverged from native model"
+        );
+        assert!(resp.mean_nll.is_finite() && resp.mean_nll > 0.0);
+    }
+    let report = server.shutdown();
+    assert_eq!(report.requests, 6);
+    assert!(report.throughput_tps > 0.0);
+    assert!(report.expert_calls > 0);
+    let _ = std::fs::remove_file(&weights_path);
+}
+
+#[test]
+fn serve_quantized_stays_close_but_not_identical() {
+    if !artifacts().join("expert_ffn_w8a8_m16.hlo.txt").exists() {
+        return;
+    }
+    let cfg = serving_cfg();
+    let mut rng = Rng::new(0x5EB6);
+    let weights_path = std::env::temp_dir().join("mxmoe_serve_test_q.mxt");
+    let lm = save_random_model(&cfg, &weights_path, &mut rng);
+
+    let server = Server::start(
+        cfg.clone(),
+        weights_path.clone(),
+        artifacts(),
+        Allocation::uniform(&cfg, QuantScheme::W8A8),
+        ServeConfig::default(),
+    )
+    .unwrap();
+    let seq: Vec<u32> = (0..cfg.seq_len).map(|_| rng.below(64) as u32).collect();
+    let rx = server.submit(seq.clone()).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    // compare NLL with the native fp32 value: close (8-bit) but finite
+    let logits = lm.forward(&seq);
+    let mut nll = 0.0f64;
+    for pos in 0..seq.len() - 1 {
+        let row = logits.row(pos);
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+        let z: f64 = row.iter().map(|&v| ((v as f64) - m).exp()).sum();
+        nll -= (logits.at(pos, seq[pos + 1] as usize) as f64 - m) - z.ln();
+    }
+    let native = nll / (seq.len() - 1) as f64;
+    assert!(
+        (resp.mean_nll - native).abs() / native < 0.1,
+        "8-bit NLL {} too far from native {native}",
+        resp.mean_nll
+    );
+    server.shutdown();
+    let _ = std::fs::remove_file(&weights_path);
+}
