@@ -126,9 +126,30 @@ fn greedy_upgrade(groups: &[McKpGroup], costs: &[Vec<f64>], choices: &mut [usize
 
 /// Solve the allocation MCKP. `r` ∈ [0,1]; `budget` in bytes.
 pub fn solve_mckp(groups: &[McKpGroup], r: f64, budget: f64) -> Result<Solution> {
+    solve_mckp_warm(groups, r, budget, None)
+}
+
+/// [`solve_mckp`] with an optional warm start: `warm` is an incumbent
+/// choice vector (e.g. the currently-serving plan when the online replanner
+/// re-solves under drifted activation frequencies). The incumbent seeds the
+/// candidate pool and is greedily upgraded under every λ, which guarantees
+/// the returned plan is never worse than the incumbent *under the new
+/// weights* — the online loop's monotone-improvement property. An invalid
+/// or budget-infeasible incumbent is ignored.
+pub fn solve_mckp_warm(
+    groups: &[McKpGroup],
+    r: f64,
+    budget: f64,
+    warm: Option<&[usize]>,
+) -> Result<Solution> {
     if groups.is_empty() {
         bail!("solve_mckp: no groups");
     }
+    let warm = warm.filter(|w| {
+        w.len() == groups.len()
+            && w.iter().zip(groups).all(|(&c, g)| c < g.items.len())
+            && total_bytes(groups, w) <= budget * (1.0 + 1e-9)
+    });
     // feasibility: even the smallest-bytes choice must fit
     let min_bytes: f64 = groups
         .iter()
@@ -149,7 +170,7 @@ pub fn solve_mckp(groups: &[McKpGroup], r: f64, budget: f64) -> Result<Solution>
         .sum::<f64>()
         .max(1e-12);
 
-    let mut best: Option<Solution> = None;
+    let mut best: Option<Solution> = warm.map(|w| evaluate(groups, w, r));
     // λ sweep includes the pure-accuracy (r=1-ish) and pure-speed ends
     let lambdas: Vec<f64> = if r >= 1.0 {
         vec![1.0]
@@ -195,6 +216,16 @@ pub fn solve_mckp(groups: &[McKpGroup], r: f64, budget: f64) -> Result<Solution>
         debug_assert!(sol.bytes <= budget * (1.0 + 1e-9));
         if best.as_ref().map_or(true, |b| sol.objective < b.objective) {
             best = Some(sol);
+        }
+        // budget-slack repair of the incumbent under this λ's scalar cost
+        if let Some(w) = warm {
+            let mut wc = w.to_vec();
+            greedy_upgrade(groups, &costs, &mut wc, budget);
+            let sol = evaluate(groups, &wc, r);
+            debug_assert!(sol.bytes <= budget * (1.0 + 1e-9));
+            if best.as_ref().map_or(true, |b| sol.objective < b.objective) {
+                best = Some(sol);
+            }
         }
     }
     Ok(best.unwrap())
@@ -316,6 +347,66 @@ mod tests {
                 heur.objective,
                 exact.objective
             );
+        }
+    }
+
+    #[test]
+    fn warm_start_never_worse_than_incumbent() {
+        let mut rng = Rng::new(167);
+        for trial in 0..10 {
+            let groups = random_groups(20, 4, &mut rng);
+            // feasible incumbent: cheapest item everywhere, then a few
+            // random (still feasible after check) perturbations
+            let budget = 20.0 * 250.0;
+            let mut warm: Vec<usize> = groups
+                .iter()
+                .map(|g| {
+                    let mut best = 0;
+                    for (i, item) in g.items.iter().enumerate() {
+                        if item.bytes < g.items[best].bytes {
+                            best = i;
+                        }
+                    }
+                    best
+                })
+                .collect();
+            for _ in 0..5 {
+                let gi = rng.below(20) as usize;
+                let old = warm[gi];
+                warm[gi] = rng.below(4) as usize;
+                if groups.iter().zip(&warm).map(|(g, &c)| g.items[c].bytes).sum::<f64>() > budget {
+                    warm[gi] = old;
+                }
+            }
+            let incumbent = evaluate(&groups, &warm, 0.75);
+            let sol = solve_mckp_warm(&groups, 0.75, budget, Some(&warm)).unwrap();
+            assert!(
+                sol.objective <= incumbent.objective + 1e-12,
+                "trial {trial}: warm-started solve {} worse than incumbent {}",
+                sol.objective,
+                incumbent.objective
+            );
+        }
+    }
+
+    #[test]
+    fn invalid_warm_start_is_ignored() {
+        let mut rng = Rng::new(168);
+        let groups = random_groups(10, 3, &mut rng);
+        let budget = 10.0 * 200.0;
+        let cold = solve_mckp(&groups, 0.75, budget).unwrap();
+        // wrong length and out-of-range indices must both be ignored
+        let bad_len = vec![0usize; 3];
+        let s1 = solve_mckp_warm(&groups, 0.75, budget, Some(&bad_len)).unwrap();
+        assert!((s1.objective - cold.objective).abs() < 1e-12);
+        let bad_idx = vec![99usize; 10];
+        let s2 = solve_mckp_warm(&groups, 0.75, budget, Some(&bad_idx)).unwrap();
+        assert!((s2.objective - cold.objective).abs() < 1e-12);
+        // infeasible incumbent (max bytes everywhere, over budget) ignored
+        let fat: Vec<usize> = groups.iter().map(|g| g.items.len() - 1).collect();
+        if groups.iter().zip(&fat).map(|(g, &c)| g.items[c].bytes).sum::<f64>() > budget {
+            let s3 = solve_mckp_warm(&groups, 0.75, budget, Some(&fat)).unwrap();
+            assert!(s3.bytes <= budget + 1e-6);
         }
     }
 

@@ -15,7 +15,7 @@ pub mod mckp;
 pub mod sensitivity;
 
 pub use calibrate::{calibrate, CalibrationStats, LayerStats};
-pub use mckp::{solve_mckp, Granularity, Item, McKpGroup, Solution};
+pub use mckp::{solve_mckp, solve_mckp_warm, Granularity, Item, McKpGroup, Solution};
 pub use sensitivity::{measure_sensitivity, SensitivityTable};
 
 use anyhow::Result;
@@ -137,6 +137,24 @@ impl Default for AllocatorConfig {
     }
 }
 
+/// Normalized per-layer routed-expert activation frequencies from a
+/// calibration pass — the offline workload vector the allocator weights
+/// the runtime model by, and the drift baseline the online telemetry
+/// compares live traffic against ([`crate::serve::telemetry`]).
+pub fn activation_frequencies(stats: &CalibrationStats) -> Vec<Vec<f64>> {
+    stats
+        .layers
+        .iter()
+        .map(|ls| {
+            let total: usize = ls.activation_counts.iter().sum();
+            ls.activation_counts
+                .iter()
+                .map(|&c| c as f64 / total.max(1) as f64)
+                .collect()
+        })
+        .collect()
+}
+
 /// Build the MCKP groups from calibration + sensitivity + the runtime cost
 /// model, then solve. One group per linear block (or per expert at
 /// expert-level granularity) across *all* MoE layers; the budget is global.
@@ -148,18 +166,59 @@ pub fn allocate(
     sens: &SensitivityTable,
     cfg: &AllocatorConfig,
 ) -> Result<Allocation> {
-    let model = &lm.cfg;
+    allocate_with_frequencies(
+        &lm.cfg,
+        gpu,
+        registry,
+        sens,
+        &activation_frequencies(stats),
+        cfg,
+        None,
+    )
+}
+
+/// The allocator core, parameterized by the per-layer routed-expert
+/// activation-frequency vectors instead of full calibration stats. This is
+/// the entry point the online replanner uses: live telemetry frequencies
+/// replace the calibration histogram (the paper's §3 insight — activation
+/// frequency shapes the optimal mixed-precision configuration — tracked at
+/// serve time), and `warm` seeds the solver with the currently-serving
+/// plan so the re-solve is incremental and never regresses under the new
+/// weights.
+pub fn allocate_with_frequencies(
+    model: &ModelConfig,
+    gpu: &GpuSpec,
+    registry: &SchemeRegistry,
+    sens: &SensitivityTable,
+    freqs: &[Vec<f64>],
+    cfg: &AllocatorConfig,
+    warm: Option<&Allocation>,
+) -> Result<Allocation> {
+    let layers = model.moe_layers();
+    if freqs.len() != layers.len() {
+        anyhow::bail!(
+            "allocate: {} frequency vectors for {} MoE layers",
+            freqs.len(),
+            layers.len()
+        );
+    }
+    if let Some(bad) = freqs.iter().position(|f| f.len() != model.n_experts) {
+        anyhow::bail!(
+            "allocate: layer {bad} frequency vector has {} entries, model has {} routed experts",
+            freqs[bad].len(),
+            model.n_experts
+        );
+    }
     let total_experts = model.n_experts + model.n_shared;
     let mut groups: Vec<McKpGroup> = Vec::new();
 
-    for (bi, layer_stats) in stats.layers.iter().enumerate() {
+    for (bi, layer_freqs) in freqs.iter().enumerate() {
         // tokens each expert sees at the reference batch size
-        let total_count: usize = layer_stats.activation_counts.iter().sum();
         let m_of = |e: usize| -> usize {
             if e >= model.n_experts {
                 return cfg.batch_tokens; // shared experts see every token
             }
-            let frac = layer_stats.activation_counts[e] as f64 / total_count.max(1) as f64;
+            let frac = layer_freqs[e];
             ((frac * cfg.batch_tokens as f64 * model.topk as f64).round() as usize).max(1)
         };
         for e in 0..total_experts {
@@ -211,17 +270,15 @@ pub fn allocate(
     }
 
     // budget: target average bits over all weight elements
-    let mut total_elems = 0.0f64;
-    for _ in &stats.layers {
-        total_elems +=
-            (total_experts * 3) as f64 * (model.inter * model.hidden) as f64;
-    }
+    let total_elems =
+        freqs.len() as f64 * (total_experts * 3) as f64 * (model.inter * model.hidden) as f64;
     let budget_bytes = cfg.target_avg_bits * total_elems / 8.0;
 
-    let sol = solve_mckp(&groups, cfg.r, budget_bytes)?;
+    let warm_choices = warm.and_then(|a| warm_start_choices(&groups, a));
+    let sol = solve_mckp_warm(&groups, cfg.r, budget_bytes, warm_choices.as_deref())?;
 
     // materialize the allocation
-    let mut schemes = vec![vec![[QuantScheme::FP16; 3]; total_experts]; stats.layers.len()];
+    let mut schemes = vec![vec![[QuantScheme::FP16; 3]; total_experts]; freqs.len()];
     for (g, &choice) in groups.iter().zip(&sol.choices) {
         let s = g.items[choice].scheme;
         if g.linear == 3 {
@@ -230,7 +287,26 @@ pub fn allocate(
             schemes[g.block][g.expert][g.linear] = s;
         }
     }
-    Ok(Allocation { layers: stats.layers.iter().map(|l| l.layer).collect(), schemes })
+    Ok(Allocation { layers, schemes })
+}
+
+/// Map an existing allocation onto the freshly-built groups' item indices
+/// (the MCKP warm start). Returns `None` when any group has no item with
+/// the incumbent's scheme — e.g. the incumbent was built from a different
+/// registry — in which case the solve runs cold.
+fn warm_start_choices(groups: &[McKpGroup], warm: &Allocation) -> Option<Vec<usize>> {
+    groups
+        .iter()
+        .map(|g| {
+            let linear = if g.linear == 3 { 0 } else { g.linear };
+            let scheme = *warm
+                .schemes
+                .get(g.block)?
+                .get(g.expert)?
+                .get(linear)?;
+            g.items.iter().position(|i| i.scheme == scheme)
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -1,4 +1,8 @@
-//! The serving engine: native attention/routing + PJRT expert dispatch.
+//! The serving engine: native attention/routing + PJRT expert dispatch,
+//! rewired on top of [`crate::serve`] — the slot table lives in
+//! [`crate::serve::hotswap`], live routing statistics feed
+//! [`crate::serve::telemetry`], and [`maybe_replan`](ServingEngine::maybe_replan)
+//! closes the telemetry → drift → re-solve → hot-swap loop.
 
 use std::path::Path;
 
@@ -7,99 +11,45 @@ use anyhow::Result;
 use crate::alloc::Allocation;
 use crate::moe::block::MoeBlock;
 use crate::moe::{route, ModelConfig, MoeLm};
-use crate::runtime::{pick_tile, PreparedExpert, Runtime, RuntimeScheme, TILE_MS};
+use crate::runtime::{tile_decompose, Runtime, RuntimeScheme};
+use crate::serve::replan::{diff_plans, ReplanOutcome, Replanner};
+use crate::serve::telemetry::{ActivationTelemetry, DEFAULT_EWMA_ALPHA};
+use crate::serve::{SlotChange, SlotTable};
 use crate::tensor::Matrix;
 
 use super::metrics::Metrics;
 
-/// Per-(MoE-layer, expert) runtime assignment + prepared weight literals.
-struct ExpertSlot {
-    scheme: RuntimeScheme,
-    prepared: PreparedExpert,
-}
-
-/// The engine owns the model, the PJRT runtime, and the prepared
-/// mixed-precision expert artifacts. Single-threaded by design: the CPU
-/// PJRT client parallelizes internally (XLA intra-op pool plays the role
-/// of the SM array; the task queue discipline mirrors the fused tile
-/// scheduler — see DESIGN.md §Hardware-Adaptation).
-pub struct ServingEngine {
-    pub lm: MoeLm,
+/// The mutable serving state the MoE hook needs: PJRT runtime, the live
+/// slot table, metrics and telemetry. Split out of [`ServingEngine`] so the
+/// batched forward can borrow the (immutable) model and this (mutable)
+/// dispatch state disjointly — no `unsafe` aliasing.
+pub struct ExpertDispatcher {
     runtime: Runtime,
-    /// `slots[block_pos][expert]` — routed then shared, per MoE layer.
-    slots: Vec<Vec<ExpertSlot>>,
+    slots: SlotTable,
     pub metrics: Metrics,
+    pub telemetry: ActivationTelemetry,
 }
 
-impl ServingEngine {
-    /// Build from a trained model + allocation. Quantizes every expert to
-    /// its allocated runtime family and pre-compiles the executables.
-    pub fn new(lm: MoeLm, artifacts: &Path, allocation: &Allocation) -> Result<ServingEngine> {
-        let runtime = Runtime::cpu(artifacts)?;
-        runtime.warmup_expert_ffn()?;
-        let mut slots = Vec::new();
-        for (pos, (_, block)) in lm.moe_blocks().iter().enumerate() {
-            let mut layer_slots = Vec::new();
-            for e in 0..block.total_experts() {
-                // map the allocated (possibly per-linear) schemes to the
-                // expert's runtime family: take the gate linear's family
-                // (runtime executables are per-expert uniform; per-linear
-                // mixing within an expert is an accuracy-side refinement)
-                let scheme = RuntimeScheme::from_quant(&allocation.schemes[pos][e][0]);
-                let prepared = PreparedExpert::prepare(block.expert_at(e), scheme)?;
-                layer_slots.push(ExpertSlot { scheme, prepared });
-            }
-            slots.push(layer_slots);
-        }
-        Ok(ServingEngine { lm, runtime, slots, metrics: Metrics::new() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.runtime.platform()
-    }
-
-    /// Scheme histogram for reporting.
-    pub fn scheme_counts(&self) -> Vec<(RuntimeScheme, usize)> {
-        let mut counts = Vec::new();
-        for s in RuntimeScheme::ALL {
-            let n = self
-                .slots
-                .iter()
-                .flat_map(|l| l.iter())
-                .filter(|slot| slot.scheme == s)
-                .count();
-            if n > 0 {
-                counts.push((s, n));
-            }
-        }
-        counts
-    }
-
+impl ExpertDispatcher {
     /// Run one expert's FFN over `m` rows via PJRT, chunking into the
     /// exported tile sizes and cropping padding.
     fn run_expert(&mut self, block_pos: usize, expert: usize, x: &Matrix) -> Result<Matrix> {
-        let slot = &self.slots[block_pos][expert];
+        let slot = self.slots.slot(block_pos, expert);
+        let scheme = slot.scheme;
         let hidden = x.cols;
         let mut out = Matrix::zeros(x.rows, hidden);
         let mut r0 = 0;
-        while r0 < x.rows {
-            let remaining = x.rows - r0;
-            // greedy decomposition: largest whole tile ≤ remaining, so
-            // 68 tokens run as 64 + 4 instead of one padded 256-tile
-            // (§Perf: padding 98% → ~2% on the serving path)
-            let tile_m = TILE_MS
-                .iter()
-                .rev()
-                .copied()
-                .find(|&t| t <= remaining)
-                .unwrap_or_else(|| pick_tile(remaining));
-            let rows = remaining.min(tile_m);
+        for tile_m in tile_decompose(x.rows) {
+            let rows = (x.rows - r0).min(tile_m);
             // pad to tile_m
             let mut xt = Matrix::zeros(tile_m, hidden);
             xt.data[..rows * hidden].copy_from_slice(&x.data[r0 * hidden..(r0 + rows) * hidden]);
-            let y = self
-                .runtime
-                .run_expert_ffn(slot.scheme, tile_m, &xt, &slot.prepared.literals)?;
+            let y = self.runtime.run_expert_ffn(
+                scheme,
+                tile_m,
+                &xt,
+                &self.slots.slot(block_pos, expert).prepared.literals,
+            )?;
             out.data[r0 * hidden..(r0 + rows) * hidden]
                 .copy_from_slice(&y.data[..rows * hidden]);
             self.metrics.expert_calls += 1;
@@ -110,9 +60,11 @@ impl ServingEngine {
         Ok(out)
     }
 
-    /// MoE block forward with PJRT expert dispatch (the hook body).
+    /// MoE block forward with PJRT expert dispatch (the hook body). Also
+    /// feeds the routed activation counts into the live telemetry.
     fn moe_forward(&mut self, block_pos: usize, block: &MoeBlock, x: &Matrix) -> Result<Matrix> {
         let routing = route(x, &block.w_router, block.topk);
+        self.telemetry.record(block_pos, &routing.activation_counts());
         let mut out = Matrix::zeros(x.rows, x.cols);
         for (e, (tokens, weights)) in routing.per_expert.iter().enumerate() {
             if tokens.is_empty() {
@@ -128,6 +80,107 @@ impl ServingEngine {
         }
         Ok(out)
     }
+}
+
+/// The engine owns the model, the PJRT runtime, and the prepared
+/// mixed-precision expert artifacts. Single-threaded by design: the CPU
+/// PJRT client parallelizes internally (XLA intra-op pool plays the role
+/// of the SM array; the task queue discipline mirrors the fused tile
+/// scheduler — see DESIGN.md §Hardware-Adaptation). Batches run serially,
+/// so a hot-swap applied between batches never tears a batch across plan
+/// generations.
+pub struct ServingEngine {
+    pub lm: MoeLm,
+    allocation: Allocation,
+    dispatch: ExpertDispatcher,
+    /// `telemetry.observed_tokens` at the last replan (hysteresis anchor).
+    tokens_at_last_replan: usize,
+}
+
+impl ServingEngine {
+    /// Build from a trained model + allocation. Quantizes every expert to
+    /// its allocated runtime family and pre-compiles the executables. The
+    /// telemetry baseline starts uniform; feed the calibration frequency
+    /// vector via [`set_baseline`](Self::set_baseline) for meaningful
+    /// drift scores.
+    pub fn new(lm: MoeLm, artifacts: &Path, allocation: &Allocation) -> Result<ServingEngine> {
+        let runtime = Runtime::cpu(artifacts)?;
+        runtime.warmup_expert_ffn()?;
+        let slots = SlotTable::build(&lm, allocation)?;
+        let telemetry =
+            ActivationTelemetry::uniform(slots.n_layers(), lm.cfg.n_experts, DEFAULT_EWMA_ALPHA);
+        Ok(ServingEngine {
+            lm,
+            allocation: allocation.clone(),
+            dispatch: ExpertDispatcher { runtime, slots, metrics: Metrics::new(), telemetry },
+            tokens_at_last_replan: 0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.dispatch.runtime.platform()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.dispatch.metrics
+    }
+
+    pub fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.dispatch.metrics
+    }
+
+    pub fn telemetry(&self) -> &ActivationTelemetry {
+        &self.dispatch.telemetry
+    }
+
+    /// The currently-serving allocation.
+    pub fn allocation(&self) -> &Allocation {
+        &self.allocation
+    }
+
+    /// Current plan generation (bumps on every hot-swap).
+    pub fn generation(&self) -> u64 {
+        self.dispatch.slots.generation()
+    }
+
+    /// Runtime family currently serving `(block_pos, expert)`.
+    pub fn scheme_of(&self, block_pos: usize, expert: usize) -> RuntimeScheme {
+        self.dispatch.slots.slot(block_pos, expert).scheme
+    }
+
+    /// Scheme histogram for reporting.
+    pub fn scheme_counts(&self) -> Vec<(RuntimeScheme, usize)> {
+        self.dispatch.slots.scheme_counts()
+    }
+
+    /// Seed the drift baseline (and live estimate) with the calibration
+    /// activation-frequency vector the offline allocation was solved with.
+    /// The shape is validated here, at startup — one vector per MoE layer,
+    /// one entry per *routed* expert (shared experts see every token and
+    /// are not tracked) — so a malformed baseline fails loudly before any
+    /// request is served rather than panicking mid-batch.
+    pub fn set_baseline(&mut self, freqs: Vec<Vec<f64>>) {
+        assert_eq!(
+            freqs.len(),
+            self.dispatch.slots.n_layers(),
+            "baseline must have one frequency vector per MoE layer"
+        );
+        for (pos, f) in freqs.iter().enumerate() {
+            assert_eq!(
+                f.len(),
+                self.lm.cfg.n_experts,
+                "baseline layer {pos}: one entry per routed expert expected \
+                 (shared experts are not tracked)"
+            );
+        }
+        self.dispatch.telemetry.reset(freqs);
+    }
+
+    /// Tune the telemetry EWMA step (workload-dependent; higher = faster
+    /// drift response, noisier).
+    pub fn set_telemetry_alpha(&mut self, alpha: f64) {
+        self.dispatch.telemetry.set_alpha(alpha);
+    }
 
     /// Forward a batch of sequences; expert FFNs run on PJRT with
     /// cross-request token batching. Returns per-sequence logits.
@@ -140,13 +193,16 @@ impl ServingEngine {
             .enumerate()
             .map(|(pos, (l, _))| (*l, pos))
             .collect();
-        let lm = unsafe { &*(&self.lm as *const MoeLm) }; // split borrow: lm is not mutated
+        // disjoint field borrows: the model is read-only during the pass,
+        // all mutation goes through the dispatcher
+        let lm = &self.lm;
+        let dispatch = &mut self.dispatch;
         let mut err: Option<anyhow::Error> = None;
         let logits = lm.forward_batch_with_moe(batch, |l, block, x| {
             if err.is_some() {
                 return Matrix::zeros(x.rows, x.cols);
             }
-            match self.moe_forward(block_pos[&l], block, x) {
+            match dispatch.moe_forward(block_pos[&l], block, x) {
                 Ok(y) => y,
                 Err(e) => {
                     err = Some(e);
@@ -157,10 +213,48 @@ impl ServingEngine {
         match err {
             Some(e) => Err(e),
             None => {
-                self.metrics.batches += 1;
+                self.dispatch.metrics.batches += 1;
                 Ok(logits)
             }
         }
+    }
+
+    /// Install a new allocation: hot-swap exactly the slots in `changes`
+    /// (two-phase, so failure leaves the old plan serving) and adopt the
+    /// allocation as current. Returns the number of slots swapped.
+    pub fn install_plan(&mut self, allocation: Allocation, changes: &[SlotChange]) -> Result<usize> {
+        let swapped = self.dispatch.slots.apply(&self.lm, changes)?;
+        self.allocation = allocation;
+        self.dispatch.metrics.swaps += swapped;
+        Ok(swapped)
+    }
+
+    /// The online loop body (DESIGN.md §Online-Serving): check drift, and
+    /// if it crossed the threshold (with token hysteresis satisfied),
+    /// re-solve the MCKP on live frequencies warm-started from the current
+    /// plan, hot-swap the delta, and rebaseline the telemetry. Call
+    /// strictly between batches. Returns `None` when no replan triggered.
+    pub fn maybe_replan(&mut self, replanner: &Replanner) -> Result<Option<ReplanOutcome>> {
+        let drift = self.dispatch.telemetry.max_drift();
+        self.dispatch.metrics.last_drift = drift;
+        if drift < replanner.cfg.drift_threshold {
+            return Ok(None);
+        }
+        let observed = self.dispatch.telemetry.observed_tokens;
+        if observed - self.tokens_at_last_replan < replanner.cfg.min_tokens_between {
+            return Ok(None);
+        }
+        // anchor marks the replan *attempt*: a failing solve/swap backs off
+        // for min_tokens_between instead of re-solving on every batch
+        self.tokens_at_last_replan = observed;
+        let freqs = self.dispatch.telemetry.live().to_vec();
+        let new_alloc = replanner.replan(&self.lm.cfg, &freqs, &self.allocation)?;
+        let changes = diff_plans(&self.allocation, &new_alloc);
+        let n_changes = changes.len();
+        let swapped = self.install_plan(new_alloc, &changes)?;
+        self.dispatch.telemetry.rebaseline();
+        self.dispatch.metrics.replans += 1;
+        Ok(Some(ReplanOutcome { drift, changes: n_changes, swapped }))
     }
 }
 

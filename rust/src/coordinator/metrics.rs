@@ -8,6 +8,7 @@ use crate::util::stats::Summary;
 pub struct Metrics {
     start: Instant,
     latencies: Vec<f64>,
+    queue_waits: Vec<f64>,
     pub tokens: usize,
     pub requests: usize,
     pub batches: usize,
@@ -16,6 +17,14 @@ pub struct Metrics {
     pub padded_tokens: usize,
     /// Useful (non-padding) tile rows.
     pub useful_rows: usize,
+    /// Expert slots hot-swapped to a new runtime family.
+    pub swaps: usize,
+    /// Drift-triggered MCKP re-solves.
+    pub replans: usize,
+    /// Telemetry drift score at the last check (total variation, [0,1]).
+    pub last_drift: f64,
+    /// Deepest admission queue observed at a batch cut.
+    pub max_queue_depth: usize,
 }
 
 impl Metrics {
@@ -23,12 +32,17 @@ impl Metrics {
         Metrics {
             start: Instant::now(),
             latencies: Vec::new(),
+            queue_waits: Vec::new(),
             tokens: 0,
             requests: 0,
             batches: 0,
             expert_calls: 0,
             padded_tokens: 0,
             useful_rows: 0,
+            swaps: 0,
+            replans: 0,
+            last_drift: 0.0,
+            max_queue_depth: 0,
         }
     }
 
@@ -36,6 +50,14 @@ impl Metrics {
         self.latencies.push(latency_s);
         self.tokens += tokens;
         self.requests += 1;
+    }
+
+    pub fn record_queue_wait(&mut self, wait_s: f64) {
+        self.queue_waits.push(wait_s);
+    }
+
+    pub fn note_queue_depth(&mut self, depth: usize) {
+        self.max_queue_depth = self.max_queue_depth.max(depth);
     }
 
     pub fn elapsed(&self) -> f64 {
@@ -51,6 +73,15 @@ impl Metrics {
             None
         } else {
             Some(Summary::of(&self.latencies))
+        }
+    }
+
+    /// Queue-wait distribution (admission → batch cut).
+    pub fn queue_wait_summary(&self) -> Option<Summary> {
+        if self.queue_waits.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.queue_waits))
         }
     }
 
@@ -83,5 +114,21 @@ mod tests {
         assert_eq!(m.tokens, 256);
         let s = m.latency_summary().unwrap();
         assert!((s.mean - 0.015).abs() < 1e-9);
+    }
+
+    #[test]
+    fn online_counters() {
+        let mut m = Metrics::new();
+        assert!(m.queue_wait_summary().is_none());
+        m.record_queue_wait(0.002);
+        m.record_queue_wait(0.004);
+        assert!((m.queue_wait_summary().unwrap().mean - 0.003).abs() < 1e-9);
+        m.note_queue_depth(3);
+        m.note_queue_depth(1);
+        assert_eq!(m.max_queue_depth, 3);
+        m.swaps += 2;
+        m.replans += 1;
+        m.last_drift = 0.4;
+        assert_eq!((m.swaps, m.replans), (2, 1));
     }
 }

@@ -1,15 +1,21 @@
-//! L3 serving coordinator: request queue, dynamic batcher, expert
+//! L3 serving coordinator: request queue, continuous batcher, expert
 //! grouping/padding, PJRT dispatch and metrics.
 //!
 //! This is the system half of MxMoE (§4.3): routing and batching live in
 //! rust, expert FFN compute runs through the AOT PJRT executables — one
 //! executable per (runtime scheme, tile_m), dispatched per the
 //! mixed-precision allocation. Python is nowhere on this path.
+//!
+//! The coordinator is built on the [`crate::serve`] subsystem: batch
+//! cutting comes from [`crate::serve::queue`], the live expert table from
+//! [`crate::serve::hotswap`], and [`Server::start_online`] runs the
+//! telemetry → drift → replan → hot-swap loop between batches
+//! (DESIGN.md §Online-Serving).
 
 pub mod engine;
 pub mod metrics;
 pub mod server;
 
-pub use engine::ServingEngine;
+pub use engine::{uniform_engine, ServingEngine};
 pub use metrics::Metrics;
-pub use server::{Request, Response, ServeConfig, Server};
+pub use server::{OnlineConfig, Request, Response, ServeConfig, Server, ServerReport};

@@ -1,10 +1,15 @@
-//! Request server: queue + dynamic batcher in front of the engine.
+//! Request server: admission queue + continuous batcher in front of the
+//! engine, with an optional online re-allocation loop.
 //!
 //! The engine (and its PJRT handles) are not `Send`, so the server thread
 //! *builds* the engine locally and owns it for its lifetime; clients talk
-//! over channels. The batcher implements the classic dynamic-batching
-//! policy: close a batch when it reaches `max_batch_seqs` or when the
-//! oldest queued request has waited `max_wait`.
+//! over channels. Batch cutting is delegated to
+//! [`crate::serve::queue::ContinuousBatcher`]: batches close on the
+//! sequence cap, the tile-set token budget, or the oldest request's wait
+//! deadline, and a token-budget cut leaves the tail queued — nothing is
+//! dropped, including across hot-swaps. When started with
+//! [`Server::start_online`], the loop runs the engine's
+//! telemetry → drift → replan → hot-swap cycle between batches.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -16,6 +21,9 @@ use anyhow::Result;
 use crate::alloc::Allocation;
 use crate::moe::{ModelConfig, MoeLm};
 use crate::ser::MxtFile;
+use crate::serve::queue::{BatchPolicy, ContinuousBatcher};
+use crate::serve::replan::Replanner;
+pub use crate::serve::queue::{Request, Response};
 
 use super::engine::ServingEngine;
 
@@ -23,29 +31,43 @@ use super::engine::ServingEngine;
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub max_batch_seqs: usize,
+    /// Concatenated-token budget per batch (tile-set sizing; see
+    /// [`crate::runtime::TILE_MS`]).
+    pub max_batch_tokens: usize,
     pub max_wait: Duration,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch_seqs: 8, max_wait: Duration::from_millis(20) }
+        let p = BatchPolicy::default();
+        ServeConfig {
+            max_batch_seqs: p.max_seqs,
+            max_batch_tokens: p.max_tokens,
+            max_wait: p.max_wait,
+        }
     }
 }
 
-/// A scoring request: token sequence in, next-token prediction + NLL out.
-pub struct Request {
-    pub tokens: Vec<u32>,
-    pub reply: mpsc::Sender<Response>,
-    pub arrived: Instant,
+impl ServeConfig {
+    fn policy(&self) -> BatchPolicy {
+        BatchPolicy {
+            max_seqs: self.max_batch_seqs,
+            max_tokens: self.max_batch_tokens,
+            max_wait: self.max_wait,
+        }
+    }
 }
 
-/// Response: argmax continuation of the last position + mean next-token
-/// NLL over the sequence (the serving analogue of scoring).
-#[derive(Clone, Debug)]
-pub struct Response {
-    pub next_token: u32,
-    pub mean_nll: f64,
-    pub latency: Duration,
+/// Everything the online loop needs beyond the static-plan server: the
+/// workload-independent replanner and the calibration frequency vector
+/// that seeds the drift baseline.
+pub struct OnlineConfig {
+    pub replanner: Replanner,
+    /// Per-layer routed-expert calibration frequencies
+    /// ([`crate::alloc::activation_frequencies`]).
+    pub baseline: Vec<Vec<f64>>,
+    /// Telemetry EWMA step; `None` keeps the engine default.
+    pub ewma_alpha: Option<f64>,
 }
 
 /// Handle to a running server thread.
@@ -62,13 +84,25 @@ pub struct ServerReport {
     pub throughput_tps: f64,
     pub p50_latency_s: f64,
     pub p99_latency_s: f64,
+    pub p50_queue_wait_s: f64,
     pub expert_calls: usize,
     pub padding_ratio: f64,
+    /// Deepest admission queue observed at a batch cut.
+    pub max_queue_depth: usize,
+    /// Drift-triggered MCKP re-solves (0 for static-plan serving).
+    pub replans: usize,
+    /// Expert slots hot-swapped to a new runtime family.
+    pub swaps: usize,
+    /// Telemetry drift at the last check.
+    pub last_drift: f64,
+    /// Final plan generation (0 = the boot plan served throughout).
+    pub generation: u64,
 }
 
 impl Server {
-    /// Start the server thread: loads weights, builds the engine with the
-    /// given allocation, then serves until the request channel closes.
+    /// Start a static-plan server thread: loads weights, builds the engine
+    /// with the given allocation, then serves until the request channel
+    /// closes.
     pub fn start(
         cfg: ModelConfig,
         weights_path: PathBuf,
@@ -76,22 +110,63 @@ impl Server {
         allocation: Allocation,
         serve_cfg: ServeConfig,
     ) -> Result<Server> {
+        Server::spawn(cfg, weights_path, artifacts, allocation, serve_cfg, None)
+    }
+
+    /// Start a server with the online re-allocation loop enabled: live
+    /// activation telemetry is compared against `online.baseline`, and on
+    /// drift the precision plan is re-solved and hot-swapped without
+    /// dropping queued requests.
+    pub fn start_online(
+        cfg: ModelConfig,
+        weights_path: PathBuf,
+        artifacts: PathBuf,
+        allocation: Allocation,
+        serve_cfg: ServeConfig,
+        online: OnlineConfig,
+    ) -> Result<Server> {
+        Server::spawn(cfg, weights_path, artifacts, allocation, serve_cfg, Some(online))
+    }
+
+    fn spawn(
+        cfg: ModelConfig,
+        weights_path: PathBuf,
+        artifacts: PathBuf,
+        allocation: Allocation,
+        serve_cfg: ServeConfig,
+        online: Option<OnlineConfig>,
+    ) -> Result<Server> {
         let (tx, rx) = mpsc::channel::<Request>();
         let handle = thread::spawn(move || {
             let weights = MxtFile::load(&weights_path).expect("load weights");
             let lm = MoeLm::load_mxt(&cfg, &weights).expect("build model");
             let mut engine =
                 ServingEngine::new(lm, &artifacts, &allocation).expect("build engine");
-            serve_loop(&mut engine, rx, &serve_cfg);
-            let lat = engine.metrics.latency_summary();
+            let replanner = online.map(|o| {
+                engine.set_baseline(o.baseline);
+                if let Some(a) = o.ewma_alpha {
+                    engine.set_telemetry_alpha(a);
+                }
+                o.replanner
+            });
+            serve_loop(&mut engine, rx, &serve_cfg, replanner.as_ref());
+            let m = engine.metrics();
+            let lat = m.latency_summary();
+            let qw = m.queue_wait_summary();
             ServerReport {
-                requests: engine.metrics.requests,
-                tokens: engine.metrics.tokens,
-                throughput_tps: engine.metrics.throughput_tps(),
+                requests: m.requests,
+                tokens: m.tokens,
+                throughput_tps: m.throughput_tps(),
                 p50_latency_s: lat.as_ref().map(|s| s.p50).unwrap_or(0.0),
                 p99_latency_s: lat.as_ref().map(|s| s.p99).unwrap_or(0.0),
-                expert_calls: engine.metrics.expert_calls,
-                padding_ratio: engine.metrics.padding_ratio(),
+                p50_queue_wait_s: qw.as_ref().map(|s| s.p50).unwrap_or(0.0),
+                expert_calls: m.expert_calls,
+                padding_ratio: m.padding_ratio(),
+                max_queue_depth: m.max_queue_depth,
+                replans: m.replans,
+                swaps: m.swaps,
+                last_drift: m.last_drift,
+                generation: engine.generation(),
             }
         });
         Ok(Server { tx, handle: Some(handle) })
@@ -113,41 +188,85 @@ impl Server {
     }
 }
 
-fn serve_loop(engine: &mut ServingEngine, rx: mpsc::Receiver<Request>, cfg: &ServeConfig) {
+fn serve_loop(
+    engine: &mut ServingEngine,
+    rx: mpsc::Receiver<Request>,
+    cfg: &ServeConfig,
+    replanner: Option<&Replanner>,
+) {
+    let mut batcher = ContinuousBatcher::new(cfg.policy());
+    let mut closed = false;
     loop {
-        // block for the first request of the batch
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // channel closed
-        };
-        let mut batch = vec![first];
-        // drain whatever is already queued (requests that arrived while the
-        // previous batch was executing must not serve as singletons — §Perf)
-        while batch.len() < cfg.max_batch_seqs {
-            match rx.try_recv() {
-                Ok(r) => batch.push(r),
-                Err(_) => break,
+        // admit: block for the first request only when nothing is queued
+        if batcher.depth() == 0 {
+            if closed {
+                return;
+            }
+            match rx.recv() {
+                Ok(r) => batcher.push(r),
+                Err(_) => return, // channel closed, queue drained
             }
         }
-        // then wait up to max_wait from *now* for stragglers
-        if batch.len() < cfg.max_batch_seqs {
-            let deadline = Instant::now() + cfg.max_wait;
-            while batch.len() < cfg.max_batch_seqs {
+        if !closed {
+            // drain whatever is already queued (requests that arrived while
+            // the previous batch was executing must not serve as singletons
+            // — §Perf)
+            loop {
+                match rx.try_recv() {
+                    Ok(r) => batcher.push(r),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            }
+            // then wait for stragglers until a cut condition holds
+            while !closed && !batcher.ready(Instant::now()) {
+                let deadline = batcher.oldest_deadline().expect("non-empty queue");
                 let left = deadline.saturating_duration_since(Instant::now());
                 if left.is_zero() {
                     break;
                 }
                 match rx.recv_timeout(left) {
-                    Ok(r) => batch.push(r),
-                    Err(_) => break,
+                    Ok(r) => batcher.push(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        closed = true;
+                        break;
+                    }
                 }
             }
         }
+        engine.metrics_mut().note_queue_depth(batcher.depth());
+        let batch = batcher.take_batch();
+        if batch.is_empty() {
+            continue;
+        }
         process_batch(engine, batch);
+        // the online loop runs strictly between batches: in-flight work
+        // always completes on the generation it started on
+        if let Some(rp) = replanner {
+            match engine.maybe_replan(rp) {
+                Ok(Some(outcome)) => {
+                    eprintln!(
+                        "replan: drift {:.3} → {} slot(s) changed, {} swapped (gen {})",
+                        outcome.drift,
+                        outcome.changes,
+                        outcome.swapped,
+                        engine.generation()
+                    );
+                }
+                Ok(None) => {}
+                Err(e) => eprintln!("replan failed (serving continues on old plan): {e:#}"),
+            }
+        }
     }
 }
 
 fn process_batch(engine: &mut ServingEngine, batch: Vec<Request>) {
+    let cut_at = Instant::now();
+    let generation = engine.generation();
     let seqs: Vec<&[u32]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
     match engine.forward_batch(&seqs) {
         Ok(logits_batch) => {
@@ -170,13 +289,16 @@ fn process_batch(engine: &mut ServingEngine, batch: Vec<Request>) {
                     nll -= (logits.at(pos, req.tokens[pos + 1] as usize) as f64 - m) - z.ln();
                 }
                 let latency = req.arrived.elapsed();
-                engine
-                    .metrics
-                    .record_request(latency.as_secs_f64(), req.tokens.len());
+                let queue_wait = cut_at.saturating_duration_since(req.arrived);
+                let metrics = engine.metrics_mut();
+                metrics.record_request(latency.as_secs_f64(), req.tokens.len());
+                metrics.record_queue_wait(queue_wait.as_secs_f64());
                 let _ = req.reply.send(Response {
                     next_token: best as u32,
                     mean_nll: nll / (t - 1).max(1) as f64,
                     latency,
+                    queue_wait,
+                    generation,
                 });
             }
         }

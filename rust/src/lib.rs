@@ -13,6 +13,7 @@ pub mod sim;
 pub mod coordinator;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod ser;
 pub mod tensor;
 pub mod util;

@@ -1,0 +1,130 @@
+//! Hot-swapping expert runtime schemes behind a generation counter.
+//!
+//! A delta plan from the replanner names the `(layer, expert)` slots whose
+//! runtime family changed. Applying it re-prepares *only* those slots'
+//! weight literals (via [`crate::runtime::expert_weights`]) — the rest of
+//! the table is untouched, so a swap costs O(changed experts), not a full
+//! engine rebuild. Preparation is two-phase: every changed slot is
+//! re-quantized first, and only if all succeed is the table mutated and
+//! the generation bumped — a failed swap leaves the serving plan intact.
+//!
+//! The engine processes batches serially, and swaps are applied strictly
+//! between batches, so a batch always runs entirely on one generation:
+//! requests in flight when the delta lands finish on the old plan, and the
+//! generation stamped into each response records which plan served it.
+
+use anyhow::Result;
+
+use crate::alloc::Allocation;
+use crate::moe::MoeLm;
+use crate::runtime::{PreparedExpert, RuntimeScheme};
+
+/// One slot's scheme transition in a delta plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotChange {
+    /// MoE-block position (index into the engine's slot table, not the
+    /// transformer layer index).
+    pub block_pos: usize,
+    pub expert: usize,
+    pub old: RuntimeScheme,
+    pub new: RuntimeScheme,
+}
+
+/// Per-(MoE-layer, expert) runtime assignment + prepared weight literals.
+pub struct ExpertSlot {
+    pub scheme: RuntimeScheme,
+    pub prepared: PreparedExpert,
+    /// Generation at which this slot's literals were (re-)prepared.
+    pub generation: u64,
+}
+
+/// The engine's live expert table: `slots[block_pos][expert]`, routed then
+/// shared per MoE layer, plus the plan generation counter.
+pub struct SlotTable {
+    slots: Vec<Vec<ExpertSlot>>,
+    generation: u64,
+}
+
+impl SlotTable {
+    /// Quantize + lay out every expert per the allocation (generation 0).
+    /// The allocated (possibly per-linear) schemes map to the expert's
+    /// runtime family via the gate linear — runtime executables are
+    /// per-expert uniform; per-linear mixing within an expert is an
+    /// accuracy-side refinement.
+    pub fn build(lm: &MoeLm, allocation: &Allocation) -> Result<SlotTable> {
+        let mut slots = Vec::new();
+        for (pos, (_, block)) in lm.moe_blocks().iter().enumerate() {
+            let mut layer_slots = Vec::new();
+            for e in 0..block.total_experts() {
+                let scheme = RuntimeScheme::from_quant(&allocation.schemes[pos][e][0]);
+                let prepared = PreparedExpert::prepare(block.expert_at(e), scheme)?;
+                layer_slots.push(ExpertSlot { scheme, prepared, generation: 0 });
+            }
+            slots.push(layer_slots);
+        }
+        Ok(SlotTable { slots, generation: 0 })
+    }
+
+    pub fn slot(&self, block_pos: usize, expert: usize) -> &ExpertSlot {
+        &self.slots[block_pos][expert]
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Scheme histogram for reporting.
+    pub fn scheme_counts(&self) -> Vec<(RuntimeScheme, usize)> {
+        let mut counts = Vec::new();
+        for s in RuntimeScheme::ALL {
+            let n = self
+                .slots
+                .iter()
+                .flat_map(|l| l.iter())
+                .filter(|slot| slot.scheme == s)
+                .count();
+            if n > 0 {
+                counts.push((s, n));
+            }
+        }
+        counts
+    }
+
+    /// Apply a delta plan: re-prepare exactly the changed slots, then bump
+    /// the generation. Returns the number of slots actually swapped.
+    /// No-op changes (`old == new`, or the slot already carries `new`) are
+    /// skipped; a preparation failure mutates nothing.
+    pub fn apply(&mut self, lm: &MoeLm, changes: &[SlotChange]) -> Result<usize> {
+        let blocks = lm.moe_blocks();
+        // phase 1: quantize + lay out all changed experts (fallible)
+        let mut staged: Vec<(usize, usize, RuntimeScheme, PreparedExpert)> = Vec::new();
+        for ch in changes {
+            let slot = &self.slots[ch.block_pos][ch.expert];
+            debug_assert_eq!(
+                slot.scheme, ch.old,
+                "delta plan raced: slot ({}, {}) is {:?}, delta expected {:?}",
+                ch.block_pos, ch.expert, slot.scheme, ch.old
+            );
+            if slot.scheme == ch.new {
+                continue;
+            }
+            let (_, block) = blocks[ch.block_pos];
+            let prepared = PreparedExpert::prepare(block.expert_at(ch.expert), ch.new)?;
+            staged.push((ch.block_pos, ch.expert, ch.new, prepared));
+        }
+        if staged.is_empty() {
+            return Ok(0);
+        }
+        // phase 2: install (infallible) under a fresh generation
+        self.generation += 1;
+        let swapped = staged.len();
+        for (pos, e, scheme, prepared) in staged {
+            self.slots[pos][e] = ExpertSlot { scheme, prepared, generation: self.generation };
+        }
+        Ok(swapped)
+    }
+}

@@ -1,0 +1,38 @@
+//! Online serving subsystem: continuous batching + live activation
+//! telemetry + dynamic precision re-allocation (DESIGN.md §Online-Serving).
+//!
+//! The offline half of MxMoE solves the precision allocation once against a
+//! fixed calibration trace; this module closes the co-design loop at serve
+//! time. Production routing distributions drift, and §3's insight — expert
+//! activation frequency shapes the optimal mixed-precision configuration —
+//! applies to the *live* workload, not the calibration snapshot:
+//!
+//! ```text
+//!           requests ──► [queue]  continuous batcher (tile-set-sized)
+//!                            │
+//!                            ▼
+//!                     engine forward  ──►  [telemetry]  EWMA per-(layer,
+//!                            │                expert) activation frequency
+//!                            │                        │ drift vs calibration
+//!                            ▼                        ▼
+//!                       responses            [replan]  warm-started MCKP
+//!                                             re-solve on live frequencies
+//!                                                     │ delta plan
+//!                                                     ▼
+//!                                            [hotswap]  re-prepare changed
+//!                                             expert slots, generation++
+//! ```
+//!
+//! The coordinator ([`crate::coordinator`]) is rewired on top of these
+//! pieces; everything here is engine-agnostic and unit-testable without a
+//! PJRT runtime.
+
+pub mod hotswap;
+pub mod queue;
+pub mod replan;
+pub mod telemetry;
+
+pub use hotswap::{SlotChange, SlotTable};
+pub use queue::{BatchPolicy, ContinuousBatcher, Request, Response};
+pub use replan::{diff_plans, ReplanConfig, ReplanOutcome, Replanner};
+pub use telemetry::ActivationTelemetry;

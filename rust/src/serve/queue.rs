@@ -1,0 +1,237 @@
+//! Admission queue + continuous batcher.
+//!
+//! Whole-sequence scoring requests are coalesced into token batches sized
+//! to the exported tile set ([`crate::runtime::TILE_MS`]): while one batch
+//! executes, arrivals accumulate here, and the next batch is cut along
+//! three axes — sequence cap, concatenated-token budget (default: the
+//! largest exported tile, so every MoE layer's concatenated dispatch fills
+//! whole tiles instead of padding a fresh one), and the oldest request's
+//! wait deadline. Requests are never dropped: a token-budget cut leaves the
+//! tail queued for the next batch, which is what makes the batcher
+//! "continuous" rather than a one-shot gather.
+//!
+//! The policy decisions are pure functions of (queue, now) so they unit-
+//! test without threads; the server loop in [`crate::coordinator::server`]
+//! owns the channel mechanics.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::runtime::TILE_MS;
+
+/// A scoring request: token sequence in, next-token prediction + NLL out.
+pub struct Request {
+    pub tokens: Vec<u32>,
+    pub reply: mpsc::Sender<Response>,
+    pub arrived: Instant,
+}
+
+/// Response: argmax continuation of the last position + mean next-token
+/// NLL over the sequence (the serving analogue of scoring).
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub next_token: u32,
+    pub mean_nll: f64,
+    /// End-to-end latency (admission → reply).
+    pub latency: Duration,
+    /// Time spent queued before the batch was cut.
+    pub queue_wait: Duration,
+    /// Plan generation that served this request (bumps on hot-swap).
+    pub generation: u64,
+}
+
+/// Batch-cut policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max sequences per batch.
+    pub max_seqs: usize,
+    /// Concatenated-token budget per batch (tile-set sizing).
+    pub max_tokens: usize,
+    /// Max time the oldest queued request may wait before the batch is cut.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_seqs: 8,
+            max_tokens: *TILE_MS.last().unwrap(),
+            max_wait: Duration::from_millis(20),
+        }
+    }
+}
+
+/// FIFO admission queue with tile-aware batch cutting.
+pub struct ContinuousBatcher {
+    policy: BatchPolicy,
+    pending: VecDeque<Request>,
+    /// Running token total of `pending` (keeps `ready()` O(1) under deep
+    /// backlogs).
+    pending_tokens: usize,
+}
+
+impl ContinuousBatcher {
+    pub fn new(policy: BatchPolicy) -> ContinuousBatcher {
+        assert!(policy.max_seqs >= 1);
+        assert!(policy.max_tokens >= 1);
+        ContinuousBatcher { policy, pending: VecDeque::new(), pending_tokens: 0 }
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    /// Admit a request (never blocks, never drops).
+    pub fn push(&mut self, r: Request) {
+        self.pending_tokens += r.tokens.len();
+        self.pending.push_back(r);
+    }
+
+    /// Queued sequence count.
+    pub fn depth(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Total queued tokens.
+    pub fn queued_tokens(&self) -> usize {
+        self.pending_tokens
+    }
+
+    /// When the oldest queued request's wait deadline expires.
+    pub fn oldest_deadline(&self) -> Option<Instant> {
+        self.pending.front().map(|r| r.arrived + self.policy.max_wait)
+    }
+
+    /// Should a batch be cut now? True when the sequence cap is reached,
+    /// the token budget is filled, or the oldest request has waited out
+    /// `max_wait`. An empty queue is never ready.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.pending.is_empty() {
+            return false;
+        }
+        self.pending.len() >= self.policy.max_seqs
+            || self.queued_tokens() >= self.policy.max_tokens
+            || self.oldest_deadline().map_or(false, |d| now >= d)
+    }
+
+    /// Cut a batch: FIFO prefix of the queue, stopping before the sequence
+    /// cap or token budget is exceeded. Always takes at least one request
+    /// (an oversized single sequence still has to run — the engine tiles
+    /// it), and leaves the rest queued for the next cut.
+    pub fn take_batch(&mut self) -> Vec<Request> {
+        let mut batch = Vec::new();
+        let mut tokens = 0usize;
+        while let Some(front) = self.pending.front() {
+            let t = front.tokens.len();
+            if !batch.is_empty() && tokens + t > self.policy.max_tokens {
+                break;
+            }
+            tokens += t;
+            self.pending_tokens -= t;
+            batch.push(self.pending.pop_front().unwrap());
+            if batch.len() >= self.policy.max_seqs {
+                break;
+            }
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(n_tokens: usize, arrived: Instant) -> Request {
+        // tests never send a reply, so the receiver can drop immediately
+        let (reply, _) = mpsc::channel();
+        Request { tokens: vec![0u32; n_tokens], reply, arrived }
+    }
+
+    fn policy(max_seqs: usize, max_tokens: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_seqs,
+            max_tokens,
+            max_wait: Duration::from_millis(wait_ms),
+        }
+    }
+
+    #[test]
+    fn empty_queue_is_never_ready() {
+        let b = ContinuousBatcher::new(BatchPolicy::default());
+        assert!(!b.ready(Instant::now()));
+        assert_eq!(b.depth(), 0);
+        assert_eq!(b.queued_tokens(), 0);
+        assert!(b.oldest_deadline().is_none());
+    }
+
+    #[test]
+    fn seq_cap_cuts_batch() {
+        let now = Instant::now();
+        let mut b = ContinuousBatcher::new(policy(3, 1_000_000, 1000));
+        for _ in 0..2 {
+            b.push(req(10, now));
+        }
+        assert!(!b.ready(now));
+        b.push(req(10, now));
+        assert!(b.ready(now));
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn token_budget_splits_fifo_without_dropping() {
+        let now = Instant::now();
+        let mut b = ContinuousBatcher::new(policy(100, 64, 1000));
+        for n in [24usize, 24, 24, 24] {
+            b.push(req(n, now));
+        }
+        assert!(b.ready(now), "96 tokens ≥ 64 budget");
+        assert_eq!(b.queued_tokens(), 96);
+        let first = b.take_batch();
+        // 24 + 24 = 48 fits; adding a third (72) would exceed 64
+        assert_eq!(first.len(), 2);
+        assert_eq!(b.depth(), 2, "tail stays queued, not dropped");
+        assert_eq!(b.queued_tokens(), 48, "running token counter tracks the tail");
+        let second = b.take_batch();
+        assert_eq!(second.len(), 2);
+        assert_eq!(b.depth(), 0);
+        assert_eq!(b.queued_tokens(), 0);
+    }
+
+    #[test]
+    fn oversized_single_request_still_runs() {
+        let now = Instant::now();
+        let mut b = ContinuousBatcher::new(policy(8, 64, 1000));
+        b.push(req(500, now));
+        assert!(b.ready(now), "token budget exceeded by a single sequence");
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 1, "must take at least one");
+        assert_eq!(batch[0].tokens.len(), 500);
+    }
+
+    #[test]
+    fn wait_deadline_cuts_partial_batch() {
+        let now = Instant::now();
+        let mut b = ContinuousBatcher::new(policy(8, 256, 20));
+        b.push(req(4, now));
+        assert!(!b.ready(now), "fresh request, under caps");
+        let later = now + Duration::from_millis(25);
+        assert!(b.ready(later), "oldest waited past max_wait");
+        assert_eq!(b.take_batch().len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let now = Instant::now();
+        let mut b = ContinuousBatcher::new(policy(2, 1_000_000, 1000));
+        for n in [1usize, 2, 3, 4] {
+            b.push(req(n, now));
+        }
+        let first = b.take_batch();
+        let second = b.take_batch();
+        assert_eq!(first.iter().map(|r| r.tokens.len()).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(second.iter().map(|r| r.tokens.len()).collect::<Vec<_>>(), vec![3, 4]);
+    }
+}

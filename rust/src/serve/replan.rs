@@ -1,0 +1,222 @@
+//! Drift-triggered incremental re-allocation.
+//!
+//! When live telemetry drifts past a threshold, the MCKP allocation
+//! (Eq. 7) is re-solved with the *live* activation frequencies as the
+//! runtime-model weights — the sensitivity table Δ and the memory budget
+//! are workload-independent and reused from calibration time, so a replan
+//! costs one near-linear MCKP solve, not a calibration pass. The solve is
+//! warm-started from the currently-serving plan
+//! ([`crate::alloc::solve_mckp_warm`]), which guarantees the new plan is
+//! never worse than the incumbent under the observed workload. The diff
+//! between old and new plans becomes a delta of [`SlotChange`]s for the
+//! hot-swapper.
+
+use anyhow::Result;
+
+use crate::alloc::{allocate_with_frequencies, Allocation, AllocatorConfig, SensitivityTable};
+use crate::costmodel::gpu::GpuSpec;
+use crate::moe::ModelConfig;
+use crate::quant::scheme::SchemeRegistry;
+use crate::runtime::RuntimeScheme;
+
+use super::hotswap::SlotChange;
+
+/// When and how aggressively to re-solve.
+#[derive(Clone, Debug)]
+pub struct ReplanConfig {
+    /// Total-variation drift that triggers a re-solve.
+    pub drift_threshold: f64,
+    /// Hysteresis: minimum routed token-assignments observed between
+    /// consecutive replans (prevents thrashing on noisy small batches).
+    pub min_tokens_between: usize,
+    /// Allocator settings for the re-solve (same `r`, budget and
+    /// granularity as the offline solve unless deliberately changed).
+    pub alloc: AllocatorConfig,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> Self {
+        ReplanConfig {
+            drift_threshold: 0.15,
+            min_tokens_between: 2048,
+            alloc: AllocatorConfig::default(),
+        }
+    }
+}
+
+/// Everything a re-solve needs that is workload-independent: the hardware
+/// model, the scheme registry and the calibration-time sensitivity table.
+pub struct Replanner {
+    pub gpu: GpuSpec,
+    pub registry: SchemeRegistry,
+    pub sens: SensitivityTable,
+    pub cfg: ReplanConfig,
+}
+
+impl Replanner {
+    /// Re-solve the allocation with live frequencies as weights, warm-
+    /// started from the currently-serving plan.
+    pub fn replan(
+        &self,
+        model: &ModelConfig,
+        freqs: &[Vec<f64>],
+        current: &Allocation,
+    ) -> Result<Allocation> {
+        allocate_with_frequencies(
+            model,
+            &self.gpu,
+            &self.registry,
+            &self.sens,
+            freqs,
+            &self.cfg.alloc,
+            Some(current),
+        )
+    }
+}
+
+/// What a triggered replan did (reported through the serving metrics).
+#[derive(Clone, Copy, Debug)]
+pub struct ReplanOutcome {
+    /// Drift score that triggered the re-solve.
+    pub drift: f64,
+    /// Slots whose runtime family changed (size of the delta plan).
+    pub changes: usize,
+    /// Slots actually re-prepared by the hot-swapper.
+    pub swapped: usize,
+}
+
+/// Diff two allocations at runtime-family granularity: one [`SlotChange`]
+/// per (layer, expert) whose serving executable family differs. Per-linear
+/// scheme changes that map to the same runtime family produce no change —
+/// the runtime serves families, not exact schemes.
+pub fn diff_plans(old: &Allocation, new: &Allocation) -> Vec<SlotChange> {
+    assert_eq!(old.schemes.len(), new.schemes.len(), "plan layer count mismatch");
+    let mut changes = Vec::new();
+    for (pos, (olds, news)) in old.schemes.iter().zip(&new.schemes).enumerate() {
+        assert_eq!(olds.len(), news.len(), "plan expert count mismatch at layer {pos}");
+        for (e, (o, n)) in olds.iter().zip(news).enumerate() {
+            let of = RuntimeScheme::from_quant(&o[0]);
+            let nf = RuntimeScheme::from_quant(&n[0]);
+            if of != nf {
+                changes.push(SlotChange { block_pos: pos, expert: e, old: of, new: nf });
+            }
+        }
+    }
+    changes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::Granularity;
+    use crate::quant::QuantScheme;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            vocab: 32,
+            hidden: 16,
+            layers: 2,
+            heads: 2,
+            n_experts: 4,
+            n_shared: 1,
+            topk: 2,
+            inter: 8,
+            dense_first: false,
+            seq_len: 12,
+        }
+    }
+
+    /// Sensitivity table with zero Δ everywhere (shape-only stand-in: the
+    /// replanner must not need a live calibration pass).
+    fn zero_sens(cfg: &ModelConfig, registry: &SchemeRegistry) -> SensitivityTable {
+        let schemes: Vec<QuantScheme> =
+            registry.schemes.iter().copied().filter(|s| !s.is_fp16()).collect();
+        let total = cfg.n_experts + cfg.n_shared;
+        let n_blocks = cfg.moe_layers().len();
+        SensitivityTable {
+            delta: (0..n_blocks)
+                .map(|_| {
+                    (0..total)
+                        .map(|_| {
+                            [
+                                vec![0.0; schemes.len()],
+                                vec![0.0; schemes.len()],
+                                vec![0.0; schemes.len()],
+                            ]
+                        })
+                        .collect()
+                })
+                .collect(),
+            schemes,
+        }
+    }
+
+    fn replanner(cfg: &ModelConfig) -> Replanner {
+        let registry = SchemeRegistry::weight_activation();
+        let sens = zero_sens(cfg, &registry);
+        Replanner {
+            gpu: GpuSpec::rtx4090(),
+            registry,
+            sens,
+            cfg: ReplanConfig {
+                drift_threshold: 0.1,
+                min_tokens_between: 0,
+                alloc: AllocatorConfig {
+                    r: 0.5,
+                    target_avg_bits: 6.0,
+                    granularity: Granularity::Expert,
+                    batch_tokens: 128,
+                },
+            },
+        }
+    }
+
+    #[test]
+    fn replan_produces_well_formed_allocation() {
+        let cfg = tiny_cfg();
+        let rp = replanner(&cfg);
+        let current = Allocation::uniform(&cfg, QuantScheme::W8A8);
+        let freqs = vec![vec![0.25; 4]; 2];
+        let plan = rp.replan(&cfg, &freqs, &current).unwrap();
+        assert_eq!(plan.layers, cfg.moe_layers());
+        assert_eq!(plan.schemes.len(), 2);
+        for layer in &plan.schemes {
+            assert_eq!(layer.len(), 5); // 4 routed + 1 shared
+        }
+        // budget respected: average bits within the 6-bit target + overhead
+        assert!(plan.avg_weight_bits(&cfg) <= 6.0 + 0.5);
+    }
+
+    #[test]
+    fn replan_warm_start_is_stable_under_unchanged_frequencies() {
+        // re-solving with the same frequencies as the incumbent plan must
+        // not oscillate: the warm start keeps the incumbent when it is
+        // still among the best candidates
+        let cfg = tiny_cfg();
+        let rp = replanner(&cfg);
+        let freqs = vec![vec![0.4, 0.4, 0.1, 0.1], vec![0.25; 4]];
+        let base = Allocation::uniform(&cfg, QuantScheme::W8A8);
+        let plan1 = rp.replan(&cfg, &freqs, &base).unwrap();
+        let plan2 = rp.replan(&cfg, &freqs, &plan1).unwrap();
+        assert!(diff_plans(&plan1, &plan2).is_empty(), "replan oscillated");
+    }
+
+    #[test]
+    fn diff_detects_family_changes_only() {
+        let cfg = tiny_cfg();
+        let a = Allocation::uniform(&cfg, QuantScheme::FP16);
+        let b = Allocation::uniform(&cfg, QuantScheme::W8A8);
+        let d = diff_plans(&a, &b);
+        assert_eq!(d.len(), 2 * 5, "every slot changes family");
+        for ch in &d {
+            assert_eq!(ch.old, RuntimeScheme::Fp16);
+            assert_eq!(ch.new, RuntimeScheme::W8A8);
+        }
+        assert!(diff_plans(&a, &a).is_empty());
+        // same runtime family, different exact scheme ⇒ no delta
+        let c1 = Allocation::uniform(&cfg, QuantScheme::W4A4);
+        let c2 = Allocation::uniform(&cfg, QuantScheme::W4A4G128);
+        assert!(diff_plans(&c1, &c2).is_empty());
+    }
+}

@@ -1,0 +1,243 @@
+//! Live activation telemetry: per-(layer, expert) routed-token frequency
+//! tracking with EWMA decay, plus drift detection against the calibration
+//! frequency vector the offline allocator was solved with.
+//!
+//! Drift is measured as total-variation distance `½ Σ |live − baseline|`
+//! per layer, so it lives in `[0, 1]` and grows monotonically as routing
+//! mass moves away from the calibration distribution — the trigger signal
+//! for the online MCKP re-solve ([`crate::serve::replan`]).
+
+/// Default EWMA step: each recorded batch moves the live estimate 10% of
+/// the way toward the batch's empirical frequency vector.
+pub const DEFAULT_EWMA_ALPHA: f64 = 0.1;
+
+/// Per-layer routed-expert frequency tracker.
+pub struct ActivationTelemetry {
+    /// EWMA step in `(0, 1]`: weight of the newest batch.
+    alpha: f64,
+    /// Calibration (or post-replan) reference distribution per layer.
+    baseline: Vec<Vec<f64>>,
+    /// EWMA of observed per-batch frequency vectors per layer.
+    live: Vec<Vec<f64>>,
+    /// Total routed token-assignments observed (drives replan hysteresis).
+    pub observed_tokens: usize,
+    /// Number of `record` calls that carried at least one assignment.
+    pub updates: usize,
+}
+
+/// Normalize counts to a distribution; all-zero input yields uniform.
+fn normalize(v: &[f64]) -> Vec<f64> {
+    let total: f64 = v.iter().sum();
+    if total <= 0.0 {
+        return vec![1.0 / v.len().max(1) as f64; v.len()];
+    }
+    v.iter().map(|&x| x / total).collect()
+}
+
+impl ActivationTelemetry {
+    /// Tracker seeded with per-layer baseline frequency vectors (normalized
+    /// internally). The live estimate starts at the baseline, so drift is 0
+    /// until real traffic arrives.
+    pub fn new(baseline: Vec<Vec<f64>>, alpha: f64) -> ActivationTelemetry {
+        assert!(alpha > 0.0 && alpha <= 1.0, "EWMA alpha must be in (0, 1]");
+        let baseline: Vec<Vec<f64>> = baseline.iter().map(|v| normalize(v)).collect();
+        ActivationTelemetry {
+            alpha,
+            live: baseline.clone(),
+            baseline,
+            observed_tokens: 0,
+            updates: 0,
+        }
+    }
+
+    /// Uniform baseline: no calibration vector available.
+    pub fn uniform(n_layers: usize, n_experts: usize, alpha: f64) -> ActivationTelemetry {
+        ActivationTelemetry::new(vec![vec![1.0; n_experts.max(1)]; n_layers], alpha)
+    }
+
+    /// Baseline from calibration activation counts.
+    pub fn from_counts(counts: &[Vec<usize>], alpha: f64) -> ActivationTelemetry {
+        ActivationTelemetry::new(
+            counts
+                .iter()
+                .map(|layer| layer.iter().map(|&c| c as f64).collect())
+                .collect(),
+            alpha,
+        )
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn set_alpha(&mut self, alpha: f64) {
+        assert!(alpha > 0.0 && alpha <= 1.0, "EWMA alpha must be in (0, 1]");
+        self.alpha = alpha;
+    }
+
+    /// Fold one batch's routed activation counts for layer `pos` into the
+    /// live estimate. Empty batches (no assignments) are no-ops.
+    pub fn record(&mut self, pos: usize, counts: &[usize]) {
+        let total: usize = counts.iter().sum();
+        if total == 0 {
+            return;
+        }
+        let live = &mut self.live[pos];
+        assert_eq!(live.len(), counts.len(), "expert count mismatch at layer {pos}");
+        for (l, &c) in live.iter_mut().zip(counts) {
+            let f = c as f64 / total as f64;
+            *l = (1.0 - self.alpha) * *l + self.alpha * f;
+        }
+        self.observed_tokens += total;
+        self.updates += 1;
+    }
+
+    /// Live frequency estimate for layer `pos`.
+    pub fn freqs(&self, pos: usize) -> &[f64] {
+        &self.live[pos]
+    }
+
+    /// All layers' live frequency vectors (the replanner's weight input).
+    pub fn live(&self) -> &[Vec<f64>] {
+        &self.live
+    }
+
+    pub fn baseline(&self, pos: usize) -> &[f64] {
+        &self.baseline[pos]
+    }
+
+    /// Total-variation distance between live and baseline at layer `pos`,
+    /// in `[0, 1]`.
+    pub fn drift(&self, pos: usize) -> f64 {
+        0.5 * self.live[pos]
+            .iter()
+            .zip(&self.baseline[pos])
+            .map(|(l, b)| (l - b).abs())
+            .sum::<f64>()
+    }
+
+    /// Worst-layer drift (the replan trigger).
+    pub fn max_drift(&self) -> f64 {
+        (0..self.live.len()).map(|p| self.drift(p)).fold(0.0, f64::max)
+    }
+
+    /// After a successful replan the live distribution becomes the new
+    /// reference: drift resets to 0 and accumulates against the plan that
+    /// is now actually serving.
+    pub fn rebaseline(&mut self) {
+        self.baseline = self.live.clone();
+    }
+
+    /// Replace both baseline and live estimate (engine startup with a
+    /// calibration vector).
+    pub fn reset(&mut self, baseline: Vec<Vec<f64>>) {
+        let baseline: Vec<Vec<f64>> = baseline.iter().map(|v| normalize(v)).collect();
+        self.live = baseline.clone();
+        self.baseline = baseline;
+        self.observed_tokens = 0;
+        self.updates = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_decay_math() {
+        // uniform baseline over 4 experts; hammer expert 0 with alpha = 0.5
+        let mut t = ActivationTelemetry::uniform(1, 4, 0.5);
+        assert_eq!(t.freqs(0), &[0.25; 4]);
+        t.record(0, &[8, 0, 0, 0]);
+        // 0.5·0.25 + 0.5·1.0 = 0.625
+        assert!((t.freqs(0)[0] - 0.625).abs() < 1e-12);
+        t.record(0, &[8, 0, 0, 0]);
+        // 0.5·0.625 + 0.5·1.0 = 0.8125
+        assert!((t.freqs(0)[0] - 0.8125).abs() < 1e-12);
+        // closed form after k identical updates: 1 − (1−α)^k · (1 − f₀)
+        let mut t2 = ActivationTelemetry::uniform(1, 4, 0.5);
+        for _ in 0..6 {
+            t2.record(0, &[8, 0, 0, 0]);
+        }
+        let expect = 1.0 - 0.5f64.powi(6) * 0.75;
+        assert!((t2.freqs(0)[0] - expect).abs() < 1e-12);
+        assert_eq!(t2.observed_tokens, 48);
+        assert_eq!(t2.updates, 6);
+    }
+
+    #[test]
+    fn live_estimate_stays_normalized() {
+        let mut t = ActivationTelemetry::uniform(2, 5, 0.3);
+        t.record(0, &[3, 1, 0, 0, 4]);
+        t.record(1, &[0, 0, 9, 1, 0]);
+        for pos in 0..2 {
+            let s: f64 = t.freqs(pos).iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "layer {pos} sum {s}");
+        }
+    }
+
+    #[test]
+    fn drift_zero_before_traffic_and_bounded() {
+        let t = ActivationTelemetry::from_counts(&[vec![10, 30, 60]], 0.2);
+        assert_eq!(t.drift(0), 0.0);
+        let mut t = t;
+        for _ in 0..200 {
+            t.record(0, &[100, 0, 0]);
+        }
+        let d = t.drift(0);
+        assert!(d > 0.0 && d <= 1.0, "{d}");
+        // converged to one-hot: TV distance to [0.1, 0.3, 0.6] is 0.9
+        assert!((d - 0.9).abs() < 1e-6, "{d}");
+    }
+
+    #[test]
+    fn drift_score_monotone_as_mass_moves_away() {
+        // keep recording a distribution progressively further from the
+        // baseline; each EWMA step must increase drift
+        let mut t = ActivationTelemetry::from_counts(&[vec![50, 50, 0, 0]], 0.25);
+        let mut last = t.drift(0);
+        for _ in 0..20 {
+            t.record(0, &[0, 0, 50, 50]);
+            let d = t.drift(0);
+            assert!(d > last, "drift not monotone: {d} after {last}");
+            last = d;
+        }
+        assert_eq!(t.max_drift(), t.drift(0));
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let mut t = ActivationTelemetry::uniform(1, 3, 0.5);
+        let before = t.freqs(0).to_vec();
+        t.record(0, &[0, 0, 0]);
+        assert_eq!(t.freqs(0), before.as_slice());
+        assert_eq!(t.updates, 0);
+    }
+
+    #[test]
+    fn rebaseline_resets_drift() {
+        let mut t = ActivationTelemetry::uniform(1, 4, 0.5);
+        for _ in 0..5 {
+            t.record(0, &[9, 1, 0, 0]);
+        }
+        assert!(t.drift(0) > 0.1);
+        t.rebaseline();
+        assert_eq!(t.drift(0), 0.0);
+        // and keeps tracking from the new reference
+        t.record(0, &[0, 0, 0, 9]);
+        assert!(t.drift(0) > 0.0);
+    }
+
+    #[test]
+    fn max_drift_picks_worst_layer() {
+        let mut t = ActivationTelemetry::uniform(3, 4, 1.0);
+        t.record(1, &[10, 0, 0, 0]); // alpha 1.0: live jumps to one-hot
+        assert!((t.max_drift() - t.drift(1)).abs() < 1e-12);
+        assert_eq!(t.drift(0), 0.0);
+        assert_eq!(t.drift(2), 0.0);
+    }
+}

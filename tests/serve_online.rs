@@ -1,0 +1,136 @@
+//! Integration: hot-swap correctness — swapping expert runtime schemes in
+//! a live engine must be indistinguishable from building a fresh engine on
+//! the new plan.
+
+use std::path::PathBuf;
+
+use mxmoe::alloc::Allocation;
+use mxmoe::coordinator::ServingEngine;
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::quant::QuantScheme;
+use mxmoe::runtime::RuntimeScheme;
+use mxmoe::serve::diff_plans;
+use mxmoe::tensor::Matrix;
+use mxmoe::util::Rng;
+
+const MODEL_SEED: u64 = 0x5A0_11E;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Serving-shape model (hidden=128, inter=64 — what the AOT export ships).
+fn serving_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "hotswap-test".into(),
+        vocab: 64,
+        hidden: 128,
+        layers: 2,
+        heads: 4,
+        n_experts: 4,
+        n_shared: 1,
+        topk: 2,
+        inter: 64,
+        dense_first: false,
+        seq_len: 16,
+    }
+}
+
+fn model() -> MoeLm {
+    MoeLm::random(&serving_cfg(), &mut Rng::new(MODEL_SEED))
+}
+
+fn probe_batch(cfg: &ModelConfig, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed);
+    (0..3)
+        .map(|_| (0..cfg.seq_len).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect()
+}
+
+fn forward(engine: &mut ServingEngine, batch: &[Vec<u32>]) -> Vec<Matrix> {
+    let refs: Vec<&[u32]> = batch.iter().map(|s| s.as_slice()).collect();
+    engine.forward_batch(&refs).expect("forward")
+}
+
+fn assert_bit_identical(a: &[Matrix], b: &[Matrix], what: &str) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!((x.rows, x.cols), (y.rows, y.cols));
+        for (u, v) in x.data.iter().zip(&y.data) {
+            assert!(u.to_bits() == v.to_bits(), "{what}: seq {i} diverged");
+        }
+    }
+}
+
+#[test]
+fn hot_swap_matches_fresh_engine_bit_for_bit() {
+    if !artifacts().join("expert_ffn_fp16_m16.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = serving_cfg();
+    let plan_a = Allocation::uniform(&cfg, QuantScheme::FP16);
+    let plan_b = Allocation::uniform(&cfg, QuantScheme::W8A8);
+    let batch = probe_batch(&cfg, 1);
+
+    let mut engine = ServingEngine::new(model(), &artifacts(), &plan_a).unwrap();
+    assert_eq!(engine.generation(), 0);
+    let out_a = forward(&mut engine, &batch);
+
+    // swap every slot FP16 → W8A8
+    let changes = diff_plans(&plan_a, &plan_b);
+    assert_eq!(changes.len(), 2 * 5, "2 layers × (4 routed + 1 shared)");
+    let swapped = engine.install_plan(plan_b.clone(), &changes).unwrap();
+    assert_eq!(swapped, changes.len());
+    assert_eq!(engine.generation(), 1);
+    assert_eq!(engine.scheme_of(0, 0), RuntimeScheme::W8A8);
+    assert_eq!(engine.metrics().swaps, swapped);
+
+    let out_swapped = forward(&mut engine, &batch);
+    // quantization must actually have changed the computation
+    assert!(
+        out_a.iter().zip(&out_swapped).any(|(x, y)| x.data != y.data),
+        "W8A8 swap produced identical outputs to fp16 — swap was a no-op"
+    );
+
+    // a fresh engine built directly on plan B must agree bit-for-bit
+    let mut fresh = ServingEngine::new(model(), &artifacts(), &plan_b).unwrap();
+    let out_fresh = forward(&mut fresh, &batch);
+    assert_bit_identical(&out_swapped, &out_fresh, "swapped vs fresh(plan B)");
+}
+
+#[test]
+fn swap_back_restores_original_outputs() {
+    if !artifacts().join("expert_ffn_fp16_m16.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = serving_cfg();
+    let plan_a = Allocation::uniform(&cfg, QuantScheme::W4A16);
+    let plan_b = Allocation::uniform(&cfg, QuantScheme::W4A4);
+    let batch = probe_batch(&cfg, 2);
+
+    let mut engine = ServingEngine::new(model(), &artifacts(), &plan_a).unwrap();
+    let out_a = forward(&mut engine, &batch);
+    engine.install_plan(plan_b.clone(), &diff_plans(&plan_a, &plan_b)).unwrap();
+    forward(&mut engine, &batch);
+    engine.install_plan(plan_a.clone(), &diff_plans(&plan_b, &plan_a)).unwrap();
+    assert_eq!(engine.generation(), 2);
+    let out_back = forward(&mut engine, &batch);
+    assert_bit_identical(&out_a, &out_back, "A → B → A roundtrip");
+}
+
+#[test]
+fn empty_delta_is_a_noop() {
+    if !artifacts().join("expert_ffn_fp16_m16.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = serving_cfg();
+    let plan = Allocation::uniform(&cfg, QuantScheme::FP16);
+    let mut engine = ServingEngine::new(model(), &artifacts(), &plan).unwrap();
+    let swapped = engine.install_plan(plan.clone(), &diff_plans(&plan, &plan)).unwrap();
+    assert_eq!(swapped, 0);
+    assert_eq!(engine.generation(), 0, "no-op delta must not bump the generation");
+    assert_eq!(engine.metrics().swaps, 0);
+}

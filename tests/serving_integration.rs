@@ -82,7 +82,7 @@ fn serve_fp16_matches_native_forward() {
         weights_path.clone(),
         artifacts(),
         Allocation::uniform(&cfg, QuantScheme::FP16),
-        ServeConfig { max_batch_seqs: 4, max_wait: Duration::from_millis(5) },
+        ServeConfig { max_batch_seqs: 4, max_wait: Duration::from_millis(5), ..Default::default() },
     )
     .unwrap();
 
