@@ -1,0 +1,232 @@
+//! §GroupGEMM-Dispatch — sequential vs grouped wave dispatch, closed loop.
+//!
+//! Scenario: a serving-shape model carries a mixed-precision plan that
+//! spreads all four runtime families across the expert grid, so every MoE
+//! block dispatch plans ≥ 4 distinct-executable waves. The same request
+//! stream is served twice — once with the legacy expert-at-a-time loop,
+//! once with grouped wave dispatch — and the bench reports wall-clock,
+//! per-wave occupancy/fill, and the speedup (target: ≥ 1.5×). Outputs are
+//! checked bit-for-bit between the two modes before timing counts.
+//!
+//! Also runs the `lit_f32` micro-guard: the bulk-copy literal payload must
+//! not regress back to per-element conversion speed. Results land in
+//! `BENCH_group_dispatch.json`.
+//!
+//! `--smoke` shrinks repetitions for CI and skips the speedup assertion
+//! (shared runners have unpredictable core counts); the micro-guard is
+//! enforced in both modes.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+use mxmoe::alloc::Allocation;
+use mxmoe::coordinator::ServingEngine;
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::quant::QuantScheme;
+use mxmoe::runtime::{lit_f32, DispatchMode};
+use mxmoe::ser::Json;
+use mxmoe::tensor::Matrix;
+use mxmoe::util::Rng;
+
+const MODEL_SEED: u64 = 0x9805_D15B;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Serving-shape model (hidden=128, inter=64 — what the AOT export ships).
+fn serving_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "group-dispatch-bench".into(),
+        vocab: 64,
+        hidden: 128,
+        layers: 2,
+        heads: 4,
+        n_experts: 4,
+        n_shared: 1,
+        topk: 2,
+        inter: 64,
+        dense_first: false,
+        seq_len: 16,
+    }
+}
+
+/// All four runtime families live in every block.
+fn mixed_plan(cfg: &ModelConfig) -> Allocation {
+    let fams =
+        [QuantScheme::FP16, QuantScheme::W4A16, QuantScheme::W8A8, QuantScheme::W4A4];
+    let mut plan = Allocation::uniform(cfg, QuantScheme::FP16);
+    for (pos, block) in plan.schemes.iter_mut().enumerate() {
+        for (e, schemes) in block.iter_mut().enumerate() {
+            *schemes = [fams[(pos + e) % fams.len()]; 3];
+        }
+    }
+    plan
+}
+
+/// One batch = 340 concatenated MoE rows (256 + 64 + 16 + 4): every
+/// exported tile size appears, each routed expert decomposes into several
+/// tiles, and the four families produce well over 4 waves per block.
+fn batch(cfg: &ModelConfig, rng: &mut Rng) -> Vec<Vec<u32>> {
+    [256usize, 64, 16, 4]
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect()
+}
+
+fn run_mode(
+    engine: &mut ServingEngine,
+    mode: DispatchMode,
+    batches: &[Vec<Vec<u32>>],
+) -> Result<(f64, usize, Vec<Matrix>)> {
+    engine.set_dispatch_mode(mode);
+    // warmup pass (executable cache, allocator warm paths), output discarded
+    let refs: Vec<&[u32]> = batches[0].iter().map(|s| s.as_slice()).collect();
+    engine.forward_batch(&refs)?;
+    let mut last = Vec::new();
+    let mut tokens = 0usize;
+    let start = Instant::now();
+    for b in batches {
+        let refs: Vec<&[u32]> = b.iter().map(|s| s.as_slice()).collect();
+        last = engine.forward_batch(&refs)?;
+        tokens += refs.iter().map(|s| s.len()).sum::<usize>();
+    }
+    Ok((start.elapsed().as_secs_f64(), tokens, last))
+}
+
+/// Micro-guard: bulk-copy literal payload vs the per-element conversion it
+/// replaced. Returns (bulk_ns, per_element_ns) per 256×128 literal.
+fn lit_micro_guard(iters: usize) -> Result<(f64, f64)> {
+    let mut rng = Rng::new(0x117F_32);
+    let tile = Matrix::randn(256, 128, 1.0, &mut rng);
+    let dims = [tile.rows, tile.cols];
+
+    let start = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(lit_f32(&dims, &tile.data)?);
+    }
+    let bulk_ns = start.elapsed().as_secs_f64() * 1e9 / iters as f64;
+
+    let start = Instant::now();
+    for _ in 0..iters {
+        // the old per-element path, verbatim
+        let bytes: Vec<u8> = tile.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::hint::black_box(
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &dims,
+                &bytes,
+            )
+            .map_err(|e| anyhow::anyhow!("lit: {e}"))?,
+        );
+    }
+    let per_element_ns = start.elapsed().as_secs_f64() * 1e9 / iters as f64;
+    Ok((bulk_ns, per_element_ns))
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    // ---- micro-guard (no artifacts needed) ----
+    let (bulk_ns, per_ns) = lit_micro_guard(if smoke { 100 } else { 2000 })?;
+    println!("# §GroupGEMM-Dispatch — grouped wave dispatch vs sequential");
+    println!("lit_f32 256×128: bulk {bulk_ns:>10.0} ns | per-element {per_ns:>10.0} ns | ratio {:.2}×", per_ns / bulk_ns);
+    assert!(
+        bulk_ns <= per_ns * 1.2,
+        "bulk literal build ({bulk_ns:.0} ns) regressed vs per-element ({per_ns:.0} ns)"
+    );
+
+    let mut results = vec![
+        ("lit_f32_bulk_ns", Json::num(bulk_ns)),
+        ("lit_f32_per_element_ns", Json::num(per_ns)),
+        ("smoke", Json::Bool(smoke)),
+    ];
+
+    if !artifacts().join("expert_ffn_fp16_m16.hlo.txt").exists() {
+        eprintln!("skipping dispatch bench: artifacts not built (run `make artifacts`)");
+        std::fs::write(
+            "BENCH_group_dispatch.json",
+            Json::obj(results.iter().map(|(k, v)| (*k, v.clone())).collect()).pretty(),
+        )?;
+        return Ok(());
+    }
+
+    // ---- macro bench: same stream, both modes ----
+    let cfg = serving_cfg();
+    let plan = mixed_plan(&cfg);
+    let lm = MoeLm::random(&cfg, &mut Rng::new(MODEL_SEED));
+    let mut engine = ServingEngine::new(lm, &artifacts(), &plan)?;
+
+    let mut rng = Rng::new(0xD15B);
+    let reps = if smoke { 3 } else { 24 };
+    let batches: Vec<Vec<Vec<u32>>> = (0..reps).map(|_| batch(&cfg, &mut rng)).collect();
+
+    let (seq_s, tokens, out_seq) = run_mode(&mut engine, DispatchMode::Sequential, &batches)?;
+    let (grp_s, _, out_grp) = run_mode(&mut engine, DispatchMode::Grouped, &batches)?;
+
+    // timing only counts if the two paths agree bit-for-bit
+    for (a, b) in out_seq.iter().zip(&out_grp) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!(x.to_bits() == y.to_bits(), "grouped diverged from sequential");
+        }
+    }
+
+    let m = engine.metrics();
+    let speedup = seq_s / grp_s;
+    let waves_per_dispatch = m.waves as f64 / m.grouped_dispatches.max(1) as f64;
+    println!(
+        "| sequential | {tokens} tok | {seq_s:>8.3} s | {:>9.1} tok/s |",
+        tokens as f64 / seq_s
+    );
+    println!(
+        "| grouped    | {tokens} tok | {grp_s:>8.3} s | {:>9.1} tok/s | {:.1} waves/dispatch | max {} in flight | fill {:.3} |",
+        tokens as f64 / grp_s,
+        waves_per_dispatch,
+        m.max_concurrent_waves,
+        m.wave_fill_ratio()
+    );
+    for (scheme, s) in m.scheme_wave_stats() {
+        println!(
+            "|   wave[{scheme:>5}] | {:>4} waves | {:>5} tiles | fill {:.3} | busy {:.3} s |",
+            s.waves,
+            s.items,
+            s.fill_ratio(),
+            s.busy_s
+        );
+    }
+    println!("speedup: {speedup:.2}×");
+
+    assert!(
+        m.max_concurrent_waves >= 4,
+        "mixed plan exposed only {} concurrent waves — not a GroupGEMM scenario",
+        m.max_concurrent_waves
+    );
+    if !smoke {
+        assert!(
+            speedup >= 1.5,
+            "grouped dispatch speedup {speedup:.2}× below the 1.5× acceptance bar"
+        );
+    }
+
+    results.extend([
+        ("tokens_per_mode", Json::num(tokens as f64)),
+        ("sequential_s", Json::num(seq_s)),
+        ("grouped_s", Json::num(grp_s)),
+        ("speedup", Json::num(speedup)),
+        ("waves_per_dispatch", Json::num(waves_per_dispatch)),
+        ("max_concurrent_waves", Json::num(m.max_concurrent_waves as f64)),
+        ("wave_fill_ratio", Json::num(m.wave_fill_ratio())),
+        (
+            "p50_wave_s",
+            Json::num(m.wave_latency_summary().map(|s| s.p50).unwrap_or(0.0)),
+        ),
+    ]);
+    std::fs::write(
+        "BENCH_group_dispatch.json",
+        Json::obj(results.iter().map(|(k, v)| (*k, v.clone())).collect()).pretty(),
+    )?;
+    println!("\nwrote BENCH_group_dispatch.json");
+    Ok(())
+}

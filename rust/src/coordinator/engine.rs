@@ -10,12 +10,17 @@ use anyhow::Result;
 
 use crate::alloc::Allocation;
 use crate::moe::block::MoeBlock;
+use crate::moe::router::Routing;
 use crate::moe::{route, ModelConfig, MoeLm};
-use crate::runtime::{tile_decompose, Runtime, RuntimeScheme};
+use crate::runtime::dispatch::{self, ExpertInput};
+use crate::runtime::{
+    tile_decompose, DispatchMode, DispatchPlan, ExpertWork, Runtime, RuntimeScheme,
+};
 use crate::serve::replan::{diff_plans, ReplanOutcome, Replanner};
 use crate::serve::telemetry::{ActivationTelemetry, DEFAULT_EWMA_ALPHA};
 use crate::serve::{SlotChange, SlotTable};
 use crate::tensor::Matrix;
+use crate::util::threadpool::default_threads;
 
 use super::metrics::Metrics;
 
@@ -28,35 +33,39 @@ pub struct ExpertDispatcher {
     slots: SlotTable,
     pub metrics: Metrics,
     pub telemetry: ActivationTelemetry,
+    mode: DispatchMode,
+    threads: usize,
 }
 
 impl ExpertDispatcher {
     /// Run one expert's FFN over `m` rows via PJRT, chunking into the
-    /// exported tile sizes and cropping padding.
+    /// exported tile sizes and cropping padding (the sequential reference
+    /// path — the grouped pipeline must match it bit-for-bit).
     fn run_expert(&mut self, block_pos: usize, expert: usize, x: &Matrix) -> Result<Matrix> {
+        // resolve the slot once per expert, not once per tile
         let slot = self.slots.slot(block_pos, expert);
         let scheme = slot.scheme;
+        let literals = &slot.prepared.literals;
         let hidden = x.cols;
         let mut out = Matrix::zeros(x.rows, hidden);
         let mut r0 = 0;
+        let mut calls = 0usize;
+        let mut padded = 0usize;
         for tile_m in tile_decompose(x.rows) {
             let rows = (x.rows - r0).min(tile_m);
             // pad to tile_m
             let mut xt = Matrix::zeros(tile_m, hidden);
             xt.data[..rows * hidden].copy_from_slice(&x.data[r0 * hidden..(r0 + rows) * hidden]);
-            let y = self.runtime.run_expert_ffn(
-                scheme,
-                tile_m,
-                &xt,
-                &self.slots.slot(block_pos, expert).prepared.literals,
-            )?;
+            let y = self.runtime.run_expert_ffn(scheme, tile_m, &xt, literals)?;
             out.data[r0 * hidden..(r0 + rows) * hidden]
                 .copy_from_slice(&y.data[..rows * hidden]);
-            self.metrics.expert_calls += 1;
-            self.metrics.padded_tokens += tile_m;
-            self.metrics.useful_rows += rows;
+            calls += 1;
+            padded += tile_m;
             r0 += rows;
         }
+        self.metrics.expert_calls += calls;
+        self.metrics.padded_tokens += padded;
+        self.metrics.useful_rows += r0;
         Ok(out)
     }
 
@@ -65,6 +74,20 @@ impl ExpertDispatcher {
     fn moe_forward(&mut self, block_pos: usize, block: &MoeBlock, x: &Matrix) -> Result<Matrix> {
         let routing = route(x, &block.w_router, block.topk);
         self.telemetry.record(block_pos, &routing.activation_counts());
+        match self.mode {
+            DispatchMode::Sequential => self.moe_forward_sequential(block_pos, block, x, &routing),
+            DispatchMode::Grouped => self.moe_forward_grouped(block_pos, block, x, &routing),
+        }
+    }
+
+    /// Legacy expert-at-a-time dispatch.
+    fn moe_forward_sequential(
+        &mut self,
+        block_pos: usize,
+        block: &MoeBlock,
+        x: &Matrix,
+        routing: &Routing,
+    ) -> Result<Matrix> {
         let mut out = Matrix::zeros(x.rows, x.cols);
         for (e, (tokens, weights)) in routing.per_expert.iter().enumerate() {
             if tokens.is_empty() {
@@ -80,13 +103,88 @@ impl ExpertDispatcher {
         }
         Ok(out)
     }
+
+    /// Grouped dispatch (DESIGN.md §GroupGEMM-Dispatch): plan the whole
+    /// block's (expert, tile) work items, execute same-executable waves
+    /// concurrently, then scatter results back in a fixed order — bit-for-
+    /// bit identical to the sequential path, independent of thread count.
+    fn moe_forward_grouped(
+        &mut self,
+        block_pos: usize,
+        block: &MoeBlock,
+        x: &Matrix,
+        routing: &Routing,
+    ) -> Result<Matrix> {
+        let n_routed = block.experts.len();
+        // ---- plan: one work entry per active expert ----
+        let mut work: Vec<ExpertWork> = Vec::new();
+        let mut gathered: Vec<Matrix> = Vec::new();
+        for (e, (tokens, _)) in routing.per_expert.iter().enumerate() {
+            if tokens.is_empty() {
+                continue;
+            }
+            work.push(ExpertWork {
+                expert: e,
+                scheme: self.slots.slot(block_pos, e).scheme,
+                rows: tokens.len(),
+            });
+            gathered.push(x.gather_rows(tokens));
+        }
+        let n_routed_work = work.len();
+        for si in 0..block.shared.len() {
+            let e = n_routed + si;
+            work.push(ExpertWork {
+                expert: e,
+                scheme: self.slots.slot(block_pos, e).scheme,
+                rows: x.rows,
+            });
+        }
+        let plan = DispatchPlan::plan(&work);
+
+        // ---- execute: all waves in flight on the worker pool ----
+        let inputs: Vec<ExpertInput<'_>> = work
+            .iter()
+            .enumerate()
+            .map(|(wi, w)| ExpertInput {
+                x: if wi < n_routed_work { &gathered[wi] } else { x },
+                literals: &self.slots.slot(block_pos, w.expert).prepared.literals,
+            })
+            .collect();
+        let (outputs, report) = dispatch::execute(&self.runtime, &plan, &inputs, self.threads)?;
+        drop(inputs);
+
+        // ---- scatter: plan items are already in (work entry, row) order,
+        // so one linear pass reproduces the sequential accumulation order
+        let mut out = Matrix::zeros(x.rows, x.cols);
+        let (identity, ones): (Vec<usize>, Vec<f32>) = if work.len() > n_routed_work {
+            ((0..x.rows).collect(), vec![1.0f32; x.rows])
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        for (ii, item) in plan.items.iter().enumerate() {
+            let w = &work[item.input];
+            let span = item.row0..item.row0 + item.rows;
+            if w.expert < n_routed {
+                let (tokens, weights) = &routing.per_expert[w.expert];
+                out.scatter_add_rows(&tokens[span.clone()], &outputs[ii], &weights[span]);
+            } else {
+                // shared expert: rows map 1:1 onto the block input,
+                // accumulated with weight 1.0 exactly like the sequential
+                // path's `add_scaled(_, 1.0)`
+                out.scatter_add_rows(&identity[span.clone()], &outputs[ii], &ones[span]);
+            }
+        }
+        self.metrics.record_dispatch(&report);
+        Ok(out)
+    }
 }
 
 /// The engine owns the model, the PJRT runtime, and the prepared
-/// mixed-precision expert artifacts. Single-threaded by design: the CPU
-/// PJRT client parallelizes internally (XLA intra-op pool plays the role
-/// of the SM array; the task queue discipline mirrors the fused tile
-/// scheduler — see DESIGN.md §Hardware-Adaptation). Batches run serially,
+/// mixed-precision expert artifacts. Expert FFNs dispatch as grouped
+/// mixed-precision waves (DESIGN.md §GroupGEMM-Dispatch): the whole
+/// block's (expert, tile) work items are planned up front and executed
+/// concurrently, with PJRT executions of different precisions in flight
+/// simultaneously. Batches still run serially with respect to each other,
 /// so a hot-swap applied between batches never tears a batch across plan
 /// generations.
 pub struct ServingEngine {
@@ -112,13 +210,40 @@ impl ServingEngine {
         Ok(ServingEngine {
             lm,
             allocation: allocation.clone(),
-            dispatch: ExpertDispatcher { runtime, slots, metrics: Metrics::new(), telemetry },
+            dispatch: ExpertDispatcher {
+                runtime,
+                slots,
+                metrics: Metrics::new(),
+                telemetry,
+                mode: DispatchMode::default(),
+                threads: default_threads(),
+            },
             tokens_at_last_replan: 0,
         })
     }
 
     pub fn platform(&self) -> String {
         self.dispatch.runtime.platform()
+    }
+
+    /// How expert FFNs are dispatched (grouped waves by default).
+    pub fn dispatch_mode(&self) -> DispatchMode {
+        self.dispatch.mode
+    }
+
+    /// Switch between grouped-wave and sequential reference dispatch.
+    /// Outputs are bit-for-bit identical either way; sequential exists for
+    /// equivalence tests and as the baseline of
+    /// `benches/bench_group_dispatch.rs`.
+    pub fn set_dispatch_mode(&mut self, mode: DispatchMode) {
+        self.dispatch.mode = mode;
+    }
+
+    /// Worker threads for grouped dispatch (results are identical for any
+    /// value ≥ 1; this only changes how many PJRT executions are in
+    /// flight).
+    pub fn set_dispatch_threads(&mut self, threads: usize) {
+        self.dispatch.threads = threads.max(1);
     }
 
     pub fn metrics(&self) -> &Metrics {

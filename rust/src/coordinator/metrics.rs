@@ -1,8 +1,36 @@
-//! Serving metrics: latency distribution + throughput counters.
+//! Serving metrics: latency distribution + throughput counters + grouped-
+//! dispatch wave telemetry (occupancy, fill, latency percentiles).
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::runtime::WaveReport;
 use crate::util::stats::Summary;
+
+/// Aggregated wave counters for one runtime scheme family.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SchemeWaveStats {
+    /// Waves executed under this scheme.
+    pub waves: usize,
+    /// Tile executions (wave members) — the scheme's occupancy.
+    pub items: usize,
+    /// Rows shipped to PJRT, padding included.
+    pub padded_rows: usize,
+    /// Useful (non-padding) rows.
+    pub useful_rows: usize,
+    /// Summed member execute time.
+    pub busy_s: f64,
+}
+
+impl SchemeWaveStats {
+    /// Useful fraction of this scheme's shipped rows.
+    pub fn fill_ratio(&self) -> f64 {
+        if self.padded_rows == 0 {
+            return 1.0;
+        }
+        self.useful_rows as f64 / self.padded_rows as f64
+    }
+}
 
 /// Rolling serving metrics (single-threaded engine owns it).
 pub struct Metrics {
@@ -25,7 +53,26 @@ pub struct Metrics {
     pub last_drift: f64,
     /// Deepest admission queue observed at a batch cut.
     pub max_queue_depth: usize,
+    /// Grouped block dispatches executed (plan → wave → scatter cycles).
+    pub grouped_dispatches: usize,
+    /// Waves executed across all grouped dispatches.
+    pub waves: usize,
+    /// Most waves in flight in a single grouped dispatch (the concurrency
+    /// the mixed-precision plan actually exposed).
+    pub max_concurrent_waves: usize,
+    /// Batcher fill estimate at the last batch cut (planner-fed).
+    pub last_planned_fill: f64,
+    /// Sliding window of per-wave wall-clock samples. Waves accrue far
+    /// faster than requests (several per MoE block per batch), so this is
+    /// a bounded ring — percentiles reflect the most recent
+    /// [`WAVE_LATENCY_WINDOW`] waves, not all-time history.
+    wave_latencies: Vec<f64>,
+    wave_latency_cursor: usize,
+    scheme_waves: BTreeMap<&'static str, SchemeWaveStats>,
 }
+
+/// Wave-latency samples retained for percentile reporting.
+pub const WAVE_LATENCY_WINDOW: usize = 4096;
 
 impl Metrics {
     pub fn new() -> Metrics {
@@ -43,7 +90,70 @@ impl Metrics {
             replans: 0,
             last_drift: 0.0,
             max_queue_depth: 0,
+            grouped_dispatches: 0,
+            waves: 0,
+            max_concurrent_waves: 0,
+            last_planned_fill: 1.0,
+            wave_latencies: Vec::new(),
+            wave_latency_cursor: 0,
+            scheme_waves: BTreeMap::new(),
         }
+    }
+
+    /// Fold one grouped dispatch's wave report into the counters
+    /// (tile/padding totals included, mirroring what the sequential path
+    /// counts per call).
+    pub fn record_dispatch(&mut self, report: &WaveReport) {
+        self.grouped_dispatches += 1;
+        self.waves += report.waves.len();
+        self.max_concurrent_waves = self.max_concurrent_waves.max(report.waves.len());
+        self.expert_calls += report.items();
+        self.padded_tokens += report.padded_rows();
+        self.useful_rows += report.useful_rows();
+        for w in &report.waves {
+            if self.wave_latencies.len() < WAVE_LATENCY_WINDOW {
+                self.wave_latencies.push(w.elapsed_s);
+            } else {
+                self.wave_latencies[self.wave_latency_cursor] = w.elapsed_s;
+                self.wave_latency_cursor = (self.wave_latency_cursor + 1) % WAVE_LATENCY_WINDOW;
+            }
+            let s = self.scheme_waves.entry(w.scheme.name()).or_default();
+            s.waves += 1;
+            s.items += w.items;
+            s.padded_rows += w.padded_rows;
+            s.useful_rows += w.useful_rows;
+            s.busy_s += w.busy_s;
+        }
+    }
+
+    /// Planner-fed batcher fill estimate at a batch cut.
+    pub fn note_planned_fill(&mut self, fill_ratio: f64) {
+        self.last_planned_fill = fill_ratio;
+    }
+
+    /// Wave wall-clock distribution (first launch → last completion per
+    /// wave) over the most recent [`WAVE_LATENCY_WINDOW`] waves.
+    pub fn wave_latency_summary(&self) -> Option<Summary> {
+        if self.wave_latencies.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.wave_latencies))
+        }
+    }
+
+    /// Per-scheme wave occupancy/fill, keyed by runtime family name.
+    pub fn scheme_wave_stats(&self) -> &BTreeMap<&'static str, SchemeWaveStats> {
+        &self.scheme_waves
+    }
+
+    /// Useful fraction of rows shipped by grouped dispatches.
+    pub fn wave_fill_ratio(&self) -> f64 {
+        let padded: usize = self.scheme_waves.values().map(|s| s.padded_rows).sum();
+        if padded == 0 {
+            return 1.0;
+        }
+        let useful: usize = self.scheme_waves.values().map(|s| s.useful_rows).sum();
+        useful as f64 / padded as f64
     }
 
     pub fn record_request(&mut self, latency_s: f64, tokens: usize) {
@@ -114,6 +224,77 @@ mod tests {
         assert_eq!(m.tokens, 256);
         let s = m.latency_summary().unwrap();
         assert!((s.mean - 0.015).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wave_counters_accumulate() {
+        use crate::runtime::{RuntimeScheme, WaveStats};
+        let mut m = Metrics::new();
+        assert!(m.wave_latency_summary().is_none());
+        assert_eq!(m.wave_fill_ratio(), 1.0);
+        let report = WaveReport {
+            waves: vec![
+                WaveStats {
+                    scheme: RuntimeScheme::Fp16,
+                    tile_m: 64,
+                    items: 2,
+                    padded_rows: 128,
+                    useful_rows: 128,
+                    elapsed_s: 0.004,
+                    busy_s: 0.006,
+                },
+                WaveStats {
+                    scheme: RuntimeScheme::W4A4,
+                    tile_m: 4,
+                    items: 1,
+                    padded_rows: 4,
+                    useful_rows: 1,
+                    elapsed_s: 0.001,
+                    busy_s: 0.001,
+                },
+            ],
+            elapsed_s: 0.005,
+        };
+        m.record_dispatch(&report);
+        m.record_dispatch(&report);
+        assert_eq!(m.grouped_dispatches, 2);
+        assert_eq!(m.waves, 4);
+        assert_eq!(m.max_concurrent_waves, 2);
+        assert_eq!(m.expert_calls, 6);
+        assert_eq!(m.padded_tokens, 264);
+        assert_eq!(m.useful_rows, 258);
+        let fp16 = m.scheme_wave_stats()["fp16"];
+        assert_eq!((fp16.waves, fp16.items), (2, 4));
+        assert!((fp16.fill_ratio() - 1.0).abs() < 1e-12);
+        let w44 = m.scheme_wave_stats()["w4a4"];
+        assert!((w44.fill_ratio() - 0.25).abs() < 1e-12);
+        assert!((m.wave_fill_ratio() - 258.0 / 264.0).abs() < 1e-12);
+        assert_eq!(m.wave_latency_summary().unwrap().n, 4);
+        m.note_planned_fill(0.75);
+        assert_eq!(m.last_planned_fill, 0.75);
+    }
+
+    #[test]
+    fn wave_latency_window_is_bounded() {
+        use crate::runtime::{RuntimeScheme, WaveStats};
+        let mut m = Metrics::new();
+        let wave = |elapsed_s: f64| WaveStats {
+            scheme: RuntimeScheme::Fp16,
+            tile_m: 4,
+            items: 1,
+            padded_rows: 4,
+            useful_rows: 4,
+            elapsed_s,
+            busy_s: elapsed_s,
+        };
+        for i in 0..(WAVE_LATENCY_WINDOW + 100) {
+            m.record_dispatch(&WaveReport { waves: vec![wave(i as f64)], elapsed_s: 0.0 });
+        }
+        let s = m.wave_latency_summary().unwrap();
+        assert_eq!(s.n, WAVE_LATENCY_WINDOW, "ring must cap retained samples");
+        // the earliest samples were overwritten by the newest
+        assert!(s.min >= 100.0 - 1e-9, "oldest surviving sample is {}", s.min);
+        assert_eq!(m.waves, WAVE_LATENCY_WINDOW + 100, "counters still see every wave");
     }
 
     #[test]

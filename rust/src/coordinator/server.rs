@@ -87,6 +87,16 @@ pub struct ServerReport {
     pub p50_queue_wait_s: f64,
     pub expert_calls: usize,
     pub padding_ratio: f64,
+    /// Waves executed by grouped dispatch (0 under sequential mode).
+    pub waves: usize,
+    /// Most waves in flight in one grouped dispatch.
+    pub max_concurrent_waves: usize,
+    /// Useful fraction of rows shipped by grouped dispatch.
+    pub wave_fill_ratio: f64,
+    /// p50 wave wall-clock, seconds (0 when no waves ran).
+    pub p50_wave_s: f64,
+    /// Planner-projected tile fill of the last batch cut.
+    pub last_planned_fill: f64,
     /// Deepest admission queue observed at a batch cut.
     pub max_queue_depth: usize,
     /// Drift-triggered MCKP re-solves (0 for static-plan serving).
@@ -162,6 +172,11 @@ impl Server {
                 p50_queue_wait_s: qw.as_ref().map(|s| s.p50).unwrap_or(0.0),
                 expert_calls: m.expert_calls,
                 padding_ratio: m.padding_ratio(),
+                waves: m.waves,
+                max_concurrent_waves: m.max_concurrent_waves,
+                wave_fill_ratio: m.wave_fill_ratio(),
+                p50_wave_s: m.wave_latency_summary().map(|s| s.p50).unwrap_or(0.0),
+                last_planned_fill: m.last_planned_fill,
                 max_queue_depth: m.max_queue_depth,
                 replans: m.replans,
                 swaps: m.swaps,
@@ -243,6 +258,12 @@ fn serve_loop(
         if batch.is_empty() {
             continue;
         }
+        // planner-fed fill estimate of the batch actually cut (the whole
+        // queue may be deeper than one cut; see ContinuousBatcher::
+        // fill_estimate for the queue-wide projection)
+        let cut_tokens: usize = batch.iter().map(|r| r.tokens.len()).sum();
+        let planned_fill = crate::runtime::dispatch::fill_estimate(cut_tokens).fill_ratio();
+        engine.metrics_mut().note_planned_fill(planned_fill);
         process_batch(engine, batch);
         // the online loop runs strictly between batches: in-flight work
         // always completes on the generation it started on

@@ -1,0 +1,487 @@
+//! Grouped mixed-precision GroupGEMM dispatch (DESIGN.md §GroupGEMM-Dispatch).
+//!
+//! The paper's headline system artifact is a GroupGEMM kernel that executes
+//! sub-GEMMs of *different* precisions in parallel on one GPU (§4). The
+//! serving analogue here is a plan → wave → execute → scatter pipeline
+//! replacing the engine's old expert-at-a-time loop:
+//!
+//! 1. **Plan** ([`DispatchPlan::plan`]): every routed (expert, tile) work
+//!    item for a whole MoE block is gathered up front, each expert's row
+//!    count decomposed into exported tile sizes via
+//!    [`tile_decompose`](super::tile_decompose).
+//! 2. **Waves** — items are bucketed by `(RuntimeScheme, tile_m)`: all
+//!    members of a wave run the *same* AOT executable, mirroring one
+//!    same-shape group of the paper's GroupGEMM. Waves are ordered
+//!    longest-first (LPT) so the slowest bucket starts earliest.
+//! 3. **Execute** ([`execute`]): every item across all waves runs
+//!    concurrently on scoped worker threads
+//!    ([`parallel_for_with_state`](crate::util::threadpool::parallel_for_with_state)),
+//!    so PJRT executions of different precisions are in flight
+//!    simultaneously — the costmodel's "parallel mixed-precision
+//!    GroupGEMM" assumption, finally true on the real execution path.
+//!    Full tiles execute zero-copy out of the gathered input; only a
+//!    ragged final tile is padded, into a per-worker scratch buffer that
+//!    is reused across waves.
+//! 4. **Scatter** — the caller (engine) folds item outputs back with the
+//!    routing weights in a fixed order, so grouped results are bit-for-bit
+//!    identical to sequential dispatch regardless of worker count.
+//!
+//! Everything except [`execute`] is pure and unit-tests without a PJRT
+//! runtime; the batcher's fill estimation also feeds off [`fill_estimate`]
+//! instead of re-deriving tile math.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::tensor::Matrix;
+use crate::util::threadpool::parallel_for_with_state;
+
+use super::{tile_decompose, Runtime, RuntimeScheme};
+
+/// How the engine runs a block's expert FFNs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum DispatchMode {
+    /// Legacy expert-at-a-time, tile-at-a-time loop (reference path).
+    Sequential,
+    /// Plan → wave → concurrent execute → ordered scatter (this module).
+    #[default]
+    Grouped,
+}
+
+/// One expert's share of a block dispatch, as handed to the planner:
+/// `rows` routed tokens (already gathered contiguously) to run under
+/// `scheme`. `expert` is the slot index (routed experts first, then
+/// shared).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExpertWork {
+    pub expert: usize,
+    pub scheme: RuntimeScheme,
+    pub rows: usize,
+}
+
+/// One tile-sized unit of work: rows `[row0, row0 + rows)` of work entry
+/// `input`'s gathered matrix, executed by the `(scheme, tile_m)`
+/// executable. `rows < tile_m` only on a ragged final tile (padded).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkItem {
+    /// Index into the planner's input slice (and the executor's
+    /// [`ExpertInput`] slice).
+    pub input: usize,
+    /// Slot index, copied from the work entry for scatter bookkeeping.
+    pub expert: usize,
+    pub scheme: RuntimeScheme,
+    pub tile_m: usize,
+    pub row0: usize,
+    pub rows: usize,
+}
+
+/// All items sharing one executable — one same-shape group of the
+/// GroupGEMM. `items` are indices into [`DispatchPlan::items`], in
+/// planning order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Wave {
+    pub scheme: RuntimeScheme,
+    pub tile_m: usize,
+    pub items: Vec<usize>,
+}
+
+impl Wave {
+    /// Rows shipped to PJRT by this wave, padding included.
+    pub fn padded_rows(&self) -> usize {
+        self.items.len() * self.tile_m
+    }
+}
+
+/// The planned dispatch of one MoE block: flat work items plus their
+/// wave grouping. Plans are deterministic functions of the work list.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DispatchPlan {
+    pub items: Vec<WorkItem>,
+    pub waves: Vec<Wave>,
+}
+
+impl DispatchPlan {
+    /// Decompose every work entry into exported tiles and bucket the tiles
+    /// into waves. Wave order is longest-projected-first (total padded
+    /// rows, descending) with a fixed tie-break, so execution starts the
+    /// heaviest bucket earliest and plans are reproducible.
+    pub fn plan(work: &[ExpertWork]) -> DispatchPlan {
+        let mut items = Vec::new();
+        for (wi, w) in work.iter().enumerate() {
+            let mut row0 = 0usize;
+            for tile_m in tile_decompose(w.rows) {
+                let rows = (w.rows - row0).min(tile_m);
+                items.push(WorkItem {
+                    input: wi,
+                    expert: w.expert,
+                    scheme: w.scheme,
+                    tile_m,
+                    row0,
+                    rows,
+                });
+                row0 += rows;
+            }
+        }
+        let mut waves: Vec<Wave> = Vec::new();
+        for (ii, it) in items.iter().enumerate() {
+            match waves.iter_mut().find(|wv| wv.scheme == it.scheme && wv.tile_m == it.tile_m) {
+                Some(wv) => wv.items.push(ii),
+                None => waves.push(Wave {
+                    scheme: it.scheme,
+                    tile_m: it.tile_m,
+                    items: vec![ii],
+                }),
+            }
+        }
+        waves.sort_by(|a, b| {
+            b.padded_rows()
+                .cmp(&a.padded_rows())
+                .then(b.tile_m.cmp(&a.tile_m))
+                .then(a.scheme.name().cmp(b.scheme.name()))
+        });
+        DispatchPlan { items, waves }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Rows shipped to PJRT, padding included.
+    pub fn padded_rows(&self) -> usize {
+        self.items.iter().map(|i| i.tile_m).sum()
+    }
+
+    /// Useful (non-padding) rows.
+    pub fn useful_rows(&self) -> usize {
+        self.items.iter().map(|i| i.rows).sum()
+    }
+
+    /// Useful fraction of shipped rows, in `[0, 1]` (1.0 for empty plans).
+    pub fn fill_ratio(&self) -> f64 {
+        let padded = self.padded_rows();
+        if padded == 0 {
+            return 1.0;
+        }
+        self.useful_rows() as f64 / padded as f64
+    }
+}
+
+/// Planner-derived tile fill for `m` concatenated rows — what the batcher
+/// uses to size batches against the exported tile set without re-deriving
+/// tile math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FillEstimate {
+    pub tiles: usize,
+    pub padded_rows: usize,
+    pub useful_rows: usize,
+}
+
+impl FillEstimate {
+    /// Useful fraction of shipped rows (1.0 when nothing is queued).
+    pub fn fill_ratio(&self) -> f64 {
+        if self.padded_rows == 0 {
+            return 1.0;
+        }
+        self.useful_rows as f64 / self.padded_rows as f64
+    }
+}
+
+/// Estimate the tile fill of dispatching `m` rows through one executable
+/// family (scheme-independent: every family ships the same tile grid).
+pub fn fill_estimate(m: usize) -> FillEstimate {
+    let tiles = tile_decompose(m);
+    FillEstimate {
+        tiles: tiles.len(),
+        padded_rows: tiles.iter().sum(),
+        useful_rows: m,
+    }
+}
+
+/// The executor-side view of one work entry: the expert's gathered input
+/// rows and its prepared weight literals. Indexed by [`WorkItem::input`].
+pub struct ExpertInput<'a> {
+    pub x: &'a Matrix,
+    pub literals: &'a [xla::Literal],
+}
+
+/// Per-wave execution record.
+#[derive(Clone, Copy, Debug)]
+pub struct WaveStats {
+    pub scheme: RuntimeScheme,
+    pub tile_m: usize,
+    pub items: usize,
+    pub padded_rows: usize,
+    pub useful_rows: usize,
+    /// First-launch → last-completion wall clock of the wave's members.
+    pub elapsed_s: f64,
+    /// Sum of member execute times (busy time; > `elapsed_s` means the
+    /// wave genuinely overlapped with itself or with other waves).
+    pub busy_s: f64,
+}
+
+/// Execution record of one grouped block dispatch.
+#[derive(Clone, Debug, Default)]
+pub struct WaveReport {
+    pub waves: Vec<WaveStats>,
+    /// Whole-dispatch wall clock.
+    pub elapsed_s: f64,
+}
+
+impl WaveReport {
+    pub fn items(&self) -> usize {
+        self.waves.iter().map(|w| w.items).sum()
+    }
+
+    pub fn padded_rows(&self) -> usize {
+        self.waves.iter().map(|w| w.padded_rows).sum()
+    }
+
+    pub fn useful_rows(&self) -> usize {
+        self.waves.iter().map(|w| w.useful_rows).sum()
+    }
+}
+
+/// Per-item completion: output (cropped to useful rows) + launch/finish
+/// timestamps relative to dispatch start.
+type ItemSlot = Option<(Result<Matrix>, f64, f64)>;
+
+/// Shared read-only state for the scoped dispatch workers.
+///
+/// SAFETY: the xla-rs binding types wrap raw pointers and never declare
+/// `Send`/`Sync`, but the PJRT C API guarantees the surface used here is
+/// thread-safe: concurrent `Execute` calls (even on the same loaded
+/// executable) and concurrent read-only literal access. All `Runtime`
+/// cache mutation is behind its own mutex (or the frozen snapshot), and
+/// each worker writes only its own item slots, which carry their own
+/// locks. This impl asserts exactly that and nothing more.
+struct Shared<'a> {
+    rt: &'a Runtime,
+    plan: &'a DispatchPlan,
+    inputs: &'a [ExpertInput<'a>],
+    order: &'a [usize],
+    results: &'a [Mutex<ItemSlot>],
+    start: Instant,
+}
+unsafe impl Sync for Shared<'_> {}
+
+/// Run every item of `plan` concurrently (wave-major issue order, dynamic
+/// self-scheduling over `threads` scoped workers) and return the per-item
+/// outputs, cropped to useful rows, plus per-wave timing. Outputs are
+/// positionally aligned with `plan.items`; results do not depend on
+/// `threads`.
+pub fn execute(
+    rt: &Runtime,
+    plan: &DispatchPlan,
+    inputs: &[ExpertInput<'_>],
+    threads: usize,
+) -> Result<(Vec<Matrix>, WaveReport)> {
+    if plan.is_empty() {
+        return Ok((Vec::new(), WaveReport::default()));
+    }
+    assert!(
+        plan.items.iter().all(|it| it.input < inputs.len()),
+        "dispatch plan references inputs beyond the provided slice"
+    );
+    // wave-major issue order: heavy waves first (plan already LPT-sorted)
+    let order: Vec<usize> = plan.waves.iter().flat_map(|w| w.items.iter().copied()).collect();
+    debug_assert_eq!(order.len(), plan.items.len());
+    let results: Vec<Mutex<ItemSlot>> = plan.items.iter().map(|_| Mutex::new(None)).collect();
+    let max_tile = plan.items.iter().map(|i| i.tile_m).max().unwrap_or(0);
+    let scratch_cap = max_tile * inputs.first().map_or(0, |i| i.x.cols);
+    let shared = Shared { rt, plan, inputs, order: &order, results: &results, start: Instant::now() };
+    let shared = &shared;
+    parallel_for_with_state(
+        order.len(),
+        threads,
+        // one padded-tile scratch buffer per worker, reused across waves
+        move || Vec::<f32>::with_capacity(scratch_cap),
+        |scratch, k| {
+            let it = &shared.plan.items[shared.order[k]];
+            let inp = &shared.inputs[it.input];
+            let hidden = inp.x.cols;
+            let t0 = shared.start.elapsed().as_secs_f64();
+            let res = if it.rows == it.tile_m {
+                // whole tile: execute straight out of the gathered matrix
+                shared.rt.run_expert_ffn_rows(
+                    it.scheme,
+                    it.tile_m,
+                    hidden,
+                    &inp.x.data[it.row0 * hidden..(it.row0 + it.tile_m) * hidden],
+                    inp.literals,
+                )
+            } else {
+                // ragged final tile: pad into the worker's scratch buffer
+                scratch.clear();
+                scratch.resize(it.tile_m * hidden, 0.0);
+                scratch[..it.rows * hidden]
+                    .copy_from_slice(&inp.x.data[it.row0 * hidden..(it.row0 + it.rows) * hidden]);
+                shared.rt.run_expert_ffn_rows(
+                    it.scheme,
+                    it.tile_m,
+                    hidden,
+                    &scratch[..],
+                    inp.literals,
+                )
+            };
+            let t1 = shared.start.elapsed().as_secs_f64();
+            // crop the tile output to its useful rows without copying
+            let res = res.map(|m| {
+                let cols = m.cols;
+                let mut data = m.data;
+                data.truncate(it.rows * cols);
+                Matrix::from_vec(it.rows, cols, data)
+            });
+            *shared.results[shared.order[k]].lock().unwrap() = Some((res, t0, t1));
+        },
+    );
+    let elapsed_s = shared.start.elapsed().as_secs_f64();
+
+    // unpack in item order so the first failure reported is deterministic
+    let mut outputs = Vec::with_capacity(plan.items.len());
+    let mut timings = Vec::with_capacity(plan.items.len());
+    for slot in results {
+        let (res, t0, t1) = slot
+            .into_inner()
+            .unwrap()
+            .expect("dispatch worker skipped an item");
+        outputs.push(res?);
+        timings.push((t0, t1));
+    }
+    let waves = plan
+        .waves
+        .iter()
+        .map(|w| {
+            let first = w.items.iter().map(|&i| timings[i].0).fold(f64::INFINITY, f64::min);
+            let last = w.items.iter().map(|&i| timings[i].1).fold(0.0f64, f64::max);
+            WaveStats {
+                scheme: w.scheme,
+                tile_m: w.tile_m,
+                items: w.items.len(),
+                padded_rows: w.padded_rows(),
+                useful_rows: w.items.iter().map(|&i| plan.items[i].rows).sum(),
+                elapsed_s: (last - first).max(0.0),
+                busy_s: w.items.iter().map(|&i| timings[i].1 - timings[i].0).sum(),
+            }
+        })
+        .collect();
+    Ok((outputs, WaveReport { waves, elapsed_s }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::TILE_MS;
+
+    fn work(entries: &[(usize, RuntimeScheme, usize)]) -> Vec<ExpertWork> {
+        entries
+            .iter()
+            .map(|&(expert, scheme, rows)| ExpertWork { expert, scheme, rows })
+            .collect()
+    }
+
+    #[test]
+    fn plan_covers_every_row_exactly_once() {
+        let w = work(&[
+            (0, RuntimeScheme::Fp16, 68),
+            (1, RuntimeScheme::W4A16, 5),
+            (2, RuntimeScheme::W8A8, 340),
+            (4, RuntimeScheme::W4A4, 1),
+        ]);
+        let plan = DispatchPlan::plan(&w);
+        for (wi, entry) in w.iter().enumerate() {
+            let mut covered = 0usize;
+            for it in plan.items.iter().filter(|it| it.input == wi) {
+                assert_eq!(it.expert, entry.expert);
+                assert_eq!(it.scheme, entry.scheme);
+                assert_eq!(it.row0, covered, "tiles must be in row order");
+                assert!(it.rows >= 1 && it.rows <= it.tile_m);
+                assert!(TILE_MS.contains(&it.tile_m));
+                covered += it.rows;
+            }
+            assert_eq!(covered, entry.rows);
+        }
+        assert_eq!(plan.useful_rows(), 68 + 5 + 340 + 1);
+        assert_eq!(
+            plan.padded_rows(),
+            w.iter().map(|e| tile_decompose(e.rows).iter().sum::<usize>()).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn waves_bucket_by_scheme_and_tile() {
+        // two experts share (fp16, 64) — must land in one wave
+        let w = work(&[
+            (0, RuntimeScheme::Fp16, 64),
+            (1, RuntimeScheme::Fp16, 64),
+            (2, RuntimeScheme::W8A8, 64),
+            (3, RuntimeScheme::Fp16, 4),
+        ]);
+        let plan = DispatchPlan::plan(&w);
+        assert_eq!(plan.waves.len(), 3);
+        let fp16_64 = plan
+            .waves
+            .iter()
+            .find(|wv| wv.scheme == RuntimeScheme::Fp16 && wv.tile_m == 64)
+            .unwrap();
+        assert_eq!(fp16_64.items.len(), 2);
+        // every item appears in exactly one wave
+        let mut seen: Vec<usize> = plan.waves.iter().flat_map(|wv| wv.items.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..plan.items.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wave_order_is_deterministic_and_lpt() {
+        let w = work(&[
+            (0, RuntimeScheme::Fp16, 4),
+            (1, RuntimeScheme::W4A4, 256),
+            (2, RuntimeScheme::W8A8, 64),
+        ]);
+        let a = DispatchPlan::plan(&w);
+        let b = DispatchPlan::plan(&w);
+        assert_eq!(a, b, "planning must be reproducible");
+        let loads: Vec<usize> = a.waves.iter().map(|wv| wv.padded_rows()).collect();
+        assert!(loads.windows(2).all(|p| p[0] >= p[1]), "waves not LPT-sorted: {loads:?}");
+    }
+
+    #[test]
+    fn mixed_precision_block_produces_concurrent_waves() {
+        // the bench's acceptance scenario: 4 runtime families live in one
+        // block ⇒ ≥ 4 waves planned for one concurrent dispatch
+        let w = work(&[
+            (0, RuntimeScheme::Fp16, 68),
+            (1, RuntimeScheme::W4A16, 68),
+            (2, RuntimeScheme::W8A8, 68),
+            (3, RuntimeScheme::W4A4, 68),
+        ]);
+        let plan = DispatchPlan::plan(&w);
+        assert!(plan.waves.len() >= 4, "only {} waves", plan.waves.len());
+        assert!(plan.fill_ratio() > 0.9, "68 → 64+4 should be fully dense");
+    }
+
+    #[test]
+    fn zero_row_entries_and_empty_work() {
+        let plan = DispatchPlan::plan(&[]);
+        assert!(plan.is_empty());
+        assert_eq!(plan.fill_ratio(), 1.0);
+        let plan = DispatchPlan::plan(&work(&[(0, RuntimeScheme::Fp16, 0)]));
+        assert!(plan.is_empty(), "0-row experts plan no items");
+    }
+
+    #[test]
+    fn fill_estimate_matches_decomposition() {
+        for m in 0..=600usize {
+            let est = fill_estimate(m);
+            let tiles = tile_decompose(m);
+            assert_eq!(est.tiles, tiles.len());
+            assert_eq!(est.padded_rows, tiles.iter().sum::<usize>());
+            assert_eq!(est.useful_rows, m);
+            assert!(est.fill_ratio() > 0.0 && est.fill_ratio() <= 1.0);
+        }
+        assert_eq!(fill_estimate(0).fill_ratio(), 1.0);
+        assert_eq!(fill_estimate(68).padded_rows, 68);
+        assert_eq!(fill_estimate(3).padded_rows, 4);
+    }
+}

@@ -5,13 +5,15 @@
 //! Pattern follows /opt/xla-example/load_hlo: HLO *text* →
 //! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`.
 
+pub mod dispatch;
 pub mod expert_weights;
 
+pub use dispatch::{DispatchMode, DispatchPlan, ExpertWork, Wave, WaveReport, WaveStats, WorkItem};
 pub use expert_weights::PreparedExpert;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
 use anyhow::{bail, Result};
 
@@ -95,10 +97,18 @@ pub fn tile_padding(m: usize) -> usize {
 }
 
 /// PJRT client + executable cache.
+///
+/// The cache is read-mostly: after [`warmup_expert_ffn`](Runtime::warmup_expert_ffn)
+/// compiles the full (scheme, tile) grid it is frozen into an immutable
+/// snapshot, and every hot-path lookup hits that snapshot without taking a
+/// lock — the grouped dispatcher resolves executables from many worker
+/// threads at once. Names missing from the snapshot (cold artifacts like
+/// `smoke_matmul`) fall back to the mutex-guarded build path.
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    frozen: OnceLock<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl Runtime {
@@ -108,7 +118,12 @@ impl Runtime {
             bail!("artifacts dir {artifacts_dir:?} missing — run `make artifacts`");
         }
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu: {e}"))?;
-        Ok(Runtime { client, dir: artifacts_dir.to_path_buf(), cache: Mutex::new(HashMap::new()) })
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+            frozen: OnceLock::new(),
+        })
     }
 
     pub fn platform(&self) -> String {
@@ -116,8 +131,13 @@ impl Runtime {
     }
 
     /// Load + compile (cached) an executable by artifact stem, e.g.
-    /// `expert_ffn_w4a16_m64`.
+    /// `expert_ffn_w4a16_m64`. Lock-free once the cache is frozen.
     pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(snap) = self.frozen.get() {
+            if let Some(e) = snap.get(name) {
+                return Ok(e.clone());
+            }
+        }
         if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
@@ -134,7 +154,16 @@ impl Runtime {
         Ok(exe)
     }
 
-    /// Pre-compile every (scheme, tile) expert executable (hot-path warmup).
+    /// Snapshot the compiled-executable cache into the lock-free read path.
+    /// Idempotent; the first snapshot wins (later compiles still serve
+    /// through the mutex path).
+    pub fn freeze_cache(&self) {
+        let snap = self.cache.lock().unwrap().clone();
+        let _ = self.frozen.set(snap);
+    }
+
+    /// Pre-compile every (scheme, tile) expert executable (hot-path
+    /// warmup), then freeze the cache so dispatch lookups are lock-free.
     pub fn warmup_expert_ffn(&self) -> Result<usize> {
         let mut n = 0;
         for s in RuntimeScheme::ALL {
@@ -143,6 +172,7 @@ impl Runtime {
                 n += 1;
             }
         }
+        self.freeze_cache();
         Ok(n)
     }
 
@@ -156,8 +186,25 @@ impl Runtime {
         weights: &[xla::Literal],
     ) -> Result<Matrix> {
         assert_eq!(x.rows, tile_m);
+        self.run_expert_ffn_rows(scheme, tile_m, x.cols, &x.data, weights)
+    }
+
+    /// As [`run_expert_ffn`](Runtime::run_expert_ffn) over a raw row-major
+    /// `[tile_m, hidden]` slice — the grouped dispatcher's entry point: a
+    /// full tile executes straight out of the caller's gathered matrix
+    /// (zero copy), only ragged final tiles go through a padded scratch
+    /// buffer first.
+    pub fn run_expert_ffn_rows(
+        &self,
+        scheme: RuntimeScheme,
+        tile_m: usize,
+        hidden: usize,
+        xdata: &[f32],
+        weights: &[xla::Literal],
+    ) -> Result<Matrix> {
+        assert_eq!(xdata.len(), tile_m * hidden);
         let exe = self.executable(&format!("expert_ffn_{}_m{}", scheme.name(), tile_m))?;
-        let x_lit = lit_f32(&[x.rows, x.cols], &x.data)?;
+        let x_lit = lit_f32(&[tile_m, hidden], xdata)?;
         let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + weights.len());
         args.push(&x_lit);
         args.extend(weights.iter());
@@ -168,26 +215,43 @@ impl Runtime {
             .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
         let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e}"))?;
         let vals = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
-        let cols = vals.len() / x.rows;
-        Ok(Matrix::from_vec(x.rows, cols, vals))
+        let cols = vals.len() / tile_m;
+        Ok(Matrix::from_vec(tile_m, cols, vals))
     }
 }
 
 // ---------------- literal helpers ----------------
 
-/// f32 literal of the given shape.
+/// Reinterpret a typed slice as raw bytes without copying. Sound for the
+/// plain-old-data element types used below (f32, i8); the literal
+/// constructor copies out of the borrow before it returns.
+fn as_bytes<T: Copy>(data: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr().cast::<u8>(), std::mem::size_of_val(data))
+    }
+}
+
+/// f32 literal of the given shape. Single bulk copy of the payload: XLA
+/// literals take host-native layout, and the per-call f32→bytes
+/// `flat_map` this replaces dominated small-tile dispatch (see
+/// `benches/bench_group_dispatch.rs` micro-guard). Big-endian hosts keep
+/// the explicit little-endian conversion — the AOT artifacts are LE.
 pub fn lit_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
     assert_eq!(dims.iter().product::<usize>(), data.len());
+    #[cfg(target_endian = "big")]
     let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
-    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, &bytes)
+    #[cfg(target_endian = "big")]
+    let bytes: &[u8] = &bytes;
+    #[cfg(target_endian = "little")]
+    let bytes: &[u8] = as_bytes(data);
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
         .map_err(|e| anyhow::anyhow!("lit_f32: {e}"))
 }
 
-/// int8 literal.
+/// int8 literal (bulk reinterpretation, endianness-free).
 pub fn lit_i8(dims: &[usize], data: &[i8]) -> Result<xla::Literal> {
     assert_eq!(dims.iter().product::<usize>(), data.len());
-    let bytes: Vec<u8> = data.iter().map(|&v| v as u8).collect();
-    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, dims, &bytes)
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, dims, as_bytes(data))
         .map_err(|e| anyhow::anyhow!("lit_i8: {e}"))
 }
 
@@ -253,6 +317,21 @@ mod tests {
         assert_eq!(RuntimeScheme::from_quant(&QuantScheme::W8A8), RuntimeScheme::W8A8);
         assert_eq!(RuntimeScheme::from_quant(&QuantScheme::W4A4G128), RuntimeScheme::W4A4);
         assert_eq!(RuntimeScheme::from_quant(&QuantScheme::W5A5), RuntimeScheme::W8A8);
+    }
+
+    #[test]
+    fn bulk_literal_bytes_match_per_element_conversion() {
+        // the single-memcpy payload must be byte-identical to the old
+        // per-element construction (little-endian hosts)
+        let data: Vec<f32> = (0..257).map(|i| (i as f32) * 0.37 - 3.0).collect();
+        let per_element: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        #[cfg(target_endian = "little")]
+        assert_eq!(as_bytes(&data), &per_element[..]);
+        #[cfg(target_endian = "big")]
+        let _ = per_element;
+        let signed: Vec<i8> = (-128i8..=127).collect();
+        let old: Vec<u8> = signed.iter().map(|&v| v as u8).collect();
+        assert_eq!(as_bytes(&signed), &old[..]);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
+use crate::runtime::dispatch::{self, FillEstimate};
 use crate::runtime::TILE_MS;
 
 /// A scoring request: token sequence in, next-token prediction + NLL out.
@@ -96,6 +97,16 @@ impl ContinuousBatcher {
     /// Total queued tokens.
     pub fn queued_tokens(&self) -> usize {
         self.pending_tokens
+    }
+
+    /// Tile fill the dispatch planner projects for the current queue if it
+    /// were cut as one batch: every MoE layer dispatches the batch's
+    /// concatenated tokens, so the planner's decomposition of the queued
+    /// token total is the batch's fill estimate. This is the single source
+    /// of truth shared with `runtime::dispatch` — the batcher no longer
+    /// re-derives tile math from `TILE_MS`.
+    pub fn fill_estimate(&self) -> FillEstimate {
+        dispatch::fill_estimate(self.pending_tokens)
     }
 
     /// When the oldest queued request's wait deadline expires.
@@ -220,6 +231,25 @@ mod tests {
         let later = now + Duration::from_millis(25);
         assert!(b.ready(later), "oldest waited past max_wait");
         assert_eq!(b.take_batch().len(), 1);
+    }
+
+    #[test]
+    fn fill_estimate_tracks_queue() {
+        let now = Instant::now();
+        let mut b = ContinuousBatcher::new(policy(100, 1_000_000, 1000));
+        assert_eq!(b.fill_estimate().fill_ratio(), 1.0, "empty queue is trivially full");
+        b.push(req(68, now)); // 64 + 4, zero padding
+        let est = b.fill_estimate();
+        assert_eq!(est.useful_rows, 68);
+        assert_eq!(est.padded_rows, 68);
+        assert_eq!(est.tiles, 2);
+        b.push(req(3, now)); // 71 → 64 + 4 + 4: one padding row
+        let est = b.fill_estimate();
+        assert_eq!(est.useful_rows, 71);
+        assert_eq!(est.padded_rows, 72);
+        assert!(est.fill_ratio() < 1.0);
+        b.take_batch();
+        assert_eq!(b.fill_estimate().useful_rows, 0);
     }
 
     #[test]

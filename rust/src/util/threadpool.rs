@@ -113,36 +113,58 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, body: F) {
     parallel_for_threads(n, default_threads(), body)
 }
 
-/// As [`parallel_for`] with an explicit thread count (benchmarks sweep this).
-pub fn parallel_for_threads<F: Fn(usize) + Sync>(n: usize, threads: usize, body: F) {
+/// As [`parallel_for_threads`], but each worker thread owns a mutable
+/// scratch state built once by `init` and threaded through every index that
+/// worker executes. This is the buffer-reuse entry point for the grouped
+/// GroupGEMM dispatch (`runtime::dispatch`): a worker pads every tile it
+/// runs into the same scratch buffer instead of allocating per tile.
+/// Scheduling is the same dynamic chunked self-scheduling as
+/// [`parallel_for_threads`]; which worker runs which index is
+/// non-deterministic, so `body` must produce results that do not depend on
+/// the state's history beyond what `init` established.
+pub fn parallel_for_with_state<S, I, F>(n: usize, threads: usize, init: I, body: F)
+where
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) + Sync,
+{
     if n == 0 {
         return;
     }
     let threads = threads.max(1).min(n);
     if threads == 1 || n < 2 {
+        let mut state = init();
         for i in 0..n {
-            body(i);
+            body(&mut state, i);
         }
         return;
     }
     // chunk ~4 tasks per thread for load balance without contention
-    let chunk = (n + threads * 4 - 1) / (threads * 4);
-    let chunk = chunk.max(1);
+    let chunk = ((n + threads * 4 - 1) / (threads * 4)).max(1);
     let counter = AtomicUsize::new(0);
     thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|| loop {
-                let start = counter.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let end = (start + chunk).min(n);
-                for i in start..end {
-                    body(i);
+            s.spawn(|| {
+                let mut state = init();
+                loop {
+                    let start = counter.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        body(&mut state, i);
+                    }
                 }
             });
         }
     });
+}
+
+/// As [`parallel_for`] with an explicit thread count (benchmarks sweep
+/// this). Stateless façade over [`parallel_for_with_state`] so the
+/// chunked self-scheduling lives in exactly one place.
+pub fn parallel_for_threads<F: Fn(usize) + Sync>(n: usize, threads: usize, body: F) {
+    parallel_for_with_state(n, threads, || (), |_, i| body(i));
 }
 
 #[cfg(test)]
@@ -190,6 +212,29 @@ mod tests {
             hits[i].fetch_add(1, Ordering::SeqCst);
         });
         assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_for_with_state_covers_and_reuses() {
+        let n = 1000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let inits = AtomicU64::new(0);
+        parallel_for_with_state(
+            n,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::SeqCst);
+                Vec::<u8>::with_capacity(64)
+            },
+            |scratch, i| {
+                scratch.clear();
+                scratch.resize(8, 0);
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            },
+        );
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        // one state per worker, not per index
+        assert!(inits.load(Ordering::SeqCst) <= 4);
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! Integration: grouped mixed-precision GroupGEMM dispatch must be
+//! bit-for-bit indistinguishable from the sequential reference path —
+//! across mixed schemes, uneven token counts, shared experts, and any
+//! worker-thread count.
+
+use std::path::PathBuf;
+
+use mxmoe::alloc::Allocation;
+use mxmoe::coordinator::ServingEngine;
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::quant::QuantScheme;
+use mxmoe::runtime::{DispatchMode, RuntimeScheme};
+use mxmoe::tensor::Matrix;
+use mxmoe::util::Rng;
+
+const MODEL_SEED: u64 = 0x6D15_BA7C;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("expert_ffn_fp16_m16.hlo.txt").exists()
+}
+
+/// Serving-shape model (hidden=128, inter=64 — what the AOT export ships).
+fn serving_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "group-dispatch-test".into(),
+        vocab: 64,
+        hidden: 128,
+        layers: 2,
+        heads: 4,
+        n_experts: 4,
+        n_shared: 1,
+        topk: 2,
+        inter: 64,
+        dense_first: false,
+        seq_len: 16,
+    }
+}
+
+/// A plan that spreads all four runtime families across the expert grid,
+/// so a single block dispatch plans waves of ≥ 4 distinct executables.
+fn mixed_plan(cfg: &ModelConfig) -> Allocation {
+    let fams =
+        [QuantScheme::FP16, QuantScheme::W4A16, QuantScheme::W8A8, QuantScheme::W4A4];
+    let mut plan = Allocation::uniform(cfg, QuantScheme::FP16);
+    for (pos, block) in plan.schemes.iter_mut().enumerate() {
+        for (e, schemes) in block.iter_mut().enumerate() {
+            *schemes = [fams[(pos + e) % fams.len()]; 3];
+        }
+    }
+    plan
+}
+
+/// Batches whose concatenated MoE row counts hit the tile-decomposition
+/// edge cases: single padded tile, multi-tile with a ragged tail, exact
+/// cover, and the full 256+64+16+4 grid.
+fn uneven_batches(vocab: u64) -> Vec<Vec<Vec<u32>>> {
+    let mut rng = Rng::new(0xBA7C);
+    let mut seq = |n: usize| -> Vec<u32> {
+        (0..n).map(|_| rng.below(vocab) as u32).collect()
+    };
+    vec![
+        vec![seq(1)],                             // 1 row   → [4], 3 pad rows
+        vec![seq(5)],                             // 5 rows  → [4, 4], ragged tail
+        vec![seq(64), seq(4)],                    // 68 rows → [64, 4], dense
+        vec![seq(256), seq(64), seq(16), seq(4)], // 340 rows → full tile grid
+    ]
+}
+
+fn forward(engine: &mut ServingEngine, batch: &[Vec<u32>]) -> Vec<Matrix> {
+    let refs: Vec<&[u32]> = batch.iter().map(|s| s.as_slice()).collect();
+    engine.forward_batch(&refs).expect("forward")
+}
+
+fn assert_bit_identical(a: &[Matrix], b: &[Matrix], what: &str) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!((x.rows, x.cols), (y.rows, y.cols));
+        for (u, v) in x.data.iter().zip(&y.data) {
+            assert!(u.to_bits() == v.to_bits(), "{what}: seq {i} diverged");
+        }
+    }
+}
+
+#[test]
+fn grouped_matches_sequential_bit_for_bit() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = serving_cfg();
+    let plan = mixed_plan(&cfg);
+    let lm = MoeLm::random(&cfg, &mut Rng::new(MODEL_SEED));
+    let mut engine = ServingEngine::new(lm, &artifacts(), &plan).unwrap();
+    assert_eq!(engine.dispatch_mode(), DispatchMode::Grouped, "grouped is the default");
+    // the mixed plan must actually exercise all four families
+    let families: Vec<RuntimeScheme> = engine.scheme_counts().iter().map(|(s, _)| *s).collect();
+    assert_eq!(families.len(), 4, "plan collapsed to {families:?}");
+
+    for batch in uneven_batches(cfg.vocab as u64) {
+        engine.set_dispatch_mode(DispatchMode::Sequential);
+        let seq = forward(&mut engine, &batch);
+        engine.set_dispatch_mode(DispatchMode::Grouped);
+        let grouped = forward(&mut engine, &batch);
+        let rows: usize = batch.iter().map(|s| s.len()).sum();
+        assert_bit_identical(&seq, &grouped, &format!("{rows} concatenated rows"));
+    }
+
+    let m = engine.metrics();
+    assert!(m.grouped_dispatches > 0, "grouped path never ran");
+    assert!(m.waves >= m.grouped_dispatches, "each dispatch runs ≥ 1 wave");
+    assert!(m.max_concurrent_waves >= 2, "mixed plan should expose concurrent waves");
+    assert!(m.wave_fill_ratio() > 0.0 && m.wave_fill_ratio() <= 1.0);
+    assert!(m.wave_latency_summary().is_some());
+    // both paths count tiles identically
+    assert!(m.padded_tokens >= m.useful_rows);
+}
+
+#[test]
+fn grouped_deterministic_across_thread_counts() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = serving_cfg();
+    let plan = mixed_plan(&cfg);
+    let batch = &uneven_batches(cfg.vocab as u64)[3]; // 340 rows, every tile size
+    let mut reference: Option<Vec<Matrix>> = None;
+    for threads in [1usize, 2, 5, 11] {
+        let lm = MoeLm::random(&cfg, &mut Rng::new(MODEL_SEED));
+        let mut engine = ServingEngine::new(lm, &artifacts(), &plan).unwrap();
+        engine.set_dispatch_threads(threads);
+        let out = forward(&mut engine, batch);
+        match &reference {
+            None => reference = Some(out),
+            Some(r) => assert_bit_identical(r, &out, &format!("threads={threads}")),
+        }
+    }
+}
+
+#[test]
+fn grouped_handles_shared_only_rows() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // 1-token batch: most routed experts are empty; the shared expert and
+    // at most topk routed experts carry the whole dispatch
+    let cfg = serving_cfg();
+    let plan = mixed_plan(&cfg);
+    let lm = MoeLm::random(&cfg, &mut Rng::new(MODEL_SEED));
+    let mut engine = ServingEngine::new(lm, &artifacts(), &plan).unwrap();
+    let batch = vec![vec![7u32]];
+    engine.set_dispatch_mode(DispatchMode::Sequential);
+    let seq = forward(&mut engine, &batch);
+    engine.set_dispatch_mode(DispatchMode::Grouped);
+    let grouped = forward(&mut engine, &batch);
+    assert_bit_identical(&seq, &grouped, "single-token batch");
+}
