@@ -1,0 +1,43 @@
+# MxMoE build entry points. `make artifacts` is the one CI depends on: it
+# exports the AOT HLO executables that gate the PJRT integration tests and
+# the serving benches (python/compile/aot.py → artifacts/*.hlo.txt).
+# `corpus` and `models` are the heavier, dev-machine targets behind the
+# end-to-end example and the accuracy benches.
+
+PYTHON ?= python3
+CARGO  ?= cargo
+
+.PHONY: all artifacts corpus models build test bench-smoke clean
+
+all: build
+
+# AOT HLO export: every (runtime scheme, tile) expert-FFN executable plus
+# the group-GEMM block executable and the smoke matmul. Pure function of
+# python/compile/** — CI caches artifacts/ on hashFiles of that tree.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts
+
+# Synthetic Zipf–Markov corpus (rust is the source of truth).
+corpus:
+	$(CARGO) run --release --bin mxmoe -- gen-corpus --out artifacts/corpus.mxt
+
+# Train the mini MoE LMs + parity tensors (slow; needs `make corpus`).
+models:
+	cd python && $(PYTHON) -m compile.train_lm --out ../artifacts
+
+build:
+	$(CARGO) build --release
+
+# Tier-1 gate. With artifacts present, the artifact-gated integration
+# tests run for real; MXMOE_REQUIRE_ARTIFACTS=1 turns any self-skip into a
+# failure (what CI uses so the gate can't go green by skipping).
+test: build
+	$(CARGO) test -q
+
+# The two serving benches CI runs on every push (BENCH_*.json outputs).
+bench-smoke:
+	$(CARGO) bench --bench bench_group_dispatch -- --smoke
+	$(CARGO) bench --bench bench_cluster -- --smoke
+
+clean:
+	rm -rf target BENCH_*.json

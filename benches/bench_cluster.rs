@@ -1,0 +1,201 @@
+//! §Sharded-Serving — N-replica cluster vs single replica, same trace.
+//!
+//! Scenario: a serving-shape model with a mixed-precision plan serves a
+//! fixed scoring trace twice — once on a 1-replica cluster, once on a
+//! 4-replica cluster with expert-affinity routing and work stealing. The
+//! responses must match bit for bit (sharding is a pure throughput
+//! transform); the bench reports per-shape wall-clock, scoring throughput,
+//! the router's batch distribution, and the speedup (target: ≥ 2× on 4
+//! replicas). Results land in `BENCH_cluster.json`.
+//!
+//! `--smoke` shrinks the trace for CI and skips the speedup assertion
+//! (shared runners have unpredictable core counts); bit-identity is
+//! enforced in both modes.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use mxmoe::coordinator::{Cluster, ClusterConfig, ClusterReport, ServeConfig};
+use mxmoe::harness::{mixed_runtime_plan, require_artifacts, save_model_mxt};
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::ser::Json;
+use mxmoe::util::Rng;
+
+const MODEL_SEED: u64 = 0xC1_05_7E6;
+
+/// Serving-shape model (hidden=128, inter=64 — what the AOT export ships).
+fn serving_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "cluster-bench".into(),
+        vocab: 64,
+        hidden: 128,
+        layers: 2,
+        heads: 4,
+        n_experts: 4,
+        n_shared: 1,
+        topk: 2,
+        inter: 64,
+        dense_first: false,
+        seq_len: 24,
+    }
+}
+
+/// The fixed scoring trace: varying lengths, same seed for every shape.
+fn trace(cfg: &ModelConfig, n_requests: usize) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(0x7EACE);
+    (0..n_requests)
+        .map(|i| {
+            let len = [cfg.seq_len, 5, 16, 9, cfg.seq_len, 11][i % 6];
+            (0..len).map(|_| rng.below(cfg.vocab as u64) as u32).collect()
+        })
+        .collect()
+}
+
+struct RunResult {
+    elapsed_s: f64,
+    tokens: usize,
+    responses: Vec<(u32, u64)>,
+    report: ClusterReport,
+}
+
+/// Serve `reqs` on an N-replica cluster: a warmup round (engine build,
+/// executable compilation) then the timed trace.
+fn run_cluster(
+    cfg: &ModelConfig,
+    weights: &PathBuf,
+    artifacts: &PathBuf,
+    replicas: usize,
+    reqs: &[Vec<u32>],
+) -> Result<RunResult> {
+    let cluster = Cluster::start(
+        cfg.clone(),
+        weights.clone(),
+        artifacts.clone(),
+        mixed_runtime_plan(cfg),
+        ClusterConfig {
+            replicas,
+            // one request per batch: identical batch composition for every
+            // cluster shape, which is what makes bit-identity well-defined
+            serve: ServeConfig {
+                max_batch_seqs: 1,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )?;
+    // warmup: enough requests to touch every replica at least once
+    let warmup: Vec<_> = (0..replicas * 2)
+        .map(|_| cluster.submit(reqs[0].clone()))
+        .collect::<Result<_>>()?;
+    for rx in warmup {
+        rx.recv_timeout(Duration::from_secs(600)).expect("warmup response");
+    }
+    // timed trace
+    let start = Instant::now();
+    let receivers: Vec<_> =
+        reqs.iter().map(|r| cluster.submit(r.clone())).collect::<Result<_>>()?;
+    let responses: Vec<(u32, u64)> = receivers
+        .iter()
+        .map(|rx| {
+            let r = rx.recv_timeout(Duration::from_secs(600)).expect("response");
+            (r.next_token, r.mean_nll.to_bits())
+        })
+        .collect();
+    let elapsed_s = start.elapsed().as_secs_f64();
+    let tokens: usize = reqs.iter().map(|r| r.len()).sum();
+    Ok(RunResult { elapsed_s, tokens, responses, report: cluster.shutdown() })
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!("# §Sharded-Serving — N-replica cluster vs single replica");
+
+    let mut results = vec![("smoke", Json::Bool(smoke))];
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping cluster bench: artifacts not built (run `make artifacts`)");
+        std::fs::write(
+            "BENCH_cluster.json",
+            Json::obj(results.iter().map(|(k, v)| (*k, v.clone())).collect()).pretty(),
+        )?;
+        return Ok(());
+    };
+
+    let cfg = serving_cfg();
+    let weights = std::env::temp_dir().join("mxmoe_bench_cluster.mxt");
+    let lm = MoeLm::random(&cfg, &mut Rng::new(MODEL_SEED));
+    save_model_mxt(&lm, &weights)?;
+    let reqs = trace(&cfg, if smoke { 24 } else { 96 });
+
+    let single = run_cluster(&cfg, &weights, &artifacts, 1, &reqs)?;
+    let sharded = run_cluster(&cfg, &weights, &artifacts, 4, &reqs)?;
+    let _ = std::fs::remove_file(&weights);
+
+    // speedup only counts if sharding changed nothing but the wall clock
+    assert_eq!(
+        single.responses, sharded.responses,
+        "4-replica responses diverged from single-replica — sharding must be \
+         a pure throughput transform"
+    );
+
+    let t1 = single.tokens as f64 / single.elapsed_s;
+    let t4 = sharded.tokens as f64 / sharded.elapsed_s;
+    let speedup = single.elapsed_s / sharded.elapsed_s;
+    println!(
+        "| 1 replica  | {:>4} req | {:>6} tok | {:>8.3} s | {:>9.1} tok/s |",
+        reqs.len(),
+        single.tokens,
+        single.elapsed_s,
+        t1
+    );
+    println!(
+        "| 4 replicas | {:>4} req | {:>6} tok | {:>8.3} s | {:>9.1} tok/s | routed {:?} | {} stolen |",
+        reqs.len(),
+        sharded.tokens,
+        sharded.elapsed_s,
+        t4,
+        sharded.report.router.routed,
+        sharded.report.total_steals(),
+    );
+    println!("speedup: {speedup:.2}×");
+
+    // the router must have spread the trace: no replica owns everything
+    let executed: Vec<usize> =
+        sharded.report.replicas.iter().map(|r| r.executed_batches).collect();
+    assert!(
+        executed.iter().filter(|&&e| e > 0).count() >= 2,
+        "4-replica run executed everything on one replica: {executed:?}"
+    );
+    if !smoke {
+        assert!(
+            speedup >= 2.0,
+            "4-replica speedup {speedup:.2}× below the 2× acceptance bar"
+        );
+    }
+
+    results.extend([
+        ("requests", Json::num(reqs.len() as f64)),
+        ("tokens", Json::num(single.tokens as f64)),
+        ("single_replica_s", Json::num(single.elapsed_s)),
+        ("four_replica_s", Json::num(sharded.elapsed_s)),
+        ("single_tok_per_s", Json::num(t1)),
+        ("four_tok_per_s", Json::num(t4)),
+        ("speedup", Json::num(speedup)),
+        ("stolen_batches", Json::num(sharded.report.total_steals() as f64)),
+        (
+            "max_executed_share",
+            Json::num(
+                *executed.iter().max().unwrap_or(&0) as f64
+                    / sharded.report.router.batches.max(1) as f64,
+            ),
+        ),
+        ("bit_identical", Json::Bool(true)),
+    ]);
+    std::fs::write(
+        "BENCH_cluster.json",
+        Json::obj(results.iter().map(|(k, v)| (*k, v.clone())).collect()).pretty(),
+    )?;
+    println!("\nwrote BENCH_cluster.json");
+    Ok(())
+}

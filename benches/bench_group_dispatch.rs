@@ -16,12 +16,12 @@
 //! (shared runners have unpredictable core counts); the micro-guard is
 //! enforced in both modes.
 
-use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::Result;
 use mxmoe::alloc::Allocation;
 use mxmoe::coordinator::ServingEngine;
+use mxmoe::harness::require_artifacts;
 use mxmoe::moe::{ModelConfig, MoeLm};
 use mxmoe::quant::QuantScheme;
 use mxmoe::runtime::{lit_f32, DispatchMode};
@@ -30,10 +30,6 @@ use mxmoe::tensor::Matrix;
 use mxmoe::util::Rng;
 
 const MODEL_SEED: u64 = 0x9805_D15B;
-
-fn artifacts() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
 
 /// Serving-shape model (hidden=128, inter=64 — what the AOT export ships).
 fn serving_cfg() -> ModelConfig {
@@ -143,20 +139,20 @@ fn main() -> Result<()> {
         ("smoke", Json::Bool(smoke)),
     ];
 
-    if !artifacts().join("expert_ffn_fp16_m16.hlo.txt").exists() {
+    let Some(artifacts) = require_artifacts() else {
         eprintln!("skipping dispatch bench: artifacts not built (run `make artifacts`)");
         std::fs::write(
             "BENCH_group_dispatch.json",
             Json::obj(results.iter().map(|(k, v)| (*k, v.clone())).collect()).pretty(),
         )?;
         return Ok(());
-    }
+    };
 
     // ---- macro bench: same stream, both modes ----
     let cfg = serving_cfg();
     let plan = mixed_plan(&cfg);
     let lm = MoeLm::random(&cfg, &mut Rng::new(MODEL_SEED));
-    let mut engine = ServingEngine::new(lm, &artifacts(), &plan)?;
+    let mut engine = ServingEngine::new(lm, &artifacts, &plan)?;
 
     let mut rng = Rng::new(0xD15B);
     let reps = if smoke { 3 } else { 24 };

@@ -12,7 +12,6 @@
 //! Runs directly against the engine (no server thread) so each phase's
 //! throughput is attributable and the swap point is deterministic.
 
-use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -22,16 +21,13 @@ use mxmoe::alloc::{
 };
 use mxmoe::coordinator::ServingEngine;
 use mxmoe::costmodel::GpuSpec;
+use mxmoe::harness::require_artifacts;
 use mxmoe::moe::{ModelConfig, MoeLm};
 use mxmoe::quant::SchemeRegistry;
 use mxmoe::serve::{ReplanConfig, Replanner};
 use mxmoe::util::Rng;
 
 const MODEL_SEED: u64 = 0x0511_CE;
-
-fn artifacts() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
 
 /// Serving-shape model (hidden=128, inter=64 — what the AOT export ships).
 fn serving_cfg() -> ModelConfig {
@@ -89,10 +85,10 @@ fn scheme_histogram(engine: &ServingEngine) -> String {
 }
 
 fn main() -> Result<()> {
-    if !artifacts().join("expert_ffn_fp16_m16.hlo.txt").exists() {
+    let Some(artifacts) = require_artifacts() else {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         return Ok(());
-    }
+    };
     let cfg = serving_cfg();
     let lm = MoeLm::random(&cfg, &mut Rng::new(MODEL_SEED));
 
@@ -112,7 +108,7 @@ fn main() -> Result<()> {
     let gpu = GpuSpec::rtx4090();
     let plan_a = allocate(&lm, &gpu, &registry, &stats, &sens, &alloc_cfg)?;
 
-    let mut engine = ServingEngine::new(lm, &artifacts(), &plan_a)?;
+    let mut engine = ServingEngine::new(lm, &artifacts, &plan_a)?;
     engine.set_baseline(activation_frequencies(&stats));
     engine.set_telemetry_alpha(0.25);
     let replanner = Replanner {
@@ -163,7 +159,7 @@ fn main() -> Result<()> {
     // bit-for-bit: same weights (deterministic seed), same allocation
     let lm2 = MoeLm::random(&cfg, &mut Rng::new(MODEL_SEED));
     let plan_b = engine.allocation().clone();
-    let mut fresh = ServingEngine::new(lm2, &artifacts(), &plan_b)?;
+    let mut fresh = ServingEngine::new(lm2, &artifacts, &plan_b)?;
     let probe: Vec<Vec<u32>> = (0..4).map(|_| uniform_seq(&cfg, &mut rng)).collect();
     let probe_refs: Vec<&[u32]> = probe.iter().map(|s| s.as_slice()).collect();
     let swapped = engine.forward_batch(&probe_refs)?;

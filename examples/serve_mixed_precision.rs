@@ -18,7 +18,7 @@ use mxmoe::alloc::{
     activation_frequencies, allocate, calibrate, measure_sensitivity, Allocation,
     AllocatorConfig, Granularity,
 };
-use mxmoe::coordinator::{OnlineConfig, ServeConfig, Server};
+use mxmoe::coordinator::{Cluster, ClusterConfig, OnlineConfig, ServeConfig, Server};
 use mxmoe::costmodel::GpuSpec;
 use mxmoe::harness::{artifacts_dir, fast_mode, load_corpus, load_model};
 use mxmoe::quant::{QuantScheme, SchemeRegistry};
@@ -108,6 +108,47 @@ fn main() -> Result<()> {
     );
     println!("\nE2E OK — mixed-precision serving preserves quality (ppl {mx_ppl:.3} vs fp16 {fp16_ppl:.3}).");
     println!("(CPU-PJRT wall-clock is not a GPU perf proxy — Fig. 2/5 shapes come from the simulator benches.)");
+
+    // ---- sharded serving: N replicas behind the expert-affinity router ----
+    // Same plan, same stream — the cluster shards the serve queue across
+    // replica engines (one PJRT client each); the router scores each cut
+    // batch against every replica's plan and work stealing mops up any
+    // imbalance. Responses are bit-identical to the 1-replica server.
+    let n_replicas = 2;
+    eprintln!("serving with MxMoE mixed on a {n_replicas}-replica cluster...");
+    let cluster = Cluster::start(
+        cfg.clone(),
+        weights_path.clone(),
+        artifacts_dir(),
+        mx_alloc.clone(),
+        ClusterConfig {
+            replicas: n_replicas,
+            serve: ServeConfig {
+                max_batch_seqs: 8,
+                max_wait: Duration::from_millis(10),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )?;
+    let mut rng = Rng::new(0x5E12);
+    let eval_seqs = corpus.sequences("valid", cfg.seq_len);
+    let mut receivers = Vec::new();
+    for _ in 0..n_requests {
+        let seq = eval_seqs[rng.below(eval_seqs.len() as u64) as usize].to_vec();
+        receivers.push(cluster.submit(seq)?);
+    }
+    for rx in receivers {
+        rx.recv_timeout(Duration::from_secs(600)).expect("response");
+    }
+    let creport = cluster.shutdown();
+    println!(
+        "cluster ×{n_replicas}         | {:>8.1} tok/s | routed {:?} | {} stolen | per-replica batches {:?}",
+        creport.throughput_tps(),
+        creport.router.routed,
+        creport.total_steals(),
+        creport.replicas.iter().map(|r| r.executed_batches).collect::<Vec<_>>(),
+    );
 
     // ---- closed-loop demo: online telemetry + drift-adaptive replan ----
     // phase 1 replays the calibration-like corpus distribution; phase 2

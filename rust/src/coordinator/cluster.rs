@@ -1,0 +1,556 @@
+//! Multi-replica sharded serving (DESIGN.md §Sharded-Serving): one
+//! admission queue feeding N engine replicas through an expert-affinity
+//! router.
+//!
+//! The router thread owns the [`ContinuousBatcher`]: it admits requests,
+//! cuts batches on the same cap/budget/deadline policy the single-engine
+//! server used ([`ContinuousBatcher::time_to_cut`] makes a past-deadline
+//! tail re-cut immediately, never waiting on the next arrival), then
+//! routes each batch to the replica whose *plan* fits it best:
+//!
+//! * **Affinity** ([`affinity_score`]): project the batch's per-expert row
+//!   counts from the cluster-aggregated live activation frequencies, tile
+//!   them through [`dispatch::fill_estimate`], and weight each expert's
+//!   projected fill by the relative throughput of the runtime family the
+//!   replica's plan assigns it. Replicas whose plans put the batch's hot
+//!   experts on dense, low-precision waves score highest.
+//! * **Load** ([`choose_replica`]): the score is discounted by the
+//!   replica's backlog, and the work-stealing deques
+//!   ([`crate::serve::replica::WorkQueues`]) are the fallback — an idle
+//!   replica steals the oldest batch of the deepest peer, so a scoring
+//!   mistake costs latency, never starvation.
+//!
+//! Replicas may hold *different* precision plans: under online serving
+//! each replica replans from its own telemetry, and the status board keeps
+//! the router's scoring current as plans drift apart.
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::alloc::Allocation;
+use crate::moe::ModelConfig;
+use crate::runtime::dispatch;
+use crate::runtime::RuntimeScheme;
+use crate::ser::MxtFile;
+use crate::serve::queue::ContinuousBatcher;
+use crate::serve::replan::Replanner;
+use crate::serve::replica::{
+    replica_main, ReplicaOnline, ReplicaSpec, ReplicaStatus, RoutedBatch, WorkQueues,
+};
+use crate::serve::{Request, Response};
+
+use super::metrics::{ClusterReport, ReplicaReport, RouterStats};
+use super::server::ServeConfig;
+
+/// Everything the online loop needs beyond the static plans: the
+/// workload-independent replanner and the calibration frequency vector
+/// that seeds every replica's drift baseline.
+pub struct OnlineConfig {
+    pub replanner: Replanner,
+    /// Per-layer routed-expert calibration frequencies
+    /// ([`crate::alloc::activation_frequencies`]).
+    pub baseline: Vec<Vec<f64>>,
+    /// Telemetry EWMA step; `None` keeps the engine default.
+    pub ewma_alpha: Option<f64>,
+}
+
+/// Router scoring knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct AffinityConfig {
+    /// Backlog discount: a replica's affinity score is divided by
+    /// `1 + queue_penalty × (queued + in-flight batches)`, so affinity
+    /// wins among comparably-loaded replicas and load wins under
+    /// imbalance.
+    pub queue_penalty: f64,
+}
+
+impl Default for AffinityConfig {
+    fn default() -> Self {
+        AffinityConfig { queue_penalty: 0.5 }
+    }
+}
+
+/// Cluster shape + batching policy.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Engine replicas (worker threads, one PJRT client each).
+    pub replicas: usize,
+    pub serve: ServeConfig,
+    pub affinity: AffinityConfig,
+    /// Grouped-dispatch worker threads per replica (`None` = engine
+    /// default). Results are bit-identical for any value ≥ 1.
+    pub dispatch_threads: Option<usize>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 1,
+            serve: ServeConfig::default(),
+            affinity: AffinityConfig::default(),
+            dispatch_threads: None,
+        }
+    }
+}
+
+/// Relative serving throughput of a runtime family, fp16 ≡ 1. Mirrors the
+/// cost model's ordering on GroupGEMM shapes (lower-precision tiles move
+/// fewer bytes and finish sooner); the absolute values only need to rank
+/// replicas, not predict wall-clock.
+pub fn scheme_speed(s: RuntimeScheme) -> f64 {
+    match s {
+        RuntimeScheme::Fp16 => 1.0,
+        RuntimeScheme::W4A16 => 1.8,
+        RuntimeScheme::W8A8 => 2.2,
+        RuntimeScheme::W4A4 => 3.2,
+    }
+}
+
+/// Expert-affinity score of routing a `batch_tokens`-token batch to a
+/// replica whose plan is `schemes` (`[block_pos][slot]`, routed then
+/// shared), given the cluster's live routed-expert frequencies `freqs`
+/// (`[block_pos][routed expert]`, normalized per layer).
+///
+/// Per layer: each routed expert's projected row count is
+/// `batch_tokens × topk × freq`, tiled through
+/// [`dispatch::fill_estimate`]; shared experts see every token. The score
+/// is the row-weighted mean of `fill × scheme_speed` — i.e. the projected
+/// useful wave throughput of this batch on this replica's plan — averaged
+/// over layers. Higher is better; the value is deterministic in its
+/// inputs.
+pub fn affinity_score(
+    batch_tokens: usize,
+    topk: usize,
+    freqs: &[Vec<f64>],
+    schemes: &[Vec<RuntimeScheme>],
+) -> f64 {
+    if batch_tokens == 0 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    let mut layers = 0usize;
+    for (lf, ls) in freqs.iter().zip(schemes) {
+        let n_routed = lf.len().min(ls.len());
+        let mut weighted = 0.0; // Σ rows · fill · speed
+        let mut rows_sum = 0.0; // Σ rows
+        for e in 0..n_routed {
+            let rows = (batch_tokens * topk) as f64 * lf[e].max(0.0);
+            let r = rows.round() as usize;
+            if r == 0 {
+                continue;
+            }
+            let fill = dispatch::fill_estimate(r).fill_ratio();
+            weighted += rows * fill * scheme_speed(ls[e]);
+            rows_sum += rows;
+        }
+        for &s in &ls[n_routed..] {
+            // shared experts run the whole batch
+            let fill = dispatch::fill_estimate(batch_tokens).fill_ratio();
+            weighted += batch_tokens as f64 * fill * scheme_speed(s);
+            rows_sum += batch_tokens as f64;
+        }
+        if rows_sum > 0.0 {
+            total += weighted / rows_sum;
+            layers += 1;
+        }
+    }
+    if layers == 0 {
+        0.0
+    } else {
+        total / layers as f64
+    }
+}
+
+/// Pick the replica with the best backlog-discounted affinity score.
+/// Deterministic: ties break to the lowest replica index.
+pub fn choose_replica(scores: &[f64], backlogs: &[usize], queue_penalty: f64) -> usize {
+    assert!(!scores.is_empty());
+    assert_eq!(scores.len(), backlogs.len());
+    let mut best = 0usize;
+    let mut best_v = f64::NEG_INFINITY;
+    for (i, (&s, &b)) in scores.iter().zip(backlogs).enumerate() {
+        let v = s / (1.0 + queue_penalty * b as f64);
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best
+}
+
+/// Token-weighted cluster aggregate of the replicas' live frequency
+/// estimates — the router's proxy for which experts the next batch will
+/// hit. Before traffic, every replica publishes its boot distribution, so
+/// the aggregate degrades to that.
+fn cluster_freqs(status: &[Mutex<ReplicaStatus>]) -> Vec<Vec<f64>> {
+    let snaps: Vec<(f64, Vec<Vec<f64>>)> = status
+        .iter()
+        .map(|s| {
+            let g = s.lock().unwrap();
+            (g.observed_tokens.max(1) as f64, g.live_freqs.clone())
+        })
+        .collect();
+    let layers = snaps.first().map_or(0, |(_, f)| f.len());
+    let mut out = Vec::with_capacity(layers);
+    for l in 0..layers {
+        let experts = snaps[0].1[l].len();
+        let mut acc = vec![0.0f64; experts];
+        let mut wsum = 0.0f64;
+        for (w, f) in &snaps {
+            if f.len() != layers || f[l].len() != experts {
+                continue; // replica mid-publish with a different shape
+            }
+            for (a, v) in acc.iter_mut().zip(&f[l]) {
+                *a += w * v;
+            }
+            wsum += w;
+        }
+        if wsum > 0.0 {
+            for a in acc.iter_mut() {
+                *a /= wsum;
+            }
+        }
+        out.push(acc);
+    }
+    out
+}
+
+/// Handle to a running replica cluster.
+pub struct Cluster {
+    tx: mpsc::Sender<Request>,
+    router: Option<thread::JoinHandle<RouterStats>>,
+    workers: Vec<thread::JoinHandle<ReplicaReport>>,
+}
+
+impl Cluster {
+    /// Start a static-plan cluster: every replica boots the same
+    /// allocation and serves it unchanged.
+    pub fn start(
+        cfg: ModelConfig,
+        weights_path: PathBuf,
+        artifacts: PathBuf,
+        allocation: Allocation,
+        cluster_cfg: ClusterConfig,
+    ) -> Result<Cluster> {
+        Cluster::spawn(cfg, weights_path, artifacts, allocation, cluster_cfg, None)
+    }
+
+    /// Start a cluster with per-replica online re-allocation: each replica
+    /// tracks its own telemetry against the shared calibration baseline
+    /// and replans independently, so plans may diverge to match the
+    /// traffic each replica actually serves.
+    pub fn start_online(
+        cfg: ModelConfig,
+        weights_path: PathBuf,
+        artifacts: PathBuf,
+        allocation: Allocation,
+        cluster_cfg: ClusterConfig,
+        online: OnlineConfig,
+    ) -> Result<Cluster> {
+        Cluster::spawn(cfg, weights_path, artifacts, allocation, cluster_cfg, Some(online))
+    }
+
+    fn spawn(
+        cfg: ModelConfig,
+        weights_path: PathBuf,
+        artifacts: PathBuf,
+        allocation: Allocation,
+        cluster_cfg: ClusterConfig,
+        online: Option<OnlineConfig>,
+    ) -> Result<Cluster> {
+        assert!(cluster_cfg.replicas >= 1, "a cluster needs at least one replica");
+        // load weights once on the caller thread (errors surface here, not
+        // inside a worker); replicas share the file and build their own
+        // models/engines from it
+        let weights = Arc::new(MxtFile::load(&weights_path)?);
+        let online = online.map(|o| {
+            Arc::new(ReplicaOnline {
+                replanner: o.replanner,
+                baseline: o.baseline,
+                ewma_alpha: o.ewma_alpha,
+            })
+        });
+        let n = cluster_cfg.replicas;
+        let queues = WorkQueues::new(n);
+        let status: Arc<Vec<Mutex<ReplicaStatus>>> = Arc::new(
+            (0..n).map(|_| Mutex::new(ReplicaStatus::boot(&cfg, &allocation))).collect(),
+        );
+        let mut workers = Vec::with_capacity(n);
+        for id in 0..n {
+            let spec = ReplicaSpec {
+                id,
+                cfg: cfg.clone(),
+                weights: weights.clone(),
+                artifacts: artifacts.clone(),
+                allocation: allocation.clone(),
+                online: online.clone(),
+                dispatch_threads: cluster_cfg.dispatch_threads,
+            };
+            let q = queues.clone();
+            let st = status.clone();
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("mxmoe-replica-{id}"))
+                    .spawn(move || replica_main(spec, q, st))
+                    .expect("spawn replica thread"),
+            );
+        }
+        let (tx, rx) = mpsc::channel::<Request>();
+        let policy = cluster_cfg.serve.policy();
+        let affinity = cluster_cfg.affinity;
+        let topk = cfg.topk;
+        let router = thread::Builder::new()
+            .name("mxmoe-router".into())
+            .spawn(move || router_loop(rx, policy, &queues, &status, affinity, topk))
+            .expect("spawn router thread");
+        Ok(Cluster { tx, router: Some(router), workers })
+    }
+
+    /// Submit a request; returns the reply receiver.
+    pub fn submit(&self, tokens: Vec<u32>) -> Result<mpsc::Receiver<Response>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request { tokens, reply, arrived: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("cluster closed"))?;
+        Ok(rx)
+    }
+
+    /// Close admission, drain every queue, and collect the cluster report.
+    pub fn shutdown(mut self) -> ClusterReport {
+        drop(self.tx);
+        let router =
+            self.router.take().unwrap().join().expect("router thread panicked");
+        let mut replicas: Vec<ReplicaReport> = self
+            .workers
+            .drain(..)
+            .map(|h| h.join().expect("replica thread panicked"))
+            .collect();
+        replicas.sort_by_key(|r| r.id);
+        ClusterReport { replicas, router }
+    }
+}
+
+fn router_loop(
+    rx: mpsc::Receiver<Request>,
+    policy: crate::serve::BatchPolicy,
+    queues: &WorkQueues,
+    status: &[Mutex<ReplicaStatus>],
+    affinity: AffinityConfig,
+    topk: usize,
+) -> RouterStats {
+    let start = Instant::now();
+    let n = status.len();
+    let mut batcher = ContinuousBatcher::new(policy);
+    let mut stats = RouterStats::new(n);
+    let mut closed = false;
+    loop {
+        // admit: block for the first request only when nothing is queued
+        if batcher.depth() == 0 {
+            if closed {
+                break;
+            }
+            match rx.recv() {
+                Ok(r) => batcher.push(r),
+                Err(_) => break, // channel closed, queue drained
+            }
+        }
+        if !closed {
+            // drain whatever already arrived while the last batch was cut
+            loop {
+                match rx.try_recv() {
+                    Ok(r) => batcher.push(r),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            }
+            // wait for stragglers only as long as the cut policy allows:
+            // time_to_cut is None the moment a cap is hit or the oldest
+            // request (including a tail left by a token-budget cut) is past
+            // its deadline — a past-deadline tail never waits for arrivals
+            while !closed {
+                match batcher.time_to_cut(Instant::now()) {
+                    None => break,
+                    Some(wait) => match rx.recv_timeout(wait) {
+                        Ok(r) => batcher.push(r),
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
+                    },
+                }
+            }
+        }
+        // back-pressure: a cut no replica can start only fragments load
+        // into deque-queued slivers. Wait until some live replica is idle
+        // — the legacy single-engine loop got adaptive batch sizing for
+        // free by cutting strictly between batches; this is its cluster
+        // generalization — then merge whatever arrived meanwhile into the
+        // cut so batches grow under load instead of multiplying.
+        if !queues.wait_for_capacity() {
+            break; // every replica died at boot: nothing can ever execute
+        }
+        if !closed {
+            loop {
+                match rx.try_recv() {
+                    Ok(r) => batcher.push(r),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            }
+        }
+        stats.max_queue_depth = stats.max_queue_depth.max(batcher.depth());
+        let batch = batcher.take_batch();
+        if batch.is_empty() {
+            continue;
+        }
+        let cut_tokens: usize = batch.iter().map(|r| r.tokens.len()).sum();
+        stats.last_planned_fill = dispatch::fill_estimate(cut_tokens).fill_ratio();
+        // ---- route: affinity score per replica, discounted by backlog ----
+        let chosen = if n == 1 {
+            0 // single-replica façade: scoring is overhead with one answer
+        } else {
+            let freqs = cluster_freqs(status);
+            let backlogs = queues.loads(); // queued + in-flight
+            let scores: Vec<f64> = status
+                .iter()
+                .map(|s| affinity_score(cut_tokens, topk, &freqs, &s.lock().unwrap().schemes))
+                .collect();
+            choose_replica(&scores, &backlogs, affinity.queue_penalty)
+        };
+        stats.batches += 1;
+        stats.routed[chosen] += 1;
+        queues.push(chosen, RoutedBatch { requests: batch });
+    }
+    queues.close();
+    stats.elapsed_s = start.elapsed().as_secs_f64();
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_freqs(layers: usize, experts: usize) -> Vec<Vec<f64>> {
+        vec![vec![1.0 / experts as f64; experts]; layers]
+    }
+
+    #[test]
+    fn speed_ranking_matches_the_cost_model_ordering() {
+        assert!(scheme_speed(RuntimeScheme::W4A4) > scheme_speed(RuntimeScheme::W8A8));
+        assert!(scheme_speed(RuntimeScheme::W8A8) > scheme_speed(RuntimeScheme::W4A16));
+        assert!(scheme_speed(RuntimeScheme::W4A16) > scheme_speed(RuntimeScheme::Fp16));
+        assert_eq!(scheme_speed(RuntimeScheme::Fp16), 1.0);
+    }
+
+    #[test]
+    fn affinity_prefers_low_precision_on_hot_experts() {
+        // expert 0 carries 90% of the routing mass; the replica that
+        // serves it in w4a4 must outscore the one serving it in fp16,
+        // even though both plans hold the same scheme multiset
+        let freqs = vec![vec![0.9, 0.1]];
+        let hot_fast = vec![vec![RuntimeScheme::W4A4, RuntimeScheme::Fp16]];
+        let hot_slow = vec![vec![RuntimeScheme::Fp16, RuntimeScheme::W4A4]];
+        let a = affinity_score(64, 1, &freqs, &hot_fast);
+        let b = affinity_score(64, 1, &freqs, &hot_slow);
+        assert!(a > b, "hot-expert-fast {a} must beat hot-expert-slow {b}");
+    }
+
+    #[test]
+    fn affinity_penalizes_ragged_hot_experts() {
+        // same plan, different batch sizes: 64 tokens tile exactly, 65
+        // tokens leave a near-empty ragged tile on every expert — the
+        // projected fill (and score) must drop
+        let freqs = vec![vec![0.5, 0.5]];
+        let plan = vec![vec![RuntimeScheme::W8A8, RuntimeScheme::W8A8]];
+        let dense = affinity_score(128, 1, &freqs, &plan);
+        let ragged = affinity_score(130, 1, &freqs, &plan);
+        assert!(
+            dense > ragged,
+            "dense-tiling batch {dense} must outscore ragged {ragged}"
+        );
+    }
+
+    #[test]
+    fn affinity_counts_shared_experts() {
+        // plans identical on routed experts, different on the shared slot
+        let freqs = uniform_freqs(1, 2);
+        let shared_fast =
+            vec![vec![RuntimeScheme::Fp16, RuntimeScheme::Fp16, RuntimeScheme::W4A4]];
+        let shared_slow =
+            vec![vec![RuntimeScheme::Fp16, RuntimeScheme::Fp16, RuntimeScheme::Fp16]];
+        assert!(
+            affinity_score(64, 2, &freqs, &shared_fast)
+                > affinity_score(64, 2, &freqs, &shared_slow)
+        );
+    }
+
+    #[test]
+    fn affinity_is_deterministic_and_bounded() {
+        let freqs = vec![vec![0.7, 0.2, 0.1], vec![0.1, 0.1, 0.8]];
+        let plan = vec![
+            vec![RuntimeScheme::W4A4, RuntimeScheme::Fp16, RuntimeScheme::W8A8],
+            vec![RuntimeScheme::W4A16, RuntimeScheme::W8A8, RuntimeScheme::Fp16],
+        ];
+        let a = affinity_score(68, 2, &freqs, &plan);
+        let b = affinity_score(68, 2, &freqs, &plan);
+        assert_eq!(a, b, "scoring must be reproducible");
+        assert!(a > 0.0 && a <= scheme_speed(RuntimeScheme::W4A4), "{a}");
+        assert_eq!(affinity_score(0, 2, &freqs, &plan), 0.0, "empty batch scores 0");
+    }
+
+    #[test]
+    fn choose_replica_discounts_backlog_and_breaks_ties_low() {
+        // equal scores: lowest index wins
+        assert_eq!(choose_replica(&[1.0, 1.0, 1.0], &[0, 0, 0], 0.5), 0);
+        // backlog discounts: a deep queue loses to an idle replica with a
+        // slightly worse score
+        assert_eq!(choose_replica(&[1.2, 1.0], &[4, 0], 0.5), 1);
+        // zero penalty: pure affinity
+        assert_eq!(choose_replica(&[1.2, 1.0], &[4, 0], 0.0), 0);
+    }
+
+    #[test]
+    fn cluster_freqs_weights_by_observed_tokens() {
+        use crate::quant::QuantScheme;
+        let cfg = ModelConfig {
+            name: "freqs".into(),
+            vocab: 32,
+            hidden: 16,
+            layers: 2,
+            heads: 2,
+            n_experts: 2,
+            n_shared: 0,
+            topk: 1,
+            inter: 8,
+            dense_first: false,
+            seq_len: 8,
+        };
+        let alloc = Allocation::uniform(&cfg, QuantScheme::FP16);
+        let a = Mutex::new(ReplicaStatus::boot(&cfg, &alloc));
+        let b = Mutex::new(ReplicaStatus::boot(&cfg, &alloc));
+        {
+            // replica a saw 3× the traffic, all of it on expert 0
+            let mut g = a.lock().unwrap();
+            g.live_freqs = vec![vec![1.0, 0.0]];
+            g.observed_tokens = 300;
+        }
+        {
+            let mut g = b.lock().unwrap();
+            g.live_freqs = vec![vec![0.0, 1.0]];
+            g.observed_tokens = 100;
+        }
+        let status = vec![a, b];
+        let f = cluster_freqs(&status);
+        assert_eq!(f.len(), 1);
+        assert!((f[0][0] - 0.75).abs() < 1e-12, "token-weighted mean: {:?}", f[0]);
+        assert!((f[0][1] - 0.25).abs() < 1e-12);
+    }
+}

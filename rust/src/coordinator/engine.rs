@@ -202,8 +202,7 @@ impl ServingEngine {
     /// vector via [`set_baseline`](Self::set_baseline) for meaningful
     /// drift scores.
     pub fn new(lm: MoeLm, artifacts: &Path, allocation: &Allocation) -> Result<ServingEngine> {
-        let runtime = Runtime::cpu(artifacts)?;
-        runtime.warmup_expert_ffn()?;
+        let runtime = Runtime::cpu_warmed(artifacts)?;
         let slots = SlotTable::build(&lm, allocation)?;
         let telemetry =
             ActivationTelemetry::uniform(slots.n_layers(), lm.cfg.n_experts, DEFAULT_EWMA_ALPHA);
@@ -276,6 +275,13 @@ impl ServingEngine {
     /// Scheme histogram for reporting.
     pub fn scheme_counts(&self) -> Vec<(RuntimeScheme, usize)> {
         self.dispatch.slots.scheme_counts()
+    }
+
+    /// Snapshot of the live plan: runtime family per
+    /// `[block_pos][expert slot]` (routed then shared) — the replica's
+    /// contribution to the router's affinity scoring.
+    pub fn plan_schemes(&self) -> Vec<Vec<RuntimeScheme>> {
+        self.dispatch.slots.scheme_table()
     }
 
     /// Seed the drift baseline (and live estimate) with the calibration

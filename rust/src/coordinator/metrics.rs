@@ -1,10 +1,12 @@
 //! Serving metrics: latency distribution + throughput counters + grouped-
-//! dispatch wave telemetry (occupancy, fill, latency percentiles).
+//! dispatch wave telemetry (occupancy, fill, latency percentiles) — plus
+//! the cluster view: per-replica reports and their aggregation into a
+//! single [`ServerReport`] (DESIGN.md §Sharded-Serving).
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use crate::runtime::WaveReport;
+use crate::runtime::{RuntimeScheme, WaveReport};
 use crate::util::stats::Summary;
 
 /// Aggregated wave counters for one runtime scheme family.
@@ -131,6 +133,22 @@ impl Metrics {
         self.last_planned_fill = fill_ratio;
     }
 
+    /// Raw request-latency samples (cluster-level percentile merges).
+    pub fn latencies(&self) -> &[f64] {
+        &self.latencies
+    }
+
+    /// Raw queue-wait samples (cluster-level percentile merges).
+    pub fn queue_waits(&self) -> &[f64] {
+        &self.queue_waits
+    }
+
+    /// Raw wave wall-clock samples retained in the ring (unordered —
+    /// suitable for percentile merges only).
+    pub fn wave_latency_samples(&self) -> &[f64] {
+        &self.wave_latencies
+    }
+
     /// Wave wall-clock distribution (first launch → last completion per
     /// wave) over the most recent [`WAVE_LATENCY_WINDOW`] waves.
     pub fn wave_latency_summary(&self) -> Option<Summary> {
@@ -209,6 +227,198 @@ impl Default for Metrics {
     fn default() -> Self {
         Self::new()
     }
+}
+
+// ---------------- cluster view ----------------
+
+/// Final statistics of one replica worker, assembled at thread exit.
+/// Carries raw latency samples so the cluster view can merge percentiles
+/// instead of averaging averages.
+#[derive(Clone, Debug)]
+pub struct ReplicaReport {
+    pub id: usize,
+    pub requests: usize,
+    pub tokens: usize,
+    /// Batches this replica executed (routed to it or stolen by it).
+    pub executed_batches: usize,
+    /// Of `executed_batches`, how many were stolen from a peer's deque.
+    pub stolen_batches: usize,
+    pub expert_calls: usize,
+    /// Tile rows shipped to PJRT (incl. padding), both dispatch modes.
+    pub padded_rows: usize,
+    pub useful_rows: usize,
+    pub waves: usize,
+    pub max_concurrent_waves: usize,
+    /// Rows shipped by grouped waves only (wave-fill aggregation).
+    pub wave_padded_rows: usize,
+    pub wave_useful_rows: usize,
+    /// Deepest *own* work deque observed at a pop.
+    pub max_queue_depth: usize,
+    pub swaps: usize,
+    pub replans: usize,
+    pub last_drift: f64,
+    /// Final hot-swap generation of this replica's plan.
+    pub generation: u64,
+    pub scheme_counts: Vec<(RuntimeScheme, usize)>,
+    pub latencies: Vec<f64>,
+    pub queue_waits: Vec<f64>,
+    pub wave_latencies: Vec<f64>,
+    /// Engine lifetime (build → report), seconds.
+    pub elapsed_s: f64,
+}
+
+/// Final statistics of the router thread: admission-queue behavior plus
+/// where batches went.
+#[derive(Clone, Debug)]
+pub struct RouterStats {
+    /// Batches cut and routed.
+    pub batches: usize,
+    /// Batches routed to each replica by affinity (steals move them later).
+    pub routed: Vec<usize>,
+    /// Deepest admission queue observed at a batch cut.
+    pub max_queue_depth: usize,
+    /// Planner-projected tile fill of the last batch cut.
+    pub last_planned_fill: f64,
+    /// Router lifetime (first admission poll → queue close), seconds.
+    pub elapsed_s: f64,
+}
+
+impl RouterStats {
+    pub fn new(replicas: usize) -> RouterStats {
+        RouterStats {
+            batches: 0,
+            routed: vec![0; replicas],
+            max_queue_depth: 0,
+            last_planned_fill: 1.0,
+            elapsed_s: 0.0,
+        }
+    }
+}
+
+/// Everything a cluster run produced: per-replica reports plus the router
+/// view. [`flatten`](ClusterReport::flatten) folds it into the legacy
+/// single-engine [`ServerReport`] shape.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub replicas: Vec<ReplicaReport>,
+    pub router: RouterStats,
+}
+
+impl ClusterReport {
+    pub fn total_requests(&self) -> usize {
+        self.replicas.iter().map(|r| r.requests).sum()
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.replicas.iter().map(|r| r.tokens).sum()
+    }
+
+    pub fn total_steals(&self) -> usize {
+        self.replicas.iter().map(|r| r.stolen_batches).sum()
+    }
+
+    /// Cluster throughput over the longest-lived replica's wall clock
+    /// (replicas run concurrently, so summing elapsed would double-count).
+    pub fn throughput_tps(&self) -> f64 {
+        let wall = self.replicas.iter().map(|r| r.elapsed_s).fold(0.0f64, f64::max);
+        self.total_tokens() as f64 / wall.max(1e-9)
+    }
+
+    /// Merge the per-replica reports into the legacy single-engine report
+    /// shape: sums for counters, sample-merged percentiles for
+    /// distributions, maxima for high-water marks.
+    pub fn flatten(&self) -> ServerReport {
+        let mut latencies = Vec::new();
+        let mut queue_waits = Vec::new();
+        let mut wave_lat = Vec::new();
+        for r in &self.replicas {
+            latencies.extend_from_slice(&r.latencies);
+            queue_waits.extend_from_slice(&r.queue_waits);
+            wave_lat.extend_from_slice(&r.wave_latencies);
+        }
+        let lat = (!latencies.is_empty()).then(|| Summary::of(&latencies));
+        let qw = (!queue_waits.is_empty()).then(|| Summary::of(&queue_waits));
+        let wl = (!wave_lat.is_empty()).then(|| Summary::of(&wave_lat));
+        let padded: usize = self.replicas.iter().map(|r| r.padded_rows).sum();
+        let useful: usize = self.replicas.iter().map(|r| r.useful_rows).sum();
+        let wave_padded: usize = self.replicas.iter().map(|r| r.wave_padded_rows).sum();
+        let wave_useful: usize = self.replicas.iter().map(|r| r.wave_useful_rows).sum();
+        ServerReport {
+            requests: self.total_requests(),
+            tokens: self.total_tokens(),
+            throughput_tps: self.throughput_tps(),
+            p50_latency_s: lat.as_ref().map(|s| s.p50).unwrap_or(0.0),
+            p99_latency_s: lat.as_ref().map(|s| s.p99).unwrap_or(0.0),
+            p50_queue_wait_s: qw.as_ref().map(|s| s.p50).unwrap_or(0.0),
+            expert_calls: self.replicas.iter().map(|r| r.expert_calls).sum(),
+            padding_ratio: if padded == 0 {
+                0.0
+            } else {
+                1.0 - useful as f64 / padded as f64
+            },
+            waves: self.replicas.iter().map(|r| r.waves).sum(),
+            max_concurrent_waves: self
+                .replicas
+                .iter()
+                .map(|r| r.max_concurrent_waves)
+                .max()
+                .unwrap_or(0),
+            wave_fill_ratio: if wave_padded == 0 {
+                1.0
+            } else {
+                wave_useful as f64 / wave_padded as f64
+            },
+            p50_wave_s: wl.as_ref().map(|s| s.p50).unwrap_or(0.0),
+            last_planned_fill: self.router.last_planned_fill,
+            max_queue_depth: self.router.max_queue_depth,
+            replans: self.replicas.iter().map(|r| r.replans).sum(),
+            swaps: self.replicas.iter().map(|r| r.swaps).sum(),
+            last_drift: self.replicas.iter().map(|r| r.last_drift).fold(0.0, f64::max),
+            generation: self.replicas.iter().map(|r| r.generation).max().unwrap_or(0),
+            replicas: self.replicas.len(),
+            stolen_batches: self.total_steals(),
+        }
+    }
+}
+
+/// Final statistics returned at shutdown — the cluster-wide view in the
+/// shape the single-engine server has always reported (a 1-replica cluster
+/// reproduces the old numbers).
+#[derive(Clone, Debug)]
+pub struct ServerReport {
+    pub requests: usize,
+    pub tokens: usize,
+    pub throughput_tps: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub p50_queue_wait_s: f64,
+    pub expert_calls: usize,
+    pub padding_ratio: f64,
+    /// Waves executed by grouped dispatch (0 under sequential mode).
+    pub waves: usize,
+    /// Most waves in flight in one grouped dispatch, over all replicas.
+    pub max_concurrent_waves: usize,
+    /// Useful fraction of rows shipped by grouped dispatch.
+    pub wave_fill_ratio: f64,
+    /// p50 wave wall-clock, seconds (0 when no waves ran).
+    pub p50_wave_s: f64,
+    /// Planner-projected tile fill of the last batch cut.
+    pub last_planned_fill: f64,
+    /// Deepest admission queue observed at a batch cut.
+    pub max_queue_depth: usize,
+    /// Drift-triggered MCKP re-solves (summed over replicas).
+    pub replans: usize,
+    /// Expert slots hot-swapped to a new runtime family (summed).
+    pub swaps: usize,
+    /// Worst per-replica telemetry drift at the last check.
+    pub last_drift: f64,
+    /// Highest replica plan generation (0 = every boot plan served
+    /// throughout).
+    pub generation: u64,
+    /// Engine replicas that served this run.
+    pub replicas: usize,
+    /// Batches executed by a different replica than the router chose.
+    pub stolen_batches: usize,
 }
 
 #[cfg(test)]
@@ -295,6 +505,65 @@ mod tests {
         // the earliest samples were overwritten by the newest
         assert!(s.min >= 100.0 - 1e-9, "oldest surviving sample is {}", s.min);
         assert_eq!(m.waves, WAVE_LATENCY_WINDOW + 100, "counters still see every wave");
+    }
+
+    #[test]
+    fn cluster_report_flattens_to_the_legacy_shape() {
+        let replica = |id: usize, lat: f64| ReplicaReport {
+            id,
+            requests: 2,
+            tokens: 100,
+            executed_batches: 2,
+            stolen_batches: id, // replica 1 stole one batch
+            expert_calls: 10,
+            padded_rows: 64,
+            useful_rows: 48,
+            waves: 3,
+            max_concurrent_waves: 2 + id,
+            wave_padded_rows: 32,
+            wave_useful_rows: 24,
+            max_queue_depth: 1,
+            swaps: 5,
+            replans: 1,
+            last_drift: 0.1 * (id + 1) as f64,
+            generation: id as u64,
+            scheme_counts: vec![(RuntimeScheme::Fp16, 4)],
+            latencies: vec![lat, lat],
+            queue_waits: vec![0.001],
+            wave_latencies: vec![0.002],
+            elapsed_s: 2.0,
+        };
+        let report = ClusterReport {
+            replicas: vec![replica(0, 0.010), replica(1, 0.030)],
+            router: RouterStats {
+                batches: 4,
+                routed: vec![3, 1],
+                max_queue_depth: 7,
+                last_planned_fill: 0.9,
+                elapsed_s: 2.0,
+            },
+        };
+        assert_eq!(report.total_requests(), 4);
+        assert_eq!(report.total_tokens(), 200);
+        assert_eq!(report.total_steals(), 1);
+        assert!((report.throughput_tps() - 100.0).abs() < 1e-9, "200 tok / 2 s wall");
+        let flat = report.flatten();
+        assert_eq!(flat.requests, 4);
+        assert_eq!(flat.tokens, 200);
+        assert_eq!(flat.replicas, 2);
+        assert_eq!(flat.stolen_batches, 1);
+        assert_eq!(flat.expert_calls, 20);
+        assert_eq!(flat.waves, 6);
+        assert_eq!(flat.max_concurrent_waves, 3, "max over replicas");
+        assert_eq!(flat.max_queue_depth, 7, "admission depth comes from the router");
+        assert!((flat.last_planned_fill - 0.9).abs() < 1e-12);
+        assert_eq!((flat.swaps, flat.replans), (10, 2));
+        assert!((flat.last_drift - 0.2).abs() < 1e-12, "worst replica drift");
+        assert_eq!(flat.generation, 1, "highest replica generation");
+        assert!((flat.padding_ratio - (1.0 - 48.0 / 64.0 * 1.0)).abs() < 1e-9);
+        assert!((flat.wave_fill_ratio - 48.0 / 64.0).abs() < 1e-12);
+        // percentiles merge samples across replicas, not averages of summaries
+        assert!(flat.p50_latency_s >= 0.010 && flat.p50_latency_s <= 0.030);
     }
 
     #[test]

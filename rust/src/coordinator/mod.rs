@@ -8,14 +8,21 @@
 //!
 //! The coordinator is built on the [`crate::serve`] subsystem: batch
 //! cutting comes from [`crate::serve::queue`], the live expert table from
-//! [`crate::serve::hotswap`], and [`Server::start_online`] runs the
-//! telemetry → drift → replan → hot-swap loop between batches
-//! (DESIGN.md §Online-Serving).
+//! [`crate::serve::hotswap`], and the online loop runs each replica's
+//! telemetry → drift → replan → hot-swap cycle between batches
+//! (DESIGN.md §Online-Serving). Since DESIGN.md §Sharded-Serving the
+//! serve queue shards across N engine replicas: [`cluster`] owns the
+//! admission queue and the expert-affinity router, [`Server`] remains the
+//! 1-replica façade.
 
+pub mod cluster;
 pub mod engine;
 pub mod metrics;
 pub mod server;
 
+pub use cluster::{
+    affinity_score, choose_replica, AffinityConfig, Cluster, ClusterConfig, OnlineConfig,
+};
 pub use engine::{uniform_engine, ServingEngine};
-pub use metrics::Metrics;
-pub use server::{OnlineConfig, Request, Response, ServeConfig, Server, ServerReport};
+pub use metrics::{ClusterReport, Metrics, ReplicaReport, RouterStats, ServerReport};
+pub use server::{Request, Response, ServeConfig, Server};

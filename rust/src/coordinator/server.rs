@@ -1,31 +1,34 @@
-//! Request server: admission queue + continuous batcher in front of the
-//! engine, with an optional online re-allocation loop.
+//! Request server: the single-engine façade over the replica cluster.
 //!
-//! The engine (and its PJRT handles) are not `Send`, so the server thread
+//! Since DESIGN.md §Sharded-Serving, batching, routing and execution live
+//! in [`super::cluster`]: the server is a 1-replica cluster, kept as the
+//! stable entry point for callers that want one engine behind one queue.
+//! The engine (and its PJRT handles) is not `Send`, so the replica thread
 //! *builds* the engine locally and owns it for its lifetime; clients talk
 //! over channels. Batch cutting is delegated to
 //! [`crate::serve::queue::ContinuousBatcher`]: batches close on the
 //! sequence cap, the tile-set token budget, or the oldest request's wait
 //! deadline, and a token-budget cut leaves the tail queued — nothing is
-//! dropped, including across hot-swaps. When started with
-//! [`Server::start_online`], the loop runs the engine's
+//! dropped, including across hot-swaps, and a past-deadline tail re-cuts
+//! immediately ([`crate::serve::queue::ContinuousBatcher::time_to_cut`]).
+//! When started with
+//! [`Server::start_online`], the replica runs the engine's
 //! telemetry → drift → replan → hot-swap cycle between batches.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
-use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::alloc::Allocation;
-use crate::moe::{ModelConfig, MoeLm};
-use crate::ser::MxtFile;
-use crate::serve::queue::{BatchPolicy, ContinuousBatcher};
-use crate::serve::replan::Replanner;
+use crate::moe::ModelConfig;
+use crate::serve::queue::BatchPolicy;
 pub use crate::serve::queue::{Request, Response};
 
-use super::engine::ServingEngine;
+use super::cluster::{Cluster, ClusterConfig};
+pub use super::cluster::OnlineConfig;
+pub use super::metrics::ServerReport;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -49,7 +52,7 @@ impl Default for ServeConfig {
 }
 
 impl ServeConfig {
-    fn policy(&self) -> BatchPolicy {
+    pub(crate) fn policy(&self) -> BatchPolicy {
         BatchPolicy {
             max_seqs: self.max_batch_seqs,
             max_tokens: self.max_batch_tokens,
@@ -58,61 +61,15 @@ impl ServeConfig {
     }
 }
 
-/// Everything the online loop needs beyond the static-plan server: the
-/// workload-independent replanner and the calibration frequency vector
-/// that seeds the drift baseline.
-pub struct OnlineConfig {
-    pub replanner: Replanner,
-    /// Per-layer routed-expert calibration frequencies
-    /// ([`crate::alloc::activation_frequencies`]).
-    pub baseline: Vec<Vec<f64>>,
-    /// Telemetry EWMA step; `None` keeps the engine default.
-    pub ewma_alpha: Option<f64>,
-}
-
-/// Handle to a running server thread.
+/// Handle to a running 1-replica cluster.
 pub struct Server {
-    tx: mpsc::Sender<Request>,
-    handle: Option<thread::JoinHandle<ServerReport>>,
-}
-
-/// Final statistics returned at shutdown.
-#[derive(Clone, Debug)]
-pub struct ServerReport {
-    pub requests: usize,
-    pub tokens: usize,
-    pub throughput_tps: f64,
-    pub p50_latency_s: f64,
-    pub p99_latency_s: f64,
-    pub p50_queue_wait_s: f64,
-    pub expert_calls: usize,
-    pub padding_ratio: f64,
-    /// Waves executed by grouped dispatch (0 under sequential mode).
-    pub waves: usize,
-    /// Most waves in flight in one grouped dispatch.
-    pub max_concurrent_waves: usize,
-    /// Useful fraction of rows shipped by grouped dispatch.
-    pub wave_fill_ratio: f64,
-    /// p50 wave wall-clock, seconds (0 when no waves ran).
-    pub p50_wave_s: f64,
-    /// Planner-projected tile fill of the last batch cut.
-    pub last_planned_fill: f64,
-    /// Deepest admission queue observed at a batch cut.
-    pub max_queue_depth: usize,
-    /// Drift-triggered MCKP re-solves (0 for static-plan serving).
-    pub replans: usize,
-    /// Expert slots hot-swapped to a new runtime family.
-    pub swaps: usize,
-    /// Telemetry drift at the last check.
-    pub last_drift: f64,
-    /// Final plan generation (0 = the boot plan served throughout).
-    pub generation: u64,
+    cluster: Cluster,
 }
 
 impl Server {
-    /// Start a static-plan server thread: loads weights, builds the engine
-    /// with the given allocation, then serves until the request channel
-    /// closes.
+    /// Start a static-plan server: loads weights, builds the engine with
+    /// the given allocation on a replica thread, then serves until the
+    /// request channel closes.
     pub fn start(
         cfg: ModelConfig,
         weights_path: PathBuf,
@@ -120,7 +77,14 @@ impl Server {
         allocation: Allocation,
         serve_cfg: ServeConfig,
     ) -> Result<Server> {
-        Server::spawn(cfg, weights_path, artifacts, allocation, serve_cfg, None)
+        let cluster = Cluster::start(
+            cfg,
+            weights_path,
+            artifacts,
+            allocation,
+            ClusterConfig { serve: serve_cfg, ..ClusterConfig::default() },
+        )?;
+        Ok(Server { cluster })
     }
 
     /// Start a server with the online re-allocation loop enabled: live
@@ -135,196 +99,25 @@ impl Server {
         serve_cfg: ServeConfig,
         online: OnlineConfig,
     ) -> Result<Server> {
-        Server::spawn(cfg, weights_path, artifacts, allocation, serve_cfg, Some(online))
-    }
-
-    fn spawn(
-        cfg: ModelConfig,
-        weights_path: PathBuf,
-        artifacts: PathBuf,
-        allocation: Allocation,
-        serve_cfg: ServeConfig,
-        online: Option<OnlineConfig>,
-    ) -> Result<Server> {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let handle = thread::spawn(move || {
-            let weights = MxtFile::load(&weights_path).expect("load weights");
-            let lm = MoeLm::load_mxt(&cfg, &weights).expect("build model");
-            let mut engine =
-                ServingEngine::new(lm, &artifacts, &allocation).expect("build engine");
-            let replanner = online.map(|o| {
-                engine.set_baseline(o.baseline);
-                if let Some(a) = o.ewma_alpha {
-                    engine.set_telemetry_alpha(a);
-                }
-                o.replanner
-            });
-            serve_loop(&mut engine, rx, &serve_cfg, replanner.as_ref());
-            let m = engine.metrics();
-            let lat = m.latency_summary();
-            let qw = m.queue_wait_summary();
-            ServerReport {
-                requests: m.requests,
-                tokens: m.tokens,
-                throughput_tps: m.throughput_tps(),
-                p50_latency_s: lat.as_ref().map(|s| s.p50).unwrap_or(0.0),
-                p99_latency_s: lat.as_ref().map(|s| s.p99).unwrap_or(0.0),
-                p50_queue_wait_s: qw.as_ref().map(|s| s.p50).unwrap_or(0.0),
-                expert_calls: m.expert_calls,
-                padding_ratio: m.padding_ratio(),
-                waves: m.waves,
-                max_concurrent_waves: m.max_concurrent_waves,
-                wave_fill_ratio: m.wave_fill_ratio(),
-                p50_wave_s: m.wave_latency_summary().map(|s| s.p50).unwrap_or(0.0),
-                last_planned_fill: m.last_planned_fill,
-                max_queue_depth: m.max_queue_depth,
-                replans: m.replans,
-                swaps: m.swaps,
-                last_drift: m.last_drift,
-                generation: engine.generation(),
-            }
-        });
-        Ok(Server { tx, handle: Some(handle) })
+        let cluster = Cluster::start_online(
+            cfg,
+            weights_path,
+            artifacts,
+            allocation,
+            ClusterConfig { serve: serve_cfg, ..ClusterConfig::default() },
+            online,
+        )?;
+        Ok(Server { cluster })
     }
 
     /// Submit a request; returns the reply receiver.
     pub fn submit(&self, tokens: Vec<u32>) -> Result<mpsc::Receiver<Response>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request { tokens, reply, arrived: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("server closed"))?;
-        Ok(rx)
+        self.cluster.submit(tokens)
     }
 
-    /// Close the queue and collect the final report.
-    pub fn shutdown(mut self) -> ServerReport {
-        drop(self.tx);
-        self.handle.take().unwrap().join().expect("server thread panicked")
-    }
-}
-
-fn serve_loop(
-    engine: &mut ServingEngine,
-    rx: mpsc::Receiver<Request>,
-    cfg: &ServeConfig,
-    replanner: Option<&Replanner>,
-) {
-    let mut batcher = ContinuousBatcher::new(cfg.policy());
-    let mut closed = false;
-    loop {
-        // admit: block for the first request only when nothing is queued
-        if batcher.depth() == 0 {
-            if closed {
-                return;
-            }
-            match rx.recv() {
-                Ok(r) => batcher.push(r),
-                Err(_) => return, // channel closed, queue drained
-            }
-        }
-        if !closed {
-            // drain whatever is already queued (requests that arrived while
-            // the previous batch was executing must not serve as singletons
-            // — §Perf)
-            loop {
-                match rx.try_recv() {
-                    Ok(r) => batcher.push(r),
-                    Err(mpsc::TryRecvError::Empty) => break,
-                    Err(mpsc::TryRecvError::Disconnected) => {
-                        closed = true;
-                        break;
-                    }
-                }
-            }
-            // then wait for stragglers until a cut condition holds
-            while !closed && !batcher.ready(Instant::now()) {
-                let deadline = batcher.oldest_deadline().expect("non-empty queue");
-                let left = deadline.saturating_duration_since(Instant::now());
-                if left.is_zero() {
-                    break;
-                }
-                match rx.recv_timeout(left) {
-                    Ok(r) => batcher.push(r),
-                    Err(mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        closed = true;
-                        break;
-                    }
-                }
-            }
-        }
-        engine.metrics_mut().note_queue_depth(batcher.depth());
-        let batch = batcher.take_batch();
-        if batch.is_empty() {
-            continue;
-        }
-        // planner-fed fill estimate of the batch actually cut (the whole
-        // queue may be deeper than one cut; see ContinuousBatcher::
-        // fill_estimate for the queue-wide projection)
-        let cut_tokens: usize = batch.iter().map(|r| r.tokens.len()).sum();
-        let planned_fill = crate::runtime::dispatch::fill_estimate(cut_tokens).fill_ratio();
-        engine.metrics_mut().note_planned_fill(planned_fill);
-        process_batch(engine, batch);
-        // the online loop runs strictly between batches: in-flight work
-        // always completes on the generation it started on
-        if let Some(rp) = replanner {
-            match engine.maybe_replan(rp) {
-                Ok(Some(outcome)) => {
-                    eprintln!(
-                        "replan: drift {:.3} → {} slot(s) changed, {} swapped (gen {})",
-                        outcome.drift,
-                        outcome.changes,
-                        outcome.swapped,
-                        engine.generation()
-                    );
-                }
-                Ok(None) => {}
-                Err(e) => eprintln!("replan failed (serving continues on old plan): {e:#}"),
-            }
-        }
-    }
-}
-
-fn process_batch(engine: &mut ServingEngine, batch: Vec<Request>) {
-    let cut_at = Instant::now();
-    let generation = engine.generation();
-    let seqs: Vec<&[u32]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
-    match engine.forward_batch(&seqs) {
-        Ok(logits_batch) => {
-            for (req, logits) in batch.iter().zip(logits_batch) {
-                let t = req.tokens.len();
-                // argmax of the final position
-                let last = logits.row(t - 1);
-                let mut best = 0usize;
-                for i in 1..last.len() {
-                    if last[i] > last[best] {
-                        best = i;
-                    }
-                }
-                // mean next-token NLL
-                let mut nll = 0.0f64;
-                for pos in 0..t - 1 {
-                    let row = logits.row(pos);
-                    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
-                    let z: f64 = row.iter().map(|&v| ((v as f64) - m).exp()).sum();
-                    nll -= (logits.at(pos, req.tokens[pos + 1] as usize) as f64 - m) - z.ln();
-                }
-                let latency = req.arrived.elapsed();
-                let queue_wait = cut_at.saturating_duration_since(req.arrived);
-                let metrics = engine.metrics_mut();
-                metrics.record_request(latency.as_secs_f64(), req.tokens.len());
-                metrics.record_queue_wait(queue_wait.as_secs_f64());
-                let _ = req.reply.send(Response {
-                    next_token: best as u32,
-                    mean_nll: nll / (t - 1).max(1) as f64,
-                    latency,
-                    queue_wait,
-                    generation,
-                });
-            }
-        }
-        Err(e) => {
-            eprintln!("batch failed: {e:#}");
-        }
+    /// Close the queue and collect the final report (the cluster view
+    /// flattened to the legacy single-engine shape).
+    pub fn shutdown(self) -> ServerReport {
+        self.cluster.shutdown().flatten()
     }
 }

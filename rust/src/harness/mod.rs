@@ -2,7 +2,7 @@
 //! construction, and evaluation helpers used by `benches/` and `examples/`.
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
@@ -12,12 +12,42 @@ use crate::eval::{perplexity_quantized, probe_accuracy, ProbeReport};
 use crate::moe::block::{HadamardCtx, QuantizedMoeBlock, WeightQuantizer};
 use crate::moe::lm::Ffn;
 use crate::moe::{ModelConfig, MoeLm};
+use crate::quant::QuantScheme;
+use crate::ser::mxt::MxtTensor;
 use crate::ser::MxtFile;
 use crate::util::Rng;
 
 /// Repo-relative artifacts directory.
 pub fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Artifact gate for tests and benches: `Some(dir)` when the AOT HLO
+/// export is present, `None` to skip. Under `MXMOE_REQUIRE_ARTIFACTS=1`
+/// (CI, after `make artifacts`) a missing export is a hard failure instead
+/// of a silent self-skip — the gated paths must *run* there, and a broken
+/// artifact build must turn the gate red rather than green-by-skipping.
+pub fn require_artifacts() -> Option<PathBuf> {
+    let dir = artifacts_dir();
+    // probe one tile per runtime family: a partial export (interrupted
+    // `make artifacts`) must read as "not built", not as a serving bug
+    let probe = [
+        "smoke_matmul.hlo.txt",
+        "expert_ffn_fp16_m16.hlo.txt",
+        "expert_ffn_w4a16_m16.hlo.txt",
+        "expert_ffn_w8a8_m16.hlo.txt",
+        "expert_ffn_w4a4_m16.hlo.txt",
+    ];
+    if probe.iter().all(|f| dir.join(f).exists()) {
+        return Some(dir);
+    }
+    if std::env::var("MXMOE_REQUIRE_ARTIFACTS").map(|v| v == "1").unwrap_or(false) {
+        panic!(
+            "MXMOE_REQUIRE_ARTIFACTS=1 but {dir:?} lacks the AOT export \
+             (missing one of {probe:?}) — run `make artifacts`"
+        );
+    }
+    None
 }
 
 /// `MXMOE_FAST=1` shrinks evaluation workloads (CI mode).
@@ -36,6 +66,55 @@ pub fn load_model(name: &str) -> Result<(ModelConfig, MoeLm)> {
 
 pub fn load_corpus() -> Result<Corpus> {
     Corpus::load(&artifacts_dir().join("corpus.mxt")).context("run `make corpus` first")
+}
+
+/// Serialize a model to the MXT tensor layout [`MoeLm::load_mxt`]
+/// expects — the single home of the tensor-naming scheme for tests and
+/// benches that feed throwaway serving models to `Server`/`Cluster`.
+pub fn save_model_mxt(lm: &MoeLm, path: &Path) -> Result<()> {
+    let cfg = &lm.cfg;
+    let mut f = MxtFile::new();
+    let m = |m: &crate::tensor::Matrix| MxtTensor::from_f32(vec![m.rows, m.cols], &m.data);
+    f.insert("embed", m(&lm.embed));
+    f.insert("head", m(&lm.head));
+    f.insert("ln_f", MxtTensor::from_f32(vec![cfg.hidden], &lm.ln_f));
+    for (l, layer) in lm.layers.iter().enumerate() {
+        let p = |s: &str| format!("layers.{l}.{s}");
+        f.insert(&p("ln1"), MxtTensor::from_f32(vec![cfg.hidden], &layer.ln1));
+        f.insert(&p("ln2"), MxtTensor::from_f32(vec![cfg.hidden], &layer.ln2));
+        for (n, w) in [("wq", &layer.wq), ("wk", &layer.wk), ("wv", &layer.wv), ("wo", &layer.wo)]
+        {
+            f.insert(&p(n), m(w));
+        }
+        if let Ffn::Moe(b) = &layer.ffn {
+            f.insert(&p("router"), m(&b.w_router));
+            for (e, ew) in b.experts.iter().enumerate() {
+                f.insert(&p(&format!("expert.{e}.gate")), m(&ew.gate));
+                f.insert(&p(&format!("expert.{e}.up")), m(&ew.up));
+                f.insert(&p(&format!("expert.{e}.down")), m(&ew.down));
+            }
+            for (s, ew) in b.shared.iter().enumerate() {
+                f.insert(&p(&format!("shared.{s}.gate")), m(&ew.gate));
+                f.insert(&p(&format!("shared.{s}.up")), m(&ew.up));
+                f.insert(&p(&format!("shared.{s}.down")), m(&ew.down));
+            }
+        }
+    }
+    f.save(path)
+}
+
+/// A plan that spreads all four runtime families across the expert grid —
+/// the standard mixed-precision fixture of the dispatch/cluster tests and
+/// benches (every MoE block plans ≥ 4 distinct-executable waves).
+pub fn mixed_runtime_plan(cfg: &ModelConfig) -> Allocation {
+    let fams = [QuantScheme::FP16, QuantScheme::W4A16, QuantScheme::W8A8, QuantScheme::W4A4];
+    let mut plan = Allocation::uniform(cfg, QuantScheme::FP16);
+    for (pos, block) in plan.schemes.iter_mut().enumerate() {
+        for (e, schemes) in block.iter_mut().enumerate() {
+            *schemes = [fams[(pos + e) % fams.len()]; 3];
+        }
+    }
+    plan
 }
 
 /// Which weight quantizer an experiment row uses.

@@ -162,6 +162,17 @@ impl Runtime {
         let _ = self.frozen.set(snap);
     }
 
+    /// Client-per-replica construction: a CPU PJRT client with the full
+    /// (scheme, tile) executable grid pre-compiled and the cache frozen.
+    /// Every serving replica builds its own — executables are compiled
+    /// per client and never shared across engine threads, which is what
+    /// keeps the non-`Send` constraint per-replica instead of global.
+    pub fn cpu_warmed(artifacts_dir: &Path) -> Result<Runtime> {
+        let rt = Runtime::cpu(artifacts_dir)?;
+        rt.warmup_expert_ffn()?;
+        Ok(rt)
+    }
+
     /// Pre-compile every (scheme, tile) expert executable (hot-path
     /// warmup), then freeze the cache so dispatch lookups are lock-free.
     pub fn warmup_expert_ffn(&self) -> Result<usize> {
@@ -266,10 +277,6 @@ pub fn lit_u8(dims: &[usize], data: &[u8]) -> Result<xla::Literal> {
 mod tests {
     use super::*;
 
-    fn artifacts() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
     #[test]
     fn pick_tile_rounds_up() {
         assert_eq!(pick_tile(1), 4);
@@ -336,11 +343,10 @@ mod tests {
 
     #[test]
     fn smoke_artifact_executes() {
-        let dir = artifacts();
-        if !dir.join("smoke_matmul.hlo.txt").exists() {
+        let Some(dir) = crate::harness::require_artifacts() else {
             eprintln!("skipping: artifacts not built");
             return;
-        }
+        };
         let rt = Runtime::cpu(&dir).unwrap();
         let exe = rt.executable("smoke_matmul").unwrap();
         let x = lit_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();

@@ -77,6 +77,16 @@ impl SlotTable {
         self.slots.len()
     }
 
+    /// Snapshot of the live scheme table: runtime family per
+    /// `[block_pos][expert slot]` (routed then shared). What a replica
+    /// publishes for the router's expert-affinity scoring.
+    pub fn scheme_table(&self) -> Vec<Vec<RuntimeScheme>> {
+        self.slots
+            .iter()
+            .map(|layer| layer.iter().map(|s| s.scheme).collect())
+            .collect()
+    }
+
     /// Scheme histogram for reporting.
     pub fn scheme_counts(&self) -> Vec<(RuntimeScheme, usize)> {
         let mut counts = Vec::new();

@@ -24,15 +24,20 @@
 //! ```
 //!
 //! The coordinator ([`crate::coordinator`]) is rewired on top of these
-//! pieces; everything here is engine-agnostic and unit-testable without a
-//! PJRT runtime.
+//! pieces. Since DESIGN.md §Sharded-Serving the loop runs per replica:
+//! [`replica`] holds the engine worker threads (one PJRT client, one plan,
+//! one telemetry/replan loop each) plus the work-stealing deques and the
+//! status board the router scores against. Everything except the worker
+//! body is engine-agnostic and unit-testable without a PJRT runtime.
 
 pub mod hotswap;
 pub mod queue;
 pub mod replan;
+pub mod replica;
 pub mod telemetry;
 
 pub use hotswap::{SlotChange, SlotTable};
 pub use queue::{BatchPolicy, ContinuousBatcher, Request, Response};
 pub use replan::{diff_plans, ReplanConfig, ReplanOutcome, Replanner};
+pub use replica::{ReplicaOnline, ReplicaSpec, ReplicaStatus, RoutedBatch, WorkQueues};
 pub use telemetry::ActivationTelemetry;

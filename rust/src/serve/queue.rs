@@ -126,6 +126,30 @@ impl ContinuousBatcher {
             || self.oldest_deadline().map_or(false, |d| now >= d)
     }
 
+    /// How long the serve loop may wait for stragglers before the next cut
+    /// MUST happen: `None` means cut immediately (a cap is hit or the
+    /// oldest queued request is already past its deadline — including a
+    /// tail left behind by a token-budget cut), `Some(d)` means a cut is
+    /// due in at most `d` even if nothing else arrives. This is the single
+    /// wait-policy entry point for the router loop: because the returned
+    /// duration is bounded by the oldest deadline, a past-deadline tail can
+    /// never sit waiting for the next arrival.
+    ///
+    /// Panics on an empty queue — with nothing queued there is no deadline
+    /// to honor and the caller should block on admission instead.
+    pub fn time_to_cut(&self, now: Instant) -> Option<Duration> {
+        let deadline = self.oldest_deadline().expect("time_to_cut on an empty queue");
+        if self.ready(now) {
+            return None;
+        }
+        let left = deadline.saturating_duration_since(now);
+        if left.is_zero() {
+            None
+        } else {
+            Some(left)
+        }
+    }
+
     /// Cut a batch: FIFO prefix of the queue, stopping before the sequence
     /// cap or token budget is exceeded. Always takes at least one request
     /// (an oversized single sequence still has to run — the engine tiles
@@ -250,6 +274,52 @@ mod tests {
         assert!(est.fill_ratio() < 1.0);
         b.take_batch();
         assert_eq!(b.fill_estimate().useful_rows, 0);
+    }
+
+    #[test]
+    fn budget_cut_with_past_deadline_tail_recuts_immediately() {
+        // Regression: a token-budget cut that leaves a past-deadline
+        // request queued must re-cut on the next loop iteration, not wait
+        // for another arrival. Both requests arrived at t0; by t0+25ms the
+        // 20ms deadline has long passed, the budget cut takes only the
+        // first request, and the tail (which also arrived at t0) must be
+        // immediately cuttable.
+        let t0 = Instant::now();
+        let mut b = ContinuousBatcher::new(policy(100, 64, 20));
+        b.push(req(60, t0));
+        b.push(req(10, t0));
+        let now = t0 + Duration::from_millis(25);
+        assert!(b.ready(now));
+        assert_eq!(b.time_to_cut(now), None, "deadline passed — cut now");
+        let first = b.take_batch();
+        assert_eq!(first.len(), 1, "60 + 10 > 64: budget splits the queue");
+        assert_eq!(b.depth(), 1, "tail stays queued");
+        // the tail is already past its deadline: no straggler wait allowed
+        assert!(b.ready(now), "past-deadline tail must be ready");
+        assert_eq!(
+            b.time_to_cut(now),
+            None,
+            "past-deadline tail must re-cut without waiting for an arrival"
+        );
+        assert_eq!(b.take_batch().len(), 1);
+    }
+
+    #[test]
+    fn time_to_cut_bounds_the_straggler_wait() {
+        let t0 = Instant::now();
+        let mut b = ContinuousBatcher::new(policy(8, 256, 20));
+        b.push(req(4, t0));
+        // fresh request: wait at most the remaining deadline
+        let wait = b.time_to_cut(t0).expect("under caps — wait for stragglers");
+        assert!(wait <= Duration::from_millis(20));
+        assert!(wait > Duration::from_millis(15), "nearly the full window at t0: {wait:?}");
+        // at the deadline the wait collapses to an immediate cut
+        assert_eq!(b.time_to_cut(t0 + Duration::from_millis(20)), None);
+        // a cap being hit also cuts immediately, deadline or not
+        for _ in 0..7 {
+            b.push(req(4, t0));
+        }
+        assert_eq!(b.time_to_cut(t0), None, "seq cap reached");
     }
 
     #[test]

@@ -1,0 +1,578 @@
+//! Replica workers: N engine threads behind one admission queue
+//! (DESIGN.md §Sharded-Serving).
+//!
+//! The engine (and its PJRT handles) is not `Send`, so that constraint is
+//! made *per-replica* instead of global: each worker thread builds and owns
+//! its own [`ServingEngine`] — its own PJRT client, its own precision plan,
+//! its own telemetry and hot-swap generation counter — and never shares it.
+//! What crosses threads is plain data:
+//!
+//! * [`RoutedBatch`]es flow router → replica through [`WorkQueues`], a
+//!   per-replica deque set with work-stealing: a replica drains its own
+//!   queue first and otherwise steals the *oldest* batch from the most
+//!   backlogged peer, so no replica starves and no batch waits on a busy
+//!   replica while another sits idle.
+//! * [`ReplicaStatus`] flows replica → router through a status board: the
+//!   live scheme table (which changes on hot-swap), the live activation
+//!   frequencies, and progress counters — the inputs to the router's
+//!   expert-affinity scoring.
+//!
+//! Telemetry, drift detection and replanning are per-replica: every worker
+//! runs its own telemetry → drift → re-solve → hot-swap loop between
+//! batches, so under online serving the replicas' plans can diverge to
+//! match the slices of traffic they actually see.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::alloc::Allocation;
+use crate::coordinator::engine::ServingEngine;
+use crate::coordinator::metrics::ReplicaReport;
+use crate::moe::{ModelConfig, MoeLm};
+use crate::runtime::RuntimeScheme;
+use crate::ser::MxtFile;
+use crate::serve::queue::{Request, Response};
+use crate::serve::replan::Replanner;
+
+/// One batch as cut by the router: the unit of work routed to (and stolen
+/// between) replicas.
+pub struct RoutedBatch {
+    pub requests: Vec<Request>,
+}
+
+impl RoutedBatch {
+    pub fn tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.tokens.len()).sum()
+    }
+}
+
+/// Per-replica work deques with work-stealing.
+///
+/// Push side is the router (affinity-chosen replica); pop side is the
+/// replicas themselves. [`pop`](WorkQueues::pop) blocks until work or
+/// shutdown: a replica takes from its own deque front first and otherwise
+/// steals the front (oldest) batch of the deepest peer deque — FIFO
+/// fairness survives stealing, and an idle replica always makes progress
+/// on the cluster backlog.
+pub struct WorkQueues {
+    inner: Mutex<QueuesInner>,
+    available: Condvar,
+}
+
+struct QueuesInner {
+    queues: Vec<VecDeque<RoutedBatch>>,
+    /// Batches popped but not yet reported done — what keeps the router's
+    /// load signal honest about work that already left the deques.
+    inflight: Vec<usize>,
+    /// Replicas that died before serving (engine build failure). Their
+    /// queued batches are stolen by the living; they never count as
+    /// capacity.
+    dead: Vec<bool>,
+    closed: bool,
+}
+
+impl WorkQueues {
+    pub fn new(replicas: usize) -> Arc<WorkQueues> {
+        assert!(replicas >= 1);
+        Arc::new(WorkQueues {
+            inner: Mutex::new(QueuesInner {
+                queues: (0..replicas).map(|_| VecDeque::new()).collect(),
+                inflight: vec![0; replicas],
+                dead: vec![false; replicas],
+                closed: false,
+            }),
+            available: Condvar::new(),
+        })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.inner.lock().unwrap().queues.len()
+    }
+
+    /// Enqueue a batch for `replica` (router side).
+    pub fn push(&self, replica: usize, batch: RoutedBatch) {
+        let mut g = self.inner.lock().unwrap();
+        assert!(!g.closed, "push after close");
+        g.queues[replica].push_back(batch);
+        drop(g);
+        self.available.notify_all();
+    }
+
+    /// Dequeue the next batch for `replica`, blocking until one is
+    /// available or the queues are closed *and* fully drained. Returns the
+    /// batch plus whether it was stolen from a peer. The popped batch
+    /// counts as in-flight for `replica` until [`done`](WorkQueues::done).
+    pub fn pop(&self, replica: usize) -> Option<(RoutedBatch, bool)> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(b) = g.queues[replica].pop_front() {
+                g.inflight[replica] += 1;
+                return Some((b, false));
+            }
+            // steal the oldest batch of the most backlogged peer
+            let victim = (0..g.queues.len())
+                .filter(|&i| i != replica && !g.queues[i].is_empty())
+                .max_by_key(|&i| g.queues[i].len());
+            if let Some(v) = victim {
+                let b = g.queues[v].pop_front().unwrap();
+                g.inflight[replica] += 1;
+                return Some((b, true));
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.available.wait(g).unwrap();
+        }
+    }
+
+    /// Mark the batch last popped by `replica` as executed. Wakes capacity
+    /// waiters: a completed batch is what frees a replica.
+    pub fn done(&self, replica: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.inflight[replica] = g.inflight[replica].saturating_sub(1);
+        drop(g);
+        self.available.notify_all();
+    }
+
+    /// Mark `replica` as permanently unable to serve (engine build
+    /// failure). Its queued batches remain stealable; capacity waiters are
+    /// woken so the router can notice a fully-dead cluster.
+    pub fn mark_dead(&self, replica: usize) {
+        self.inner.lock().unwrap().dead[replica] = true;
+        self.available.notify_all();
+    }
+
+    /// Block until some live replica is idle (nothing queued, nothing in
+    /// flight), so a batch cut now can start executing immediately —
+    /// the cluster generalization of the legacy single-engine loop, which
+    /// only ever cut strictly between batches. Returns `false` when every
+    /// replica is dead (no batch can ever execute); returns `true`
+    /// immediately on close so a draining caller is never wedged.
+    pub fn wait_for_capacity(&self) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.dead.iter().all(|&d| d) {
+                return false;
+            }
+            let idle = (0..g.queues.len())
+                .any(|i| !g.dead[i] && g.queues[i].is_empty() && g.inflight[i] == 0);
+            if idle || g.closed {
+                return true;
+            }
+            g = self.available.wait(g).unwrap();
+        }
+    }
+
+    /// No more pushes: blocked `pop`s return `None` once drained.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.available.notify_all();
+    }
+
+    /// Queued batches per replica.
+    pub fn depths(&self) -> Vec<usize> {
+        self.inner.lock().unwrap().queues.iter().map(|q| q.len()).collect()
+    }
+
+    pub fn depth(&self, replica: usize) -> usize {
+        self.inner.lock().unwrap().queues[replica].len()
+    }
+
+    /// Queued + in-flight batches per replica — the router's backlog
+    /// signal. Counting in-flight work is what stops the router from
+    /// piling batches onto a replica whose deque merely *looks* empty
+    /// because it popped everything into execution.
+    pub fn loads(&self) -> Vec<usize> {
+        let g = self.inner.lock().unwrap();
+        g.queues.iter().zip(&g.inflight).map(|(q, &f)| q.len() + f).collect()
+    }
+}
+
+/// What a replica publishes for the router's affinity scoring: the live
+/// plan (scheme per slot), the live activation-frequency estimate, and
+/// progress counters. Seeded from the boot allocation before the replica's
+/// engine finishes building, so the router can score from the first cut.
+#[derive(Clone, Debug)]
+pub struct ReplicaStatus {
+    /// Hot-swap generation of the published scheme table.
+    pub generation: u64,
+    /// Runtime family per `[block_pos][expert slot]` (routed then shared).
+    pub schemes: Vec<Vec<RuntimeScheme>>,
+    /// Live per-layer routed-expert frequency estimate (EWMA).
+    pub live_freqs: Vec<Vec<f64>>,
+    /// Routed token-assignments this replica has observed (weighs its
+    /// frequency estimate in the cluster aggregate).
+    pub observed_tokens: usize,
+    /// Batches this replica has executed.
+    pub batches_done: usize,
+    pub swaps: usize,
+    pub replans: usize,
+}
+
+impl ReplicaStatus {
+    /// Status derived from the boot allocation alone — what the router
+    /// scores against until the replica publishes its first live update.
+    pub fn boot(cfg: &ModelConfig, allocation: &Allocation) -> ReplicaStatus {
+        let schemes: Vec<Vec<RuntimeScheme>> = allocation
+            .schemes
+            .iter()
+            .map(|layer| layer.iter().map(|s| RuntimeScheme::from_quant(&s[0])).collect())
+            .collect();
+        let n = cfg.n_experts.max(1);
+        ReplicaStatus {
+            generation: 0,
+            live_freqs: vec![vec![1.0 / n as f64; n]; schemes.len()],
+            schemes,
+            observed_tokens: 0,
+            batches_done: 0,
+            swaps: 0,
+            replans: 0,
+        }
+    }
+}
+
+/// Per-replica online-serving inputs, shared read-only across replicas.
+pub struct ReplicaOnline {
+    pub replanner: Replanner,
+    /// Calibration frequency baseline seeding each replica's drift
+    /// detector.
+    pub baseline: Vec<Vec<f64>>,
+    pub ewma_alpha: Option<f64>,
+}
+
+/// Everything a replica thread needs to build and run its engine. All
+/// fields are `Send`; the non-`Send` engine is constructed inside the
+/// thread.
+pub struct ReplicaSpec {
+    pub id: usize,
+    pub cfg: ModelConfig,
+    /// Weights, loaded once by the cluster and shared — each replica builds
+    /// its own model (and quantizes its own expert slots) from them.
+    pub weights: Arc<MxtFile>,
+    pub artifacts: PathBuf,
+    pub allocation: Allocation,
+    pub online: Option<Arc<ReplicaOnline>>,
+    /// Grouped-dispatch worker threads per replica (`None` = engine
+    /// default).
+    pub dispatch_threads: Option<usize>,
+}
+
+/// Replica thread body: build the engine (own PJRT client, own plan), then
+/// pop → execute → reply → maybe-replan → publish until the queues close.
+pub fn replica_main(
+    spec: ReplicaSpec,
+    queues: Arc<WorkQueues>,
+    status: Arc<Vec<Mutex<ReplicaStatus>>>,
+) -> ReplicaReport {
+    // a boot failure marks this replica dead first, so the router's
+    // capacity wait skips it (and gives up entirely if nothing survives)
+    // instead of waiting forever on a thread that will never pop
+    let lm = MoeLm::load_mxt(&spec.cfg, &spec.weights).unwrap_or_else(|e| {
+        queues.mark_dead(spec.id);
+        panic!("replica {}: build model: {e:#}", spec.id)
+    });
+    let mut engine =
+        ServingEngine::new(lm, &spec.artifacts, &spec.allocation).unwrap_or_else(|e| {
+            queues.mark_dead(spec.id);
+            panic!("replica {}: build engine: {e:#}", spec.id)
+        });
+    if let Some(t) = spec.dispatch_threads {
+        engine.set_dispatch_threads(t);
+    }
+    if let Some(online) = &spec.online {
+        engine.set_baseline(online.baseline.clone());
+        if let Some(a) = online.ewma_alpha {
+            engine.set_telemetry_alpha(a);
+        }
+    }
+    let mut published_gen = publish(&spec, &engine, &status, 0, None);
+    let mut batches_done = 0usize;
+    let mut stolen = 0usize;
+    while let Some((batch, was_stolen)) = queues.pop(spec.id) {
+        if was_stolen {
+            stolen += 1;
+        }
+        engine.metrics_mut().note_queue_depth(queues.depth(spec.id));
+        process_batch(&mut engine, batch);
+        queues.done(spec.id);
+        batches_done += 1;
+        // the online loop runs strictly between batches: in-flight work
+        // always completes on the generation it started on
+        if let Some(online) = &spec.online {
+            match engine.maybe_replan(&online.replanner) {
+                Ok(Some(outcome)) => eprintln!(
+                    "replica {}: replan drift {:.3} → {} slot(s) changed, {} swapped (gen {})",
+                    spec.id,
+                    outcome.drift,
+                    outcome.changes,
+                    outcome.swapped,
+                    engine.generation()
+                ),
+                Ok(None) => {}
+                Err(e) => eprintln!(
+                    "replica {}: replan failed (serving continues on old plan): {e:#}",
+                    spec.id
+                ),
+            }
+        }
+        published_gen = publish(&spec, &engine, &status, batches_done, Some(published_gen));
+    }
+    collect_report(&spec, &engine, batches_done, stolen)
+}
+
+/// Publish this replica's live state to the status board. The scheme table
+/// is only re-cloned when the generation moved (hot-swap); frequencies and
+/// counters refresh every batch.
+fn publish(
+    spec: &ReplicaSpec,
+    engine: &ServingEngine,
+    status: &[Mutex<ReplicaStatus>],
+    batches_done: usize,
+    published_gen: Option<u64>,
+) -> u64 {
+    let generation = engine.generation();
+    let mut s = status[spec.id].lock().unwrap();
+    if published_gen != Some(generation) {
+        s.schemes = engine.plan_schemes();
+        s.generation = generation;
+    }
+    s.live_freqs = engine.telemetry().live().to_vec();
+    s.observed_tokens = engine.telemetry().observed_tokens;
+    s.batches_done = batches_done;
+    s.swaps = engine.metrics().swaps;
+    s.replans = engine.metrics().replans;
+    generation
+}
+
+/// Execute one batch and reply per request: argmax continuation + mean
+/// next-token NLL, stamped with the generation that served it. Queue wait
+/// is measured admission → execution start, matching the legacy
+/// single-engine loop (which cut immediately before executing) — deque
+/// time counts as queueing, not as serving.
+pub fn process_batch(engine: &mut ServingEngine, batch: RoutedBatch) {
+    let RoutedBatch { requests } = batch;
+    let exec_at = Instant::now();
+    let generation = engine.generation();
+    let seqs: Vec<&[u32]> = requests.iter().map(|r| r.tokens.as_slice()).collect();
+    match engine.forward_batch(&seqs) {
+        Ok(logits_batch) => {
+            for (req, logits) in requests.iter().zip(logits_batch) {
+                let t = req.tokens.len();
+                // argmax of the final position
+                let last = logits.row(t - 1);
+                let mut best = 0usize;
+                for i in 1..last.len() {
+                    if last[i] > last[best] {
+                        best = i;
+                    }
+                }
+                // mean next-token NLL
+                let mut nll = 0.0f64;
+                for pos in 0..t - 1 {
+                    let row = logits.row(pos);
+                    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+                    let z: f64 = row.iter().map(|&v| ((v as f64) - m).exp()).sum();
+                    nll -= (logits.at(pos, req.tokens[pos + 1] as usize) as f64 - m) - z.ln();
+                }
+                let latency = req.arrived.elapsed();
+                let queue_wait = exec_at.saturating_duration_since(req.arrived);
+                let metrics = engine.metrics_mut();
+                metrics.record_request(latency.as_secs_f64(), req.tokens.len());
+                metrics.record_queue_wait(queue_wait.as_secs_f64());
+                let _ = req.reply.send(Response {
+                    next_token: best as u32,
+                    mean_nll: nll / (t - 1).max(1) as f64,
+                    latency,
+                    queue_wait,
+                    generation,
+                });
+            }
+        }
+        Err(e) => {
+            eprintln!("batch failed: {e:#}");
+        }
+    }
+}
+
+/// Final per-replica statistics, assembled from the engine at thread exit.
+fn collect_report(
+    spec: &ReplicaSpec,
+    engine: &ServingEngine,
+    executed_batches: usize,
+    stolen_batches: usize,
+) -> ReplicaReport {
+    let m = engine.metrics();
+    ReplicaReport {
+        id: spec.id,
+        requests: m.requests,
+        tokens: m.tokens,
+        executed_batches,
+        stolen_batches,
+        expert_calls: m.expert_calls,
+        padded_rows: m.padded_tokens,
+        useful_rows: m.useful_rows,
+        waves: m.waves,
+        max_concurrent_waves: m.max_concurrent_waves,
+        wave_padded_rows: m.scheme_wave_stats().values().map(|s| s.padded_rows).sum(),
+        wave_useful_rows: m.scheme_wave_stats().values().map(|s| s.useful_rows).sum(),
+        max_queue_depth: m.max_queue_depth,
+        swaps: m.swaps,
+        replans: m.replans,
+        last_drift: m.last_drift,
+        generation: engine.generation(),
+        scheme_counts: engine.scheme_counts(),
+        latencies: m.latencies().to_vec(),
+        queue_waits: m.queue_waits().to_vec(),
+        wave_latencies: m.wave_latency_samples().to_vec(),
+        elapsed_s: m.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::thread;
+    use std::time::Duration;
+
+    fn batch(n_tokens: usize) -> RoutedBatch {
+        let (reply, _) = mpsc::channel();
+        RoutedBatch {
+            requests: vec![Request {
+                tokens: vec![0u32; n_tokens],
+                reply,
+                arrived: Instant::now(),
+            }],
+        }
+    }
+
+    #[test]
+    fn own_queue_has_priority_and_fifo_order() {
+        let q = WorkQueues::new(2);
+        q.push(0, batch(1));
+        q.push(0, batch(2));
+        q.push(1, batch(3));
+        let (b, stolen) = q.pop(0).unwrap();
+        assert!(!stolen);
+        assert_eq!(b.tokens(), 1, "own front first");
+        let (b, stolen) = q.pop(0).unwrap();
+        assert!(!stolen);
+        assert_eq!(b.tokens(), 2);
+        // own queue empty, peer has work: steal it
+        let (b, stolen) = q.pop(0).unwrap();
+        assert!(stolen);
+        assert_eq!(b.tokens(), 3);
+    }
+
+    #[test]
+    fn steal_takes_oldest_from_deepest_peer() {
+        let q = WorkQueues::new(3);
+        q.push(1, batch(10));
+        q.push(2, batch(20));
+        q.push(2, batch(21));
+        q.push(2, batch(22));
+        let (b, stolen) = q.pop(0).unwrap();
+        assert!(stolen);
+        assert_eq!(b.tokens(), 20, "deepest peer's oldest batch is stolen first");
+        assert_eq!(q.depths(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn loads_count_inflight_until_done() {
+        let q = WorkQueues::new(2);
+        q.push(0, batch(1));
+        q.push(0, batch(2));
+        assert_eq!(q.loads(), vec![2, 0]);
+        let _ = q.pop(0).unwrap();
+        assert_eq!(q.depths(), vec![1, 0], "popped batch left the deque");
+        assert_eq!(q.loads(), vec![2, 0], "…but still counts as replica 0 load");
+        q.done(0);
+        assert_eq!(q.loads(), vec![1, 0]);
+        // a steal moves the load to the thief
+        let (_, stolen) = q.pop(1).unwrap();
+        assert!(stolen);
+        assert_eq!(q.loads(), vec![0, 1]);
+        q.done(1);
+        assert_eq!(q.loads(), vec![0, 0]);
+    }
+
+    #[test]
+    fn capacity_wait_tracks_idle_inflight_and_dead() {
+        let q = WorkQueues::new(2);
+        assert!(q.wait_for_capacity(), "all idle at boot");
+        q.push(0, batch(1));
+        let _ = q.pop(0).unwrap(); // replica 0 busy (in flight)
+        assert!(q.wait_for_capacity(), "replica 1 still idle");
+        q.push(1, batch(2));
+        let _ = q.pop(1).unwrap(); // both busy
+        let q2 = q.clone();
+        let t = thread::spawn(move || q2.wait_for_capacity());
+        thread::sleep(Duration::from_millis(20));
+        q.done(0); // a completion frees capacity and wakes the waiter
+        assert!(t.join().unwrap());
+        q.mark_dead(0);
+        q.mark_dead(1);
+        assert!(!q.wait_for_capacity(), "all replicas dead — no capacity ever");
+    }
+
+    #[test]
+    fn close_drains_then_returns_none() {
+        let q = WorkQueues::new(1);
+        q.push(0, batch(7));
+        q.close();
+        assert!(q.pop(0).is_some(), "queued work survives close");
+        assert!(q.pop(0).is_none(), "drained + closed pops None");
+    }
+
+    #[test]
+    fn blocked_pop_wakes_on_push_and_on_close() {
+        let q = WorkQueues::new(2);
+        let q2 = q.clone();
+        let t = thread::spawn(move || {
+            let got = q2.pop(1); // blocks: nothing queued anywhere
+            got.map(|(b, stolen)| (b.tokens(), stolen))
+        });
+        thread::sleep(Duration::from_millis(20));
+        q.push(0, batch(9)); // routed to 0 — replica 1 must steal it
+        assert_eq!(t.join().unwrap(), Some((9, true)));
+
+        let q3 = q.clone();
+        let t = thread::spawn(move || q3.pop(0).is_none());
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(t.join().unwrap(), "close wakes blocked pop with None");
+    }
+
+    #[test]
+    fn boot_status_mirrors_the_allocation() {
+        use crate::quant::QuantScheme;
+        let cfg = ModelConfig {
+            name: "boot".into(),
+            vocab: 32,
+            hidden: 16,
+            layers: 2,
+            heads: 2,
+            n_experts: 4,
+            n_shared: 1,
+            topk: 2,
+            inter: 8,
+            dense_first: false,
+            seq_len: 12,
+        };
+        let alloc = Allocation::uniform(&cfg, QuantScheme::W8A8);
+        let s = ReplicaStatus::boot(&cfg, &alloc);
+        assert_eq!(s.generation, 0);
+        assert_eq!(s.schemes.len(), 2);
+        for layer in &s.schemes {
+            assert_eq!(layer.len(), 5, "4 routed + 1 shared");
+            assert!(layer.iter().all(|&f| f == RuntimeScheme::W8A8));
+        }
+        for f in &s.live_freqs {
+            assert_eq!(f.len(), 4, "frequencies track routed experts only");
+            let sum: f64 = f.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Integration: multi-replica sharded serving (DESIGN.md §Sharded-Serving)
+//! must be a pure throughput transform — for the same request stream, an
+//! N-replica cluster's responses are bit-identical to a single replica's,
+//! for N ∈ {1, 2, 4} and any dispatch thread count, while the router's
+//! accounting stays consistent (every batch routed, executed exactly once).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use mxmoe::coordinator::{Cluster, ClusterConfig, ServeConfig};
+use mxmoe::harness::{mixed_runtime_plan, require_artifacts, save_model_mxt};
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::util::Rng;
+
+/// Serving-shape model (hidden=128, inter=64 — what the AOT export ships).
+fn serving_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "cluster-test".into(),
+        vocab: 64,
+        hidden: 128,
+        layers: 2,
+        heads: 4,
+        n_experts: 4,
+        n_shared: 1,
+        topk: 2,
+        inter: 64,
+        dense_first: false,
+        seq_len: 16,
+    }
+}
+
+/// The fixed request stream every cluster size serves: varying lengths so
+/// tile decomposition differs per request, same seed every run.
+fn request_stream(cfg: &ModelConfig) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(0xC1_05_7E12);
+    let lens = [16usize, 5, 16, 11, 2, 16, 9, 16, 7, 13];
+    lens.iter()
+        .map(|&n| (0..n).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect()
+}
+
+/// Serve the stream on an N-replica cluster and return per-request
+/// `(next_token, mean_nll bits)` plus the cluster report.
+fn serve_stream(
+    cfg: &ModelConfig,
+    weights: &PathBuf,
+    artifacts: &PathBuf,
+    replicas: usize,
+    dispatch_threads: Option<usize>,
+) -> (Vec<(u32, u64)>, mxmoe::coordinator::ClusterReport) {
+    // max_batch_seqs = 1: every request is its own batch, so batch
+    // composition (and therefore tiling) is identical for every cluster
+    // shape — what makes bit-identity well-defined across N
+    let cluster = Cluster::start(
+        cfg.clone(),
+        weights.clone(),
+        artifacts.clone(),
+        mixed_runtime_plan(cfg),
+        ClusterConfig {
+            replicas,
+            serve: ServeConfig {
+                max_batch_seqs: 1,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            dispatch_threads,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let receivers: Vec<_> = request_stream(cfg)
+        .into_iter()
+        .map(|seq| cluster.submit(seq).unwrap())
+        .collect();
+    let responses: Vec<(u32, u64)> = receivers
+        .iter()
+        .map(|rx| {
+            let r = rx.recv_timeout(Duration::from_secs(300)).expect("response");
+            (r.next_token, r.mean_nll.to_bits())
+        })
+        .collect();
+    (responses, cluster.shutdown())
+}
+
+#[test]
+fn n_replicas_bit_identical_to_single_replica() {
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let cfg = serving_cfg();
+    let weights = std::env::temp_dir().join("mxmoe_cluster_test.mxt");
+    let lm = MoeLm::random(&cfg, &mut Rng::new(0xC1_05));
+    save_model_mxt(&lm, &weights).unwrap();
+
+    let (reference, ref_report) = serve_stream(&cfg, &weights, &artifacts, 1, None);
+    assert_eq!(ref_report.replicas.len(), 1);
+    assert_eq!(ref_report.total_requests(), reference.len());
+
+    // N ∈ {2, 4} × differing grouped-dispatch thread counts: responses
+    // must match the single replica bit for bit
+    for (n, threads) in [(2usize, Some(1usize)), (2, Some(3)), (4, Some(2))] {
+        let (out, report) = serve_stream(&cfg, &weights, &artifacts, n, threads);
+        assert_eq!(
+            out, reference,
+            "{n}-replica (threads {threads:?}) responses diverged from single-replica"
+        );
+        // accounting: every batch routed once, executed exactly once
+        assert_eq!(report.replicas.len(), n);
+        assert_eq!(report.router.routed.len(), n);
+        assert_eq!(report.router.routed.iter().sum::<usize>(), report.router.batches);
+        let executed: usize = report.replicas.iter().map(|r| r.executed_batches).sum();
+        assert_eq!(executed, report.router.batches, "batches lost or duplicated");
+        assert_eq!(report.total_requests(), reference.len());
+        assert_eq!(report.total_tokens(), ref_report.total_tokens());
+        // every replica served the same boot generation (no online loop)
+        assert!(report.replicas.iter().all(|r| r.generation == 0));
+        let flat = report.flatten();
+        assert_eq!(flat.replicas, n);
+        assert_eq!(flat.requests, reference.len());
+        assert!(flat.throughput_tps > 0.0);
+    }
+    let _ = std::fs::remove_file(&weights);
+}

@@ -3,10 +3,9 @@
 //! across mixed schemes, uneven token counts, shared experts, and any
 //! worker-thread count.
 
-use std::path::PathBuf;
-
 use mxmoe::alloc::Allocation;
 use mxmoe::coordinator::ServingEngine;
+use mxmoe::harness::require_artifacts;
 use mxmoe::moe::{ModelConfig, MoeLm};
 use mxmoe::quant::QuantScheme;
 use mxmoe::runtime::{DispatchMode, RuntimeScheme};
@@ -14,14 +13,6 @@ use mxmoe::tensor::Matrix;
 use mxmoe::util::Rng;
 
 const MODEL_SEED: u64 = 0x6D15_BA7C;
-
-fn artifacts() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-fn have_artifacts() -> bool {
-    artifacts().join("expert_ffn_fp16_m16.hlo.txt").exists()
-}
 
 /// Serving-shape model (hidden=128, inter=64 — what the AOT export ships).
 fn serving_cfg() -> ModelConfig {
@@ -87,14 +78,14 @@ fn assert_bit_identical(a: &[Matrix], b: &[Matrix], what: &str) {
 
 #[test]
 fn grouped_matches_sequential_bit_for_bit() {
-    if !have_artifacts() {
+    let Some(artifacts) = require_artifacts() else {
         eprintln!("skipping: artifacts not built");
         return;
-    }
+    };
     let cfg = serving_cfg();
     let plan = mixed_plan(&cfg);
     let lm = MoeLm::random(&cfg, &mut Rng::new(MODEL_SEED));
-    let mut engine = ServingEngine::new(lm, &artifacts(), &plan).unwrap();
+    let mut engine = ServingEngine::new(lm, &artifacts, &plan).unwrap();
     assert_eq!(engine.dispatch_mode(), DispatchMode::Grouped, "grouped is the default");
     // the mixed plan must actually exercise all four families
     let families: Vec<RuntimeScheme> = engine.scheme_counts().iter().map(|(s, _)| *s).collect();
@@ -121,17 +112,17 @@ fn grouped_matches_sequential_bit_for_bit() {
 
 #[test]
 fn grouped_deterministic_across_thread_counts() {
-    if !have_artifacts() {
+    let Some(artifacts) = require_artifacts() else {
         eprintln!("skipping: artifacts not built");
         return;
-    }
+    };
     let cfg = serving_cfg();
     let plan = mixed_plan(&cfg);
     let batch = &uneven_batches(cfg.vocab as u64)[3]; // 340 rows, every tile size
     let mut reference: Option<Vec<Matrix>> = None;
     for threads in [1usize, 2, 5, 11] {
         let lm = MoeLm::random(&cfg, &mut Rng::new(MODEL_SEED));
-        let mut engine = ServingEngine::new(lm, &artifacts(), &plan).unwrap();
+        let mut engine = ServingEngine::new(lm, &artifacts, &plan).unwrap();
         engine.set_dispatch_threads(threads);
         let out = forward(&mut engine, batch);
         match &reference {
@@ -143,16 +134,16 @@ fn grouped_deterministic_across_thread_counts() {
 
 #[test]
 fn grouped_handles_shared_only_rows() {
-    if !have_artifacts() {
+    let Some(artifacts) = require_artifacts() else {
         eprintln!("skipping: artifacts not built");
         return;
-    }
+    };
     // 1-token batch: most routed experts are empty; the shared expert and
     // at most topk routed experts carry the whole dispatch
     let cfg = serving_cfg();
     let plan = mixed_plan(&cfg);
     let lm = MoeLm::random(&cfg, &mut Rng::new(MODEL_SEED));
-    let mut engine = ServingEngine::new(lm, &artifacts(), &plan).unwrap();
+    let mut engine = ServingEngine::new(lm, &artifacts, &plan).unwrap();
     let batch = vec![vec![7u32]];
     engine.set_dispatch_mode(DispatchMode::Sequential);
     let seq = forward(&mut engine, &batch);

@@ -2,31 +2,22 @@
 //! what the rust fake-quant reference computes — this pins the whole
 //! L1 (Pallas) → L2 (jax) → HLO text → PJRT → rust chain end to end.
 
-use std::path::PathBuf;
-
+use mxmoe::harness::require_artifacts;
 use mxmoe::moe::ExpertWeights;
 use mxmoe::runtime::{PreparedExpert, Runtime, RuntimeScheme};
 use mxmoe::tensor::Matrix;
 use mxmoe::util::Rng;
-
-fn artifacts() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-fn have_artifacts() -> bool {
-    artifacts().join("expert_ffn_fp16_m16.hlo.txt").exists()
-}
 
 /// Serving shapes the AOT export used (qwen15-mini).
 const HIDDEN: usize = 128;
 const INTER: usize = 64;
 
 fn check_scheme(scheme: RuntimeScheme, tol: f32) {
-    if !have_artifacts() {
+    let Some(artifacts) = require_artifacts() else {
         eprintln!("skipping: run `make artifacts` first");
         return;
-    }
-    let rt = Runtime::cpu(&artifacts()).unwrap();
+    };
+    let rt = Runtime::cpu(&artifacts).unwrap();
     let mut rng = Rng::new(0xE0 + scheme as u64);
     let e = ExpertWeights::random(HIDDEN, INTER, &mut rng);
     let prepared = PreparedExpert::prepare(&e, scheme).unwrap();
@@ -67,10 +58,10 @@ fn w4a4_executable_matches_native() {
 #[test]
 fn quantized_schemes_actually_differ_from_fp16() {
     // guard against the executables silently ignoring quantization
-    if !have_artifacts() {
+    let Some(artifacts) = require_artifacts() else {
         return;
-    }
-    let rt = Runtime::cpu(&artifacts()).unwrap();
+    };
+    let rt = Runtime::cpu(&artifacts).unwrap();
     let mut rng = Rng::new(0xF0);
     let e = ExpertWeights::random(HIDDEN, INTER, &mut rng);
     let x = Matrix::randn(16, HIDDEN, 1.0, &mut rng);

@@ -2,10 +2,9 @@
 //! a live engine must be indistinguishable from building a fresh engine on
 //! the new plan.
 
-use std::path::PathBuf;
-
 use mxmoe::alloc::Allocation;
 use mxmoe::coordinator::ServingEngine;
+use mxmoe::harness::require_artifacts;
 use mxmoe::moe::{ModelConfig, MoeLm};
 use mxmoe::quant::QuantScheme;
 use mxmoe::runtime::RuntimeScheme;
@@ -14,10 +13,6 @@ use mxmoe::tensor::Matrix;
 use mxmoe::util::Rng;
 
 const MODEL_SEED: u64 = 0x5A0_11E;
-
-fn artifacts() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
 
 /// Serving-shape model (hidden=128, inter=64 — what the AOT export ships).
 fn serving_cfg() -> ModelConfig {
@@ -64,16 +59,16 @@ fn assert_bit_identical(a: &[Matrix], b: &[Matrix], what: &str) {
 
 #[test]
 fn hot_swap_matches_fresh_engine_bit_for_bit() {
-    if !artifacts().join("expert_ffn_fp16_m16.hlo.txt").exists() {
+    let Some(artifacts) = require_artifacts() else {
         eprintln!("skipping: artifacts not built");
         return;
-    }
+    };
     let cfg = serving_cfg();
     let plan_a = Allocation::uniform(&cfg, QuantScheme::FP16);
     let plan_b = Allocation::uniform(&cfg, QuantScheme::W8A8);
     let batch = probe_batch(&cfg, 1);
 
-    let mut engine = ServingEngine::new(model(), &artifacts(), &plan_a).unwrap();
+    let mut engine = ServingEngine::new(model(), &artifacts, &plan_a).unwrap();
     assert_eq!(engine.generation(), 0);
     let out_a = forward(&mut engine, &batch);
 
@@ -94,23 +89,23 @@ fn hot_swap_matches_fresh_engine_bit_for_bit() {
     );
 
     // a fresh engine built directly on plan B must agree bit-for-bit
-    let mut fresh = ServingEngine::new(model(), &artifacts(), &plan_b).unwrap();
+    let mut fresh = ServingEngine::new(model(), &artifacts, &plan_b).unwrap();
     let out_fresh = forward(&mut fresh, &batch);
     assert_bit_identical(&out_swapped, &out_fresh, "swapped vs fresh(plan B)");
 }
 
 #[test]
 fn swap_back_restores_original_outputs() {
-    if !artifacts().join("expert_ffn_fp16_m16.hlo.txt").exists() {
+    let Some(artifacts) = require_artifacts() else {
         eprintln!("skipping: artifacts not built");
         return;
-    }
+    };
     let cfg = serving_cfg();
     let plan_a = Allocation::uniform(&cfg, QuantScheme::W4A16);
     let plan_b = Allocation::uniform(&cfg, QuantScheme::W4A4);
     let batch = probe_batch(&cfg, 2);
 
-    let mut engine = ServingEngine::new(model(), &artifacts(), &plan_a).unwrap();
+    let mut engine = ServingEngine::new(model(), &artifacts, &plan_a).unwrap();
     let out_a = forward(&mut engine, &batch);
     engine.install_plan(plan_b.clone(), &diff_plans(&plan_a, &plan_b)).unwrap();
     forward(&mut engine, &batch);
@@ -122,13 +117,13 @@ fn swap_back_restores_original_outputs() {
 
 #[test]
 fn empty_delta_is_a_noop() {
-    if !artifacts().join("expert_ffn_fp16_m16.hlo.txt").exists() {
+    let Some(artifacts) = require_artifacts() else {
         eprintln!("skipping: artifacts not built");
         return;
-    }
+    };
     let cfg = serving_cfg();
     let plan = Allocation::uniform(&cfg, QuantScheme::FP16);
-    let mut engine = ServingEngine::new(model(), &artifacts(), &plan).unwrap();
+    let mut engine = ServingEngine::new(model(), &artifacts, &plan).unwrap();
     let swapped = engine.install_plan(plan.clone(), &diff_plans(&plan, &plan)).unwrap();
     assert_eq!(swapped, 0);
     assert_eq!(engine.generation(), 0, "no-op delta must not bump the generation");

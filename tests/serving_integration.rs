@@ -6,15 +6,10 @@ use std::time::Duration;
 
 use mxmoe::alloc::Allocation;
 use mxmoe::coordinator::{ServeConfig, Server};
-use mxmoe::moe::lm::Ffn;
+use mxmoe::harness::{require_artifacts, save_model_mxt};
 use mxmoe::moe::{ModelConfig, MoeLm};
 use mxmoe::quant::QuantScheme;
-use mxmoe::ser::mxt::{MxtFile, MxtTensor};
 use mxmoe::util::Rng;
-
-fn artifacts() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
 
 /// Serving-shape model (hidden=128, inter=64 — what the AOT export ships),
 /// small expert count to keep the test fast.
@@ -36,42 +31,16 @@ fn serving_cfg() -> ModelConfig {
 
 fn save_random_model(cfg: &ModelConfig, path: &PathBuf, rng: &mut Rng) -> MoeLm {
     let lm = MoeLm::random(cfg, rng);
-    let mut f = MxtFile::new();
-    let m = |m: &mxmoe::tensor::Matrix| MxtTensor::from_f32(vec![m.rows, m.cols], &m.data);
-    f.insert("embed", m(&lm.embed));
-    f.insert("head", m(&lm.head));
-    f.insert("ln_f", MxtTensor::from_f32(vec![cfg.hidden], &lm.ln_f));
-    for (l, layer) in lm.layers.iter().enumerate() {
-        let p = |s: &str| format!("layers.{l}.{s}");
-        f.insert(&p("ln1"), MxtTensor::from_f32(vec![cfg.hidden], &layer.ln1));
-        f.insert(&p("ln2"), MxtTensor::from_f32(vec![cfg.hidden], &layer.ln2));
-        for (n, w) in [("wq", &layer.wq), ("wk", &layer.wk), ("wv", &layer.wv), ("wo", &layer.wo)] {
-            f.insert(&p(n), m(w));
-        }
-        if let Ffn::Moe(b) = &layer.ffn {
-            f.insert(&p("router"), m(&b.w_router));
-            for (e, ew) in b.experts.iter().enumerate() {
-                f.insert(&p(&format!("expert.{e}.gate")), m(&ew.gate));
-                f.insert(&p(&format!("expert.{e}.up")), m(&ew.up));
-                f.insert(&p(&format!("expert.{e}.down")), m(&ew.down));
-            }
-            for (s, ew) in b.shared.iter().enumerate() {
-                f.insert(&p(&format!("shared.{s}.gate")), m(&ew.gate));
-                f.insert(&p(&format!("shared.{s}.up")), m(&ew.up));
-                f.insert(&p(&format!("shared.{s}.down")), m(&ew.down));
-            }
-        }
-    }
-    f.save(path).unwrap();
+    save_model_mxt(&lm, path).unwrap();
     lm
 }
 
 #[test]
 fn serve_fp16_matches_native_forward() {
-    if !artifacts().join("expert_ffn_fp16_m16.hlo.txt").exists() {
+    let Some(artifacts) = require_artifacts() else {
         eprintln!("skipping: artifacts not built");
         return;
-    }
+    };
     let cfg = serving_cfg();
     let mut rng = Rng::new(0x5EB5);
     let weights_path = std::env::temp_dir().join("mxmoe_serve_test.mxt");
@@ -80,7 +49,7 @@ fn serve_fp16_matches_native_forward() {
     let server = Server::start(
         cfg.clone(),
         weights_path.clone(),
-        artifacts(),
+        artifacts,
         Allocation::uniform(&cfg, QuantScheme::FP16),
         ServeConfig { max_batch_seqs: 4, max_wait: Duration::from_millis(5), ..Default::default() },
     )
@@ -115,9 +84,9 @@ fn serve_fp16_matches_native_forward() {
 
 #[test]
 fn serve_quantized_stays_close_but_not_identical() {
-    if !artifacts().join("expert_ffn_w8a8_m16.hlo.txt").exists() {
+    let Some(artifacts) = require_artifacts() else {
         return;
-    }
+    };
     let cfg = serving_cfg();
     let mut rng = Rng::new(0x5EB6);
     let weights_path = std::env::temp_dir().join("mxmoe_serve_test_q.mxt");
@@ -126,7 +95,7 @@ fn serve_quantized_stays_close_but_not_identical() {
     let server = Server::start(
         cfg.clone(),
         weights_path.clone(),
-        artifacts(),
+        artifacts,
         Allocation::uniform(&cfg, QuantScheme::W8A8),
         ServeConfig::default(),
     )
