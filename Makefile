@@ -7,7 +7,7 @@
 PYTHON ?= python3
 CARGO  ?= cargo
 
-.PHONY: all artifacts corpus models build test bench-smoke clean
+.PHONY: all artifacts corpus models build test bench-smoke pytest clean
 
 all: build
 
@@ -34,10 +34,15 @@ build:
 test: build
 	$(CARGO) test -q
 
-# The two serving benches CI runs on every push (BENCH_*.json outputs).
+# The serving benches CI runs on every push (BENCH_*.json outputs).
 bench-smoke:
 	$(CARGO) bench --bench bench_group_dispatch -- --smoke
 	$(CARGO) bench --bench bench_cluster -- --smoke
+	$(CARGO) bench --bench bench_admission -- --smoke
+
+# Python unit tests (mirrors the CI python job).
+pytest:
+	cd python && $(PYTHON) -m pytest tests -q
 
 clean:
 	rm -rf target BENCH_*.json

@@ -1,0 +1,286 @@
+//! §Serving-API — bounded admission vs the unbounded legacy queue under
+//! sustained overload.
+//!
+//! Scenario: a 1-replica serving cluster is offered a paced request
+//! stream at ~2× its measured capacity (capacity is calibrated on the
+//! same model/plan immediately before the timed runs). 25% of the stream
+//! is `High` priority. Two policies serve the identical stream:
+//!
+//! * **unbounded** — the pre-redesign behavior: every request is
+//!   admitted (bounds set astronomically high), the queue grows without
+//!   limit, and tail latency grows with it.
+//! * **bounded** — the QoS front door: a small queue-depth bound sheds
+//!   load at admission (`try_submit` → `Rejected{QueueFull, retry_after}`),
+//!   so admitted requests ride a short queue.
+//!
+//! Reported: p99 end-to-end latency of *admitted High-priority* requests
+//! under both policies, the rejection counts (reconciled against
+//! `ClusterReport`), and the improvement ratio. Full mode asserts the
+//! acceptance bar: bounded-admission High-priority p99 at least 3× better
+//! than the unbounded queue. `--smoke` shrinks the stream for CI and
+//! skips the wall-clock assertion (shared runners), keeping the
+//! accounting assertions. Results land in `BENCH_admission.json`.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use mxmoe::coordinator::{Cluster, ClusterConfig, ServeConfig};
+use mxmoe::harness::{mixed_runtime_plan, require_artifacts, save_model_mxt};
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::ser::Json;
+use mxmoe::serve::{Admission, AdmissionConfig, Priority, ServeRequest, Ticket};
+use mxmoe::util::{Rng, Summary};
+
+const MODEL_SEED: u64 = 0x0AD1_5510;
+const SEQ_LEN: usize = 16;
+
+/// Serving-shape model (hidden=128, inter=64 — what the AOT export ships).
+fn serving_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "admission-bench".into(),
+        vocab: 64,
+        hidden: 128,
+        layers: 2,
+        heads: 4,
+        n_experts: 4,
+        n_shared: 1,
+        topk: 2,
+        inter: 64,
+        dense_first: false,
+        seq_len: SEQ_LEN,
+    }
+}
+
+/// The fixed offered stream: every 4th request is High priority.
+fn stream(cfg: &ModelConfig, n: usize) -> Vec<(Vec<u32>, Priority)> {
+    let mut rng = Rng::new(0x0FFE12);
+    (0..n)
+        .map(|i| {
+            let tokens: Vec<u32> =
+                (0..SEQ_LEN).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+            let p = if i % 4 == 0 { Priority::High } else { Priority::Normal };
+            (tokens, p)
+        })
+        .collect()
+}
+
+fn start(
+    cfg: &ModelConfig,
+    weights: &PathBuf,
+    artifacts: &PathBuf,
+    admission: AdmissionConfig,
+) -> Result<Cluster> {
+    Cluster::start(
+        cfg.clone(),
+        weights.clone(),
+        artifacts.clone(),
+        mixed_runtime_plan(cfg),
+        ClusterConfig {
+            serve: ServeConfig {
+                max_batch_seqs: 1,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            admission,
+            ..Default::default()
+        },
+    )
+}
+
+/// Measured serving capacity, tokens/second: a short closed-loop run
+/// (submit → wait → submit) on a fresh cluster, so the timed overload
+/// runs know what "2×" means on this machine.
+fn calibrate(cfg: &ModelConfig, weights: &PathBuf, artifacts: &PathBuf, n: usize) -> Result<f64> {
+    let cluster = start(cfg, weights, artifacts, AdmissionConfig::default())?;
+    let reqs = stream(cfg, n);
+    // warmup: first request pays executable-load costs
+    cluster
+        .submit_request(ServeRequest::new(reqs[0].0.clone()))?
+        .wait_timeout(Duration::from_secs(600))
+        .expect("warmup");
+    let t0 = Instant::now();
+    let mut tokens = 0usize;
+    for (seq, _) in &reqs {
+        tokens += seq.len();
+        cluster
+            .submit_request(ServeRequest::new(seq.clone()))?
+            .wait_timeout(Duration::from_secs(600))
+            .expect("calibration response");
+    }
+    let tps = tokens as f64 / t0.elapsed().as_secs_f64();
+    cluster.shutdown();
+    Ok(tps)
+}
+
+struct OverloadResult {
+    p99_high_s: f64,
+    p99_all_s: f64,
+    admitted: usize,
+    rejected: usize,
+    served: usize,
+}
+
+/// Offer the stream at `offered_tps` (≈2× capacity) against the given
+/// admission policy; collect per-priority latencies of admitted requests.
+fn run_overload(
+    cfg: &ModelConfig,
+    weights: &PathBuf,
+    artifacts: &PathBuf,
+    admission: AdmissionConfig,
+    reqs: &[(Vec<u32>, Priority)],
+    offered_tps: f64,
+) -> Result<OverloadResult> {
+    let cluster = start(cfg, weights, artifacts, admission)?;
+    // warmup outside the timed window
+    cluster
+        .submit_request(ServeRequest::new(reqs[0].0.clone()))?
+        .wait_timeout(Duration::from_secs(600))
+        .expect("warmup");
+    let interval = Duration::from_secs_f64(SEQ_LEN as f64 / offered_tps);
+    let start_at = Instant::now();
+    let mut tickets: Vec<(Ticket, Priority)> = Vec::new();
+    let mut rejected = 0usize;
+    for (i, (seq, priority)) in reqs.iter().enumerate() {
+        // paced open-loop arrivals: sleep to the schedule, never to the queue
+        let due = start_at + interval * i as u32;
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        match cluster.try_submit(ServeRequest::new(seq.clone()).priority(*priority))? {
+            Admission::Admitted(t) => tickets.push((t, *priority)),
+            Admission::Rejected { .. } => rejected += 1,
+        }
+    }
+    let mut high = Vec::new();
+    let mut all = Vec::new();
+    for (t, p) in &tickets {
+        let r = t.wait_timeout(Duration::from_secs(600)).expect("admitted ⇒ served");
+        let lat = r.latency.as_secs_f64();
+        all.push(lat);
+        if *p == Priority::High {
+            high.push(lat);
+        }
+    }
+    let report = cluster.shutdown();
+    // the front door's accounting must reconcile with what we observed
+    assert_eq!(report.admission.admitted, tickets.len() + 1, "admitted (incl. warmup)");
+    assert_eq!(report.admission.rejected(), rejected, "rejections accounted in ClusterReport");
+    assert_eq!(report.total_requests(), tickets.len() + 1, "every admitted request served");
+    // same percentile definition as ClusterReport/Metrics, so the JSON is
+    // directly comparable to the serving reports
+    let p99 = |v: &[f64]| if v.is_empty() { 0.0 } else { Summary::of(v).p99 };
+    Ok(OverloadResult {
+        p99_high_s: p99(&high),
+        p99_all_s: p99(&all),
+        admitted: tickets.len(),
+        rejected,
+        served: report.total_requests() - 1,
+    })
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!("# §Serving-API — bounded admission vs unbounded queue at 2× capacity");
+
+    let mut results = vec![("smoke", Json::Bool(smoke))];
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping admission bench: artifacts not built (run `make artifacts`)");
+        std::fs::write(
+            "BENCH_admission.json",
+            Json::obj(results.iter().map(|(k, v)| (*k, v.clone())).collect()).pretty(),
+        )?;
+        return Ok(());
+    };
+
+    let cfg = serving_cfg();
+    let weights = std::env::temp_dir().join("mxmoe_bench_admission.mxt");
+    let lm = MoeLm::random(&cfg, &mut Rng::new(MODEL_SEED));
+    save_model_mxt(&lm, &weights)?;
+
+    let (calib_n, n) = if smoke { (6, 24) } else { (16, 96) };
+    let capacity_tps = calibrate(&cfg, &weights, &artifacts, calib_n)?;
+    let offered_tps = 2.0 * capacity_tps;
+    println!("capacity ≈ {capacity_tps:.0} tok/s; offering {offered_tps:.0} tok/s");
+
+    let reqs = stream(&cfg, n);
+    // pre-redesign behavior: bounds no stream of this size can reach
+    let unbounded = run_overload(
+        &cfg,
+        &weights,
+        &artifacts,
+        AdmissionConfig {
+            max_queued_seqs: usize::MAX / 2,
+            max_queued_tokens: usize::MAX / 2,
+            ..Default::default()
+        },
+        &reqs,
+        offered_tps,
+    )?;
+    // QoS front door: queue bounded at 3 sequences
+    let bounded = run_overload(
+        &cfg,
+        &weights,
+        &artifacts,
+        AdmissionConfig { max_queued_seqs: 3, ..Default::default() },
+        &reqs,
+        offered_tps,
+    )?;
+    let _ = std::fs::remove_file(&weights);
+
+    println!(
+        "| unbounded | {:>3} admitted | {:>3} rejected | p99(high) {:>8.1} ms | p99(all) {:>8.1} ms |",
+        unbounded.admitted,
+        unbounded.rejected,
+        unbounded.p99_high_s * 1e3,
+        unbounded.p99_all_s * 1e3,
+    );
+    println!(
+        "| bounded   | {:>3} admitted | {:>3} rejected | p99(high) {:>8.1} ms | p99(all) {:>8.1} ms |",
+        bounded.admitted,
+        bounded.rejected,
+        bounded.p99_high_s * 1e3,
+        bounded.p99_all_s * 1e3,
+    );
+    let ratio = if bounded.p99_high_s > 0.0 {
+        unbounded.p99_high_s / bounded.p99_high_s
+    } else {
+        f64::INFINITY
+    };
+    println!("high-priority p99 improvement: {ratio:.2}×");
+
+    assert_eq!(unbounded.rejected, 0, "the unbounded baseline must admit everything");
+    assert_eq!(unbounded.served, unbounded.admitted);
+    assert!(
+        bounded.rejected > 0,
+        "2× overload against a 3-deep bound must load-shed"
+    );
+    if !smoke {
+        assert!(
+            ratio >= 3.0,
+            "bounded-admission High-priority p99 must be ≥3× better under \
+             2× overload (got {ratio:.2}×)"
+        );
+    }
+
+    results.extend([
+        ("requests", Json::num(n as f64)),
+        ("capacity_tok_per_s", Json::num(capacity_tps)),
+        ("offered_tok_per_s", Json::num(offered_tps)),
+        ("unbounded_p99_high_s", Json::num(unbounded.p99_high_s)),
+        ("unbounded_p99_all_s", Json::num(unbounded.p99_all_s)),
+        ("unbounded_admitted", Json::num(unbounded.admitted as f64)),
+        ("bounded_p99_high_s", Json::num(bounded.p99_high_s)),
+        ("bounded_p99_all_s", Json::num(bounded.p99_all_s)),
+        ("bounded_admitted", Json::num(bounded.admitted as f64)),
+        ("bounded_rejected", Json::num(bounded.rejected as f64)),
+        ("p99_high_improvement", Json::num(ratio)),
+    ]);
+    std::fs::write(
+        "BENCH_admission.json",
+        Json::obj(results.iter().map(|(k, v)| (*k, v.clone())).collect()).pretty(),
+    )?;
+    println!("\nwrote BENCH_admission.json");
+    Ok(())
+}

@@ -22,7 +22,9 @@ use mxmoe::coordinator::{Cluster, ClusterConfig, OnlineConfig, ServeConfig, Serv
 use mxmoe::costmodel::GpuSpec;
 use mxmoe::harness::{artifacts_dir, fast_mode, load_corpus, load_model};
 use mxmoe::quant::{QuantScheme, SchemeRegistry};
-use mxmoe::serve::{ReplanConfig, Replanner};
+use mxmoe::serve::{
+    Admission, AdmissionConfig, Priority, QosClass, ReplanConfig, Replanner, ServeRequest,
+};
 use mxmoe::util::Rng;
 
 fn main() -> Result<()> {
@@ -110,12 +112,15 @@ fn main() -> Result<()> {
     println!("(CPU-PJRT wall-clock is not a GPU perf proxy — Fig. 2/5 shapes come from the simulator benches.)");
 
     // ---- sharded serving: N replicas behind the expert-affinity router ----
-    // Same plan, same stream — the cluster shards the serve queue across
-    // replica engines (one PJRT client each); the router scores each cut
-    // batch against every replica's plan and work stealing mops up any
-    // imbalance. Responses are bit-identical to the 1-replica server.
+    // Same plan — the cluster shards the serve queue across replica
+    // engines (one PJRT client each); the router scores each cut batch
+    // against every replica's plan (speeds measured from live wave
+    // telemetry once warmed up) and work stealing mops up any imbalance.
+    // The stream goes through the typed QoS front door: a bounded
+    // admission queue, per-request priorities and deadlines, cancellable
+    // tickets.
     let n_replicas = 2;
-    eprintln!("serving with MxMoE mixed on a {n_replicas}-replica cluster...");
+    eprintln!("serving with MxMoE mixed on a {n_replicas}-replica cluster (QoS front door)...");
     let cluster = Cluster::start(
         cfg.clone(),
         weights_path.clone(),
@@ -128,18 +133,42 @@ fn main() -> Result<()> {
                 max_wait: Duration::from_millis(10),
                 ..Default::default()
             },
+            // small bound so the burst below visibly load-sheds
+            admission: AdmissionConfig { max_queued_seqs: 24, ..Default::default() },
             ..Default::default()
         },
     )?;
     let mut rng = Rng::new(0x5E12);
     let eval_seqs = corpus.sequences("valid", cfg.seq_len);
-    let mut receivers = Vec::new();
-    for _ in 0..n_requests {
+    let mut tickets = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..3 * n_requests {
         let seq = eval_seqs[rng.below(eval_seqs.len() as u64) as usize].to_vec();
-        receivers.push(cluster.submit(seq)?);
+        // mixed QoS: every 4th request is interactive High with a
+        // deadline; the rest are Normal
+        let req = if i % 4 == 0 {
+            ServeRequest::new(seq)
+                .priority(Priority::High)
+                .qos(QosClass::Interactive)
+                .deadline(Duration::from_secs(30))
+        } else {
+            ServeRequest::new(seq)
+        };
+        match cluster.try_submit(req)? {
+            Admission::Admitted(t) => tickets.push(t),
+            Admission::Rejected { .. } => rejected += 1,
+        }
     }
-    for rx in receivers {
-        rx.recv_timeout(Duration::from_secs(600)).expect("response");
+    // cancel a slice mid-queue: the tickets never yield a response and the
+    // queued work is shed, not executed
+    let n_cancelled = tickets.len() / 8;
+    for t in tickets.iter().rev().take(n_cancelled) {
+        t.cancel();
+    }
+    for t in &tickets {
+        if !t.is_cancelled() {
+            t.wait_timeout(Duration::from_secs(600)).expect("response");
+        }
     }
     let creport = cluster.shutdown();
     println!(
@@ -148,6 +177,20 @@ fn main() -> Result<()> {
         creport.router.routed,
         creport.total_steals(),
         creport.replicas.iter().map(|r| r.executed_batches).collect::<Vec<_>>(),
+    );
+    let p99 = creport.queue_wait_p99_by_priority();
+    println!(
+        "front door         | {} admitted | {} rejected | {} cancelled | queue-wait p99 high {:.1} ms vs normal {:.1} ms",
+        creport.admission.admitted,
+        rejected,
+        creport.admission.cancelled,
+        p99[Priority::High.index()] * 1e3,
+        p99[Priority::Normal.index()] * 1e3,
+    );
+    assert_eq!(
+        creport.admission.admitted,
+        creport.total_requests() + creport.admission.unserved(),
+        "front-door accounting: admitted == responses + cancelled + failed"
     );
 
     // ---- closed-loop demo: online telemetry + drift-adaptive replan ----

@@ -41,6 +41,9 @@ use crate::serve::replan::Replanner;
 use crate::serve::replica::{
     replica_main, ReplicaOnline, ReplicaSpec, ReplicaStatus, RoutedBatch, WorkQueues,
 };
+use crate::serve::request::{
+    Admission, AdmissionConfig, AdmissionState, ServeRequest, Ticket,
+};
 use crate::serve::{Request, Response};
 
 use super::metrics::{ClusterReport, ReplicaReport, RouterStats};
@@ -81,6 +84,9 @@ pub struct ClusterConfig {
     pub replicas: usize,
     pub serve: ServeConfig,
     pub affinity: AffinityConfig,
+    /// Bounded-admission policy for the front door (queue-depth bounds,
+    /// blocking-submit budget, projected-deadline shedding).
+    pub admission: AdmissionConfig,
     /// Grouped-dispatch worker threads per replica (`None` = engine
     /// default). Results are bit-identical for any value ≥ 1.
     pub dispatch_threads: Option<usize>,
@@ -92,15 +98,18 @@ impl Default for ClusterConfig {
             replicas: 1,
             serve: ServeConfig::default(),
             affinity: AffinityConfig::default(),
+            admission: AdmissionConfig::default(),
             dispatch_threads: None,
         }
     }
 }
 
-/// Relative serving throughput of a runtime family, fp16 ≡ 1. Mirrors the
-/// cost model's ordering on GroupGEMM shapes (lower-precision tiles move
-/// fewer bytes and finish sooner); the absolute values only need to rank
-/// replicas, not predict wall-clock.
+/// Roofline-derived relative serving throughput of a runtime family,
+/// fp16 ≡ 1 — the *fallback* the router scores with until live wave
+/// telemetry warms up ([`measured_speeds`]). Mirrors the cost model's
+/// ordering on GroupGEMM shapes (lower-precision tiles move fewer bytes
+/// and finish sooner); the absolute values only need to rank replicas,
+/// not predict wall-clock.
 pub fn scheme_speed(s: RuntimeScheme) -> f64 {
     match s {
         RuntimeScheme::Fp16 => 1.0,
@@ -108,6 +117,91 @@ pub fn scheme_speed(s: RuntimeScheme) -> f64 {
         RuntimeScheme::W8A8 => 2.2,
         RuntimeScheme::W4A4 => 3.2,
     }
+}
+
+/// Useful rows a runtime family must have executed before its measured
+/// rate replaces the roofline constant — throughput estimated from fewer
+/// rows is dominated by per-wave launch noise.
+pub const SPEED_WARMUP_ROWS: usize = 2048;
+
+fn scheme_index(s: RuntimeScheme) -> usize {
+    RuntimeScheme::ALL.iter().position(|&x| x == s).unwrap()
+}
+
+/// Relative per-family serving speeds the affinity scorer weighs with:
+/// measured from live wave latency telemetry where warmed up, the
+/// [`scheme_speed`] roofline constants elsewhere.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SchemeSpeeds {
+    rel: [f64; 4],
+}
+
+impl SchemeSpeeds {
+    /// Pure roofline constants (cold boot, or single-replica fast path).
+    pub fn fallback() -> SchemeSpeeds {
+        let mut rel = [0.0f64; 4];
+        for &s in &RuntimeScheme::ALL {
+            rel[scheme_index(s)] = scheme_speed(s);
+        }
+        SchemeSpeeds { rel }
+    }
+
+    pub fn speed(&self, s: RuntimeScheme) -> f64 {
+        self.rel[scheme_index(s)]
+    }
+
+    /// Build from measured `(scheme, useful_rows, busy_s)` wave totals.
+    /// Families past [`SPEED_WARMUP_ROWS`] switch to their measured
+    /// rows/second, re-based so the best-measured family keeps its
+    /// roofline constant — measured and constant entries stay mutually
+    /// comparable even when fp16 never runs (an all-quantized plan).
+    /// Families below the warmup bar keep the constants.
+    pub fn from_measurements(rows: &[(RuntimeScheme, usize, f64)]) -> SchemeSpeeds {
+        let mut agg = [(0usize, 0.0f64); 4]; // (rows, busy_s) per family
+        for &(s, r, busy) in rows {
+            let a = &mut agg[scheme_index(s)];
+            a.0 += r;
+            a.1 += busy;
+        }
+        // anchor: the warmed-up family with the most measured rows
+        let anchor = RuntimeScheme::ALL
+            .iter()
+            .copied()
+            .filter(|&s| {
+                let (r, busy) = agg[scheme_index(s)];
+                r >= SPEED_WARMUP_ROWS && busy > 0.0
+            })
+            .max_by_key(|&s| agg[scheme_index(s)].0);
+        let Some(anchor) = anchor else {
+            return SchemeSpeeds::fallback();
+        };
+        let (ar, abusy) = agg[scheme_index(anchor)];
+        let anchor_rate = ar as f64 / abusy;
+        let mut out = SchemeSpeeds::fallback();
+        for &s in &RuntimeScheme::ALL {
+            let (r, busy) = agg[scheme_index(s)];
+            if r >= SPEED_WARMUP_ROWS && busy > 0.0 {
+                let rate = r as f64 / busy;
+                // re-base to the anchor's constant; clamp against
+                // degenerate timing samples
+                out.rel[scheme_index(s)] =
+                    (scheme_speed(anchor) * rate / anchor_rate).clamp(0.1, 10.0);
+            }
+        }
+        out
+    }
+}
+
+/// Cluster-wide measured speeds: wave totals summed across every
+/// replica's published [`ReplicaStatus::scheme_rows`], then
+/// [`SchemeSpeeds::from_measurements`]. Before warmup this degrades to
+/// the roofline constants.
+pub fn measured_speeds(status: &[Mutex<ReplicaStatus>]) -> SchemeSpeeds {
+    let mut rows: Vec<(RuntimeScheme, usize, f64)> = Vec::new();
+    for s in status {
+        rows.extend_from_slice(&s.lock().unwrap().scheme_rows);
+    }
+    SchemeSpeeds::from_measurements(&rows)
 }
 
 /// Expert-affinity score of routing a `batch_tokens`-token batch to a
@@ -118,15 +212,17 @@ pub fn scheme_speed(s: RuntimeScheme) -> f64 {
 /// Per layer: each routed expert's projected row count is
 /// `batch_tokens × topk × freq`, tiled through
 /// [`dispatch::fill_estimate`]; shared experts see every token. The score
-/// is the row-weighted mean of `fill × scheme_speed` — i.e. the projected
+/// is the row-weighted mean of `fill × speed` — i.e. the projected
 /// useful wave throughput of this batch on this replica's plan — averaged
-/// over layers. Higher is better; the value is deterministic in its
-/// inputs.
+/// over layers, with `speeds` supplying the per-family weights (measured
+/// where warmed up, roofline constants elsewhere). Higher is better; the
+/// value is deterministic in its inputs.
 pub fn affinity_score(
     batch_tokens: usize,
     topk: usize,
     freqs: &[Vec<f64>],
     schemes: &[Vec<RuntimeScheme>],
+    speeds: &SchemeSpeeds,
 ) -> f64 {
     if batch_tokens == 0 {
         return 0.0;
@@ -144,13 +240,13 @@ pub fn affinity_score(
                 continue;
             }
             let fill = dispatch::fill_estimate(r).fill_ratio();
-            weighted += rows * fill * scheme_speed(ls[e]);
+            weighted += rows * fill * speeds.speed(ls[e]);
             rows_sum += rows;
         }
         for &s in &ls[n_routed..] {
             // shared experts run the whole batch
             let fill = dispatch::fill_estimate(batch_tokens).fill_ratio();
-            weighted += batch_tokens as f64 * fill * scheme_speed(s);
+            weighted += batch_tokens as f64 * fill * speeds.speed(s);
             rows_sum += batch_tokens as f64;
         }
         if rows_sum > 0.0 {
@@ -222,6 +318,8 @@ fn cluster_freqs(status: &[Mutex<ReplicaStatus>]) -> Vec<Vec<f64>> {
 /// Handle to a running replica cluster.
 pub struct Cluster {
     tx: mpsc::Sender<Request>,
+    admission: Arc<AdmissionState>,
+    admission_cfg: AdmissionConfig,
     router: Option<thread::JoinHandle<RouterStats>>,
     workers: Vec<thread::JoinHandle<ReplicaReport>>,
 }
@@ -276,6 +374,7 @@ impl Cluster {
         });
         let n = cluster_cfg.replicas;
         let queues = WorkQueues::new(n);
+        let admission = AdmissionState::new(n);
         let status: Arc<Vec<Mutex<ReplicaStatus>>> = Arc::new(
             (0..n).map(|_| Mutex::new(ReplicaStatus::boot(&cfg, &allocation))).collect(),
         );
@@ -292,10 +391,11 @@ impl Cluster {
             };
             let q = queues.clone();
             let st = status.clone();
+            let adm = admission.clone();
             workers.push(
                 thread::Builder::new()
                     .name(format!("mxmoe-replica-{id}"))
-                    .spawn(move || replica_main(spec, q, st))
+                    .spawn(move || replica_main(spec, q, st, adm))
                     .expect("spawn replica thread"),
             );
         }
@@ -303,20 +403,77 @@ impl Cluster {
         let policy = cluster_cfg.serve.policy();
         let affinity = cluster_cfg.affinity;
         let topk = cfg.topk;
+        let adm = admission.clone();
         let router = thread::Builder::new()
             .name("mxmoe-router".into())
-            .spawn(move || router_loop(rx, policy, &queues, &status, affinity, topk))
+            .spawn(move || router_loop(rx, policy, &queues, &status, &adm, affinity, topk))
             .expect("spawn router thread");
-        Ok(Cluster { tx, router: Some(router), workers })
+        Ok(Cluster {
+            tx,
+            admission,
+            admission_cfg: cluster_cfg.admission,
+            router: Some(router),
+            workers,
+        })
     }
 
-    /// Submit a request; returns the reply receiver.
-    pub fn submit(&self, tokens: Vec<u32>) -> Result<mpsc::Receiver<Response>> {
+    /// Non-blocking typed submission: either a [`Ticket`] or a
+    /// load-shedding rejection (queue-depth bound, projected deadline
+    /// miss) with a `retry_after` estimate.
+    pub fn try_submit(&self, req: ServeRequest) -> Result<Admission> {
+        match self.admission.try_admit(&self.admission_cfg, req.tokens.len(), req.ttl) {
+            Err((reason, retry_after)) => Ok(Admission::Rejected { reason, retry_after }),
+            Ok(id) => self.enqueue(req, id).map(Admission::Admitted),
+        }
+    }
+
+    /// Typed submission that blocks for queue room up to the admission
+    /// config's `submit_budget`. Errors when the budget expires while the
+    /// queue is still full, when the projected wait already blows the
+    /// request's deadline, or when the cluster is shutting down.
+    pub fn submit_request(&self, req: ServeRequest) -> Result<Ticket> {
+        match self.admission.admit_blocking(&self.admission_cfg, req.tokens.len(), req.ttl) {
+            Err((reason, retry_after)) => Err(anyhow::anyhow!(
+                "admission rejected ({reason:?}, retry after {retry_after:?})"
+            )),
+            Ok(id) => self.enqueue(req, id),
+        }
+    }
+
+    fn enqueue(&self, req: ServeRequest, id: u64) -> Result<Ticket> {
+        let ServeRequest { tokens, priority, ttl, qos } = req;
+        let n_tokens = tokens.len();
+        let arrived = Instant::now();
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request { tokens, reply, arrived: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("cluster closed"))?;
-        Ok(rx)
+        let cancel = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let request = Request {
+            id,
+            tokens,
+            reply,
+            arrived,
+            priority,
+            deadline: ttl.map(|d| arrived + d),
+            qos,
+            cancelled: cancel.clone(),
+        };
+        if self.tx.send(request).is_err() {
+            self.admission.abort_admit(n_tokens);
+            anyhow::bail!("cluster closed");
+        }
+        Ok(Ticket { rx, cancel, id })
+    }
+
+    /// Legacy untyped submission; returns the raw reply receiver. A thin
+    /// shim over [`submit_request`](Self::submit_request) with a default
+    /// [`ServeRequest`] (Normal priority, no deadline, no QoS class) —
+    /// responses are bit-identical to the typed path.
+    pub fn submit(&self, tokens: Vec<u32>) -> Result<mpsc::Receiver<Response>> {
+        self.submit_request(ServeRequest::new(tokens)).map(Ticket::into_receiver)
+    }
+
+    /// Front-door accounting so far (admitted / rejected / cancelled).
+    pub fn admission_report(&self) -> crate::serve::request::AdmissionReport {
+        self.admission.report()
     }
 
     /// Close admission, drain every queue, and collect the cluster report.
@@ -330,7 +487,7 @@ impl Cluster {
             .map(|h| h.join().expect("replica thread panicked"))
             .collect();
         replicas.sort_by_key(|r| r.id);
-        ClusterReport { replicas, router }
+        ClusterReport { replicas, router, admission: self.admission.report() }
     }
 }
 
@@ -339,6 +496,7 @@ fn router_loop(
     policy: crate::serve::BatchPolicy,
     queues: &WorkQueues,
     status: &[Mutex<ReplicaStatus>],
+    admission: &AdmissionState,
     affinity: AffinityConfig,
     topk: usize,
 ) -> RouterStats {
@@ -406,22 +564,35 @@ fn router_loop(
                 }
             }
         }
+        // cancellation is shed at the cut: dead requests release their
+        // admission slots and are never routed
+        let (shed_seqs, shed_tokens) = batcher.shed_cancelled();
+        if shed_seqs > 0 {
+            admission.note_shed_at_cut(shed_seqs, shed_tokens);
+            stats.shed_cancelled += shed_seqs;
+        }
         stats.max_queue_depth = stats.max_queue_depth.max(batcher.depth());
-        let batch = batcher.take_batch();
+        let batch = batcher.take_batch(Instant::now());
         if batch.is_empty() {
             continue;
         }
         let cut_tokens: usize = batch.iter().map(|r| r.tokens.len()).sum();
+        admission.note_cut(batch.len(), cut_tokens);
         stats.last_planned_fill = dispatch::fill_estimate(cut_tokens).fill_ratio();
         // ---- route: affinity score per replica, discounted by backlog ----
         let chosen = if n == 1 {
             0 // single-replica façade: scoring is overhead with one answer
         } else {
             let freqs = cluster_freqs(status);
+            // measured per-family speeds where wave telemetry warmed up,
+            // roofline constants elsewhere
+            let speeds = measured_speeds(status);
             let backlogs = queues.loads(); // queued + in-flight
             let scores: Vec<f64> = status
                 .iter()
-                .map(|s| affinity_score(cut_tokens, topk, &freqs, &s.lock().unwrap().schemes))
+                .map(|s| {
+                    affinity_score(cut_tokens, topk, &freqs, &s.lock().unwrap().schemes, &speeds)
+                })
                 .collect();
             choose_replica(&scores, &backlogs, affinity.queue_penalty)
         };
@@ -448,6 +619,111 @@ mod tests {
         assert!(scheme_speed(RuntimeScheme::W8A8) > scheme_speed(RuntimeScheme::W4A16));
         assert!(scheme_speed(RuntimeScheme::W4A16) > scheme_speed(RuntimeScheme::Fp16));
         assert_eq!(scheme_speed(RuntimeScheme::Fp16), 1.0);
+        // the fallback table mirrors the constants exactly
+        let f = SchemeSpeeds::fallback();
+        for &s in &RuntimeScheme::ALL {
+            assert_eq!(f.speed(s), scheme_speed(s));
+        }
+    }
+
+    #[test]
+    fn measured_speeds_fall_back_before_warmup() {
+        // nothing measured
+        assert_eq!(SchemeSpeeds::from_measurements(&[]), SchemeSpeeds::fallback());
+        // everything under the warmup row bar keeps the constants
+        let cold = SchemeSpeeds::from_measurements(&[
+            (RuntimeScheme::Fp16, SPEED_WARMUP_ROWS - 1, 0.5),
+            (RuntimeScheme::W4A4, 10, 0.001),
+        ]);
+        assert_eq!(cold, SchemeSpeeds::fallback());
+    }
+
+    #[test]
+    fn measured_speeds_track_observed_rates_and_rebase_to_the_anchor() {
+        // fp16 measured at 1e6 rows/s, w4a4 at 4e6 rows/s: w4a4 comes out
+        // 4× fp16 (live hardware says so), overriding the 3.2× constant
+        let m = SchemeSpeeds::from_measurements(&[
+            (RuntimeScheme::Fp16, 100_000, 0.1),
+            (RuntimeScheme::W4A4, 40_000, 0.01),
+        ]);
+        // anchor = fp16 (most rows) keeps its constant 1.0
+        assert!((m.speed(RuntimeScheme::Fp16) - 1.0).abs() < 1e-12);
+        assert!((m.speed(RuntimeScheme::W4A4) - 4.0).abs() < 1e-9);
+        // unmeasured families keep the constants
+        assert_eq!(m.speed(RuntimeScheme::W8A8), scheme_speed(RuntimeScheme::W8A8));
+        assert_eq!(m.speed(RuntimeScheme::W4A16), scheme_speed(RuntimeScheme::W4A16));
+    }
+
+    #[test]
+    fn measured_speeds_work_without_fp16_traffic() {
+        // all-quantized plan: fp16 never runs. The anchor (w8a8, most
+        // rows) keeps its constant and w4a4 scales relative to it.
+        let m = SchemeSpeeds::from_measurements(&[
+            (RuntimeScheme::W8A8, 80_000, 0.1), // 8e5 rows/s
+            (RuntimeScheme::W4A4, 40_000, 0.025), // 1.6e6 rows/s = 2× anchor
+        ]);
+        assert!((m.speed(RuntimeScheme::W8A8) - scheme_speed(RuntimeScheme::W8A8)).abs() < 1e-12);
+        assert!(
+            (m.speed(RuntimeScheme::W4A4) - 2.0 * scheme_speed(RuntimeScheme::W8A8)).abs() < 1e-9
+        );
+        assert_eq!(m.speed(RuntimeScheme::Fp16), 1.0, "unmeasured fp16 keeps its constant");
+    }
+
+    #[test]
+    fn measured_speeds_can_flip_the_routing_preference() {
+        // constants say w4a4 ≫ fp16; live telemetry says this hardware
+        // runs w4a4 *slower* (e.g. dequant-bound) — the measured table
+        // must flip the affinity preference between two replicas
+        let freqs = vec![vec![0.9, 0.1]];
+        let hot_w4a4 = vec![vec![RuntimeScheme::W4A4, RuntimeScheme::Fp16]];
+        let hot_fp16 = vec![vec![RuntimeScheme::Fp16, RuntimeScheme::W4A4]];
+        let constants = SchemeSpeeds::fallback();
+        assert!(
+            affinity_score(64, 1, &freqs, &hot_w4a4, &constants)
+                > affinity_score(64, 1, &freqs, &hot_fp16, &constants)
+        );
+        let measured = SchemeSpeeds::from_measurements(&[
+            (RuntimeScheme::Fp16, 100_000, 0.05), // 2e6 rows/s
+            (RuntimeScheme::W4A4, 100_000, 0.2),  // 5e5 rows/s
+        ]);
+        assert!(
+            affinity_score(64, 1, &freqs, &hot_fp16, &measured)
+                > affinity_score(64, 1, &freqs, &hot_w4a4, &measured),
+            "measured slowness must override the roofline constant"
+        );
+    }
+
+    #[test]
+    fn cluster_measured_speeds_aggregate_replica_rows() {
+        use crate::quant::QuantScheme;
+        let cfg = ModelConfig {
+            name: "speeds".into(),
+            vocab: 32,
+            hidden: 16,
+            layers: 2,
+            heads: 2,
+            n_experts: 2,
+            n_shared: 0,
+            topk: 1,
+            inter: 8,
+            dense_first: false,
+            seq_len: 8,
+        };
+        let alloc = Allocation::uniform(&cfg, QuantScheme::FP16);
+        let a = Mutex::new(ReplicaStatus::boot(&cfg, &alloc));
+        let b = Mutex::new(ReplicaStatus::boot(&cfg, &alloc));
+        assert_eq!(measured_speeds(&[]), SchemeSpeeds::fallback(), "no replicas: constants");
+        // each replica alone is under the warmup bar; together they clear it
+        a.lock().unwrap().scheme_rows = vec![(RuntimeScheme::Fp16, SPEED_WARMUP_ROWS / 2, 0.1)];
+        b.lock().unwrap().scheme_rows = vec![(RuntimeScheme::Fp16, SPEED_WARMUP_ROWS / 2, 0.1)];
+        let status = vec![a, b];
+        assert_eq!(
+            measured_speeds(&status[..1]),
+            SchemeSpeeds::fallback(),
+            "one replica's rows stay under warmup"
+        );
+        let m = measured_speeds(&status);
+        assert!((m.speed(RuntimeScheme::Fp16) - 1.0).abs() < 1e-12, "anchored at fp16");
     }
 
     #[test]
@@ -458,8 +734,9 @@ mod tests {
         let freqs = vec![vec![0.9, 0.1]];
         let hot_fast = vec![vec![RuntimeScheme::W4A4, RuntimeScheme::Fp16]];
         let hot_slow = vec![vec![RuntimeScheme::Fp16, RuntimeScheme::W4A4]];
-        let a = affinity_score(64, 1, &freqs, &hot_fast);
-        let b = affinity_score(64, 1, &freqs, &hot_slow);
+        let speeds = SchemeSpeeds::fallback();
+        let a = affinity_score(64, 1, &freqs, &hot_fast, &speeds);
+        let b = affinity_score(64, 1, &freqs, &hot_slow, &speeds);
         assert!(a > b, "hot-expert-fast {a} must beat hot-expert-slow {b}");
     }
 
@@ -470,8 +747,9 @@ mod tests {
         // projected fill (and score) must drop
         let freqs = vec![vec![0.5, 0.5]];
         let plan = vec![vec![RuntimeScheme::W8A8, RuntimeScheme::W8A8]];
-        let dense = affinity_score(128, 1, &freqs, &plan);
-        let ragged = affinity_score(130, 1, &freqs, &plan);
+        let speeds = SchemeSpeeds::fallback();
+        let dense = affinity_score(128, 1, &freqs, &plan, &speeds);
+        let ragged = affinity_score(130, 1, &freqs, &plan, &speeds);
         assert!(
             dense > ragged,
             "dense-tiling batch {dense} must outscore ragged {ragged}"
@@ -487,8 +765,8 @@ mod tests {
         let shared_slow =
             vec![vec![RuntimeScheme::Fp16, RuntimeScheme::Fp16, RuntimeScheme::Fp16]];
         assert!(
-            affinity_score(64, 2, &freqs, &shared_fast)
-                > affinity_score(64, 2, &freqs, &shared_slow)
+            affinity_score(64, 2, &freqs, &shared_fast, &SchemeSpeeds::fallback())
+                > affinity_score(64, 2, &freqs, &shared_slow, &SchemeSpeeds::fallback())
         );
     }
 
@@ -499,11 +777,12 @@ mod tests {
             vec![RuntimeScheme::W4A4, RuntimeScheme::Fp16, RuntimeScheme::W8A8],
             vec![RuntimeScheme::W4A16, RuntimeScheme::W8A8, RuntimeScheme::Fp16],
         ];
-        let a = affinity_score(68, 2, &freqs, &plan);
-        let b = affinity_score(68, 2, &freqs, &plan);
+        let speeds = SchemeSpeeds::fallback();
+        let a = affinity_score(68, 2, &freqs, &plan, &speeds);
+        let b = affinity_score(68, 2, &freqs, &plan, &speeds);
         assert_eq!(a, b, "scoring must be reproducible");
         assert!(a > 0.0 && a <= scheme_speed(RuntimeScheme::W4A4), "{a}");
-        assert_eq!(affinity_score(0, 2, &freqs, &plan), 0.0, "empty batch scores 0");
+        assert_eq!(affinity_score(0, 2, &freqs, &plan, &speeds), 0.0, "empty batch scores 0");
     }
 
     #[test]

@@ -17,12 +17,13 @@ use crate::runtime::{
     tile_decompose, DispatchMode, DispatchPlan, ExpertWork, Runtime, RuntimeScheme,
 };
 use crate::serve::replan::{diff_plans, ReplanOutcome, Replanner};
+use crate::serve::request::QosClass;
 use crate::serve::telemetry::{ActivationTelemetry, DEFAULT_EWMA_ALPHA};
 use crate::serve::{SlotChange, SlotTable};
 use crate::tensor::Matrix;
 use crate::util::threadpool::default_threads;
 
-use super::metrics::Metrics;
+use super::metrics::{Metrics, ReplanEvent};
 
 /// The mutable serving state the MoE hook needs: PJRT runtime, the live
 /// slot table, metrics and telemetry. Split out of [`ServingEngine`] so the
@@ -360,14 +361,37 @@ impl ServingEngine {
         Ok(swapped)
     }
 
+    /// Effective accuracy/perf exponent for the next re-solve: the
+    /// configured `r` pulled toward each served [`QosClass`]'s hint,
+    /// traffic-weighted (`Standard`/unclassified traffic keeps the
+    /// default). An all-interactive stream lowers `r` (favor throughput);
+    /// an all-batch stream raises it (favor accuracy) — the QoS-tuning
+    /// direction, driven by what this replica actually served.
+    pub fn qos_effective_r(&self, default_r: f64) -> f64 {
+        let counts = self.dispatch.metrics.qos_served;
+        let total: usize = counts.iter().sum();
+        if total == 0 {
+            return default_r;
+        }
+        let mut acc = 0.0;
+        for (&n, &class) in counts.iter().zip(QosClass::ALL.iter()) {
+            acc += n as f64 * class.r_hint().unwrap_or(default_r);
+        }
+        acc / total as f64
+    }
+
     /// The online loop body (DESIGN.md §Online-Serving): check drift, and
     /// if it crossed the threshold (with token hysteresis satisfied),
     /// re-solve the MCKP on live frequencies warm-started from the current
-    /// plan, hot-swap the delta, and rebaseline the telemetry. Call
+    /// plan — with the accuracy/perf exponent blended from the served QoS
+    /// mix — hot-swap the delta, and rebaseline the telemetry. Call
     /// strictly between batches. Returns `None` when no replan triggered.
+    /// Every check refreshes the per-layer drift vector; every triggered
+    /// replan appends to the bounded history (replan observability).
     pub fn maybe_replan(&mut self, replanner: &Replanner) -> Result<Option<ReplanOutcome>> {
         let drift = self.dispatch.telemetry.max_drift();
         self.dispatch.metrics.last_drift = drift;
+        self.dispatch.metrics.drift_vector = self.dispatch.telemetry.drifts();
         if drift < replanner.cfg.drift_threshold {
             return Ok(None);
         }
@@ -379,12 +403,28 @@ impl ServingEngine {
         // for min_tokens_between instead of re-solving on every batch
         self.tokens_at_last_replan = observed;
         let freqs = self.dispatch.telemetry.live().to_vec();
-        let new_alloc = replanner.replan(&self.lm.cfg, &freqs, &self.allocation)?;
+        let r = self.qos_effective_r(replanner.cfg.alloc.r);
+        let new_alloc = replanner.replan_with_r(&self.lm.cfg, &freqs, &self.allocation, Some(r))?;
         let changes = diff_plans(&self.allocation, &new_alloc);
         let n_changes = changes.len();
+        let bits_before = self.allocation.avg_weight_bits(&self.lm.cfg);
+        let bits_after = new_alloc.avg_weight_bits(&self.lm.cfg);
         let swapped = self.install_plan(new_alloc, &changes)?;
         self.dispatch.telemetry.rebaseline();
-        self.dispatch.metrics.replans += 1;
+        let generation = self.dispatch.slots.generation();
+        let m = &mut self.dispatch.metrics;
+        m.replans += 1;
+        let at_s = m.elapsed();
+        m.note_replan(ReplanEvent {
+            at_s,
+            drift,
+            changes: n_changes,
+            swapped,
+            r,
+            bits_before,
+            bits_after,
+            generation,
+        });
         Ok(Some(ReplanOutcome { drift, changes: n_changes, swapped }))
     }
 }

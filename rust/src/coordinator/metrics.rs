@@ -1,12 +1,17 @@
 //! Serving metrics: latency distribution + throughput counters + grouped-
 //! dispatch wave telemetry (occupancy, fill, latency percentiles) — plus
 //! the cluster view: per-replica reports and their aggregation into a
-//! single [`ServerReport`] (DESIGN.md §Sharded-Serving).
+//! single [`ServerReport`] (DESIGN.md §Sharded-Serving). Since the QoS
+//! redesign (DESIGN.md §Serving-API) the counters also split queue waits
+//! by [`Priority`], track the served QoS mix, carry admission/rejection/
+//! cancellation totals, and keep a bounded replan history with the
+//! per-layer drift vector for replan observability.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::runtime::{RuntimeScheme, WaveReport};
+use crate::serve::request::{AdmissionReport, Priority, QosClass};
 use crate::util::stats::Summary;
 
 /// Aggregated wave counters for one runtime scheme family.
@@ -34,11 +39,49 @@ impl SchemeWaveStats {
     }
 }
 
+/// One entry of the bounded replan history: what triggered a re-solve and
+/// what it changed (replan observability — exported through
+/// [`ReplicaReport`] and [`ClusterReport`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ReplanEvent {
+    /// Seconds since engine start (the replica's monotonic clock).
+    pub at_s: f64,
+    /// Worst-layer TV drift that triggered the re-solve.
+    pub drift: f64,
+    /// Slots whose runtime family changed.
+    pub changes: usize,
+    /// Slots actually hot-swapped.
+    pub swapped: usize,
+    /// Accuracy/perf exponent the re-solve ran with (QoS-blended).
+    pub r: f64,
+    /// Average stored weight bits before → after: the budget-axis score
+    /// delta of the new plan.
+    pub bits_before: f64,
+    pub bits_after: f64,
+    /// Plan generation after the swap.
+    pub generation: u64,
+}
+
+/// Replan-history entries retained per replica (bounded ring: the newest
+/// [`REPLAN_HISTORY`] events survive).
+pub const REPLAN_HISTORY: usize = 64;
+
 /// Rolling serving metrics (single-threaded engine owns it).
 pub struct Metrics {
     start: Instant,
     latencies: Vec<f64>,
     queue_waits: Vec<f64>,
+    /// Queue-wait samples split by request priority (same clock as
+    /// `queue_waits`; index = `Priority::index()`).
+    queue_waits_by_priority: [Vec<f64>; 3],
+    /// Requests served per QoS class (`None` counts as `Standard`).
+    pub qos_served: [usize; 3],
+    /// Cancelled requests shed before execution on this replica.
+    pub shed_cancelled: usize,
+    /// Per-layer TV drift at the last telemetry check (replan
+    /// observability — `last_drift` is this vector's max).
+    pub drift_vector: Vec<f64>,
+    replan_history: Vec<ReplanEvent>,
     pub tokens: usize,
     pub requests: usize,
     pub batches: usize,
@@ -82,6 +125,11 @@ impl Metrics {
             start: Instant::now(),
             latencies: Vec::new(),
             queue_waits: Vec::new(),
+            queue_waits_by_priority: [Vec::new(), Vec::new(), Vec::new()],
+            qos_served: [0; 3],
+            shed_cancelled: 0,
+            drift_vector: Vec::new(),
+            replan_history: Vec::new(),
             tokens: 0,
             requests: 0,
             batches: 0,
@@ -180,8 +228,33 @@ impl Metrics {
         self.requests += 1;
     }
 
-    pub fn record_queue_wait(&mut self, wait_s: f64) {
+    pub fn record_queue_wait(&mut self, wait_s: f64, priority: Priority) {
         self.queue_waits.push(wait_s);
+        self.queue_waits_by_priority[priority.index()].push(wait_s);
+    }
+
+    /// Queue-wait samples per priority level (index = `Priority::index()`).
+    pub fn queue_waits_by_priority(&self) -> &[Vec<f64>; 3] {
+        &self.queue_waits_by_priority
+    }
+
+    /// Count one served request against its QoS class (`None` counts as
+    /// `Standard` — the class is a hint, not a requirement).
+    pub fn note_qos(&mut self, qos: Option<QosClass>) {
+        self.qos_served[qos.unwrap_or(QosClass::Standard).index()] += 1;
+    }
+
+    /// Append to the bounded replan history (oldest entries drop once
+    /// [`REPLAN_HISTORY`] is reached).
+    pub fn note_replan(&mut self, event: ReplanEvent) {
+        if self.replan_history.len() >= REPLAN_HISTORY {
+            self.replan_history.remove(0);
+        }
+        self.replan_history.push(event);
+    }
+
+    pub fn replan_history(&self) -> &[ReplanEvent] {
+        &self.replan_history
     }
 
     pub fn note_queue_depth(&mut self, depth: usize) {
@@ -257,6 +330,16 @@ pub struct ReplicaReport {
     pub swaps: usize,
     pub replans: usize,
     pub last_drift: f64,
+    /// Per-layer TV drift at the last telemetry check.
+    pub drift_vector: Vec<f64>,
+    /// Bounded replan history (newest [`REPLAN_HISTORY`] events).
+    pub replan_history: Vec<ReplanEvent>,
+    /// Cancelled requests shed before execution on this replica.
+    pub shed_cancelled: usize,
+    /// Requests served per QoS class (`None` counted as `Standard`).
+    pub qos_served: [usize; 3],
+    /// Queue-wait samples split by priority (index = `Priority::index()`).
+    pub queue_waits_by_priority: [Vec<f64>; 3],
     /// Final hot-swap generation of this replica's plan.
     pub generation: u64,
     pub scheme_counts: Vec<(RuntimeScheme, usize)>,
@@ -277,6 +360,8 @@ pub struct RouterStats {
     pub routed: Vec<usize>,
     /// Deepest admission queue observed at a batch cut.
     pub max_queue_depth: usize,
+    /// Cancelled requests shed at batch cuts (never routed).
+    pub shed_cancelled: usize,
     /// Planner-projected tile fill of the last batch cut.
     pub last_planned_fill: f64,
     /// Router lifetime (first admission poll → queue close), seconds.
@@ -289,6 +374,7 @@ impl RouterStats {
             batches: 0,
             routed: vec![0; replicas],
             max_queue_depth: 0,
+            shed_cancelled: 0,
             last_planned_fill: 1.0,
             elapsed_s: 0.0,
         }
@@ -302,6 +388,11 @@ impl RouterStats {
 pub struct ClusterReport {
     pub replicas: Vec<ReplicaReport>,
     pub router: RouterStats,
+    /// Front-door accounting: admitted / rejected (queue-full,
+    /// deadline-unmeetable) / cancelled / failed. For a drained shutdown,
+    /// `admission.admitted == total_requests() + admission.cancelled +
+    /// admission.failed`.
+    pub admission: AdmissionReport,
 }
 
 impl ClusterReport {
@@ -315,6 +406,47 @@ impl ClusterReport {
 
     pub fn total_steals(&self) -> usize {
         self.replicas.iter().map(|r| r.stolen_batches).sum()
+    }
+
+    /// Queue-wait p99 per priority level, samples merged across replicas
+    /// (0.0 where a level saw no traffic). Index = `Priority::index()`.
+    pub fn queue_wait_p99_by_priority(&self) -> [f64; 3] {
+        let mut out = [0.0f64; 3];
+        for (i, slot) in out.iter_mut().enumerate() {
+            let mut samples = Vec::new();
+            for r in &self.replicas {
+                samples.extend_from_slice(&r.queue_waits_by_priority[i]);
+            }
+            if !samples.is_empty() {
+                *slot = Summary::of(&samples).p99;
+            }
+        }
+        out
+    }
+
+    /// Per-layer drift, worst replica per layer (replicas may disagree on
+    /// layer count mid-publish; the vector covers the longest).
+    pub fn drift_vector(&self) -> Vec<f64> {
+        let layers = self.replicas.iter().map(|r| r.drift_vector.len()).max().unwrap_or(0);
+        let mut out = vec![0.0f64; layers];
+        for r in &self.replicas {
+            for (o, &d) in out.iter_mut().zip(&r.drift_vector) {
+                *o = o.max(d);
+            }
+        }
+        out
+    }
+
+    /// All replicas' replan events, oldest first (per-replica clocks —
+    /// ordering across replicas is approximate).
+    pub fn replan_history(&self) -> Vec<(usize, ReplanEvent)> {
+        let mut events: Vec<(usize, ReplanEvent)> = self
+            .replicas
+            .iter()
+            .flat_map(|r| r.replan_history.iter().map(move |e| (r.id, *e)))
+            .collect();
+        events.sort_by(|a, b| a.1.at_s.partial_cmp(&b.1.at_s).unwrap_or(std::cmp::Ordering::Equal));
+        events
     }
 
     /// Cluster throughput over the longest-lived replica's wall clock
@@ -372,11 +504,28 @@ impl ClusterReport {
             last_planned_fill: self.router.last_planned_fill,
             max_queue_depth: self.router.max_queue_depth,
             replans: self.replicas.iter().map(|r| r.replans).sum(),
+            replan_events: self.replicas.iter().map(|r| r.replan_history.len()).sum(),
             swaps: self.replicas.iter().map(|r| r.swaps).sum(),
             last_drift: self.replicas.iter().map(|r| r.last_drift).fold(0.0, f64::max),
+            drift_vector: self.drift_vector(),
             generation: self.replicas.iter().map(|r| r.generation).max().unwrap_or(0),
             replicas: self.replicas.len(),
             stolen_batches: self.total_steals(),
+            admitted: self.admission.admitted,
+            rejected_queue_full: self.admission.rejected_queue_full,
+            rejected_deadline: self.admission.rejected_deadline,
+            cancelled: self.admission.cancelled,
+            failed: self.admission.failed,
+            queue_wait_p99_by_priority: self.queue_wait_p99_by_priority(),
+            qos_served: {
+                let mut q = [0usize; 3];
+                for r in &self.replicas {
+                    for (a, b) in q.iter_mut().zip(&r.qos_served) {
+                        *a += b;
+                    }
+                }
+                q
+            },
         }
     }
 }
@@ -408,10 +557,15 @@ pub struct ServerReport {
     pub max_queue_depth: usize,
     /// Drift-triggered MCKP re-solves (summed over replicas).
     pub replans: usize,
+    /// Replan-history entries retained across replicas (≤ replans when
+    /// the bounded ring wrapped).
+    pub replan_events: usize,
     /// Expert slots hot-swapped to a new runtime family (summed).
     pub swaps: usize,
     /// Worst per-replica telemetry drift at the last check.
     pub last_drift: f64,
+    /// Per-layer drift, worst replica per layer.
+    pub drift_vector: Vec<f64>,
     /// Highest replica plan generation (0 = every boot plan served
     /// throughout).
     pub generation: u64,
@@ -419,6 +573,20 @@ pub struct ServerReport {
     pub replicas: usize,
     /// Batches executed by a different replica than the router chose.
     pub stolen_batches: usize,
+    /// Requests admitted at the front door (ticket issued).
+    pub admitted: usize,
+    /// Requests turned away at the queue-depth bound.
+    pub rejected_queue_full: usize,
+    /// Requests turned away on projected deadline miss.
+    pub rejected_deadline: usize,
+    /// Admitted requests cancelled before producing a response.
+    pub cancelled: usize,
+    /// Admitted requests dropped by a failed batch forward (engine error).
+    pub failed: usize,
+    /// Queue-wait p99 per priority level (index = `Priority::index()`).
+    pub queue_wait_p99_by_priority: [f64; 3],
+    /// Requests served per QoS class (`None` counted as `Standard`).
+    pub qos_served: [usize; 3],
 }
 
 #[cfg(test)]
@@ -526,6 +694,20 @@ mod tests {
             swaps: 5,
             replans: 1,
             last_drift: 0.1 * (id + 1) as f64,
+            drift_vector: vec![0.1 * (id + 1) as f64, 0.05],
+            replan_history: vec![ReplanEvent {
+                at_s: 1.0,
+                drift: 0.2,
+                changes: 3,
+                swapped: 3,
+                r: 0.75,
+                bits_before: 5.0,
+                bits_after: 4.8,
+                generation: 1,
+            }],
+            shed_cancelled: id,
+            qos_served: [id, 2, 0],
+            queue_waits_by_priority: [vec![], vec![0.001], vec![0.0005]],
             generation: id as u64,
             scheme_counts: vec![(RuntimeScheme::Fp16, 4)],
             latencies: vec![lat, lat],
@@ -539,8 +721,16 @@ mod tests {
                 batches: 4,
                 routed: vec![3, 1],
                 max_queue_depth: 7,
+                shed_cancelled: 1,
                 last_planned_fill: 0.9,
                 elapsed_s: 2.0,
+            },
+            admission: AdmissionReport {
+                admitted: 7,
+                rejected_queue_full: 2,
+                rejected_deadline: 1,
+                cancelled: 3,
+                failed: 0,
             },
         };
         assert_eq!(report.total_requests(), 4);
@@ -560,6 +750,19 @@ mod tests {
         assert_eq!((flat.swaps, flat.replans), (10, 2));
         assert!((flat.last_drift - 0.2).abs() < 1e-12, "worst replica drift");
         assert_eq!(flat.generation, 1, "highest replica generation");
+        // QoS-redesign fields: admission totals pass through, drift vector
+        // takes the worst replica per layer, per-priority p99 merges
+        // replica samples, qos counts sum
+        assert_eq!((flat.admitted, flat.cancelled), (7, 3));
+        assert_eq!((flat.rejected_queue_full, flat.rejected_deadline), (2, 1));
+        assert_eq!(flat.replan_events, 2);
+        assert_eq!(flat.drift_vector, vec![0.2, 0.05]);
+        assert_eq!(flat.qos_served, [1, 4, 0]);
+        assert_eq!(flat.queue_wait_p99_by_priority[0], 0.0, "no Low samples");
+        assert!((flat.queue_wait_p99_by_priority[1] - 0.001).abs() < 1e-12);
+        assert!((flat.queue_wait_p99_by_priority[2] - 0.0005).abs() < 1e-12);
+        let hist = report.replan_history();
+        assert_eq!(hist.len(), 2, "events from both replicas, merged");
         assert!((flat.padding_ratio - (1.0 - 48.0 / 64.0 * 1.0)).abs() < 1e-9);
         assert!((flat.wave_fill_ratio - 48.0 / 64.0).abs() < 1e-12);
         // percentiles merge samples across replicas, not averages of summaries
@@ -570,9 +773,12 @@ mod tests {
     fn online_counters() {
         let mut m = Metrics::new();
         assert!(m.queue_wait_summary().is_none());
-        m.record_queue_wait(0.002);
-        m.record_queue_wait(0.004);
+        m.record_queue_wait(0.002, Priority::Normal);
+        m.record_queue_wait(0.004, Priority::High);
         assert!((m.queue_wait_summary().unwrap().mean - 0.003).abs() < 1e-9);
+        assert_eq!(m.queue_waits_by_priority()[Priority::Normal.index()], vec![0.002]);
+        assert_eq!(m.queue_waits_by_priority()[Priority::High.index()], vec![0.004]);
+        assert!(m.queue_waits_by_priority()[Priority::Low.index()].is_empty());
         m.note_queue_depth(3);
         m.note_queue_depth(1);
         assert_eq!(m.max_queue_depth, 3);
@@ -580,5 +786,37 @@ mod tests {
         m.replans += 1;
         m.last_drift = 0.4;
         assert_eq!((m.swaps, m.replans), (2, 1));
+    }
+
+    #[test]
+    fn qos_counts_default_to_standard() {
+        let mut m = Metrics::new();
+        m.note_qos(Some(QosClass::Interactive));
+        m.note_qos(None);
+        m.note_qos(Some(QosClass::Batch));
+        m.note_qos(None);
+        assert_eq!(m.qos_served, [1, 2, 1]);
+    }
+
+    #[test]
+    fn replan_history_is_bounded() {
+        let mut m = Metrics::new();
+        let ev = |i: usize| ReplanEvent {
+            at_s: i as f64,
+            drift: 0.2,
+            changes: 1,
+            swapped: 1,
+            r: 0.75,
+            bits_before: 5.0,
+            bits_after: 5.0,
+            generation: i as u64,
+        };
+        for i in 0..REPLAN_HISTORY + 10 {
+            m.note_replan(ev(i));
+        }
+        let h = m.replan_history();
+        assert_eq!(h.len(), REPLAN_HISTORY, "ring caps retained events");
+        assert_eq!(h[0].generation, 10, "oldest events dropped first");
+        assert_eq!(h.last().unwrap().generation, (REPLAN_HISTORY + 9) as u64);
     }
 }

@@ -21,8 +21,11 @@ pub mod metrics;
 pub mod server;
 
 pub use cluster::{
-    affinity_score, choose_replica, AffinityConfig, Cluster, ClusterConfig, OnlineConfig,
+    affinity_score, choose_replica, measured_speeds, scheme_speed, AffinityConfig, Cluster,
+    ClusterConfig, OnlineConfig, SchemeSpeeds,
 };
 pub use engine::{uniform_engine, ServingEngine};
-pub use metrics::{ClusterReport, Metrics, ReplicaReport, RouterStats, ServerReport};
+pub use metrics::{
+    ClusterReport, Metrics, ReplanEvent, ReplicaReport, RouterStats, ServerReport,
+};
 pub use server::{Request, Response, ServeConfig, Server};

@@ -25,6 +25,7 @@ use crate::alloc::Allocation;
 use crate::moe::ModelConfig;
 use crate::serve::queue::BatchPolicy;
 pub use crate::serve::queue::{Request, Response};
+pub use crate::serve::request::{Admission, AdmissionConfig, ServeRequest, Ticket};
 
 use super::cluster::{Cluster, ClusterConfig};
 pub use super::cluster::OnlineConfig;
@@ -38,6 +39,9 @@ pub struct ServeConfig {
     /// [`crate::runtime::TILE_MS`]).
     pub max_batch_tokens: usize,
     pub max_wait: Duration,
+    /// Priority-aging quantum: a queued request gains one priority level
+    /// per `aging` waited (starvation control for low priority).
+    pub aging: Duration,
 }
 
 impl Default for ServeConfig {
@@ -47,6 +51,7 @@ impl Default for ServeConfig {
             max_batch_seqs: p.max_seqs,
             max_batch_tokens: p.max_tokens,
             max_wait: p.max_wait,
+            aging: p.aging,
         }
     }
 }
@@ -57,6 +62,7 @@ impl ServeConfig {
             max_seqs: self.max_batch_seqs,
             max_tokens: self.max_batch_tokens,
             max_wait: self.max_wait,
+            aging: self.aging,
         }
     }
 }
@@ -110,9 +116,23 @@ impl Server {
         Ok(Server { cluster })
     }
 
-    /// Submit a request; returns the reply receiver.
+    /// Legacy untyped submission; returns the reply receiver. A thin shim
+    /// over [`submit_request`](Self::submit_request) — see
+    /// [`Cluster::submit`].
     pub fn submit(&self, tokens: Vec<u32>) -> Result<mpsc::Receiver<Response>> {
         self.cluster.submit(tokens)
+    }
+
+    /// Typed submission: blocks for queue room up to the admission
+    /// budget, returns a cancellable [`Ticket`].
+    pub fn submit_request(&self, req: ServeRequest) -> Result<Ticket> {
+        self.cluster.submit_request(req)
+    }
+
+    /// Non-blocking typed submission with load-shedding
+    /// ([`Admission::Rejected`] under overload).
+    pub fn try_submit(&self, req: ServeRequest) -> Result<Admission> {
+        self.cluster.try_submit(req)
     }
 
     /// Close the queue and collect the final report (the cluster view

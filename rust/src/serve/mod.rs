@@ -34,10 +34,15 @@ pub mod hotswap;
 pub mod queue;
 pub mod replan;
 pub mod replica;
+pub mod request;
 pub mod telemetry;
 
 pub use hotswap::{SlotChange, SlotTable};
 pub use queue::{BatchPolicy, ContinuousBatcher, Request, Response};
 pub use replan::{diff_plans, ReplanConfig, ReplanOutcome, Replanner};
 pub use replica::{ReplicaOnline, ReplicaSpec, ReplicaStatus, RoutedBatch, WorkQueues};
+pub use request::{
+    Admission, AdmissionConfig, AdmissionReport, AdmissionState, Priority, QosClass,
+    RejectReason, ServeRequest, Ticket,
+};
 pub use telemetry::ActivationTelemetry;

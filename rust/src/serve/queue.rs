@@ -5,27 +5,109 @@
 //! executes, arrivals accumulate here, and the next batch is cut along
 //! three axes — sequence cap, concatenated-token budget (default: the
 //! largest exported tile, so every MoE layer's concatenated dispatch fills
-//! whole tiles instead of padding a fresh one), and the oldest request's
-//! wait deadline. Requests are never dropped: a token-budget cut leaves the
-//! tail queued for the next batch, which is what makes the batcher
-//! "continuous" rather than a one-shot gather.
+//! whole tiles instead of padding a fresh one), and the earliest queued
+//! cut deadline. Requests are never dropped by the cut itself: a
+//! token-budget cut leaves the tail queued for the next batch, which is
+//! what makes the batcher "continuous" rather than a one-shot gather.
+//! (Cancelled requests *are* dropped — [`ContinuousBatcher::shed_cancelled`]
+//! runs before every cut so dead work never reaches a replica.)
+//!
+//! Since the QoS redesign (DESIGN.md §Serving-API) the cut is not FIFO:
+//!
+//! * Requests whose *per-request* deadline has passed go first, earliest
+//!   deadline first — a deadline-expired request is never reordered
+//!   behind a fresh arrival, whatever its priority. (The `max_wait`
+//!   straggler window only decides *when* to cut; under backlog every
+//!   request blows it, so it must not demote the cut order to FIFO.)
+//! * The rest order by aged priority: base [`Priority`] plus one level
+//!   per [`BatchPolicy::aging`] waited, so `High` cuts ahead of `Normal`
+//!   but a waiting `Low` climbs one level per quantum and cannot starve.
+//!   Arrival order breaks ties, so an all-`Normal` stream degrades to the
+//!   legacy FIFO exactly.
+//! * Each request's cut deadline is `arrived + max_wait`, clamped by its
+//!   per-request deadline when one was set — deadline-carrying requests
+//!   are cut early enough to have a chance, instead of waiting out the
+//!   global straggler window.
 //!
 //! The policy decisions are pure functions of (queue, now) so they unit-
-//! test without threads; the server loop in [`crate::coordinator::server`]
+//! test without threads; the router loop in [`crate::coordinator::cluster`]
 //! owns the channel mechanics.
 
 use std::collections::VecDeque;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::runtime::dispatch::{self, FillEstimate};
 use crate::runtime::TILE_MS;
 
+use super::request::{Priority, QosClass};
+
 /// A scoring request: token sequence in, next-token prediction + NLL out.
+/// Built by the cluster front door from a [`super::request::ServeRequest`];
+/// tests construct it directly (the fields are plain data).
 pub struct Request {
+    /// Admission-assigned id (0 for direct construction in tests).
+    pub id: u64,
     pub tokens: Vec<u32>,
     pub reply: mpsc::Sender<Response>,
     pub arrived: Instant,
+    pub priority: Priority,
+    /// Absolute response deadline, when the client set one.
+    pub deadline: Option<Instant>,
+    pub qos: Option<QosClass>,
+    /// Set by [`super::request::Ticket::cancel`]; checked at every cut,
+    /// pop and reply.
+    pub cancelled: Arc<AtomicBool>,
+}
+
+impl Request {
+    /// A plain `Normal`-priority request with no deadline or QoS class —
+    /// what the legacy `submit` shim produces.
+    pub fn new(tokens: Vec<u32>, reply: mpsc::Sender<Response>) -> Request {
+        Request {
+            id: 0,
+            tokens,
+            reply,
+            arrived: Instant::now(),
+            priority: Priority::Normal,
+            deadline: None,
+            qos: None,
+            cancelled: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
+    }
+
+    /// When this request must be cut by: the straggler window from
+    /// arrival, clamped by the per-request deadline when one is set.
+    pub fn cut_deadline(&self, max_wait: Duration) -> Instant {
+        let d = self.arrived + max_wait;
+        match self.deadline {
+            Some(dl) => d.min(dl),
+            None => d,
+        }
+    }
+
+    /// True when the *client's* deadline has passed. Only real
+    /// per-request deadlines count here — the `max_wait` straggler window
+    /// decides when to cut ([`ContinuousBatcher::time_to_cut`]), never the
+    /// cut *order*: under backlog every queued request blows `max_wait`,
+    /// and letting that demote the order would collapse priority
+    /// scheduling back to FIFO exactly when it matters.
+    pub fn deadline_expired(&self, now: Instant) -> bool {
+        self.deadline.map_or(false, |d| d <= now)
+    }
+
+    /// Priority with aging: the base level plus one level per `aging`
+    /// waited. Monotone in wait time, so a queued `Low` eventually
+    /// outranks fresh `High` arrivals instead of starving behind them.
+    pub fn effective_priority(&self, now: Instant, aging: Duration) -> f64 {
+        let waited = now.saturating_duration_since(self.arrived).as_secs_f64();
+        self.priority.index() as f64 + waited / aging.as_secs_f64().max(1e-9)
+    }
 }
 
 /// Response: argmax continuation of the last position + mean next-token
@@ -49,8 +131,12 @@ pub struct BatchPolicy {
     pub max_seqs: usize,
     /// Concatenated-token budget per batch (tile-set sizing).
     pub max_tokens: usize,
-    /// Max time the oldest queued request may wait before the batch is cut.
+    /// Max time a queued request may wait before the batch is cut.
     pub max_wait: Duration,
+    /// Priority-aging quantum: a waiting request gains one priority level
+    /// per `aging` elapsed (starvation control for `Low` under sustained
+    /// `High` load).
+    pub aging: Duration,
 }
 
 impl Default for BatchPolicy {
@@ -59,34 +145,56 @@ impl Default for BatchPolicy {
             max_seqs: 8,
             max_tokens: *TILE_MS.last().unwrap(),
             max_wait: Duration::from_millis(20),
+            aging: Duration::from_millis(250),
         }
     }
 }
 
-/// FIFO admission queue with tile-aware batch cutting.
+/// Priority- and deadline-aware admission queue with tile-aware batch
+/// cutting.
 pub struct ContinuousBatcher {
     policy: BatchPolicy,
+    /// Arrival order (the cut reorders; the backlog itself stays FIFO so
+    /// tie-breaks are stable).
     pending: VecDeque<Request>,
     /// Running token total of `pending` (keeps `ready()` O(1) under deep
     /// backlogs).
     pending_tokens: usize,
+    /// Cached earliest cut deadline over `pending` (a request's cut
+    /// deadline is fixed at admission, so the min only shrinks on push —
+    /// O(1) per arrival — and is recomputed once per removal).
+    min_deadline: Option<Instant>,
 }
 
 impl ContinuousBatcher {
     pub fn new(policy: BatchPolicy) -> ContinuousBatcher {
         assert!(policy.max_seqs >= 1);
         assert!(policy.max_tokens >= 1);
-        ContinuousBatcher { policy, pending: VecDeque::new(), pending_tokens: 0 }
+        ContinuousBatcher {
+            policy,
+            pending: VecDeque::new(),
+            pending_tokens: 0,
+            min_deadline: None,
+        }
     }
 
     pub fn policy(&self) -> &BatchPolicy {
         &self.policy
     }
 
-    /// Admit a request (never blocks, never drops).
+    /// Admit a request (never blocks — bounding happens at the cluster
+    /// front door, before the request reaches the batcher).
     pub fn push(&mut self, r: Request) {
         self.pending_tokens += r.tokens.len();
+        let d = r.cut_deadline(self.policy.max_wait);
+        self.min_deadline = Some(self.min_deadline.map_or(d, |m| m.min(d)));
         self.pending.push_back(r);
+    }
+
+    /// Re-derive the cached min cut deadline after removals.
+    fn recompute_min_deadline(&mut self) {
+        self.min_deadline =
+            self.pending.iter().map(|r| r.cut_deadline(self.policy.max_wait)).min();
     }
 
     /// Queued sequence count.
@@ -99,6 +207,28 @@ impl ContinuousBatcher {
         self.pending_tokens
     }
 
+    /// Drop every cancelled request from the queue; returns `(sequences,
+    /// tokens)` shed. Runs before each cut so cancelled work is never
+    /// routed.
+    pub fn shed_cancelled(&mut self) -> (usize, usize) {
+        let before = self.pending.len();
+        let mut shed_tokens = 0usize;
+        self.pending.retain(|r| {
+            if r.is_cancelled() {
+                shed_tokens += r.tokens.len();
+                false
+            } else {
+                true
+            }
+        });
+        self.pending_tokens -= shed_tokens;
+        let shed = before - self.pending.len();
+        if shed > 0 {
+            self.recompute_min_deadline();
+        }
+        (shed, shed_tokens)
+    }
+
     /// Tile fill the dispatch planner projects for the current queue if it
     /// were cut as one batch: every MoE layer dispatches the batch's
     /// concatenated tokens, so the planner's decomposition of the queued
@@ -109,36 +239,40 @@ impl ContinuousBatcher {
         dispatch::fill_estimate(self.pending_tokens)
     }
 
-    /// When the oldest queued request's wait deadline expires.
-    pub fn oldest_deadline(&self) -> Option<Instant> {
-        self.pending.front().map(|r| r.arrived + self.policy.max_wait)
+    /// Earliest cut deadline over the whole queue — *not* the front's:
+    /// with per-request deadlines a tight-deadline request can sit behind
+    /// earlier arrivals, and its deadline still bounds the next cut.
+    /// O(1): served from the cached minimum.
+    pub fn next_cut_deadline(&self) -> Option<Instant> {
+        self.min_deadline
     }
 
     /// Should a batch be cut now? True when the sequence cap is reached,
-    /// the token budget is filled, or the oldest request has waited out
-    /// `max_wait`. An empty queue is never ready.
+    /// the token budget is filled, or any queued request has reached its
+    /// cut deadline. An empty queue is never ready.
     pub fn ready(&self, now: Instant) -> bool {
         if self.pending.is_empty() {
             return false;
         }
         self.pending.len() >= self.policy.max_seqs
             || self.queued_tokens() >= self.policy.max_tokens
-            || self.oldest_deadline().map_or(false, |d| now >= d)
+            || self.next_cut_deadline().map_or(false, |d| now >= d)
     }
 
     /// How long the serve loop may wait for stragglers before the next cut
-    /// MUST happen: `None` means cut immediately (a cap is hit or the
-    /// oldest queued request is already past its deadline — including a
+    /// MUST happen: `None` means cut immediately (a cap is hit or some
+    /// queued request is already past its cut deadline — including a
     /// tail left behind by a token-budget cut), `Some(d)` means a cut is
     /// due in at most `d` even if nothing else arrives. This is the single
     /// wait-policy entry point for the router loop: because the returned
-    /// duration is bounded by the oldest deadline, a past-deadline tail can
-    /// never sit waiting for the next arrival.
+    /// duration is bounded by the earliest deadline anywhere in the queue,
+    /// a past-deadline request can never sit waiting for the next arrival
+    /// — wherever it sits in arrival order.
     ///
     /// Panics on an empty queue — with nothing queued there is no deadline
     /// to honor and the caller should block on admission instead.
     pub fn time_to_cut(&self, now: Instant) -> Option<Duration> {
-        let deadline = self.oldest_deadline().expect("time_to_cut on an empty queue");
+        let deadline = self.next_cut_deadline().expect("time_to_cut on an empty queue");
         if self.ready(now) {
             return None;
         }
@@ -150,25 +284,62 @@ impl ContinuousBatcher {
         }
     }
 
-    /// Cut a batch: FIFO prefix of the queue, stopping before the sequence
-    /// cap or token budget is exceeded. Always takes at least one request
-    /// (an oversized single sequence still has to run — the engine tiles
-    /// it), and leaves the rest queued for the next cut.
-    pub fn take_batch(&mut self) -> Vec<Request> {
-        let mut batch = Vec::new();
+    /// Cut a batch, stopping before the sequence cap or token budget is
+    /// exceeded. Selection order: requests whose *per-request* deadline
+    /// has passed first (earliest deadline first — a deadline-expired
+    /// request is never reordered behind a fresh arrival), then
+    /// descending aged priority with arrival order breaking ties. The
+    /// `max_wait` straggler window deliberately does not join the
+    /// expired-first rule: under backlog every queued request blows
+    /// `max_wait`, and counting that as "expired" would collapse the cut
+    /// back to FIFO exactly when priority matters. Always takes at least
+    /// one request (an oversized single sequence still has to run — the
+    /// engine tiles it), and leaves the rest queued for the next cut.
+    pub fn take_batch(&mut self, now: Instant) -> Vec<Request> {
+        if self.pending.is_empty() {
+            return Vec::new();
+        }
+        let aging = self.policy.aging;
+        let mut order: Vec<usize> = (0..self.pending.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (ra, rb) = (&self.pending[a], &self.pending[b]);
+            match (ra.deadline_expired(now), rb.deadline_expired(now)) {
+                (true, false) => std::cmp::Ordering::Less,
+                (false, true) => std::cmp::Ordering::Greater,
+                (true, true) => ra.deadline.cmp(&rb.deadline).then(a.cmp(&b)),
+                (false, false) => rb
+                    .effective_priority(now, aging)
+                    .partial_cmp(&ra.effective_priority(now, aging))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b)),
+            }
+        });
+        let mut take = vec![false; self.pending.len()];
         let mut tokens = 0usize;
-        while let Some(front) = self.pending.front() {
-            let t = front.tokens.len();
-            if !batch.is_empty() && tokens + t > self.policy.max_tokens {
+        let mut n = 0usize;
+        for &i in &order {
+            let t = self.pending[i].tokens.len();
+            if n > 0 && tokens + t > self.policy.max_tokens {
                 break;
             }
+            take[i] = true;
             tokens += t;
-            self.pending_tokens -= t;
-            batch.push(self.pending.pop_front().unwrap());
-            if batch.len() >= self.policy.max_seqs {
+            n += 1;
+            if n >= self.policy.max_seqs {
                 break;
             }
         }
+        // extract in selection order; the remainder keeps arrival order
+        let mut slots: Vec<Option<Request>> = self.pending.drain(..).map(Some).collect();
+        let mut batch = Vec::with_capacity(n);
+        for &i in &order {
+            if take[i] {
+                batch.push(slots[i].take().unwrap());
+            }
+        }
+        self.pending = slots.into_iter().flatten().collect();
+        self.pending_tokens -= tokens;
+        self.recompute_min_deadline();
         batch
     }
 }
@@ -180,7 +351,11 @@ mod tests {
     fn req(n_tokens: usize, arrived: Instant) -> Request {
         // tests never send a reply, so the receiver can drop immediately
         let (reply, _) = mpsc::channel();
-        Request { tokens: vec![0u32; n_tokens], reply, arrived }
+        Request { arrived, ..Request::new(vec![0u32; n_tokens], reply) }
+    }
+
+    fn prio_req(n_tokens: usize, arrived: Instant, priority: Priority) -> Request {
+        Request { priority, ..req(n_tokens, arrived) }
     }
 
     fn policy(max_seqs: usize, max_tokens: usize, wait_ms: u64) -> BatchPolicy {
@@ -188,7 +363,12 @@ mod tests {
             max_seqs,
             max_tokens,
             max_wait: Duration::from_millis(wait_ms),
+            aging: Duration::from_millis(250),
         }
+    }
+
+    fn lens(batch: &[Request]) -> Vec<usize> {
+        batch.iter().map(|r| r.tokens.len()).collect()
     }
 
     #[test]
@@ -197,7 +377,7 @@ mod tests {
         assert!(!b.ready(Instant::now()));
         assert_eq!(b.depth(), 0);
         assert_eq!(b.queued_tokens(), 0);
-        assert!(b.oldest_deadline().is_none());
+        assert!(b.next_cut_deadline().is_none());
     }
 
     #[test]
@@ -210,13 +390,13 @@ mod tests {
         assert!(!b.ready(now));
         b.push(req(10, now));
         assert!(b.ready(now));
-        let batch = b.take_batch();
+        let batch = b.take_batch(now);
         assert_eq!(batch.len(), 3);
         assert_eq!(b.depth(), 0);
     }
 
     #[test]
-    fn token_budget_splits_fifo_without_dropping() {
+    fn token_budget_splits_without_dropping() {
         let now = Instant::now();
         let mut b = ContinuousBatcher::new(policy(100, 64, 1000));
         for n in [24usize, 24, 24, 24] {
@@ -224,12 +404,12 @@ mod tests {
         }
         assert!(b.ready(now), "96 tokens ≥ 64 budget");
         assert_eq!(b.queued_tokens(), 96);
-        let first = b.take_batch();
+        let first = b.take_batch(now);
         // 24 + 24 = 48 fits; adding a third (72) would exceed 64
         assert_eq!(first.len(), 2);
         assert_eq!(b.depth(), 2, "tail stays queued, not dropped");
         assert_eq!(b.queued_tokens(), 48, "running token counter tracks the tail");
-        let second = b.take_batch();
+        let second = b.take_batch(now);
         assert_eq!(second.len(), 2);
         assert_eq!(b.depth(), 0);
         assert_eq!(b.queued_tokens(), 0);
@@ -241,7 +421,7 @@ mod tests {
         let mut b = ContinuousBatcher::new(policy(8, 64, 1000));
         b.push(req(500, now));
         assert!(b.ready(now), "token budget exceeded by a single sequence");
-        let batch = b.take_batch();
+        let batch = b.take_batch(now);
         assert_eq!(batch.len(), 1, "must take at least one");
         assert_eq!(batch[0].tokens.len(), 500);
     }
@@ -254,7 +434,7 @@ mod tests {
         assert!(!b.ready(now), "fresh request, under caps");
         let later = now + Duration::from_millis(25);
         assert!(b.ready(later), "oldest waited past max_wait");
-        assert_eq!(b.take_batch().len(), 1);
+        assert_eq!(b.take_batch(later).len(), 1);
     }
 
     #[test]
@@ -272,7 +452,7 @@ mod tests {
         assert_eq!(est.useful_rows, 71);
         assert_eq!(est.padded_rows, 72);
         assert!(est.fill_ratio() < 1.0);
-        b.take_batch();
+        b.take_batch(now);
         assert_eq!(b.fill_estimate().useful_rows, 0);
     }
 
@@ -291,7 +471,7 @@ mod tests {
         let now = t0 + Duration::from_millis(25);
         assert!(b.ready(now));
         assert_eq!(b.time_to_cut(now), None, "deadline passed — cut now");
-        let first = b.take_batch();
+        let first = b.take_batch(now);
         assert_eq!(first.len(), 1, "60 + 10 > 64: budget splits the queue");
         assert_eq!(b.depth(), 1, "tail stays queued");
         // the tail is already past its deadline: no straggler wait allowed
@@ -301,7 +481,7 @@ mod tests {
             None,
             "past-deadline tail must re-cut without waiting for an arrival"
         );
-        assert_eq!(b.take_batch().len(), 1);
+        assert_eq!(b.take_batch(now).len(), 1);
     }
 
     #[test]
@@ -323,15 +503,113 @@ mod tests {
     }
 
     #[test]
-    fn fifo_order_preserved() {
+    fn fifo_order_preserved_for_uniform_priority() {
         let now = Instant::now();
         let mut b = ContinuousBatcher::new(policy(2, 1_000_000, 1000));
         for n in [1usize, 2, 3, 4] {
             b.push(req(n, now));
         }
-        let first = b.take_batch();
-        let second = b.take_batch();
-        assert_eq!(first.iter().map(|r| r.tokens.len()).collect::<Vec<_>>(), vec![1, 2]);
-        assert_eq!(second.iter().map(|r| r.tokens.len()).collect::<Vec<_>>(), vec![3, 4]);
+        let first = b.take_batch(now);
+        let second = b.take_batch(now);
+        assert_eq!(lens(&first), vec![1, 2]);
+        assert_eq!(lens(&second), vec![3, 4]);
+    }
+
+    #[test]
+    fn high_priority_cuts_ahead_of_earlier_normal() {
+        let now = Instant::now();
+        let mut b = ContinuousBatcher::new(policy(2, 1_000_000, 1000));
+        b.push(prio_req(1, now, Priority::Normal));
+        b.push(prio_req(2, now, Priority::Low));
+        b.push(prio_req(3, now, Priority::High));
+        b.push(prio_req(4, now, Priority::High));
+        let first = b.take_batch(now);
+        assert_eq!(lens(&first), vec![3, 4], "both High requests cut first, in arrival order");
+        let second = b.take_batch(now);
+        assert_eq!(lens(&second), vec![1, 2], "then Normal before Low");
+    }
+
+    #[test]
+    fn aging_lifts_a_waiting_low_past_fresh_high() {
+        let t0 = Instant::now();
+        let mut b = ContinuousBatcher::new(BatchPolicy {
+            aging: Duration::from_millis(100),
+            ..policy(1, 1_000_000, 10_000)
+        });
+        // Low arrived long ago: 3 aging quanta ⇒ effective ≈ 0 + 3 = 3,
+        // beating a fresh High's 2.
+        b.push(prio_req(1, t0, Priority::Low));
+        let now = t0 + Duration::from_millis(300);
+        b.push(prio_req(2, now, Priority::High));
+        assert_eq!(lens(&b.take_batch(now)), vec![1], "aged Low outranks fresh High");
+        assert_eq!(lens(&b.take_batch(now)), vec![2]);
+        // without the wait, High wins
+        let mut b = ContinuousBatcher::new(policy(1, 1_000_000, 10_000));
+        b.push(prio_req(1, now, Priority::Low));
+        b.push(prio_req(2, now, Priority::High));
+        assert_eq!(lens(&b.take_batch(now)), vec![2]);
+    }
+
+    #[test]
+    fn expired_request_behind_fresh_one_cuts_first() {
+        // Regression (ISSUE 4 bugfix): a deadline-expired request sitting
+        // *behind* a fresh arrival in the queue must never be reordered
+        // behind it at the cut — and its deadline, not the front's, bounds
+        // time_to_cut.
+        let now = Instant::now();
+        let mut b = ContinuousBatcher::new(policy(1, 1_000_000, 1000));
+        // front: fresh Normal, no deadline, 1000ms straggler window left
+        b.push(req(1, now));
+        // behind it: a request whose per-request deadline already passed
+        let expired = Request {
+            deadline: Some(now - Duration::from_millis(5)),
+            ..prio_req(2, now - Duration::from_millis(30), Priority::Low)
+        };
+        b.push(expired);
+        assert!(b.ready(now), "expired request makes the queue ready");
+        assert_eq!(b.time_to_cut(now), None, "mid-queue expiry forces an immediate cut");
+        assert_eq!(lens(&b.take_batch(now)), vec![2], "expired request cuts first");
+        assert_eq!(lens(&b.take_batch(now)), vec![1]);
+    }
+
+    #[test]
+    fn per_request_deadline_clamps_the_cut_window() {
+        let now = Instant::now();
+        let mut b = ContinuousBatcher::new(policy(8, 1_000_000, 1000));
+        b.push(Request {
+            deadline: Some(now + Duration::from_millis(50)),
+            ..req(4, now)
+        });
+        let wait = b.time_to_cut(now).expect("not yet due");
+        assert!(
+            wait <= Duration::from_millis(50),
+            "deadline clamps the 1000ms straggler window: {wait:?}"
+        );
+        // two expired requests cut earliest-deadline-first
+        let mut b = ContinuousBatcher::new(policy(2, 1_000_000, 1000));
+        b.push(Request { deadline: Some(now - Duration::from_millis(1)), ..req(1, now) });
+        b.push(Request { deadline: Some(now - Duration::from_millis(9)), ..req(2, now) });
+        assert_eq!(lens(&b.take_batch(now)), vec![2, 1], "earliest expiry first");
+    }
+
+    #[test]
+    fn shed_cancelled_drops_only_cancelled() {
+        let now = Instant::now();
+        let mut b = ContinuousBatcher::new(policy(8, 1_000_000, 1000));
+        let keep = req(3, now);
+        let dead1 = req(5, now);
+        let dead2 = req(7, now);
+        dead1.cancelled.store(true, Ordering::Release);
+        dead2.cancelled.store(true, Ordering::Release);
+        b.push(dead1);
+        b.push(keep);
+        b.push(dead2);
+        assert_eq!(b.queued_tokens(), 15);
+        let (seqs, tokens) = b.shed_cancelled();
+        assert_eq!((seqs, tokens), (2, 12));
+        assert_eq!(b.depth(), 1);
+        assert_eq!(b.queued_tokens(), 3);
+        assert_eq!(lens(&b.take_batch(now)), vec![3]);
+        assert_eq!(b.shed_cancelled(), (0, 0), "idempotent on a clean queue");
     }
 }

@@ -62,13 +62,31 @@ impl Replanner {
         freqs: &[Vec<f64>],
         current: &Allocation,
     ) -> Result<Allocation> {
+        self.replan_with_r(model, freqs, current, None)
+    }
+
+    /// Like [`replan`](Self::replan), with the accuracy/perf exponent `r`
+    /// overridden — the QoS path: the engine blends the served
+    /// [`crate::serve::QosClass`] mix into an effective `r` and re-solves
+    /// with it instead of the static config value.
+    pub fn replan_with_r(
+        &self,
+        model: &ModelConfig,
+        freqs: &[Vec<f64>],
+        current: &Allocation,
+        r: Option<f64>,
+    ) -> Result<Allocation> {
+        let mut alloc = self.cfg.alloc.clone();
+        if let Some(r) = r {
+            alloc.r = r;
+        }
         allocate_with_frequencies(
             model,
             &self.gpu,
             &self.registry,
             &self.sens,
             freqs,
-            &self.cfg.alloc,
+            &alloc,
             Some(current),
         )
     }
@@ -200,6 +218,23 @@ mod tests {
         let plan1 = rp.replan(&cfg, &freqs, &base).unwrap();
         let plan2 = rp.replan(&cfg, &freqs, &plan1).unwrap();
         assert!(diff_plans(&plan1, &plan2).is_empty(), "replan oscillated");
+    }
+
+    #[test]
+    fn replan_with_r_override_is_well_formed_and_leaves_config_untouched() {
+        let cfg = tiny_cfg();
+        let rp = replanner(&cfg);
+        let current = Allocation::uniform(&cfg, QuantScheme::W8A8);
+        let freqs = vec![vec![0.7, 0.1, 0.1, 0.1], vec![0.25; 4]];
+        // a QoS-blended exponent overrides the solve without mutating the
+        // replanner's own config
+        let plan = rp.replan_with_r(&cfg, &freqs, &current, Some(0.9)).unwrap();
+        assert_eq!(plan.schemes.len(), 2);
+        assert!((rp.cfg.alloc.r - 0.5).abs() < 1e-12, "config r untouched");
+        // None falls back to the configured exponent (same as replan)
+        let a = rp.replan_with_r(&cfg, &freqs, &current, None).unwrap();
+        let b = rp.replan(&cfg, &freqs, &current).unwrap();
+        assert!(diff_plans(&a, &b).is_empty());
     }
 
     #[test]

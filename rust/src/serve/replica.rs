@@ -35,6 +35,7 @@ use crate::runtime::RuntimeScheme;
 use crate::ser::MxtFile;
 use crate::serve::queue::{Request, Response};
 use crate::serve::replan::Replanner;
+use crate::serve::request::AdmissionState;
 
 /// One batch as cut by the router: the unit of work routed to (and stolen
 /// between) replicas.
@@ -45,6 +46,16 @@ pub struct RoutedBatch {
 impl RoutedBatch {
     pub fn tokens(&self) -> usize {
         self.requests.iter().map(|r| r.tokens.len()).sum()
+    }
+
+    /// Drop cancelled requests before execution; returns how many were
+    /// shed. Cancellation propagates here through [`WorkQueues`]: a batch
+    /// that was routed (or stolen) after its requests were cancelled sheds
+    /// the dead entries at the pop instead of executing them.
+    pub fn shed_cancelled(&mut self) -> usize {
+        let before = self.requests.len();
+        self.requests.retain(|r| !r.is_cancelled());
+        before - self.requests.len()
     }
 }
 
@@ -209,6 +220,14 @@ pub struct ReplicaStatus {
     pub batches_done: usize,
     pub swaps: usize,
     pub replans: usize,
+    /// Requests served per [`crate::serve::QosClass`] (requests without a
+    /// class count as `Standard`) — the cluster-level view of what QoS mix
+    /// each replica's plan is serving.
+    pub qos_served: [usize; 3],
+    /// Measured grouped-dispatch wave work per runtime family:
+    /// `(scheme, useful_rows, busy_s)` — the router's input for measured
+    /// affinity speeds ([`crate::coordinator::cluster::measured_speeds`]).
+    pub scheme_rows: Vec<(RuntimeScheme, usize, f64)>,
 }
 
 impl ReplicaStatus {
@@ -229,6 +248,8 @@ impl ReplicaStatus {
             batches_done: 0,
             swaps: 0,
             replans: 0,
+            qos_served: [0; 3],
+            scheme_rows: Vec::new(),
         }
     }
 }
@@ -260,11 +281,15 @@ pub struct ReplicaSpec {
 }
 
 /// Replica thread body: build the engine (own PJRT client, own plan), then
-/// pop → execute → reply → maybe-replan → publish until the queues close.
+/// pop → shed cancelled → execute → reply → maybe-replan → publish until
+/// the queues close. `admission` carries cancellation accounting back to
+/// the front door and feeds the service-rate estimate its load-shedding
+/// projections run on.
 pub fn replica_main(
     spec: ReplicaSpec,
     queues: Arc<WorkQueues>,
     status: Arc<Vec<Mutex<ReplicaStatus>>>,
+    admission: Arc<AdmissionState>,
 ) -> ReplicaReport {
     // a boot failure marks this replica dead first, so the router's
     // capacity wait skips it (and gives up entirely if nothing survives)
@@ -290,12 +315,35 @@ pub fn replica_main(
     let mut published_gen = publish(&spec, &engine, &status, 0, None);
     let mut batches_done = 0usize;
     let mut stolen = 0usize;
-    while let Some((batch, was_stolen)) = queues.pop(spec.id) {
+    while let Some((mut batch, was_stolen)) = queues.pop(spec.id) {
         if was_stolen {
             stolen += 1;
         }
+        // cancellation propagated through the deques: dead entries are
+        // shed here instead of executing, whether the batch was routed to
+        // this replica or stolen from a peer
+        let shed = batch.shed_cancelled();
+        if shed > 0 {
+            admission.note_cancelled(shed);
+            engine.metrics_mut().shed_cancelled += shed;
+        }
+        if batch.requests.is_empty() {
+            queues.done(spec.id);
+            continue;
+        }
         engine.metrics_mut().note_queue_depth(queues.depth(spec.id));
-        process_batch(&mut engine, batch);
+        let batch_tokens = batch.tokens();
+        let exec_started = Instant::now();
+        let (suppressed, failed) = process_batch(&mut engine, batch);
+        admission.note_service(batch_tokens, exec_started.elapsed());
+        if suppressed > 0 {
+            // cancelled after the cut raced execution: the work ran, but
+            // no response was produced — still counts as cancelled
+            admission.note_cancelled(suppressed);
+        }
+        // a failed forward produced no replies: account for the whole
+        // batch so admitted == responses + cancelled + failed stays exact
+        admission.note_failed(failed);
         queues.done(spec.id);
         batches_done += 1;
         // the online loop runs strictly between batches: in-flight work
@@ -343,7 +391,25 @@ fn publish(
     s.batches_done = batches_done;
     s.swaps = engine.metrics().swaps;
     s.replans = engine.metrics().replans;
+    s.qos_served = engine.metrics().qos_served;
+    s.scheme_rows = measured_scheme_rows(engine);
     generation
+}
+
+/// `(scheme, useful_rows, busy_s)` per runtime family from the engine's
+/// grouped-dispatch wave counters — the raw material for measured affinity
+/// speeds. Families that have executed no waves are omitted.
+fn measured_scheme_rows(engine: &ServingEngine) -> Vec<(RuntimeScheme, usize, f64)> {
+    let stats = engine.metrics().scheme_wave_stats();
+    RuntimeScheme::ALL
+        .iter()
+        .filter_map(|&s| {
+            stats
+                .get(s.name())
+                .filter(|w| w.useful_rows > 0 && w.busy_s > 0.0)
+                .map(|w| (s, w.useful_rows, w.busy_s))
+        })
+        .collect()
 }
 
 /// Execute one batch and reply per request: argmax continuation + mean
@@ -351,14 +417,26 @@ fn publish(
 /// is measured admission → execution start, matching the legacy
 /// single-engine loop (which cut immediately before executing) — deque
 /// time counts as queueing, not as serving.
-pub fn process_batch(engine: &mut ServingEngine, batch: RoutedBatch) {
+///
+/// Returns `(suppressed, failed)` — the requests that got no reply:
+/// `suppressed` are late cancels (the request executed — its rows were
+/// already in the concatenated forward — but the response is withheld so
+/// a cancelled ticket never yields one); `failed` is the whole batch when
+/// the forward pass errors. Both feed the admission accounting, so
+/// `admitted == responses + cancelled + failed` stays exact.
+pub fn process_batch(engine: &mut ServingEngine, batch: RoutedBatch) -> (usize, usize) {
     let RoutedBatch { requests } = batch;
     let exec_at = Instant::now();
     let generation = engine.generation();
+    let mut suppressed = 0usize;
     let seqs: Vec<&[u32]> = requests.iter().map(|r| r.tokens.as_slice()).collect();
     match engine.forward_batch(&seqs) {
         Ok(logits_batch) => {
             for (req, logits) in requests.iter().zip(logits_batch) {
+                if req.is_cancelled() {
+                    suppressed += 1;
+                    continue;
+                }
                 let t = req.tokens.len();
                 // argmax of the final position
                 let last = logits.row(t - 1);
@@ -380,7 +458,8 @@ pub fn process_batch(engine: &mut ServingEngine, batch: RoutedBatch) {
                 let queue_wait = exec_at.saturating_duration_since(req.arrived);
                 let metrics = engine.metrics_mut();
                 metrics.record_request(latency.as_secs_f64(), req.tokens.len());
-                metrics.record_queue_wait(queue_wait.as_secs_f64());
+                metrics.record_queue_wait(queue_wait.as_secs_f64(), req.priority);
+                metrics.note_qos(req.qos);
                 let _ = req.reply.send(Response {
                     next_token: best as u32,
                     mean_nll: nll / (t - 1).max(1) as f64,
@@ -391,9 +470,11 @@ pub fn process_batch(engine: &mut ServingEngine, batch: RoutedBatch) {
             }
         }
         Err(e) => {
-            eprintln!("batch failed: {e:#}");
+            eprintln!("batch failed ({} request(s) dropped): {e:#}", requests.len());
+            return (0, requests.len());
         }
     }
+    (suppressed, 0)
 }
 
 /// Final per-replica statistics, assembled from the engine at thread exit.
@@ -421,6 +502,11 @@ fn collect_report(
         swaps: m.swaps,
         replans: m.replans,
         last_drift: m.last_drift,
+        drift_vector: m.drift_vector.clone(),
+        replan_history: m.replan_history().to_vec(),
+        shed_cancelled: m.shed_cancelled,
+        qos_served: m.qos_served,
+        queue_waits_by_priority: m.queue_waits_by_priority().clone(),
         generation: engine.generation(),
         scheme_counts: engine.scheme_counts(),
         latencies: m.latencies().to_vec(),
@@ -439,13 +525,21 @@ mod tests {
 
     fn batch(n_tokens: usize) -> RoutedBatch {
         let (reply, _) = mpsc::channel();
-        RoutedBatch {
-            requests: vec![Request {
-                tokens: vec![0u32; n_tokens],
-                reply,
-                arrived: Instant::now(),
-            }],
-        }
+        RoutedBatch { requests: vec![Request::new(vec![0u32; n_tokens], reply)] }
+    }
+
+    #[test]
+    fn routed_batch_sheds_only_cancelled_requests() {
+        use std::sync::atomic::Ordering;
+        let (reply, _) = mpsc::channel();
+        let keep = Request::new(vec![0u32; 3], reply.clone());
+        let dead = Request::new(vec![0u32; 5], reply);
+        dead.cancelled.store(true, Ordering::Release);
+        let mut b = RoutedBatch { requests: vec![dead, keep] };
+        assert_eq!(b.tokens(), 8);
+        assert_eq!(b.shed_cancelled(), 1);
+        assert_eq!(b.tokens(), 3, "live request survives the shed");
+        assert_eq!(b.shed_cancelled(), 0, "idempotent");
     }
 
     #[test]

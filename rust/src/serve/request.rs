@@ -1,0 +1,752 @@
+//! Typed serving requests, cancellable tickets, and bounded admission
+//! (DESIGN.md §Serving-API).
+//!
+//! The cluster front door used to be `submit(Vec<u32>) → Receiver`:
+//! untyped, unbounded, uncancellable. This module is the request model the
+//! QoS-aware redesign replaced it with:
+//!
+//! * [`ServeRequest`] — a builder carrying the token sequence plus the
+//!   knobs the downstream machinery can actually steer on: [`Priority`]
+//!   (orders batch cutting, with aging so low priority never starves),
+//!   a per-request deadline/TTL (feeds the batcher's deadline-aware cut
+//!   and the admission controller's projected-miss shedding), and an
+//!   optional [`QosClass`] hinting the accuracy/perf exponent `r` the
+//!   online replanner solves with.
+//! * [`Ticket`] — the handle submission returns: non-blocking
+//!   [`poll`](Ticket::poll), blocking [`wait`](Ticket::wait), and
+//!   [`cancel`](Ticket::cancel). Cancelled work is shed at the next batch
+//!   cut (router) or queue pop (replica) instead of executing, and a
+//!   cancelled ticket never yields a [`Response`] even if the reply racing
+//!   the cancel was already in flight.
+//! * [`AdmissionState`] — the bounded admission layer. `try_submit`
+//!   returns [`Admission::Rejected`] with a reason and a `retry_after`
+//!   estimate under load shedding (queue-depth bound, projected
+//!   deadline-miss); blocking `submit` waits for room up to a budget.
+//!
+//! Everything here is plain data + sync primitives: no engine, no PJRT —
+//! unit-testable without artifacts.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::queue::Response;
+
+/// Request priority: orders batch cutting in the continuous batcher.
+/// Higher priorities cut first; aging (see
+/// [`BatchPolicy::aging`](super::queue::BatchPolicy)) lifts waiting
+/// requests one level per quantum so low priority is delayed, never
+/// starved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Low = 0,
+    Normal = 1,
+    High = 2,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] = [Priority::Low, Priority::Normal, Priority::High];
+
+    /// Dense index for per-priority accounting arrays.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
+
+/// Quality-of-service class: a hint for the accuracy/perf exponent `r`
+/// the online replanner re-solves with (the QoS-tuning direction — Imani
+/// et al.). Interactive traffic leans the plan toward throughput (lower
+/// `r`), batch/offline traffic toward accuracy (higher `r`); `Standard`
+/// keeps the configured exponent. Replicas count served requests per
+/// class and blend the hints traffic-weighted at replan time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QosClass {
+    /// Latency-sensitive: favor throughput (`r` pulled toward 0.5).
+    Interactive = 0,
+    /// No preference: the allocator's configured `r`.
+    Standard = 1,
+    /// Offline/quality-sensitive: favor accuracy (`r` pulled toward 0.95).
+    Batch = 2,
+}
+
+impl QosClass {
+    pub const ALL: [QosClass; 3] = [QosClass::Interactive, QosClass::Standard, QosClass::Batch];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Standard => "standard",
+            QosClass::Batch => "batch",
+        }
+    }
+
+    /// Absolute `r` this class pulls the replanner toward; `None` keeps
+    /// the configured exponent.
+    pub fn r_hint(self) -> Option<f64> {
+        match self {
+            QosClass::Interactive => Some(0.5),
+            QosClass::Standard => None,
+            QosClass::Batch => Some(0.95),
+        }
+    }
+}
+
+/// A typed serving request: tokens plus QoS knobs, built fluently.
+///
+/// ```ignore
+/// let req = ServeRequest::new(tokens)
+///     .priority(Priority::High)
+///     .deadline(Duration::from_millis(250))
+///     .qos(QosClass::Interactive);
+/// let ticket = cluster.submit_request(req)?;
+/// ```
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub tokens: Vec<u32>,
+    pub priority: Priority,
+    /// Response deadline as a TTL from admission. Feeds the batcher's
+    /// deadline-aware cut and the admission controller's projected-miss
+    /// shedding; `None` means no deadline.
+    pub ttl: Option<Duration>,
+    pub qos: Option<QosClass>,
+}
+
+impl ServeRequest {
+    pub fn new(tokens: Vec<u32>) -> ServeRequest {
+        ServeRequest { tokens, priority: Priority::Normal, ttl: None, qos: None }
+    }
+
+    pub fn priority(mut self, p: Priority) -> ServeRequest {
+        self.priority = p;
+        self
+    }
+
+    /// Per-request deadline, as a TTL measured from admission.
+    pub fn deadline(mut self, ttl: Duration) -> ServeRequest {
+        self.ttl = Some(ttl);
+        self
+    }
+
+    pub fn qos(mut self, q: QosClass) -> ServeRequest {
+        self.qos = Some(q);
+        self
+    }
+}
+
+/// Why admission turned a request away.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The admission queue is at its sequence or token bound.
+    QueueFull,
+    /// The projected queue wait already exceeds the request's deadline —
+    /// executing it would only burn capacity on a guaranteed miss.
+    DeadlineUnmeetable,
+}
+
+/// Outcome of a non-blocking submission.
+pub enum Admission {
+    Admitted(Ticket),
+    Rejected {
+        reason: RejectReason,
+        /// Estimate of when retrying is worthwhile (queue-drain
+        /// projection; a floor of 1 ms even when the rate is unknown).
+        retry_after: Duration,
+    },
+}
+
+impl Admission {
+    pub fn ticket(self) -> Option<Ticket> {
+        match self {
+            Admission::Admitted(t) => Some(t),
+            Admission::Rejected { .. } => None,
+        }
+    }
+
+    pub fn is_admitted(&self) -> bool {
+        matches!(self, Admission::Admitted(_))
+    }
+}
+
+/// Handle to an admitted request. Dropping the ticket abandons the reply
+/// (the response, if any, goes to a dead channel); [`cancel`](Self::cancel)
+/// additionally sheds the queued work before it executes.
+pub struct Ticket {
+    pub(crate) rx: mpsc::Receiver<Response>,
+    pub(crate) cancel: Arc<AtomicBool>,
+    pub(crate) id: u64,
+}
+
+impl Ticket {
+    /// Admission-assigned request id (unique per cluster).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Non-blocking poll. `None` while pending — and always `None` after
+    /// [`cancel`](Self::cancel): a cancelled ticket never yields a
+    /// response, even if one raced the cancellation into the channel.
+    pub fn poll(&self) -> Option<Response> {
+        if self.is_cancelled() {
+            return None;
+        }
+        self.rx.try_recv().ok()
+    }
+
+    /// Block until the response arrives. Errors if the ticket was
+    /// cancelled or the serving side dropped the request (shutdown).
+    pub fn wait(&self) -> anyhow::Result<Response> {
+        if self.is_cancelled() {
+            anyhow::bail!("ticket {} cancelled", self.id);
+        }
+        self.rx.recv().map_err(|_| {
+            anyhow::anyhow!("request {} dropped (cancelled or cluster closed)", self.id)
+        })
+    }
+
+    /// Block up to `timeout` for the response.
+    pub fn wait_timeout(&self, timeout: Duration) -> anyhow::Result<Response> {
+        if self.is_cancelled() {
+            anyhow::bail!("ticket {} cancelled", self.id);
+        }
+        self.rx
+            .recv_timeout(timeout)
+            .map_err(|e| anyhow::anyhow!("request {}: {e}", self.id))
+    }
+
+    /// Request cancellation (idempotent). Queued work is dropped at the
+    /// next batch cut or replica pop; work already executing completes but
+    /// its response is suppressed — this ticket will never yield one.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Acquire)
+    }
+
+    /// The raw reply receiver — the legacy `submit` shim's return value.
+    /// Forfeits cancellation and the post-cancel response guard.
+    pub fn into_receiver(self) -> mpsc::Receiver<Response> {
+        self.rx
+    }
+}
+
+/// Bounded-admission policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Max sequences admitted but not yet cut into a routed batch.
+    pub max_queued_seqs: usize,
+    /// Max concatenated tokens admitted but not yet cut.
+    pub max_queued_tokens: usize,
+    /// How long a blocking `submit` may wait for queue room before giving
+    /// up (the legacy shim uses this; the defaults make blocking rare).
+    pub submit_budget: Duration,
+    /// Reject requests whose deadline the projected queue wait already
+    /// blows (needs a service-rate estimate; admits until warmed up).
+    pub shed_on_projected_miss: bool,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            // generous: the bound exists to cap pathological backlogs, not
+            // to shape steady-state traffic
+            max_queued_seqs: 4096,
+            max_queued_tokens: 1 << 22,
+            submit_budget: Duration::from_secs(30),
+            shed_on_projected_miss: true,
+        }
+    }
+}
+
+/// Admission counters reported at shutdown ([`crate::coordinator::metrics::ClusterReport`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AdmissionReport {
+    /// Requests admitted (ticket issued).
+    pub admitted: usize,
+    pub rejected_queue_full: usize,
+    pub rejected_deadline: usize,
+    /// Admitted requests that never produced a response because they were
+    /// cancelled: shed at a batch cut, shed at a replica pop, or
+    /// suppressed at reply time after a late cancel.
+    pub cancelled: usize,
+    /// Admitted requests that never produced a response because their
+    /// batch's forward pass failed (engine error — see the replica log).
+    pub failed: usize,
+}
+
+impl AdmissionReport {
+    pub fn rejected(&self) -> usize {
+        self.rejected_queue_full + self.rejected_deadline
+    }
+
+    /// Every admitted request is accounted for exactly once at a drained
+    /// shutdown: `admitted == responses + cancelled + failed`, where
+    /// `responses` is the cluster's served-request total.
+    pub fn unserved(&self) -> usize {
+        self.cancelled + self.failed
+    }
+}
+
+struct AdmissionInner {
+    queued_seqs: usize,
+    queued_tokens: usize,
+    /// EWMA of one replica's executed tokens/second (0 = unknown).
+    /// Replicas fold their per-batch samples into a single estimate; the
+    /// cluster drain rate is this times the replica count.
+    service_rate_tps: f64,
+    report: AdmissionReport,
+    next_id: u64,
+}
+
+/// Shared bounded-admission state: queue-depth accounting on the submit
+/// side, drain/service notes from the router and replicas, and the
+/// load-shedding decision itself. One mutex guards everything — admission
+/// is O(1) bookkeeping, never on the execute path's critical section.
+pub struct AdmissionState {
+    inner: Mutex<AdmissionInner>,
+    /// Signalled whenever queued work drains (cut or shed) — what blocking
+    /// submits wait on.
+    freed: Condvar,
+    /// Engine replicas draining the queue in parallel: scales the
+    /// per-replica service-rate EWMA up to a cluster drain rate for the
+    /// wait projections. Optimistic when replicas die mid-run (shedding
+    /// turns conservative, never over-eager).
+    replicas: usize,
+}
+
+/// Service-rate EWMA step for [`AdmissionState::note_service`].
+const RATE_ALPHA: f64 = 0.3;
+/// `retry_after` clamp.
+const RETRY_MIN: Duration = Duration::from_millis(1);
+const RETRY_MAX: Duration = Duration::from_secs(5);
+/// `retry_after` fallback before any service-rate sample exists.
+const RETRY_DEFAULT: Duration = Duration::from_millis(50);
+
+fn clamp_retry(d: Duration) -> Duration {
+    d.clamp(RETRY_MIN, RETRY_MAX)
+}
+
+impl AdmissionState {
+    pub fn new(replicas: usize) -> Arc<AdmissionState> {
+        Arc::new(AdmissionState {
+            inner: Mutex::new(AdmissionInner {
+                queued_seqs: 0,
+                queued_tokens: 0,
+                service_rate_tps: 0.0,
+                report: AdmissionReport::default(),
+                next_id: 1,
+            }),
+            freed: Condvar::new(),
+            replicas: replicas.max(1),
+        })
+    }
+
+    /// Projected cluster drain rate, tokens/second (0 until warmed up).
+    fn drain_rate(&self, g: &AdmissionInner) -> f64 {
+        g.service_rate_tps * self.replicas as f64
+    }
+
+    /// Non-blocking admission decision for a `tokens`-token request with
+    /// an optional deadline TTL. On success the request counts as queued
+    /// until [`note_cut`](Self::note_cut)/[`note_shed_at_cut`](Self::note_shed_at_cut)
+    /// releases it; the returned id is the ticket id.
+    pub fn try_admit(
+        &self,
+        cfg: &AdmissionConfig,
+        tokens: usize,
+        ttl: Option<Duration>,
+    ) -> Result<u64, (RejectReason, Duration)> {
+        let mut g = self.inner.lock().unwrap();
+        self.admit_locked(&mut g, cfg, tokens, ttl)
+    }
+
+    /// Blocking admission: wait up to `cfg.submit_budget` for queue room.
+    /// Projected-deadline rejection still applies — waiting only makes a
+    /// doomed deadline worse.
+    pub fn admit_blocking(
+        &self,
+        cfg: &AdmissionConfig,
+        tokens: usize,
+        ttl: Option<Duration>,
+    ) -> Result<u64, (RejectReason, Duration)> {
+        let deadline = Instant::now() + cfg.submit_budget;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            match self.admit_locked(&mut g, cfg, tokens, ttl) {
+                Ok(id) => return Ok(id),
+                Err((RejectReason::DeadlineUnmeetable, r)) => {
+                    return Err((RejectReason::DeadlineUnmeetable, r))
+                }
+                Err(full @ (RejectReason::QueueFull, _)) => {
+                    let left = deadline.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        return Err(full);
+                    }
+                    let (guard, _timeout) = self.freed.wait_timeout(g, left).unwrap();
+                    g = guard;
+                }
+            }
+        }
+    }
+
+    fn admit_locked(
+        &self,
+        g: &mut AdmissionInner,
+        cfg: &AdmissionConfig,
+        tokens: usize,
+        ttl: Option<Duration>,
+    ) -> Result<u64, (RejectReason, Duration)> {
+        let drain = self.drain_rate(g);
+        if g.queued_seqs + 1 > cfg.max_queued_seqs || g.queued_tokens + tokens > cfg.max_queued_tokens
+        {
+            g.report.rejected_queue_full += 1;
+            // crude drain projection: half the backlog at the cluster rate
+            let retry = if drain > 0.0 {
+                clamp_retry(Duration::from_secs_f64(g.queued_tokens as f64 / drain / 2.0))
+            } else {
+                RETRY_DEFAULT
+            };
+            return Err((RejectReason::QueueFull, retry));
+        }
+        if cfg.shed_on_projected_miss {
+            if let (Some(ttl), true) = (ttl, drain > 0.0) {
+                let projected =
+                    Duration::from_secs_f64((g.queued_tokens + tokens) as f64 / drain);
+                if projected > ttl {
+                    g.report.rejected_deadline += 1;
+                    return Err((
+                        RejectReason::DeadlineUnmeetable,
+                        clamp_retry(projected - ttl),
+                    ));
+                }
+            }
+        }
+        g.queued_seqs += 1;
+        g.queued_tokens += tokens;
+        g.report.admitted += 1;
+        let id = g.next_id;
+        g.next_id += 1;
+        Ok(id)
+    }
+
+    /// Roll back an admission whose channel send failed (router gone).
+    pub fn abort_admit(&self, tokens: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.queued_seqs = g.queued_seqs.saturating_sub(1);
+        g.queued_tokens = g.queued_tokens.saturating_sub(tokens);
+        g.report.admitted = g.report.admitted.saturating_sub(1);
+        drop(g);
+        self.freed.notify_all();
+    }
+
+    /// `seqs` requests totalling `tokens` left the admission queue in a
+    /// routed batch (router side, at the cut).
+    pub fn note_cut(&self, seqs: usize, tokens: usize) {
+        if seqs == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.queued_seqs = g.queued_seqs.saturating_sub(seqs);
+        g.queued_tokens = g.queued_tokens.saturating_sub(tokens);
+        drop(g);
+        self.freed.notify_all();
+    }
+
+    /// `seqs` cancelled requests were shed from the admission queue at a
+    /// cut: releases their queue slots and counts them cancelled.
+    pub fn note_shed_at_cut(&self, seqs: usize, tokens: usize) {
+        if seqs == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.queued_seqs = g.queued_seqs.saturating_sub(seqs);
+        g.queued_tokens = g.queued_tokens.saturating_sub(tokens);
+        g.report.cancelled += seqs;
+        drop(g);
+        self.freed.notify_all();
+    }
+
+    /// `n` requests already cut into batches were cancelled before (or
+    /// suppressed at) reply — replica side; their queue slots were
+    /// released at the cut.
+    pub fn note_cancelled(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        self.inner.lock().unwrap().report.cancelled += n;
+    }
+
+    /// `n` requests got no reply because their batch's forward pass
+    /// failed — keeps the admitted/served reconciliation honest under
+    /// engine errors instead of silently leaking requests.
+    pub fn note_failed(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        self.inner.lock().unwrap().report.failed += n;
+    }
+
+    /// Fold one executed batch into the service-rate estimate. Samples
+    /// come from individual replicas, so the EWMA tracks a *per-replica*
+    /// rate; projections multiply by the replica count.
+    pub fn note_service(&self, tokens: usize, elapsed: Duration) {
+        let secs = elapsed.as_secs_f64();
+        if tokens == 0 || secs <= 0.0 {
+            return;
+        }
+        let rate = tokens as f64 / secs;
+        let mut g = self.inner.lock().unwrap();
+        g.service_rate_tps = if g.service_rate_tps == 0.0 {
+            rate
+        } else {
+            (1.0 - RATE_ALPHA) * g.service_rate_tps + RATE_ALPHA * rate
+        };
+    }
+
+    /// Current queued (admitted, not yet cut) sequences and tokens.
+    pub fn queued(&self) -> (usize, usize) {
+        let g = self.inner.lock().unwrap();
+        (g.queued_seqs, g.queued_tokens)
+    }
+
+    /// Smoothed per-replica executed-tokens/second estimate (0 until
+    /// warmed up). Multiply by the replica count for the cluster drain
+    /// rate the projections use.
+    pub fn service_rate_tps(&self) -> f64 {
+        self.inner.lock().unwrap().service_rate_tps
+    }
+
+    pub fn report(&self) -> AdmissionReport {
+        self.inner.lock().unwrap().report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn cfg(seqs: usize, tokens: usize) -> AdmissionConfig {
+        AdmissionConfig {
+            max_queued_seqs: seqs,
+            max_queued_tokens: tokens,
+            submit_budget: Duration::from_millis(50),
+            shed_on_projected_miss: true,
+        }
+    }
+
+    #[test]
+    fn builder_defaults_and_fluent_knobs() {
+        let r = ServeRequest::new(vec![1, 2, 3]);
+        assert_eq!(r.priority, Priority::Normal);
+        assert!(r.ttl.is_none() && r.qos.is_none());
+        let r = r
+            .priority(Priority::High)
+            .deadline(Duration::from_millis(100))
+            .qos(QosClass::Interactive);
+        assert_eq!(r.priority, Priority::High);
+        assert_eq!(r.ttl, Some(Duration::from_millis(100)));
+        assert_eq!(r.qos, Some(QosClass::Interactive));
+    }
+
+    #[test]
+    fn priority_and_qos_indices_are_dense() {
+        for (i, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
+        for (i, q) in QosClass::ALL.iter().enumerate() {
+            assert_eq!(q.index(), i);
+        }
+        assert!(QosClass::Interactive.r_hint().unwrap() < QosClass::Batch.r_hint().unwrap());
+        assert!(QosClass::Standard.r_hint().is_none());
+    }
+
+    #[test]
+    fn queue_depth_bound_rejects_and_drain_readmits() {
+        let a = AdmissionState::new(1);
+        let c = cfg(2, 1_000_000);
+        let id1 = a.try_admit(&c, 10, None).unwrap();
+        let id2 = a.try_admit(&c, 10, None).unwrap();
+        assert!(id2 > id1, "ids are unique and increasing");
+        let (reason, retry) = a.try_admit(&c, 10, None).unwrap_err();
+        assert_eq!(reason, RejectReason::QueueFull);
+        assert!(retry >= RETRY_MIN);
+        assert_eq!(a.queued(), (2, 20));
+        a.note_cut(1, 10);
+        assert!(a.try_admit(&c, 10, None).is_ok(), "drain frees a slot");
+        let r = a.report();
+        assert_eq!((r.admitted, r.rejected_queue_full), (3, 1));
+    }
+
+    #[test]
+    fn token_bound_rejects_independently_of_seq_bound() {
+        let a = AdmissionState::new(1);
+        let c = cfg(100, 64);
+        a.try_admit(&c, 60, None).unwrap();
+        let (reason, _) = a.try_admit(&c, 10, None).unwrap_err();
+        assert_eq!(reason, RejectReason::QueueFull);
+        assert!(a.try_admit(&c, 4, None).is_ok(), "small request still fits");
+    }
+
+    #[test]
+    fn projected_deadline_miss_sheds_once_rate_is_known() {
+        let a = AdmissionState::new(1);
+        let c = cfg(100, 1_000_000);
+        // no rate estimate yet: deadline requests are admitted on faith
+        a.try_admit(&c, 100, Some(Duration::from_millis(1))).unwrap();
+        // 1000 tok/s measured; 200 queued tokens ⇒ ~200 ms projected wait
+        a.note_service(1000, Duration::from_secs(1));
+        let (reason, retry) =
+            a.try_admit(&c, 100, Some(Duration::from_millis(50))).unwrap_err();
+        assert_eq!(reason, RejectReason::DeadlineUnmeetable);
+        assert!(retry >= RETRY_MIN && retry <= RETRY_MAX);
+        // a lax deadline on the same queue is fine
+        assert!(a.try_admit(&c, 100, Some(Duration::from_secs(10))).is_ok());
+        // no deadline: projected-miss shedding never applies
+        assert!(a.try_admit(&c, 100, None).is_ok());
+        assert_eq!(a.report().rejected_deadline, 1);
+    }
+
+    #[test]
+    fn projection_scales_with_replica_count() {
+        // same queue, same per-replica rate: a 4-replica cluster drains
+        // 4× faster, so the deadline that a single replica would miss is
+        // comfortably met and must NOT be shed
+        let c = cfg(100, 1_000_000);
+        let single = AdmissionState::new(1);
+        let quad = AdmissionState::new(4);
+        for a in [&single, &quad] {
+            a.try_admit(&c, 400, None).unwrap();
+            a.note_service(1000, Duration::from_secs(1)); // 1000 tok/s per replica
+        }
+        // 500 queued tokens: 1 replica projects 500ms, 4 replicas 125ms
+        let ttl = Some(Duration::from_millis(200));
+        assert_eq!(
+            single.try_admit(&c, 100, ttl).unwrap_err().0,
+            RejectReason::DeadlineUnmeetable
+        );
+        assert!(quad.try_admit(&c, 100, ttl).is_ok(), "4-replica drain meets the deadline");
+    }
+
+    #[test]
+    fn projected_miss_can_be_disabled() {
+        let a = AdmissionState::new(1);
+        let mut c = cfg(100, 1_000_000);
+        c.shed_on_projected_miss = false;
+        a.note_service(10, Duration::from_secs(1)); // 10 tok/s: everything projects late
+        assert!(a.try_admit(&c, 1000, Some(Duration::from_millis(1))).is_ok());
+    }
+
+    #[test]
+    fn blocking_admit_waits_for_drain_and_times_out() {
+        let a = AdmissionState::new(1);
+        let c = cfg(1, 1_000_000);
+        a.try_admit(&c, 10, None).unwrap();
+        // times out while full
+        let err = a.admit_blocking(&c, 10, None).unwrap_err();
+        assert_eq!(err.0, RejectReason::QueueFull);
+        // a concurrent drain unblocks the waiter
+        let a2 = a.clone();
+        let t = thread::spawn(move || a2.admit_blocking(&cfg(1, 1_000_000), 10, None));
+        thread::sleep(Duration::from_millis(10));
+        a.note_cut(1, 10);
+        assert!(t.join().unwrap().is_ok());
+    }
+
+    #[test]
+    fn service_rate_ewma_smooths() {
+        let a = AdmissionState::new(1);
+        assert_eq!(a.service_rate_tps(), 0.0);
+        a.note_service(100, Duration::from_secs(1));
+        assert!((a.service_rate_tps() - 100.0).abs() < 1e-9, "first sample sets the rate");
+        a.note_service(200, Duration::from_secs(1));
+        let r = a.service_rate_tps();
+        assert!(r > 100.0 && r < 200.0, "EWMA between samples: {r}");
+        a.note_service(0, Duration::from_secs(1)); // no-op
+        assert_eq!(a.service_rate_tps(), r);
+    }
+
+    #[test]
+    fn shed_accounting_releases_slots_and_counts_cancelled() {
+        let a = AdmissionState::new(1);
+        let c = cfg(4, 1_000_000);
+        for _ in 0..4 {
+            a.try_admit(&c, 10, None).unwrap();
+        }
+        a.note_shed_at_cut(2, 20); // two cancelled at the cut
+        a.note_cut(1, 10); // one cut into a batch
+        a.note_cancelled(1); // …then cancelled late at the replica
+        assert_eq!(a.queued(), (1, 10));
+        a.note_cut(1, 10);
+        a.note_failed(1); // last one's forward errored: no reply
+        let r = a.report();
+        assert_eq!(r.cancelled, 3);
+        assert_eq!(r.failed, 1);
+        assert_eq!(r.admitted, 4);
+        // every admitted request accounted: 0 responses + 3 cancelled + 1 failed
+        assert_eq!(r.unserved(), 4);
+    }
+
+    #[test]
+    fn abort_rolls_back_an_admission() {
+        let a = AdmissionState::new(1);
+        let c = cfg(4, 100);
+        a.try_admit(&c, 10, None).unwrap();
+        a.abort_admit(10);
+        assert_eq!(a.queued(), (0, 0));
+        assert_eq!(a.report().admitted, 0);
+    }
+
+    #[test]
+    fn ticket_cancel_suppresses_a_raced_response() {
+        let (tx, rx) = mpsc::channel();
+        let ticket = Ticket { rx, cancel: Arc::new(AtomicBool::new(false)), id: 7 };
+        assert_eq!(ticket.id(), 7);
+        assert!(ticket.poll().is_none(), "pending");
+        // a response lands, then the cancel races in
+        tx.send(Response {
+            next_token: 1,
+            mean_nll: 0.5,
+            latency: Duration::from_millis(1),
+            queue_wait: Duration::from_millis(0),
+            generation: 0,
+        })
+        .unwrap();
+        ticket.cancel();
+        assert!(ticket.is_cancelled());
+        assert!(ticket.poll().is_none(), "cancelled ticket never yields a response");
+        assert!(ticket.wait().is_err());
+        assert!(ticket.wait_timeout(Duration::from_millis(1)).is_err());
+    }
+
+    #[test]
+    fn ticket_waits_deliver_and_closed_channel_errors() {
+        let (tx, rx) = mpsc::channel();
+        let ticket = Ticket { rx, cancel: Arc::new(AtomicBool::new(false)), id: 1 };
+        tx.send(Response {
+            next_token: 9,
+            mean_nll: 1.0,
+            latency: Duration::from_millis(2),
+            queue_wait: Duration::from_millis(1),
+            generation: 3,
+        })
+        .unwrap();
+        let resp = ticket.wait().unwrap();
+        assert_eq!(resp.next_token, 9);
+        drop(tx);
+        assert!(ticket.wait().is_err(), "dropped sender reads as cancelled/closed");
+    }
+}

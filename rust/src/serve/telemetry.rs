@@ -125,6 +125,12 @@ impl ActivationTelemetry {
         (0..self.live.len()).map(|p| self.drift(p)).fold(0.0, f64::max)
     }
 
+    /// Per-layer drift vector (replan observability; `max_drift` is its
+    /// maximum).
+    pub fn drifts(&self) -> Vec<f64> {
+        (0..self.live.len()).map(|p| self.drift(p)).collect()
+    }
+
     /// After a successful replan the live distribution becomes the new
     /// reference: drift resets to 0 and accumulates against the plan that
     /// is now actually serving.
