@@ -7,7 +7,7 @@
 PYTHON ?= python3
 CARGO  ?= cargo
 
-.PHONY: all artifacts corpus models build test bench-smoke pytest clean
+.PHONY: all artifacts corpus models mini-model build test bench-smoke pytest clean
 
 all: build
 
@@ -25,6 +25,14 @@ corpus:
 models:
 	cd python && $(PYTHON) -m compile.train_lm --out ../artifacts
 
+# Deterministic tiny `ci-mini` checkpoint (seeded random init, no
+# training) in the exact layout `make models` writes — what lets CI
+# exercise model-gated paths. Pure function of the rust model registry,
+# RNG and MXT serializer; CI caches artifacts/model_ci-mini.mxt on a hash
+# of those sources.
+mini-model:
+	$(CARGO) run --release --bin mxmoe -- gen-mini-model --out artifacts/model_ci-mini.mxt
+
 build:
 	$(CARGO) build --release
 
@@ -39,6 +47,7 @@ bench-smoke:
 	$(CARGO) bench --bench bench_group_dispatch -- --smoke
 	$(CARGO) bench --bench bench_cluster -- --smoke
 	$(CARGO) bench --bench bench_admission -- --smoke
+	$(CARGO) bench --bench bench_decode -- --smoke
 
 # Python unit tests (mirrors the CI python job).
 pytest:

@@ -1,0 +1,242 @@
+//! §Decode-Loop — KV-cached continuous decode vs naive re-forward-per-token.
+//!
+//! Scenario: G concurrent generations (16-token prompts, N new tokens
+//! each) on one serving engine under the standard mixed-precision plan.
+//! Two ways to produce the same token streams:
+//!
+//! * **naive** — the pre-decode serving reality: every emitted token costs
+//!   a *whole-sequence* forward of the growing sequence (each decode step
+//!   is a scoring request). O(T²) rows per sequence, no cross-sequence
+//!   step batching.
+//! * **kv** — the decode subsystem: prefill once into the KV cache, then
+//!   one single-token row per sequence per step, with all G sequences'
+//!   rows concatenated into one mixed step batch per layer
+//!   ([`DecodeScheduler`]). O(T) rows per sequence, tiles filled across
+//!   sequences.
+//!
+//! The naive baseline is *teacher-forced* on the kv path's generated
+//! streams, so both sides execute exactly the token sequences being
+//! compared — a fair timing comparison that sidesteps argmax near-ties
+//! between different tile executables (bit-identity of the decode path
+//! itself is pinned in `tests/decode_generate.rs`).
+//!
+//! Reported: decode throughput (generated tokens/s) both ways + the
+//! speedup. Full mode asserts the acceptance bar: kv ≥ 5× naive. `--smoke`
+//! shrinks the workload for CI and skips the wall-clock bar (shared
+//! runners), keeping the determinism and accounting assertions. Results
+//! land in `BENCH_decode.json`.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+use mxmoe::coordinator::ServingEngine;
+use mxmoe::harness::{mixed_runtime_plan, require_artifacts, save_model_mxt};
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::ser::Json;
+use mxmoe::serve::{
+    DecodePolicy, DecodeScheduler, GenSpec, Request, RequestKind, StreamEvent,
+};
+use mxmoe::util::Rng;
+
+const MODEL_SEED: u64 = 0xDEC0_DE01;
+const PROMPT_LEN: usize = 16;
+
+/// Serving-shape model (hidden=128, inter=64 — what the AOT export ships).
+fn serving_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "decode-bench".into(),
+        vocab: 64,
+        hidden: 128,
+        layers: 2,
+        heads: 4,
+        n_experts: 4,
+        n_shared: 1,
+        topk: 2,
+        inter: 64,
+        dense_first: false,
+        seq_len: PROMPT_LEN,
+    }
+}
+
+fn prompts(cfg: &ModelConfig, g: usize) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(0xDEC0_0FFE);
+    (0..g)
+        .map(|_| (0..PROMPT_LEN).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect()
+}
+
+fn build_engine(cfg: &ModelConfig, weights: &Path, artifacts: &Path) -> Result<ServingEngine> {
+    let file = mxmoe::ser::MxtFile::load(weights)?;
+    let lm = MoeLm::load_mxt(cfg, &file)?;
+    ServingEngine::new(lm, artifacts, &mixed_runtime_plan(cfg))
+}
+
+struct KvRun {
+    streams: Vec<Vec<u32>>,
+    elapsed_s: f64,
+    steps: usize,
+    rows: usize,
+    kv_peak_tokens: usize,
+}
+
+/// Generate all sequences through the decode scheduler (one engine, G
+/// concurrent sequences, mixed steps). Returns the streams + timing.
+fn run_kv(
+    cfg: &ModelConfig,
+    engine: &mut ServingEngine,
+    prompts: &[Vec<u32>],
+    max_new: usize,
+) -> KvRun {
+    let mut sched = DecodeScheduler::new(
+        cfg,
+        DecodePolicy { max_active_seqs: prompts.len().max(1), ..DecodePolicy::default() },
+    );
+    let mut handles = Vec::new();
+    for p in prompts {
+        let (reply, _reply_rx) = mpsc::channel();
+        let (stream, stream_rx) = mpsc::channel();
+        sched.admit(Request {
+            kind: RequestKind::Generate(GenSpec {
+                max_new_tokens: max_new,
+                stop: vec![],
+                stream,
+            }),
+            ..Request::new(p.clone(), reply)
+        });
+        handles.push((stream_rx, _reply_rx));
+    }
+    let t0 = Instant::now();
+    let mut steps = 0usize;
+    let mut rows = 0usize;
+    while sched.has_work() {
+        let out = sched.step(|inputs| engine.forward_step_batch(inputs));
+        if out.rows > 0 {
+            steps += 1;
+            rows += out.rows;
+        }
+        assert!(out.failed.is_empty() && out.cancelled.is_empty());
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let kv_peak_tokens = sched.occupancy().peak_tokens;
+    let streams: Vec<Vec<u32>> = handles
+        .iter()
+        .map(|(rx, _)| {
+            let mut tokens = Vec::new();
+            while let Ok(ev) = rx.try_recv() {
+                match ev {
+                    StreamEvent::Token { token, .. } => tokens.push(token),
+                    StreamEvent::Done { generated, .. } => assert_eq!(generated, tokens.len()),
+                }
+            }
+            tokens
+        })
+        .collect();
+    KvRun { streams, elapsed_s, steps, rows, kv_peak_tokens }
+}
+
+/// The pre-decode baseline: each token of each stream costs one
+/// whole-sequence forward of the growing sequence (teacher-forced on the
+/// kv streams so both sides run identical token sequences).
+fn run_naive(
+    engine: &mut ServingEngine,
+    prompts: &[Vec<u32>],
+    streams: &[Vec<u32>],
+) -> Result<(f64, usize)> {
+    let t0 = Instant::now();
+    let mut rows = 0usize;
+    for (p, s) in prompts.iter().zip(streams) {
+        let mut seq = p.clone();
+        for &tok in s {
+            let logits = engine.forward_batch(&[&seq])?;
+            assert_eq!(logits[0].rows, seq.len());
+            rows += seq.len();
+            seq.push(tok);
+        }
+    }
+    Ok((t0.elapsed().as_secs_f64(), rows))
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!("# §Decode-Loop — KV-cached continuous decode vs naive re-forward-per-token");
+
+    let mut results = vec![("smoke", Json::Bool(smoke))];
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping decode bench: artifacts not built (run `make artifacts`)");
+        std::fs::write(
+            "BENCH_decode.json",
+            Json::obj(results.iter().map(|(k, v)| (*k, v.clone())).collect()).pretty(),
+        )?;
+        return Ok(());
+    };
+
+    let cfg = serving_cfg();
+    let weights = std::env::temp_dir().join("mxmoe_bench_decode.mxt");
+    let lm = MoeLm::random(&cfg, &mut Rng::new(MODEL_SEED));
+    save_model_mxt(&lm, &weights)?;
+    let mut engine = build_engine(&cfg, &weights, &artifacts)?;
+
+    let (g, max_new) = if smoke { (2usize, 4usize) } else { (8, 32) };
+    let ps = prompts(&cfg, g);
+
+    // warmup both paths outside the timed windows (executable load)
+    let warm = run_kv(&cfg, &mut engine, &ps[..1], 1);
+    run_naive(&mut engine, &ps[..1], &warm.streams)?;
+
+    // timed: kv decode, twice (determinism check), then the naive replay
+    let kv_a = run_kv(&cfg, &mut engine, &ps, max_new);
+    let kv = run_kv(&cfg, &mut engine, &ps, max_new);
+    assert_eq!(kv_a.streams, kv.streams, "kv decode must be run-to-run deterministic");
+    let total_tokens = g * max_new;
+    assert_eq!(kv.streams.iter().map(|s| s.len()).sum::<usize>(), total_tokens);
+    // per sequence: prompt prefill rows + one row per further token
+    assert_eq!(kv.rows, g * (PROMPT_LEN + max_new - 1), "O(T) rows per sequence");
+    let (naive_s, naive_rows) = run_naive(&mut engine, &ps, &kv.streams)?;
+    assert!(naive_rows > kv.rows, "the baseline re-forwards O(T²) rows");
+
+    let kv_tps = total_tokens as f64 / kv.elapsed_s.max(1e-9);
+    let naive_tps = total_tokens as f64 / naive_s.max(1e-9);
+    let speedup = kv_tps / naive_tps.max(1e-9);
+    println!(
+        "| naive | {:>6} rows | {:>8.1} tok/s |",
+        naive_rows, naive_tps
+    );
+    println!(
+        "| kv    | {:>6} rows | {:>8.1} tok/s | {} steps | {:.1} rows/step | kv peak {} |",
+        kv.rows,
+        kv_tps,
+        kv.steps,
+        kv.rows as f64 / kv.steps.max(1) as f64,
+        kv.kv_peak_tokens
+    );
+    println!("decode speedup: {speedup:.2}×");
+    if !smoke {
+        assert!(
+            speedup >= 5.0,
+            "KV-cached continuous decode must be ≥5× naive re-forwarding \
+             (got {speedup:.2}×)"
+        );
+    }
+
+    let _ = std::fs::remove_file(&weights);
+    results.extend([
+        ("sequences", Json::num(g as f64)),
+        ("max_new_tokens", Json::num(max_new as f64)),
+        ("prompt_len", Json::num(PROMPT_LEN as f64)),
+        ("kv_tok_per_s", Json::num(kv_tps)),
+        ("naive_tok_per_s", Json::num(naive_tps)),
+        ("speedup", Json::num(speedup)),
+        ("kv_rows", Json::num(kv.rows as f64)),
+        ("naive_rows", Json::num(naive_rows as f64)),
+        ("kv_steps", Json::num(kv.steps as f64)),
+        ("kv_peak_tokens", Json::num(kv.kv_peak_tokens as f64)),
+    ]);
+    std::fs::write(
+        "BENCH_decode.json",
+        Json::obj(results.iter().map(|(k, v)| (*k, v.clone())).collect()).pretty(),
+    )?;
+    println!("\nwrote BENCH_decode.json");
+    Ok(())
+}

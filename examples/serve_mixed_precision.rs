@@ -23,7 +23,8 @@ use mxmoe::costmodel::GpuSpec;
 use mxmoe::harness::{artifacts_dir, fast_mode, load_corpus, load_model};
 use mxmoe::quant::{QuantScheme, SchemeRegistry};
 use mxmoe::serve::{
-    Admission, AdmissionConfig, Priority, QosClass, ReplanConfig, Replanner, ServeRequest,
+    Admission, AdmissionConfig, FinishReason, Priority, QosClass, ReplanConfig, Replanner,
+    ServeRequest, StreamEvent,
 };
 use mxmoe::util::Rng;
 
@@ -191,6 +192,72 @@ fn main() -> Result<()> {
         creport.admission.admitted,
         creport.total_requests() + creport.admission.unserved(),
         "front-door accounting: admitted == responses + cancelled + failed"
+    );
+
+    // ---- token-level decode: KV-cached generation with streaming ----
+    // Prompts prefill once into the replica's KV cache; each subsequent
+    // token costs one single-token decode row, batched across concurrent
+    // generations per step (DESIGN.md §Decode-Loop). Tokens stream onto
+    // the ticket as steps land; one generation is cancelled mid-stream and
+    // stops within a step, its KV reservation reclaimed.
+    eprintln!("serving generations through the decode loop...");
+    let server = Server::start(
+        cfg.clone(),
+        weights_path.clone(),
+        artifacts_dir(),
+        mx_alloc.clone(),
+        ServeConfig { max_batch_seqs: 8, max_wait: Duration::from_millis(10), ..Default::default() },
+    )?;
+    let max_new = if fast_mode() { 8 } else { 24 };
+    let mut rng = Rng::new(0x6E1);
+    let gen_tickets: Vec<_> = (0..4)
+        .map(|_| {
+            let prompt = eval_seqs[rng.below(eval_seqs.len() as u64) as usize][..16].to_vec();
+            server.generate(prompt, max_new, vec![])
+        })
+        .collect::<Result<_>>()?;
+    // cancel the last generation after its first token arrives
+    let victim = gen_tickets.last().unwrap();
+    match victim.wait_event(Duration::from_secs(600))? {
+        StreamEvent::Token { .. } => victim.cancel(),
+        StreamEvent::Done { .. } => {}
+    }
+    let mut streamed = 0usize;
+    for (i, t) in gen_tickets.iter().enumerate() {
+        if t.is_cancelled() {
+            continue;
+        }
+        let (tokens, reason) = t.collect_tokens(Duration::from_secs(600))?;
+        streamed += tokens.len();
+        assert_eq!(tokens.len(), max_new);
+        assert_eq!(reason, FinishReason::Length);
+        let resp = t.wait_timeout(Duration::from_secs(600))?;
+        if i == 0 {
+            println!(
+                "generation         | {} prompt + {} new tokens | first stream {:?}… | prompt nll {:.3}",
+                16,
+                tokens.len(),
+                &tokens[..tokens.len().min(6)],
+                resp.mean_nll
+            );
+        }
+    }
+    let dreport = server.shutdown();
+    println!(
+        "decode loop        | {:>8.1} gen tok/s | {} steps (p50 {:.1} ms) | {} prefill + {} decode rows | kv peak {} | {} cancelled",
+        dreport.decode_tps,
+        dreport.decode_steps,
+        dreport.p50_step_s * 1e3,
+        dreport.prefill_rows,
+        dreport.decode_rows,
+        dreport.kv_peak_tokens,
+        dreport.cancelled,
+    );
+    assert!(dreport.generated_tokens >= streamed);
+    assert_eq!(
+        dreport.admitted,
+        dreport.requests + dreport.cancelled + dreport.failed,
+        "decode accounting: admitted == responses + cancelled + failed"
     );
 
     // ---- closed-loop demo: online telemetry + drift-adaptive replan ----

@@ -36,13 +36,14 @@ use crate::moe::ModelConfig;
 use crate::runtime::dispatch;
 use crate::runtime::RuntimeScheme;
 use crate::ser::MxtFile;
-use crate::serve::queue::ContinuousBatcher;
+use crate::serve::decode::DecodePolicy;
+use crate::serve::queue::{ContinuousBatcher, GenSpec, RequestKind};
 use crate::serve::replan::Replanner;
 use crate::serve::replica::{
     replica_main, ReplicaOnline, ReplicaSpec, ReplicaStatus, RoutedBatch, WorkQueues,
 };
 use crate::serve::request::{
-    Admission, AdmissionConfig, AdmissionState, ServeRequest, Ticket,
+    Admission, AdmissionConfig, AdmissionState, ServeKind, ServeRequest, Ticket,
 };
 use crate::serve::{Request, Response};
 
@@ -85,11 +86,15 @@ pub struct ClusterConfig {
     pub serve: ServeConfig,
     pub affinity: AffinityConfig,
     /// Bounded-admission policy for the front door (queue-depth bounds,
-    /// blocking-submit budget, projected-deadline shedding).
+    /// blocking-submit budget, projected-deadline shedding, per-class
+    /// quota).
     pub admission: AdmissionConfig,
     /// Grouped-dispatch worker threads per replica (`None` = engine
     /// default). Results are bit-identical for any value ≥ 1.
     pub dispatch_threads: Option<usize>,
+    /// Per-replica decode-loop sizing (step row budget, active-sequence
+    /// cap, KV reservation budget).
+    pub decode: DecodePolicy,
 }
 
 impl Default for ClusterConfig {
@@ -100,6 +105,7 @@ impl Default for ClusterConfig {
             affinity: AffinityConfig::default(),
             admission: AdmissionConfig::default(),
             dispatch_threads: None,
+            decode: DecodePolicy::default(),
         }
     }
 }
@@ -388,6 +394,7 @@ impl Cluster {
                 allocation: allocation.clone(),
                 online: online.clone(),
                 dispatch_threads: cluster_cfg.dispatch_threads,
+                decode: cluster_cfg.decode,
             };
             let q = queues.clone();
             let st = status.clone();
@@ -417,11 +424,23 @@ impl Cluster {
         })
     }
 
+    /// Reject malformed requests before they touch admission accounting.
+    fn validate(req: &ServeRequest) -> Result<()> {
+        if matches!(req.kind, ServeKind::Generate { .. }) && req.tokens.is_empty() {
+            anyhow::bail!("generate: empty prompt");
+        }
+        Ok(())
+    }
+
     /// Non-blocking typed submission: either a [`Ticket`] or a
-    /// load-shedding rejection (queue-depth bound, projected deadline
-    /// miss) with a `retry_after` estimate.
+    /// load-shedding rejection (queue-depth bound, class quota, projected
+    /// deadline miss) with a `retry_after` estimate. Generation requests
+    /// ([`ServeRequest::generate`]) get a streaming ticket.
     pub fn try_submit(&self, req: ServeRequest) -> Result<Admission> {
-        match self.admission.try_admit(&self.admission_cfg, req.tokens.len(), req.ttl) {
+        Cluster::validate(&req)?;
+        let privileged = req.is_privileged();
+        match self.admission.try_admit(&self.admission_cfg, req.tokens.len(), req.ttl, privileged)
+        {
             Err((reason, retry_after)) => Ok(Admission::Rejected { reason, retry_after }),
             Ok(id) => self.enqueue(req, id).map(Admission::Admitted),
         }
@@ -432,7 +451,12 @@ impl Cluster {
     /// queue is still full, when the projected wait already blows the
     /// request's deadline, or when the cluster is shutting down.
     pub fn submit_request(&self, req: ServeRequest) -> Result<Ticket> {
-        match self.admission.admit_blocking(&self.admission_cfg, req.tokens.len(), req.ttl) {
+        Cluster::validate(&req)?;
+        let privileged = req.is_privileged();
+        match self
+            .admission
+            .admit_blocking(&self.admission_cfg, req.tokens.len(), req.ttl, privileged)
+        {
             Err((reason, retry_after)) => Err(anyhow::anyhow!(
                 "admission rejected ({reason:?}, retry after {retry_after:?})"
             )),
@@ -441,11 +465,21 @@ impl Cluster {
     }
 
     fn enqueue(&self, req: ServeRequest, id: u64) -> Result<Ticket> {
-        let ServeRequest { tokens, priority, ttl, qos } = req;
+        let ServeRequest { tokens, priority, ttl, qos, kind } = req;
         let n_tokens = tokens.len();
         let arrived = Instant::now();
         let (reply, rx) = mpsc::channel();
         let cancel = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let (kind, stream_rx) = match kind {
+            ServeKind::Score => (RequestKind::Score, None),
+            ServeKind::Generate { max_new_tokens, stop } => {
+                let (stream, stream_rx) = mpsc::channel();
+                (
+                    RequestKind::Generate(GenSpec { max_new_tokens, stop, stream }),
+                    Some(stream_rx),
+                )
+            }
+        };
         let request = Request {
             id,
             tokens,
@@ -454,13 +488,14 @@ impl Cluster {
             priority,
             deadline: ttl.map(|d| arrived + d),
             qos,
+            kind,
             cancelled: cancel.clone(),
         };
         if self.tx.send(request).is_err() {
             self.admission.abort_admit(n_tokens);
             anyhow::bail!("cluster closed");
         }
-        Ok(Ticket { rx, cancel, id })
+        Ok(Ticket { rx, cancel, id, stream: stream_rx })
     }
 
     /// Legacy untyped submission; returns the raw reply receiver. A thin
@@ -469,6 +504,13 @@ impl Cluster {
     /// responses are bit-identical to the typed path.
     pub fn submit(&self, tokens: Vec<u32>) -> Result<mpsc::Receiver<Response>> {
         self.submit_request(ServeRequest::new(tokens)).map(Ticket::into_receiver)
+    }
+
+    /// KV-cached generation with token streaming (DESIGN.md §Decode-Loop):
+    /// shorthand for [`submit_request`](Self::submit_request) with
+    /// [`ServeRequest::generate`].
+    pub fn generate(&self, prompt: Vec<u32>, max_new_tokens: usize, stop: Vec<u32>) -> Result<Ticket> {
+        self.submit_request(ServeRequest::generate(prompt, max_new_tokens, stop))
     }
 
     /// Front-door accounting so far (admitted / rejected / cancelled).

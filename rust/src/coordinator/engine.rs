@@ -5,17 +5,19 @@
 //! closes the telemetry → drift → re-solve → hot-swap loop.
 
 use std::path::Path;
+use std::thread;
 
 use anyhow::Result;
 
 use crate::alloc::Allocation;
 use crate::moe::block::MoeBlock;
 use crate::moe::router::Routing;
-use crate::moe::{route, ModelConfig, MoeLm};
+use crate::moe::{route, ModelConfig, MoeLm, StepSeq};
 use crate::runtime::dispatch::{self, ExpertInput};
 use crate::runtime::{
     tile_decompose, DispatchMode, DispatchPlan, ExpertWork, Runtime, RuntimeScheme,
 };
+use crate::serve::hotswap::{StagedSwap, SwapStagingJob};
 use crate::serve::replan::{diff_plans, ReplanOutcome, Replanner};
 use crate::serve::request::QosClass;
 use crate::serve::telemetry::{ActivationTelemetry, DEFAULT_EWMA_ALPHA};
@@ -192,6 +194,10 @@ pub struct ServingEngine {
     pub lm: MoeLm,
     allocation: Allocation,
     dispatch: ExpertDispatcher,
+    /// Transformer layer index → MoE block position, fixed at
+    /// construction (the architecture never changes at serve time) so the
+    /// per-batch/per-step forwards don't rebuild it on the hot path.
+    block_pos: std::collections::HashMap<usize, usize>,
     /// `telemetry.observed_tokens` at the last replan (hysteresis anchor).
     tokens_at_last_replan: usize,
 }
@@ -207,6 +213,12 @@ impl ServingEngine {
         let slots = SlotTable::build(&lm, allocation)?;
         let telemetry =
             ActivationTelemetry::uniform(slots.n_layers(), lm.cfg.n_experts, DEFAULT_EWMA_ALPHA);
+        let block_pos = lm
+            .moe_blocks()
+            .iter()
+            .enumerate()
+            .map(|(pos, (l, _))| (*l, pos))
+            .collect();
         Ok(ServingEngine {
             lm,
             allocation: allocation.clone(),
@@ -218,6 +230,7 @@ impl ServingEngine {
                 mode: DispatchMode::default(),
                 threads: default_threads(),
             },
+            block_pos,
             tokens_at_last_replan: 0,
         })
     }
@@ -317,16 +330,9 @@ impl ServingEngine {
     /// Forward a batch of sequences; expert FFNs run on PJRT with
     /// cross-request token batching. Returns per-sequence logits.
     pub fn forward_batch(&mut self, batch: &[&[u32]]) -> Result<Vec<Matrix>> {
-        // layer-position bookkeeping: map transformer layer → block pos
-        let block_pos: std::collections::HashMap<usize, usize> = self
-            .lm
-            .moe_blocks()
-            .iter()
-            .enumerate()
-            .map(|(pos, (l, _))| (*l, pos))
-            .collect();
         // disjoint field borrows: the model is read-only during the pass,
         // all mutation goes through the dispatcher
+        let block_pos = &self.block_pos;
         let lm = &self.lm;
         let dispatch = &mut self.dispatch;
         let mut err: Option<anyhow::Error> = None;
@@ -348,6 +354,35 @@ impl ServingEngine {
                 self.dispatch.metrics.batches += 1;
                 Ok(logits)
             }
+        }
+    }
+
+    /// Incremental forward of one mixed prefill/decode step: attention
+    /// runs natively against each sequence's KV cache, expert FFNs
+    /// dispatch as grouped mixed-precision waves over the *concatenated*
+    /// step rows — and every step's routing feeds the live activation
+    /// telemetry, so replanning sees decode-time expert frequencies.
+    /// Returns per-sequence logits for the new positions.
+    pub fn forward_step_batch(&mut self, seqs: &mut [StepSeq<'_>]) -> Result<Vec<Matrix>> {
+        let block_pos = &self.block_pos;
+        let lm = &self.lm;
+        let dispatch = &mut self.dispatch;
+        let mut err: Option<anyhow::Error> = None;
+        let logits = lm.forward_step_batch_with_moe(seqs, |l, block, x| {
+            if err.is_some() {
+                return Matrix::zeros(x.rows, x.cols);
+            }
+            match dispatch.moe_forward(block_pos[&l], block, x) {
+                Ok(y) => y,
+                Err(e) => {
+                    err = Some(e);
+                    Matrix::zeros(x.rows, x.cols)
+                }
+            }
+        });
+        match err {
+            Some(e) => Err(e),
+            None => Ok(logits),
         }
     }
 
@@ -388,7 +423,28 @@ impl ServingEngine {
     /// strictly between batches. Returns `None` when no replan triggered.
     /// Every check refreshes the per-layer drift vector; every triggered
     /// replan appends to the bounded history (replan observability).
+    ///
+    /// Synchronous composition of
+    /// [`maybe_begin_replan`](Self::maybe_begin_replan) +
+    /// [`finish_replan`](Self::finish_replan) — the serving loop uses the
+    /// split form so re-quantization happens off the serving thread.
     pub fn maybe_replan(&mut self, replanner: &Replanner) -> Result<Option<ReplanOutcome>> {
+        match self.maybe_begin_replan(replanner)? {
+            Some(staging) => self.finish_replan(staging).map(Some),
+            None => Ok(None),
+        }
+    }
+
+    /// Drift check + MCKP re-solve, with the expensive slot
+    /// re-quantization handed to a detached staging worker thread. The
+    /// solve itself (warm-started, near-linear) runs inline; the returned
+    /// [`ReplanStaging`] is polled between batches/decode steps and handed
+    /// to [`finish_replan`](Self::finish_replan) once
+    /// [`finished`](ReplanStaging::finished) — serving never stalls on
+    /// quantization. At most one staging should be in flight per engine;
+    /// the hysteresis anchor is set here, so a failing solve backs off
+    /// instead of re-solving every batch.
+    pub fn maybe_begin_replan(&mut self, replanner: &Replanner) -> Result<Option<ReplanStaging>> {
         let drift = self.dispatch.telemetry.max_drift();
         self.dispatch.metrics.last_drift = drift;
         self.dispatch.metrics.drift_vector = self.dispatch.telemetry.drifts();
@@ -406,10 +462,36 @@ impl ServingEngine {
         let r = self.qos_effective_r(replanner.cfg.alloc.r);
         let new_alloc = replanner.replan_with_r(&self.lm.cfg, &freqs, &self.allocation, Some(r))?;
         let changes = diff_plans(&self.allocation, &new_alloc);
-        let n_changes = changes.len();
-        let bits_before = self.allocation.avg_weight_bits(&self.lm.cfg);
-        let bits_after = new_alloc.avg_weight_bits(&self.lm.cfg);
-        let swapped = self.install_plan(new_alloc, &changes)?;
+        let job = SwapStagingJob::collect(&self.lm, &self.dispatch.slots, &changes);
+        let handle = thread::Builder::new()
+            .name("mxmoe-swap-staging".into())
+            .spawn(move || job.run())
+            .expect("spawn staging thread");
+        Ok(Some(ReplanStaging {
+            handle,
+            drift,
+            r,
+            changes: changes.len(),
+            bits_before: self.allocation.avg_weight_bits(&self.lm.cfg),
+            bits_after: new_alloc.avg_weight_bits(&self.lm.cfg),
+            allocation: new_alloc,
+        }))
+    }
+
+    /// Join a staging job and apply the generation-counted slot flip on
+    /// this (engine) thread: literal creation + install, telemetry
+    /// rebaseline, replan metrics. Blocks if the worker is still
+    /// quantizing — poll [`ReplanStaging::finished`] to avoid that. On
+    /// error the old plan keeps serving untouched.
+    pub fn finish_replan(&mut self, staging: ReplanStaging) -> Result<ReplanOutcome> {
+        let ReplanStaging { handle, drift, r, changes, bits_before, bits_after, allocation } =
+            staging;
+        let staged: StagedSwap = handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("swap staging thread panicked"))??;
+        let swapped = self.dispatch.slots.install_staged(staged)?;
+        self.allocation = allocation;
+        self.dispatch.metrics.swaps += swapped;
         self.dispatch.telemetry.rebaseline();
         let generation = self.dispatch.slots.generation();
         let m = &mut self.dispatch.metrics;
@@ -418,14 +500,39 @@ impl ServingEngine {
         m.note_replan(ReplanEvent {
             at_s,
             drift,
-            changes: n_changes,
+            changes,
             swapped,
             r,
             bits_before,
             bits_after,
             generation,
         });
-        Ok(Some(ReplanOutcome { drift, changes: n_changes, swapped }))
+        Ok(ReplanOutcome { drift, changes, swapped })
+    }
+}
+
+/// A replan whose slot re-quantization is running on a staging worker
+/// thread. Poll [`finished`](Self::finished) between batches/steps, then
+/// hand to [`ServingEngine::finish_replan`] for the engine-thread flip.
+pub struct ReplanStaging {
+    handle: thread::JoinHandle<Result<StagedSwap>>,
+    drift: f64,
+    r: f64,
+    changes: usize,
+    bits_before: f64,
+    bits_after: f64,
+    allocation: Allocation,
+}
+
+impl ReplanStaging {
+    /// True once the staging worker has exited (join will not block).
+    pub fn finished(&self) -> bool {
+        self.handle.is_finished()
+    }
+
+    /// Slots the re-solve changed (what the worker is re-quantizing).
+    pub fn changes(&self) -> usize {
+        self.changes
     }
 }
 

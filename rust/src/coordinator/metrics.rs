@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::runtime::{RuntimeScheme, WaveReport};
+use crate::serve::kvcache::KvOccupancy;
 use crate::serve::request::{AdmissionReport, Priority, QosClass};
 use crate::util::stats::Summary;
 
@@ -114,10 +115,33 @@ pub struct Metrics {
     wave_latencies: Vec<f64>,
     wave_latency_cursor: usize,
     scheme_waves: BTreeMap<&'static str, SchemeWaveStats>,
+    // ---- decode loop (DESIGN.md §Decode-Loop) ----
+    /// Mixed prefill/decode steps executed.
+    pub decode_steps: usize,
+    /// Prompt rows prefilled through the step loop.
+    pub prefill_rows: usize,
+    /// Single-token decode rows executed.
+    pub decode_rows: usize,
+    /// Tokens generated and streamed to tickets.
+    pub generated_tokens: usize,
+    /// Generations completed (stop-token or length).
+    pub generations: usize,
+    /// Per-step wall-clock ring (steps accrue per token — bounded like the
+    /// wave ring).
+    step_latencies: Vec<f64>,
+    step_latency_cursor: usize,
+    /// KV pool occupancy at the last publish: reserved / peak / budget
+    /// tokens.
+    pub kv_reserved_tokens: usize,
+    pub kv_peak_tokens: usize,
+    pub kv_budget_tokens: usize,
 }
 
 /// Wave-latency samples retained for percentile reporting.
 pub const WAVE_LATENCY_WINDOW: usize = 4096;
+
+/// Decode-step latency samples retained for percentile reporting.
+pub const STEP_LATENCY_WINDOW: usize = 4096;
 
 impl Metrics {
     pub fn new() -> Metrics {
@@ -147,6 +171,62 @@ impl Metrics {
             wave_latencies: Vec::new(),
             wave_latency_cursor: 0,
             scheme_waves: BTreeMap::new(),
+            decode_steps: 0,
+            prefill_rows: 0,
+            decode_rows: 0,
+            generated_tokens: 0,
+            generations: 0,
+            step_latencies: Vec::new(),
+            step_latency_cursor: 0,
+            kv_reserved_tokens: 0,
+            kv_peak_tokens: 0,
+            kv_budget_tokens: 0,
+        }
+    }
+
+    /// Fold one decode step into the counters: `prefill` + `decode` useful
+    /// rows, `emitted` streamed tokens, `finished` completed generations,
+    /// and the step wall clock (ring-bounded).
+    pub fn record_decode_step(
+        &mut self,
+        prefill: usize,
+        decode: usize,
+        emitted: usize,
+        finished: usize,
+        elapsed_s: f64,
+    ) {
+        self.decode_steps += 1;
+        self.prefill_rows += prefill;
+        self.decode_rows += decode;
+        self.generated_tokens += emitted;
+        self.generations += finished;
+        if self.step_latencies.len() < STEP_LATENCY_WINDOW {
+            self.step_latencies.push(elapsed_s);
+        } else {
+            self.step_latencies[self.step_latency_cursor] = elapsed_s;
+            self.step_latency_cursor = (self.step_latency_cursor + 1) % STEP_LATENCY_WINDOW;
+        }
+    }
+
+    /// Snapshot the replica's KV pool occupancy (published per step).
+    pub fn note_kv_occupancy(&mut self, occ: &KvOccupancy) {
+        self.kv_reserved_tokens = occ.reserved_tokens;
+        self.kv_peak_tokens = occ.peak_tokens;
+        self.kv_budget_tokens = occ.budget_tokens;
+    }
+
+    /// Raw per-step wall-clock samples in the ring (unordered).
+    pub fn step_latency_samples(&self) -> &[f64] {
+        &self.step_latencies
+    }
+
+    /// Decode-step wall-clock distribution over the most recent
+    /// [`STEP_LATENCY_WINDOW`] steps.
+    pub fn step_latency_summary(&self) -> Option<Summary> {
+        if self.step_latencies.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.step_latencies))
         }
     }
 
@@ -346,6 +426,22 @@ pub struct ReplicaReport {
     pub latencies: Vec<f64>,
     pub queue_waits: Vec<f64>,
     pub wave_latencies: Vec<f64>,
+    // ---- decode loop ----
+    /// Mixed prefill/decode steps this replica executed.
+    pub decode_steps: usize,
+    /// Prompt rows prefilled through the step loop.
+    pub prefill_rows: usize,
+    /// Single-token decode rows executed.
+    pub decode_rows: usize,
+    /// Tokens generated and streamed.
+    pub generated_tokens: usize,
+    /// Generations completed (stop-token or length).
+    pub generations: usize,
+    /// Per-step wall-clock samples (ring-bounded).
+    pub step_latencies: Vec<f64>,
+    /// KV reservation high-water mark / budget (tokens).
+    pub kv_peak_tokens: usize,
+    pub kv_budget_tokens: usize,
     /// Engine lifetime (build → report), seconds.
     pub elapsed_s: f64,
 }
@@ -456,6 +552,13 @@ impl ClusterReport {
         self.total_tokens() as f64 / wall.max(1e-9)
     }
 
+    /// Decode throughput: generated tokens over the longest-lived
+    /// replica's wall clock.
+    pub fn decode_tps(&self) -> f64 {
+        let wall = self.replicas.iter().map(|r| r.elapsed_s).fold(0.0f64, f64::max);
+        self.replicas.iter().map(|r| r.generated_tokens).sum::<usize>() as f64 / wall.max(1e-9)
+    }
+
     /// Merge the per-replica reports into the legacy single-engine report
     /// shape: sums for counters, sample-merged percentiles for
     /// distributions, maxima for high-water marks.
@@ -463,14 +566,17 @@ impl ClusterReport {
         let mut latencies = Vec::new();
         let mut queue_waits = Vec::new();
         let mut wave_lat = Vec::new();
+        let mut step_lat = Vec::new();
         for r in &self.replicas {
             latencies.extend_from_slice(&r.latencies);
             queue_waits.extend_from_slice(&r.queue_waits);
             wave_lat.extend_from_slice(&r.wave_latencies);
+            step_lat.extend_from_slice(&r.step_latencies);
         }
         let lat = (!latencies.is_empty()).then(|| Summary::of(&latencies));
         let qw = (!queue_waits.is_empty()).then(|| Summary::of(&queue_waits));
         let wl = (!wave_lat.is_empty()).then(|| Summary::of(&wave_lat));
+        let sl = (!step_lat.is_empty()).then(|| Summary::of(&step_lat));
         let padded: usize = self.replicas.iter().map(|r| r.padded_rows).sum();
         let useful: usize = self.replicas.iter().map(|r| r.useful_rows).sum();
         let wave_padded: usize = self.replicas.iter().map(|r| r.wave_padded_rows).sum();
@@ -514,8 +620,17 @@ impl ClusterReport {
             admitted: self.admission.admitted,
             rejected_queue_full: self.admission.rejected_queue_full,
             rejected_deadline: self.admission.rejected_deadline,
+            rejected_quota: self.admission.rejected_quota,
             cancelled: self.admission.cancelled,
             failed: self.admission.failed,
+            decode_steps: self.replicas.iter().map(|r| r.decode_steps).sum(),
+            prefill_rows: self.replicas.iter().map(|r| r.prefill_rows).sum(),
+            decode_rows: self.replicas.iter().map(|r| r.decode_rows).sum(),
+            generated_tokens: self.replicas.iter().map(|r| r.generated_tokens).sum(),
+            generations: self.replicas.iter().map(|r| r.generations).sum(),
+            decode_tps: self.decode_tps(),
+            p50_step_s: sl.as_ref().map(|s| s.p50).unwrap_or(0.0),
+            kv_peak_tokens: self.replicas.iter().map(|r| r.kv_peak_tokens).max().unwrap_or(0),
             queue_wait_p99_by_priority: self.queue_wait_p99_by_priority(),
             qos_served: {
                 let mut q = [0usize; 3];
@@ -579,10 +694,28 @@ pub struct ServerReport {
     pub rejected_queue_full: usize,
     /// Requests turned away on projected deadline miss.
     pub rejected_deadline: usize,
+    /// Unprivileged requests shed by the class quota (admission fairness).
+    pub rejected_quota: usize,
     /// Admitted requests cancelled before producing a response.
     pub cancelled: usize,
     /// Admitted requests dropped by a failed batch forward (engine error).
     pub failed: usize,
+    /// Mixed prefill/decode steps executed across replicas.
+    pub decode_steps: usize,
+    /// Prompt rows prefilled through the decode loop.
+    pub prefill_rows: usize,
+    /// Single-token decode rows executed.
+    pub decode_rows: usize,
+    /// Tokens generated and streamed to tickets.
+    pub generated_tokens: usize,
+    /// Generations completed (stop-token or length).
+    pub generations: usize,
+    /// Decode throughput: generated tokens / wall-clock, tokens/s.
+    pub decode_tps: f64,
+    /// p50 decode-step wall-clock, seconds (0 when no steps ran).
+    pub p50_step_s: f64,
+    /// KV reservation high-water mark, worst replica (tokens).
+    pub kv_peak_tokens: usize,
     /// Queue-wait p99 per priority level (index = `Priority::index()`).
     pub queue_wait_p99_by_priority: [f64; 3],
     /// Requests served per QoS class (`None` counted as `Standard`).
@@ -713,6 +846,14 @@ mod tests {
             latencies: vec![lat, lat],
             queue_waits: vec![0.001],
             wave_latencies: vec![0.002],
+            decode_steps: 4,
+            prefill_rows: 12,
+            decode_rows: 6,
+            generated_tokens: 8,
+            generations: 2,
+            step_latencies: vec![0.003, 0.004],
+            kv_peak_tokens: 40 + id,
+            kv_budget_tokens: 128,
             elapsed_s: 2.0,
         };
         let report = ClusterReport {
@@ -729,6 +870,7 @@ mod tests {
                 admitted: 7,
                 rejected_queue_full: 2,
                 rejected_deadline: 1,
+                rejected_quota: 1,
                 cancelled: 3,
                 failed: 0,
             },
@@ -767,6 +909,43 @@ mod tests {
         assert!((flat.wave_fill_ratio - 48.0 / 64.0).abs() < 1e-12);
         // percentiles merge samples across replicas, not averages of summaries
         assert!(flat.p50_latency_s >= 0.010 && flat.p50_latency_s <= 0.030);
+        // decode-loop fields: counters sum, kv peak takes the worst
+        // replica, throughput is tokens over the longest wall clock
+        assert_eq!(flat.rejected_quota, 1);
+        assert_eq!((flat.decode_steps, flat.generated_tokens), (8, 16));
+        assert_eq!((flat.prefill_rows, flat.decode_rows), (24, 12));
+        assert_eq!(flat.generations, 4);
+        assert_eq!(flat.kv_peak_tokens, 41);
+        assert!((flat.decode_tps - 16.0 / 2.0).abs() < 1e-9);
+        assert!(flat.p50_step_s >= 0.003 && flat.p50_step_s <= 0.004);
+    }
+
+    #[test]
+    fn decode_step_counters_and_bounded_ring() {
+        let mut m = Metrics::new();
+        assert!(m.step_latency_summary().is_none());
+        m.record_decode_step(6, 0, 1, 0, 0.002);
+        m.record_decode_step(0, 4, 4, 2, 0.001);
+        assert_eq!(m.decode_steps, 2);
+        assert_eq!((m.prefill_rows, m.decode_rows), (6, 4));
+        assert_eq!((m.generated_tokens, m.generations), (5, 2));
+        assert_eq!(m.step_latency_summary().unwrap().n, 2);
+        m.note_kv_occupancy(&KvOccupancy {
+            reserved_tokens: 10,
+            budget_tokens: 100,
+            seqs: 2,
+            peak_tokens: 30,
+        });
+        assert_eq!(
+            (m.kv_reserved_tokens, m.kv_peak_tokens, m.kv_budget_tokens),
+            (10, 30, 100)
+        );
+        // ring caps retained samples; counters still see every step
+        for _ in 0..STEP_LATENCY_WINDOW + 50 {
+            m.record_decode_step(0, 1, 1, 0, 0.001);
+        }
+        assert_eq!(m.step_latency_samples().len(), STEP_LATENCY_WINDOW);
+        assert_eq!(m.decode_steps, 2 + STEP_LATENCY_WINDOW + 50);
     }
 
     #[test]

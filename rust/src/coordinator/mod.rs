@@ -24,7 +24,7 @@ pub use cluster::{
     affinity_score, choose_replica, measured_speeds, scheme_speed, AffinityConfig, Cluster,
     ClusterConfig, OnlineConfig, SchemeSpeeds,
 };
-pub use engine::{uniform_engine, ServingEngine};
+pub use engine::{uniform_engine, ReplanStaging, ServingEngine};
 pub use metrics::{
     ClusterReport, Metrics, ReplanEvent, ReplicaReport, RouterStats, ServerReport,
 };

@@ -25,7 +25,9 @@ use crate::alloc::Allocation;
 use crate::moe::ModelConfig;
 use crate::serve::queue::BatchPolicy;
 pub use crate::serve::queue::{Request, Response};
-pub use crate::serve::request::{Admission, AdmissionConfig, ServeRequest, Ticket};
+pub use crate::serve::request::{
+    Admission, AdmissionConfig, FinishReason, ServeRequest, StreamEvent, Ticket,
+};
 
 use super::cluster::{Cluster, ClusterConfig};
 pub use super::cluster::OnlineConfig;
@@ -133,6 +135,15 @@ impl Server {
     /// ([`Admission::Rejected`] under overload).
     pub fn try_submit(&self, req: ServeRequest) -> Result<Admission> {
         self.cluster.try_submit(req)
+    }
+
+    /// KV-cached generation with token streaming (DESIGN.md §Decode-Loop):
+    /// shorthand for [`submit_request`](Self::submit_request) with
+    /// [`ServeRequest::generate`]. The ticket streams tokens as decode
+    /// steps land ([`Ticket::wait_event`]) and still yields a final
+    /// [`Response`].
+    pub fn generate(&self, prompt: Vec<u32>, max_new_tokens: usize, stop: Vec<u32>) -> Result<Ticket> {
+        self.cluster.generate(prompt, max_new_tokens, stop)
     }
 
     /// Close the queue and collect the final report (the cluster view

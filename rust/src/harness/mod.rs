@@ -64,6 +64,33 @@ pub fn load_model(name: &str) -> Result<(ModelConfig, MoeLm)> {
     Ok((cfg.clone(), MoeLm::load_mxt(&cfg, &weights)?))
 }
 
+/// Seed of the deterministic `ci-mini` checkpoint (`make mini-model`) —
+/// shared by the generator (`mxmoe gen-mini-model`) and anything that
+/// wants to re-derive the same weights in-process.
+pub const MINI_MODEL_SEED: u64 = 0x4D69_6E69; // "Mini"
+
+/// Model-artifact gate for tests that exercise `make models`-shaped paths:
+/// `Some((cfg, model))` when the `ci-mini` checkpoint exists (written by
+/// `make mini-model` — deterministic seeded init, no training), `None` to
+/// self-skip. Under `MXMOE_REQUIRE_MINI_MODEL=1` (CI, after the cached
+/// `make mini-model` step) a missing checkpoint is a hard failure, so the
+/// gated paths must actually run there.
+pub fn require_mini_model() -> Option<(ModelConfig, MoeLm)> {
+    let path = artifacts_dir().join("model_ci-mini.mxt");
+    if !path.exists() {
+        if std::env::var("MXMOE_REQUIRE_MINI_MODEL").map(|v| v == "1").unwrap_or(false) {
+            panic!(
+                "MXMOE_REQUIRE_MINI_MODEL=1 but {path:?} missing — run `make mini-model`"
+            );
+        }
+        return None;
+    }
+    match load_model("ci-mini") {
+        Ok(x) => Some(x),
+        Err(e) => panic!("mini-model checkpoint present but unreadable: {e:#}"),
+    }
+}
+
 pub fn load_corpus() -> Result<Corpus> {
     Corpus::load(&artifacts_dir().join("corpus.mxt")).context("run `make corpus` first")
 }

@@ -1,12 +1,15 @@
 //! mxmoe CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   gen-corpus   write the synthetic corpus MXT (build-time input of the
-//!                JAX trainer; rust is the source of truth for the data)
-//!   allocate     run calibration + sensitivity + the MCKP allocator on a
-//!                trained mini model and dump the Tab.-7-style plan JSON
-//!   serve        pointer to the serving driver example
-//!   info         print model registry + environment
+//!   gen-corpus      write the synthetic corpus MXT (build-time input of
+//!                   the JAX trainer; rust is the source of truth)
+//!   gen-mini-model  write the deterministic `ci-mini` checkpoint (seeded
+//!                   random init, serving-shape experts) so CI exercises
+//!                   `make models`-gated paths without training
+//!   allocate        run calibration + sensitivity + the MCKP allocator on
+//!                   a trained mini model and dump the Tab.-7-style plan
+//!   serve           pointer to the serving driver example
+//!   info            print model registry + environment
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -72,6 +75,7 @@ fn run() -> Result<()> {
     let args = Args::parse()?;
     match args.cmd.as_str() {
         "gen-corpus" => gen_corpus(&args),
+        "gen-mini-model" => gen_mini_model(&args),
         "allocate" => cmd_allocate(&args),
         "serve" => {
             println!("run: cargo run --release --example serve_mixed_precision");
@@ -92,11 +96,41 @@ fn run() -> Result<()> {
                     c.param_count() as f64 / 1e6
                 );
             }
-            println!("\ncommands: gen-corpus | allocate | serve | info");
+            println!("\ncommands: gen-corpus | gen-mini-model | allocate | serve | info");
             Ok(())
         }
         other => bail!("unknown command '{other}' (try: info)"),
     }
+}
+
+/// `make mini-model`: a deterministic tiny `MoeLm` checkpoint (seeded
+/// random init — no training) in the exact MXT layout `make models`
+/// produces, so model-gated tests and examples run in CI. Pure function of
+/// the model registry + RNG + serializer: CI caches the output on a hash
+/// of those sources.
+fn gen_mini_model(args: &Args) -> Result<()> {
+    let name = args.get("model", "ci-mini");
+    let cfg = ModelConfig::by_name(&name)?;
+    let out = PathBuf::from(
+        args.flags
+            .get("out")
+            .cloned()
+            .unwrap_or_else(|| format!("artifacts/model_{name}.mxt")),
+    );
+    let mut rng = mxmoe::util::Rng::new(mxmoe::harness::MINI_MODEL_SEED);
+    let lm = MoeLm::random(&cfg, &mut rng);
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    mxmoe::harness::save_model_mxt(&lm, &out)?;
+    println!(
+        "wrote {} ({} — {:.2}M params, seed {:#x})",
+        out.display(),
+        cfg.name,
+        cfg.param_count() as f64 / 1e6,
+        mxmoe::harness::MINI_MODEL_SEED
+    );
+    Ok(())
 }
 
 fn gen_corpus(args: &Args) -> Result<()> {

@@ -100,6 +100,28 @@ impl ModelConfig {
         }
     }
 
+    /// Deterministic CI fixture: serving-shape expert dims (hidden 128,
+    /// inter 64 — exactly what the AOT export ships) but tiny everywhere
+    /// else, so `make mini-model` writes a loadable checkpoint in
+    /// milliseconds and CI can exercise `make models`-gated paths without
+    /// training. Not part of [`all_minis`](Self::all_minis) — the
+    /// experiment tables stay four-model.
+    pub fn ci_mini() -> ModelConfig {
+        ModelConfig {
+            name: "ci-mini".into(),
+            vocab: 64,
+            hidden: 128,
+            layers: 2,
+            heads: 4,
+            n_experts: 4,
+            n_shared: 1,
+            topk: 2,
+            inter: 64,
+            dense_first: false,
+            seq_len: 32,
+        }
+    }
+
     /// All four evaluation models (Tab. 1 / Tab. 2 order).
     pub fn all_minis() -> Vec<ModelConfig> {
         vec![
@@ -111,12 +133,15 @@ impl ModelConfig {
     }
 
     pub fn by_name(name: &str) -> Result<ModelConfig> {
-        for c in ModelConfig::all_minis() {
+        for c in ModelConfig::all_minis().into_iter().chain([ModelConfig::ci_mini()]) {
             if c.name == name {
                 return Ok(c);
             }
         }
-        bail!("unknown model '{name}' (known: dsv2-mini, qwen15-mini, qwen2-mini, mixtral-mini)")
+        bail!(
+            "unknown model '{name}' \
+             (known: dsv2-mini, qwen15-mini, qwen2-mini, mixtral-mini, ci-mini)"
+        )
     }
 
     pub fn head_dim(&self) -> usize {
@@ -223,6 +248,15 @@ mod tests {
     fn by_name_errors_on_unknown() {
         assert!(ModelConfig::by_name("gpt-5").is_err());
         assert!(ModelConfig::by_name("dsv2-mini").is_ok());
+        assert!(ModelConfig::by_name("ci-mini").is_ok());
+    }
+
+    #[test]
+    fn ci_mini_is_serving_shaped_but_not_an_eval_model() {
+        let c = ModelConfig::ci_mini();
+        assert_eq!((c.hidden, c.inter), (128, 64), "must match the AOT export shapes");
+        assert!(ModelConfig::all_minis().iter().all(|m| m.name != c.name));
+        assert!(c.param_count() < ModelConfig::qwen15_mini().param_count() / 4);
     }
 
     #[test]

@@ -16,6 +16,7 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use crate::ser::mxt::MxtFile;
+use crate::serve::kvcache::SeqKv;
 use crate::tensor::matrix::matmul_nt;
 use crate::tensor::ops::rmsnorm;
 use crate::tensor::{softmax_rows, Matrix};
@@ -52,6 +53,15 @@ pub struct MoeLm {
     pub layers: Vec<Layer>,
     pub ln_f: Vec<f32>,
     pub head: Matrix,
+}
+
+/// One sequence's contribution to an incremental step batch: the new
+/// tokens to process plus its KV cache (whose length is the absolute
+/// position of `tokens[0]`). A decode row is a 1-token step; a prefill
+/// chunk is a many-token step — the scheduler mixes both freely.
+pub struct StepSeq<'a> {
+    pub tokens: &'a [u32],
+    pub cache: &'a mut SeqKv,
 }
 
 /// Captured state at one MoE layer during a forward pass.
@@ -299,6 +309,178 @@ impl MoeLm {
             .collect()
     }
 
+    /// Incremental forward (DESIGN.md §Decode-Loop): process `tokens` at
+    /// absolute positions `cache.len()..`, appending each layer's K/V to
+    /// the cache and attending over the cached prefix. Returns logits for
+    /// the new positions only (`[tokens.len(), vocab]`). Every op on this
+    /// path is row-independent and runs in the same accumulation order as
+    /// the whole-sequence forward, so prefill-then-decode logits are
+    /// bit-identical to [`forward`](Self::forward)/[`forward_capture`](Self::forward_capture)
+    /// of the full token sequence.
+    pub fn forward_step(&self, tokens: &[u32], cache: &mut SeqKv) -> Matrix {
+        self.forward_step_quantized(tokens, cache, &HashMap::new())
+    }
+
+    /// [`forward_step`](Self::forward_step) with some MoE layers replaced
+    /// by quantized blocks — the decode twin of
+    /// [`forward_quantized`](Self::forward_quantized), bit-identical to it
+    /// on the same sequence for any replacement map.
+    pub fn forward_step_quantized(
+        &self,
+        tokens: &[u32],
+        cache: &mut SeqKv,
+        replacements: &HashMap<usize, &QuantizedMoeBlock>,
+    ) -> Matrix {
+        let mut seqs = [StepSeq { tokens, cache }];
+        let mut out = self.forward_step_batch_with_moe(&mut seqs, |l, block, x| {
+            match replacements.get(&l) {
+                Some(q) => q.forward(x),
+                None => block.forward(x),
+            }
+        });
+        out.pop().unwrap()
+    }
+
+    /// Batched incremental forward with a custom MoE executor — the decode
+    /// twin of [`forward_batch_with_moe`](Self::forward_batch_with_moe).
+    /// Attention/norm run natively per sequence against each sequence's KV
+    /// cache, while all sequences' new rows are *concatenated* per MoE
+    /// layer and handed to `moe_exec` — one mixed prefill/decode step
+    /// dispatches a single expert batch per layer, which is what lets the
+    /// decode scheduler fill tiles across sequences. Caches are appended
+    /// and committed before returning.
+    pub fn forward_step_batch_with_moe<F>(&self, seqs: &mut [StepSeq<'_>], mut moe_exec: F) -> Vec<Matrix>
+    where
+        F: FnMut(usize, &MoeBlock, &Matrix) -> Matrix,
+    {
+        let h = self.cfg.hidden;
+        for s in seqs.iter() {
+            assert!(!s.tokens.is_empty(), "empty step");
+            assert_eq!(s.cache.n_layers(), self.layers.len(), "cache/model layer mismatch");
+        }
+        let mut xs: Vec<Matrix> = seqs
+            .iter()
+            .map(|s| {
+                let mut x = Matrix::zeros(s.tokens.len(), h);
+                for (i, &tok) in s.tokens.iter().enumerate() {
+                    x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
+                }
+                x
+            })
+            .collect();
+        for (l, layer) in self.layers.iter().enumerate() {
+            // --- attention over each sequence's cached prefix ---
+            for (x, s) in xs.iter_mut().zip(seqs.iter_mut()) {
+                let xn = rmsnorm(x, &layer.ln1, 1e-6);
+                let att = self.attention_step(&xn, layer, l, s.cache);
+                x.add_scaled(&att, 1.0);
+            }
+            // --- ffn: concatenate all sequences' new rows per dispatch ---
+            match &layer.ffn {
+                Ffn::Dense(d) => {
+                    for x in xs.iter_mut() {
+                        let xn = rmsnorm(x, &layer.ln2, 1e-6);
+                        x.add_scaled(&d.forward(&xn), 1.0);
+                    }
+                }
+                Ffn::Moe(block) => {
+                    let total: usize = xs.iter().map(|x| x.rows).sum();
+                    let mut cat = Matrix::zeros(total, h);
+                    let mut off = 0;
+                    for x in &xs {
+                        let xn = rmsnorm(x, &layer.ln2, 1e-6);
+                        cat.data[off * h..(off + x.rows) * h].copy_from_slice(&xn.data);
+                        off += x.rows;
+                    }
+                    let y = moe_exec(l, block, &cat);
+                    assert_eq!((y.rows, y.cols), (total, h));
+                    let mut off = 0;
+                    for x in xs.iter_mut() {
+                        let rows = x.rows;
+                        for r in 0..rows {
+                            for c in 0..h {
+                                *x.at_mut(r, c) += y.at(off + r, c);
+                            }
+                        }
+                        off += rows;
+                    }
+                }
+            }
+        }
+        // commit the appended positions only after every layer ran, so a
+        // mid-step panic never leaves the cache length torn across layers
+        for s in seqs.iter_mut() {
+            s.cache.advance(s.tokens.len());
+        }
+        xs.into_iter()
+            .map(|x| {
+                let xf = rmsnorm(&x, &self.ln_f, 1e-6);
+                matmul_nt(&xf, &self.head)
+            })
+            .collect()
+    }
+
+    /// Causal attention of one step's new rows over the cached prefix.
+    /// Appends this layer's post-RoPE K (and raw V) rows to the cache, then
+    /// reproduces [`attention`](Self::attention)'s arithmetic exactly —
+    /// same score order, same softmax shape (a `-inf` tail adds exact
+    /// zeros), same accumulation order — so step outputs are bit-identical
+    /// to the whole-sequence rows.
+    fn attention_step(&self, xn: &Matrix, layer: &Layer, l: usize, cache: &mut SeqKv) -> Matrix {
+        let s = xn.rows;
+        let h = self.cfg.hidden;
+        let heads = self.cfg.heads;
+        let hd = self.cfg.head_dim();
+        let p0 = cache.len();
+        let mut q = matmul_nt(xn, &layer.wq);
+        let mut k = matmul_nt(xn, &layer.wk);
+        let v = matmul_nt(xn, &layer.wv);
+        apply_rope_at(&mut q, heads, hd, p0);
+        apply_rope_at(&mut k, heads, hd, p0);
+        cache.append(l, &k, &v);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut ctx = Matrix::zeros(s, h);
+        let mut scores = Vec::new();
+        for head in 0..heads {
+            let off = head * hd;
+            for i in 0..s {
+                let t1 = p0 + i; // absolute position of this new row
+                scores.clear();
+                for t2 in 0..=t1 {
+                    let krow = cache.key_row(l, t2);
+                    let mut sum = 0.0f32;
+                    for d in 0..hd {
+                        sum += q.at(i, off + d) * krow[off + d];
+                    }
+                    scores.push(sum * scale);
+                }
+                // softmax over the causal prefix — bit-identical to
+                // `softmax_rows` over the full row, whose -inf tail
+                // contributes exact zeros to max and sum
+                let m = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let mut z = 0.0f32;
+                for v in scores.iter_mut() {
+                    *v = (*v - m).exp();
+                    z += *v;
+                }
+                let inv = 1.0 / z;
+                for v in scores.iter_mut() {
+                    *v *= inv;
+                }
+                for (t2, &a) in scores.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let vrow = cache.value_row(l, t2);
+                    for d in 0..hd {
+                        *ctx.at_mut(i, off + d) += a * vrow[off + d];
+                    }
+                }
+            }
+        }
+        matmul_nt(&ctx, &layer.wo)
+    }
+
     /// Causal multi-head attention with RoPE.
     fn attention(&self, xn: &Matrix, layer: &Layer) -> Matrix {
         let t = xn.rows;
@@ -348,18 +530,28 @@ impl MoeLm {
 /// Rotary position embedding, θ = 10000, applied per head to pairs
 /// `(2i, 2i+1)` — identical to `python/compile/moe_lm.py::rope`.
 pub fn apply_rope(x: &mut Matrix, heads: usize, head_dim: usize) {
+    apply_rope_at(x, heads, head_dim, 0)
+}
+
+/// [`apply_rope`] with row `i` rotated for *absolute* position
+/// `start_pos + i` — the decode path's entry point, where a step's rows
+/// sit at the end of an already-cached prefix. `apply_rope` is the
+/// `start_pos = 0` case, so the angle arithmetic is shared (and therefore
+/// bit-identical) between the whole-sequence and incremental paths.
+pub fn apply_rope_at(x: &mut Matrix, heads: usize, head_dim: usize, start_pos: usize) {
     let t = x.rows;
-    for pos in 0..t {
-        let row = x.row_mut(pos);
+    for i in 0..t {
+        let pos = start_pos + i;
+        let row = x.row_mut(i);
         for head in 0..heads {
             let off = head * head_dim;
-            for i in 0..head_dim / 2 {
-                let theta = (pos as f32) / 10000f32.powf(2.0 * i as f32 / head_dim as f32);
+            for j in 0..head_dim / 2 {
+                let theta = (pos as f32) / 10000f32.powf(2.0 * j as f32 / head_dim as f32);
                 let (sin, cos) = theta.sin_cos();
-                let a = row[off + 2 * i];
-                let b = row[off + 2 * i + 1];
-                row[off + 2 * i] = a * cos - b * sin;
-                row[off + 2 * i + 1] = a * sin + b * cos;
+                let a = row[off + 2 * j];
+                let b = row[off + 2 * j + 1];
+                row[off + 2 * j] = a * cos - b * sin;
+                row[off + 2 * j + 1] = a * sin + b * cos;
             }
         }
     }
@@ -454,6 +646,186 @@ mod tests {
             let n1: f32 = orig.row(r).iter().map(|v| v * v).sum();
             let n2: f32 = x.row(r).iter().map(|v| v * v).sum();
             assert!((n1 - n2).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn forward_step_bit_identical_to_whole_sequence() {
+        // prefill-then-decode must reproduce forward() bit for bit: prefill
+        // the first 7 tokens in one step, then decode the rest one by one
+        let mut rng = Rng::new(110);
+        let cfg = tiny_cfg();
+        let lm = MoeLm::random(&cfg, &mut rng);
+        let tokens: Vec<u32> = (0..12).map(|_| rng.below(32) as u32).collect();
+        let full = lm.forward(&tokens);
+        let mut cache = SeqKv::new(cfg.layers, cfg.hidden, tokens.len());
+        let prefill = lm.forward_step(&tokens[..7], &mut cache);
+        assert_eq!(cache.len(), 7);
+        assert_eq!((prefill.rows, prefill.cols), (7, cfg.vocab));
+        for pos in 0..7 {
+            for c in 0..cfg.vocab {
+                assert_eq!(
+                    prefill.at(pos, c).to_bits(),
+                    full.at(pos, c).to_bits(),
+                    "prefill logits diverged at ({pos}, {c})"
+                );
+            }
+        }
+        for pos in 7..tokens.len() {
+            let step = lm.forward_step(&tokens[pos..pos + 1], &mut cache);
+            assert_eq!(step.rows, 1);
+            for c in 0..cfg.vocab {
+                assert_eq!(
+                    step.at(0, c).to_bits(),
+                    full.at(pos, c).to_bits(),
+                    "decode logits diverged at ({pos}, {c})"
+                );
+            }
+        }
+        assert_eq!(cache.len(), tokens.len());
+    }
+
+    #[test]
+    fn forward_step_chunked_prefill_matches_any_split() {
+        // the scheduler may chunk a prompt arbitrarily; every split must
+        // land on the same bits
+        let mut rng = Rng::new(111);
+        let cfg = tiny_cfg();
+        let lm = MoeLm::random(&cfg, &mut rng);
+        let tokens: Vec<u32> = (0..10).map(|_| rng.below(32) as u32).collect();
+        let full = lm.forward(&tokens);
+        for split in [1usize, 3, 5, 9] {
+            let mut cache = SeqKv::new(cfg.layers, cfg.hidden, tokens.len());
+            let a = lm.forward_step(&tokens[..split], &mut cache);
+            let b = lm.forward_step(&tokens[split..], &mut cache);
+            for pos in 0..tokens.len() {
+                let (m, r) = if pos < split { (&a, pos) } else { (&b, pos - split) };
+                for c in 0..cfg.vocab {
+                    assert_eq!(
+                        m.at(r, c).to_bits(),
+                        full.at(pos, c).to_bits(),
+                        "split {split}: logits diverged at ({pos}, {c})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_step_dense_first_layer() {
+        let mut cfg = tiny_cfg();
+        cfg.dense_first = true;
+        let mut rng = Rng::new(112);
+        let lm = MoeLm::random(&cfg, &mut rng);
+        let tokens: Vec<u32> = (0..6).map(|_| rng.below(32) as u32).collect();
+        let full = lm.forward(&tokens);
+        let mut cache = SeqKv::new(cfg.layers, cfg.hidden, tokens.len());
+        let mut got = Vec::new();
+        for pos in 0..tokens.len() {
+            let step = lm.forward_step(&tokens[pos..pos + 1], &mut cache);
+            got.push(step);
+        }
+        for (pos, step) in got.iter().enumerate() {
+            for c in 0..cfg.vocab {
+                assert_eq!(step.at(0, c).to_bits(), full.at(pos, c).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn forward_step_batch_concatenates_moe_rows() {
+        // two sequences stepped together must match each stepped alone —
+        // the MoE hook sees concatenated rows but the math is per-row
+        let mut rng = Rng::new(113);
+        let cfg = tiny_cfg();
+        let lm = MoeLm::random(&cfg, &mut rng);
+        let s1: Vec<u32> = (0..5).map(|_| rng.below(32) as u32).collect();
+        let s2: Vec<u32> = (0..8).map(|_| rng.below(32) as u32).collect();
+        let f1 = lm.forward(&s1);
+        let f2 = lm.forward(&s2);
+        let mut c1 = SeqKv::new(cfg.layers, cfg.hidden, s1.len());
+        let mut c2 = SeqKv::new(cfg.layers, cfg.hidden, s2.len());
+        let mut seqs = [
+            StepSeq { tokens: &s1, cache: &mut c1 },
+            StepSeq { tokens: &s2, cache: &mut c2 },
+        ];
+        let mut hook_rows = Vec::new();
+        let out = lm.forward_step_batch_with_moe(&mut seqs, |_, block, x| {
+            hook_rows.push(x.rows);
+            block.forward(x)
+        });
+        assert!(hook_rows.iter().all(|&r| r == s1.len() + s2.len()), "{hook_rows:?}");
+        for (m, f) in out.iter().zip([&f1, &f2]) {
+            for (a, b) in m.data.iter().zip(&f.data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn forward_step_quantized_matches_forward_quantized() {
+        use crate::moe::block::{uniform_schemes, QuantizedMoeBlock, WeightQuantizer};
+        use crate::quant::QuantScheme;
+        let mut rng = Rng::new(114);
+        let cfg = tiny_cfg();
+        let lm = MoeLm::random(&cfg, &mut rng);
+        let tokens: Vec<u32> = (0..9).map(|_| rng.below(32) as u32).collect();
+        // mixed plan: layer 0 w4a4-ish, layer 1 w8a8-ish fake quant
+        let blocks: Vec<QuantizedMoeBlock> = lm
+            .moe_blocks()
+            .iter()
+            .enumerate()
+            .map(|(pos, (_, b))| {
+                let scheme = if pos == 0 { QuantScheme::W4A4 } else { QuantScheme::W8A8 };
+                QuantizedMoeBlock::build(
+                    b,
+                    &uniform_schemes(b.total_experts(), scheme),
+                    &WeightQuantizer::Rtn,
+                    None,
+                )
+                .unwrap()
+            })
+            .collect();
+        let replacements: HashMap<usize, &QuantizedMoeBlock> = lm
+            .moe_blocks()
+            .iter()
+            .map(|(l, _)| *l)
+            .zip(blocks.iter())
+            .collect();
+        let full = lm.forward_quantized(&tokens, &replacements);
+        let mut cache = SeqKv::new(cfg.layers, cfg.hidden, tokens.len());
+        let prefill = lm.forward_step_quantized(&tokens[..4], &mut cache, &replacements);
+        for pos in 0..4 {
+            for c in 0..cfg.vocab {
+                assert_eq!(prefill.at(pos, c).to_bits(), full.at(pos, c).to_bits());
+            }
+        }
+        for pos in 4..tokens.len() {
+            let step = lm.forward_step_quantized(&tokens[pos..pos + 1], &mut cache, &replacements);
+            for c in 0..cfg.vocab {
+                assert_eq!(
+                    step.at(0, c).to_bits(),
+                    full.at(pos, c).to_bits(),
+                    "quantized decode diverged at ({pos}, {c})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rope_at_absolute_positions_matches_row_index() {
+        let mut rng = Rng::new(115);
+        let full = Matrix::randn(6, 16, 1.0, &mut rng);
+        // rotating rows 4..6 with start_pos 4 must equal rows 4..6 of the
+        // full rotation
+        let mut a = full.clone();
+        apply_rope(&mut a, 2, 8);
+        let mut tail = full.gather_rows(&[4, 5]);
+        apply_rope_at(&mut tail, 2, 8, 4);
+        for i in 0..2 {
+            for c in 0..16 {
+                assert_eq!(tail.at(i, c).to_bits(), a.at(4 + i, c).to_bits());
+            }
         }
     }
 

@@ -15,5 +15,5 @@ pub mod router;
 pub use block::{LinearKind, MoeBlock, QuantizedMoeBlock};
 pub use config::ModelConfig;
 pub use expert::ExpertWeights;
-pub use lm::MoeLm;
+pub use lm::{MoeLm, StepSeq};
 pub use router::{route, Routing};

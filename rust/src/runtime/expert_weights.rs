@@ -17,6 +17,79 @@ pub struct PreparedExpert {
     pub literals: Vec<xla::Literal>,
 }
 
+/// One literal-to-be, as plain host data. `Send`, unlike `xla::Literal`.
+pub enum QuantPayload {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I8 { dims: Vec<usize>, data: Vec<i8> },
+    U8 { dims: Vec<usize>, data: Vec<u8> },
+}
+
+/// The quantized layout of one expert *before* literal creation: plain
+/// `Send` data, so the expensive re-quantization of a hot-swap can run on
+/// a staging worker thread while the engine keeps serving. The engine
+/// thread turns it into a [`PreparedExpert`] with
+/// [`into_prepared`](Self::into_prepared) — literal creation is a bulk
+/// memcpy, cheap enough for the serving thread.
+pub struct QuantizedExpertData {
+    pub scheme: RuntimeScheme,
+    payloads: Vec<QuantPayload>,
+}
+
+impl QuantizedExpertData {
+    /// Quantize + lay out one expert for `scheme` (the CPU-heavy half of
+    /// [`PreparedExpert::prepare`], with no PJRT types involved). Payload
+    /// order matches `python/compile/model.py::example_args` after `x`.
+    pub fn quantize(e: &ExpertWeights, scheme: RuntimeScheme) -> Result<QuantizedExpertData> {
+        let mut payloads = Vec::new();
+        match scheme {
+            RuntimeScheme::Fp16 => {
+                for w in [&e.gate, &e.up, &e.down] {
+                    payloads.push(QuantPayload::F32 {
+                        dims: vec![w.rows, w.cols],
+                        data: w.data.clone(),
+                    });
+                }
+            }
+            RuntimeScheme::W4A16 => {
+                for w in [&e.gate, &e.up, &e.down] {
+                    let (packed, scales, zeros) = asym_pack(w, 4)?;
+                    payloads.push(QuantPayload::U8 {
+                        dims: vec![w.rows, w.cols / 2],
+                        data: packed,
+                    });
+                    payloads.push(QuantPayload::F32 { dims: vec![w.rows, 1], data: scales });
+                    payloads.push(QuantPayload::F32 { dims: vec![w.rows, 1], data: zeros });
+                }
+            }
+            RuntimeScheme::W8A8 | RuntimeScheme::W4A4 => {
+                let bits = if scheme == RuntimeScheme::W8A8 { 8 } else { 4 };
+                for w in [&e.gate, &e.up, &e.down] {
+                    let (codes, scales) = sym_codes(w, bits);
+                    payloads.push(QuantPayload::I8 {
+                        dims: vec![w.rows, w.cols],
+                        data: codes,
+                    });
+                    payloads.push(QuantPayload::F32 { dims: vec![w.rows, 1], data: scales });
+                }
+            }
+        }
+        Ok(QuantizedExpertData { scheme, payloads })
+    }
+
+    /// Materialize the PJRT literals (engine-thread half of a prepare).
+    pub fn into_prepared(self) -> Result<PreparedExpert> {
+        let mut literals = Vec::with_capacity(self.payloads.len());
+        for p in self.payloads {
+            literals.push(match p {
+                QuantPayload::F32 { dims, data } => lit_f32(&dims, &data)?,
+                QuantPayload::I8 { dims, data } => lit_i8(&dims, &data)?,
+                QuantPayload::U8 { dims, data } => lit_u8(&dims, &data)?,
+            });
+        }
+        Ok(PreparedExpert { scheme: self.scheme, literals })
+    }
+}
+
 /// Per-channel asymmetric quantization of `[n, k]` → (packed u8, scales, zeros)
 /// matching `ref.quantize_asym_grouped(w, bits, -1)` + `ref.pack_codes`.
 fn asym_pack(w: &Matrix, bits: u8) -> Result<(Vec<u8>, Vec<f32>, Vec<f32>)> {
@@ -49,34 +122,12 @@ fn sym_codes(w: &Matrix, bits: u8) -> (Vec<i8>, Vec<f32>) {
 }
 
 impl PreparedExpert {
-    /// Quantize + lay out one expert for `scheme`. Literal order matches
-    /// `python/compile/model.py::example_args` (everything after `x`).
+    /// Quantize + lay out one expert for `scheme`: the staging half
+    /// ([`QuantizedExpertData::quantize`]) followed by literal creation.
+    /// Literal order matches `python/compile/model.py::example_args`
+    /// (everything after `x`).
     pub fn prepare(e: &ExpertWeights, scheme: RuntimeScheme) -> Result<PreparedExpert> {
-        let mut literals = Vec::new();
-        match scheme {
-            RuntimeScheme::Fp16 => {
-                for w in [&e.gate, &e.up, &e.down] {
-                    literals.push(lit_f32(&[w.rows, w.cols], &w.data)?);
-                }
-            }
-            RuntimeScheme::W4A16 => {
-                for w in [&e.gate, &e.up, &e.down] {
-                    let (packed, scales, zeros) = asym_pack(w, 4)?;
-                    literals.push(lit_u8(&[w.rows, w.cols / 2], &packed)?);
-                    literals.push(lit_f32(&[w.rows, 1], &scales)?);
-                    literals.push(lit_f32(&[w.rows, 1], &zeros)?);
-                }
-            }
-            RuntimeScheme::W8A8 | RuntimeScheme::W4A4 => {
-                let bits = if scheme == RuntimeScheme::W8A8 { 8 } else { 4 };
-                for w in [&e.gate, &e.up, &e.down] {
-                    let (codes, scales) = sym_codes(w, bits);
-                    literals.push(lit_i8(&[w.rows, w.cols], &codes)?);
-                    literals.push(lit_f32(&[w.rows, 1], &scales)?);
-                }
-            }
-        }
-        Ok(PreparedExpert { scheme, literals })
+        QuantizedExpertData::quantize(e, scheme)?.into_prepared()
     }
 
     /// Native fake-quant twin of this preparation: what the executable
@@ -134,5 +185,34 @@ mod tests {
         let w = Matrix::randn(4, 16, 2.0, &mut rng);
         let (codes, _) = sym_codes(&w, 4);
         assert!(codes.iter().all(|&c| (-8..=7).contains(&c)));
+    }
+
+    #[test]
+    fn quantized_expert_data_is_send_and_shapes_match_literal_order() {
+        fn assert_send<T: Send>() {}
+        assert_send::<QuantizedExpertData>();
+        let mut rng = Rng::new(172);
+        let e = ExpertWeights::random(32, 16, &mut rng);
+        // fp16: 3 payloads (gate/up/down); w4a16: 9 (packed+scales+zeros
+        // ×3); w8a8/w4a4: 6 (codes+scales ×3)
+        for (scheme, n) in [
+            (RuntimeScheme::Fp16, 3),
+            (RuntimeScheme::W4A16, 9),
+            (RuntimeScheme::W8A8, 6),
+            (RuntimeScheme::W4A4, 6),
+        ] {
+            let q = QuantizedExpertData::quantize(&e, scheme).unwrap();
+            assert_eq!(q.scheme, scheme);
+            assert_eq!(q.payloads.len(), n, "{scheme:?}");
+        }
+        // fp16 payloads carry the raw weights verbatim
+        let q = QuantizedExpertData::quantize(&e, RuntimeScheme::Fp16).unwrap();
+        match &q.payloads[0] {
+            QuantPayload::F32 { dims, data } => {
+                assert_eq!(dims, &vec![16, 32]);
+                assert_eq!(data, &e.gate.data);
+            }
+            _ => panic!("fp16 gate payload must be f32"),
+        }
     }
 }

@@ -9,7 +9,7 @@ pub mod dispatch;
 pub mod expert_weights;
 
 pub use dispatch::{DispatchMode, DispatchPlan, ExpertWork, Wave, WaveReport, WaveStats, WorkItem};
-pub use expert_weights::PreparedExpert;
+pub use expert_weights::{PreparedExpert, QuantPayload, QuantizedExpertData};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

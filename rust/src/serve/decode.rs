@@ -1,0 +1,825 @@
+//! Token-level decode scheduler: per-step continuous batching over KV-cached
+//! generations (DESIGN.md §Decode-Loop).
+//!
+//! The serve loop used to batch whole-sequence scoring requests; decode-time
+//! activation skew — the regime where MoE expert imbalance is most extreme —
+//! never reached the batcher or the telemetry. This module closes that gap:
+//! a replica owns one `DecodeScheduler`, and between queue pops it runs the
+//! loop at *token* granularity. Each step:
+//!
+//! ```text
+//!   reap cancelled (evict seq, free KV)        ── step-granular cancellation
+//!   promote pending → active (KV reservation)  ── admission, FIFO
+//!   assemble: 1 decode row per decoding seq
+//!           + FIFO prefill chunks, cut against the tile grid
+//!             via dispatch::fill_estimate      ── the tile-budget cut
+//!   exec: one mixed batch through the engine   ── expert rows concatenated
+//!   emit: greedy token per sequence → stream   ── tokens land immediately
+//!   retire: stop-token / max-token / failure   ── KV freed between steps
+//! ```
+//!
+//! Because one step mixes prefill chunks and single-token decode rows from
+//! many sequences, the per-layer MoE dispatch sees a concatenated batch and
+//! fills tiles across sequences — a lone decode row costs a padded 4-tile,
+//! eight decoding sequences cost two dense ones. Per-step expert routing
+//! flows into the activation telemetry through the engine hook, so the
+//! online replanner finally sees decode-time frequencies.
+//!
+//! The scheduler is engine-agnostic: [`step`](DecodeScheduler::step) takes
+//! the forward as a closure over [`StepSeq`] batches, so everything here
+//! unit-tests against the native model without a PJRT runtime.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::moe::{ModelConfig, StepSeq};
+use crate::runtime::dispatch::{self, FillEstimate};
+use crate::runtime::TILE_MS;
+use crate::tensor::Matrix;
+
+use super::kvcache::{KvCache, KvOccupancy, SeqKv};
+use super::queue::{GenSpec, Request, RequestKind};
+use super::request::{FinishReason, StreamEvent};
+
+/// Decode-loop sizing knobs (per replica).
+#[derive(Clone, Copy, Debug)]
+pub struct DecodePolicy {
+    /// Row budget per step: decode rows plus prefill-chunk rows. Default:
+    /// the largest exported tile, mirroring the batcher's token budget.
+    pub max_step_rows: usize,
+    /// Sequences in the step loop at once; the rest wait in admission
+    /// order.
+    pub max_active_seqs: usize,
+    /// KV reservation budget (tokens) — a sequence reserves
+    /// `prompt + max_new_tokens` up front, so admission is the only
+    /// backpressure point and a running generation never stalls on cache
+    /// room.
+    pub kv_budget_tokens: usize,
+}
+
+impl Default for DecodePolicy {
+    fn default() -> Self {
+        DecodePolicy {
+            max_step_rows: *TILE_MS.last().unwrap(),
+            max_active_seqs: 16,
+            kv_budget_tokens: 1 << 16,
+        }
+    }
+}
+
+/// Cumulative decode-loop counters (published to the status board and the
+/// final replica report).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecodeStats {
+    /// Mixed steps executed (≥ 1 row each).
+    pub steps: usize,
+    /// Prompt rows prefilled.
+    pub prefill_rows: usize,
+    /// Single-token decode rows executed.
+    pub decode_rows: usize,
+    /// Tokens emitted to ticket streams.
+    pub generated_tokens: usize,
+    /// Generations finished by stop-token or length.
+    pub generations: usize,
+    /// Generations evicted by cancellation (pending or active).
+    pub cancelled: usize,
+    /// Generations dropped by a failed engine step.
+    pub failed: usize,
+}
+
+/// A generation that completed this step (stop-token or length). The
+/// replica turns it into the final [`super::queue::Response`] — unless the
+/// request was cancelled at the very last moment, in which case the reply
+/// is suppressed exactly like a scoring request's.
+pub struct FinishedGen {
+    pub request: Request,
+    pub reason: FinishReason,
+    /// Tokens generated (also the count streamed to the ticket).
+    pub generated: usize,
+    /// Last generated token — for `max_new_tokens == 0`, the argmax
+    /// continuation of the prompt (never streamed), so the final
+    /// [`super::queue::Response`] matches the scoring path exactly.
+    pub last_token: Option<u32>,
+    /// Teacher-forced mean next-token NLL over the prompt — the scoring
+    /// semantics, so a `max_new_tokens == 0` generation degrades to
+    /// exactly a scoring request.
+    pub mean_prompt_nll: f64,
+    /// Admission → first prefill row.
+    pub queue_wait: Duration,
+}
+
+/// What one [`DecodeScheduler::step`] call did.
+#[derive(Default)]
+pub struct StepOutcome {
+    /// Useful rows fed this step (0 = the scheduler was idle).
+    pub rows: usize,
+    pub prefill_rows: usize,
+    pub decode_rows: usize,
+    /// Tokens emitted to streams this step.
+    pub tokens_emitted: usize,
+    /// Planner fill estimate of the assembled step.
+    pub fill: Option<FillEstimate>,
+    /// Generations that finished (stop-token / length).
+    pub finished: Vec<FinishedGen>,
+    /// Generations reaped by cancellation between steps — KV freed, no
+    /// response will ever be sent.
+    pub cancelled: Vec<Request>,
+    /// Generations dropped because the engine step failed — no response.
+    pub failed: Vec<Request>,
+}
+
+enum Phase {
+    Prefill,
+    Decoding,
+}
+
+struct ActiveSeq {
+    req: Request,
+    kv: SeqKv,
+    /// Prompt rows prefilled so far.
+    consumed: usize,
+    generated: Vec<u32>,
+    /// Σ teacher-forced next-token NLL over prefilled prompt positions.
+    nll_sum: f64,
+    /// Argmax continuation of the prompt when `max_new_tokens == 0`
+    /// (scoring parity for the final response; never streamed).
+    final_argmax: Option<u32>,
+    first_step_at: Option<Instant>,
+    done: Option<FinishReason>,
+}
+
+impl ActiveSeq {
+    fn spec(&self) -> &GenSpec {
+        match &self.req.kind {
+            RequestKind::Generate(s) => s,
+            RequestKind::Score => unreachable!("decode scheduler only holds generations"),
+        }
+    }
+
+    fn phase(&self) -> Phase {
+        if self.consumed < self.req.tokens.len() {
+            Phase::Prefill
+        } else {
+            Phase::Decoding
+        }
+    }
+}
+
+/// Largest `take ≤ want` whose step total `rows + take` decomposes into
+/// whole exported tiles (zero projected padding), falling back to `want`
+/// when no aligned total exists. Padding in the tile grid is always
+/// `< TILE_MS[0]` rows, so the scan is a handful of iterations.
+fn trim_to_tiles(rows: usize, want: usize) -> usize {
+    let mut t = want;
+    while t > 1 && dispatch::fill_estimate(rows + t).padded_rows > rows + t {
+        t -= 1;
+    }
+    if dispatch::fill_estimate(rows + t).padded_rows > rows + t {
+        want
+    } else {
+        t
+    }
+}
+
+/// Greedy next token — the same strict-`>` argmax the scoring path uses.
+fn argmax(row: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for i in 1..row.len() {
+        if row[i] > row[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Per-replica token-level generation scheduler. Owns the KV pool, the
+/// pending/active sequence sets, and the step assembly policy; the engine
+/// stays outside (injected per step), which keeps this engine-agnostic and
+/// unit-testable without artifacts.
+pub struct DecodeScheduler {
+    policy: DecodePolicy,
+    pool: KvCache,
+    pending: VecDeque<Request>,
+    active: Vec<ActiveSeq>,
+    stats: DecodeStats,
+}
+
+impl DecodeScheduler {
+    pub fn new(cfg: &ModelConfig, policy: DecodePolicy) -> DecodeScheduler {
+        DecodeScheduler {
+            pool: KvCache::new(cfg.layers, cfg.hidden, policy.kv_budget_tokens.max(1)),
+            policy,
+            pending: VecDeque::new(),
+            active: Vec::new(),
+            stats: DecodeStats::default(),
+        }
+    }
+
+    /// Take ownership of a routed generation request (pending until a KV
+    /// reservation and an active slot free up, FIFO).
+    pub fn admit(&mut self, req: Request) {
+        debug_assert!(req.kind.is_generate(), "decode scheduler only takes generations");
+        self.pending.push_back(req);
+    }
+
+    /// True while any generation is pending or mid-decode — the replica
+    /// must keep stepping (and must not block on its work deque).
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || !self.active.is_empty()
+    }
+
+    /// Pending + active generations — the replica's decode contribution to
+    /// the router's load signal.
+    pub fn load(&self) -> usize {
+        self.pending.len() + self.active.len()
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn pending_seqs(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn occupancy(&self) -> KvOccupancy {
+        self.pool.occupancy()
+    }
+
+    pub fn stats(&self) -> DecodeStats {
+        self.stats
+    }
+
+    /// Run one decode step: reap cancellations, admit pending sequences up
+    /// to the KV budget, assemble the mixed prefill/decode batch cut
+    /// against the tile grid, execute it through `exec`, stream the new
+    /// tokens, and retire finished sequences. An engine failure fails only
+    /// the sequences that were in the step (reported in
+    /// [`StepOutcome::failed`]); the scheduler itself keeps serving.
+    pub fn step<E>(&mut self, mut exec: E) -> StepOutcome
+    where
+        E: FnMut(&mut [StepSeq<'_>]) -> anyhow::Result<Vec<Matrix>>,
+    {
+        let mut out = StepOutcome::default();
+        self.reap_cancelled(&mut out);
+        self.promote_pending();
+        if self.active.is_empty() {
+            return out;
+        }
+
+        // ---- assemble: decode rows first (every decoding sequence
+        // advances one token per step), then FIFO prefill chunks ----
+        let budget = self.policy.max_step_rows.max(1);
+        let mut step_tokens = vec![0usize; self.active.len()];
+        let mut rows = 0usize;
+        for (ai, a) in self.active.iter().enumerate() {
+            if matches!(a.phase(), Phase::Decoding) && rows < budget {
+                step_tokens[ai] = 1;
+                rows += 1;
+            }
+        }
+        for (ai, a) in self.active.iter().enumerate() {
+            if !matches!(a.phase(), Phase::Prefill) || rows >= budget {
+                continue;
+            }
+            let remaining = a.req.tokens.len() - a.consumed;
+            let mut take = remaining.min(budget - rows);
+            if take < remaining {
+                // the chunk doesn't finish the prompt: align the step
+                // total to a tile boundary so the ragged tail isn't paid
+                // on this step *and* re-paid when the remainder runs
+                take = trim_to_tiles(rows, take);
+            }
+            if take == 0 {
+                continue;
+            }
+            step_tokens[ai] = take;
+            rows += take;
+        }
+        if rows == 0 {
+            return out;
+        }
+        out.fill = Some(dispatch::fill_estimate(rows));
+
+        // ---- execute the mixed step ----
+        let now = Instant::now();
+        let mut inputs: Vec<StepSeq<'_>> = Vec::with_capacity(self.active.len());
+        let mut input_seq: Vec<usize> = Vec::with_capacity(self.active.len());
+        for (ai, a) in self.active.iter_mut().enumerate() {
+            let n = step_tokens[ai];
+            if n == 0 {
+                continue;
+            }
+            if a.first_step_at.is_none() {
+                a.first_step_at = Some(now);
+            }
+            let tokens: &[u32] = if a.consumed < a.req.tokens.len() {
+                &a.req.tokens[a.consumed..a.consumed + n]
+            } else {
+                debug_assert_eq!(n, 1);
+                &a.generated[a.generated.len() - 1..]
+            };
+            inputs.push(StepSeq { tokens, cache: &mut a.kv });
+            input_seq.push(ai);
+        }
+        let result = exec(&mut inputs);
+        drop(inputs);
+        match result {
+            Ok(outs) => {
+                debug_assert_eq!(outs.len(), input_seq.len());
+                for (k, &ai) in input_seq.iter().enumerate() {
+                    self.postprocess(ai, step_tokens[ai], &outs[k], &mut out);
+                }
+                out.rows = rows;
+                self.stats.steps += 1;
+                self.stats.prefill_rows += out.prefill_rows;
+                self.stats.decode_rows += out.decode_rows;
+                self.stats.generated_tokens += out.tokens_emitted;
+            }
+            Err(e) => {
+                eprintln!(
+                    "decode step failed ({} sequence(s) dropped): {e:#}",
+                    input_seq.len()
+                );
+                for &ai in &input_seq {
+                    self.active[ai].done = Some(FinishReason::Failed);
+                }
+            }
+        }
+        self.retire(&mut out);
+        out
+    }
+
+    /// Fold one sequence's step logits back into its state: prompt NLL and
+    /// advancement for prefill rows, a greedy token (streamed immediately)
+    /// for the decode row — the final prompt row doubles as the first
+    /// decode row, so the first token lands with the prefill step.
+    fn postprocess(&mut self, ai: usize, n: usize, logits: &Matrix, out: &mut StepOutcome) {
+        let a = &mut self.active[ai];
+        let prompt_len = a.req.tokens.len();
+        if a.consumed < prompt_len {
+            debug_assert_eq!(logits.rows, n);
+            for r in 0..n {
+                let pos = a.consumed + r;
+                if pos + 1 < prompt_len {
+                    let row = logits.row(r);
+                    let m = row.iter().fold(f32::NEG_INFINITY, |acc, &b| acc.max(b)) as f64;
+                    let z: f64 = row.iter().map(|&v| ((v as f64) - m).exp()).sum();
+                    a.nll_sum -=
+                        (logits.at(r, a.req.tokens[pos + 1] as usize) as f64 - m) - z.ln();
+                }
+            }
+            a.consumed += n;
+            out.prefill_rows += n;
+            if a.consumed == prompt_len {
+                // the final prompt row doubles as the first decode row
+                let g = argmax(logits.row(n - 1));
+                if a.spec().max_new_tokens == 0 {
+                    // degenerate generation: scoring semantics — keep the
+                    // argmax for the final response, stream nothing
+                    a.final_argmax = Some(g);
+                    a.done = Some(FinishReason::Length);
+                } else {
+                    emit(a, g, out);
+                }
+            }
+        } else {
+            debug_assert_eq!(n, 1);
+            debug_assert_eq!(logits.rows, 1);
+            out.decode_rows += 1;
+            let g = argmax(logits.row(0));
+            emit(a, g, out);
+        }
+    }
+
+    /// Evict cancelled generations: pending ones before any KV was
+    /// reserved, active ones between steps with their KV reservation
+    /// freed — the token-level cancellation the batch-granular path could
+    /// not offer. Streams get a terminal `Done { Cancelled }` (suppressed
+    /// by the cancelled ticket, but it closes the channel deliberately).
+    fn reap_cancelled(&mut self, out: &mut StepOutcome) {
+        let mut kept = VecDeque::with_capacity(self.pending.len());
+        while let Some(r) = self.pending.pop_front() {
+            if r.is_cancelled() {
+                if let RequestKind::Generate(spec) = &r.kind {
+                    let _ = spec.stream.send(StreamEvent::Done {
+                        reason: FinishReason::Cancelled,
+                        generated: 0,
+                    });
+                }
+                self.stats.cancelled += 1;
+                out.cancelled.push(r);
+            } else {
+                kept.push_back(r);
+            }
+        }
+        self.pending = kept;
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].req.is_cancelled() {
+                let ActiveSeq { req, kv, generated, .. } = self.active.remove(i);
+                self.pool.free(kv);
+                if let RequestKind::Generate(spec) = &req.kind {
+                    let _ = spec.stream.send(StreamEvent::Done {
+                        reason: FinishReason::Cancelled,
+                        generated: generated.len(),
+                    });
+                }
+                self.stats.cancelled += 1;
+                out.cancelled.push(req);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Move pending generations into the step loop while an active slot
+    /// and a KV reservation (`prompt + max_new_tokens`) are available.
+    /// FIFO with head-of-line blocking: admission order is the fairness
+    /// guarantee, and the pool's oversized-when-empty rule ensures even a
+    /// reservation larger than the whole budget eventually runs.
+    fn promote_pending(&mut self) {
+        while self.active.len() < self.policy.max_active_seqs.max(1) {
+            let Some(front) = self.pending.front() else { break };
+            let max_new = match &front.kind {
+                RequestKind::Generate(s) => s.max_new_tokens,
+                RequestKind::Score => 0,
+            };
+            let capacity = (front.tokens.len() + max_new).max(1);
+            let Some(kv) = self.pool.alloc(capacity) else { break };
+            let req = self.pending.pop_front().unwrap();
+            self.active.push(ActiveSeq {
+                req,
+                kv,
+                consumed: 0,
+                generated: Vec::new(),
+                nll_sum: 0.0,
+                final_argmax: None,
+                first_step_at: None,
+                done: None,
+            });
+        }
+    }
+
+    /// Remove sequences whose terminal state was set this step, free their
+    /// KV reservations, and send the terminal stream event.
+    fn retire(&mut self, out: &mut StepOutcome) {
+        let mut i = 0;
+        while i < self.active.len() {
+            let Some(reason) = self.active[i].done else {
+                i += 1;
+                continue;
+            };
+            let ActiveSeq { req, kv, generated, nll_sum, final_argmax, first_step_at, .. } =
+                self.active.remove(i);
+            self.pool.free(kv);
+            if let RequestKind::Generate(spec) = &req.kind {
+                let _ = spec
+                    .stream
+                    .send(StreamEvent::Done { reason, generated: generated.len() });
+            }
+            match reason {
+                FinishReason::Failed => {
+                    self.stats.failed += 1;
+                    out.failed.push(req);
+                }
+                FinishReason::Cancelled => {
+                    unreachable!("cancellations are reaped before the step")
+                }
+                FinishReason::Stop | FinishReason::Length => {
+                    self.stats.generations += 1;
+                    out.finished.push(FinishedGen {
+                        reason,
+                        generated: generated.len(),
+                        last_token: generated.last().copied().or(final_argmax),
+                        mean_prompt_nll: nll_sum / (req.tokens.len() - 1).max(1) as f64,
+                        queue_wait: first_step_at
+                            .map_or(Duration::ZERO, |t| t.saturating_duration_since(req.arrived)),
+                        request: req,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Stream a freshly generated token and apply the termination rules
+/// (stop-token, then length).
+fn emit(a: &mut ActiveSeq, token: u32, out: &mut StepOutcome) {
+    let index = a.generated.len();
+    a.generated.push(token);
+    let spec = match &a.req.kind {
+        RequestKind::Generate(s) => s,
+        RequestKind::Score => unreachable!("decode scheduler only holds generations"),
+    };
+    let _ = spec.stream.send(StreamEvent::Token { token, index });
+    out.tokens_emitted += 1;
+    if spec.stop.contains(&token) {
+        a.done = Some(FinishReason::Stop);
+    } else if a.generated.len() >= spec.max_new_tokens {
+        a.done = Some(FinishReason::Length);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::MoeLm;
+    use crate::serve::queue::Response;
+    use crate::util::Rng;
+    use std::sync::atomic::Ordering;
+    use std::sync::{mpsc, Arc};
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "decode-test".into(),
+            vocab: 32,
+            hidden: 16,
+            layers: 2,
+            heads: 2,
+            n_experts: 4,
+            n_shared: 1,
+            topk: 2,
+            inter: 8,
+            dense_first: false,
+            seq_len: 12,
+        }
+    }
+
+    struct GenHandle {
+        stream: mpsc::Receiver<StreamEvent>,
+        _reply: mpsc::Receiver<Response>,
+        cancel: Arc<std::sync::atomic::AtomicBool>,
+    }
+
+    fn gen_request(prompt: Vec<u32>, max_new: usize, stop: Vec<u32>) -> (Request, GenHandle) {
+        let (reply, reply_rx) = mpsc::channel();
+        let (stream, stream_rx) = mpsc::channel();
+        let cancel = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let req = Request {
+            kind: RequestKind::Generate(GenSpec { max_new_tokens: max_new, stop, stream }),
+            cancelled: cancel.clone(),
+            ..Request::new(prompt, reply)
+        };
+        (req, GenHandle { stream: stream_rx, _reply: reply_rx, cancel })
+    }
+
+    /// One scheduler step against the native model (no PJRT): the inline
+    /// closure keeps the higher-ranked `StepSeq` lifetimes inferable.
+    fn native_step(sched: &mut DecodeScheduler, lm: &MoeLm) -> StepOutcome {
+        sched.step(|inputs| {
+            Ok(lm.forward_step_batch_with_moe(inputs, |_, block, x| block.forward(x)))
+        })
+    }
+
+    /// Greedy reference: re-forward the whole growing sequence per token.
+    fn reference_generate(lm: &MoeLm, prompt: &[u32], max_new: usize, stop: &[u32]) -> Vec<u32> {
+        let mut seq = prompt.to_vec();
+        let mut out = Vec::new();
+        for _ in 0..max_new {
+            let logits = lm.forward(&seq);
+            let g = argmax(logits.row(seq.len() - 1));
+            seq.push(g);
+            out.push(g);
+            if stop.contains(&g) {
+                break;
+            }
+        }
+        out
+    }
+
+    fn drain(handle: &GenHandle) -> (Vec<u32>, Option<FinishReason>) {
+        let mut tokens = Vec::new();
+        let mut reason = None;
+        while let Ok(ev) = handle.stream.try_recv() {
+            match ev {
+                StreamEvent::Token { token, index } => {
+                    assert_eq!(index, tokens.len(), "stream indices are dense");
+                    tokens.push(token);
+                }
+                StreamEvent::Done { reason: r, generated } => {
+                    assert_eq!(generated, tokens.len());
+                    reason = Some(r);
+                }
+            }
+        }
+        (tokens, reason)
+    }
+
+    #[test]
+    fn scheduler_matches_naive_reforward_generation() {
+        let mut rng = Rng::new(0xD0_01);
+        let cfg = tiny_cfg();
+        let lm = MoeLm::random(&cfg, &mut rng);
+        let prompt: Vec<u32> = (0..6).map(|_| rng.below(32) as u32).collect();
+        let want = reference_generate(&lm, &prompt, 8, &[]);
+        let mut sched = DecodeScheduler::new(&cfg, DecodePolicy::default());
+        let (req, handle) = gen_request(prompt, 8, vec![]);
+        sched.admit(req);
+        let mut steps = 0;
+        while sched.has_work() {
+            let out = native_step(&mut sched, &lm);
+            assert!(out.rows > 0 || !sched.has_work());
+            steps += 1;
+            assert!(steps < 100, "runaway decode loop");
+        }
+        let (tokens, reason) = drain(&handle);
+        assert_eq!(tokens, want, "KV-cached decode must match naive re-forwarding");
+        assert_eq!(reason, Some(FinishReason::Length));
+        let stats = sched.stats();
+        assert_eq!(stats.generations, 1);
+        assert_eq!(stats.generated_tokens, 8);
+        // prefill (6 rows) + one decode row per remaining token (first
+        // token rides the prefill step)
+        assert_eq!(stats.prefill_rows, 6);
+        assert_eq!(stats.decode_rows, 7);
+        assert_eq!(sched.occupancy().reserved_tokens, 0, "KV freed at retirement");
+    }
+
+    #[test]
+    fn stop_token_ends_generation_early() {
+        let mut rng = Rng::new(0xD0_02);
+        let cfg = tiny_cfg();
+        let lm = MoeLm::random(&cfg, &mut rng);
+        let prompt: Vec<u32> = (0..5).map(|_| rng.below(32) as u32).collect();
+        // pick the 3rd greedy token as the stop token so it must stop there
+        let free_run = reference_generate(&lm, &prompt, 6, &[]);
+        let stop = free_run[2];
+        let want = reference_generate(&lm, &prompt, 6, &[stop]);
+        assert_eq!(want.len(), 3, "reference stops at the stop token");
+        let mut sched = DecodeScheduler::new(&cfg, DecodePolicy::default());
+        let (req, handle) = gen_request(prompt, 6, vec![stop]);
+        sched.admit(req);
+        while sched.has_work() {
+            native_step(&mut sched, &lm);
+        }
+        let (tokens, reason) = drain(&handle);
+        assert_eq!(tokens, want);
+        assert_eq!(*tokens.last().unwrap(), stop, "stop token itself is streamed");
+        assert_eq!(reason, Some(FinishReason::Stop));
+    }
+
+    #[test]
+    fn zero_max_new_tokens_degrades_to_scoring() {
+        let mut rng = Rng::new(0xD0_03);
+        let cfg = tiny_cfg();
+        let lm = MoeLm::random(&cfg, &mut rng);
+        let prompt: Vec<u32> = (0..4).map(|_| rng.below(32) as u32).collect();
+        let mut sched = DecodeScheduler::new(&cfg, DecodePolicy::default());
+        let (req, handle) = gen_request(prompt, 0, vec![]);
+        sched.admit(req);
+        let out = native_step(&mut sched, &lm);
+        assert_eq!(out.finished.len(), 1);
+        let fin = &out.finished[0];
+        assert_eq!(fin.generated, 0);
+        assert!(fin.last_token.is_some(), "scoring parity: argmax continuation kept");
+        assert_eq!(fin.reason, FinishReason::Length);
+        assert!(fin.mean_prompt_nll.is_finite());
+        let (tokens, reason) = drain(&handle);
+        assert!(tokens.is_empty());
+        assert_eq!(reason, Some(FinishReason::Length));
+    }
+
+    #[test]
+    fn step_budget_chunks_prefill_and_mixes_decode_rows() {
+        let mut rng = Rng::new(0xD0_04);
+        let cfg = tiny_cfg();
+        let lm = MoeLm::random(&cfg, &mut rng);
+        // tiny budget: an 11-token prompt must prefill over multiple steps
+        let policy = DecodePolicy { max_step_rows: 4, ..DecodePolicy::default() };
+        let mut sched = DecodeScheduler::new(&cfg, policy);
+        let long: Vec<u32> = (0..11).map(|_| rng.below(32) as u32).collect();
+        let short: Vec<u32> = (0..2).map(|_| rng.below(32) as u32).collect();
+        let want_long = reference_generate(&lm, &long, 3, &[]);
+        let want_short = reference_generate(&lm, &short, 3, &[]);
+        let (req_a, h_a) = gen_request(long.clone(), 3, vec![]);
+        let (req_b, h_b) = gen_request(short.clone(), 3, vec![]);
+        sched.admit(req_a);
+        sched.admit(req_b);
+        let mut saw_mixed = false;
+        while sched.has_work() {
+            let out = native_step(&mut sched, &lm);
+            assert!(out.rows <= 4 + 1, "budget respected (±1 decode row floor)");
+            if out.prefill_rows > 0 && out.decode_rows > 0 {
+                saw_mixed = true;
+            }
+            if let Some(est) = out.fill {
+                assert_eq!(est.useful_rows, out.rows);
+            }
+        }
+        assert!(saw_mixed, "short seq decodes while long seq still prefills");
+        assert_eq!(drain(&h_a).0, want_long);
+        assert_eq!(drain(&h_b).0, want_short);
+        assert_eq!(sched.stats().generations, 2);
+    }
+
+    #[test]
+    fn cancellation_between_steps_frees_kv_and_stops_within_one_step() {
+        let mut rng = Rng::new(0xD0_05);
+        let cfg = tiny_cfg();
+        let lm = MoeLm::random(&cfg, &mut rng);
+        let prompt: Vec<u32> = (0..4).map(|_| rng.below(32) as u32).collect();
+        let mut sched = DecodeScheduler::new(&cfg, DecodePolicy::default());
+        let (req, handle) = gen_request(prompt, 1000, vec![]);
+        sched.admit(req);
+        // run two steps (prefill+first token, then one decode token)…
+        native_step(&mut sched, &lm);
+        native_step(&mut sched, &lm);
+        let emitted_before = sched.stats().generated_tokens;
+        assert!(emitted_before >= 2);
+        assert!(sched.occupancy().reserved_tokens > 0);
+        // …then cancel: the very next step must evict without executing
+        handle.cancel.store(true, Ordering::Release);
+        let out = native_step(&mut sched, &lm);
+        assert_eq!(out.cancelled.len(), 1, "evicted between steps");
+        assert_eq!(out.rows, 0, "no rows executed for the cancelled sequence");
+        assert_eq!(sched.stats().generated_tokens, emitted_before, "no token after cancel");
+        assert_eq!(sched.occupancy().reserved_tokens, 0, "KV reservation reclaimed");
+        assert_eq!(sched.occupancy().seqs, 0);
+        assert!(!sched.has_work());
+        assert_eq!(sched.stats().cancelled, 1);
+        let (_, reason) = drain(&handle);
+        assert_eq!(reason, Some(FinishReason::Cancelled));
+    }
+
+    #[test]
+    fn pending_cancellation_never_allocates_kv() {
+        let cfg = tiny_cfg();
+        let mut sched = DecodeScheduler::new(&cfg, DecodePolicy::default());
+        let (req, handle) = gen_request(vec![1, 2, 3], 5, vec![]);
+        handle.cancel.store(true, Ordering::Release);
+        sched.admit(req);
+        let out = sched.step(|_inputs: &mut [StepSeq<'_>]| -> anyhow::Result<Vec<Matrix>> {
+            panic!("nothing should execute")
+        });
+        assert_eq!(out.cancelled.len(), 1);
+        assert_eq!(sched.occupancy().peak_tokens, 0, "KV was never reserved");
+        let (_, reason) = drain(&handle);
+        assert_eq!(reason, Some(FinishReason::Cancelled));
+    }
+
+    #[test]
+    fn kv_budget_defers_admission_until_a_slot_frees() {
+        let mut rng = Rng::new(0xD0_06);
+        let cfg = tiny_cfg();
+        let lm = MoeLm::random(&cfg, &mut rng);
+        // budget fits exactly one (4 + 2)-token reservation
+        let policy = DecodePolicy { kv_budget_tokens: 6, ..DecodePolicy::default() };
+        let mut sched = DecodeScheduler::new(&cfg, policy);
+        let p1: Vec<u32> = (0..4).map(|_| rng.below(32) as u32).collect();
+        let p2: Vec<u32> = (0..4).map(|_| rng.below(32) as u32).collect();
+        let (r1, h1) = gen_request(p1.clone(), 2, vec![]);
+        let (r2, h2) = gen_request(p2.clone(), 2, vec![]);
+        sched.admit(r1);
+        sched.admit(r2);
+        native_step(&mut sched, &lm);
+        assert_eq!(sched.active_seqs(), 1, "second generation waits on the KV budget");
+        assert_eq!(sched.pending_seqs(), 1);
+        while sched.has_work() {
+            native_step(&mut sched, &lm);
+        }
+        assert_eq!(drain(&h1).0, reference_generate(&lm, &p1, 2, &[]));
+        assert_eq!(drain(&h2).0, reference_generate(&lm, &p2, 2, &[]));
+        assert_eq!(sched.occupancy().peak_tokens, 6, "reservations never overlapped");
+    }
+
+    #[test]
+    fn engine_failure_drops_only_the_sequences_in_the_step() {
+        let mut rng = Rng::new(0xD0_07);
+        let cfg = tiny_cfg();
+        let lm = MoeLm::random(&cfg, &mut rng);
+        let mut sched = DecodeScheduler::new(&cfg, DecodePolicy::default());
+        let (req, handle) = gen_request(vec![1, 2, 3], 5, vec![]);
+        sched.admit(req);
+        let out = sched.step(|_inputs: &mut [StepSeq<'_>]| -> anyhow::Result<Vec<Matrix>> {
+            anyhow::bail!("injected engine failure")
+        });
+        assert_eq!(out.failed.len(), 1);
+        assert!(out.finished.is_empty());
+        assert_eq!(sched.stats().failed, 1);
+        assert_eq!(sched.occupancy().reserved_tokens, 0, "failed sequence freed its KV");
+        let (_, reason) = drain(&handle);
+        assert_eq!(reason, Some(FinishReason::Failed));
+        // the scheduler still serves after a failure
+        let (req2, h2) = gen_request(vec![2, 3], 1, vec![]);
+        sched.admit(req2);
+        while sched.has_work() {
+            native_step(&mut sched, &lm);
+        }
+        assert_eq!(drain(&h2).0.len(), 1);
+    }
+
+    #[test]
+    fn trim_to_tiles_aligns_chunks() {
+        // rows=0: a 10-row want trims to 8 (4+4 whole tiles)
+        assert_eq!(trim_to_tiles(0, 10), 8);
+        // already aligned wants stay
+        assert_eq!(trim_to_tiles(0, 64), 64);
+        assert_eq!(trim_to_tiles(4, 16), 16);
+        // tiny wants that cannot align fall back unchanged
+        assert_eq!(trim_to_tiles(0, 1), 1);
+        assert_eq!(trim_to_tiles(2, 1), 1, "cannot align: keep progress");
+        // decode rows + prefill chunk: 3 decode rows, want 9 → total 12
+        assert_eq!(trim_to_tiles(3, 9), 9);
+    }
+}

@@ -8,16 +8,25 @@
 //! re-quantized first, and only if all succeed is the table mutated and
 //! the generation bumped — a failed swap leaves the serving plan intact.
 //!
-//! The engine processes batches serially, and swaps are applied strictly
-//! between batches, so a batch always runs entirely on one generation:
-//! requests in flight when the delta lands finish on the old plan, and the
-//! generation stamped into each response records which plan served it.
+//! Since the decode redesign the two phases can run on *different
+//! threads*: [`SwapStagingJob`] clones the changed experts' weights out of
+//! the model and re-quantizes them anywhere (the payloads are plain `Send`
+//! data — no literals, no PJRT), and only the generation-counted
+//! [`SlotTable::install_staged`] flip runs on the engine thread. That
+//! hides swap latency behind serving instead of stalling the batch loop on
+//! re-quantization ([`crate::coordinator::engine::ServingEngine::maybe_begin_replan`]).
+//!
+//! The engine processes batches (and decode steps) serially, and swaps are
+//! applied strictly between them, so a batch always runs entirely on one
+//! generation: requests in flight when the delta lands finish on the old
+//! plan, and the generation stamped into each response records which plan
+//! served it.
 
 use anyhow::Result;
 
 use crate::alloc::Allocation;
-use crate::moe::MoeLm;
-use crate::runtime::{PreparedExpert, RuntimeScheme};
+use crate::moe::{ExpertWeights, MoeLm};
+use crate::runtime::{PreparedExpert, QuantizedExpertData, RuntimeScheme};
 
 /// One slot's scheme transition in a delta plan.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -107,13 +116,70 @@ impl SlotTable {
     /// Apply a delta plan: re-prepare exactly the changed slots, then bump
     /// the generation. Returns the number of slots actually swapped.
     /// No-op changes (`old == new`, or the slot already carries `new`) are
-    /// skipped; a preparation failure mutates nothing.
+    /// skipped; a preparation failure mutates nothing. This is the
+    /// synchronous composition of [`SwapStagingJob`] + [`install_staged`](Self::install_staged)
+    /// — the replica loop runs the two halves on different threads instead.
     pub fn apply(&mut self, lm: &MoeLm, changes: &[SlotChange]) -> Result<usize> {
+        let staged = SwapStagingJob::collect(lm, self, changes).run()?;
+        self.install_staged(staged)
+    }
+
+    /// Install an off-thread-staged swap: materialize the literals (cheap
+    /// bulk copies) and flip the slots under a fresh generation. Two-phase
+    /// like [`apply`](Self::apply): a literal-creation failure mutates
+    /// nothing. Returns the number of slots swapped.
+    pub fn install_staged(&mut self, staged: StagedSwap) -> Result<usize> {
+        let mut prepared: Vec<(usize, usize, RuntimeScheme, PreparedExpert)> = Vec::new();
+        for (pos, e, scheme, data) in staged.slots {
+            prepared.push((pos, e, scheme, data.into_prepared()?));
+        }
+        if prepared.is_empty() {
+            return Ok(0);
+        }
+        self.generation += 1;
+        let swapped = prepared.len();
+        for (pos, e, scheme, p) in prepared {
+            self.slots[pos][e] = ExpertSlot { scheme, prepared: p, generation: self.generation };
+        }
+        Ok(swapped)
+    }
+}
+
+/// The off-thread half of a hot-swap: the changed slots' *cloned* expert
+/// weights, so [`run`](Self::run) borrows nothing from the live model and
+/// can execute on any worker thread while the engine keeps serving.
+pub struct SwapStagingJob {
+    changes: Vec<(SlotChange, ExpertWeights)>,
+}
+
+/// A finished staging job: quantized payloads per changed slot, ready for
+/// the engine thread's generation-counted flip
+/// ([`SlotTable::install_staged`]). Plain `Send` data.
+pub struct StagedSwap {
+    slots: Vec<(usize, usize, RuntimeScheme, QuantizedExpertData)>,
+}
+
+impl StagedSwap {
+    /// Slots this swap will flip.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+}
+
+impl SwapStagingJob {
+    /// Snapshot everything the staging worker needs: the changed experts'
+    /// weights (cloned) and their target schemes. No-op changes — the slot
+    /// already carries the target family — are dropped here, against the
+    /// *current* table.
+    pub fn collect(lm: &MoeLm, table: &SlotTable, changes: &[SlotChange]) -> SwapStagingJob {
         let blocks = lm.moe_blocks();
-        // phase 1: quantize + lay out all changed experts (fallible)
-        let mut staged: Vec<(usize, usize, RuntimeScheme, PreparedExpert)> = Vec::new();
+        let mut out = Vec::new();
         for ch in changes {
-            let slot = &self.slots[ch.block_pos][ch.expert];
+            let slot = &table.slots[ch.block_pos][ch.expert];
             debug_assert_eq!(
                 slot.scheme, ch.old,
                 "delta plan raced: slot ({}, {}) is {:?}, delta expected {:?}",
@@ -123,18 +189,28 @@ impl SlotTable {
                 continue;
             }
             let (_, block) = blocks[ch.block_pos];
-            let prepared = PreparedExpert::prepare(block.expert_at(ch.expert), ch.new)?;
-            staged.push((ch.block_pos, ch.expert, ch.new, prepared));
+            out.push((*ch, block.expert_at(ch.expert).clone()));
         }
-        if staged.is_empty() {
-            return Ok(0);
+        SwapStagingJob { changes: out }
+    }
+
+    /// Changed slots this job will re-quantize.
+    pub fn len(&self) -> usize {
+        self.changes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.changes.is_empty()
+    }
+
+    /// Re-quantize every changed expert (CPU-heavy, fallible; callable on
+    /// a worker thread — `self` owns its weights).
+    pub fn run(self) -> Result<StagedSwap> {
+        let mut slots = Vec::with_capacity(self.changes.len());
+        for (ch, weights) in self.changes {
+            let data = QuantizedExpertData::quantize(&weights, ch.new)?;
+            slots.push((ch.block_pos, ch.expert, ch.new, data));
         }
-        // phase 2: install (infallible) under a fresh generation
-        self.generation += 1;
-        let swapped = staged.len();
-        for (pos, e, scheme, prepared) in staged {
-            self.slots[pos][e] = ExpertSlot { scheme, prepared, generation: self.generation };
-        }
-        Ok(swapped)
+        Ok(StagedSwap { slots })
     }
 }

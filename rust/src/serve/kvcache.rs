@@ -1,0 +1,275 @@
+//! Per-sequence KV cache + the replica-local budgeted slot pool
+//! (DESIGN.md §Decode-Loop).
+//!
+//! [`SeqKv`] is the incremental-attention state of one sequence: for every
+//! transformer layer, the post-RoPE key rows and raw value rows of every
+//! position processed so far. [`crate::moe::MoeLm::forward_step`] appends
+//! the new positions' K/V and attends over the cached prefix, which is what
+//! makes a decode step O(1) model passes instead of re-forwarding the whole
+//! sequence — and, because every op on the step path is row-independent,
+//! bit-identical to the whole-sequence forward.
+//!
+//! [`KvCache`] is the pool a replica's decode scheduler allocates from: a
+//! token budget (not a slot count — sequences reserve `prompt +
+//! max_new_tokens` capacity up front, so admission can never strand a
+//! generation mid-decode without cache room), occupancy accounting for the
+//! metrics, and explicit [`free`](KvCache::free) so a cancelled or finished
+//! generation returns its reservation between decode steps.
+//!
+//! Plain data throughout: no engine, no PJRT — unit-testable anywhere.
+
+use crate::tensor::Matrix;
+
+/// One layer's cached keys/values: `[capacity, hidden]` row-major, filled
+/// to `SeqKv::len` rows. Keys are stored *after* RoPE so a decode step
+/// never re-rotates the prefix.
+#[derive(Clone, Debug)]
+pub struct LayerKv {
+    pub k: Matrix,
+    pub v: Matrix,
+}
+
+/// The KV state of one sequence across all transformer layers.
+#[derive(Clone, Debug)]
+pub struct SeqKv {
+    layers: Vec<LayerKv>,
+    /// Positions cached so far (uniform across layers between steps).
+    len: usize,
+    /// Reserved rows per layer.
+    capacity: usize,
+}
+
+impl SeqKv {
+    /// Reserve a cache of `capacity` positions for a model with `layers`
+    /// transformer layers and `hidden` channels.
+    pub fn new(layers: usize, hidden: usize, capacity: usize) -> SeqKv {
+        SeqKv {
+            layers: (0..layers)
+                .map(|_| LayerKv {
+                    k: Matrix::zeros(capacity, hidden),
+                    v: Matrix::zeros(capacity, hidden),
+                })
+                .collect(),
+            len: 0,
+            capacity,
+        }
+    }
+
+    /// Positions cached so far — the absolute position of the next token.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Append `k_new`/`v_new` (`[s, hidden]`, post-RoPE keys) to `layer`'s
+    /// cache. Every layer of a step must append the same number of rows;
+    /// [`advance`](Self::advance) commits the shared length afterwards.
+    pub fn append(&mut self, layer: usize, k_new: &Matrix, v_new: &Matrix) {
+        assert_eq!(k_new.rows, v_new.rows);
+        let l = &mut self.layers[layer];
+        assert_eq!(k_new.cols, l.k.cols, "hidden mismatch");
+        assert!(
+            self.len + k_new.rows <= self.capacity,
+            "kv overflow: {} + {} > {}",
+            self.len,
+            k_new.rows,
+            self.capacity
+        );
+        let h = l.k.cols;
+        l.k.data[self.len * h..(self.len + k_new.rows) * h].copy_from_slice(&k_new.data);
+        l.v.data[self.len * h..(self.len + v_new.rows) * h].copy_from_slice(&v_new.data);
+    }
+
+    /// Commit `s` appended positions after every layer has appended its
+    /// rows for the step.
+    pub fn advance(&mut self, s: usize) {
+        assert!(self.len + s <= self.capacity);
+        self.len += s;
+    }
+
+    /// Cached key rows of `layer` (`[len + pending, hidden]` view,
+    /// `pending` = rows appended this step but not yet advanced — the
+    /// attention of the appending step reads them through `upto`).
+    pub fn keys(&self, layer: usize, upto: usize) -> &[f32] {
+        let l = &self.layers[layer];
+        &l.k.data[..upto * l.k.cols]
+    }
+
+    pub fn values(&self, layer: usize, upto: usize) -> &[f32] {
+        let l = &self.layers[layer];
+        &l.v.data[..upto * l.v.cols]
+    }
+
+    /// One cached key row.
+    pub fn key_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.layers[layer].k.row(pos)
+    }
+
+    pub fn value_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.layers[layer].v.row(pos)
+    }
+}
+
+/// Occupancy snapshot of a [`KvCache`] pool.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvOccupancy {
+    /// Tokens reserved by live sequences.
+    pub reserved_tokens: usize,
+    /// Reservation budget of the pool.
+    pub budget_tokens: usize,
+    /// Live sequences holding a reservation.
+    pub seqs: usize,
+    /// High-water mark of `reserved_tokens` over the pool's lifetime.
+    pub peak_tokens: usize,
+}
+
+impl KvOccupancy {
+    /// Reserved fraction of the budget, in `[0, 1]`.
+    pub fn ratio(&self) -> f64 {
+        if self.budget_tokens == 0 {
+            return 0.0;
+        }
+        self.reserved_tokens as f64 / self.budget_tokens as f64
+    }
+}
+
+/// Replica-local KV reservation pool. Token-budgeted rather than
+/// slot-counted: a sequence reserves its worst-case length (prompt +
+/// max_new_tokens) at admission, so a generation admitted to the decode
+/// loop can always run to completion — backpressure happens *before*
+/// prefill, never mid-decode.
+pub struct KvCache {
+    n_layers: usize,
+    hidden: usize,
+    budget_tokens: usize,
+    reserved_tokens: usize,
+    seqs: usize,
+    peak_tokens: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, hidden: usize, budget_tokens: usize) -> KvCache {
+        assert!(n_layers >= 1 && hidden >= 1 && budget_tokens >= 1);
+        KvCache {
+            n_layers,
+            hidden,
+            budget_tokens,
+            reserved_tokens: 0,
+            seqs: 0,
+            peak_tokens: 0,
+        }
+    }
+
+    /// Try to reserve a `capacity`-position cache. `None` when the budget
+    /// cannot hold it (the caller keeps the sequence pending). A single
+    /// over-budget sequence is still granted when the pool is empty —
+    /// an oversized generation must run eventually, exactly like the
+    /// batcher's oversized-single-request rule.
+    pub fn alloc(&mut self, capacity: usize) -> Option<SeqKv> {
+        assert!(capacity >= 1);
+        if self.reserved_tokens + capacity > self.budget_tokens && self.seqs > 0 {
+            return None;
+        }
+        self.reserved_tokens += capacity;
+        self.seqs += 1;
+        self.peak_tokens = self.peak_tokens.max(self.reserved_tokens);
+        Some(SeqKv::new(self.n_layers, self.hidden, capacity))
+    }
+
+    /// Return a sequence's reservation to the pool (finished, cancelled or
+    /// failed generations — the step scheduler calls this between steps).
+    pub fn free(&mut self, kv: SeqKv) {
+        self.reserved_tokens = self.reserved_tokens.saturating_sub(kv.capacity());
+        self.seqs = self.seqs.saturating_sub(1);
+    }
+
+    pub fn occupancy(&self) -> KvOccupancy {
+        KvOccupancy {
+            reserved_tokens: self.reserved_tokens,
+            budget_tokens: self.budget_tokens,
+            seqs: self.seqs,
+            peak_tokens: self.peak_tokens,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn seqkv_append_advance_and_views() {
+        let mut rng = Rng::new(0xCAFE);
+        let mut kv = SeqKv::new(2, 8, 16);
+        assert!(kv.is_empty());
+        assert_eq!((kv.n_layers(), kv.capacity()), (2, 16));
+        let k0 = Matrix::randn(3, 8, 1.0, &mut rng);
+        let v0 = Matrix::randn(3, 8, 1.0, &mut rng);
+        kv.append(0, &k0, &v0);
+        kv.append(1, &k0, &v0);
+        // before advance the appended rows are visible through `upto`
+        assert_eq!(kv.keys(0, 3), &k0.data[..]);
+        kv.advance(3);
+        assert_eq!(kv.len(), 3);
+        assert_eq!(kv.key_row(0, 1), k0.row(1));
+        assert_eq!(kv.value_row(1, 2), v0.row(2));
+        // a second step appends after the committed prefix
+        let k1 = Matrix::randn(1, 8, 1.0, &mut rng);
+        kv.append(0, &k1, &k1);
+        kv.append(1, &k1, &k1);
+        kv.advance(1);
+        assert_eq!(kv.len(), 4);
+        assert_eq!(kv.key_row(0, 3), k1.row(0));
+        assert_eq!(kv.keys(0, 4).len(), 4 * 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv overflow")]
+    fn seqkv_overflow_panics() {
+        let mut kv = SeqKv::new(1, 4, 2);
+        let rows = Matrix::zeros(3, 4);
+        kv.append(0, &rows, &rows);
+    }
+
+    #[test]
+    fn pool_budget_reserves_and_frees() {
+        let mut pool = KvCache::new(2, 8, 100);
+        let a = pool.alloc(60).expect("fits");
+        assert_eq!(pool.occupancy().reserved_tokens, 60);
+        assert!(pool.alloc(60).is_none(), "61..120 > budget");
+        let b = pool.alloc(40).expect("exactly fills the budget");
+        let occ = pool.occupancy();
+        assert_eq!((occ.reserved_tokens, occ.seqs), (100, 2));
+        assert!((occ.ratio() - 1.0).abs() < 1e-12);
+        pool.free(a);
+        assert_eq!(pool.occupancy().reserved_tokens, 40);
+        let c = pool.alloc(60).expect("freed reservation is reusable");
+        pool.free(b);
+        pool.free(c);
+        let occ = pool.occupancy();
+        assert_eq!((occ.reserved_tokens, occ.seqs), (0, 0));
+        assert_eq!(occ.peak_tokens, 100, "high-water mark survives frees");
+    }
+
+    #[test]
+    fn pool_grants_one_oversized_sequence_when_empty() {
+        let mut pool = KvCache::new(1, 4, 10);
+        let big = pool.alloc(50).expect("oversized single sequence must run");
+        assert_eq!(pool.occupancy().reserved_tokens, 50);
+        assert!(pool.alloc(1).is_none(), "pool over budget: nothing else fits");
+        pool.free(big);
+        assert!(pool.alloc(10).is_some());
+    }
+}

@@ -27,22 +27,32 @@
 //! pieces. Since DESIGN.md §Sharded-Serving the loop runs per replica:
 //! [`replica`] holds the engine worker threads (one PJRT client, one plan,
 //! one telemetry/replan loop each) plus the work-stealing deques and the
-//! status board the router scores against. Everything except the worker
-//! body is engine-agnostic and unit-testable without a PJRT runtime.
+//! status board the router scores against. Since DESIGN.md §Decode-Loop
+//! the loop also runs at *token* granularity: [`kvcache`] holds each
+//! sequence's per-layer K/V state, and [`decode`] schedules mixed
+//! prefill/decode steps (tile-budget cut, token streaming, step-granular
+//! cancellation) between queue pops — so decode-time expert routing
+//! reaches the telemetry the replanner solves on. Everything except the
+//! worker body is engine-agnostic and unit-testable without a PJRT
+//! runtime.
 
+pub mod decode;
 pub mod hotswap;
+pub mod kvcache;
 pub mod queue;
 pub mod replan;
 pub mod replica;
 pub mod request;
 pub mod telemetry;
 
-pub use hotswap::{SlotChange, SlotTable};
-pub use queue::{BatchPolicy, ContinuousBatcher, Request, Response};
+pub use decode::{DecodePolicy, DecodeScheduler, DecodeStats, FinishedGen, StepOutcome};
+pub use hotswap::{SlotChange, SlotTable, StagedSwap};
+pub use kvcache::{KvCache, KvOccupancy, SeqKv};
+pub use queue::{BatchPolicy, ContinuousBatcher, GenSpec, Request, RequestKind, Response};
 pub use replan::{diff_plans, ReplanConfig, ReplanOutcome, Replanner};
 pub use replica::{ReplicaOnline, ReplicaSpec, ReplicaStatus, RoutedBatch, WorkQueues};
 pub use request::{
-    Admission, AdmissionConfig, AdmissionReport, AdmissionState, Priority, QosClass,
-    RejectReason, ServeRequest, Ticket,
+    Admission, AdmissionConfig, AdmissionReport, AdmissionState, FinishReason, Priority,
+    QosClass, RejectReason, ServeKind, ServeRequest, StreamEvent, Ticket,
 };
 pub use telemetry::ActivationTelemetry;

@@ -41,11 +41,37 @@ use std::time::{Duration, Instant};
 use crate::runtime::dispatch::{self, FillEstimate};
 use crate::runtime::TILE_MS;
 
-use super::request::{Priority, QosClass};
+use super::request::{Priority, QosClass, StreamEvent};
 
-/// A scoring request: token sequence in, next-token prediction + NLL out.
-/// Built by the cluster front door from a [`super::request::ServeRequest`];
-/// tests construct it directly (the fields are plain data).
+/// Decode-side parameters of a routed generation request: the generation
+/// budget, the stop set, and the sender half of the ticket's token stream.
+pub struct GenSpec {
+    pub max_new_tokens: usize,
+    pub stop: Vec<u32>,
+    /// Streams [`StreamEvent`]s to the ticket as decode steps land. Send
+    /// errors are ignored — a dropped ticket abandons its stream.
+    pub stream: mpsc::Sender<StreamEvent>,
+}
+
+/// What the replica does with a routed request.
+pub enum RequestKind {
+    /// Whole-sequence scoring: one engine forward, one [`Response`].
+    Score,
+    /// KV-cached generation on the replica's decode scheduler
+    /// (DESIGN.md §Decode-Loop).
+    Generate(GenSpec),
+}
+
+impl RequestKind {
+    pub fn is_generate(&self) -> bool {
+        matches!(self, RequestKind::Generate(_))
+    }
+}
+
+/// A serving request: token sequence in; next-token prediction + NLL out
+/// (scoring), or a streamed generation (decode). Built by the cluster
+/// front door from a [`super::request::ServeRequest`]; tests construct it
+/// directly (the fields are plain data).
 pub struct Request {
     /// Admission-assigned id (0 for direct construction in tests).
     pub id: u64,
@@ -56,14 +82,15 @@ pub struct Request {
     /// Absolute response deadline, when the client set one.
     pub deadline: Option<Instant>,
     pub qos: Option<QosClass>,
+    pub kind: RequestKind,
     /// Set by [`super::request::Ticket::cancel`]; checked at every cut,
-    /// pop and reply.
+    /// pop, decode step and reply.
     pub cancelled: Arc<AtomicBool>,
 }
 
 impl Request {
-    /// A plain `Normal`-priority request with no deadline or QoS class —
-    /// what the legacy `submit` shim produces.
+    /// A plain `Normal`-priority scoring request with no deadline or QoS
+    /// class — what the legacy `submit` shim produces.
     pub fn new(tokens: Vec<u32>, reply: mpsc::Sender<Response>) -> Request {
         Request {
             id: 0,
@@ -73,6 +100,7 @@ impl Request {
             priority: Priority::Normal,
             deadline: None,
             qos: None,
+            kind: RequestKind::Score,
             cancelled: Arc::new(AtomicBool::new(false)),
         }
     }

@@ -25,14 +25,15 @@
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::alloc::Allocation;
-use crate::coordinator::engine::ServingEngine;
+use crate::coordinator::engine::{ReplanStaging, ServingEngine};
 use crate::coordinator::metrics::ReplicaReport;
 use crate::moe::{ModelConfig, MoeLm};
 use crate::runtime::RuntimeScheme;
 use crate::ser::MxtFile;
+use crate::serve::decode::{DecodePolicy, DecodeScheduler};
 use crate::serve::queue::{Request, Response};
 use crate::serve::replan::Replanner;
 use crate::serve::request::AdmissionState;
@@ -77,11 +78,27 @@ struct QueuesInner {
     /// Batches popped but not yet reported done — what keeps the router's
     /// load signal honest about work that already left the deques.
     inflight: Vec<usize>,
+    /// Pending + active generations on each replica's decode scheduler —
+    /// the decode loop's contribution to the router's load signal.
+    /// Deliberately *not* part of the capacity wait: a decoding replica
+    /// merges newly routed work into its next step, so it still counts as
+    /// available capacity.
+    decode: Vec<usize>,
     /// Replicas that died before serving (engine build failure). Their
     /// queued batches are stolen by the living; they never count as
     /// capacity.
     dead: Vec<bool>,
     closed: bool,
+}
+
+/// Result of a non-blocking [`WorkQueues::try_pop`].
+pub enum TryPop {
+    /// A batch (own deque or stolen — the flag mirrors [`WorkQueues::pop`]).
+    Batch(RoutedBatch, bool),
+    /// Nothing queued anywhere right now.
+    Empty,
+    /// Queues closed and fully drained.
+    Closed,
 }
 
 impl WorkQueues {
@@ -91,6 +108,7 @@ impl WorkQueues {
             inner: Mutex::new(QueuesInner {
                 queues: (0..replicas).map(|_| VecDeque::new()).collect(),
                 inflight: vec![0; replicas],
+                decode: vec![0; replicas],
                 dead: vec![false; replicas],
                 closed: false,
             }),
@@ -111,6 +129,25 @@ impl WorkQueues {
         self.available.notify_all();
     }
 
+    /// One non-blocking take under the lock: own deque front first,
+    /// otherwise steal the oldest batch of the most backlogged peer. The
+    /// single home of the take/steal policy — every pop flavor goes
+    /// through here, so they cannot drift apart.
+    fn take_locked(g: &mut QueuesInner, replica: usize) -> Option<(RoutedBatch, bool)> {
+        if let Some(b) = g.queues[replica].pop_front() {
+            g.inflight[replica] += 1;
+            return Some((b, false));
+        }
+        let victim = (0..g.queues.len())
+            .filter(|&i| i != replica && !g.queues[i].is_empty())
+            .max_by_key(|&i| g.queues[i].len());
+        victim.map(|v| {
+            let b = g.queues[v].pop_front().unwrap();
+            g.inflight[replica] += 1;
+            (b, true)
+        })
+    }
+
     /// Dequeue the next batch for `replica`, blocking until one is
     /// available or the queues are closed *and* fully drained. Returns the
     /// batch plus whether it was stolen from a peer. The popped batch
@@ -118,24 +155,57 @@ impl WorkQueues {
     pub fn pop(&self, replica: usize) -> Option<(RoutedBatch, bool)> {
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(b) = g.queues[replica].pop_front() {
-                g.inflight[replica] += 1;
-                return Some((b, false));
-            }
-            // steal the oldest batch of the most backlogged peer
-            let victim = (0..g.queues.len())
-                .filter(|&i| i != replica && !g.queues[i].is_empty())
-                .max_by_key(|&i| g.queues[i].len());
-            if let Some(v) = victim {
-                let b = g.queues[v].pop_front().unwrap();
-                g.inflight[replica] += 1;
-                return Some((b, true));
+            if let Some(got) = WorkQueues::take_locked(&mut g, replica) {
+                return Some(got);
             }
             if g.closed {
                 return None;
             }
             g = self.available.wait(g).unwrap();
         }
+    }
+
+    /// Non-blocking pop for a replica whose decode loop is mid-generation:
+    /// same own-queue-then-steal policy as [`pop`](WorkQueues::pop), but
+    /// never waits — the caller has decode steps to run. A returned batch
+    /// counts as in-flight until [`done`](WorkQueues::done).
+    pub fn try_pop(&self, replica: usize) -> TryPop {
+        let mut g = self.inner.lock().unwrap();
+        match WorkQueues::take_locked(&mut g, replica) {
+            Some((b, stolen)) => TryPop::Batch(b, stolen),
+            None if g.closed => TryPop::Closed,
+            None => TryPop::Empty,
+        }
+    }
+
+    /// As [`pop`](WorkQueues::pop) but gives up after `timeout` when
+    /// nothing arrives (`TryPop::Empty`). What an otherwise-idle replica
+    /// with a hot-swap staging in flight waits with, so a plan staged
+    /// during the tail of a burst is still flipped promptly instead of
+    /// sitting until the next arrival.
+    pub fn pop_timeout(&self, replica: usize, timeout: Duration) -> TryPop {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some((b, stolen)) = WorkQueues::take_locked(&mut g, replica) {
+                return TryPop::Batch(b, stolen);
+            }
+            if g.closed {
+                return TryPop::Closed;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return TryPop::Empty;
+            }
+            let (guard, _timeout) = self.available.wait_timeout(g, left).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Publish `replica`'s decode-scheduler load (pending + active
+    /// generations) into the router's load signal.
+    pub fn note_decode_load(&self, replica: usize, seqs: usize) {
+        self.inner.lock().unwrap().decode[replica] = seqs;
     }
 
     /// Mark the batch last popped by `replica` as executed. Wakes capacity
@@ -191,13 +261,20 @@ impl WorkQueues {
         self.inner.lock().unwrap().queues[replica].len()
     }
 
-    /// Queued + in-flight batches per replica — the router's backlog
-    /// signal. Counting in-flight work is what stops the router from
-    /// piling batches onto a replica whose deque merely *looks* empty
-    /// because it popped everything into execution.
+    /// Queued + in-flight batches + decode-scheduler sequences per
+    /// replica — the router's backlog signal. Counting in-flight work is
+    /// what stops the router from piling batches onto a replica whose
+    /// deque merely *looks* empty because it popped everything into
+    /// execution; counting decode sequences steers new work away from
+    /// replicas mid-generation.
     pub fn loads(&self) -> Vec<usize> {
         let g = self.inner.lock().unwrap();
-        g.queues.iter().zip(&g.inflight).map(|(q, &f)| q.len() + f).collect()
+        g.queues
+            .iter()
+            .zip(&g.inflight)
+            .zip(&g.decode)
+            .map(|((q, &f), &d)| q.len() + f + d)
+            .collect()
     }
 }
 
@@ -228,6 +305,10 @@ pub struct ReplicaStatus {
     /// `(scheme, useful_rows, busy_s)` — the router's input for measured
     /// affinity speeds ([`crate::coordinator::cluster::measured_speeds`]).
     pub scheme_rows: Vec<(RuntimeScheme, usize, f64)>,
+    /// Generations on this replica's decode scheduler (pending + active).
+    pub decode_seqs: usize,
+    /// Tokens generated and streamed so far.
+    pub generated_tokens: usize,
 }
 
 impl ReplicaStatus {
@@ -250,6 +331,8 @@ impl ReplicaStatus {
             replans: 0,
             qos_served: [0; 3],
             scheme_rows: Vec::new(),
+            decode_seqs: 0,
+            generated_tokens: 0,
         }
     }
 }
@@ -278,13 +361,28 @@ pub struct ReplicaSpec {
     /// Grouped-dispatch worker threads per replica (`None` = engine
     /// default).
     pub dispatch_threads: Option<usize>,
+    /// Decode-loop sizing (step row budget, active-sequence cap, KV
+    /// reservation budget).
+    pub decode: DecodePolicy,
 }
 
 /// Replica thread body: build the engine (own PJRT client, own plan), then
-/// pop → shed cancelled → execute → reply → maybe-replan → publish until
-/// the queues close. `admission` carries cancellation accounting back to
-/// the front door and feeds the service-rate estimate its load-shedding
-/// projections run on.
+/// serve until the queues close. `admission` carries cancellation
+/// accounting back to the front door and feeds the service-rate estimate
+/// its load-shedding projections run on.
+///
+/// Since the decode redesign (DESIGN.md §Decode-Loop) the loop runs at two
+/// granularities: scoring batches execute whole (the legacy path), while
+/// generation requests join the replica's [`DecodeScheduler`] and advance
+/// one *step* per loop turn. A replica with live generations never blocks
+/// on its deque — it takes at most one queued batch per turn without
+/// waiting ([`WorkQueues::try_pop`]) and keeps stepping, so freshly routed
+/// work merges into the next mixed prefill/decode batch and a sustained
+/// scoring stream cannot starve decode. Hot-swap staging is polled between
+/// turns: the re-quantization runs on a worker thread ([`ReplanStaging`]),
+/// only the generation-counted flip happens here, and an idle replica
+/// waits with a *bounded* pop ([`WorkQueues::pop_timeout`]) while a
+/// staging is in flight so a finished swap is installed promptly.
 pub fn replica_main(
     spec: ReplicaSpec,
     queues: Arc<WorkQueues>,
@@ -312,29 +410,139 @@ pub fn replica_main(
             engine.set_telemetry_alpha(a);
         }
     }
-    let mut published_gen = publish(&spec, &engine, &status, 0, None);
+    let mut decoder = DecodeScheduler::new(&spec.cfg, spec.decode);
+    let mut staging: Option<ReplanStaging> = None;
+    let mut published_gen = publish(&spec, &engine, &decoder, &status, 0, None);
     let mut batches_done = 0usize;
     let mut stolen = 0usize;
-    while let Some((mut batch, was_stolen)) = queues.pop(spec.id) {
-        if was_stolen {
-            stolen += 1;
+    loop {
+        // ---- acquire work: block only when the decode loop is idle AND
+        // no staged swap is waiting. Mid-generation the pop is
+        // non-blocking and bounded to one batch per turn, so a sustained
+        // scoring stream interleaves with decode steps instead of
+        // starving them; with a staging in flight the wait is bounded so
+        // an idle replica still flips the plan promptly ----
+        if decoder.has_work() {
+            match queues.try_pop(spec.id) {
+                TryPop::Batch(batch, was_stolen) => {
+                    if was_stolen {
+                        stolen += 1;
+                    }
+                    batches_done += 1;
+                    handle_batch(&mut engine, &mut decoder, &queues, &admission, spec.id, batch);
+                }
+                TryPop::Empty | TryPop::Closed => {}
+            }
+        } else if staging.is_some() {
+            match queues.pop_timeout(spec.id, Duration::from_millis(5)) {
+                TryPop::Batch(batch, was_stolen) => {
+                    if was_stolen {
+                        stolen += 1;
+                    }
+                    batches_done += 1;
+                    handle_batch(&mut engine, &mut decoder, &queues, &admission, spec.id, batch);
+                }
+                TryPop::Empty => {} // fall through to the staging poll
+                TryPop::Closed => break,
+            }
+        } else {
+            match queues.pop(spec.id) {
+                Some((batch, was_stolen)) => {
+                    if was_stolen {
+                        stolen += 1;
+                    }
+                    batches_done += 1;
+                    handle_batch(&mut engine, &mut decoder, &queues, &admission, spec.id, batch);
+                }
+                None => break, // closed, drained, and no generation in flight
+            }
         }
-        // cancellation propagated through the deques: dead entries are
-        // shed here instead of executing, whether the batch was routed to
-        // this replica or stolen from a peer
-        let shed = batch.shed_cancelled();
-        if shed > 0 {
-            admission.note_cancelled(shed);
-            engine.metrics_mut().shed_cancelled += shed;
+        // ---- one decode step between pops: mixed prefill chunks +
+        // single-token decode rows, cut against the tile budget ----
+        if decoder.has_work() {
+            run_decode_step(&mut engine, &mut decoder, &admission);
         }
-        if batch.requests.is_empty() {
-            queues.done(spec.id);
-            continue;
+        queues.note_decode_load(spec.id, decoder.load());
+        // ---- online loop strictly between batches/steps: flip a staged
+        // swap when the worker is done, begin a new staging on drift ----
+        if let Some(online) = &spec.online {
+            if staging.as_ref().map_or(false, |s| s.finished()) {
+                let st = staging.take().unwrap();
+                match engine.finish_replan(st) {
+                    Ok(outcome) => eprintln!(
+                        "replica {}: replan drift {:.3} → {} slot(s) changed, {} swapped (gen {})",
+                        spec.id,
+                        outcome.drift,
+                        outcome.changes,
+                        outcome.swapped,
+                        engine.generation()
+                    ),
+                    Err(e) => eprintln!(
+                        "replica {}: replan failed (serving continues on old plan): {e:#}",
+                        spec.id
+                    ),
+                }
+            }
+            if staging.is_none() {
+                match engine.maybe_begin_replan(&online.replanner) {
+                    Ok(Some(st)) => staging = Some(st),
+                    Ok(None) => {}
+                    Err(e) => eprintln!(
+                        "replica {}: replan solve failed (serving continues): {e:#}",
+                        spec.id
+                    ),
+                }
+            }
         }
-        engine.metrics_mut().note_queue_depth(queues.depth(spec.id));
-        let batch_tokens = batch.tokens();
+        published_gen = publish(&spec, &engine, &decoder, &status, batches_done, Some(published_gen));
+    }
+    // join a straggling staging worker so it is never leaked; applying it
+    // at shutdown is harmless (nothing serves afterwards)
+    if let Some(st) = staging.take() {
+        if let Err(e) = engine.finish_replan(st) {
+            eprintln!("replica {}: shutdown replan join failed: {e:#}", spec.id);
+        }
+    }
+    collect_report(&spec, &engine, batches_done, stolen)
+}
+
+/// Handle one popped batch: shed cancellations, route generations into the
+/// decode scheduler, execute the scoring remainder as one whole-sequence
+/// forward (the legacy path, bit-identical batch composition).
+fn handle_batch(
+    engine: &mut ServingEngine,
+    decoder: &mut DecodeScheduler,
+    queues: &WorkQueues,
+    admission: &AdmissionState,
+    replica: usize,
+    mut batch: RoutedBatch,
+) {
+    // cancellation propagated through the deques: dead entries are shed
+    // here instead of executing, whether the batch was routed to this
+    // replica or stolen from a peer
+    let shed = batch.shed_cancelled();
+    if shed > 0 {
+        admission.note_cancelled(shed);
+        engine.metrics_mut().shed_cancelled += shed;
+    }
+    if batch.requests.is_empty() {
+        queues.done(replica);
+        return;
+    }
+    engine.metrics_mut().note_queue_depth(queues.depth(replica));
+    let mut scoring = Vec::with_capacity(batch.requests.len());
+    for r in batch.requests.drain(..) {
+        if r.kind.is_generate() {
+            decoder.admit(r);
+        } else {
+            scoring.push(r);
+        }
+    }
+    if !scoring.is_empty() {
+        let scoring_batch = RoutedBatch { requests: scoring };
+        let batch_tokens = scoring_batch.tokens();
         let exec_started = Instant::now();
-        let (suppressed, failed) = process_batch(&mut engine, batch);
+        let (suppressed, failed) = process_batch(engine, scoring_batch);
         admission.note_service(batch_tokens, exec_started.elapsed());
         if suppressed > 0 {
             // cancelled after the cut raced execution: the work ran, but
@@ -344,30 +552,61 @@ pub fn replica_main(
         // a failed forward produced no replies: account for the whole
         // batch so admitted == responses + cancelled + failed stays exact
         admission.note_failed(failed);
-        queues.done(spec.id);
-        batches_done += 1;
-        // the online loop runs strictly between batches: in-flight work
-        // always completes on the generation it started on
-        if let Some(online) = &spec.online {
-            match engine.maybe_replan(&online.replanner) {
-                Ok(Some(outcome)) => eprintln!(
-                    "replica {}: replan drift {:.3} → {} slot(s) changed, {} swapped (gen {})",
-                    spec.id,
-                    outcome.drift,
-                    outcome.changes,
-                    outcome.swapped,
-                    engine.generation()
-                ),
-                Ok(None) => {}
-                Err(e) => eprintln!(
-                    "replica {}: replan failed (serving continues on old plan): {e:#}",
-                    spec.id
-                ),
-            }
-        }
-        published_gen = publish(&spec, &engine, &status, batches_done, Some(published_gen));
     }
-    collect_report(&spec, &engine, batches_done, stolen)
+    queues.done(replica);
+}
+
+/// Run one decode step and account for everything it did: service-rate
+/// samples, decode metrics, terminal replies (suppressed for cancelled
+/// tickets), and the cancellation/failure bookkeeping that keeps
+/// `admitted == responses + cancelled + failed` exact.
+fn run_decode_step(
+    engine: &mut ServingEngine,
+    decoder: &mut DecodeScheduler,
+    admission: &AdmissionState,
+) {
+    let t0 = Instant::now();
+    let outcome = decoder.step(|inputs| engine.forward_step_batch(inputs));
+    let elapsed = t0.elapsed();
+    if outcome.rows > 0 {
+        admission.note_service(outcome.rows, elapsed);
+        if let Some(est) = outcome.fill {
+            engine.metrics_mut().note_planned_fill(est.fill_ratio());
+        }
+        engine.metrics_mut().record_decode_step(
+            outcome.prefill_rows,
+            outcome.decode_rows,
+            outcome.tokens_emitted,
+            outcome.finished.len(),
+            elapsed.as_secs_f64(),
+        );
+    }
+    admission.note_cancelled(outcome.cancelled.len());
+    admission.note_failed(outcome.failed.len());
+    let generation = engine.generation();
+    let mut late_cancels = 0usize;
+    for fin in outcome.finished {
+        if fin.request.is_cancelled() {
+            // cancelled in the same step it finished: the work ran, but a
+            // cancelled ticket never yields a response
+            late_cancels += 1;
+            continue;
+        }
+        let latency = fin.request.arrived.elapsed();
+        let metrics = engine.metrics_mut();
+        metrics.record_request(latency.as_secs_f64(), fin.request.tokens.len() + fin.generated);
+        metrics.record_queue_wait(fin.queue_wait.as_secs_f64(), fin.request.priority);
+        metrics.note_qos(fin.request.qos);
+        let _ = fin.request.reply.send(Response {
+            next_token: fin.last_token.unwrap_or(0),
+            mean_nll: fin.mean_prompt_nll,
+            latency,
+            queue_wait: fin.queue_wait,
+            generation,
+        });
+    }
+    admission.note_cancelled(late_cancels);
+    engine.metrics_mut().note_kv_occupancy(&decoder.occupancy());
 }
 
 /// Publish this replica's live state to the status board. The scheme table
@@ -376,6 +615,7 @@ pub fn replica_main(
 fn publish(
     spec: &ReplicaSpec,
     engine: &ServingEngine,
+    decoder: &DecodeScheduler,
     status: &[Mutex<ReplicaStatus>],
     batches_done: usize,
     published_gen: Option<u64>,
@@ -393,6 +633,8 @@ fn publish(
     s.replans = engine.metrics().replans;
     s.qos_served = engine.metrics().qos_served;
     s.scheme_rows = measured_scheme_rows(engine);
+    s.decode_seqs = decoder.load();
+    s.generated_tokens = engine.metrics().generated_tokens;
     generation
 }
 
@@ -512,6 +754,14 @@ fn collect_report(
         latencies: m.latencies().to_vec(),
         queue_waits: m.queue_waits().to_vec(),
         wave_latencies: m.wave_latency_samples().to_vec(),
+        decode_steps: m.decode_steps,
+        prefill_rows: m.prefill_rows,
+        decode_rows: m.decode_rows,
+        generated_tokens: m.generated_tokens,
+        generations: m.generations,
+        step_latencies: m.step_latency_samples().to_vec(),
+        kv_peak_tokens: m.kv_peak_tokens,
+        kv_budget_tokens: m.kv_budget_tokens,
         elapsed_s: m.elapsed(),
     }
 }
@@ -609,6 +859,69 @@ mod tests {
         q.mark_dead(0);
         q.mark_dead(1);
         assert!(!q.wait_for_capacity(), "all replicas dead — no capacity ever");
+    }
+
+    #[test]
+    fn try_pop_never_blocks_and_tracks_inflight() {
+        let q = WorkQueues::new(2);
+        assert!(matches!(q.try_pop(0), TryPop::Empty), "nothing queued");
+        q.push(0, batch(3));
+        match q.try_pop(0) {
+            TryPop::Batch(b, stolen) => {
+                assert_eq!(b.tokens(), 3);
+                assert!(!stolen);
+            }
+            _ => panic!("own batch expected"),
+        }
+        assert_eq!(q.loads(), vec![1, 0], "in-flight until done");
+        q.done(0);
+        // steal path
+        q.push(1, batch(5));
+        match q.try_pop(0) {
+            TryPop::Batch(b, stolen) => {
+                assert_eq!(b.tokens(), 5);
+                assert!(stolen);
+            }
+            _ => panic!("steal expected"),
+        }
+        q.done(0);
+        q.close();
+        assert!(matches!(q.try_pop(0), TryPop::Closed), "closed + drained");
+    }
+
+    #[test]
+    fn pop_timeout_bounds_the_wait_and_still_delivers() {
+        let q = WorkQueues::new(1);
+        // nothing queued: gives up after the timeout instead of blocking
+        let t0 = std::time::Instant::now();
+        assert!(matches!(q.pop_timeout(0, Duration::from_millis(10)), TryPop::Empty));
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        // a concurrent push wakes the bounded wait like the blocking pop
+        let q2 = q.clone();
+        let t = thread::spawn(move || {
+            matches!(q2.pop_timeout(0, Duration::from_secs(5)), TryPop::Batch(_, _))
+        });
+        thread::sleep(Duration::from_millis(20));
+        q.push(0, batch(3));
+        assert!(t.join().unwrap(), "push must wake the bounded wait");
+        q.done(0);
+        q.close();
+        assert!(matches!(q.pop_timeout(0, Duration::from_millis(1)), TryPop::Closed));
+    }
+
+    #[test]
+    fn decode_load_counts_toward_loads_but_not_capacity() {
+        let q = WorkQueues::new(2);
+        q.note_decode_load(0, 3);
+        q.note_decode_load(1, 2);
+        assert_eq!(q.loads(), vec![3, 2], "decode sequences are router load");
+        assert!(
+            q.wait_for_capacity(),
+            "decoding replicas still count as capacity (they merge work per step)"
+        );
+        q.note_decode_load(0, 0);
+        q.note_decode_load(1, 0);
+        assert_eq!(q.loads(), vec![0, 0]);
     }
 
     #[test]

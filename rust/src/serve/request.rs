@@ -103,6 +103,40 @@ impl QosClass {
     }
 }
 
+/// What the request asks the cluster to do with its tokens.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeKind {
+    /// Whole-sequence scoring: one forward, one [`Response`].
+    Score,
+    /// KV-cached generation (DESIGN.md §Decode-Loop): prefill the prompt,
+    /// then greedy-decode up to `max_new_tokens` new tokens, streaming
+    /// each one through the ticket as it lands. Decoding stops early when
+    /// a `stop` token is generated (the stop token itself is streamed).
+    Generate { max_new_tokens: usize, stop: Vec<u32> },
+}
+
+/// Why a generation stopped (terminal [`StreamEvent::Done`] payload).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// A stop token was generated.
+    Stop,
+    /// `max_new_tokens` tokens were generated.
+    Length,
+    /// The ticket was cancelled between decode steps.
+    Cancelled,
+    /// The engine's step forward failed (see the replica log).
+    Failed,
+}
+
+/// One event on a generation ticket's token stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamEvent {
+    /// A generated token and its index in the generated suffix (0-based).
+    Token { token: u32, index: usize },
+    /// Terminal event: the generation finished with `generated` tokens.
+    Done { reason: FinishReason, generated: usize },
+}
+
 /// A typed serving request: tokens plus QoS knobs, built fluently.
 ///
 /// ```ignore
@@ -111,6 +145,10 @@ impl QosClass {
 ///     .deadline(Duration::from_millis(250))
 ///     .qos(QosClass::Interactive);
 /// let ticket = cluster.submit_request(req)?;
+///
+/// // KV-cached generation with token streaming:
+/// let ticket = cluster.submit_request(ServeRequest::generate(prompt, 32, vec![eos]))?;
+/// while let Ok(StreamEvent::Token { token, .. }) = ticket.wait_event(timeout) { … }
 /// ```
 #[derive(Clone, Debug)]
 pub struct ServeRequest {
@@ -121,11 +159,30 @@ pub struct ServeRequest {
     /// shedding; `None` means no deadline.
     pub ttl: Option<Duration>,
     pub qos: Option<QosClass>,
+    pub kind: ServeKind,
 }
 
 impl ServeRequest {
     pub fn new(tokens: Vec<u32>) -> ServeRequest {
-        ServeRequest { tokens, priority: Priority::Normal, ttl: None, qos: None }
+        ServeRequest {
+            tokens,
+            priority: Priority::Normal,
+            ttl: None,
+            qos: None,
+            kind: ServeKind::Score,
+        }
+    }
+
+    /// A generation request: prefill `prompt`, then decode up to
+    /// `max_new_tokens` greedy tokens, stopping early on any of `stop`.
+    /// The returned ticket streams tokens as they land
+    /// ([`Ticket::wait_event`]) and still yields a final [`Response`]
+    /// ([`Ticket::wait`]) so admission accounting is uniform across kinds.
+    pub fn generate(prompt: Vec<u32>, max_new_tokens: usize, stop: Vec<u32>) -> ServeRequest {
+        ServeRequest {
+            kind: ServeKind::Generate { max_new_tokens, stop },
+            ..ServeRequest::new(prompt)
+        }
     }
 
     pub fn priority(mut self, p: Priority) -> ServeRequest {
@@ -143,6 +200,13 @@ impl ServeRequest {
         self.qos = Some(q);
         self
     }
+
+    /// True for the traffic classes the admission quota protects: `High`
+    /// priority or `Interactive` QoS (see
+    /// [`AdmissionConfig::privileged_reserve`]).
+    pub fn is_privileged(&self) -> bool {
+        self.priority == Priority::High || self.qos == Some(QosClass::Interactive)
+    }
 }
 
 /// Why admission turned a request away.
@@ -153,6 +217,11 @@ pub enum RejectReason {
     /// The projected queue wait already exceeds the request's deadline —
     /// executing it would only burn capacity on a guaranteed miss.
     DeadlineUnmeetable,
+    /// The unreserved share of the queue is exhausted: remaining slots are
+    /// held back for `High`/`Interactive` traffic
+    /// ([`AdmissionConfig::privileged_reserve`]), so this unprivileged
+    /// request is shed even though the queue is not yet at its full bound.
+    ClassQuota,
 }
 
 /// Outcome of a non-blocking submission.
@@ -186,12 +255,71 @@ pub struct Ticket {
     pub(crate) rx: mpsc::Receiver<Response>,
     pub(crate) cancel: Arc<AtomicBool>,
     pub(crate) id: u64,
+    /// Token stream of a generation request (`None` for scoring). Events
+    /// arrive one per decode step; the terminal event is
+    /// [`StreamEvent::Done`].
+    pub(crate) stream: Option<mpsc::Receiver<StreamEvent>>,
 }
 
 impl Ticket {
     /// Admission-assigned request id (unique per cluster).
     pub fn id(&self) -> u64 {
         self.id
+    }
+
+    /// True when this ticket carries a generation token stream.
+    pub fn is_generation(&self) -> bool {
+        self.stream.is_some()
+    }
+
+    /// Non-blocking stream poll: the next [`StreamEvent`] if one has
+    /// landed. Always `None` for scoring tickets — and always `None` after
+    /// [`cancel`](Self::cancel): a cancelled ticket never yields events,
+    /// even ones that raced the cancellation into the channel.
+    pub fn try_next_event(&self) -> Option<StreamEvent> {
+        if self.is_cancelled() {
+            return None;
+        }
+        self.stream.as_ref()?.try_recv().ok()
+    }
+
+    /// Block up to `timeout` for the next stream event. Errors for scoring
+    /// tickets, after cancellation, or once the serving side closed the
+    /// stream (the terminal [`StreamEvent::Done`] has already been read).
+    pub fn wait_event(&self, timeout: Duration) -> anyhow::Result<StreamEvent> {
+        if self.is_cancelled() {
+            anyhow::bail!("ticket {} cancelled", self.id);
+        }
+        let stream = self
+            .stream
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("ticket {} is not a generation", self.id))?;
+        stream
+            .recv_timeout(timeout)
+            .map_err(|e| anyhow::anyhow!("ticket {} stream: {e}", self.id))
+    }
+
+    /// Drain the stream until [`StreamEvent::Done`] (or `timeout` per
+    /// event), returning the generated tokens and the finish reason. Call
+    /// from a fresh ticket: the terminal event's `generated` count is
+    /// cross-checked against the tokens read *by this call*, so events
+    /// consumed earlier via [`wait_event`](Self::wait_event) would trip
+    /// the accounting check.
+    pub fn collect_tokens(&self, timeout: Duration) -> anyhow::Result<(Vec<u32>, FinishReason)> {
+        let mut tokens = Vec::new();
+        loop {
+            match self.wait_event(timeout)? {
+                StreamEvent::Token { token, .. } => tokens.push(token),
+                StreamEvent::Done { reason, generated } => {
+                    anyhow::ensure!(
+                        generated == tokens.len(),
+                        "stream accounting: Done says {generated}, saw {}",
+                        tokens.len()
+                    );
+                    return Ok((tokens, reason));
+                }
+            }
+        }
     }
 
     /// Non-blocking poll. `None` while pending — and always `None` after
@@ -256,6 +384,15 @@ pub struct AdmissionConfig {
     /// Reject requests whose deadline the projected queue wait already
     /// blows (needs a service-rate estimate; admits until warmed up).
     pub shed_on_projected_miss: bool,
+    /// Fraction of `max_queued_seqs` reserved for privileged traffic
+    /// (`High` priority or `Interactive` QoS): unprivileged requests are
+    /// bounded at `max_queued_seqs - ceil(reserve)` slots, so a `Low`
+    /// flood can fill at most the unreserved share and interactive
+    /// arrivals always find queue room. `0.0` (the default) disables the
+    /// quota — admission fairness is an explicit policy choice, and at
+    /// least one unreserved slot always remains so unprivileged traffic is
+    /// delayed, never locked out.
+    pub privileged_reserve: f64,
 }
 
 impl Default for AdmissionConfig {
@@ -267,7 +404,18 @@ impl Default for AdmissionConfig {
             max_queued_tokens: 1 << 22,
             submit_budget: Duration::from_secs(30),
             shed_on_projected_miss: true,
+            privileged_reserve: 0.0,
         }
+    }
+}
+
+impl AdmissionConfig {
+    /// Sequence bound for unprivileged traffic: the full bound minus the
+    /// privileged reservation, floored at one slot.
+    pub fn unprivileged_seq_bound(&self) -> usize {
+        let reserve = (self.max_queued_seqs as f64 * self.privileged_reserve.clamp(0.0, 1.0))
+            .ceil() as usize;
+        self.max_queued_seqs.saturating_sub(reserve).max(1)
     }
 }
 
@@ -278,6 +426,9 @@ pub struct AdmissionReport {
     pub admitted: usize,
     pub rejected_queue_full: usize,
     pub rejected_deadline: usize,
+    /// Unprivileged requests shed by the class quota while reserved slots
+    /// remained (admission fairness).
+    pub rejected_quota: usize,
     /// Admitted requests that never produced a response because they were
     /// cancelled: shed at a batch cut, shed at a replica pop, or
     /// suppressed at reply time after a late cancel.
@@ -289,7 +440,7 @@ pub struct AdmissionReport {
 
 impl AdmissionReport {
     pub fn rejected(&self) -> usize {
-        self.rejected_queue_full + self.rejected_deadline
+        self.rejected_queue_full + self.rejected_deadline + self.rejected_quota
     }
 
     /// Every admitted request is accounted for exactly once at a drained
@@ -360,37 +511,44 @@ impl AdmissionState {
     }
 
     /// Non-blocking admission decision for a `tokens`-token request with
-    /// an optional deadline TTL. On success the request counts as queued
-    /// until [`note_cut`](Self::note_cut)/[`note_shed_at_cut`](Self::note_shed_at_cut)
+    /// an optional deadline TTL. `privileged` requests (`High` priority or
+    /// `Interactive` QoS — see [`ServeRequest::is_privileged`]) may use the
+    /// reserved share of the queue; the rest are bounded at
+    /// [`AdmissionConfig::unprivileged_seq_bound`]. On success the request
+    /// counts as queued until
+    /// [`note_cut`](Self::note_cut)/[`note_shed_at_cut`](Self::note_shed_at_cut)
     /// releases it; the returned id is the ticket id.
     pub fn try_admit(
         &self,
         cfg: &AdmissionConfig,
         tokens: usize,
         ttl: Option<Duration>,
+        privileged: bool,
     ) -> Result<u64, (RejectReason, Duration)> {
         let mut g = self.inner.lock().unwrap();
-        self.admit_locked(&mut g, cfg, tokens, ttl)
+        self.admit_locked(&mut g, cfg, tokens, ttl, privileged)
     }
 
     /// Blocking admission: wait up to `cfg.submit_budget` for queue room.
     /// Projected-deadline rejection still applies — waiting only makes a
-    /// doomed deadline worse.
+    /// doomed deadline worse. A quota rejection waits like queue-full:
+    /// drain frees unreserved slots too.
     pub fn admit_blocking(
         &self,
         cfg: &AdmissionConfig,
         tokens: usize,
         ttl: Option<Duration>,
+        privileged: bool,
     ) -> Result<u64, (RejectReason, Duration)> {
         let deadline = Instant::now() + cfg.submit_budget;
         let mut g = self.inner.lock().unwrap();
         loop {
-            match self.admit_locked(&mut g, cfg, tokens, ttl) {
+            match self.admit_locked(&mut g, cfg, tokens, ttl, privileged) {
                 Ok(id) => return Ok(id),
                 Err((RejectReason::DeadlineUnmeetable, r)) => {
                     return Err((RejectReason::DeadlineUnmeetable, r))
                 }
-                Err(full @ (RejectReason::QueueFull, _)) => {
+                Err(full) => {
                     let left = deadline.saturating_duration_since(Instant::now());
                     if left.is_zero() {
                         return Err(full);
@@ -408,18 +566,25 @@ impl AdmissionState {
         cfg: &AdmissionConfig,
         tokens: usize,
         ttl: Option<Duration>,
+        privileged: bool,
     ) -> Result<u64, (RejectReason, Duration)> {
         let drain = self.drain_rate(g);
+        // crude drain projection: half the backlog at the cluster rate
+        let backlog_retry = if drain > 0.0 {
+            clamp_retry(Duration::from_secs_f64(g.queued_tokens as f64 / drain / 2.0))
+        } else {
+            RETRY_DEFAULT
+        };
         if g.queued_seqs + 1 > cfg.max_queued_seqs || g.queued_tokens + tokens > cfg.max_queued_tokens
         {
             g.report.rejected_queue_full += 1;
-            // crude drain projection: half the backlog at the cluster rate
-            let retry = if drain > 0.0 {
-                clamp_retry(Duration::from_secs_f64(g.queued_tokens as f64 / drain / 2.0))
-            } else {
-                RETRY_DEFAULT
-            };
-            return Err((RejectReason::QueueFull, retry));
+            return Err((RejectReason::QueueFull, backlog_retry));
+        }
+        if !privileged && g.queued_seqs + 1 > cfg.unprivileged_seq_bound() {
+            // inside the full bound but past the unreserved share: the
+            // remaining slots are held for High/Interactive arrivals
+            g.report.rejected_quota += 1;
+            return Err((RejectReason::ClassQuota, backlog_retry));
         }
         if cfg.shed_on_projected_miss {
             if let (Some(ttl), true) = (ttl, drain > 0.0) {
@@ -545,6 +710,7 @@ mod tests {
             max_queued_tokens: tokens,
             submit_budget: Duration::from_millis(50),
             shed_on_projected_miss: true,
+            privileged_reserve: 0.0,
         }
     }
 
@@ -553,6 +719,8 @@ mod tests {
         let r = ServeRequest::new(vec![1, 2, 3]);
         assert_eq!(r.priority, Priority::Normal);
         assert!(r.ttl.is_none() && r.qos.is_none());
+        assert_eq!(r.kind, ServeKind::Score);
+        assert!(!r.is_privileged());
         let r = r
             .priority(Priority::High)
             .deadline(Duration::from_millis(100))
@@ -560,6 +728,21 @@ mod tests {
         assert_eq!(r.priority, Priority::High);
         assert_eq!(r.ttl, Some(Duration::from_millis(100)));
         assert_eq!(r.qos, Some(QosClass::Interactive));
+        assert!(r.is_privileged());
+    }
+
+    #[test]
+    fn generate_builder_carries_decode_knobs() {
+        let r = ServeRequest::generate(vec![5, 6], 12, vec![0]);
+        assert_eq!(r.tokens, vec![5, 6]);
+        assert_eq!(r.kind, ServeKind::Generate { max_new_tokens: 12, stop: vec![0] });
+        assert_eq!(r.priority, Priority::Normal, "QoS knobs still default");
+        let r = r.priority(Priority::High).qos(QosClass::Interactive);
+        assert!(r.is_privileged());
+        assert!(matches!(r.kind, ServeKind::Generate { .. }), "knobs preserve the kind");
+        // Interactive QoS alone is privileged too
+        assert!(ServeRequest::new(vec![1]).qos(QosClass::Interactive).is_privileged());
+        assert!(!ServeRequest::new(vec![1]).priority(Priority::Normal).is_privileged());
     }
 
     #[test]
@@ -578,15 +761,15 @@ mod tests {
     fn queue_depth_bound_rejects_and_drain_readmits() {
         let a = AdmissionState::new(1);
         let c = cfg(2, 1_000_000);
-        let id1 = a.try_admit(&c, 10, None).unwrap();
-        let id2 = a.try_admit(&c, 10, None).unwrap();
+        let id1 = a.try_admit(&c, 10, None, false).unwrap();
+        let id2 = a.try_admit(&c, 10, None, false).unwrap();
         assert!(id2 > id1, "ids are unique and increasing");
-        let (reason, retry) = a.try_admit(&c, 10, None).unwrap_err();
+        let (reason, retry) = a.try_admit(&c, 10, None, false).unwrap_err();
         assert_eq!(reason, RejectReason::QueueFull);
         assert!(retry >= RETRY_MIN);
         assert_eq!(a.queued(), (2, 20));
         a.note_cut(1, 10);
-        assert!(a.try_admit(&c, 10, None).is_ok(), "drain frees a slot");
+        assert!(a.try_admit(&c, 10, None, false).is_ok(), "drain frees a slot");
         let r = a.report();
         assert_eq!((r.admitted, r.rejected_queue_full), (3, 1));
     }
@@ -595,10 +778,10 @@ mod tests {
     fn token_bound_rejects_independently_of_seq_bound() {
         let a = AdmissionState::new(1);
         let c = cfg(100, 64);
-        a.try_admit(&c, 60, None).unwrap();
-        let (reason, _) = a.try_admit(&c, 10, None).unwrap_err();
+        a.try_admit(&c, 60, None, false).unwrap();
+        let (reason, _) = a.try_admit(&c, 10, None, false).unwrap_err();
         assert_eq!(reason, RejectReason::QueueFull);
-        assert!(a.try_admit(&c, 4, None).is_ok(), "small request still fits");
+        assert!(a.try_admit(&c, 4, None, false).is_ok(), "small request still fits");
     }
 
     #[test]
@@ -606,17 +789,17 @@ mod tests {
         let a = AdmissionState::new(1);
         let c = cfg(100, 1_000_000);
         // no rate estimate yet: deadline requests are admitted on faith
-        a.try_admit(&c, 100, Some(Duration::from_millis(1))).unwrap();
+        a.try_admit(&c, 100, Some(Duration::from_millis(1)), false).unwrap();
         // 1000 tok/s measured; 200 queued tokens ⇒ ~200 ms projected wait
         a.note_service(1000, Duration::from_secs(1));
         let (reason, retry) =
-            a.try_admit(&c, 100, Some(Duration::from_millis(50))).unwrap_err();
+            a.try_admit(&c, 100, Some(Duration::from_millis(50)), false).unwrap_err();
         assert_eq!(reason, RejectReason::DeadlineUnmeetable);
         assert!(retry >= RETRY_MIN && retry <= RETRY_MAX);
         // a lax deadline on the same queue is fine
-        assert!(a.try_admit(&c, 100, Some(Duration::from_secs(10))).is_ok());
+        assert!(a.try_admit(&c, 100, Some(Duration::from_secs(10)), false).is_ok());
         // no deadline: projected-miss shedding never applies
-        assert!(a.try_admit(&c, 100, None).is_ok());
+        assert!(a.try_admit(&c, 100, None, false).is_ok());
         assert_eq!(a.report().rejected_deadline, 1);
     }
 
@@ -629,16 +812,16 @@ mod tests {
         let single = AdmissionState::new(1);
         let quad = AdmissionState::new(4);
         for a in [&single, &quad] {
-            a.try_admit(&c, 400, None).unwrap();
+            a.try_admit(&c, 400, None, false).unwrap();
             a.note_service(1000, Duration::from_secs(1)); // 1000 tok/s per replica
         }
         // 500 queued tokens: 1 replica projects 500ms, 4 replicas 125ms
         let ttl = Some(Duration::from_millis(200));
         assert_eq!(
-            single.try_admit(&c, 100, ttl).unwrap_err().0,
+            single.try_admit(&c, 100, ttl, false).unwrap_err().0,
             RejectReason::DeadlineUnmeetable
         );
-        assert!(quad.try_admit(&c, 100, ttl).is_ok(), "4-replica drain meets the deadline");
+        assert!(quad.try_admit(&c, 100, ttl, false).is_ok(), "4-replica drain meets the deadline");
     }
 
     #[test]
@@ -647,20 +830,20 @@ mod tests {
         let mut c = cfg(100, 1_000_000);
         c.shed_on_projected_miss = false;
         a.note_service(10, Duration::from_secs(1)); // 10 tok/s: everything projects late
-        assert!(a.try_admit(&c, 1000, Some(Duration::from_millis(1))).is_ok());
+        assert!(a.try_admit(&c, 1000, Some(Duration::from_millis(1)), false).is_ok());
     }
 
     #[test]
     fn blocking_admit_waits_for_drain_and_times_out() {
         let a = AdmissionState::new(1);
         let c = cfg(1, 1_000_000);
-        a.try_admit(&c, 10, None).unwrap();
+        a.try_admit(&c, 10, None, false).unwrap();
         // times out while full
-        let err = a.admit_blocking(&c, 10, None).unwrap_err();
+        let err = a.admit_blocking(&c, 10, None, false).unwrap_err();
         assert_eq!(err.0, RejectReason::QueueFull);
         // a concurrent drain unblocks the waiter
         let a2 = a.clone();
-        let t = thread::spawn(move || a2.admit_blocking(&cfg(1, 1_000_000), 10, None));
+        let t = thread::spawn(move || a2.admit_blocking(&cfg(1, 1_000_000), 10, None, false));
         thread::sleep(Duration::from_millis(10));
         a.note_cut(1, 10);
         assert!(t.join().unwrap().is_ok());
@@ -684,7 +867,7 @@ mod tests {
         let a = AdmissionState::new(1);
         let c = cfg(4, 1_000_000);
         for _ in 0..4 {
-            a.try_admit(&c, 10, None).unwrap();
+            a.try_admit(&c, 10, None, false).unwrap();
         }
         a.note_shed_at_cut(2, 20); // two cancelled at the cut
         a.note_cut(1, 10); // one cut into a batch
@@ -701,10 +884,100 @@ mod tests {
     }
 
     #[test]
+    fn class_quota_reserves_slots_for_privileged_traffic() {
+        let a = AdmissionState::new(1);
+        // 4 slots, 50% reserved: unprivileged traffic is bounded at 2
+        let c = AdmissionConfig { privileged_reserve: 0.5, ..cfg(4, 1_000_000) };
+        assert_eq!(c.unprivileged_seq_bound(), 2);
+        a.try_admit(&c, 10, None, false).unwrap();
+        a.try_admit(&c, 10, None, false).unwrap();
+        let (reason, retry) = a.try_admit(&c, 10, None, false).unwrap_err();
+        assert_eq!(reason, RejectReason::ClassQuota, "Low flood stops at the unreserved share");
+        assert!(retry >= RETRY_MIN);
+        // privileged traffic still finds the reserved room
+        a.try_admit(&c, 10, None, true).unwrap();
+        a.try_admit(&c, 10, None, true).unwrap();
+        let (reason, _) = a.try_admit(&c, 10, None, true).unwrap_err();
+        assert_eq!(reason, RejectReason::QueueFull, "full bound still applies to privileged");
+        let r = a.report();
+        assert_eq!(r.admitted, 4);
+        assert_eq!(r.rejected_quota, 1);
+        assert_eq!(r.rejected_queue_full, 1);
+        assert_eq!(r.rejected(), 2);
+        // drain below the unreserved share re-admits unprivileged traffic
+        a.note_cut(3, 30);
+        assert!(a.try_admit(&c, 10, None, false).is_ok());
+    }
+
+    #[test]
+    fn zero_reserve_disables_the_quota_and_keeps_one_slot_floor() {
+        let c = cfg(4, 1_000_000);
+        assert_eq!(c.unprivileged_seq_bound(), 4, "no reserve: full bound");
+        // a 100% reserve still leaves one unprivileged slot (delay, never
+        // lock out)
+        let all = AdmissionConfig { privileged_reserve: 1.0, ..cfg(4, 1_000_000) };
+        assert_eq!(all.unprivileged_seq_bound(), 1);
+        let a = AdmissionState::new(1);
+        a.try_admit(&all, 10, None, false).unwrap();
+        assert_eq!(
+            a.try_admit(&all, 10, None, false).unwrap_err().0,
+            RejectReason::ClassQuota
+        );
+    }
+
+    #[test]
+    fn blocking_admit_waits_out_a_quota_rejection() {
+        let a = AdmissionState::new(1);
+        let c = AdmissionConfig { privileged_reserve: 0.5, ..cfg(2, 1_000_000) };
+        a.try_admit(&c, 10, None, false).unwrap();
+        // unprivileged bound is 1: blocking submit times out while held
+        let err = a.admit_blocking(&c, 10, None, false).unwrap_err();
+        assert_eq!(err.0, RejectReason::ClassQuota);
+        // a drain unblocks the quota waiter like a queue-full waiter
+        let a2 = a.clone();
+        let c2 = c;
+        let t = thread::spawn(move || a2.admit_blocking(&c2, 10, None, false));
+        thread::sleep(Duration::from_millis(10));
+        a.note_cut(1, 10);
+        assert!(t.join().unwrap().is_ok());
+    }
+
+    #[test]
+    fn generation_ticket_streams_then_suppresses_after_cancel() {
+        let (tx, rx) = mpsc::channel();
+        let (stx, srx) = mpsc::channel();
+        let ticket =
+            Ticket { rx, cancel: Arc::new(AtomicBool::new(false)), id: 9, stream: Some(srx) };
+        assert!(ticket.is_generation());
+        assert!(ticket.try_next_event().is_none(), "nothing landed yet");
+        stx.send(StreamEvent::Token { token: 7, index: 0 }).unwrap();
+        stx.send(StreamEvent::Token { token: 8, index: 1 }).unwrap();
+        stx.send(StreamEvent::Done { reason: FinishReason::Length, generated: 2 }).unwrap();
+        let (tokens, reason) = ticket.collect_tokens(Duration::from_millis(10)).unwrap();
+        assert_eq!(tokens, vec![7, 8]);
+        assert_eq!(reason, FinishReason::Length);
+        // a raced event after cancel is never surfaced
+        stx.send(StreamEvent::Token { token: 9, index: 2 }).unwrap();
+        ticket.cancel();
+        assert!(ticket.try_next_event().is_none());
+        assert!(ticket.wait_event(Duration::from_millis(1)).is_err());
+        drop(tx);
+    }
+
+    #[test]
+    fn scoring_ticket_has_no_stream() {
+        let (_tx, rx) = mpsc::channel();
+        let ticket = Ticket { rx, cancel: Arc::new(AtomicBool::new(false)), id: 3, stream: None };
+        assert!(!ticket.is_generation());
+        assert!(ticket.try_next_event().is_none());
+        assert!(ticket.wait_event(Duration::from_millis(1)).is_err());
+    }
+
+    #[test]
     fn abort_rolls_back_an_admission() {
         let a = AdmissionState::new(1);
         let c = cfg(4, 100);
-        a.try_admit(&c, 10, None).unwrap();
+        a.try_admit(&c, 10, None, false).unwrap();
         a.abort_admit(10);
         assert_eq!(a.queued(), (0, 0));
         assert_eq!(a.report().admitted, 0);
@@ -713,7 +986,7 @@ mod tests {
     #[test]
     fn ticket_cancel_suppresses_a_raced_response() {
         let (tx, rx) = mpsc::channel();
-        let ticket = Ticket { rx, cancel: Arc::new(AtomicBool::new(false)), id: 7 };
+        let ticket = Ticket { rx, cancel: Arc::new(AtomicBool::new(false)), id: 7, stream: None };
         assert_eq!(ticket.id(), 7);
         assert!(ticket.poll().is_none(), "pending");
         // a response lands, then the cancel races in
@@ -735,7 +1008,7 @@ mod tests {
     #[test]
     fn ticket_waits_deliver_and_closed_channel_errors() {
         let (tx, rx) = mpsc::channel();
-        let ticket = Ticket { rx, cancel: Arc::new(AtomicBool::new(false)), id: 1 };
+        let ticket = Ticket { rx, cancel: Arc::new(AtomicBool::new(false)), id: 1, stream: None };
         tx.send(Response {
             next_token: 9,
             mean_nll: 1.0,

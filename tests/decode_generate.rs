@@ -1,0 +1,422 @@
+//! Integration: the token-level decode subsystem (DESIGN.md §Decode-Loop).
+//!
+//! Correctness anchor first: prefill-then-decode through the KV cache must
+//! be *bit-identical* to whole-sequence `forward_capture` on the same
+//! token sequence — natively for the raw fp16 model and for quantized
+//! blocks under mixed precision plans, where every op is row-independent
+//! and runs in the same accumulation order. Through the serving engine the
+//! same anchor holds per step composition: a cluster generation must match
+//! a directly-driven engine decode loop bit for bit, at 1 and 4 replicas,
+//! and a `max_new_tokens = 0` generation must reproduce the scoring path's
+//! response exactly. On top of that: stop-token/max-token termination,
+//! step-granular cancellation with KV reclamation (liveness: the freed
+//! budget admits the next generation), and the admission invariant
+//! `admitted == responses + cancelled + failed` extended to generations.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use mxmoe::coordinator::{Cluster, ClusterConfig, ServeConfig, ServingEngine};
+use mxmoe::harness::{mixed_runtime_plan, require_artifacts, require_mini_model, save_model_mxt};
+use mxmoe::moe::block::{uniform_schemes, WeightQuantizer};
+use mxmoe::moe::{ModelConfig, MoeLm, QuantizedMoeBlock};
+use mxmoe::quant::QuantScheme;
+use mxmoe::serve::{
+    DecodePolicy, DecodeScheduler, FinishReason, GenSpec, Request, RequestKind, SeqKv,
+    ServeRequest, StreamEvent, Ticket,
+};
+use mxmoe::util::Rng;
+
+const WAIT: Duration = Duration::from_secs(300);
+
+/// Serving-shape model (hidden=128, inter=64 — what the AOT export ships).
+fn serving_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "decode-test".into(),
+        vocab: 64,
+        hidden: 128,
+        layers: 2,
+        heads: 4,
+        n_experts: 4,
+        n_shared: 1,
+        topk: 2,
+        inter: 64,
+        dense_first: false,
+        seq_len: 16,
+    }
+}
+
+fn seq(cfg: &ModelConfig, rng: &mut Rng, len: usize) -> Vec<u32> {
+    (0..len).map(|_| rng.below(cfg.vocab as u64) as u32).collect()
+}
+
+fn boot_weights(name: &str, seed: u64) -> (ModelConfig, MoeLm, PathBuf) {
+    let cfg = serving_cfg();
+    let weights = std::env::temp_dir().join(format!("mxmoe_decode_{name}.mxt"));
+    let lm = MoeLm::random(&cfg, &mut Rng::new(seed));
+    save_model_mxt(&lm, &weights).unwrap();
+    (cfg, lm, weights)
+}
+
+fn start_cluster(
+    cfg: &ModelConfig,
+    weights: &PathBuf,
+    artifacts: &PathBuf,
+    replicas: usize,
+    decode: DecodePolicy,
+) -> Cluster {
+    Cluster::start(
+        cfg.clone(),
+        weights.clone(),
+        artifacts.clone(),
+        mixed_runtime_plan(cfg),
+        ClusterConfig {
+            replicas,
+            serve: ServeConfig {
+                max_batch_seqs: 1,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            decode,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Drain a generation ticket: stream tokens + finish reason + final
+/// response bits.
+fn collect_generation(ticket: &Ticket) -> (Vec<u32>, FinishReason, (u32, u64)) {
+    let (tokens, reason) = ticket.collect_tokens(WAIT).expect("token stream");
+    let resp = ticket.wait_timeout(WAIT).expect("final response");
+    (tokens, reason, (resp.next_token, resp.mean_nll.to_bits()))
+}
+
+// ---------------------------------------------------------------- native
+
+#[test]
+fn native_prefill_decode_bit_identical_to_forward_capture() {
+    // the correctness anchor, fp16: every split of prefill+decode must
+    // reproduce forward_capture's logits bit for bit (serving-shape model)
+    let (cfg, lm, _) = boot_weights("native", 0xDEC0);
+    let mut rng = Rng::new(0xDEC1);
+    let tokens = seq(&cfg, &mut rng, 12);
+    let (full, caps) = lm.forward_capture(&tokens);
+    assert_eq!(caps.len(), cfg.layers);
+    for split in [1usize, 4, 11] {
+        let mut cache = SeqKv::new(cfg.layers, cfg.hidden, tokens.len());
+        let prefill = lm.forward_step(&tokens[..split], &mut cache);
+        for pos in 0..split {
+            for c in 0..cfg.vocab {
+                assert_eq!(prefill.at(pos, c).to_bits(), full.at(pos, c).to_bits());
+            }
+        }
+        for pos in split..tokens.len() {
+            let step = lm.forward_step(&tokens[pos..pos + 1], &mut cache);
+            for c in 0..cfg.vocab {
+                assert_eq!(
+                    step.at(0, c).to_bits(),
+                    full.at(pos, c).to_bits(),
+                    "split {split}: decode logits diverged at ({pos}, {c})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn native_decode_matches_quantized_forward_across_mixed_plans() {
+    // mixed precision plans: per-layer scheme mixes through fake-quantized
+    // blocks — the decode path must track forward_quantized bit for bit
+    let (cfg, lm, _) = boot_weights("native_q", 0xDEC2);
+    let mut rng = Rng::new(0xDEC3);
+    let tokens = seq(&cfg, &mut rng, 10);
+    let plans: [Vec<QuantScheme>; 2] = [
+        vec![QuantScheme::W4A4, QuantScheme::W8A8],
+        vec![QuantScheme::W8A8, QuantScheme::FP16],
+    ];
+    for plan in &plans {
+        let blocks: Vec<QuantizedMoeBlock> = lm
+            .moe_blocks()
+            .iter()
+            .enumerate()
+            .map(|(pos, (_, b))| {
+                QuantizedMoeBlock::build(
+                    b,
+                    &uniform_schemes(b.total_experts(), plan[pos]),
+                    &WeightQuantizer::Rtn,
+                    None,
+                )
+                .unwrap()
+            })
+            .collect();
+        let replacements: HashMap<usize, &QuantizedMoeBlock> =
+            lm.moe_blocks().iter().map(|(l, _)| *l).zip(blocks.iter()).collect();
+        let full = lm.forward_quantized(&tokens, &replacements);
+        let mut cache = SeqKv::new(cfg.layers, cfg.hidden, tokens.len());
+        let prefill = lm.forward_step_quantized(&tokens[..6], &mut cache, &replacements);
+        for pos in 0..6 {
+            for c in 0..cfg.vocab {
+                assert_eq!(prefill.at(pos, c).to_bits(), full.at(pos, c).to_bits());
+            }
+        }
+        for pos in 6..tokens.len() {
+            let step =
+                lm.forward_step_quantized(&tokens[pos..pos + 1], &mut cache, &replacements);
+            for c in 0..cfg.vocab {
+                assert_eq!(step.at(0, c).to_bits(), full.at(pos, c).to_bits());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- engine
+
+/// Drive a generation through a locally-owned engine + decode scheduler —
+/// the reference the cluster paths are compared against bit for bit.
+fn engine_reference_generation(
+    cfg: &ModelConfig,
+    weights: &PathBuf,
+    artifacts: &PathBuf,
+    prompt: &[u32],
+    max_new: usize,
+    stop: Vec<u32>,
+) -> (Vec<u32>, FinishReason, (u32, u64)) {
+    let weights_file = mxmoe::ser::MxtFile::load(weights).unwrap();
+    let lm = MoeLm::load_mxt(cfg, &weights_file).unwrap();
+    let mut engine = ServingEngine::new(lm, artifacts, &mixed_runtime_plan(cfg)).unwrap();
+    let mut sched = DecodeScheduler::new(cfg, DecodePolicy::default());
+    let (reply, reply_rx) = mpsc::channel();
+    let (stream, stream_rx) = mpsc::channel();
+    sched.admit(Request {
+        kind: RequestKind::Generate(GenSpec { max_new_tokens: max_new, stop, stream }),
+        ..Request::new(prompt.to_vec(), reply)
+    });
+    let mut finished = Vec::new();
+    while sched.has_work() {
+        let out = sched.step(|inputs| engine.forward_step_batch(inputs));
+        finished.extend(out.finished);
+    }
+    drop(reply_rx);
+    assert_eq!(finished.len(), 1);
+    let fin = &finished[0];
+    let mut tokens = Vec::new();
+    let mut reason = None;
+    while let Ok(ev) = stream_rx.try_recv() {
+        match ev {
+            StreamEvent::Token { token, .. } => tokens.push(token),
+            StreamEvent::Done { reason: r, generated } => {
+                assert_eq!(generated, tokens.len());
+                reason = Some(r);
+            }
+        }
+    }
+    (
+        tokens,
+        reason.expect("terminal event"),
+        (fin.last_token.unwrap_or(0), fin.mean_prompt_nll.to_bits()),
+    )
+}
+
+#[test]
+fn cluster_generation_bit_identical_to_engine_reference_at_1_and_4_replicas() {
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (cfg, _, weights) = boot_weights("cluster", 0xDEC4);
+    let mut rng = Rng::new(0xDEC5);
+    let prompts: Vec<Vec<u32>> = vec![seq(&cfg, &mut rng, 9), seq(&cfg, &mut rng, 14)];
+    let max_new = 6usize;
+    let reference: Vec<_> = prompts
+        .iter()
+        .map(|p| engine_reference_generation(&cfg, &weights, &artifacts, p, max_new, vec![]))
+        .collect();
+    for replicas in [1usize, 4] {
+        let cluster =
+            start_cluster(&cfg, &weights, &artifacts, replicas, DecodePolicy::default());
+        // sequential submissions: one generation in flight at a time keeps
+        // every step's batch composition (and therefore its tiling)
+        // identical to the reference — the same discipline
+        // tests/cluster_replicas.rs uses for scoring bit-identity
+        for (p, want) in prompts.iter().zip(&reference) {
+            let ticket = cluster.generate(p.clone(), max_new, vec![]).unwrap();
+            assert!(ticket.is_generation());
+            let got = collect_generation(&ticket);
+            assert_eq!(got.0, want.0, "{replicas}-replica token stream diverged");
+            assert_eq!(got.1, want.1);
+            assert_eq!(got.2, want.2, "{replicas}-replica response bits diverged");
+        }
+        let report = cluster.shutdown();
+        assert_eq!(report.admission.admitted, prompts.len());
+        assert_eq!(report.total_requests(), prompts.len(), "one response per generation");
+        let flat = report.flatten();
+        assert_eq!(flat.generations, prompts.len());
+        assert_eq!(
+            flat.generated_tokens,
+            prompts.len() * max_new,
+            "every generation ran to its token budget"
+        );
+        assert!(flat.decode_steps > 0 && flat.p50_step_s >= 0.0);
+        assert!(flat.kv_peak_tokens > 0, "KV reservations surfaced in the report");
+        assert!(flat.decode_tps > 0.0);
+    }
+    let _ = std::fs::remove_file(&weights);
+}
+
+#[test]
+fn zero_token_generation_matches_scoring_bit_for_bit() {
+    // max_new_tokens = 0 degrades to scoring: same next_token argmax, same
+    // mean prompt NLL, through the decode machinery
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (cfg, _, weights) = boot_weights("scorepar", 0xDEC6);
+    let mut rng = Rng::new(0xDEC7);
+    let prompt = seq(&cfg, &mut rng, 11);
+    let cluster = start_cluster(&cfg, &weights, &artifacts, 1, DecodePolicy::default());
+    let score = cluster
+        .submit_request(ServeRequest::new(prompt.clone()))
+        .unwrap()
+        .wait_timeout(WAIT)
+        .unwrap();
+    let ticket = cluster.generate(prompt, 0, vec![]).unwrap();
+    let (tokens, reason) = ticket.collect_tokens(WAIT).unwrap();
+    assert!(tokens.is_empty());
+    assert_eq!(reason, FinishReason::Length);
+    let gen = ticket.wait_timeout(WAIT).unwrap();
+    assert_eq!(gen.next_token, score.next_token, "argmax continuation must match scoring");
+    assert_eq!(
+        gen.mean_nll.to_bits(),
+        score.mean_nll.to_bits(),
+        "prompt NLL must match scoring bit for bit"
+    );
+    let report = cluster.shutdown();
+    assert_eq!(report.total_requests(), 2);
+    let _ = std::fs::remove_file(&weights);
+}
+
+#[test]
+fn stop_token_and_max_token_termination() {
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (cfg, _, weights) = boot_weights("stop", 0xDEC8);
+    let mut rng = Rng::new(0xDEC9);
+    let prompt = seq(&cfg, &mut rng, 8);
+    let cluster = start_cluster(&cfg, &weights, &artifacts, 1, DecodePolicy::default());
+    // free-running generation: Length at exactly max_new tokens
+    let ticket = cluster.generate(prompt.clone(), 5, vec![]).unwrap();
+    let (free_run, reason, _) = collect_generation(&ticket);
+    assert_eq!(free_run.len(), 5, "length-terminated at the token budget");
+    assert_eq!(reason, FinishReason::Length);
+    // rerun with the 3rd greedy token as a stop token: decoding is
+    // deterministic, so the rerun must stop right there
+    let stop = free_run[2];
+    let ticket = cluster.generate(prompt, 5, vec![stop]).unwrap();
+    let (stopped, reason, _) = collect_generation(&ticket);
+    assert_eq!(stopped, free_run[..3].to_vec(), "prefix up to and incl. the stop token");
+    assert_eq!(*stopped.last().unwrap(), stop, "stop token itself is streamed");
+    assert_eq!(reason, FinishReason::Stop);
+    let report = cluster.shutdown();
+    assert_eq!(report.total_requests(), 2);
+    assert_eq!(report.flatten().generations, 2);
+    let _ = std::fs::remove_file(&weights);
+}
+
+#[test]
+fn mid_generation_cancellation_stops_within_a_step_and_frees_kv() {
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (cfg, _, weights) = boot_weights("cancel", 0xDECA);
+    let mut rng = Rng::new(0xDECB);
+    let prompt = seq(&cfg, &mut rng, 8);
+    // KV budget fits the long generation's (8 + 2048)-token reservation
+    // but NOT that plus the follow-up's (8 + 512): the second generation
+    // can only run once the cancelled one's reservation is reclaimed
+    let long_new = 2048usize;
+    let next_new = 512usize;
+    let prompt_len = prompt.len();
+    let decode =
+        DecodePolicy { kv_budget_tokens: prompt_len + long_new, ..DecodePolicy::default() };
+    let cluster = start_cluster(&cfg, &weights, &artifacts, 1, decode);
+    let long = cluster.generate(prompt.clone(), long_new, vec![]).unwrap();
+    // wait until the generation is demonstrably mid-decode…
+    let mut seen = 0usize;
+    while seen < 3 {
+        match long.wait_event(WAIT).unwrap() {
+            StreamEvent::Token { .. } => seen += 1,
+            StreamEvent::Done { .. } => panic!("2048-token generation finished too early"),
+        }
+    }
+    // …then cancel: eviction happens between decode steps (the remaining
+    // ~2045 steps of work are dropped, not executed)
+    long.cancel();
+    assert!(long.try_next_event().is_none(), "cancelled ticket yields no events");
+    // liveness proof of the KV free: the follow-up reservation only fits
+    // after the cancelled one is reclaimed between steps
+    let next = cluster.generate(prompt, next_new, vec![]).unwrap();
+    let (tokens, reason, _) = collect_generation(&next);
+    assert_eq!(tokens.len(), next_new);
+    assert_eq!(reason, FinishReason::Length);
+    assert!(long.wait_timeout(Duration::from_millis(50)).is_err(), "no response after cancel");
+    let report = cluster.shutdown();
+    // admitted == responses + cancelled + failed, with the cancelled
+    // generation counted exactly once
+    assert_eq!(report.admission.admitted, 2);
+    assert_eq!(report.admission.failed, 0);
+    assert_eq!(report.admission.cancelled, 1);
+    assert_eq!(
+        report.total_requests() + report.admission.unserved(),
+        report.admission.admitted
+    );
+    let flat = report.flatten();
+    assert!(
+        flat.generated_tokens >= next_new + seen && flat.generated_tokens < next_new + long_new,
+        "cancelled generation stopped early ({} tokens streamed overall)",
+        flat.generated_tokens
+    );
+    assert!(
+        flat.kv_peak_tokens <= prompt_len + long_new,
+        "reservations never overlapped: peak {}",
+        flat.kv_peak_tokens
+    );
+    let _ = std::fs::remove_file(&weights);
+}
+
+#[test]
+fn mini_model_checkpoint_serves_generations() {
+    // exercises the `make models`-gated path via the cached `make
+    // mini-model` artifact: load the deterministic ci-mini checkpoint and
+    // serve a generation on it end to end
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let Some((cfg, lm)) = require_mini_model() else {
+        eprintln!("skipping: mini model not built (run `make mini-model`)");
+        return;
+    };
+    assert_eq!(cfg.name, "ci-mini");
+    // the checkpoint is deterministic: same seed ⇒ same weights
+    let twin = MoeLm::random(&cfg, &mut Rng::new(mxmoe::harness::MINI_MODEL_SEED));
+    assert_eq!(lm.embed.data, twin.embed.data, "mini-model must be seed-deterministic");
+    let weights = mxmoe::harness::artifacts_dir().join("model_ci-mini.mxt");
+    let cluster = start_cluster(&cfg, &weights, &artifacts, 1, DecodePolicy::default());
+    let mut rng = Rng::new(0xDECC);
+    let prompt = seq(&cfg, &mut rng, 6);
+    let ticket = cluster.generate(prompt, 4, vec![]).unwrap();
+    let (tokens, reason, (next, nll_bits)) = collect_generation(&ticket);
+    assert_eq!(tokens.len(), 4);
+    assert_eq!(reason, FinishReason::Length);
+    assert_eq!(next, *tokens.last().unwrap());
+    assert!(f64::from_bits(nll_bits).is_finite());
+    let report = cluster.shutdown();
+    assert_eq!(report.flatten().generations, 1);
+}

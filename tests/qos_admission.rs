@@ -16,6 +16,67 @@ use mxmoe::moe::{ModelConfig, MoeLm};
 use mxmoe::serve::{Admission, AdmissionConfig, Priority, QosClass, RejectReason, ServeRequest};
 use mxmoe::util::Rng;
 
+#[test]
+fn class_quota_reserves_queue_room_for_interactive_traffic() {
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (cfg, weights) = boot_weights("quota");
+    // 4 slots, half reserved: a Low flood stops at 2 queued, yet a High
+    // burst right behind it still finds the reserved room
+    let cluster = start_cluster(
+        &cfg,
+        &weights,
+        &artifacts,
+        AdmissionConfig { max_queued_seqs: 4, privileged_reserve: 0.5, ..Default::default() },
+    );
+    let mut rng = Rng::new(0x0F41);
+    let mut tickets = Vec::new();
+    let mut quota_rejected = 0usize;
+    let mut other_rejected = 0usize;
+    for _ in 0..12 {
+        match cluster
+            .try_submit(ServeRequest::new(seq(&cfg, &mut rng, 16)).priority(Priority::Low))
+            .unwrap()
+        {
+            Admission::Admitted(t) => tickets.push(t),
+            Admission::Rejected { reason: RejectReason::ClassQuota, .. } => quota_rejected += 1,
+            Admission::Rejected { .. } => other_rejected += 1,
+        }
+    }
+    assert!(
+        quota_rejected >= 1,
+        "a Low flood against a half-reserved 4-deep bound must hit the quota"
+    );
+    // privileged traffic (High / Interactive) can still be admitted into
+    // the reserved share the flood could not touch
+    let mut privileged_admitted = 0usize;
+    for privileged in [
+        ServeRequest::new(seq(&cfg, &mut rng, 16)).priority(Priority::High),
+        ServeRequest::new(seq(&cfg, &mut rng, 16)).qos(QosClass::Interactive),
+    ] {
+        if let Admission::Admitted(t) = cluster.try_submit(privileged).unwrap() {
+            privileged_admitted += 1;
+            tickets.push(t);
+        }
+    }
+    assert!(
+        privileged_admitted >= 1,
+        "reserved slots must admit High/Interactive even after a Low flood \
+         (the queue drains concurrently, so at least one must fit)"
+    );
+    for t in &tickets {
+        t.wait_timeout(Duration::from_secs(300)).expect("admitted ⇒ served");
+    }
+    let report = cluster.shutdown();
+    assert_eq!(report.admission.rejected_quota, quota_rejected);
+    assert_eq!(report.admission.rejected_queue_full, other_rejected);
+    assert_eq!(report.admission.admitted, tickets.len());
+    assert_eq!(report.flatten().rejected_quota, quota_rejected, "quota surfaces in the report");
+    let _ = std::fs::remove_file(&weights);
+}
+
 /// Serving-shape model (hidden=128, inter=64 — what the AOT export ships).
 fn serving_cfg() -> ModelConfig {
     ModelConfig {
