@@ -7,7 +7,7 @@
 PYTHON ?= python3
 CARGO  ?= cargo
 
-.PHONY: all artifacts corpus models mini-model build test bench-smoke pytest clean
+.PHONY: all artifacts corpus models mini-model build test bench-smoke trace-validate pytest clean
 
 all: build
 
@@ -42,12 +42,19 @@ build:
 test: build
 	$(CARGO) test -q
 
-# The serving benches CI runs on every push (BENCH_*.json outputs).
+# The serving benches CI runs on every push (BENCH_*.json outputs; the
+# trace-overhead bench also exports trace.json, validated below).
 bench-smoke:
 	$(CARGO) bench --bench bench_group_dispatch -- --smoke
 	$(CARGO) bench --bench bench_cluster -- --smoke
 	$(CARGO) bench --bench bench_admission -- --smoke
 	$(CARGO) bench --bench bench_decode -- --smoke
+	$(CARGO) bench --bench bench_trace_overhead -- --smoke
+
+# CI-grade structural check of the Chrome trace the smoke benches export
+# (well-formed JSON, monotonic timestamps, matched async begin/end pairs).
+trace-validate:
+	$(CARGO) run --release --bin mxmoe -- trace-validate --trace trace.json
 
 # Python unit tests (mirrors the CI python job).
 pytest:

@@ -20,7 +20,9 @@ use mxmoe::alloc::{
 };
 use mxmoe::coordinator::{Cluster, ClusterConfig, OnlineConfig, ServeConfig, Server};
 use mxmoe::costmodel::GpuSpec;
+use mxmoe::coordinator::slo_class_name;
 use mxmoe::harness::{artifacts_dir, fast_mode, load_corpus, load_model};
+use mxmoe::obs::TraceConfig;
 use mxmoe::quant::{QuantScheme, SchemeRegistry};
 use mxmoe::serve::{
     Admission, AdmissionConfig, FinishReason, Priority, QosClass, ReplanConfig, Replanner,
@@ -193,6 +195,20 @@ fn main() -> Result<()> {
         creport.total_requests() + creport.admission.unserved(),
         "front-door accounting: admitted == responses + cancelled + failed"
     );
+    // SLO accounting per QoS class: deadline-hit rate and where served
+    // time went (queue vs compute) — DESIGN.md §Observability
+    for (i, s) in creport.slo_by_class().iter().enumerate() {
+        if s.served > 0 {
+            println!(
+                "slo {:<14} | {:>3} served | hit-rate {:.2} | queue {:>7.1} ms | compute {:>7.1} ms",
+                slo_class_name(i),
+                s.served,
+                s.hit_rate(),
+                1e3 * s.queue_s / s.served as f64,
+                1e3 * s.compute_s / s.served as f64,
+            );
+        }
+    }
 
     // ---- token-level decode: KV-cached generation with streaming ----
     // Prompts prefill once into the replica's KV cache; each subsequent
@@ -281,12 +297,20 @@ fn main() -> Result<()> {
             },
         },
     };
+    // this phase runs with lifecycle tracing on: the exported Chrome trace
+    // shows admission → batch-cut → routing → waves plus the replan solve
+    // and hot-swap spans the drift below triggers
     let server = Server::start_online(
         cfg.clone(),
         weights_path.clone(),
         artifacts_dir(),
         mx_alloc,
-        ServeConfig { max_batch_seqs: 8, max_wait: Duration::from_millis(10), ..Default::default() },
+        ServeConfig {
+            max_batch_seqs: 8,
+            max_wait: Duration::from_millis(10),
+            trace: TraceConfig::on(),
+            ..Default::default()
+        },
         OnlineConfig {
             replanner,
             baseline: activation_frequencies(&stats),
@@ -320,6 +344,13 @@ fn main() -> Result<()> {
         report.swaps,
         report.generation,
         report.max_queue_depth,
+    );
+    let trace_path = artifacts_dir().join("serve_trace.json");
+    report.trace.write_chrome_trace(&trace_path)?;
+    println!(
+        "trace              | {} lifecycle events → {} (open at https://ui.perfetto.dev)",
+        report.trace.len(),
+        trace_path.display(),
     );
     if report.replans > 0 {
         let swapped_mid_stream = generations.iter().any(|&g| g > 0);

@@ -33,6 +33,7 @@ use anyhow::Result;
 
 use crate::alloc::Allocation;
 use crate::moe::ModelConfig;
+use crate::obs::{Deadline, EventKind, Outcome, SpanCollector, TraceClock, TraceLog, Track};
 use crate::runtime::dispatch;
 use crate::runtime::RuntimeScheme;
 use crate::ser::MxtFile;
@@ -381,6 +382,12 @@ impl Cluster {
         let n = cluster_cfg.replicas;
         let queues = WorkQueues::new(n);
         let admission = AdmissionState::new(n);
+        // one clock for every track: admission, router and replica spans
+        // stamp microseconds from the same origin, so the merged trace
+        // lines up in Perfetto without per-thread skew correction
+        let clock = TraceClock::new();
+        let trace = cluster_cfg.serve.trace;
+        admission.enable_trace(clock.clone(), trace);
         let status: Arc<Vec<Mutex<ReplicaStatus>>> = Arc::new(
             (0..n).map(|_| Mutex::new(ReplicaStatus::boot(&cfg, &allocation))).collect(),
         );
@@ -395,6 +402,8 @@ impl Cluster {
                 online: online.clone(),
                 dispatch_threads: cluster_cfg.dispatch_threads,
                 decode: cluster_cfg.decode,
+                clock: clock.clone(),
+                trace,
             };
             let q = queues.clone();
             let st = status.clone();
@@ -411,9 +420,10 @@ impl Cluster {
         let affinity = cluster_cfg.affinity;
         let topk = cfg.topk;
         let adm = admission.clone();
+        let tracer = SpanCollector::new(clock, Track::Router, trace);
         let router = thread::Builder::new()
             .name("mxmoe-router".into())
-            .spawn(move || router_loop(rx, policy, &queues, &status, &adm, affinity, topk))
+            .spawn(move || router_loop(rx, policy, &queues, &status, &adm, affinity, topk, tracer))
             .expect("spawn router thread");
         Ok(Cluster {
             tx,
@@ -439,9 +449,17 @@ impl Cluster {
     pub fn try_submit(&self, req: ServeRequest) -> Result<Admission> {
         Cluster::validate(&req)?;
         let privileged = req.is_privileged();
-        match self.admission.try_admit(&self.admission_cfg, req.tokens.len(), req.ttl, privileged)
-        {
-            Err((reason, retry_after)) => Ok(Admission::Rejected { reason, retry_after }),
+        let qos = req.qos.map_or("none", |q| q.name());
+        let priority = req.priority.name();
+        match self.admission.try_admit_for(
+            &self.admission_cfg,
+            req.tokens.len(),
+            req.ttl,
+            privileged,
+            qos,
+            priority,
+        ) {
+            Err((reason, retry_after, id)) => Ok(Admission::Rejected { id, reason, retry_after }),
             Ok(id) => self.enqueue(req, id).map(Admission::Admitted),
         }
     }
@@ -453,11 +471,17 @@ impl Cluster {
     pub fn submit_request(&self, req: ServeRequest) -> Result<Ticket> {
         Cluster::validate(&req)?;
         let privileged = req.is_privileged();
-        match self
-            .admission
-            .admit_blocking(&self.admission_cfg, req.tokens.len(), req.ttl, privileged)
-        {
-            Err((reason, retry_after)) => Err(anyhow::anyhow!(
+        let qos = req.qos.map_or("none", |q| q.name());
+        let priority = req.priority.name();
+        match self.admission.admit_blocking_for(
+            &self.admission_cfg,
+            req.tokens.len(),
+            req.ttl,
+            privileged,
+            qos,
+            priority,
+        ) {
+            Err((reason, retry_after, _id)) => Err(anyhow::anyhow!(
                 "admission rejected ({reason:?}, retry after {retry_after:?})"
             )),
             Ok(id) => self.enqueue(req, id),
@@ -492,7 +516,7 @@ impl Cluster {
             cancelled: cancel.clone(),
         };
         if self.tx.send(request).is_err() {
-            self.admission.abort_admit(n_tokens);
+            self.admission.abort_admit(id, n_tokens);
             anyhow::bail!("cluster closed");
         }
         Ok(Ticket { rx, cancel, id, stream: stream_rx })
@@ -519,6 +543,9 @@ impl Cluster {
     }
 
     /// Close admission, drain every queue, and collect the cluster report.
+    /// The per-thread span rings (admission, router, every replica) are
+    /// merged here into one time-ordered [`TraceLog`] — the only place
+    /// trace events from different threads ever meet.
     pub fn shutdown(mut self) -> ClusterReport {
         drop(self.tx);
         let router =
@@ -529,10 +556,17 @@ impl Cluster {
             .map(|h| h.join().expect("replica thread panicked"))
             .collect();
         replicas.sort_by_key(|r| r.id);
-        ClusterReport { replicas, router, admission: self.admission.report() }
+        let mut parts = vec![
+            self.admission.take_trace(),
+            (router.trace.clone(), router.trace_dropped),
+        ];
+        parts.extend(replicas.iter().map(|r| (r.trace.clone(), r.trace_dropped)));
+        let trace = TraceLog::merge(parts);
+        ClusterReport { replicas, router, admission: self.admission.report(), trace }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn router_loop(
     rx: mpsc::Receiver<Request>,
     policy: crate::serve::BatchPolicy,
@@ -541,6 +575,7 @@ fn router_loop(
     admission: &AdmissionState,
     affinity: AffinityConfig,
     topk: usize,
+    mut tracer: SpanCollector,
 ) -> RouterStats {
     let start = Instant::now();
     let n = status.len();
@@ -607,11 +642,28 @@ fn router_loop(
             }
         }
         // cancellation is shed at the cut: dead requests release their
-        // admission slots and are never routed
-        let (shed_seqs, shed_tokens) = batcher.shed_cancelled();
-        if shed_seqs > 0 {
-            admission.note_shed_at_cut(shed_seqs, shed_tokens);
-            stats.shed_cancelled += shed_seqs;
+        // admission slots and are never routed — each shed id gets its
+        // terminal span here, on the router track
+        let shed = batcher.shed_cancelled(Instant::now());
+        if !shed.is_empty() {
+            let shed_tokens: usize = shed.iter().map(|s| s.tokens).sum();
+            admission.note_shed_at_cut(shed.len(), shed_tokens);
+            stats.shed_cancelled += shed.len();
+            for s in &shed {
+                tracer.instant(
+                    s.id,
+                    EventKind::Terminal {
+                        outcome: Outcome::Shed,
+                        qos: s.qos,
+                        queue_us: s.queued.as_micros() as u64,
+                        compute_us: 0,
+                        stream_us: 0,
+                        generation: 0,
+                        deadline: Deadline::None,
+                        tokens: s.tokens,
+                    },
+                );
+            }
         }
         stats.max_queue_depth = stats.max_queue_depth.max(batcher.depth());
         let batch = batcher.take_batch(Instant::now());
@@ -621,6 +673,14 @@ fn router_loop(
         let cut_tokens: usize = batch.iter().map(|r| r.tokens.len()).sum();
         admission.note_cut(batch.len(), cut_tokens);
         stats.last_planned_fill = dispatch::fill_estimate(cut_tokens).fill_ratio();
+        tracer.instant(
+            0,
+            EventKind::BatchCut {
+                seqs: batch.len(),
+                tokens: cut_tokens,
+                fill: stats.last_planned_fill,
+            },
+        );
         // ---- route: affinity score per replica, discounted by backlog ----
         let chosen = if n == 1 {
             0 // single-replica façade: scoring is overhead with one answer
@@ -640,10 +700,16 @@ fn router_loop(
         };
         stats.batches += 1;
         stats.routed[chosen] += 1;
+        if tracer.enabled() {
+            for r in &batch {
+                tracer.instant(r.id, EventKind::Routed { replica: chosen });
+            }
+        }
         queues.push(chosen, RoutedBatch { requests: batch });
     }
     queues.close();
     stats.elapsed_s = start.elapsed().as_secs_f64();
+    (stats.trace, stats.trace_dropped) = tracer.drain();
     stats
 }
 

@@ -13,6 +13,7 @@ use crate::alloc::Allocation;
 use crate::moe::block::MoeBlock;
 use crate::moe::router::Routing;
 use crate::moe::{route, ModelConfig, MoeLm, StepSeq};
+use crate::obs::EventKind;
 use crate::runtime::dispatch::{self, ExpertInput};
 use crate::runtime::{
     tile_decompose, DispatchMode, DispatchPlan, ExpertWork, Runtime, RuntimeScheme,
@@ -458,10 +459,21 @@ impl ServingEngine {
         // anchor marks the replan *attempt*: a failing solve/swap backs off
         // for min_tokens_between instead of re-solving on every batch
         self.tokens_at_last_replan = observed;
+        let solve_start_us = self.dispatch.metrics.tracer().now_us();
         let freqs = self.dispatch.telemetry.live().to_vec();
         let r = self.qos_effective_r(replanner.cfg.alloc.r);
         let new_alloc = replanner.replan_with_r(&self.lm.cfg, &freqs, &self.allocation, Some(r))?;
         let changes = diff_plans(&self.allocation, &new_alloc);
+        {
+            let t = self.dispatch.metrics.tracer();
+            let now = t.now_us();
+            t.span(
+                solve_start_us,
+                now.saturating_sub(solve_start_us),
+                0,
+                EventKind::ReplanSolve { drift, changes: changes.len() },
+            );
+        }
         let job = SwapStagingJob::collect(&self.lm, &self.dispatch.slots, &changes);
         let handle = thread::Builder::new()
             .name("mxmoe-swap-staging".into())
@@ -489,6 +501,8 @@ impl ServingEngine {
         let staged: StagedSwap = handle
             .join()
             .map_err(|_| anyhow::anyhow!("swap staging thread panicked"))??;
+        let staging_s = staged.staging_s();
+        let install_start_us = self.dispatch.metrics.tracer().now_us();
         let swapped = self.dispatch.slots.install_staged(staged)?;
         self.allocation = allocation;
         self.dispatch.metrics.swaps += swapped;
@@ -507,6 +521,23 @@ impl ServingEngine {
             bits_after,
             generation,
         });
+        // swap spans: the off-thread staging window (measured duration,
+        // ending at the install poll) and the engine-thread slot flip
+        let t = m.tracer();
+        let stage_us = (staging_s * 1e6) as u64;
+        t.span(
+            install_start_us.saturating_sub(stage_us),
+            stage_us,
+            0,
+            EventKind::SwapStage { changes },
+        );
+        let now = t.now_us();
+        t.span(
+            install_start_us,
+            now.saturating_sub(install_start_us),
+            0,
+            EventKind::SwapInstall { swapped, generation },
+        );
         Ok(ReplanOutcome { drift, changes, swapped })
     }
 }

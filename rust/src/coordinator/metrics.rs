@@ -5,11 +5,18 @@
 //! redesign (DESIGN.md §Serving-API) the counters also split queue waits
 //! by [`Priority`], track the served QoS mix, carry admission/rejection/
 //! cancellation totals, and keep a bounded replan history with the
-//! per-layer drift vector for replan observability.
+//! per-layer drift vector for replan observability. The tracing redesign
+//! (DESIGN.md §Observability) adds per-class SLO accounting (deadline-hit
+//! rate + time-in-stage breakdown), served-bits attribution (requests per
+//! plan generation), and an embedded [`SpanCollector`] so wave spans are
+//! recorded where the wave report already lands — every sample vector
+//! here is ring-bounded, and cluster aggregation merges per-replica
+//! [`Summary`]s instead of concatenating raw samples at report time.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::obs::{Deadline, EventKind, SpanCollector, Track, TraceEvent, TraceLog};
 use crate::runtime::{RuntimeScheme, WaveReport};
 use crate::serve::kvcache::KvOccupancy;
 use crate::serve::request::{AdmissionReport, Priority, QosClass};
@@ -38,6 +45,60 @@ impl SchemeWaveStats {
         }
         self.useful_rows as f64 / self.padded_rows as f64
     }
+}
+
+/// Per-QoS-class SLO accounting: served count, deadline verdicts, and the
+/// summed time-in-stage breakdown (queue vs compute vs stream), seconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SloClassStats {
+    /// Requests served under this class.
+    pub served: usize,
+    /// Served before their deadline.
+    pub deadline_hit: usize,
+    /// Served after their deadline.
+    pub deadline_miss: usize,
+    /// Summed admission → execution-start wait.
+    pub queue_s: f64,
+    /// Summed execution-start → finish compute time.
+    pub compute_s: f64,
+    /// Summed first-streamed-token → finish streaming time (decode only).
+    pub stream_s: f64,
+}
+
+impl SloClassStats {
+    /// Deadline-hit rate over requests that carried a deadline (1.0 when
+    /// none did — an absent deadline is never a miss).
+    pub fn hit_rate(&self) -> f64 {
+        let judged = self.deadline_hit + self.deadline_miss;
+        if judged == 0 {
+            1.0
+        } else {
+            self.deadline_hit as f64 / judged as f64
+        }
+    }
+
+    /// Fold another replica's class stats into this one.
+    pub fn accumulate(&mut self, other: &SloClassStats) {
+        self.served += other.served;
+        self.deadline_hit += other.deadline_hit;
+        self.deadline_miss += other.deadline_miss;
+        self.queue_s += other.queue_s;
+        self.compute_s += other.compute_s;
+        self.stream_s += other.stream_s;
+    }
+}
+
+/// SLO accounting slots: the three QoS classes plus "no class set".
+pub const SLO_CLASSES: usize = 4;
+
+/// `slo` array index for a request's (optional) QoS class.
+pub fn slo_class_index(qos: Option<QosClass>) -> usize {
+    qos.map_or(SLO_CLASSES - 1, |q| q.index())
+}
+
+/// Display name per SLO slot (index = [`slo_class_index`]).
+pub fn slo_class_name(i: usize) -> &'static str {
+    ["interactive", "standard", "batch", "none"][i]
 }
 
 /// One entry of the bounded replan history: what triggered a re-solve and
@@ -70,13 +131,27 @@ pub const REPLAN_HISTORY: usize = 64;
 /// Rolling serving metrics (single-threaded engine owns it).
 pub struct Metrics {
     start: Instant,
+    /// Request-latency ring (most recent [`REQUEST_LATENCY_WINDOW`]).
     latencies: Vec<f64>,
+    latency_cursor: usize,
+    /// Queue-wait ring (most recent [`QUEUE_WAIT_WINDOW`]).
     queue_waits: Vec<f64>,
+    queue_wait_cursor: usize,
     /// Queue-wait samples split by request priority (same clock as
-    /// `queue_waits`; index = `Priority::index()`).
+    /// `queue_waits`; index = `Priority::index()`; each ring bounded by
+    /// [`QUEUE_WAIT_WINDOW`]).
     queue_waits_by_priority: [Vec<f64>; 3],
+    queue_wait_priority_cursors: [usize; 3],
     /// Requests served per QoS class (`None` counts as `Standard`).
     pub qos_served: [usize; 3],
+    /// Per-class SLO accounting (index = [`slo_class_index`]).
+    pub slo: [SloClassStats; SLO_CLASSES],
+    /// Served-bits attribution: plan generation → requests it served.
+    served_by_generation: BTreeMap<u64, usize>,
+    /// Lifecycle-span sink for this replica's thread (disabled and empty
+    /// unless the owner installs an enabled collector — recording is a
+    /// branch + ring write, no locks).
+    tracer: SpanCollector,
     /// Cancelled requests shed before execution on this replica.
     pub shed_cancelled: usize,
     /// Per-layer TV drift at the last telemetry check (replan
@@ -143,14 +218,38 @@ pub const WAVE_LATENCY_WINDOW: usize = 4096;
 /// Decode-step latency samples retained for percentile reporting.
 pub const STEP_LATENCY_WINDOW: usize = 4096;
 
+/// Request-latency samples retained for percentile reporting (long runs
+/// would otherwise grow the vector without bound).
+pub const REQUEST_LATENCY_WINDOW: usize = 8192;
+
+/// Queue-wait samples retained for percentile reporting (both the overall
+/// ring and each per-priority ring).
+pub const QUEUE_WAIT_WINDOW: usize = 8192;
+
+/// Push into a bounded ring: fill to `cap`, then overwrite oldest-first.
+fn push_ring(buf: &mut Vec<f64>, cursor: &mut usize, cap: usize, v: f64) {
+    if buf.len() < cap {
+        buf.push(v);
+    } else {
+        buf[*cursor] = v;
+        *cursor = (*cursor + 1) % cap;
+    }
+}
+
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics {
             start: Instant::now(),
             latencies: Vec::new(),
+            latency_cursor: 0,
             queue_waits: Vec::new(),
+            queue_wait_cursor: 0,
             queue_waits_by_priority: [Vec::new(), Vec::new(), Vec::new()],
+            queue_wait_priority_cursors: [0; 3],
             qos_served: [0; 3],
+            slo: [SloClassStats::default(); SLO_CLASSES],
+            served_by_generation: BTreeMap::new(),
+            tracer: SpanCollector::disabled(Track::Replica(0)),
             shed_cancelled: 0,
             drift_vector: Vec::new(),
             replan_history: Vec::new(),
@@ -200,12 +299,12 @@ impl Metrics {
         self.decode_rows += decode;
         self.generated_tokens += emitted;
         self.generations += finished;
-        if self.step_latencies.len() < STEP_LATENCY_WINDOW {
-            self.step_latencies.push(elapsed_s);
-        } else {
-            self.step_latencies[self.step_latency_cursor] = elapsed_s;
-            self.step_latency_cursor = (self.step_latency_cursor + 1) % STEP_LATENCY_WINDOW;
-        }
+        push_ring(
+            &mut self.step_latencies,
+            &mut self.step_latency_cursor,
+            STEP_LATENCY_WINDOW,
+            elapsed_s,
+        );
     }
 
     /// Snapshot the replica's KV pool occupancy (published per step).
@@ -241,12 +340,12 @@ impl Metrics {
         self.padded_tokens += report.padded_rows();
         self.useful_rows += report.useful_rows();
         for w in &report.waves {
-            if self.wave_latencies.len() < WAVE_LATENCY_WINDOW {
-                self.wave_latencies.push(w.elapsed_s);
-            } else {
-                self.wave_latencies[self.wave_latency_cursor] = w.elapsed_s;
-                self.wave_latency_cursor = (self.wave_latency_cursor + 1) % WAVE_LATENCY_WINDOW;
-            }
+            push_ring(
+                &mut self.wave_latencies,
+                &mut self.wave_latency_cursor,
+                WAVE_LATENCY_WINDOW,
+                w.elapsed_s,
+            );
             let s = self.scheme_waves.entry(w.scheme.name()).or_default();
             s.waves += 1;
             s.items += w.items;
@@ -254,6 +353,43 @@ impl Metrics {
             s.useful_rows += w.useful_rows;
             s.busy_s += w.busy_s;
         }
+        if self.tracer.enabled() {
+            // Place each wave span at its measured offset inside the
+            // dispatch window ending now.
+            let now = self.tracer.now_us();
+            let dispatch_start = now.saturating_sub((report.elapsed_s * 1e6) as u64);
+            for w in &report.waves {
+                self.tracer.span(
+                    dispatch_start + (w.start_s * 1e6) as u64,
+                    (w.elapsed_s * 1e6) as u64,
+                    0,
+                    EventKind::Wave {
+                        scheme: w.scheme.name(),
+                        tile_m: w.tile_m,
+                        items: w.items,
+                        rows: w.useful_rows,
+                        padded: w.padded_rows,
+                    },
+                );
+            }
+        }
+    }
+
+    /// Install this replica's lifecycle-span sink (replaces the default
+    /// disabled collector).
+    pub fn set_tracer(&mut self, tracer: SpanCollector) {
+        self.tracer = tracer;
+    }
+
+    /// The replica's span sink, for the owning loop to record lifecycle
+    /// events (terminals, decode steps, replan phases).
+    pub fn tracer(&mut self) -> &mut SpanCollector {
+        &mut self.tracer
+    }
+
+    /// Drain the recorded spans (oldest first) and the overwrite count.
+    pub fn take_trace(&mut self) -> (Vec<TraceEvent>, usize) {
+        self.tracer.drain()
     }
 
     /// Planner-fed batcher fill estimate at a batch cut.
@@ -303,19 +439,65 @@ impl Metrics {
     }
 
     pub fn record_request(&mut self, latency_s: f64, tokens: usize) {
-        self.latencies.push(latency_s);
+        push_ring(&mut self.latencies, &mut self.latency_cursor, REQUEST_LATENCY_WINDOW, latency_s);
         self.tokens += tokens;
         self.requests += 1;
     }
 
     pub fn record_queue_wait(&mut self, wait_s: f64, priority: Priority) {
-        self.queue_waits.push(wait_s);
-        self.queue_waits_by_priority[priority.index()].push(wait_s);
+        push_ring(&mut self.queue_waits, &mut self.queue_wait_cursor, QUEUE_WAIT_WINDOW, wait_s);
+        let p = priority.index();
+        push_ring(
+            &mut self.queue_waits_by_priority[p],
+            &mut self.queue_wait_priority_cursors[p],
+            QUEUE_WAIT_WINDOW,
+            wait_s,
+        );
     }
 
     /// Queue-wait samples per priority level (index = `Priority::index()`).
     pub fn queue_waits_by_priority(&self) -> &[Vec<f64>; 3] {
         &self.queue_waits_by_priority
+    }
+
+    /// Queue-wait distribution per priority level (`None` where a level
+    /// saw no traffic). What [`ReplicaReport`] ships instead of samples.
+    pub fn queue_wait_by_priority_summary(&self) -> [Option<Summary>; 3] {
+        let s = |v: &Vec<f64>| (!v.is_empty()).then(|| Summary::of(v));
+        [
+            s(&self.queue_waits_by_priority[0]),
+            s(&self.queue_waits_by_priority[1]),
+            s(&self.queue_waits_by_priority[2]),
+        ]
+    }
+
+    /// Fold one served request into the per-class SLO accounting and the
+    /// served-bits attribution (which plan generation served it).
+    pub fn note_slo(
+        &mut self,
+        qos: Option<QosClass>,
+        deadline: Deadline,
+        queue_s: f64,
+        compute_s: f64,
+        stream_s: f64,
+        generation: u64,
+    ) {
+        let s = &mut self.slo[slo_class_index(qos)];
+        s.served += 1;
+        match deadline {
+            Deadline::Hit => s.deadline_hit += 1,
+            Deadline::Miss => s.deadline_miss += 1,
+            Deadline::None => {}
+        }
+        s.queue_s += queue_s;
+        s.compute_s += compute_s;
+        s.stream_s += stream_s;
+        *self.served_by_generation.entry(generation).or_insert(0) += 1;
+    }
+
+    /// Requests served per plan generation, ascending by generation.
+    pub fn served_by_generation(&self) -> Vec<(u64, usize)> {
+        self.served_by_generation.iter().map(|(g, n)| (*g, *n)).collect()
     }
 
     /// Count one served request against its QoS class (`None` counts as
@@ -385,8 +567,9 @@ impl Default for Metrics {
 // ---------------- cluster view ----------------
 
 /// Final statistics of one replica worker, assembled at thread exit.
-/// Carries raw latency samples so the cluster view can merge percentiles
-/// instead of averaging averages.
+/// Distributions travel as [`Summary`]s — the cluster view combines them
+/// with [`Summary::merge`] (exact moments, weighted percentiles) instead
+/// of concatenating every replica's raw samples at report time.
 #[derive(Clone, Debug)]
 pub struct ReplicaReport {
     pub id: usize,
@@ -418,14 +601,18 @@ pub struct ReplicaReport {
     pub shed_cancelled: usize,
     /// Requests served per QoS class (`None` counted as `Standard`).
     pub qos_served: [usize; 3],
-    /// Queue-wait samples split by priority (index = `Priority::index()`).
-    pub queue_waits_by_priority: [Vec<f64>; 3],
+    /// Per-class SLO accounting (index = [`slo_class_index`]).
+    pub slo: [SloClassStats; SLO_CLASSES],
+    /// Served-bits attribution: plan generation → requests it served.
+    pub served_by_generation: Vec<(u64, usize)>,
+    /// Queue-wait distribution per priority (index = `Priority::index()`).
+    pub queue_wait_by_priority: [Option<Summary>; 3],
     /// Final hot-swap generation of this replica's plan.
     pub generation: u64,
     pub scheme_counts: Vec<(RuntimeScheme, usize)>,
-    pub latencies: Vec<f64>,
-    pub queue_waits: Vec<f64>,
-    pub wave_latencies: Vec<f64>,
+    pub latency: Option<Summary>,
+    pub queue_wait: Option<Summary>,
+    pub wave_latency: Option<Summary>,
     // ---- decode loop ----
     /// Mixed prefill/decode steps this replica executed.
     pub decode_steps: usize,
@@ -437,13 +624,17 @@ pub struct ReplicaReport {
     pub generated_tokens: usize,
     /// Generations completed (stop-token or length).
     pub generations: usize,
-    /// Per-step wall-clock samples (ring-bounded).
-    pub step_latencies: Vec<f64>,
+    /// Per-step wall-clock distribution (over the bounded ring).
+    pub step_latency: Option<Summary>,
     /// KV reservation high-water mark / budget (tokens).
     pub kv_peak_tokens: usize,
     pub kv_budget_tokens: usize,
     /// Engine lifetime (build → report), seconds.
     pub elapsed_s: f64,
+    /// Lifecycle spans recorded on this replica's track (empty when
+    /// tracing is off), plus how many the bounded ring overwrote.
+    pub trace: Vec<TraceEvent>,
+    pub trace_dropped: usize,
 }
 
 /// Final statistics of the router thread: admission-queue behavior plus
@@ -462,6 +653,10 @@ pub struct RouterStats {
     pub last_planned_fill: f64,
     /// Router lifetime (first admission poll → queue close), seconds.
     pub elapsed_s: f64,
+    /// Spans recorded on the router track (batch cuts, routing decisions,
+    /// cut-time sheds), plus how many the bounded ring overwrote.
+    pub trace: Vec<TraceEvent>,
+    pub trace_dropped: usize,
 }
 
 impl RouterStats {
@@ -473,6 +668,8 @@ impl RouterStats {
             shed_cancelled: 0,
             last_planned_fill: 1.0,
             elapsed_s: 0.0,
+            trace: Vec::new(),
+            trace_dropped: 0,
         }
     }
 }
@@ -489,6 +686,10 @@ pub struct ClusterReport {
     /// `admission.admitted == total_requests() + admission.cancelled +
     /// admission.failed`.
     pub admission: AdmissionReport,
+    /// Merged lifecycle trace: admission + router + replica spans on one
+    /// timeline (empty when tracing was off). Export with
+    /// [`TraceLog::write_chrome_trace`] / [`TraceLog::write_jsonl`].
+    pub trace: TraceLog,
 }
 
 impl ClusterReport {
@@ -504,20 +705,45 @@ impl ClusterReport {
         self.replicas.iter().map(|r| r.stolen_batches).sum()
     }
 
-    /// Queue-wait p99 per priority level, samples merged across replicas
+    /// Queue-wait p99 per priority level, per-replica summaries merged
     /// (0.0 where a level saw no traffic). Index = `Priority::index()`.
     pub fn queue_wait_p99_by_priority(&self) -> [f64; 3] {
         let mut out = [0.0f64; 3];
         for (i, slot) in out.iter_mut().enumerate() {
-            let mut samples = Vec::new();
-            for r in &self.replicas {
-                samples.extend_from_slice(&r.queue_waits_by_priority[i]);
-            }
-            if !samples.is_empty() {
-                *slot = Summary::of(&samples).p99;
+            let parts: Vec<Summary> = self
+                .replicas
+                .iter()
+                .filter_map(|r| r.queue_wait_by_priority[i].clone())
+                .collect();
+            let merged = Summary::merge(&parts);
+            if merged.n > 0 {
+                *slot = merged.p99;
             }
         }
         out
+    }
+
+    /// Cluster-wide per-class SLO accounting (summed over replicas).
+    pub fn slo_by_class(&self) -> [SloClassStats; SLO_CLASSES] {
+        let mut out = [SloClassStats::default(); SLO_CLASSES];
+        for r in &self.replicas {
+            for (a, b) in out.iter_mut().zip(&r.slo) {
+                a.accumulate(b);
+            }
+        }
+        out
+    }
+
+    /// Cluster-wide served-bits attribution: plan generation → requests
+    /// it served, summed over replicas, ascending by generation.
+    pub fn served_by_generation(&self) -> Vec<(u64, usize)> {
+        let mut by_gen: BTreeMap<u64, usize> = BTreeMap::new();
+        for r in &self.replicas {
+            for (g, n) in &r.served_by_generation {
+                *by_gen.entry(*g).or_insert(0) += *n;
+            }
+        }
+        by_gen.into_iter().collect()
     }
 
     /// Per-layer drift, worst replica per layer (replicas may disagree on
@@ -560,23 +786,19 @@ impl ClusterReport {
     }
 
     /// Merge the per-replica reports into the legacy single-engine report
-    /// shape: sums for counters, sample-merged percentiles for
-    /// distributions, maxima for high-water marks.
+    /// shape: sums for counters, [`Summary::merge`]d percentiles for
+    /// distributions (no raw-sample concatenation), maxima for high-water
+    /// marks.
     pub fn flatten(&self) -> ServerReport {
-        let mut latencies = Vec::new();
-        let mut queue_waits = Vec::new();
-        let mut wave_lat = Vec::new();
-        let mut step_lat = Vec::new();
-        for r in &self.replicas {
-            latencies.extend_from_slice(&r.latencies);
-            queue_waits.extend_from_slice(&r.queue_waits);
-            wave_lat.extend_from_slice(&r.wave_latencies);
-            step_lat.extend_from_slice(&r.step_latencies);
-        }
-        let lat = (!latencies.is_empty()).then(|| Summary::of(&latencies));
-        let qw = (!queue_waits.is_empty()).then(|| Summary::of(&queue_waits));
-        let wl = (!wave_lat.is_empty()).then(|| Summary::of(&wave_lat));
-        let sl = (!step_lat.is_empty()).then(|| Summary::of(&step_lat));
+        let merged = |pick: fn(&ReplicaReport) -> Option<Summary>| {
+            let parts: Vec<Summary> = self.replicas.iter().filter_map(pick).collect();
+            let m = Summary::merge(&parts);
+            (m.n > 0).then_some(m)
+        };
+        let lat = merged(|r| r.latency.clone());
+        let qw = merged(|r| r.queue_wait.clone());
+        let wl = merged(|r| r.wave_latency.clone());
+        let sl = merged(|r| r.step_latency.clone());
         let padded: usize = self.replicas.iter().map(|r| r.padded_rows).sum();
         let useful: usize = self.replicas.iter().map(|r| r.useful_rows).sum();
         let wave_padded: usize = self.replicas.iter().map(|r| r.wave_padded_rows).sum();
@@ -641,6 +863,9 @@ impl ClusterReport {
                 }
                 q
             },
+            slo_by_class: self.slo_by_class(),
+            served_by_generation: self.served_by_generation(),
+            trace: self.trace.clone(),
         }
     }
 }
@@ -720,6 +945,14 @@ pub struct ServerReport {
     pub queue_wait_p99_by_priority: [f64; 3],
     /// Requests served per QoS class (`None` counted as `Standard`).
     pub qos_served: [usize; 3],
+    /// Per-class SLO accounting: deadline-hit rate + time-in-stage
+    /// breakdown (index = [`slo_class_index`]; the last slot collects
+    /// requests with no class set).
+    pub slo_by_class: [SloClassStats; SLO_CLASSES],
+    /// Served-bits attribution: plan generation → requests it served.
+    pub served_by_generation: Vec<(u64, usize)>,
+    /// Merged lifecycle trace (empty when tracing was off).
+    pub trace: TraceLog,
 }
 
 #[cfg(test)]
@@ -751,6 +984,7 @@ mod tests {
                     items: 2,
                     padded_rows: 128,
                     useful_rows: 128,
+                    start_s: 0.0,
                     elapsed_s: 0.004,
                     busy_s: 0.006,
                 },
@@ -760,6 +994,7 @@ mod tests {
                     items: 1,
                     padded_rows: 4,
                     useful_rows: 1,
+                    start_s: 0.004,
                     elapsed_s: 0.001,
                     busy_s: 0.001,
                 },
@@ -795,6 +1030,7 @@ mod tests {
             items: 1,
             padded_rows: 4,
             useful_rows: 4,
+            start_s: 0.0,
             elapsed_s,
             busy_s: elapsed_s,
         };
@@ -840,21 +1076,40 @@ mod tests {
             }],
             shed_cancelled: id,
             qos_served: [id, 2, 0],
-            queue_waits_by_priority: [vec![], vec![0.001], vec![0.0005]],
+            slo: {
+                let mut s = [SloClassStats::default(); SLO_CLASSES];
+                s[1] = SloClassStats {
+                    served: 2,
+                    deadline_hit: 1,
+                    deadline_miss: 1,
+                    queue_s: 0.002,
+                    compute_s: 0.020,
+                    stream_s: 0.010,
+                };
+                s
+            },
+            served_by_generation: vec![(id as u64, 2)],
+            queue_wait_by_priority: [
+                None,
+                Some(Summary::of(&[0.001])),
+                Some(Summary::of(&[0.0005])),
+            ],
             generation: id as u64,
             scheme_counts: vec![(RuntimeScheme::Fp16, 4)],
-            latencies: vec![lat, lat],
-            queue_waits: vec![0.001],
-            wave_latencies: vec![0.002],
+            latency: Some(Summary::of(&[lat, lat])),
+            queue_wait: Some(Summary::of(&[0.001])),
+            wave_latency: Some(Summary::of(&[0.002])),
             decode_steps: 4,
             prefill_rows: 12,
             decode_rows: 6,
             generated_tokens: 8,
             generations: 2,
-            step_latencies: vec![0.003, 0.004],
+            step_latency: Some(Summary::of(&[0.003, 0.004])),
             kv_peak_tokens: 40 + id,
             kv_budget_tokens: 128,
             elapsed_s: 2.0,
+            trace: vec![],
+            trace_dropped: 0,
         };
         let report = ClusterReport {
             replicas: vec![replica(0, 0.010), replica(1, 0.030)],
@@ -865,6 +1120,8 @@ mod tests {
                 shed_cancelled: 1,
                 last_planned_fill: 0.9,
                 elapsed_s: 2.0,
+                trace: vec![],
+                trace_dropped: 0,
             },
             admission: AdmissionReport {
                 admitted: 7,
@@ -874,6 +1131,7 @@ mod tests {
                 cancelled: 3,
                 failed: 0,
             },
+            trace: TraceLog::empty(),
         };
         assert_eq!(report.total_requests(), 4);
         assert_eq!(report.total_tokens(), 200);
@@ -918,6 +1176,15 @@ mod tests {
         assert_eq!(flat.kv_peak_tokens, 41);
         assert!((flat.decode_tps - 16.0 / 2.0).abs() < 1e-9);
         assert!(flat.p50_step_s >= 0.003 && flat.p50_step_s <= 0.004);
+        // SLO accounting sums per class; served-bits attribution merges
+        // generation histograms across replicas
+        assert_eq!(flat.slo_by_class[1].served, 4);
+        assert_eq!(flat.slo_by_class[1].deadline_hit, 2);
+        assert!((flat.slo_by_class[1].hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(flat.slo_by_class[0].served, 0);
+        assert!((flat.slo_by_class[0].hit_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(flat.served_by_generation, vec![(0, 2), (1, 2)]);
+        assert!(flat.trace.is_empty(), "no tracing in this synthetic report");
     }
 
     #[test]
@@ -997,5 +1264,79 @@ mod tests {
         assert_eq!(h.len(), REPLAN_HISTORY, "ring caps retained events");
         assert_eq!(h[0].generation, 10, "oldest events dropped first");
         assert_eq!(h.last().unwrap().generation, (REPLAN_HISTORY + 9) as u64);
+    }
+
+    #[test]
+    fn request_and_queue_wait_rings_are_bounded() {
+        let mut m = Metrics::new();
+        for i in 0..REQUEST_LATENCY_WINDOW + 10 {
+            m.record_request(i as f64, 1);
+        }
+        let s = m.latency_summary().unwrap();
+        assert_eq!(s.n, REQUEST_LATENCY_WINDOW, "latency ring caps samples");
+        assert!(s.min >= 10.0 - 1e-9, "oldest latencies overwritten, min is {}", s.min);
+        assert_eq!(m.requests, REQUEST_LATENCY_WINDOW + 10, "counters see every request");
+        for i in 0..QUEUE_WAIT_WINDOW + 5 {
+            m.record_queue_wait(i as f64, Priority::High);
+        }
+        assert_eq!(m.queue_wait_summary().unwrap().n, QUEUE_WAIT_WINDOW);
+        let by_pri = m.queue_wait_by_priority_summary();
+        assert_eq!(by_pri[Priority::High.index()].as_ref().unwrap().n, QUEUE_WAIT_WINDOW);
+        assert!(by_pri[Priority::Low.index()].is_none());
+        assert!(m.queue_wait_summary().unwrap().min >= 5.0 - 1e-9);
+    }
+
+    #[test]
+    fn slo_accounting_tracks_classes_deadlines_and_generations() {
+        let mut m = Metrics::new();
+        m.note_slo(Some(QosClass::Interactive), Deadline::Hit, 0.001, 0.010, 0.002, 0);
+        m.note_slo(Some(QosClass::Interactive), Deadline::Miss, 0.002, 0.020, 0.004, 1);
+        m.note_slo(None, Deadline::None, 0.003, 0.030, 0.0, 1);
+        let inter = &m.slo[slo_class_index(Some(QosClass::Interactive))];
+        assert_eq!(inter.served, 2);
+        assert_eq!((inter.deadline_hit, inter.deadline_miss), (1, 1));
+        assert!((inter.hit_rate() - 0.5).abs() < 1e-12);
+        let unclassified = &m.slo[slo_class_index(None)];
+        assert_eq!(unclassified.served, 1);
+        assert!((unclassified.hit_rate() - 1.0).abs() < 1e-12, "no deadline is never a miss");
+        assert!((unclassified.queue_s - 0.003).abs() < 1e-12);
+        assert_eq!(m.served_by_generation(), vec![(0, 1), (1, 2)]);
+        assert_eq!(slo_class_name(0), "interactive");
+        assert_eq!(slo_class_name(SLO_CLASSES - 1), "none");
+    }
+
+    #[test]
+    fn record_dispatch_emits_wave_spans_only_when_tracing() {
+        use crate::obs::{TraceClock, TraceConfig};
+        use crate::runtime::{RuntimeScheme, WaveStats};
+        let report = WaveReport {
+            waves: vec![WaveStats {
+                scheme: RuntimeScheme::Fp16,
+                tile_m: 16,
+                items: 2,
+                padded_rows: 32,
+                useful_rows: 30,
+                start_s: 0.0,
+                elapsed_s: 0.001,
+                busy_s: 0.001,
+            }],
+            elapsed_s: 0.001,
+        };
+        let mut m = Metrics::new();
+        m.record_dispatch(&report);
+        assert!(m.take_trace().0.is_empty(), "default tracer records nothing");
+        m.set_tracer(SpanCollector::new(TraceClock::new(), Track::Replica(3), TraceConfig::on()));
+        m.record_dispatch(&report);
+        let (events, dropped) = m.take_trace();
+        assert_eq!(dropped, 0);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].track, Track::Replica(3));
+        match &events[0].kind {
+            EventKind::Wave { scheme, rows, padded, .. } => {
+                assert_eq!(*scheme, "fp16");
+                assert_eq!((*rows, *padded), (30, 32));
+            }
+            other => panic!("expected a wave span, got {other:?}"),
+        }
     }
 }

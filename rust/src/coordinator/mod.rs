@@ -26,6 +26,7 @@ pub use cluster::{
 };
 pub use engine::{uniform_engine, ReplanStaging, ServingEngine};
 pub use metrics::{
-    ClusterReport, Metrics, ReplanEvent, ReplicaReport, RouterStats, ServerReport,
+    slo_class_index, slo_class_name, ClusterReport, Metrics, ReplanEvent, ReplicaReport,
+    RouterStats, ServerReport, SloClassStats, SLO_CLASSES,
 };
 pub use server::{Request, Response, ServeConfig, Server};

@@ -23,6 +23,7 @@ use anyhow::Result;
 
 use crate::alloc::Allocation;
 use crate::moe::ModelConfig;
+use crate::obs::TraceConfig;
 use crate::serve::queue::BatchPolicy;
 pub use crate::serve::queue::{Request, Response};
 pub use crate::serve::request::{
@@ -44,6 +45,9 @@ pub struct ServeConfig {
     /// Priority-aging quantum: a queued request gains one priority level
     /// per `aging` waited (starvation control for low priority).
     pub aging: Duration,
+    /// Lifecycle-span tracing (DESIGN.md §Observability): off by default;
+    /// flipping it on needs no rebuild and changes no served bits.
+    pub trace: TraceConfig,
 }
 
 impl Default for ServeConfig {
@@ -54,6 +58,7 @@ impl Default for ServeConfig {
             max_batch_tokens: p.max_tokens,
             max_wait: p.max_wait,
             aging: p.aging,
+            trace: TraceConfig::default(),
         }
     }
 }

@@ -8,6 +8,7 @@ pub mod harness;
 pub mod linalg;
 pub mod kernelgen;
 pub mod moe;
+pub mod obs;
 pub mod sched;
 pub mod sim;
 pub mod coordinator;

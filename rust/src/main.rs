@@ -9,6 +9,9 @@
 //!   allocate        run calibration + sensitivity + the MCKP allocator on
 //!                   a trained mini model and dump the Tab.-7-style plan
 //!   serve           pointer to the serving driver example
+//!   trace-dump      run a traced serving pipeline (online replan + decode)
+//!                   and export the Chrome trace / JSONL / Prometheus text
+//!   trace-validate  validate a Chrome trace-event file the way CI does
 //!   info            print model registry + environment
 
 use std::collections::HashMap;
@@ -81,6 +84,8 @@ fn run() -> Result<()> {
             println!("run: cargo run --release --example serve_mixed_precision");
             Ok(())
         }
+        "trace-dump" => cmd_trace_dump(&args),
+        "trace-validate" => cmd_trace_validate(&args),
         "info" | "--help" | "-h" => {
             println!("mxmoe {} — MxMoE reproduction (see README.md)", mxmoe::version());
             println!("\nmodels:");
@@ -96,7 +101,10 @@ fn run() -> Result<()> {
                     c.param_count() as f64 / 1e6
                 );
             }
-            println!("\ncommands: gen-corpus | gen-mini-model | allocate | serve | info");
+            println!(
+                "\ncommands: gen-corpus | gen-mini-model | allocate | serve | \
+                 trace-dump | trace-validate | info"
+            );
             Ok(())
         }
         other => bail!("unknown command '{other}' (try: info)"),
@@ -166,6 +174,189 @@ fn load_model(args: &Args) -> Result<(ModelConfig, MoeLm, Corpus)> {
     let lm = MoeLm::load_mxt(&cfg, &weights)?;
     let corpus = Corpus::load(&dir.join("corpus.mxt")).context("load corpus.mxt")?;
     Ok((cfg, lm, corpus))
+}
+
+/// `trace-dump`: run the whole serving pipeline — typed admission,
+/// continuous batching, KV-cached decode, online replan + hot-swap — with
+/// lifecycle tracing on, then export the merged trace as Chrome
+/// trace-event JSON (open at <https://ui.perfetto.dev>), JSONL, and a
+/// Prometheus-style text snapshot, and validate the Chrome file the same
+/// way CI does.
+fn cmd_trace_dump(args: &Args) -> Result<()> {
+    use mxmoe::alloc::activation_frequencies;
+    use mxmoe::coordinator::{slo_class_name, Cluster, ClusterConfig, OnlineConfig, ServeConfig};
+    use mxmoe::harness::{mixed_runtime_plan, require_artifacts, save_model_mxt};
+    use mxmoe::obs::{validate_chrome_trace, TraceConfig};
+    use mxmoe::serve::{Priority, QosClass, ReplanConfig, Replanner, ServeRequest};
+    use std::time::Duration;
+
+    let Some(artifacts) = require_artifacts() else {
+        bail!("AOT artifacts not built — run `make artifacts` first");
+    };
+    let out = PathBuf::from(args.get("out", "artifacts/trace.json"));
+    let replicas = args.get_usize("replicas", 2)?;
+    let n_score = args.get_usize("requests", 24)?;
+    let n_gen = args.get_usize("generate", 4)?;
+
+    // serving-shape model (hidden=128, inter=64 — the tile shapes the AOT
+    // export ships); seeded random init, no training needed for tracing
+    let cfg = ModelConfig {
+        name: "trace-dump".into(),
+        vocab: 64,
+        hidden: 128,
+        layers: 2,
+        heads: 4,
+        n_experts: 4,
+        n_shared: 1,
+        topk: 2,
+        inter: 64,
+        dense_first: false,
+        seq_len: 16,
+    };
+    let mut rng = mxmoe::util::Rng::new(0x7ACE);
+    let lm = MoeLm::random(&cfg, &mut rng);
+    let weights = std::env::temp_dir().join("mxmoe_trace_dump.mxt");
+    save_model_mxt(&lm, &weights)?;
+
+    // calibration → sensitivity → replanner; booting from the scrambled
+    // mixed plan means the forced re-solve below actually changes slots,
+    // so the dump records a real hot-swap (stage + install spans)
+    let calib: Vec<Vec<u32>> = (0..8)
+        .map(|_| (0..cfg.seq_len).map(|_| rng.below(cfg.vocab as u64) as u32).collect())
+        .collect();
+    let calib_refs: Vec<&[u32]> = calib.iter().map(|s| s.as_slice()).collect();
+    eprintln!("calibrating + measuring sensitivity...");
+    let stats = calibrate(&lm, &calib_refs, None)?;
+    let registry = SchemeRegistry::weight_activation();
+    let sens = measure_sensitivity(&lm, &stats, &registry)?;
+    let replanner = Replanner {
+        gpu: GpuSpec::rtx4090(),
+        registry,
+        sens,
+        cfg: ReplanConfig {
+            drift_threshold: 0.0, // replan on any drift: the dump must show one
+            min_tokens_between: 1,
+            alloc: AllocatorConfig {
+                r: 0.75,
+                target_avg_bits: 5.0,
+                granularity: Granularity::LinearBlock,
+                batch_tokens: 512,
+            },
+        },
+    };
+
+    eprintln!("starting {replicas}-replica traced cluster...");
+    let cluster = Cluster::start_online(
+        cfg.clone(),
+        weights,
+        artifacts,
+        mixed_runtime_plan(&cfg),
+        ClusterConfig {
+            replicas,
+            serve: ServeConfig {
+                max_batch_seqs: 4,
+                max_wait: Duration::from_millis(2),
+                trace: TraceConfig::on(),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        OnlineConfig {
+            replanner,
+            baseline: activation_frequencies(&stats),
+            ewma_alpha: Some(0.25),
+        },
+    )?;
+
+    let qos = [QosClass::Interactive, QosClass::Standard, QosClass::Batch];
+    let mut tickets = Vec::new();
+    for i in 0..n_score {
+        let seq: Vec<u32> =
+            (0..cfg.seq_len).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+        let mut req = ServeRequest::new(seq).qos(qos[i % qos.len()]);
+        if i % 3 == 0 {
+            req = req.priority(Priority::High).deadline(Duration::from_secs(30));
+        }
+        tickets.push(cluster.submit_request(req)?);
+    }
+    for _ in 0..n_gen {
+        let prompt: Vec<u32> = (0..8).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+        tickets.push(cluster.generate(prompt, 8, vec![])?);
+    }
+    for t in &tickets {
+        t.wait_timeout(Duration::from_secs(600))?;
+    }
+    let report = cluster.shutdown();
+
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    report.trace.write_chrome_trace(&out)?;
+    let jsonl = out.with_extension("jsonl");
+    report.trace.write_jsonl(&jsonl)?;
+    let prom = out.with_extension("prom");
+    std::fs::write(&prom, mxmoe::obs::export::prometheus_text(&report.flatten()))?;
+
+    let check = validate_chrome_trace(&std::fs::read_to_string(&out)?)?;
+    let replans: usize = report.replicas.iter().map(|r| r.replans).sum();
+    let swaps: usize = report.replicas.iter().map(|r| r.swaps).sum();
+    println!(
+        "wrote {} ({} events: {} async pairs, {} spans, {} instants), {}, {}",
+        out.display(),
+        check.events,
+        check.begins,
+        check.completes,
+        check.instants,
+        jsonl.display(),
+        prom.display()
+    );
+    println!(
+        "pipeline: {} served, {} replan(s), {} hot-swap(s), {} trace event(s) dropped",
+        report.total_requests(),
+        replans,
+        swaps,
+        report.trace.dropped
+    );
+    for (i, s) in report.slo_by_class().iter().enumerate() {
+        if s.served > 0 {
+            println!(
+                "slo[{:11}] served {:3}  hit-rate {:.2}  queue {:.1}ms  compute {:.1}ms  \
+                 stream {:.1}ms",
+                slo_class_name(i),
+                s.served,
+                s.hit_rate(),
+                1e3 * s.queue_s,
+                1e3 * s.compute_s,
+                1e3 * s.stream_s
+            );
+        }
+    }
+    for (g, n) in report.served_by_generation() {
+        println!("served-bits: plan generation {g} served {n} request(s)");
+    }
+    Ok(())
+}
+
+/// `trace-validate`: CI-grade structural check of a Chrome trace-event
+/// file — well-formed JSON, required fields, non-decreasing timestamps,
+/// and matched async begin/end pairs per request id.
+fn cmd_trace_validate(args: &Args) -> Result<()> {
+    use mxmoe::obs::validate_chrome_trace;
+
+    let path = PathBuf::from(args.get("trace", "artifacts/trace.json"));
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("read {} (run `mxmoe trace-dump` first)", path.display()))?;
+    let check = validate_chrome_trace(&text)?;
+    println!(
+        "{}: OK — {} events ({} async begins, {} async ends, {} complete spans, {} instants)",
+        path.display(),
+        check.events,
+        check.begins,
+        check.ends,
+        check.completes,
+        check.instants
+    );
+    Ok(())
 }
 
 fn cmd_allocate(args: &Args) -> Result<()> {

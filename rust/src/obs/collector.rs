@@ -1,0 +1,180 @@
+//! Bounded per-thread span collectors (DESIGN.md §Observability).
+//!
+//! Every serving thread owns exactly one [`SpanCollector`] — the router
+//! and each replica hold theirs directly; admission events are recorded
+//! under the admission mutex the front door already takes. No new lock is
+//! taken anywhere on the hot path, and a disabled collector reduces every
+//! record to one branch.
+
+use super::span::{EventKind, Track, TraceClock, TraceEvent};
+
+/// Runtime on/off switch + ring capacity. Compile-free: flipping
+/// `enabled` requires no feature flag or rebuild, and the disabled path
+/// records nothing (measured ≤ 3% tokens/s overhead when enabled — see
+/// `benches/bench_trace_overhead.rs`).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    pub enabled: bool,
+    /// Events retained per collector; older events are overwritten
+    /// (bounded memory on a long-running server, like the metric windows).
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { enabled: false, capacity: 1 << 16 }
+    }
+}
+
+impl TraceConfig {
+    /// Tracing on with the default ring capacity.
+    pub fn on() -> TraceConfig {
+        TraceConfig { enabled: true, ..TraceConfig::default() }
+    }
+}
+
+/// A bounded ring of [`TraceEvent`]s owned by one thread. Uses the same
+/// cursor-ring idiom as the metric latency windows: fill, then overwrite
+/// oldest-first, counting what was dropped.
+#[derive(Debug)]
+pub struct SpanCollector {
+    clock: TraceClock,
+    track: Track,
+    enabled: bool,
+    capacity: usize,
+    buf: Vec<TraceEvent>,
+    cursor: usize,
+    dropped: usize,
+}
+
+impl SpanCollector {
+    pub fn new(clock: TraceClock, track: Track, cfg: TraceConfig) -> SpanCollector {
+        SpanCollector {
+            clock,
+            track,
+            enabled: cfg.enabled,
+            capacity: cfg.capacity.max(1),
+            buf: Vec::new(),
+            cursor: 0,
+            dropped: 0,
+        }
+    }
+
+    /// A no-op collector (tracing off) — what every metrics object starts
+    /// with until the cluster enables tracing.
+    pub fn disabled(track: Track) -> SpanCollector {
+        SpanCollector::new(TraceClock::new(), track, TraceConfig::default())
+    }
+
+    /// Guard for callers whose event arguments are expensive to compute.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.clock.now_us()
+    }
+
+    /// Record an instant (or request-lifecycle) event stamped now.
+    pub fn instant(&mut self, req: u64, kind: EventKind) {
+        if !self.enabled {
+            return;
+        }
+        let ts_us = self.clock.now_us();
+        self.push(TraceEvent { ts_us, dur_us: 0, req, track: self.track, kind });
+    }
+
+    /// Record a complete span with an explicit start and duration (both in
+    /// clock microseconds).
+    pub fn span(&mut self, ts_us: u64, dur_us: u64, req: u64, kind: EventKind) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent { ts_us, dur_us, req, track: self.track, kind });
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.cursor] = ev;
+            self.cursor = (self.cursor + 1) % self.capacity;
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Take the recorded events (oldest first) and the overwrite count,
+    /// leaving the collector empty. Called once per thread at drain time.
+    pub fn drain(&mut self) -> (Vec<TraceEvent>, usize) {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.cursor..]);
+        out.extend_from_slice(&self.buf[..self.cursor]);
+        self.buf.clear();
+        self.cursor = 0;
+        let dropped = self.dropped;
+        self.dropped = 0;
+        (out, dropped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev_req(c: &mut SpanCollector, req: u64) {
+        c.instant(req, EventKind::Routed { replica: 0 });
+    }
+
+    #[test]
+    fn disabled_collector_records_nothing() {
+        let mut c = SpanCollector::disabled(Track::Router);
+        assert!(!c.enabled());
+        ev_req(&mut c, 1);
+        c.span(0, 10, 0, EventKind::SwapStage { changes: 1 });
+        assert!(c.is_empty());
+        let (events, dropped) = c.drain();
+        assert!(events.is_empty());
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn ring_bounds_and_preserves_order() {
+        let cfg = TraceConfig { enabled: true, capacity: 4 };
+        let mut c = SpanCollector::new(TraceClock::new(), Track::Replica(2), cfg);
+        for i in 1..=10u64 {
+            ev_req(&mut c, i);
+        }
+        assert_eq!(c.len(), 4, "ring is bounded");
+        let (events, dropped) = c.drain();
+        assert_eq!(dropped, 6);
+        let ids: Vec<u64> = events.iter().map(|e| e.req).collect();
+        assert_eq!(ids, vec![7, 8, 9, 10], "oldest-first, newest retained");
+        for w in events.windows(2) {
+            assert!(w[0].ts_us <= w[1].ts_us, "drain order is time order");
+        }
+        assert!(events.iter().all(|e| e.track == Track::Replica(2)));
+    }
+
+    #[test]
+    fn drain_resets_the_collector() {
+        let mut c =
+            SpanCollector::new(TraceClock::new(), Track::Admission, TraceConfig::on());
+        ev_req(&mut c, 1);
+        let (events, _) = c.drain();
+        assert_eq!(events.len(), 1);
+        assert!(c.is_empty());
+        ev_req(&mut c, 2);
+        let (events, dropped) = c.drain();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].req, 2);
+        assert_eq!(dropped, 0);
+    }
+}

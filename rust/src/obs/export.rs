@@ -1,0 +1,530 @@
+//! Trace export: Chrome trace-event JSON (Perfetto-loadable), JSONL
+//! structured events, a Prometheus-style counter snapshot, and the
+//! validator CI runs over emitted traces (DESIGN.md §Observability).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::metrics::ServerReport;
+use crate::ser::Json;
+
+use super::span::{EventKind, Track, TraceEvent};
+
+/// The merged, time-sorted event log of one serving run: every collector's
+/// ring drained into one timeline at shutdown.
+#[derive(Clone, Debug, Default)]
+pub struct TraceLog {
+    /// Events sorted by timestamp (admits before terminals at equal ts).
+    pub events: Vec<TraceEvent>,
+    /// Events overwritten in bounded rings before the drain (0 = the log
+    /// is complete).
+    pub dropped: usize,
+}
+
+impl TraceLog {
+    pub fn empty() -> TraceLog {
+        TraceLog::default()
+    }
+
+    /// Merge drained collector rings into one sorted timeline. Sorting is
+    /// by timestamp with lifecycle tie-breaks (an admit sorts before a
+    /// terminal recorded in the same microsecond), so the exported Chrome
+    /// trace is monotonic and its async begin/end pairs nest.
+    pub fn merge(parts: Vec<(Vec<TraceEvent>, usize)>) -> TraceLog {
+        let mut events = Vec::new();
+        let mut dropped = 0;
+        for (evs, d) in parts {
+            events.extend(evs);
+            dropped += d;
+        }
+        events.sort_by_key(|e| (e.ts_us, lifecycle_rank(&e.kind), e.req));
+        TraceLog { events, dropped }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Request ids admitted in this log.
+    pub fn admitted_ids(&self) -> Vec<u64> {
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Admitted { .. }))
+            .map(|e| e.req)
+            .collect()
+    }
+
+    /// Terminal events per request id: `(id, outcome)` in time order.
+    pub fn terminals(&self) -> Vec<(u64, super::span::Outcome)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e.kind {
+                EventKind::Terminal { outcome, .. } => Some((e.req, outcome)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The full log as a Chrome trace-event JSON document
+    /// (<https://ui.perfetto.dev> loads it directly). Request lifecycles
+    /// are nestable async `b`/`e` pairs keyed by request id; waves, decode
+    /// steps and replan phases are complete (`X`) spans on their thread's
+    /// track; rejections and routing decisions are instants.
+    pub fn chrome_trace(&self) -> Json {
+        let mut out = Vec::new();
+        // thread-name metadata first (ts 0 keeps the stream monotonic)
+        let mut tracks: Vec<Track> = Vec::new();
+        for e in &self.events {
+            if !tracks.contains(&e.track) {
+                tracks.push(e.track);
+            }
+        }
+        tracks.sort_by_key(Track::tid);
+        out.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("process_name")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(0.0)),
+            ("ts", Json::num(0.0)),
+            ("args", Json::obj(vec![("name", Json::str("mxmoe"))])),
+        ]));
+        for t in &tracks {
+            out.push(Json::obj(vec![
+                ("ph", Json::str("M")),
+                ("name", Json::str("thread_name")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(t.tid() as f64)),
+                ("ts", Json::num(0.0)),
+                ("args", Json::obj(vec![("name", Json::str(&t.name()))])),
+            ]));
+        }
+        for e in &self.events {
+            let mut fields = vec![
+                ("name", Json::str(e.kind.name())),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(e.track.tid() as f64)),
+                ("ts", Json::num(e.ts_us as f64)),
+                ("args", event_args(e)),
+            ];
+            match &e.kind {
+                EventKind::Admitted { .. } => {
+                    fields.push(("ph", Json::str("b")));
+                    fields.push(("cat", Json::str("request")));
+                    fields.push(("id", Json::num(e.req as f64)));
+                }
+                EventKind::Terminal { .. } => {
+                    fields.push(("ph", Json::str("e")));
+                    fields.push(("cat", Json::str("request")));
+                    fields.push(("id", Json::num(e.req as f64)));
+                }
+                EventKind::Rejected { .. }
+                | EventKind::BatchCut { .. }
+                | EventKind::Routed { .. } => {
+                    fields.push(("ph", Json::str("i")));
+                    fields.push(("s", Json::str("t")));
+                }
+                EventKind::Wave { .. }
+                | EventKind::DecodeStep { .. }
+                | EventKind::ReplanSolve { .. }
+                | EventKind::SwapStage { .. }
+                | EventKind::SwapInstall { .. } => {
+                    fields.push(("ph", Json::str("X")));
+                    fields.push(("dur", Json::num(e.dur_us as f64)));
+                }
+            }
+            out.push(Json::obj(fields));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(out)),
+            ("displayTimeUnit", Json::str("ms")),
+            ("otherData", Json::obj(vec![("droppedEvents", Json::num(self.dropped as f64))])),
+        ])
+    }
+
+    pub fn write_chrome_trace(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.chrome_trace().dump())
+            .with_context(|| format!("write chrome trace {path:?}"))
+    }
+
+    /// One structured JSON object per line — the machine-diffable log.
+    pub fn jsonl(&self) -> String {
+        let mut s = String::new();
+        for e in &self.events {
+            let line = Json::obj(vec![
+                ("ts_us", Json::num(e.ts_us as f64)),
+                ("dur_us", Json::num(e.dur_us as f64)),
+                ("req", Json::num(e.req as f64)),
+                ("track", Json::str(&e.track.name())),
+                ("event", Json::str(e.kind.name())),
+                ("args", event_args(e)),
+            ]);
+            s.push_str(&line.dump());
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn write_jsonl(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.jsonl()).with_context(|| format!("write jsonl {path:?}"))
+    }
+}
+
+/// Sort rank at equal timestamps: admits open before anything else; a
+/// terminal closes after everything else.
+fn lifecycle_rank(kind: &EventKind) -> u8 {
+    match kind {
+        EventKind::Admitted { .. } => 0,
+        EventKind::Terminal { .. } => 2,
+        _ => 1,
+    }
+}
+
+/// Kind-specific argument object (shared by the Chrome and JSONL exports).
+fn event_args(e: &TraceEvent) -> Json {
+    let req = ("req", Json::num(e.req as f64));
+    match &e.kind {
+        EventKind::Admitted { qos, priority, tokens } => Json::obj(vec![
+            req,
+            ("qos", Json::str(qos)),
+            ("priority", Json::str(priority)),
+            ("tokens", Json::num(*tokens as f64)),
+        ]),
+        EventKind::Rejected { reason } => Json::obj(vec![req, ("reason", Json::str(reason))]),
+        EventKind::BatchCut { seqs, tokens, fill } => Json::obj(vec![
+            ("seqs", Json::num(*seqs as f64)),
+            ("tokens", Json::num(*tokens as f64)),
+            ("fill", Json::num(*fill)),
+        ]),
+        EventKind::Routed { replica } => {
+            Json::obj(vec![req, ("replica", Json::num(*replica as f64))])
+        }
+        EventKind::Terminal {
+            outcome,
+            qos,
+            queue_us,
+            compute_us,
+            stream_us,
+            generation,
+            deadline,
+            tokens,
+        } => Json::obj(vec![
+            req,
+            ("outcome", Json::str(outcome.name())),
+            ("qos", Json::str(qos)),
+            ("queue_us", Json::num(*queue_us as f64)),
+            ("compute_us", Json::num(*compute_us as f64)),
+            ("stream_us", Json::num(*stream_us as f64)),
+            ("generation", Json::num(*generation as f64)),
+            ("deadline", Json::str(deadline.name())),
+            ("tokens", Json::num(*tokens as f64)),
+        ]),
+        EventKind::Wave { scheme, tile_m, items, rows, padded } => Json::obj(vec![
+            ("scheme", Json::str(scheme)),
+            ("tile_m", Json::num(*tile_m as f64)),
+            ("items", Json::num(*items as f64)),
+            ("rows", Json::num(*rows as f64)),
+            ("padded", Json::num(*padded as f64)),
+        ]),
+        EventKind::DecodeStep { rows, prefill_rows, decode_rows, tokens, kv_reserved, kv_budget } => {
+            Json::obj(vec![
+                ("rows", Json::num(*rows as f64)),
+                ("prefill_rows", Json::num(*prefill_rows as f64)),
+                ("decode_rows", Json::num(*decode_rows as f64)),
+                ("tokens", Json::num(*tokens as f64)),
+                ("kv_reserved", Json::num(*kv_reserved as f64)),
+                ("kv_budget", Json::num(*kv_budget as f64)),
+            ])
+        }
+        EventKind::ReplanSolve { drift, changes } => Json::obj(vec![
+            ("drift", Json::num(*drift)),
+            ("changes", Json::num(*changes as f64)),
+        ]),
+        EventKind::SwapStage { changes } => {
+            Json::obj(vec![("changes", Json::num(*changes as f64))])
+        }
+        EventKind::SwapInstall { swapped, generation } => Json::obj(vec![
+            ("swapped", Json::num(*swapped as f64)),
+            ("generation", Json::num(*generation as f64)),
+        ]),
+    }
+}
+
+/// What [`validate_chrome_trace`] verified.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCheck {
+    /// Events checked (metadata included).
+    pub events: usize,
+    /// Async begin events (`ph: "b"`).
+    pub begins: usize,
+    /// Async end events (`ph: "e"`) — equals `begins` in a valid trace.
+    pub ends: usize,
+    /// Complete spans (`ph: "X"`).
+    pub completes: usize,
+    /// Instant events (`ph: "i"`).
+    pub instants: usize,
+}
+
+/// Validate a Chrome trace-event JSON document the way CI does: parse
+/// strictly, require the `traceEvents` array, require `ph`/`name`/`pid`/
+/// `tid` on every event, non-decreasing timestamps, non-negative `dur` on
+/// complete spans, and matched `b`/`e` pairs per `(cat, id, name)` — the
+/// every-admit-has-exactly-one-terminal invariant, restated over the file.
+pub fn validate_chrome_trace(text: &str) -> Result<TraceCheck> {
+    let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("not valid JSON: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .context("missing 'traceEvents' array")?;
+    let mut check = TraceCheck::default();
+    let mut open: std::collections::BTreeMap<(String, u64, String), usize> =
+        std::collections::BTreeMap::new();
+    let mut last_ts = f64::NEG_INFINITY;
+    for (i, ev) in events.iter().enumerate() {
+        check.events += 1;
+        let ph = ev.req_str("ph").with_context(|| format!("event {i}"))?;
+        ev.req_str("name").with_context(|| format!("event {i}"))?;
+        ev.req_f64("pid").with_context(|| format!("event {i}"))?;
+        ev.req_f64("tid").with_context(|| format!("event {i}"))?;
+        let ts = ev.req_f64("ts").with_context(|| format!("event {i}"))?;
+        if ph == "M" {
+            continue; // metadata carries no timeline meaning
+        }
+        if ts < last_ts {
+            bail!("event {i}: timestamp regressed ({ts} < {last_ts})");
+        }
+        last_ts = ts;
+        match ph {
+            "b" | "e" => {
+                let cat = ev.req_str("cat").with_context(|| format!("event {i}"))?;
+                let id = ev.req_usize("id").with_context(|| format!("event {i}"))? as u64;
+                let name = ev.req_str("name").unwrap();
+                let key = (cat.to_string(), id, name.to_string());
+                if ph == "b" {
+                    check.begins += 1;
+                    *open.entry(key).or_insert(0) += 1;
+                } else {
+                    check.ends += 1;
+                    let n = open.get_mut(&key).map(|n| {
+                        *n = n.saturating_sub(1);
+                        *n
+                    });
+                    match n {
+                        Some(_) if open[&key] == 0 => {
+                            open.remove(&key);
+                        }
+                        Some(_) => {}
+                        None => bail!(
+                            "event {i}: 'e' without matching 'b' (cat={}, id={}, name={})",
+                            key.0,
+                            key.1,
+                            key.2
+                        ),
+                    }
+                }
+            }
+            "X" => {
+                check.completes += 1;
+                let dur = ev.req_f64("dur").with_context(|| format!("event {i}"))?;
+                if dur < 0.0 {
+                    bail!("event {i}: negative dur {dur}");
+                }
+            }
+            "i" => check.instants += 1,
+            other => bail!("event {i}: unsupported phase '{other}'"),
+        }
+    }
+    if !open.is_empty() {
+        let (cat, id, name) = open.keys().next().unwrap();
+        bail!(
+            "{} unmatched 'b' event(s) — first: cat={cat}, id={id}, name={name}",
+            open.values().sum::<usize>()
+        );
+    }
+    Ok(check)
+}
+
+/// Prometheus-style text snapshot of the final server counters — the
+/// third export, for scrape-shaped consumers.
+pub fn prometheus_text(r: &ServerReport) -> String {
+    let mut s = String::new();
+    let mut counter = |name: &str, help: &str, v: f64| {
+        s.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+    };
+    counter("mxmoe_requests_total", "Requests served", r.requests as f64);
+    counter("mxmoe_tokens_total", "Tokens processed", r.tokens as f64);
+    counter("mxmoe_expert_calls_total", "Expert tile executions", r.expert_calls as f64);
+    counter("mxmoe_waves_total", "Grouped-dispatch waves", r.waves as f64);
+    counter("mxmoe_replans_total", "Drift-triggered re-solves", r.replans as f64);
+    counter("mxmoe_swaps_total", "Expert slots hot-swapped", r.swaps as f64);
+    counter("mxmoe_stolen_batches_total", "Batches stolen between replicas", r.stolen_batches as f64);
+    counter("mxmoe_admitted_total", "Requests admitted", r.admitted as f64);
+    counter("mxmoe_cancelled_total", "Admitted requests cancelled", r.cancelled as f64);
+    counter("mxmoe_failed_total", "Admitted requests failed", r.failed as f64);
+    counter("mxmoe_decode_steps_total", "Mixed prefill/decode steps", r.decode_steps as f64);
+    counter("mxmoe_generated_tokens_total", "Tokens generated and streamed", r.generated_tokens as f64);
+    counter("mxmoe_generations_total", "Generations completed", r.generations as f64);
+    s.push_str("# HELP mxmoe_rejected_total Requests rejected at admission\n");
+    s.push_str("# TYPE mxmoe_rejected_total counter\n");
+    s.push_str(&format!(
+        "mxmoe_rejected_total{{reason=\"queue_full\"}} {}\n",
+        r.rejected_queue_full
+    ));
+    s.push_str(&format!("mxmoe_rejected_total{{reason=\"deadline\"}} {}\n", r.rejected_deadline));
+    s.push_str(&format!("mxmoe_rejected_total{{reason=\"quota\"}} {}\n", r.rejected_quota));
+    s.push_str("# HELP mxmoe_qos_served_total Requests served per QoS class\n");
+    s.push_str("# TYPE mxmoe_qos_served_total counter\n");
+    for (name, v) in ["interactive", "standard", "batch"].iter().zip(r.qos_served) {
+        s.push_str(&format!("mxmoe_qos_served_total{{class=\"{name}\"}} {v}\n"));
+    }
+    let mut gauge = |name: &str, help: &str, v: f64| {
+        s.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+    };
+    gauge("mxmoe_throughput_tps", "Tokens per second", r.throughput_tps);
+    gauge("mxmoe_decode_tps", "Generated tokens per second", r.decode_tps);
+    gauge("mxmoe_latency_p50_seconds", "Request latency p50", r.p50_latency_s);
+    gauge("mxmoe_latency_p99_seconds", "Request latency p99", r.p99_latency_s);
+    gauge("mxmoe_queue_wait_p50_seconds", "Queue wait p50", r.p50_queue_wait_s);
+    gauge("mxmoe_wave_p50_seconds", "Wave wall-clock p50", r.p50_wave_s);
+    gauge("mxmoe_step_p50_seconds", "Decode-step wall-clock p50", r.p50_step_s);
+    gauge("mxmoe_padding_ratio", "Padding fraction of shipped rows", r.padding_ratio);
+    gauge("mxmoe_wave_fill_ratio", "Useful fraction of wave rows", r.wave_fill_ratio);
+    gauge("mxmoe_last_planned_fill", "Planner fill of last cut", r.last_planned_fill);
+    gauge("mxmoe_last_drift", "Worst telemetry drift at last check", r.last_drift);
+    gauge("mxmoe_generation", "Highest plan generation", r.generation as f64);
+    gauge("mxmoe_replicas", "Engine replicas", r.replicas as f64);
+    gauge("mxmoe_max_queue_depth", "Deepest admission queue", r.max_queue_depth as f64);
+    gauge("mxmoe_kv_peak_tokens", "KV reservation high-water mark", r.kv_peak_tokens as f64);
+    s.push_str("# HELP mxmoe_queue_wait_p99_seconds Queue wait p99 per priority\n");
+    s.push_str("# TYPE mxmoe_queue_wait_p99_seconds gauge\n");
+    for (name, v) in ["low", "normal", "high"].iter().zip(r.queue_wait_p99_by_priority) {
+        s.push_str(&format!("mxmoe_queue_wait_p99_seconds{{priority=\"{name}\"}} {v}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::span::{Deadline, Outcome};
+    use super::*;
+
+    fn admit(ts: u64, req: u64) -> TraceEvent {
+        TraceEvent {
+            ts_us: ts,
+            dur_us: 0,
+            req,
+            track: Track::Admission,
+            kind: EventKind::Admitted { qos: "standard", priority: "normal", tokens: 8 },
+        }
+    }
+
+    fn terminal(ts: u64, req: u64, outcome: Outcome) -> TraceEvent {
+        TraceEvent {
+            ts_us: ts,
+            dur_us: 0,
+            req,
+            track: Track::Replica(0),
+            kind: EventKind::Terminal {
+                outcome,
+                qos: "standard",
+                queue_us: 5,
+                compute_us: 10,
+                stream_us: 0,
+                generation: 0,
+                deadline: Deadline::None,
+                tokens: 8,
+            },
+        }
+    }
+
+    fn wave(ts: u64, dur: u64) -> TraceEvent {
+        TraceEvent {
+            ts_us: ts,
+            dur_us: dur,
+            req: 0,
+            track: Track::Replica(0),
+            kind: EventKind::Wave { scheme: "fp16", tile_m: 16, items: 2, rows: 20, padded: 32 },
+        }
+    }
+
+    fn sample_log() -> TraceLog {
+        TraceLog::merge(vec![
+            (vec![admit(10, 1), admit(12, 2)], 0),
+            (vec![terminal(40, 1, Outcome::Done), terminal(55, 2, Outcome::Cancelled)], 0),
+            (vec![wave(20, 9)], 0),
+        ])
+    }
+
+    #[test]
+    fn merge_sorts_and_counts() {
+        let log = sample_log();
+        assert_eq!(log.len(), 5);
+        for w in log.events.windows(2) {
+            assert!(w[0].ts_us <= w[1].ts_us);
+        }
+        assert_eq!(log.admitted_ids(), vec![1, 2]);
+        assert_eq!(log.terminals().len(), 2);
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_the_validator() {
+        let log = sample_log();
+        let text = log.chrome_trace().dump();
+        let check = validate_chrome_trace(&text).expect("valid trace");
+        assert_eq!(check.begins, 2);
+        assert_eq!(check.ends, 2);
+        assert_eq!(check.completes, 1);
+    }
+
+    #[test]
+    fn validator_rejects_unmatched_begin() {
+        let log = TraceLog::merge(vec![(vec![admit(10, 1)], 0)]);
+        let err = validate_chrome_trace(&log.chrome_trace().dump()).unwrap_err();
+        assert!(err.to_string().contains("unmatched 'b'"), "{err}");
+    }
+
+    #[test]
+    fn validator_rejects_end_without_begin() {
+        let log = TraceLog::merge(vec![(vec![terminal(10, 1, Outcome::Done)], 0)]);
+        let err = validate_chrome_trace(&log.chrome_trace().dump()).unwrap_err();
+        assert!(err.to_string().contains("without matching 'b'"), "{err}");
+    }
+
+    #[test]
+    fn validator_rejects_regressed_timestamps() {
+        // hand-build a document with a regressed ts
+        let text = r#"{"traceEvents":[
+            {"ph":"i","s":"t","name":"a","pid":1,"tid":1,"ts":100},
+            {"ph":"i","s":"t","name":"b","pid":1,"tid":1,"ts":50}
+        ]}"#;
+        let err = validate_chrome_trace(text).unwrap_err();
+        assert!(err.to_string().contains("regressed"), "{err}");
+    }
+
+    #[test]
+    fn validator_rejects_garbage_and_missing_fields() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace(r#"{"events":[]}"#).is_err());
+        assert!(validate_chrome_trace(
+            r#"{"traceEvents":[{"ph":"X","name":"w","pid":1,"tid":1,"ts":1}]}"#
+        )
+        .is_err(), "X without dur");
+    }
+
+    #[test]
+    fn jsonl_lines_parse_back() {
+        let log = sample_log();
+        let text = log.jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), log.len());
+        for line in lines {
+            let v = Json::parse(line).expect("valid jsonl line");
+            assert!(v.get("ts_us").is_some());
+            assert!(v.get("event").is_some());
+        }
+    }
+}

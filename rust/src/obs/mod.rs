@@ -1,0 +1,29 @@
+//! Observability: end-to-end request tracing and SLO accounting
+//! (DESIGN.md §Observability).
+//!
+//! The serving stack reports aggregates — percentiles, wave fill, replan
+//! history — but aggregates cannot answer "why was *this* request slow?".
+//! This module records per-request lifecycle spans (admit → queued →
+//! batch-cut → routed → waves/decode steps → terminal) plus engine-level
+//! spans (replan solve, swap staging, swap install) into per-thread
+//! bounded ring collectors, drains them into a [`TraceLog`] at shutdown,
+//! and exports three ways:
+//!
+//! * Chrome trace-event JSON ([`TraceLog::write_chrome_trace`]) — open in
+//!   Perfetto (<https://ui.perfetto.dev>) or `chrome://tracing`;
+//! * a JSONL structured event log ([`TraceLog::write_jsonl`]);
+//! * a Prometheus-style text snapshot of the server counters
+//!   ([`export::prometheus_text`]).
+//!
+//! Collection is compile-free switchable at runtime ([`TraceConfig`]) and
+//! lock-free on the serving threads: every collector is *owned* by exactly
+//! one thread (admission events ride the admission mutex the front door
+//! already takes), so tracing adds no contention to the hot path.
+
+pub mod collector;
+pub mod export;
+pub mod span;
+
+pub use collector::{SpanCollector, TraceConfig};
+pub use export::{validate_chrome_trace, TraceCheck, TraceLog};
+pub use span::{Deadline, EventKind, Outcome, Track, TraceClock, TraceEvent};

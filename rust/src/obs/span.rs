@@ -1,0 +1,218 @@
+//! Span vocabulary: the trace clock, event tracks, and the typed event
+//! kinds every pipeline stage records (DESIGN.md §Observability).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Shared monotonic origin for trace timestamps. One clock is created per
+/// cluster and cloned into every collector (admission, router, replicas),
+/// so timestamps from different threads are directly comparable and the
+/// merged log sorts into one monotonic timeline.
+#[derive(Clone, Debug)]
+pub struct TraceClock(Arc<Instant>);
+
+impl TraceClock {
+    pub fn new() -> TraceClock {
+        TraceClock(Arc::new(Instant::now()))
+    }
+
+    /// Microseconds since the clock origin.
+    pub fn now_us(&self) -> u64 {
+        self.0.elapsed().as_micros() as u64
+    }
+}
+
+impl Default for TraceClock {
+    fn default() -> Self {
+        TraceClock::new()
+    }
+}
+
+/// Which thread's collector recorded an event — becomes the `tid` of the
+/// exported Chrome trace, so Perfetto shows one lane per serving thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Track {
+    /// The admission front door (events recorded under the admission lock).
+    Admission,
+    /// The router thread (batch cuts, routing decisions, cut-time sheds).
+    Router,
+    /// A replica worker thread (execution, decode, replan, terminals).
+    Replica(usize),
+}
+
+impl Track {
+    /// Stable Chrome-trace thread id (pid is always 1).
+    pub fn tid(&self) -> u64 {
+        match self {
+            Track::Admission => 0,
+            Track::Router => 1,
+            Track::Replica(i) => 10 + *i as u64,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Track::Admission => "admission".to_string(),
+            Track::Router => "router".to_string(),
+            Track::Replica(i) => format!("replica-{i}"),
+        }
+    }
+}
+
+/// How a request's lifecycle ended — every admitted request records
+/// exactly one terminal event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Served: a response was delivered.
+    Done,
+    /// Cancelled by the client (shed at the batcher, the deque, or the
+    /// decode loop — anywhere after admission).
+    Cancelled,
+    /// Dropped by an engine failure.
+    Failed,
+    /// Shed by the router at cut time (cancellation observed at the cut).
+    Shed,
+}
+
+impl Outcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Outcome::Done => "done",
+            Outcome::Cancelled => "cancelled",
+            Outcome::Failed => "failed",
+            Outcome::Shed => "shed",
+        }
+    }
+}
+
+/// Deadline verdict stamped on a served request's terminal event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Deadline {
+    /// The request carried no deadline.
+    None,
+    /// Served before its deadline.
+    Hit,
+    /// Served after its deadline.
+    Miss,
+}
+
+impl Deadline {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Deadline::None => "none",
+            Deadline::Hit => "hit",
+            Deadline::Miss => "miss",
+        }
+    }
+}
+
+/// One recorded event. Request-lifecycle kinds carry the request id in
+/// `req` (0 = not request-scoped); `dur_us` is nonzero only for complete
+/// spans (waves, decode steps, replan phases).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub ts_us: u64,
+    pub dur_us: u64,
+    /// Request id (admission-assigned, starts at 1); 0 for engine/router
+    /// spans that are not tied to one request.
+    pub req: u64,
+    pub track: Track,
+    pub kind: EventKind,
+}
+
+/// The span taxonomy. String fields are `&'static str` names (QoS class,
+/// priority, reject reason, runtime scheme) so recording never allocates.
+#[derive(Clone, Debug)]
+pub enum EventKind {
+    /// Request admitted — opens the request's async span.
+    Admitted { qos: &'static str, priority: &'static str, tokens: usize },
+    /// Request rejected at the front door (load shed) — instant; the id
+    /// makes the rejection attributable per request.
+    Rejected { reason: &'static str },
+    /// Router cut a batch (instant on the router track).
+    BatchCut { seqs: usize, tokens: usize, fill: f64 },
+    /// Request routed to a replica (instant on the router track).
+    Routed { replica: usize },
+    /// Terminal event — closes the request's async span. Time-in-stage
+    /// breakdown: `queue_us` (admission → execution start), `compute_us`
+    /// (execution start → finish), `stream_us` (first streamed token →
+    /// finish, decode only). `generation` is the precision-plan generation
+    /// that served the request (served-bits attribution).
+    Terminal {
+        outcome: Outcome,
+        qos: &'static str,
+        queue_us: u64,
+        compute_us: u64,
+        stream_us: u64,
+        generation: u64,
+        deadline: Deadline,
+        tokens: usize,
+    },
+    /// One grouped-dispatch wave (complete span on the replica track).
+    Wave { scheme: &'static str, tile_m: usize, items: usize, rows: usize, padded: usize },
+    /// One decode step (complete span): mixed prefill/decode rows, tokens
+    /// emitted, and KV-pool occupancy after the step.
+    DecodeStep {
+        rows: usize,
+        prefill_rows: usize,
+        decode_rows: usize,
+        tokens: usize,
+        kv_reserved: usize,
+        kv_budget: usize,
+    },
+    /// Drift check + MCKP re-solve on the serving thread (complete span).
+    ReplanSolve { drift: f64, changes: usize },
+    /// Off-thread re-quantization of the changed slots (complete span,
+    /// placed at its measured duration ending at the install poll).
+    SwapStage { changes: usize },
+    /// Generation-counted slot flip on the serving thread (complete span).
+    SwapInstall { swapped: usize, generation: u64 },
+}
+
+impl EventKind {
+    /// Exported event name (Chrome trace `name` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Admitted { .. } | EventKind::Terminal { .. } => "request",
+            EventKind::Rejected { .. } => "rejected",
+            EventKind::BatchCut { .. } => "batch-cut",
+            EventKind::Routed { .. } => "routed",
+            EventKind::Wave { .. } => "wave",
+            EventKind::DecodeStep { .. } => "decode-step",
+            EventKind::ReplanSolve { .. } => "replan-solve",
+            EventKind::SwapStage { .. } => "swap-stage",
+            EventKind::SwapInstall { .. } => "swap-install",
+        }
+    }
+
+    /// Is this a request-terminal kind (closes the request's async span)?
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, EventKind::Terminal { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotonic_across_clones() {
+        let clock = TraceClock::new();
+        let other = clock.clone();
+        let a = clock.now_us();
+        let b = other.now_us();
+        let c = clock.now_us();
+        assert!(a <= b && b <= c);
+    }
+
+    #[test]
+    fn track_tids_are_distinct() {
+        let tracks =
+            [Track::Admission, Track::Router, Track::Replica(0), Track::Replica(1)];
+        for (i, a) in tracks.iter().enumerate() {
+            for b in &tracks[i + 1..] {
+                assert_ne!(a.tid(), b.tid());
+            }
+        }
+    }
+}

@@ -214,6 +214,9 @@ pub struct WaveStats {
     pub items: usize,
     pub padded_rows: usize,
     pub useful_rows: usize,
+    /// First launch of any member, relative to dispatch start (trace
+    /// placement of the wave span).
+    pub start_s: f64,
     /// First-launch → last-completion wall clock of the wave's members.
     pub elapsed_s: f64,
     /// Sum of member execute times (busy time; > `elapsed_s` means the
@@ -361,6 +364,7 @@ pub fn execute(
                 items: w.items.len(),
                 padded_rows: w.padded_rows(),
                 useful_rows: w.items.iter().map(|&i| plan.items[i].rows).sum(),
+                start_s: if first.is_finite() { first } else { 0.0 },
                 elapsed_s: (last - first).max(0.0),
                 busy_s: w.items.iter().map(|&i| timings[i].1 - timings[i].0).sum(),
             }

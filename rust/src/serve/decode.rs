@@ -106,6 +106,12 @@ pub struct FinishedGen {
     pub mean_prompt_nll: f64,
     /// Admission → first prefill row.
     pub queue_wait: Duration,
+    /// First prefill row → retirement (the compute window of the request's
+    /// lifecycle span).
+    pub compute: Duration,
+    /// First streamed token → retirement (the streaming window; zero when
+    /// nothing was streamed).
+    pub stream: Duration,
 }
 
 /// What one [`DecodeScheduler::step`] call did.
@@ -145,6 +151,8 @@ struct ActiveSeq {
     /// (scoring parity for the final response; never streamed).
     final_argmax: Option<u32>,
     first_step_at: Option<Instant>,
+    /// When the first token hit the stream (stream-time accounting).
+    first_token_at: Option<Instant>,
     done: Option<FinishReason>,
 }
 
@@ -456,6 +464,7 @@ impl DecodeScheduler {
                 nll_sum: 0.0,
                 final_argmax: None,
                 first_step_at: None,
+                first_token_at: None,
                 done: None,
             });
         }
@@ -470,8 +479,16 @@ impl DecodeScheduler {
                 i += 1;
                 continue;
             };
-            let ActiveSeq { req, kv, generated, nll_sum, final_argmax, first_step_at, .. } =
-                self.active.remove(i);
+            let ActiveSeq {
+                req,
+                kv,
+                generated,
+                nll_sum,
+                final_argmax,
+                first_step_at,
+                first_token_at,
+                ..
+            } = self.active.remove(i);
             self.pool.free(kv);
             if let RequestKind::Generate(spec) = &req.kind {
                 let _ = spec
@@ -488,6 +505,7 @@ impl DecodeScheduler {
                 }
                 FinishReason::Stop | FinishReason::Length => {
                     self.stats.generations += 1;
+                    let now = Instant::now();
                     out.finished.push(FinishedGen {
                         reason,
                         generated: generated.len(),
@@ -495,6 +513,10 @@ impl DecodeScheduler {
                         mean_prompt_nll: nll_sum / (req.tokens.len() - 1).max(1) as f64,
                         queue_wait: first_step_at
                             .map_or(Duration::ZERO, |t| t.saturating_duration_since(req.arrived)),
+                        compute: first_step_at
+                            .map_or(Duration::ZERO, |t| now.saturating_duration_since(t)),
+                        stream: first_token_at
+                            .map_or(Duration::ZERO, |t| now.saturating_duration_since(t)),
                         request: req,
                     });
                 }
@@ -507,6 +529,9 @@ impl DecodeScheduler {
 /// (stop-token, then length).
 fn emit(a: &mut ActiveSeq, token: u32, out: &mut StepOutcome) {
     let index = a.generated.len();
+    if a.first_token_at.is_none() {
+        a.first_token_at = Some(Instant::now());
+    }
     a.generated.push(token);
     let spec = match &a.req.kind {
         RequestKind::Generate(s) => s,
@@ -675,6 +700,8 @@ mod tests {
         assert!(fin.last_token.is_some(), "scoring parity: argmax continuation kept");
         assert_eq!(fin.reason, FinishReason::Length);
         assert!(fin.mean_prompt_nll.is_finite());
+        assert_eq!(fin.stream, Duration::ZERO, "nothing was streamed");
+        assert!(fin.compute >= Duration::ZERO);
         let (tokens, reason) = drain(&handle);
         assert!(tokens.is_empty());
         assert_eq!(reason, Some(FinishReason::Length));

@@ -157,6 +157,8 @@ pub struct SwapStagingJob {
 /// ([`SlotTable::install_staged`]). Plain `Send` data.
 pub struct StagedSwap {
     slots: Vec<(usize, usize, RuntimeScheme, QuantizedExpertData)>,
+    /// Wall clock the staging worker spent re-quantizing (trace span).
+    staging_s: f64,
 }
 
 impl StagedSwap {
@@ -167,6 +169,11 @@ impl StagedSwap {
 
     pub fn is_empty(&self) -> bool {
         self.slots.is_empty()
+    }
+
+    /// Off-thread re-quantization wall clock.
+    pub fn staging_s(&self) -> f64 {
+        self.staging_s
     }
 }
 
@@ -206,11 +213,12 @@ impl SwapStagingJob {
     /// Re-quantize every changed expert (CPU-heavy, fallible; callable on
     /// a worker thread — `self` owns its weights).
     pub fn run(self) -> Result<StagedSwap> {
+        let start = std::time::Instant::now();
         let mut slots = Vec::with_capacity(self.changes.len());
         for (ch, weights) in self.changes {
             let data = QuantizedExpertData::quantize(&weights, ch.new)?;
             slots.push((ch.block_pos, ch.expert, ch.new, data));
         }
-        Ok(StagedSwap { slots })
+        Ok(StagedSwap { slots, staging_s: start.elapsed().as_secs_f64() })
     }
 }

@@ -48,7 +48,9 @@ pub mod telemetry;
 pub use decode::{DecodePolicy, DecodeScheduler, DecodeStats, FinishedGen, StepOutcome};
 pub use hotswap::{SlotChange, SlotTable, StagedSwap};
 pub use kvcache::{KvCache, KvOccupancy, SeqKv};
-pub use queue::{BatchPolicy, ContinuousBatcher, GenSpec, Request, RequestKind, Response};
+pub use queue::{
+    BatchPolicy, ContinuousBatcher, GenSpec, Request, RequestKind, Response, ShedInfo,
+};
 pub use replan::{diff_plans, ReplanConfig, ReplanOutcome, Replanner};
 pub use replica::{ReplicaOnline, ReplicaSpec, ReplicaStatus, RoutedBatch, WorkQueues};
 pub use request::{

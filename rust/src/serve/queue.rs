@@ -178,6 +178,19 @@ impl Default for BatchPolicy {
     }
 }
 
+/// One request dropped by [`ContinuousBatcher::shed_cancelled`]: what the
+/// router needs to record an attributable terminal span for the shed.
+#[derive(Clone, Copy, Debug)]
+pub struct ShedInfo {
+    /// Admission-assigned request id.
+    pub id: u64,
+    pub tokens: usize,
+    /// Time the request sat queued before the shed.
+    pub queued: Duration,
+    /// QoS class name (`"none"` when unset).
+    pub qos: &'static str,
+}
+
 /// Priority- and deadline-aware admission queue with tile-aware batch
 /// cutting.
 pub struct ContinuousBatcher {
@@ -235,26 +248,30 @@ impl ContinuousBatcher {
         self.pending_tokens
     }
 
-    /// Drop every cancelled request from the queue; returns `(sequences,
-    /// tokens)` shed. Runs before each cut so cancelled work is never
-    /// routed.
-    pub fn shed_cancelled(&mut self) -> (usize, usize) {
-        let before = self.pending.len();
-        let mut shed_tokens = 0usize;
+    /// Drop every cancelled request from the queue; returns one
+    /// [`ShedInfo`] per shed request (id, tokens, queued time) so the
+    /// router can record attributable terminal spans, not just counts.
+    /// Runs before each cut so cancelled work is never routed.
+    pub fn shed_cancelled(&mut self, now: Instant) -> Vec<ShedInfo> {
+        let mut shed = Vec::new();
         self.pending.retain(|r| {
             if r.is_cancelled() {
-                shed_tokens += r.tokens.len();
+                shed.push(ShedInfo {
+                    id: r.id,
+                    tokens: r.tokens.len(),
+                    queued: now.saturating_duration_since(r.arrived),
+                    qos: r.qos.map_or("none", |q| q.name()),
+                });
                 false
             } else {
                 true
             }
         });
-        self.pending_tokens -= shed_tokens;
-        let shed = before - self.pending.len();
-        if shed > 0 {
+        self.pending_tokens -= shed.iter().map(|s| s.tokens).sum::<usize>();
+        if !shed.is_empty() {
             self.recompute_min_deadline();
         }
-        (shed, shed_tokens)
+        shed
     }
 
     /// Tile fill the dispatch planner projects for the current queue if it
@@ -633,11 +650,29 @@ mod tests {
         b.push(keep);
         b.push(dead2);
         assert_eq!(b.queued_tokens(), 15);
-        let (seqs, tokens) = b.shed_cancelled();
-        assert_eq!((seqs, tokens), (2, 12));
+        let shed = b.shed_cancelled(now);
+        assert_eq!(shed.len(), 2);
+        assert_eq!(shed.iter().map(|s| s.tokens).sum::<usize>(), 12);
+        assert!(shed.iter().all(|s| s.qos == "none"));
         assert_eq!(b.depth(), 1);
         assert_eq!(b.queued_tokens(), 3);
         assert_eq!(lens(&b.take_batch(now)), vec![3]);
-        assert_eq!(b.shed_cancelled(), (0, 0), "idempotent on a clean queue");
+        assert!(b.shed_cancelled(now).is_empty(), "idempotent on a clean queue");
+    }
+
+    #[test]
+    fn shed_info_carries_id_and_queued_time() {
+        let t0 = Instant::now();
+        let mut b = ContinuousBatcher::new(policy(8, 1_000_000, 1000));
+        let dead = Request { id: 42, qos: Some(QosClass::Interactive), ..req(5, t0) };
+        dead.cancelled.store(true, Ordering::Release);
+        b.push(dead);
+        let now = t0 + Duration::from_millis(30);
+        let shed = b.shed_cancelled(now);
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id, 42);
+        assert_eq!(shed[0].tokens, 5);
+        assert_eq!(shed[0].qos, "interactive");
+        assert!(shed[0].queued >= Duration::from_millis(30));
     }
 }

@@ -31,10 +31,11 @@ use crate::alloc::Allocation;
 use crate::coordinator::engine::{ReplanStaging, ServingEngine};
 use crate::coordinator::metrics::ReplicaReport;
 use crate::moe::{ModelConfig, MoeLm};
+use crate::obs::{Deadline, EventKind, Outcome, SpanCollector, TraceClock, TraceConfig, Track};
 use crate::runtime::RuntimeScheme;
 use crate::ser::MxtFile;
 use crate::serve::decode::{DecodePolicy, DecodeScheduler};
-use crate::serve::queue::{Request, Response};
+use crate::serve::queue::{Request, Response, ShedInfo};
 use crate::serve::replan::Replanner;
 use crate::serve::request::AdmissionState;
 
@@ -49,14 +50,28 @@ impl RoutedBatch {
         self.requests.iter().map(|r| r.tokens.len()).sum()
     }
 
-    /// Drop cancelled requests before execution; returns how many were
-    /// shed. Cancellation propagates here through [`WorkQueues`]: a batch
-    /// that was routed (or stolen) after its requests were cancelled sheds
-    /// the dead entries at the pop instead of executing them.
-    pub fn shed_cancelled(&mut self) -> usize {
-        let before = self.requests.len();
-        self.requests.retain(|r| !r.is_cancelled());
-        before - self.requests.len()
+    /// Drop cancelled requests before execution; returns what was shed
+    /// (ids included, so the shed is per-request attributable in the
+    /// trace). Cancellation propagates here through [`WorkQueues`]: a
+    /// batch that was routed (or stolen) after its requests were cancelled
+    /// sheds the dead entries at the pop instead of executing them.
+    pub fn shed_cancelled(&mut self) -> Vec<ShedInfo> {
+        let now = Instant::now();
+        let mut shed = Vec::new();
+        self.requests.retain(|r| {
+            if r.is_cancelled() {
+                shed.push(ShedInfo {
+                    id: r.id,
+                    tokens: r.tokens.len(),
+                    queued: now.saturating_duration_since(r.arrived),
+                    qos: r.qos.map_or("none", |q| q.name()),
+                });
+                false
+            } else {
+                true
+            }
+        });
+        shed
     }
 }
 
@@ -364,6 +379,11 @@ pub struct ReplicaSpec {
     /// Decode-loop sizing (step row budget, active-sequence cap, KV
     /// reservation budget).
     pub decode: DecodePolicy,
+    /// Cluster-shared trace clock: all tracks stamp microseconds from the
+    /// same origin, so replica spans line up with admission/router spans.
+    pub clock: TraceClock,
+    /// Lifecycle-span tracing switch + ring capacity for this replica.
+    pub trace: TraceConfig,
 }
 
 /// Replica thread body: build the engine (own PJRT client, own plan), then
@@ -404,6 +424,13 @@ pub fn replica_main(
     if let Some(t) = spec.dispatch_threads {
         engine.set_dispatch_threads(t);
     }
+    // this replica's span ring: owned by its metrics, stamped on the
+    // cluster-shared clock, drained once into the report at thread exit
+    engine.metrics_mut().set_tracer(SpanCollector::new(
+        spec.clock.clone(),
+        Track::Replica(spec.id),
+        spec.trace,
+    ));
     if let Some(online) = &spec.online {
         engine.set_baseline(online.baseline.clone());
         if let Some(a) = online.ewma_alpha {
@@ -503,7 +530,7 @@ pub fn replica_main(
             eprintln!("replica {}: shutdown replan join failed: {e:#}", spec.id);
         }
     }
-    collect_report(&spec, &engine, batches_done, stolen)
+    collect_report(&spec, &mut engine, batches_done, stolen)
 }
 
 /// Handle one popped batch: shed cancellations, route generations into the
@@ -521,9 +548,25 @@ fn handle_batch(
     // here instead of executing, whether the batch was routed to this
     // replica or stolen from a peer
     let shed = batch.shed_cancelled();
-    if shed > 0 {
-        admission.note_cancelled(shed);
-        engine.metrics_mut().shed_cancelled += shed;
+    if !shed.is_empty() {
+        admission.note_cancelled(shed.len());
+        let m = engine.metrics_mut();
+        m.shed_cancelled += shed.len();
+        for s in &shed {
+            m.tracer().instant(
+                s.id,
+                EventKind::Terminal {
+                    outcome: Outcome::Cancelled,
+                    qos: s.qos,
+                    queue_us: s.queued.as_micros() as u64,
+                    compute_us: 0,
+                    stream_us: 0,
+                    generation: 0,
+                    deadline: Deadline::None,
+                    tokens: s.tokens,
+                },
+            );
+        }
     }
     if batch.requests.is_empty() {
         queues.done(replica);
@@ -580,9 +623,36 @@ fn run_decode_step(
             outcome.finished.len(),
             elapsed.as_secs_f64(),
         );
+        let occ = decoder.occupancy();
+        let tracer = engine.metrics_mut().tracer();
+        if tracer.enabled() {
+            let dur_us = elapsed.as_micros() as u64;
+            tracer.span(
+                tracer.now_us().saturating_sub(dur_us),
+                dur_us,
+                0,
+                EventKind::DecodeStep {
+                    rows: outcome.rows,
+                    prefill_rows: outcome.prefill_rows,
+                    decode_rows: outcome.decode_rows,
+                    tokens: outcome.tokens_emitted,
+                    kv_reserved: occ.reserved_tokens,
+                    kv_budget: occ.budget_tokens,
+                },
+            );
+        }
     }
     admission.note_cancelled(outcome.cancelled.len());
     admission.note_failed(outcome.failed.len());
+    {
+        let tracer = engine.metrics_mut().tracer();
+        for r in &outcome.cancelled {
+            trace_terminal(tracer, r, Outcome::Cancelled);
+        }
+        for r in &outcome.failed {
+            trace_terminal(tracer, r, Outcome::Failed);
+        }
+    }
     let generation = engine.generation();
     let mut late_cancels = 0usize;
     for fin in outcome.finished {
@@ -590,13 +660,37 @@ fn run_decode_step(
             // cancelled in the same step it finished: the work ran, but a
             // cancelled ticket never yields a response
             late_cancels += 1;
+            trace_terminal(engine.metrics_mut().tracer(), &fin.request, Outcome::Cancelled);
             continue;
         }
-        let latency = fin.request.arrived.elapsed();
+        let now = Instant::now();
+        let latency = now.saturating_duration_since(fin.request.arrived);
+        let deadline = deadline_verdict(fin.request.deadline, now);
         let metrics = engine.metrics_mut();
         metrics.record_request(latency.as_secs_f64(), fin.request.tokens.len() + fin.generated);
         metrics.record_queue_wait(fin.queue_wait.as_secs_f64(), fin.request.priority);
         metrics.note_qos(fin.request.qos);
+        metrics.note_slo(
+            fin.request.qos,
+            deadline,
+            fin.queue_wait.as_secs_f64(),
+            fin.compute.as_secs_f64(),
+            fin.stream.as_secs_f64(),
+            generation,
+        );
+        metrics.tracer().instant(
+            fin.request.id,
+            EventKind::Terminal {
+                outcome: Outcome::Done,
+                qos: fin.request.qos.map_or("none", |q| q.name()),
+                queue_us: fin.queue_wait.as_micros() as u64,
+                compute_us: fin.compute.as_micros() as u64,
+                stream_us: fin.stream.as_micros() as u64,
+                generation,
+                deadline,
+                tokens: fin.request.tokens.len() + fin.generated,
+            },
+        );
         let _ = fin.request.reply.send(Response {
             next_token: fin.last_token.unwrap_or(0),
             mean_nll: fin.mean_prompt_nll,
@@ -607,6 +701,36 @@ fn run_decode_step(
     }
     admission.note_cancelled(late_cancels);
     engine.metrics_mut().note_kv_occupancy(&decoder.occupancy());
+}
+
+/// Deadline verdict for a request finishing at `now`. `Deadline::None`
+/// when the request carried no deadline.
+fn deadline_verdict(deadline: Option<Instant>, now: Instant) -> Deadline {
+    match deadline {
+        None => Deadline::None,
+        Some(d) if now <= d => Deadline::Hit,
+        Some(_) => Deadline::Miss,
+    }
+}
+
+/// Record the terminal span for a request that produced no response
+/// (cancelled or failed): zero compute/stream time, queue time = its whole
+/// lifetime so far. Every exit path records exactly one terminal per
+/// admitted request — the invariant the trace accounting tests restate.
+fn trace_terminal(tracer: &mut SpanCollector, req: &Request, outcome: Outcome) {
+    tracer.instant(
+        req.id,
+        EventKind::Terminal {
+            outcome,
+            qos: req.qos.map_or("none", |q| q.name()),
+            queue_us: req.arrived.elapsed().as_micros() as u64,
+            compute_us: 0,
+            stream_us: 0,
+            generation: 0,
+            deadline: Deadline::None,
+            tokens: req.tokens.len(),
+        },
+    );
 }
 
 /// Publish this replica's live state to the status board. The scheme table
@@ -677,6 +801,7 @@ pub fn process_batch(engine: &mut ServingEngine, batch: RoutedBatch) -> (usize, 
             for (req, logits) in requests.iter().zip(logits_batch) {
                 if req.is_cancelled() {
                     suppressed += 1;
+                    trace_terminal(engine.metrics_mut().tracer(), req, Outcome::Cancelled);
                     continue;
                 }
                 let t = req.tokens.len();
@@ -696,12 +821,38 @@ pub fn process_batch(engine: &mut ServingEngine, batch: RoutedBatch) -> (usize, 
                     let z: f64 = row.iter().map(|&v| ((v as f64) - m).exp()).sum();
                     nll -= (logits.at(pos, req.tokens[pos + 1] as usize) as f64 - m) - z.ln();
                 }
-                let latency = req.arrived.elapsed();
+                let now = Instant::now();
+                let latency = now.saturating_duration_since(req.arrived);
                 let queue_wait = exec_at.saturating_duration_since(req.arrived);
+                // scoring replies whole-batch: compute spans execution
+                // start → reply, and nothing streams before the reply
+                let compute = now.saturating_duration_since(exec_at);
+                let deadline = deadline_verdict(req.deadline, now);
                 let metrics = engine.metrics_mut();
                 metrics.record_request(latency.as_secs_f64(), req.tokens.len());
                 metrics.record_queue_wait(queue_wait.as_secs_f64(), req.priority);
                 metrics.note_qos(req.qos);
+                metrics.note_slo(
+                    req.qos,
+                    deadline,
+                    queue_wait.as_secs_f64(),
+                    compute.as_secs_f64(),
+                    0.0,
+                    generation,
+                );
+                metrics.tracer().instant(
+                    req.id,
+                    EventKind::Terminal {
+                        outcome: Outcome::Done,
+                        qos: req.qos.map_or("none", |q| q.name()),
+                        queue_us: queue_wait.as_micros() as u64,
+                        compute_us: compute.as_micros() as u64,
+                        stream_us: 0,
+                        generation,
+                        deadline,
+                        tokens: req.tokens.len(),
+                    },
+                );
                 let _ = req.reply.send(Response {
                     next_token: best as u32,
                     mean_nll: nll / (t - 1).max(1) as f64,
@@ -713,6 +864,10 @@ pub fn process_batch(engine: &mut ServingEngine, batch: RoutedBatch) -> (usize, 
         }
         Err(e) => {
             eprintln!("batch failed ({} request(s) dropped): {e:#}", requests.len());
+            let tracer = engine.metrics_mut().tracer();
+            for req in &requests {
+                trace_terminal(tracer, req, Outcome::Failed);
+            }
             return (0, requests.len());
         }
     }
@@ -720,12 +875,16 @@ pub fn process_batch(engine: &mut ServingEngine, batch: RoutedBatch) -> (usize, 
 }
 
 /// Final per-replica statistics, assembled from the engine at thread exit.
+/// Distributions ship as [`Summary`](crate::util::stats::Summary) (merged
+/// cluster-side without re-concatenating samples); the replica's span ring
+/// is drained here, exactly once, into the report.
 fn collect_report(
     spec: &ReplicaSpec,
-    engine: &ServingEngine,
+    engine: &mut ServingEngine,
     executed_batches: usize,
     stolen_batches: usize,
 ) -> ReplicaReport {
+    let (trace, trace_dropped) = engine.metrics_mut().take_trace();
     let m = engine.metrics();
     ReplicaReport {
         id: spec.id,
@@ -748,21 +907,25 @@ fn collect_report(
         replan_history: m.replan_history().to_vec(),
         shed_cancelled: m.shed_cancelled,
         qos_served: m.qos_served,
-        queue_waits_by_priority: m.queue_waits_by_priority().clone(),
+        slo: m.slo,
+        served_by_generation: m.served_by_generation(),
+        queue_wait_by_priority: m.queue_wait_by_priority_summary(),
         generation: engine.generation(),
         scheme_counts: engine.scheme_counts(),
-        latencies: m.latencies().to_vec(),
-        queue_waits: m.queue_waits().to_vec(),
-        wave_latencies: m.wave_latency_samples().to_vec(),
+        latency: m.latency_summary(),
+        queue_wait: m.queue_wait_summary(),
+        wave_latency: m.wave_latency_summary(),
         decode_steps: m.decode_steps,
         prefill_rows: m.prefill_rows,
         decode_rows: m.decode_rows,
         generated_tokens: m.generated_tokens,
         generations: m.generations,
-        step_latencies: m.step_latency_samples().to_vec(),
+        step_latency: m.step_latency_summary(),
         kv_peak_tokens: m.kv_peak_tokens,
         kv_budget_tokens: m.kv_budget_tokens,
         elapsed_s: m.elapsed(),
+        trace,
+        trace_dropped,
     }
 }
 
@@ -787,9 +950,12 @@ mod tests {
         dead.cancelled.store(true, Ordering::Release);
         let mut b = RoutedBatch { requests: vec![dead, keep] };
         assert_eq!(b.tokens(), 8);
-        assert_eq!(b.shed_cancelled(), 1);
+        let shed = b.shed_cancelled();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].tokens, 5, "shed info describes the dead request");
+        assert_eq!(shed[0].qos, "none");
         assert_eq!(b.tokens(), 3, "live request survives the shed");
-        assert_eq!(b.shed_cancelled(), 0, "idempotent");
+        assert!(b.shed_cancelled().is_empty(), "idempotent");
     }
 
     #[test]

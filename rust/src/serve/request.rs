@@ -30,6 +30,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::obs::{EventKind, SpanCollector, Track, TraceClock, TraceConfig, TraceEvent};
+
 use super::queue::Response;
 
 /// Request priority: orders batch cutting in the continuous batcher.
@@ -224,10 +226,24 @@ pub enum RejectReason {
     ClassQuota,
 }
 
+impl RejectReason {
+    /// Stable name for trace events and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue-full",
+            RejectReason::DeadlineUnmeetable => "deadline-unmeetable",
+            RejectReason::ClassQuota => "class-quota",
+        }
+    }
+}
+
 /// Outcome of a non-blocking submission.
 pub enum Admission {
     Admitted(Ticket),
     Rejected {
+        /// Admission-assigned request id — rejections get ids too, so
+        /// load-shedding is attributable per request in the trace.
+        id: u64,
         reason: RejectReason,
         /// Estimate of when retrying is worthwhile (queue-drain
         /// projection; a floor of 1 ms even when the rate is unknown).
@@ -460,6 +476,9 @@ struct AdmissionInner {
     service_rate_tps: f64,
     report: AdmissionReport,
     next_id: u64,
+    /// Admission-track span collector — admit/reject events ride the
+    /// admission mutex the front door already takes (no new lock).
+    tracer: SpanCollector,
 }
 
 /// Shared bounded-admission state: queue-depth accounting on the submit
@@ -499,6 +518,7 @@ impl AdmissionState {
                 service_rate_tps: 0.0,
                 report: AdmissionReport::default(),
                 next_id: 1,
+                tracer: SpanCollector::disabled(Track::Admission),
             }),
             freed: Condvar::new(),
             replicas: replicas.max(1),
@@ -525,8 +545,23 @@ impl AdmissionState {
         ttl: Option<Duration>,
         privileged: bool,
     ) -> Result<u64, (RejectReason, Duration)> {
+        self.try_admit_for(cfg, tokens, ttl, privileged, "standard", "normal")
+            .map_err(|(reason, retry, _)| (reason, retry))
+    }
+
+    /// [`try_admit`](Self::try_admit) with the request's QoS/priority names
+    /// for the trace — rejections carry the id they were assigned.
+    pub fn try_admit_for(
+        &self,
+        cfg: &AdmissionConfig,
+        tokens: usize,
+        ttl: Option<Duration>,
+        privileged: bool,
+        qos: &'static str,
+        priority: &'static str,
+    ) -> Result<u64, (RejectReason, Duration, u64)> {
         let mut g = self.inner.lock().unwrap();
-        self.admit_locked(&mut g, cfg, tokens, ttl, privileged)
+        self.admit_locked(&mut g, cfg, tokens, ttl, privileged, qos, priority)
     }
 
     /// Blocking admission: wait up to `cfg.submit_budget` for queue room.
@@ -540,13 +575,28 @@ impl AdmissionState {
         ttl: Option<Duration>,
         privileged: bool,
     ) -> Result<u64, (RejectReason, Duration)> {
+        self.admit_blocking_for(cfg, tokens, ttl, privileged, "standard", "normal")
+            .map_err(|(reason, retry, _)| (reason, retry))
+    }
+
+    /// [`admit_blocking`](Self::admit_blocking) with the request's
+    /// QoS/priority names for the trace.
+    pub fn admit_blocking_for(
+        &self,
+        cfg: &AdmissionConfig,
+        tokens: usize,
+        ttl: Option<Duration>,
+        privileged: bool,
+        qos: &'static str,
+        priority: &'static str,
+    ) -> Result<u64, (RejectReason, Duration, u64)> {
         let deadline = Instant::now() + cfg.submit_budget;
         let mut g = self.inner.lock().unwrap();
         loop {
-            match self.admit_locked(&mut g, cfg, tokens, ttl, privileged) {
+            match self.admit_locked(&mut g, cfg, tokens, ttl, privileged, qos, priority) {
                 Ok(id) => return Ok(id),
-                Err((RejectReason::DeadlineUnmeetable, r)) => {
-                    return Err((RejectReason::DeadlineUnmeetable, r))
+                Err((RejectReason::DeadlineUnmeetable, r, id)) => {
+                    return Err((RejectReason::DeadlineUnmeetable, r, id))
                 }
                 Err(full) => {
                     let left = deadline.saturating_duration_since(Instant::now());
@@ -560,6 +610,7 @@ impl AdmissionState {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn admit_locked(
         &self,
         g: &mut AdmissionInner,
@@ -567,7 +618,9 @@ impl AdmissionState {
         tokens: usize,
         ttl: Option<Duration>,
         privileged: bool,
-    ) -> Result<u64, (RejectReason, Duration)> {
+        qos: &'static str,
+        priority: &'static str,
+    ) -> Result<u64, (RejectReason, Duration, u64)> {
         let drain = self.drain_rate(g);
         // crude drain projection: half the backlog at the cluster rate
         let backlog_retry = if drain > 0.0 {
@@ -575,16 +628,24 @@ impl AdmissionState {
         } else {
             RETRY_DEFAULT
         };
+        let reject = |g: &mut AdmissionInner, reason: RejectReason, retry: Duration| {
+            // rejections are assigned ids too, so load-shedding is
+            // per-request attributable in the trace (instant, no span)
+            let id = g.next_id;
+            g.next_id += 1;
+            g.tracer.instant(id, EventKind::Rejected { reason: reason.name() });
+            (reason, retry, id)
+        };
         if g.queued_seqs + 1 > cfg.max_queued_seqs || g.queued_tokens + tokens > cfg.max_queued_tokens
         {
             g.report.rejected_queue_full += 1;
-            return Err((RejectReason::QueueFull, backlog_retry));
+            return Err(reject(g, RejectReason::QueueFull, backlog_retry));
         }
         if !privileged && g.queued_seqs + 1 > cfg.unprivileged_seq_bound() {
             // inside the full bound but past the unreserved share: the
             // remaining slots are held for High/Interactive arrivals
             g.report.rejected_quota += 1;
-            return Err((RejectReason::ClassQuota, backlog_retry));
+            return Err(reject(g, RejectReason::ClassQuota, backlog_retry));
         }
         if cfg.shed_on_projected_miss {
             if let (Some(ttl), true) = (ttl, drain > 0.0) {
@@ -592,7 +653,8 @@ impl AdmissionState {
                     Duration::from_secs_f64((g.queued_tokens + tokens) as f64 / drain);
                 if projected > ttl {
                     g.report.rejected_deadline += 1;
-                    return Err((
+                    return Err(reject(
+                        g,
                         RejectReason::DeadlineUnmeetable,
                         clamp_retry(projected - ttl),
                     ));
@@ -604,17 +666,45 @@ impl AdmissionState {
         g.report.admitted += 1;
         let id = g.next_id;
         g.next_id += 1;
+        g.tracer.instant(id, EventKind::Admitted { qos, priority, tokens });
         Ok(id)
     }
 
-    /// Roll back an admission whose channel send failed (router gone).
-    pub fn abort_admit(&self, tokens: usize) {
+    /// Roll back an admission whose channel send failed (router gone). The
+    /// trace keeps its admit event and closes it with a failed terminal so
+    /// begin/end pairs stay matched.
+    pub fn abort_admit(&self, id: u64, tokens: usize) {
         let mut g = self.inner.lock().unwrap();
         g.queued_seqs = g.queued_seqs.saturating_sub(1);
         g.queued_tokens = g.queued_tokens.saturating_sub(tokens);
         g.report.admitted = g.report.admitted.saturating_sub(1);
+        g.tracer.instant(
+            id,
+            EventKind::Terminal {
+                outcome: crate::obs::Outcome::Failed,
+                qos: "standard",
+                queue_us: 0,
+                compute_us: 0,
+                stream_us: 0,
+                generation: 0,
+                deadline: crate::obs::Deadline::None,
+                tokens,
+            },
+        );
         drop(g);
         self.freed.notify_all();
+    }
+
+    /// Swap in a live admission-track collector (called once at cluster
+    /// boot, before any submission).
+    pub fn enable_trace(&self, clock: TraceClock, cfg: TraceConfig) {
+        let mut g = self.inner.lock().unwrap();
+        g.tracer = SpanCollector::new(clock, Track::Admission, cfg);
+    }
+
+    /// Drain the admission-track events (cluster shutdown).
+    pub fn take_trace(&self) -> (Vec<TraceEvent>, usize) {
+        self.inner.lock().unwrap().tracer.drain()
     }
 
     /// `seqs` requests totalling `tokens` left the admission queue in a
@@ -977,10 +1067,39 @@ mod tests {
     fn abort_rolls_back_an_admission() {
         let a = AdmissionState::new(1);
         let c = cfg(4, 100);
-        a.try_admit(&c, 10, None, false).unwrap();
-        a.abort_admit(10);
+        let id = a.try_admit(&c, 10, None, false).unwrap();
+        a.abort_admit(id, 10);
         assert_eq!(a.queued(), (0, 0));
         assert_eq!(a.report().admitted, 0);
+    }
+
+    #[test]
+    fn trace_records_admits_rejects_and_abort_terminals() {
+        let a = AdmissionState::new(1);
+        a.enable_trace(TraceClock::new(), TraceConfig::on());
+        let c = cfg(1, 1_000_000);
+        let id = a.try_admit_for(&c, 10, None, false, "interactive", "high").unwrap();
+        let (reason, _, rid) =
+            a.try_admit_for(&c, 10, None, false, "standard", "normal").unwrap_err();
+        assert_eq!(reason, RejectReason::QueueFull);
+        assert!(rid > id, "rejections are assigned ids too");
+        a.abort_admit(id, 10);
+        let (events, dropped) = a.take_trace();
+        assert_eq!(dropped, 0);
+        assert_eq!(events.len(), 3, "admit + reject + abort terminal");
+        assert!(matches!(
+            events[0].kind,
+            EventKind::Admitted { qos: "interactive", priority: "high", tokens: 10 }
+        ));
+        assert_eq!(events[0].req, id);
+        assert!(matches!(events[1].kind, EventKind::Rejected { reason: "queue-full" }));
+        assert_eq!(events[1].req, rid);
+        assert!(events[2].kind.is_terminal());
+        assert_eq!(events[2].req, id);
+        // untraced by default: the disabled collector records nothing
+        let b = AdmissionState::new(1);
+        b.try_admit(&c, 10, None, false).unwrap();
+        assert!(b.take_trace().0.is_empty());
     }
 
     #[test]

@@ -37,6 +37,57 @@ impl Summary {
             p99: percentile(&sorted, 0.99),
         }
     }
+
+    /// An empty summary (identity element of [`Summary::merge`]).
+    pub fn empty() -> Summary {
+        Summary {
+            n: 0,
+            mean: 0.0,
+            std: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            p50: 0.0,
+            p90: 0.0,
+            p99: 0.0,
+        }
+    }
+
+    /// Combine per-replica summaries into a cluster summary without
+    /// concatenating raw samples. `n`, `mean`, `std` (via pairwise moment
+    /// combination), `min`, `max` are exact; percentiles are the
+    /// sample-count-weighted average of the parts' percentiles — an
+    /// approximation that is exact when the parts are identically
+    /// distributed, documented in DESIGN.md §Observability.
+    pub fn merge(parts: &[Summary]) -> Summary {
+        let parts: Vec<&Summary> = parts.iter().filter(|s| s.n > 0).collect();
+        if parts.is_empty() {
+            return Summary::empty();
+        }
+        let n: usize = parts.iter().map(|s| s.n).sum();
+        let mean = parts.iter().map(|s| s.mean * s.n as f64).sum::<f64>() / n as f64;
+        // combined M2 = Σ[(nᵢ−1)·stdᵢ² + nᵢ·(meanᵢ−mean)²]
+        let m2: f64 = parts
+            .iter()
+            .map(|s| {
+                (s.n.saturating_sub(1)) as f64 * s.std * s.std
+                    + s.n as f64 * (s.mean - mean) * (s.mean - mean)
+            })
+            .sum();
+        let std = if n > 1 { (m2 / (n - 1) as f64).sqrt() } else { 0.0 };
+        let wavg = |f: fn(&Summary) -> f64| {
+            parts.iter().map(|s| f(s) * s.n as f64).sum::<f64>() / n as f64
+        };
+        Summary {
+            n,
+            mean,
+            std,
+            min: parts.iter().map(|s| s.min).fold(f64::INFINITY, f64::min),
+            max: parts.iter().map(|s| s.max).fold(f64::NEG_INFINITY, f64::max),
+            p50: wavg(|s| s.p50),
+            p90: wavg(|s| s.p90),
+            p99: wavg(|s| s.p99),
+        }
+    }
 }
 
 /// Linear-interpolated percentile over a pre-sorted slice, `q` in `[0,1]`.
@@ -93,5 +144,39 @@ mod tests {
         let s = Summary::of(&[7.0]);
         assert_eq!(s.std, 0.0);
         assert_eq!(s.p99, 7.0);
+    }
+
+    #[test]
+    fn merge_matches_concatenation_on_moments() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [10.0, 20.0, 30.0];
+        let merged = Summary::merge(&[Summary::of(&a), Summary::of(&b)]);
+        let mut all = a.to_vec();
+        all.extend_from_slice(&b);
+        let exact = Summary::of(&all);
+        assert_eq!(merged.n, exact.n);
+        assert!((merged.mean - exact.mean).abs() < 1e-12);
+        assert!((merged.std - exact.std).abs() < 1e-12);
+        assert_eq!(merged.min, exact.min);
+        assert_eq!(merged.max, exact.max);
+    }
+
+    #[test]
+    fn merge_percentiles_exact_for_identical_parts() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let s = Summary::of(&xs);
+        let merged = Summary::merge(&[s.clone(), s.clone(), s.clone()]);
+        assert!((merged.p50 - s.p50).abs() < 1e-12);
+        assert!((merged.p99 - s.p99).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_skips_empty_parts() {
+        let s = Summary::of(&[2.0, 4.0]);
+        let merged = Summary::merge(&[Summary::empty(), s.clone()]);
+        assert_eq!(merged.n, 2);
+        assert!((merged.mean - s.mean).abs() < 1e-12);
+        assert_eq!(Summary::merge(&[]).n, 0);
+        assert_eq!(Summary::merge(&[Summary::empty()]).n, 0);
     }
 }

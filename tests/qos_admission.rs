@@ -151,9 +151,10 @@ fn admission_rejects_under_synthetic_overload() {
     for _ in 0..16 {
         match cluster.try_submit(ServeRequest::new(seq(&cfg, &mut rng, 16))).unwrap() {
             Admission::Admitted(t) => tickets.push(t),
-            Admission::Rejected { reason, retry_after } => {
+            Admission::Rejected { id, reason, retry_after } => {
                 assert_eq!(reason, RejectReason::QueueFull);
                 assert!(retry_after > Duration::ZERO, "retry_after must be actionable");
+                assert!(id > 0, "rejections carry an attributable request id");
                 rejected += 1;
             }
         }

@@ -1,0 +1,177 @@
+//! Integration: lifecycle tracing (DESIGN.md §Observability) must be a
+//! pure observer. The merged trace restates the admission ledger — every
+//! admitted request gets exactly one terminal span, and the terminal
+//! outcomes sum back to `admitted == responses + cancelled + failed` —
+//! the Chrome export passes the CI structural check, and flipping tracing
+//! on changes no served bit.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use mxmoe::coordinator::{Cluster, ClusterConfig, ClusterReport, ServeConfig};
+use mxmoe::harness::{mixed_runtime_plan, require_artifacts, save_model_mxt};
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::obs::{validate_chrome_trace, Outcome, TraceConfig};
+use mxmoe::serve::{QosClass, ServeRequest};
+use mxmoe::util::Rng;
+
+/// Serving-shape model (hidden=128, inter=64 — what the AOT export ships).
+fn serving_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "trace-test".into(),
+        vocab: 64,
+        hidden: 128,
+        layers: 2,
+        heads: 4,
+        n_experts: 4,
+        n_shared: 1,
+        topk: 2,
+        inter: 64,
+        dense_first: false,
+        seq_len: 16,
+    }
+}
+
+/// Fixed typed request stream: varying lengths and QoS classes, same seed
+/// every run, so traced and untraced clusters serve identical work.
+fn request_stream(cfg: &ModelConfig) -> Vec<ServeRequest> {
+    let mut rng = Rng::new(0x7ACE_AC_C7);
+    let lens = [16usize, 5, 16, 11, 2, 16, 9, 16, 7, 13];
+    let qos = [QosClass::Interactive, QosClass::Standard, QosClass::Batch];
+    lens.iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let seq: Vec<u32> = (0..n).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+            let mut req = ServeRequest::new(seq);
+            if i % 2 == 0 {
+                req = req.qos(qos[i % qos.len()]).deadline(Duration::from_secs(60));
+            }
+            req
+        })
+        .collect()
+}
+
+/// Serve the stream with tracing on or off; returns per-request
+/// `(next_token, mean_nll bits)` plus the cluster report.
+fn serve_stream(
+    cfg: &ModelConfig,
+    weights: &PathBuf,
+    artifacts: &PathBuf,
+    trace: TraceConfig,
+) -> (Vec<(u32, u64)>, ClusterReport) {
+    // max_batch_seqs = 1 keeps batch composition (and tiling) identical
+    // across runs, which is what makes bit-identity well-defined
+    let cluster = Cluster::start(
+        cfg.clone(),
+        weights.clone(),
+        artifacts.clone(),
+        mixed_runtime_plan(cfg),
+        ClusterConfig {
+            replicas: 2,
+            serve: ServeConfig {
+                max_batch_seqs: 1,
+                max_wait: Duration::from_millis(1),
+                trace,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let tickets: Vec<_> = request_stream(cfg)
+        .into_iter()
+        .map(|req| cluster.submit_request(req).unwrap())
+        .collect();
+    let responses: Vec<(u32, u64)> = tickets
+        .iter()
+        .map(|t| {
+            let r = t.wait_timeout(Duration::from_secs(300)).expect("response");
+            (r.next_token, r.mean_nll.to_bits())
+        })
+        .collect();
+    (responses, cluster.shutdown())
+}
+
+#[test]
+fn trace_restates_admission_ledger_and_validates() {
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let cfg = serving_cfg();
+    let weights = std::env::temp_dir().join("mxmoe_trace_acct_test.mxt");
+    let lm = MoeLm::random(&cfg, &mut Rng::new(0x7ACE_01));
+    save_model_mxt(&lm, &weights).unwrap();
+
+    let (responses, report) = serve_stream(&cfg, &weights, &artifacts, TraceConfig::on());
+    assert!(!report.trace.is_empty(), "tracing on must record events");
+    assert_eq!(report.trace.dropped, 0, "ring capacity must hold this workload");
+
+    // exactly one terminal span per admitted request
+    let mut admitted = report.trace.admitted_ids();
+    admitted.sort_unstable();
+    let terminals = report.trace.terminals();
+    let mut terminal_ids: Vec<u64> = terminals.iter().map(|(id, _)| *id).collect();
+    terminal_ids.sort_unstable();
+    admitted.dedup();
+    assert_eq!(
+        admitted.len(),
+        report.trace.admitted_ids().len(),
+        "admitted ids must be unique"
+    );
+    assert_eq!(terminal_ids, admitted, "exactly one terminal span per admitted request");
+
+    // the trace restates the admission ledger: admitted == responses +
+    // cancelled + failed, outcome by outcome
+    let adm = &report.admission;
+    assert_eq!(admitted.len(), adm.admitted, "trace admitted == ledger admitted");
+    let done = terminals.iter().filter(|(_, o)| matches!(o, Outcome::Done)).count();
+    let cancelled = terminals
+        .iter()
+        .filter(|(_, o)| matches!(o, Outcome::Cancelled | Outcome::Shed))
+        .count();
+    let failed = terminals.iter().filter(|(_, o)| matches!(o, Outcome::Failed)).count();
+    assert_eq!(done, responses.len(), "one Done terminal per response");
+    assert_eq!(cancelled, adm.cancelled, "Cancelled/Shed terminals == ledger cancelled");
+    assert_eq!(failed, adm.failed, "Failed terminals == ledger failed");
+    assert_eq!(done + cancelled + failed, adm.admitted, "terminals exhaust admissions");
+
+    // SLO accounting rides the same terminals: served counts must agree
+    let slo_served: usize = report.slo_by_class().iter().map(|s| s.served).sum();
+    assert_eq!(slo_served, responses.len(), "every response lands in an SLO class");
+    let by_gen: usize = report.served_by_generation().iter().map(|(_, n)| *n).sum();
+    assert_eq!(by_gen, responses.len(), "served-bits attribution covers every response");
+
+    // the Chrome export passes the same structural check CI runs
+    let out = std::env::temp_dir().join("mxmoe_trace_acct_test.json");
+    report.trace.write_chrome_trace(&out).unwrap();
+    let check = validate_chrome_trace(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    assert_eq!(check.begins, admitted.len(), "one async begin per admitted request");
+    assert_eq!(check.begins, check.ends, "every async begin has a matching end");
+    assert!(check.events >= report.trace.len(), "export covers every recorded event");
+
+    let _ = std::fs::remove_file(&out);
+    let _ = std::fs::remove_file(&weights);
+}
+
+#[test]
+fn tracing_is_bit_invisible_to_served_outputs() {
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let cfg = serving_cfg();
+    let weights = std::env::temp_dir().join("mxmoe_trace_bits_test.mxt");
+    let lm = MoeLm::random(&cfg, &mut Rng::new(0x7ACE_02));
+    save_model_mxt(&lm, &weights).unwrap();
+
+    let (off, off_report) = serve_stream(&cfg, &weights, &artifacts, TraceConfig::default());
+    let (on, on_report) = serve_stream(&cfg, &weights, &artifacts, TraceConfig::on());
+
+    assert!(off_report.trace.is_empty(), "tracing off must record nothing");
+    assert!(!on_report.trace.is_empty(), "tracing on must record the run");
+    assert_eq!(on, off, "tracing changed a served bit");
+    assert_eq!(on_report.total_requests(), off_report.total_requests());
+
+    let _ = std::fs::remove_file(&weights);
+}
