@@ -49,6 +49,7 @@ bench-smoke:
 	$(CARGO) bench --bench bench_cluster -- --smoke
 	$(CARGO) bench --bench bench_admission -- --smoke
 	$(CARGO) bench --bench bench_decode -- --smoke
+	$(CARGO) bench --bench bench_kvcache -- --smoke
 	$(CARGO) bench --bench bench_trace_overhead -- --smoke
 
 # CI-grade structural check of the Chrome trace the smoke benches export

@@ -1,0 +1,201 @@
+//! §KV-Paging — paged-lazy admission vs contiguous worst-case reservation.
+//!
+//! Scenario: how many concurrent generations fit one KV token budget? Two
+//! admission disciplines over the same page pool:
+//!
+//! * **contiguous** — the pre-paging serving reality: admission reserves
+//!   every sequence's worst case (`prompt + max_new` tokens) up front, so
+//!   concurrency is `budget / worst_case` regardless of how many tokens
+//!   the sequences ever materialize.
+//! * **paged** — the page-table pool: admission claims only the prompt's
+//!   pages plus one decode-headroom page; later pages are claimed between
+//!   steps as sequences actually grow ([`KvCache::grow`]).
+//!
+//! A second, prefix-heavy workload (a 64-token system prompt shared by
+//! every request) additionally exercises refcounted prefix sharing: after
+//! the first sequence seals its prompt pages, every later admission
+//! resolves the shared blocks to the same physical pages and only pays
+//! for its distinct tail.
+//!
+//! Reported: admitted generations per budget for each discipline, the
+//! concurrency ratios, and admission-wave timing. Full mode asserts the
+//! acceptance bar: paged admits ≥8× the contiguous count on both
+//! workloads (the order-of-magnitude claim). `--smoke` shrinks the budget
+//! for CI and skips the bar. Results land in `BENCH_kvcache.json`.
+//!
+//! Pure allocator bench — no PJRT artifacts needed, so it never skips.
+
+use std::time::Instant;
+
+use anyhow::Result;
+use mxmoe::ser::Json;
+use mxmoe::serve::{KvCache, SeqKv};
+use mxmoe::tensor::Matrix;
+use mxmoe::util::Rng;
+
+const PAGE: usize = 16;
+const LAYERS: usize = 2;
+const HIDDEN: usize = 32;
+const VOCAB: u64 = 64;
+
+/// Uniform workload: 16-token prompts growing to 512 tokens worst case.
+const PROMPT_LEN: usize = 16;
+/// Prefix workload: 64 shared + 16 distinct prompt tokens, same worst case.
+const SHARED_LEN: usize = 64;
+const WORST_CASE: usize = 512;
+
+fn distinct_prompts(n: usize, len: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+    (0..n).map(|_| (0..len).map(|_| rng.below(VOCAB) as u32).collect()).collect()
+}
+
+fn prefixed_prompts(n: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+    let shared: Vec<u32> = (0..SHARED_LEN).map(|_| rng.below(VOCAB) as u32).collect();
+    (0..n)
+        .map(|_| {
+            let mut p = shared.clone();
+            p.extend((0..PROMPT_LEN).map(|_| rng.below(VOCAB) as u32));
+            p
+        })
+        .collect()
+}
+
+/// Materialize the prompt into the sequence's pages and seal them —
+/// deterministic rows keyed on the token value, so identical prompt
+/// blocks produce identical page contents (what prefix sharing keys on).
+fn fill_prompt(pool: &mut KvCache, kv: &mut SeqKv, tokens: &[u32]) {
+    let rows = tokens.len();
+    let mut k = Matrix::zeros(rows, HIDDEN);
+    let mut v = Matrix::zeros(rows, HIDDEN);
+    for (i, &t) in tokens.iter().enumerate() {
+        for d in 0..HIDDEN {
+            k.data[i * HIDDEN + d] = t as f32 + d as f32 * 1e-3;
+            v.data[i * HIDDEN + d] = t as f32 - d as f32 * 1e-3;
+        }
+    }
+    for l in 0..LAYERS {
+        kv.append(l, &k, &v);
+    }
+    kv.advance(rows);
+    pool.seal(kv);
+}
+
+struct Wave {
+    admitted: usize,
+    reserved_tokens: usize,
+    shared_tokens: usize,
+    elapsed_s: f64,
+}
+
+/// One admission wave: admit from `prompts` until the pool says no,
+/// holding every grant (concurrent generations), then release everything
+/// and check the pool accounts for every page.
+fn admission_wave(budget: usize, prompts: &[Vec<u32>], capacity: usize, fill: bool) -> Wave {
+    let mut pool = KvCache::with_config(LAYERS, HIDDEN, budget, PAGE, None);
+    let mut held: Vec<SeqKv> = Vec::new();
+    let t0 = Instant::now();
+    for p in prompts {
+        match pool.alloc_seq(p, capacity) {
+            Some(mut kv) => {
+                if fill {
+                    fill_prompt(&mut pool, &mut kv, p);
+                }
+                held.push(kv);
+            }
+            None => break,
+        }
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let peak = pool.occupancy();
+    let admitted = held.len();
+    for kv in held {
+        pool.free(kv);
+    }
+    let end = pool.occupancy();
+    assert_eq!(end.reserved_tokens, 0, "every page returned to the pool");
+    assert_eq!(end.seqs, 0);
+    assert_eq!(end.freed_seqs, admitted);
+    Wave {
+        admitted,
+        reserved_tokens: peak.reserved_tokens,
+        shared_tokens: peak.shared_tokens,
+        elapsed_s,
+    }
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!("# §KV-Paging — paged-lazy admission vs contiguous worst-case reservation");
+
+    let budget = if smoke { 512usize } else { 4096 };
+    let candidates = budget / PAGE + 8;
+    let mut rng = Rng::new(0x4B5A_6E01);
+
+    // ---- uniform workload: distinct prompts, no sharing possible ----
+    let uniform = distinct_prompts(candidates, PROMPT_LEN, &mut rng);
+    let contig = admission_wave(budget, &uniform, WORST_CASE, false);
+    let paged = admission_wave(budget, &uniform, PROMPT_LEN + 1, false);
+    let uniform_ratio = paged.admitted as f64 / contig.admitted.max(1) as f64;
+    println!(
+        "| uniform | contiguous {:>4} | paged {:>4} | {:>5.1}× | wave {:.1} µs |",
+        contig.admitted,
+        paged.admitted,
+        uniform_ratio,
+        paged.elapsed_s * 1e6
+    );
+
+    // ---- prefix-heavy workload: shared system prompt ----
+    let prefixed = prefixed_prompts(candidates, &mut rng);
+    let prompt_len = SHARED_LEN + PROMPT_LEN;
+    let contig_p = admission_wave(budget, &prefixed, WORST_CASE, false);
+    let unshared = admission_wave(budget, &prefixed, prompt_len + 1, false);
+    let shared = admission_wave(budget, &prefixed, prompt_len + 1, true);
+    let prefix_ratio = shared.admitted as f64 / contig_p.admitted.max(1) as f64;
+    assert!(shared.shared_tokens > 0, "the shared system prompt must share pages");
+    assert!(
+        shared.admitted > unshared.admitted,
+        "prefix sharing must admit more than private pages ({} vs {})",
+        shared.admitted,
+        unshared.admitted
+    );
+    println!(
+        "| prefix  | contiguous {:>4} | paged {:>4} | shared {:>4} | {:>5.1}× | {} tok shared |",
+        contig_p.admitted, unshared.admitted, shared.admitted, prefix_ratio, shared.shared_tokens
+    );
+    println!("concurrency per budget: uniform {uniform_ratio:.1}×, prefix {prefix_ratio:.1}×");
+
+    if !smoke {
+        assert!(
+            uniform_ratio >= 8.0,
+            "paged admission must fit ≥8× the contiguous worst case (got {uniform_ratio:.2}×)"
+        );
+        assert!(
+            prefix_ratio >= 8.0,
+            "prefix sharing must fit ≥8× the contiguous worst case (got {prefix_ratio:.2}×)"
+        );
+    }
+
+    let results = vec![
+        ("smoke", Json::Bool(smoke)),
+        ("budget_tokens", Json::num(budget as f64)),
+        ("page_tokens", Json::num(PAGE as f64)),
+        ("worst_case_tokens", Json::num(WORST_CASE as f64)),
+        ("uniform_contiguous", Json::num(contig.admitted as f64)),
+        ("uniform_paged", Json::num(paged.admitted as f64)),
+        ("uniform_ratio", Json::num(uniform_ratio)),
+        ("uniform_reserved_tokens", Json::num(paged.reserved_tokens as f64)),
+        ("prefix_contiguous", Json::num(contig_p.admitted as f64)),
+        ("prefix_paged_private", Json::num(unshared.admitted as f64)),
+        ("prefix_paged_shared", Json::num(shared.admitted as f64)),
+        ("prefix_ratio", Json::num(prefix_ratio)),
+        ("prefix_shared_tokens", Json::num(shared.shared_tokens as f64)),
+        ("paged_wave_s", Json::num(paged.elapsed_s)),
+        ("shared_wave_s", Json::num(shared.elapsed_s)),
+        ("contiguous_wave_s", Json::num(contig.elapsed_s)),
+    ];
+    std::fs::write(
+        "BENCH_kvcache.json",
+        Json::obj(results.iter().map(|(k, v)| (*k, v.clone())).collect()).pretty(),
+    )?;
+    println!("\nwrote BENCH_kvcache.json");
+    Ok(())
+}

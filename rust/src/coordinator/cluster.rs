@@ -27,7 +27,7 @@
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -327,6 +327,10 @@ pub struct Cluster {
     tx: mpsc::Sender<Request>,
     admission: Arc<AdmissionState>,
     admission_cfg: AdmissionConfig,
+    /// Shared status board (same Arc the router scores against) — the
+    /// front door reads each replica's published KV pool headroom to gate
+    /// Generate admissions when the page pool is the bottleneck.
+    status: Arc<Vec<Mutex<ReplicaStatus>>>,
     router: Option<thread::JoinHandle<RouterStats>>,
     workers: Vec<thread::JoinHandle<ReplicaReport>>,
 }
@@ -401,7 +405,7 @@ impl Cluster {
                 allocation: allocation.clone(),
                 online: online.clone(),
                 dispatch_threads: cluster_cfg.dispatch_threads,
-                decode: cluster_cfg.decode,
+                decode: cluster_cfg.decode.clone(),
                 clock: clock.clone(),
                 trace,
             };
@@ -421,6 +425,7 @@ impl Cluster {
         let topk = cfg.topk;
         let adm = admission.clone();
         let tracer = SpanCollector::new(clock, Track::Router, trace);
+        let status_board = status.clone();
         let router = thread::Builder::new()
             .name("mxmoe-router".into())
             .spawn(move || router_loop(rx, policy, &queues, &status, &adm, affinity, topk, tracer))
@@ -429,9 +434,44 @@ impl Cluster {
             tx,
             admission,
             admission_cfg: cluster_cfg.admission,
+            status: status_board,
             router: Some(router),
             workers,
         })
+    }
+
+    /// Front-door KV gate for Generate requests: when every replica's
+    /// published page pool lacks room for the prompt's pages plus one
+    /// decode-headroom page, the request would only queue behind a full
+    /// pool, so it is turned away with a `retry_after` derived from the
+    /// fastest replica's page-release rate. Disengaged until replicas
+    /// publish a nonzero KV budget (boot, or decode disabled), and an
+    /// idle pool always admits — the decode scheduler's sole-sequence
+    /// overflow path owns oversized prompts.
+    fn kv_backpressure(&self, prompt_tokens: usize) -> Option<Duration> {
+        let mut deficit = usize::MAX;
+        let mut release_tps = 0.0f64;
+        for s in self.status.iter() {
+            let st = s.lock().unwrap();
+            if st.kv_budget_tokens == 0 {
+                return None;
+            }
+            let page = st.kv_page_size.max(1);
+            let needed = prompt_tokens.div_ceil(page) * page + page;
+            if needed <= st.kv_free_tokens || st.kv_free_tokens >= st.kv_budget_tokens {
+                return None;
+            }
+            deficit = deficit.min(needed - st.kv_free_tokens);
+            release_tps = release_tps.max(st.kv_release_tps);
+        }
+        let retry = if release_tps > 0.0 {
+            Duration::from_secs_f64(deficit as f64 / release_tps)
+        } else {
+            // release rate not warmed up yet: a short default, clamped by
+            // the admission layer either way
+            Duration::from_millis(50)
+        };
+        Some(retry)
     }
 
     /// Reject malformed requests before they touch admission accounting.
@@ -448,6 +488,12 @@ impl Cluster {
     /// ([`ServeRequest::generate`]) get a streaming ticket.
     pub fn try_submit(&self, req: ServeRequest) -> Result<Admission> {
         Cluster::validate(&req)?;
+        if matches!(req.kind, ServeKind::Generate { .. }) {
+            if let Some(retry) = self.kv_backpressure(req.tokens.len()) {
+                let (reason, retry_after, id) = self.admission.reject_kv(retry);
+                return Ok(Admission::Rejected { id, reason, retry_after });
+            }
+        }
         let privileged = req.is_privileged();
         let qos = req.qos.map_or("none", |q| q.name());
         let priority = req.priority.name();

@@ -210,6 +210,18 @@ pub struct Metrics {
     pub kv_reserved_tokens: usize,
     pub kv_peak_tokens: usize,
     pub kv_budget_tokens: usize,
+    /// Tokens actually materialized in KV pages (lazy paging means this
+    /// trails `kv_reserved_tokens` until a sequence fills its reservation).
+    pub kv_used_tokens: usize,
+    /// Tokens served from refcount-shared prefix pages (counted once per
+    /// extra reference — physical savings, not logical coverage).
+    pub kv_shared_tokens: usize,
+    /// Average bits per stored KV element across live physical pages
+    /// (32.0 when quantization is off or the pool is empty).
+    pub kv_avg_bits: f64,
+    /// Generations preempted (pages reclaimed, replayed later) because
+    /// the page pool ran dry mid-decode.
+    pub kv_preemptions: usize,
 }
 
 /// Wave-latency samples retained for percentile reporting.
@@ -280,6 +292,10 @@ impl Metrics {
             kv_reserved_tokens: 0,
             kv_peak_tokens: 0,
             kv_budget_tokens: 0,
+            kv_used_tokens: 0,
+            kv_shared_tokens: 0,
+            kv_avg_bits: 32.0,
+            kv_preemptions: 0,
         }
     }
 
@@ -312,6 +328,15 @@ impl Metrics {
         self.kv_reserved_tokens = occ.reserved_tokens;
         self.kv_peak_tokens = occ.peak_tokens;
         self.kv_budget_tokens = occ.budget_tokens;
+        self.kv_used_tokens = occ.used_tokens;
+        self.kv_shared_tokens = occ.shared_tokens;
+        self.kv_avg_bits = occ.avg_kv_bits;
+    }
+
+    /// Count generations preempted by the decode scheduler this step
+    /// (pages reclaimed for an older sequence; the victim replays later).
+    pub fn record_kv_preemptions(&mut self, n: usize) {
+        self.kv_preemptions += n;
     }
 
     /// Raw per-step wall-clock samples in the ring (unordered).
@@ -629,6 +654,15 @@ pub struct ReplicaReport {
     /// KV reservation high-water mark / budget (tokens).
     pub kv_peak_tokens: usize,
     pub kv_budget_tokens: usize,
+    /// Tokens materialized in KV pages at the final publish (lazy paging
+    /// trails reservations).
+    pub kv_used_tokens: usize,
+    /// Tokens served from refcount-shared prefix pages (physical savings).
+    pub kv_shared_tokens: usize,
+    /// Average bits per stored KV element across live physical pages.
+    pub kv_avg_bits: f64,
+    /// Generations preempted for pages and replayed.
+    pub kv_preemptions: usize,
     /// Engine lifetime (build → report), seconds.
     pub elapsed_s: f64,
     /// Lifecycle spans recorded on this replica's track (empty when
@@ -853,6 +887,24 @@ impl ClusterReport {
             decode_tps: self.decode_tps(),
             p50_step_s: sl.as_ref().map(|s| s.p50).unwrap_or(0.0),
             kv_peak_tokens: self.replicas.iter().map(|r| r.kv_peak_tokens).max().unwrap_or(0),
+            kv_used_tokens: self.replicas.iter().map(|r| r.kv_used_tokens).sum(),
+            kv_shared_tokens: self.replicas.iter().map(|r| r.kv_shared_tokens).sum(),
+            kv_avg_bits: {
+                // Weight each replica's average by its materialized tokens;
+                // an idle cluster reports full-precision (32.0).
+                let used: usize = self.replicas.iter().map(|r| r.kv_used_tokens).sum();
+                if used == 0 {
+                    32.0
+                } else {
+                    self.replicas
+                        .iter()
+                        .map(|r| r.kv_avg_bits * r.kv_used_tokens as f64)
+                        .sum::<f64>()
+                        / used as f64
+                }
+            },
+            kv_preemptions: self.replicas.iter().map(|r| r.kv_preemptions).sum(),
+            rejected_kv: self.admission.rejected_kv,
             queue_wait_p99_by_priority: self.queue_wait_p99_by_priority(),
             qos_served: {
                 let mut q = [0usize; 3];
@@ -941,6 +993,19 @@ pub struct ServerReport {
     pub p50_step_s: f64,
     /// KV reservation high-water mark, worst replica (tokens).
     pub kv_peak_tokens: usize,
+    /// Tokens materialized in KV pages at shutdown, summed over replicas.
+    pub kv_used_tokens: usize,
+    /// Tokens served from refcount-shared prefix pages, summed (each extra
+    /// reference to a physical page counts its filled positions once).
+    pub kv_shared_tokens: usize,
+    /// Average bits per stored KV element, weighted by each replica's
+    /// materialized tokens (32.0 when no pages were live).
+    pub kv_avg_bits: f64,
+    /// Generations preempted for pages and replayed, summed over replicas.
+    pub kv_preemptions: usize,
+    /// Generate requests turned away because the KV page pool was the
+    /// bottleneck (retry-after derived from the page-release rate).
+    pub rejected_kv: usize,
     /// Queue-wait p99 per priority level (index = `Priority::index()`).
     pub queue_wait_p99_by_priority: [f64; 3],
     /// Requests served per QoS class (`None` counted as `Standard`).
@@ -1107,6 +1172,10 @@ mod tests {
             step_latency: Some(Summary::of(&[0.003, 0.004])),
             kv_peak_tokens: 40 + id,
             kv_budget_tokens: 128,
+            kv_used_tokens: 20 + id,
+            kv_shared_tokens: 8,
+            kv_avg_bits: if id == 0 { 32.0 } else { 8.0 },
+            kv_preemptions: id,
             elapsed_s: 2.0,
             trace: vec![],
             trace_dropped: 0,
@@ -1128,6 +1197,7 @@ mod tests {
                 rejected_queue_full: 2,
                 rejected_deadline: 1,
                 rejected_quota: 1,
+                rejected_kv: 1,
                 cancelled: 3,
                 failed: 0,
             },
@@ -1174,6 +1244,12 @@ mod tests {
         assert_eq!((flat.prefill_rows, flat.decode_rows), (24, 12));
         assert_eq!(flat.generations, 4);
         assert_eq!(flat.kv_peak_tokens, 41);
+        // paged-kv fields: used/shared sum, avg bits weighted by used
+        // tokens, preemptions sum, kv rejects pass through from admission
+        assert_eq!((flat.kv_used_tokens, flat.kv_shared_tokens), (41, 16));
+        let expect_bits = (32.0 * 20.0 + 8.0 * 21.0) / 41.0;
+        assert!((flat.kv_avg_bits - expect_bits).abs() < 1e-9);
+        assert_eq!((flat.kv_preemptions, flat.rejected_kv), (1, 1));
         assert!((flat.decode_tps - 16.0 / 2.0).abs() < 1e-9);
         assert!(flat.p50_step_s >= 0.003 && flat.p50_step_s <= 0.004);
         // SLO accounting sums per class; served-bits attribution merges
@@ -1202,11 +1278,19 @@ mod tests {
             budget_tokens: 100,
             seqs: 2,
             peak_tokens: 30,
+            used_tokens: 7,
+            shared_tokens: 3,
+            avg_kv_bits: 16.0,
+            ..Default::default()
         });
         assert_eq!(
             (m.kv_reserved_tokens, m.kv_peak_tokens, m.kv_budget_tokens),
             (10, 30, 100)
         );
+        assert_eq!((m.kv_used_tokens, m.kv_shared_tokens), (7, 3));
+        assert!((m.kv_avg_bits - 16.0).abs() < 1e-12);
+        m.record_kv_preemptions(2);
+        assert_eq!(m.kv_preemptions, 2);
         // ring caps retained samples; counters still see every step
         for _ in 0..STEP_LATENCY_WINDOW + 50 {
             m.record_decode_step(0, 1, 1, 0, 0.001);

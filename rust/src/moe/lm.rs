@@ -425,7 +425,10 @@ impl MoeLm {
     /// reproduces [`attention`](Self::attention)'s arithmetic exactly —
     /// same score order, same softmax shape (a `-inf` tail adds exact
     /// zeros), same accumulation order — so step outputs are bit-identical
-    /// to the whole-sequence rows.
+    /// to the whole-sequence rows. The prefix is gathered through the
+    /// cache's page table in position order (contiguous page runs), which
+    /// changes where rows live but not a single arithmetic operation:
+    /// fp32-mode paging stays bit-identical to the contiguous cache.
     fn attention_step(&self, xn: &Matrix, layer: &Layer, l: usize, cache: &mut SeqKv) -> Matrix {
         let s = xn.rows;
         let h = self.cfg.hidden;
@@ -446,13 +449,22 @@ impl MoeLm {
             for i in 0..s {
                 let t1 = p0 + i; // absolute position of this new row
                 scores.clear();
-                for t2 in 0..=t1 {
-                    let krow = cache.key_row(l, t2);
-                    let mut sum = 0.0f32;
-                    for d in 0..hd {
-                        sum += q.at(i, off + d) * krow[off + d];
+                // gather K through the page table in position order, one
+                // contiguous page run at a time — the same rows in the
+                // same order as a per-position walk, so the scores are
+                // bit-identical to the contiguous-cache gather
+                let mut t2 = 0;
+                while t2 <= t1 {
+                    let (krows, nrun) = cache.key_run(l, t2, t1 + 1);
+                    for j in 0..nrun {
+                        let krow = &krows[j * h..(j + 1) * h];
+                        let mut sum = 0.0f32;
+                        for d in 0..hd {
+                            sum += q.at(i, off + d) * krow[off + d];
+                        }
+                        scores.push(sum * scale);
                     }
-                    scores.push(sum * scale);
+                    t2 += nrun;
                 }
                 // softmax over the causal prefix — bit-identical to
                 // `softmax_rows` over the full row, whose -inf tail
@@ -467,14 +479,20 @@ impl MoeLm {
                 for v in scores.iter_mut() {
                     *v *= inv;
                 }
-                for (t2, &a) in scores.iter().enumerate() {
-                    if a == 0.0 {
-                        continue;
+                let mut t2 = 0;
+                while t2 <= t1 {
+                    let (vrows, nrun) = cache.value_run(l, t2, t1 + 1);
+                    for j in 0..nrun {
+                        let a = scores[t2 + j];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let vrow = &vrows[j * h..(j + 1) * h];
+                        for d in 0..hd {
+                            *ctx.at_mut(i, off + d) += a * vrow[off + d];
+                        }
                     }
-                    let vrow = cache.value_row(l, t2);
-                    for d in 0..hd {
-                        *ctx.at_mut(i, off + d) += a * vrow[off + d];
-                    }
+                    t2 += nrun;
                 }
             }
         }
@@ -705,6 +723,40 @@ mod tests {
                         m.at(r, c).to_bits(),
                         full.at(pos, c).to_bits(),
                         "split {split}: logits diverged at ({pos}, {c})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_step_paged_gather_bit_identical_across_page_sizes() {
+        // the paged gather crosses page boundaries mid-prefix; any page
+        // size must land on the same bits as the whole-sequence forward
+        let mut rng = Rng::new(114);
+        let cfg = tiny_cfg();
+        let lm = MoeLm::random(&cfg, &mut rng);
+        let tokens: Vec<u32> = (0..11).map(|_| rng.below(32) as u32).collect();
+        let full = lm.forward(&tokens);
+        for page in [1usize, 2, 3, 4, 16] {
+            let mut cache = SeqKv::with_page_size(cfg.layers, cfg.hidden, tokens.len(), page);
+            let prefill = lm.forward_step(&tokens[..5], &mut cache);
+            for pos in 0..5 {
+                for c in 0..cfg.vocab {
+                    assert_eq!(
+                        prefill.at(pos, c).to_bits(),
+                        full.at(pos, c).to_bits(),
+                        "page {page}: prefill logits diverged at ({pos}, {c})"
+                    );
+                }
+            }
+            for pos in 5..tokens.len() {
+                let step = lm.forward_step(&tokens[pos..pos + 1], &mut cache);
+                for c in 0..cfg.vocab {
+                    assert_eq!(
+                        step.at(0, c).to_bits(),
+                        full.at(pos, c).to_bits(),
+                        "page {page}: decode logits diverged at ({pos}, {c})"
                     );
                 }
             }

@@ -230,16 +230,27 @@ fn event_args(e: &TraceEvent) -> Json {
             ("rows", Json::num(*rows as f64)),
             ("padded", Json::num(*padded as f64)),
         ]),
-        EventKind::DecodeStep { rows, prefill_rows, decode_rows, tokens, kv_reserved, kv_budget } => {
-            Json::obj(vec![
-                ("rows", Json::num(*rows as f64)),
-                ("prefill_rows", Json::num(*prefill_rows as f64)),
-                ("decode_rows", Json::num(*decode_rows as f64)),
-                ("tokens", Json::num(*tokens as f64)),
-                ("kv_reserved", Json::num(*kv_reserved as f64)),
-                ("kv_budget", Json::num(*kv_budget as f64)),
-            ])
-        }
+        EventKind::DecodeStep {
+            rows,
+            prefill_rows,
+            decode_rows,
+            tokens,
+            kv_reserved,
+            kv_used,
+            kv_budget,
+        } => Json::obj(vec![
+            ("rows", Json::num(*rows as f64)),
+            ("prefill_rows", Json::num(*prefill_rows as f64)),
+            ("decode_rows", Json::num(*decode_rows as f64)),
+            ("tokens", Json::num(*tokens as f64)),
+            ("kv_reserved", Json::num(*kv_reserved as f64)),
+            ("kv_used", Json::num(*kv_used as f64)),
+            ("kv_budget", Json::num(*kv_budget as f64)),
+        ]),
+        EventKind::KvPreempt { kv_reserved, kv_budget } => Json::obj(vec![
+            ("kv_reserved", Json::num(*kv_reserved as f64)),
+            ("kv_budget", Json::num(*kv_budget as f64)),
+        ]),
         EventKind::ReplanSolve { drift, changes } => Json::obj(vec![
             ("drift", Json::num(*drift)),
             ("changes", Json::num(*changes as f64)),
@@ -376,6 +387,12 @@ pub fn prometheus_text(r: &ServerReport) -> String {
     ));
     s.push_str(&format!("mxmoe_rejected_total{{reason=\"deadline\"}} {}\n", r.rejected_deadline));
     s.push_str(&format!("mxmoe_rejected_total{{reason=\"quota\"}} {}\n", r.rejected_quota));
+    s.push_str(&format!("mxmoe_rejected_total{{reason=\"kv_exhausted\"}} {}\n", r.rejected_kv));
+    s.push_str(
+        "# HELP mxmoe_kv_preemptions_total Generations preempted for KV pages and replayed\n",
+    );
+    s.push_str("# TYPE mxmoe_kv_preemptions_total counter\n");
+    s.push_str(&format!("mxmoe_kv_preemptions_total {}\n", r.kv_preemptions));
     s.push_str("# HELP mxmoe_qos_served_total Requests served per QoS class\n");
     s.push_str("# TYPE mxmoe_qos_served_total counter\n");
     for (name, v) in ["interactive", "standard", "batch"].iter().zip(r.qos_served) {
@@ -399,6 +416,13 @@ pub fn prometheus_text(r: &ServerReport) -> String {
     gauge("mxmoe_replicas", "Engine replicas", r.replicas as f64);
     gauge("mxmoe_max_queue_depth", "Deepest admission queue", r.max_queue_depth as f64);
     gauge("mxmoe_kv_peak_tokens", "KV reservation high-water mark", r.kv_peak_tokens as f64);
+    gauge("mxmoe_kv_used_tokens", "Tokens materialized in KV pages", r.kv_used_tokens as f64);
+    gauge(
+        "mxmoe_kv_shared_tokens",
+        "Tokens served from shared prefix pages",
+        r.kv_shared_tokens as f64,
+    );
+    gauge("mxmoe_kv_avg_bits", "Average bits per stored KV element", r.kv_avg_bits);
     s.push_str("# HELP mxmoe_queue_wait_p99_seconds Queue wait p99 per priority\n");
     s.push_str("# TYPE mxmoe_queue_wait_p99_seconds gauge\n");
     for (name, v) in ["low", "normal", "high"].iter().zip(r.queue_wait_p99_by_priority) {

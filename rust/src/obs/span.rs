@@ -158,8 +158,14 @@ pub enum EventKind {
         decode_rows: usize,
         tokens: usize,
         kv_reserved: usize,
+        kv_used: usize,
         kv_budget: usize,
     },
+    /// A generation was preempted to free KV pages for an older sequence
+    /// (instant on the replica track, request-scoped; not terminal — the
+    /// sequence replays later). Carries the pool state after the pages
+    /// were reclaimed.
+    KvPreempt { kv_reserved: usize, kv_budget: usize },
     /// Drift check + MCKP re-solve on the serving thread (complete span).
     ReplanSolve { drift: f64, changes: usize },
     /// Off-thread re-quantization of the changed slots (complete span,
@@ -179,6 +185,7 @@ impl EventKind {
             EventKind::Routed { .. } => "routed",
             EventKind::Wave { .. } => "wave",
             EventKind::DecodeStep { .. } => "decode-step",
+            EventKind::KvPreempt { .. } => "kv-preempt",
             EventKind::ReplanSolve { .. } => "replan-solve",
             EventKind::SwapStage { .. } => "swap-stage",
             EventKind::SwapInstall { .. } => "swap-install",

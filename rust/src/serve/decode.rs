@@ -1,5 +1,5 @@
 //! Token-level decode scheduler: per-step continuous batching over KV-cached
-//! generations (DESIGN.md §Decode-Loop).
+//! generations (DESIGN.md §Decode-Loop, §KV-Paging).
 //!
 //! The serve loop used to batch whole-sequence scoring requests; decode-time
 //! activation skew — the regime where MoE expert imbalance is most extreme —
@@ -9,14 +9,28 @@
 //!
 //! ```text
 //!   reap cancelled (evict seq, free KV)        ── step-granular cancellation
-//!   promote pending → active (KV reservation)  ── admission, FIFO
+//!   promote: resume preempted, admit pending   ── lazy page claim, FIFO
 //!   assemble: 1 decode row per decoding seq
 //!           + FIFO prefill chunks, cut against the tile grid
 //!             via dispatch::fill_estimate      ── the tile-budget cut
+//!   claim pages for the step's rows            ── grow between steps;
+//!             preempt-youngest when the pool is dry (deterministic)
 //!   exec: one mixed batch through the engine   ── expert rows concatenated
 //!   emit: greedy token per sequence → stream   ── tokens land immediately
+//!   seal: full pages quantize + enter the prefix-share map
 //!   retire: stop-token / max-token / failure   ── KV freed between steps
 //! ```
+//!
+//! KV is paged ([`super::kvcache`]): admission claims only the prompt's
+//! pages plus one decode-headroom page, and later pages are claimed between
+//! steps — so concurrency is bounded by *live context*, not by the sum of
+//! worst cases. When the pool runs dry mid-generation the scheduler preempts
+//! the youngest active sequence (largest admission number — deterministic),
+//! frees its pages, and replays it later from its kept token state: replayed
+//! prefill recomputes the same K/V (bit-identical in fp32 mode), already
+//! streamed tokens are never re-emitted, and the prompt NLL is recomputed to
+//! the same value. The oldest sequence can always force progress past the
+//! budget when it is alone, so no generation deadlocks.
 //!
 //! Because one step mixes prefill chunks and single-token decode rows from
 //! many sequences, the per-layer MoE dispatch sees a concatenated batch and
@@ -32,17 +46,18 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+use crate::alloc::Allocation;
 use crate::moe::{ModelConfig, StepSeq};
 use crate::runtime::dispatch::{self, FillEstimate};
 use crate::runtime::TILE_MS;
 use crate::tensor::Matrix;
 
-use super::kvcache::{KvCache, KvOccupancy, SeqKv};
+use super::kvcache::{KvCache, KvOccupancy, KvPageScheme, KvQuantConfig, SeqKv, KV_PAGE_SIZE};
 use super::queue::{GenSpec, Request, RequestKind};
 use super::request::{FinishReason, StreamEvent};
 
 /// Decode-loop sizing knobs (per replica).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct DecodePolicy {
     /// Row budget per step: decode rows plus prefill-chunk rows. Default:
     /// the largest exported tile, mirroring the batcher's token budget.
@@ -50,11 +65,15 @@ pub struct DecodePolicy {
     /// Sequences in the step loop at once; the rest wait in admission
     /// order.
     pub max_active_seqs: usize,
-    /// KV reservation budget (tokens) — a sequence reserves
-    /// `prompt + max_new_tokens` up front, so admission is the only
-    /// backpressure point and a running generation never stalls on cache
-    /// room.
+    /// KV page-pool budget (tokens). Admission claims only prompt pages
+    /// plus one decode-headroom page; later pages are claimed between
+    /// steps, with deterministic preempt-youngest when the pool runs dry.
     pub kv_budget_tokens: usize,
+    /// Positions per KV page (tile-aligned; see [`KV_PAGE_SIZE`]).
+    pub kv_page_size: usize,
+    /// Sealed-page quantization plan (`None` = fp32 pages everywhere,
+    /// bit-identical to the contiguous cache this pool replaced).
+    pub kv_quant: Option<KvQuantConfig>,
 }
 
 impl Default for DecodePolicy {
@@ -63,8 +82,39 @@ impl Default for DecodePolicy {
             max_step_rows: *TILE_MS.last().unwrap(),
             max_active_seqs: 16,
             kv_budget_tokens: 1 << 16,
+            kv_page_size: KV_PAGE_SIZE,
+            kv_quant: None,
         }
     }
+}
+
+/// Derive a sealed-page KV quantization plan from the deployed MCKP
+/// weight plan: per transformer layer, the plan's mean activation bits
+/// stand in for calibration sensitivity (layers the planner kept wide are
+/// the layers calibration found sensitive), so KV bits land on the same
+/// layers the weight bit-budget favoured. Layers without an MoE plan
+/// (dense interleave) default to the `hi` scheme.
+pub fn kv_quant_from_allocation(
+    alloc: &Allocation,
+    n_layers: usize,
+    lo: KvPageScheme,
+    hi: KvPageScheme,
+) -> KvQuantConfig {
+    let mut scores = vec![f64::MAX; n_layers];
+    for (bi, &layer) in alloc.layers.iter().enumerate() {
+        if layer >= n_layers {
+            continue;
+        }
+        let schemes = &alloc.schemes[bi];
+        let bits: f64 = schemes
+            .iter()
+            .flat_map(|e| e.iter())
+            .map(|s| s.abits as f64)
+            .sum();
+        let n = (schemes.len() * 3).max(1);
+        scores[layer] = bits / n as f64;
+    }
+    KvQuantConfig::from_sensitivity(&scores, lo, hi)
 }
 
 /// Cumulative decode-loop counters (published to the status board and the
@@ -75,16 +125,20 @@ pub struct DecodeStats {
     pub steps: usize,
     /// Prompt rows prefilled.
     pub prefill_rows: usize,
-    /// Single-token decode rows executed.
+    /// Single-token decode rows executed (replayed context rows after a
+    /// preemption count here too — they are re-decode work).
     pub decode_rows: usize,
     /// Tokens emitted to ticket streams.
     pub generated_tokens: usize,
     /// Generations finished by stop-token or length.
     pub generations: usize,
-    /// Generations evicted by cancellation (pending or active).
+    /// Generations evicted by cancellation (pending, preempted or active).
     pub cancelled: usize,
     /// Generations dropped by a failed engine step.
     pub failed: usize,
+    /// Preempt-youngest evictions (pages reclaimed, generation replayed
+    /// later — not a terminal outcome).
+    pub preemptions: usize,
 }
 
 /// A generation that completed this step (stop-token or length). The
@@ -132,6 +186,9 @@ pub struct StepOutcome {
     pub cancelled: Vec<Request>,
     /// Generations dropped because the engine step failed — no response.
     pub failed: Vec<Request>,
+    /// Request ids preempted this step to free pages for older sequences
+    /// (they will be replayed — not terminal).
+    pub preempted: Vec<u64>,
 }
 
 enum Phase {
@@ -142,7 +199,15 @@ enum Phase {
 struct ActiveSeq {
     req: Request,
     kv: SeqKv,
-    /// Prompt rows prefilled so far.
+    /// Admission number — preemption victims are chosen youngest-first by
+    /// this (deterministic), and resume order is oldest-first.
+    admit_seq: u64,
+    /// Full context: prompt ++ generated, contiguously — step inputs are
+    /// `ctx[consumed..consumed + n]` whether prefilling, decoding, or
+    /// replaying after a preemption.
+    ctx: Vec<u32>,
+    /// Context rows fed through the engine so far (resets to 0 on
+    /// preemption: the replay recomputes the same K/V).
     consumed: usize,
     generated: Vec<u32>,
     /// Σ teacher-forced next-token NLL over prefilled prompt positions.
@@ -164,13 +229,32 @@ impl ActiveSeq {
         }
     }
 
+    fn ctx_len(&self) -> usize {
+        self.ctx.len()
+    }
+
     fn phase(&self) -> Phase {
-        if self.consumed < self.req.tokens.len() {
-            Phase::Prefill
-        } else {
+        // exactly one fresh context row left and it is a generated token:
+        // a single-token decode row. Anything else — prompt rows, or a
+        // post-preemption replay of many context rows — is prefill work.
+        if !self.generated.is_empty() && self.consumed + 1 == self.ctx_len() {
             Phase::Decoding
+        } else {
+            Phase::Prefill
         }
     }
+}
+
+/// A preempted generation waiting to re-enter the step loop: token state
+/// only, no pages. Replay recomputes K/V (and the prompt NLL) from the kept
+/// context; streamed tokens are never re-emitted.
+struct PreemptedSeq {
+    req: Request,
+    admit_seq: u64,
+    ctx: Vec<u32>,
+    generated: Vec<u32>,
+    first_step_at: Option<Instant>,
+    first_token_at: Option<Instant>,
 }
 
 /// Largest `take ≤ want` whose step total `rows + take` decomposes into
@@ -200,46 +284,58 @@ fn argmax(row: &[f32]) -> u32 {
     best as u32
 }
 
-/// Per-replica token-level generation scheduler. Owns the KV pool, the
-/// pending/active sequence sets, and the step assembly policy; the engine
-/// stays outside (injected per step), which keeps this engine-agnostic and
-/// unit-testable without artifacts.
+/// Per-replica token-level generation scheduler. Owns the KV page pool,
+/// the pending/preempted/active sequence sets, and the step assembly
+/// policy; the engine stays outside (injected per step), which keeps this
+/// engine-agnostic and unit-testable without artifacts.
 pub struct DecodeScheduler {
     policy: DecodePolicy,
     pool: KvCache,
     pending: VecDeque<Request>,
+    /// Preempted generations (token state, no pages) — resumed
+    /// oldest-first, ahead of anything still pending.
+    preempted: Vec<PreemptedSeq>,
     active: Vec<ActiveSeq>,
+    admit_counter: u64,
     stats: DecodeStats,
 }
 
 impl DecodeScheduler {
     pub fn new(cfg: &ModelConfig, policy: DecodePolicy) -> DecodeScheduler {
         DecodeScheduler {
-            pool: KvCache::new(cfg.layers, cfg.hidden, policy.kv_budget_tokens.max(1)),
+            pool: KvCache::with_config(
+                cfg.layers,
+                cfg.hidden,
+                policy.kv_budget_tokens.max(1),
+                policy.kv_page_size.max(1),
+                policy.kv_quant.clone(),
+            ),
             policy,
             pending: VecDeque::new(),
+            preempted: Vec::new(),
             active: Vec::new(),
+            admit_counter: 0,
             stats: DecodeStats::default(),
         }
     }
 
-    /// Take ownership of a routed generation request (pending until a KV
-    /// reservation and an active slot free up, FIFO).
+    /// Take ownership of a routed generation request (pending until prompt
+    /// pages and an active slot free up, FIFO).
     pub fn admit(&mut self, req: Request) {
         debug_assert!(req.kind.is_generate(), "decode scheduler only takes generations");
         self.pending.push_back(req);
     }
 
-    /// True while any generation is pending or mid-decode — the replica
-    /// must keep stepping (and must not block on its work deque).
+    /// True while any generation is pending, preempted or mid-decode — the
+    /// replica must keep stepping (and must not block on its work deque).
     pub fn has_work(&self) -> bool {
-        !self.pending.is_empty() || !self.active.is_empty()
+        !self.pending.is_empty() || !self.preempted.is_empty() || !self.active.is_empty()
     }
 
-    /// Pending + active generations — the replica's decode contribution to
-    /// the router's load signal.
+    /// Pending + preempted + active generations — the replica's decode
+    /// contribution to the router's load signal.
     pub fn load(&self) -> usize {
-        self.pending.len() + self.active.len()
+        self.pending.len() + self.preempted.len() + self.active.len()
     }
 
     pub fn active_seqs(&self) -> usize {
@@ -250,18 +346,51 @@ impl DecodeScheduler {
         self.pending.len()
     }
 
+    pub fn preempted_seqs(&self) -> usize {
+        self.preempted.len()
+    }
+
+    /// Pool occupancy with `used_tokens` overlaid from the live sequence
+    /// lengths (the pool tracks pages; the scheduler owns the fills).
     pub fn occupancy(&self) -> KvOccupancy {
-        self.pool.occupancy()
+        let mut occ = self.pool.occupancy();
+        occ.used_tokens = self.active.iter().map(|a| a.kv.len()).sum();
+        occ
+    }
+
+    /// Unclaimed tokens under the KV page budget — the admission front
+    /// door's backpressure signal.
+    pub fn free_kv_tokens(&self) -> usize {
+        self.pool.free_tokens()
+    }
+
+    /// EWMA page-release rate (tokens/second; 0 until warmed) — what
+    /// `retry_after` hints are derived from when the pool is the
+    /// bottleneck.
+    pub fn kv_release_tps(&self) -> f64 {
+        self.pool.release_tps()
+    }
+
+    pub fn kv_page_size(&self) -> usize {
+        self.pool.page_size()
+    }
+
+    /// Invalidate the prefix-share map on a plan hot-swap (pages computed
+    /// under the old plan must not seed new-plan prefills).
+    pub fn set_share_epoch(&mut self, epoch: u64) {
+        self.pool.set_share_epoch(epoch);
     }
 
     pub fn stats(&self) -> DecodeStats {
         self.stats
     }
 
-    /// Run one decode step: reap cancellations, admit pending sequences up
-    /// to the KV budget, assemble the mixed prefill/decode batch cut
-    /// against the tile grid, execute it through `exec`, stream the new
-    /// tokens, and retire finished sequences. An engine failure fails only
+    /// Run one decode step: reap cancellations, resume preempted and admit
+    /// pending sequences up to the page budget, assemble the mixed
+    /// prefill/decode batch cut against the tile grid, claim the pages the
+    /// step appends into (preempting the youngest sequence when the pool
+    /// runs dry), execute through `exec`, stream the new tokens, seal full
+    /// pages, and retire finished sequences. An engine failure fails only
     /// the sequences that were in the step (reported in
     /// [`StepOutcome::failed`]); the scheduler itself keeps serving.
     pub fn step<E>(&mut self, mut exec: E) -> StepOutcome
@@ -290,10 +419,10 @@ impl DecodeScheduler {
             if !matches!(a.phase(), Phase::Prefill) || rows >= budget {
                 continue;
             }
-            let remaining = a.req.tokens.len() - a.consumed;
+            let remaining = a.ctx_len() - a.consumed;
             let mut take = remaining.min(budget - rows);
             if take < remaining {
-                // the chunk doesn't finish the prompt: align the step
+                // the chunk doesn't finish the context: align the step
                 // total to a tile boundary so the ragged tail isn't paid
                 // on this step *and* re-paid when the remainder runs
                 take = trim_to_tiles(rows, take);
@@ -304,6 +433,44 @@ impl DecodeScheduler {
             step_tokens[ai] = take;
             rows += take;
         }
+
+        // ---- claim the pages this step appends into (lazy growth).
+        // Oldest-first: when the pool runs dry, preempt the youngest
+        // active sequence (deterministic by admission number — `active`
+        // is admission-ordered, so the victim is always the last) and
+        // retry; the oldest sequence alone may force past the budget, so
+        // no generation deadlocks. ----
+        let mut ai = 0;
+        while ai < self.active.len() {
+            let n = step_tokens[ai];
+            if n == 0 {
+                ai += 1;
+                continue;
+            }
+            let need = self.active[ai].kv.len() + n;
+            loop {
+                if self.pool.grow(&mut self.active[ai].kv, need) {
+                    break;
+                }
+                if self.active.len() - 1 > ai {
+                    let victim = self.active.len() - 1;
+                    step_tokens.truncate(victim);
+                    self.preempt(victim, &mut out);
+                } else if ai == 0 {
+                    // oldest and alone: bounded overflow, exactly like the
+                    // pool's oversized-when-empty admission rule
+                    self.pool.grow_force(&mut self.active[ai].kv, need);
+                    break;
+                } else {
+                    // strictly older sequences hold the pool: defer this
+                    // sequence's rows until they release pages
+                    step_tokens[ai] = 0;
+                    break;
+                }
+            }
+            ai += 1;
+        }
+        let rows: usize = step_tokens.iter().sum();
         if rows == 0 {
             return out;
         }
@@ -321,12 +488,7 @@ impl DecodeScheduler {
             if a.first_step_at.is_none() {
                 a.first_step_at = Some(now);
             }
-            let tokens: &[u32] = if a.consumed < a.req.tokens.len() {
-                &a.req.tokens[a.consumed..a.consumed + n]
-            } else {
-                debug_assert_eq!(n, 1);
-                &a.generated[a.generated.len() - 1..]
-            };
+            let tokens: &[u32] = &a.ctx[a.consumed..a.consumed + n];
             inputs.push(StepSeq { tokens, cache: &mut a.kv });
             input_seq.push(ai);
         }
@@ -343,6 +505,12 @@ impl DecodeScheduler {
                 self.stats.prefill_rows += out.prefill_rows;
                 self.stats.decode_rows += out.decode_rows;
                 self.stats.generated_tokens += out.tokens_emitted;
+                // seal newly completed pages: quantize (when configured)
+                // and publish prompt blocks in the prefix-share map
+                let pool = &mut self.pool;
+                for a in self.active.iter_mut() {
+                    pool.seal(&mut a.kv);
+                }
             }
             Err(e) => {
                 eprintln!(
@@ -358,50 +526,46 @@ impl DecodeScheduler {
         out
     }
 
-    /// Fold one sequence's step logits back into its state: prompt NLL and
-    /// advancement for prefill rows, a greedy token (streamed immediately)
-    /// for the decode row — the final prompt row doubles as the first
-    /// decode row, so the first token lands with the prefill step.
+    /// Fold one sequence's step logits back into its state: prompt NLL for
+    /// prompt rows, and — when the step consumed the last fresh context
+    /// row — a greedy next token, streamed immediately. The final prompt
+    /// row doubles as the first decode row, so the first token lands with
+    /// the prefill step; replayed context rows after a preemption advance
+    /// the cache without re-emitting anything.
     fn postprocess(&mut self, ai: usize, n: usize, logits: &Matrix, out: &mut StepOutcome) {
         let a = &mut self.active[ai];
         let prompt_len = a.req.tokens.len();
-        if a.consumed < prompt_len {
-            debug_assert_eq!(logits.rows, n);
-            for r in 0..n {
-                let pos = a.consumed + r;
-                if pos + 1 < prompt_len {
-                    let row = logits.row(r);
-                    let m = row.iter().fold(f32::NEG_INFINITY, |acc, &b| acc.max(b)) as f64;
-                    let z: f64 = row.iter().map(|&v| ((v as f64) - m).exp()).sum();
-                    a.nll_sum -=
-                        (logits.at(r, a.req.tokens[pos + 1] as usize) as f64 - m) - z.ln();
-                }
+        debug_assert_eq!(logits.rows, n);
+        for r in 0..n {
+            let pos = a.consumed + r;
+            if pos < prompt_len {
+                out.prefill_rows += 1;
+            } else {
+                out.decode_rows += 1;
             }
-            a.consumed += n;
-            out.prefill_rows += n;
-            if a.consumed == prompt_len {
-                // the final prompt row doubles as the first decode row
-                let g = argmax(logits.row(n - 1));
-                if a.spec().max_new_tokens == 0 {
-                    // degenerate generation: scoring semantics — keep the
-                    // argmax for the final response, stream nothing
-                    a.final_argmax = Some(g);
-                    a.done = Some(FinishReason::Length);
-                } else {
-                    emit(a, g, out);
-                }
+            if pos + 1 < prompt_len {
+                let row = logits.row(r);
+                let m = row.iter().fold(f32::NEG_INFINITY, |acc, &b| acc.max(b)) as f64;
+                let z: f64 = row.iter().map(|&v| ((v as f64) - m).exp()).sum();
+                a.nll_sum -= (logits.at(r, a.req.tokens[pos + 1] as usize) as f64 - m) - z.ln();
             }
-        } else {
-            debug_assert_eq!(n, 1);
-            debug_assert_eq!(logits.rows, 1);
-            out.decode_rows += 1;
-            let g = argmax(logits.row(0));
-            emit(a, g, out);
+        }
+        a.consumed += n;
+        if a.consumed == a.ctx_len() {
+            let g = argmax(logits.row(n - 1));
+            if a.spec().max_new_tokens == 0 {
+                // degenerate generation: scoring semantics — keep the
+                // argmax for the final response, stream nothing
+                a.final_argmax = Some(g);
+                a.done = Some(FinishReason::Length);
+            } else {
+                emit(a, g, out);
+            }
         }
     }
 
-    /// Evict cancelled generations: pending ones before any KV was
-    /// reserved, active ones between steps with their KV reservation
+    /// Evict cancelled generations: pending and preempted ones hold no
+    /// pages, active ones are evicted between steps with their pages
     /// freed — the token-level cancellation the batch-granular path could
     /// not offer. Streams get a terminal `Done { Cancelled }` (suppressed
     /// by the cancelled ticket, but it closes the channel deliberately).
@@ -423,6 +587,22 @@ impl DecodeScheduler {
         }
         self.pending = kept;
         let mut i = 0;
+        while i < self.preempted.len() {
+            if self.preempted[i].req.is_cancelled() {
+                let p = self.preempted.remove(i);
+                if let RequestKind::Generate(spec) = &p.req.kind {
+                    let _ = spec.stream.send(StreamEvent::Done {
+                        reason: FinishReason::Cancelled,
+                        generated: p.generated.len(),
+                    });
+                }
+                self.stats.cancelled += 1;
+                out.cancelled.push(p.req);
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
         while i < self.active.len() {
             if self.active[i].req.is_cancelled() {
                 let ActiveSeq { req, kv, generated, .. } = self.active.remove(i);
@@ -441,37 +621,92 @@ impl DecodeScheduler {
         }
     }
 
-    /// Move pending generations into the step loop while an active slot
-    /// and a KV reservation (`prompt + max_new_tokens`) are available.
-    /// FIFO with head-of-line blocking: admission order is the fairness
+    /// Move waiting generations into the step loop while an active slot
+    /// and prompt pages are available. Preempted sequences resume first
+    /// (oldest admission number — they are older than anything pending);
+    /// then the pending FIFO, each claiming only `prompt + one headroom
+    /// page` (the lazy reservation; later pages come from growth between
+    /// steps). Head-of-line blocking on admission order is the fairness
     /// guarantee, and the pool's oversized-when-empty rule ensures even a
-    /// reservation larger than the whole budget eventually runs.
+    /// prompt larger than the whole budget eventually runs.
     fn promote_pending(&mut self) {
-        while self.active.len() < self.policy.max_active_seqs.max(1) {
-            let Some(front) = self.pending.front() else { break };
-            let max_new = match &front.kind {
-                RequestKind::Generate(s) => s.max_new_tokens,
-                RequestKind::Score => 0,
+        let max_active = self.policy.max_active_seqs.max(1);
+        while self.active.len() < max_active && !self.preempted.is_empty() {
+            let idx = (0..self.preempted.len())
+                .min_by_key(|&i| self.preempted[i].admit_seq)
+                .unwrap();
+            // replay needs the whole kept context plus one decode row
+            let capacity = self.preempted[idx].ctx.len() + 1;
+            let Some(kv) = self.pool.alloc_seq(&self.preempted[idx].req.tokens, capacity)
+            else {
+                break;
             };
-            let capacity = (front.tokens.len() + max_new).max(1);
-            let Some(kv) = self.pool.alloc(capacity) else { break };
-            let req = self.pending.pop_front().unwrap();
+            let p = self.preempted.remove(idx);
             self.active.push(ActiveSeq {
-                req,
+                req: p.req,
                 kv,
+                admit_seq: p.admit_seq,
+                ctx: p.ctx,
                 consumed: 0,
-                generated: Vec::new(),
+                generated: p.generated,
                 nll_sum: 0.0,
                 final_argmax: None,
-                first_step_at: None,
-                first_token_at: None,
+                first_step_at: p.first_step_at,
+                first_token_at: p.first_token_at,
                 done: None,
             });
         }
+        // strict admission order: nothing pending overtakes a preempted
+        // sequence still waiting for pages
+        if self.preempted.is_empty() {
+            while self.active.len() < max_active {
+                let Some(front) = self.pending.front() else { break };
+                let capacity = front.tokens.len() + 1;
+                let Some(kv) = self.pool.alloc_seq(&front.tokens, capacity) else { break };
+                let req = self.pending.pop_front().unwrap();
+                let admit_seq = self.admit_counter;
+                self.admit_counter += 1;
+                self.active.push(ActiveSeq {
+                    ctx: req.tokens.clone(),
+                    req,
+                    kv,
+                    admit_seq,
+                    consumed: 0,
+                    generated: Vec::new(),
+                    nll_sum: 0.0,
+                    final_argmax: None,
+                    first_step_at: None,
+                    first_token_at: None,
+                    done: None,
+                });
+            }
+        }
+        // keep `active` admission-ordered: assembly FIFO fairness and the
+        // youngest-victim rule both read positional order
+        self.active.sort_by_key(|a| a.admit_seq);
+    }
+
+    /// Preempt the active sequence at `idx`: free its pages, keep its
+    /// token state for replay. Emits nothing — already streamed tokens
+    /// stand, and the replay will not re-emit them.
+    fn preempt(&mut self, idx: usize, out: &mut StepOutcome) {
+        let a = self.active.remove(idx);
+        debug_assert!(a.done.is_none(), "terminal sequences retire, not preempt");
+        self.pool.free(a.kv);
+        self.stats.preemptions += 1;
+        out.preempted.push(a.req.id);
+        self.preempted.push(PreemptedSeq {
+            req: a.req,
+            admit_seq: a.admit_seq,
+            ctx: a.ctx,
+            generated: a.generated,
+            first_step_at: a.first_step_at,
+            first_token_at: a.first_token_at,
+        });
     }
 
     /// Remove sequences whose terminal state was set this step, free their
-    /// KV reservations, and send the terminal stream event.
+    /// pages, and send the terminal stream event.
     fn retire(&mut self, out: &mut StepOutcome) {
         let mut i = 0;
         while i < self.active.len() {
@@ -526,13 +761,15 @@ impl DecodeScheduler {
 }
 
 /// Stream a freshly generated token and apply the termination rules
-/// (stop-token, then length).
+/// (stop-token, then length). The token also extends the contiguous
+/// context, so a later preemption replay carries it.
 fn emit(a: &mut ActiveSeq, token: u32, out: &mut StepOutcome) {
     let index = a.generated.len();
     if a.first_token_at.is_none() {
         a.first_token_at = Some(Instant::now());
     }
     a.generated.push(token);
+    a.ctx.push(token);
     let spec = match &a.req.kind {
         RequestKind::Generate(s) => s,
         RequestKind::Score => unreachable!("decode scheduler only holds generations"),
@@ -659,6 +896,7 @@ mod tests {
         assert_eq!(stats.prefill_rows, 6);
         assert_eq!(stats.decode_rows, 7);
         assert_eq!(sched.occupancy().reserved_tokens, 0, "KV freed at retirement");
+        assert_eq!(sched.occupancy().freed_seqs, 1);
     }
 
     #[test]
@@ -755,13 +993,15 @@ mod tests {
         let emitted_before = sched.stats().generated_tokens;
         assert!(emitted_before >= 2);
         assert!(sched.occupancy().reserved_tokens > 0);
+        assert!(sched.occupancy().used_tokens > 0, "appended positions are visible");
         // …then cancel: the very next step must evict without executing
         handle.cancel.store(true, Ordering::Release);
         let out = native_step(&mut sched, &lm);
         assert_eq!(out.cancelled.len(), 1, "evicted between steps");
         assert_eq!(out.rows, 0, "no rows executed for the cancelled sequence");
         assert_eq!(sched.stats().generated_tokens, emitted_before, "no token after cancel");
-        assert_eq!(sched.occupancy().reserved_tokens, 0, "KV reservation reclaimed");
+        assert_eq!(sched.occupancy().reserved_tokens, 0, "KV pages reclaimed");
+        assert_eq!(sched.occupancy().used_tokens, 0);
         assert_eq!(sched.occupancy().seqs, 0);
         assert!(!sched.has_work());
         assert_eq!(sched.stats().cancelled, 1);
@@ -786,12 +1026,17 @@ mod tests {
     }
 
     #[test]
-    fn kv_budget_defers_admission_until_a_slot_frees() {
+    fn page_budget_defers_admission_until_pages_free() {
         let mut rng = Rng::new(0xD0_06);
         let cfg = tiny_cfg();
         let lm = MoeLm::random(&cfg, &mut rng);
-        // budget fits exactly one (4 + 2)-token reservation
-        let policy = DecodePolicy { kv_budget_tokens: 6, ..DecodePolicy::default() };
+        // two 4-token pages: one generation's lazy claim (prompt page +
+        // headroom page) fills the pool exactly
+        let policy = DecodePolicy {
+            kv_budget_tokens: 8,
+            kv_page_size: 4,
+            ..DecodePolicy::default()
+        };
         let mut sched = DecodeScheduler::new(&cfg, policy);
         let p1: Vec<u32> = (0..4).map(|_| rng.below(32) as u32).collect();
         let p2: Vec<u32> = (0..4).map(|_| rng.below(32) as u32).collect();
@@ -800,14 +1045,67 @@ mod tests {
         sched.admit(r1);
         sched.admit(r2);
         native_step(&mut sched, &lm);
-        assert_eq!(sched.active_seqs(), 1, "second generation waits on the KV budget");
+        assert_eq!(sched.active_seqs(), 1, "second generation waits on the page pool");
         assert_eq!(sched.pending_seqs(), 1);
         while sched.has_work() {
             native_step(&mut sched, &lm);
         }
         assert_eq!(drain(&h1).0, reference_generate(&lm, &p1, 2, &[]));
         assert_eq!(drain(&h2).0, reference_generate(&lm, &p2, 2, &[]));
-        assert_eq!(sched.occupancy().peak_tokens, 6, "reservations never overlapped");
+        assert_eq!(sched.occupancy().peak_tokens, 8, "page claims never overlapped");
+        assert_eq!(sched.occupancy().freed_seqs, 2, "every alloc met exactly one free");
+    }
+
+    #[test]
+    fn preemption_is_deterministic_and_replay_matches_reference() {
+        let mut rng = Rng::new(0xD0_08);
+        let cfg = tiny_cfg();
+        let lm = MoeLm::random(&cfg, &mut rng);
+        // 6 pages of 4: each generation lazily claims 3 pages for its
+        // 8-token prompt (+headroom) but needs 5 by the end — they cannot
+        // both stay resident, so the younger one must be preempted
+        let policy = DecodePolicy {
+            kv_budget_tokens: 24,
+            kv_page_size: 4,
+            ..DecodePolicy::default()
+        };
+        let pa: Vec<u32> = (0..8).map(|_| rng.below(32) as u32).collect();
+        let pb: Vec<u32> = (0..8).map(|_| rng.below(32) as u32).collect();
+        let want_a = reference_generate(&lm, &pa, 8, &[]);
+        let want_b = reference_generate(&lm, &pb, 8, &[]);
+        let run = || {
+            let mut sched = DecodeScheduler::new(&cfg, policy.clone());
+            let (ra, ha) = gen_request(pa.clone(), 8, vec![]);
+            let (rb, hb) = gen_request(pb.clone(), 8, vec![]);
+            let (id_a, id_b) = (ra.id, rb.id);
+            sched.admit(ra);
+            sched.admit(rb);
+            let mut preempt_log: Vec<(usize, u64)> = Vec::new();
+            let mut steps = 0;
+            while sched.has_work() {
+                let out = native_step(&mut sched, &lm);
+                for &id in &out.preempted {
+                    preempt_log.push((steps, id));
+                }
+                steps += 1;
+                assert!(steps < 200, "runaway decode loop");
+            }
+            assert_eq!(drain(&ha).0, want_a, "older generation unaffected");
+            assert_eq!(drain(&hb).0, want_b, "preempted generation replays to the same tokens");
+            assert!(sched.stats().preemptions >= 1, "the pool must have run dry");
+            assert!(
+                preempt_log.iter().all(|&(_, id)| id == id_b && id != id_a),
+                "the victim is always the youngest sequence"
+            );
+            assert_eq!(sched.occupancy().reserved_tokens, 0);
+            // normalize ids out so two runs (fresh request ids) compare
+            let steps_only: Vec<usize> = preempt_log.iter().map(|&(s, _)| s).collect();
+            (steps_only, sched.stats())
+        };
+        let (log1, stats1) = run();
+        let (log2, stats2) = run();
+        assert_eq!(log1, log2, "preemption schedule is deterministic");
+        assert_eq!(stats1, stats2, "decode counters are deterministic");
     }
 
     #[test]
@@ -848,5 +1146,35 @@ mod tests {
         assert_eq!(trim_to_tiles(2, 1), 1, "cannot align: keep progress");
         // decode rows + prefill chunk: 3 decode rows, want 9 → total 12
         assert_eq!(trim_to_tiles(3, 9), 9);
+    }
+
+    #[test]
+    fn quantized_pages_trade_exactness_for_bits() {
+        let mut rng = Rng::new(0xD0_09);
+        let cfg = tiny_cfg();
+        let lm = MoeLm::random(&cfg, &mut rng);
+        let prompt: Vec<u32> = (0..8).map(|_| rng.below(32) as u32).collect();
+        let policy = DecodePolicy {
+            kv_page_size: 4,
+            kv_quant: Some(KvQuantConfig::uniform(cfg.layers, 8, -1)),
+            ..DecodePolicy::default()
+        };
+        let mut sched = DecodeScheduler::new(&cfg, policy);
+        let (req, handle) = gen_request(prompt.clone(), 6, vec![]);
+        sched.admit(req);
+        let mut saw_quant = false;
+        while sched.has_work() {
+            native_step(&mut sched, &lm);
+            let occ = sched.occupancy();
+            if occ.avg_kv_bits < 32.0 {
+                saw_quant = true;
+            }
+        }
+        assert!(saw_quant, "sealed pages must report < 32 avg KV bits");
+        let (tokens, reason) = drain(&handle);
+        // int8 group-quantized prefix pages: generation completes with the
+        // full token count (the trade is accuracy, not progress)
+        assert_eq!(tokens.len(), 6);
+        assert_eq!(reason, Some(FinishReason::Length));
     }
 }

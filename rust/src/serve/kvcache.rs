@@ -1,57 +1,273 @@
-//! Per-sequence KV cache + the replica-local budgeted slot pool
-//! (DESIGN.md §Decode-Loop).
+//! Paged per-sequence KV cache + the replica-local page pool
+//! (DESIGN.md §KV-Paging, §Decode-Loop).
 //!
 //! [`SeqKv`] is the incremental-attention state of one sequence: for every
 //! transformer layer, the post-RoPE key rows and raw value rows of every
-//! position processed so far. [`crate::moe::MoeLm::forward_step`] appends
-//! the new positions' K/V and attends over the cached prefix, which is what
-//! makes a decode step O(1) model passes instead of re-forwarding the whole
-//! sequence — and, because every op on the step path is row-independent,
-//! bit-identical to the whole-sequence forward.
+//! position processed so far. Storage is a *page table* rather than one
+//! contiguous buffer: fixed-size token pages ([`KV_PAGE_SIZE`] positions,
+//! tile-aligned with [`crate::runtime::TILE_MS`]), each holding all layers'
+//! K/V for its position range. [`crate::moe::MoeLm::forward_step`] appends
+//! the new positions' K/V and attends over the cached prefix by gathering
+//! through the page table in position order — the arithmetic (score order,
+//! softmax shape, accumulation order) is untouched, so fp32-mode paging is
+//! bit-identical to the pre-paging contiguous cache.
 //!
-//! [`KvCache`] is the pool a replica's decode scheduler allocates from: a
-//! token budget (not a slot count — sequences reserve `prompt +
-//! max_new_tokens` capacity up front, so admission can never strand a
-//! generation mid-decode without cache room), occupancy accounting for the
-//! metrics, and explicit [`free`](KvCache::free) so a cancelled or finished
-//! generation returns its reservation between decode steps.
+//! [`KvCache`] is the pool a replica's decode scheduler allocates from.
+//! Three co-designed mechanisms turn the KV token budget into many more
+//! concurrent generations than worst-case contiguous reservation allowed:
+//!
+//! * **Lazy allocation** — admission claims only the prompt's pages plus
+//!   one decode-headroom page; later pages are claimed between steps
+//!   ([`KvCache::grow`]). When the pool runs dry the scheduler preempts
+//!   the *youngest* active generation (deterministic, no deadlock — the
+//!   oldest sequence can always force progress).
+//! * **Prefix sharing** — sealed pages that cover whole prompt blocks are
+//!   published under a content hash of the token prefix (K/V at position
+//!   `p` is a pure function of tokens `0..=p`, so a full page across all
+//!   layers is a pure function of its token prefix). A later sequence
+//!   whose prompt starts with the same blocks holds the same physical
+//!   pages ([`std::sync::Arc`] refcounted); it diverges onto private pages
+//!   at the first non-matching block (copy-on-divergence). The share map
+//!   is keyed per plan generation — a hot-swap invalidates it, because
+//!   K/V computed under the old plan no longer match fresh prefills.
+//! * **Page quantization** — pages the current step appends to stay fp32;
+//!   sealed (full) pages may be group-quantized in place with the
+//!   activation-quant machinery ([`crate::quant::uniform`]), per layer
+//!   from a [`KvQuantConfig`] derived from calibration sensitivity. The
+//!   fp32 default keeps decode bit-identical; quantized-page mode is a
+//!   measured accuracy/memory trade reported as average KV bits.
 //!
 //! Plain data throughout: no engine, no PJRT — unit-testable anywhere.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Weak};
+use std::time::Instant;
+
+use crate::quant::scheme::GroupSize;
+use crate::quant::uniform::{fake_quant_slice, qparams, GroupSpec};
 use crate::tensor::Matrix;
 
-/// One layer's cached keys/values: `[capacity, hidden]` row-major, filled
-/// to `SeqKv::len` rows. Keys are stored *after* RoPE so a decode step
-/// never re-rotates the prefix.
-#[derive(Clone, Debug)]
-pub struct LayerKv {
-    pub k: Matrix,
-    pub v: Matrix,
+/// Default page size in token positions. 16 sits on the exported tile grid
+/// (`TILE_MS = [4, 16, 64, 256]`): one full page of decode rows fills a
+/// 16-tile exactly, and prompt chunks cut against the tile grid land on
+/// page boundaries more often than not.
+pub const KV_PAGE_SIZE: usize = 16;
+
+/// Per-layer quantization scheme for sealed KV pages: bit width + group
+/// size along the hidden axis (paper convention: −1 ⇒ one group per row).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvPageScheme {
+    pub bits: u8,
+    pub group: GroupSize,
 }
 
-/// The KV state of one sequence across all transformer layers.
+/// Per-layer sealed-page quantization plan (`schemes[l]` = transformer
+/// layer `l`). Built uniformly or from calibration sensitivity: layers the
+/// calibration pass found sensitive keep more KV bits, mirroring how the
+/// MCKP weight plan spends its bit budget.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvQuantConfig {
+    pub schemes: Vec<KvPageScheme>,
+}
+
+impl KvQuantConfig {
+    /// The same scheme for every transformer layer.
+    pub fn uniform(layers: usize, bits: u8, group: GroupSize) -> KvQuantConfig {
+        KvQuantConfig { schemes: vec![KvPageScheme { bits, group }; layers] }
+    }
+
+    /// Select per layer from calibration sensitivity scores (one per
+    /// transformer layer, higher = more damage when quantized): layers at
+    /// or above the median score get `hi`, the rest `lo` — bits go where
+    /// the calibration pass says they matter.
+    pub fn from_sensitivity(
+        scores: &[f64],
+        lo: KvPageScheme,
+        hi: KvPageScheme,
+    ) -> KvQuantConfig {
+        assert!(!scores.is_empty());
+        let mut sorted: Vec<f64> = scores.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        KvQuantConfig {
+            schemes: scores
+                .iter()
+                .map(|&s| if s >= median { hi } else { lo })
+                .collect(),
+        }
+    }
+
+    /// Mean stored bits per KV value under this plan.
+    pub fn avg_bits(&self) -> f64 {
+        if self.schemes.is_empty() {
+            return 32.0;
+        }
+        self.schemes.iter().map(|s| s.bits as f64).sum::<f64>() / self.schemes.len() as f64
+    }
+}
+
+/// Storage mode of one page.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum PageMode {
+    /// Raw f32 rows — the only mode appends target.
+    Fp32,
+    /// Sealed and fake-quantized in place (`avg_bits` = mean bits/value
+    /// over layers): reads stay `&[f32]`, accounting reports the bits.
+    Quantized { avg_bits: f64 },
+}
+
+/// One physical page: all layers' K/V for `size` consecutive positions,
+/// row-major `[layer][slot][hidden]`. Shared between sequences via `Arc`
+/// when it covers a common prompt prefix.
+#[derive(Clone, Debug)]
+pub struct PageData {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Committed positions (uniform across layers — bumped at
+    /// [`SeqKv::advance`], so a page is *sealed* once `filled == size`).
+    filled: usize,
+    mode: PageMode,
+    n_layers: usize,
+    hidden: usize,
+    size: usize,
+}
+
+impl PageData {
+    fn new(n_layers: usize, hidden: usize, size: usize) -> PageData {
+        PageData {
+            k: vec![0.0; n_layers * size * hidden],
+            v: vec![0.0; n_layers * size * hidden],
+            filled: 0,
+            mode: PageMode::Fp32,
+            n_layers,
+            hidden,
+            size,
+        }
+    }
+
+    #[inline]
+    fn row_off(&self, layer: usize, slot: usize) -> usize {
+        (layer * self.size + slot) * self.hidden
+    }
+
+    #[inline]
+    fn k_row(&self, layer: usize, slot: usize) -> &[f32] {
+        let o = self.row_off(layer, slot);
+        &self.k[o..o + self.hidden]
+    }
+
+    #[inline]
+    fn v_row(&self, layer: usize, slot: usize) -> &[f32] {
+        let o = self.row_off(layer, slot);
+        &self.v[o..o + self.hidden]
+    }
+
+    /// Fake-quantize every layer's K/V rows in place per `cfg` (group-wise
+    /// asymmetric min-max, the activation convention). Idempotent via the
+    /// mode flag.
+    fn quantize(&mut self, cfg: &KvQuantConfig) {
+        if matches!(self.mode, PageMode::Quantized { .. }) {
+            return;
+        }
+        debug_assert_eq!(cfg.schemes.len(), self.n_layers);
+        for (l, s) in cfg.schemes.iter().enumerate() {
+            let spec = GroupSpec::new(self.hidden, s.group);
+            for slot in 0..self.size {
+                let o = self.row_off(l, slot);
+                for g in 0..spec.num_groups() {
+                    let r = o + g * spec.group..o + (g + 1) * spec.group;
+                    let pk = qparams(&self.k[r.clone()], s.bits, false);
+                    fake_quant_slice(&mut self.k[r.clone()], &pk);
+                    let pv = qparams(&self.v[r.clone()], s.bits, false);
+                    fake_quant_slice(&mut self.v[r], &pv);
+                }
+            }
+        }
+        self.mode = PageMode::Quantized { avg_bits: cfg.avg_bits() };
+    }
+
+    fn avg_bits(&self) -> f64 {
+        match self.mode {
+            PageMode::Fp32 => 32.0,
+            PageMode::Quantized { avg_bits } => avg_bits,
+        }
+    }
+}
+
+/// FNV-1a 64 over a token block, chained from the previous block's hash —
+/// the content key of a prompt-prefix page. Chaining makes the key a
+/// function of the *whole* prefix `tokens[0..(b+1)*page]`, which is the
+/// soundness condition for sharing (K/V at position `p` depends on every
+/// token `0..=p`).
+fn chain_hash(prev: u64, tokens: &[u32]) -> u64 {
+    let mut h = prev ^ 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// The KV state of one sequence across all transformer layers: a page
+/// table of refcounted pages. The read/append API is unchanged from the
+/// contiguous cache, so the decode step path stays bit-identical in fp32
+/// mode.
 #[derive(Clone, Debug)]
 pub struct SeqKv {
-    layers: Vec<LayerKv>,
+    pages: Vec<Arc<PageData>>,
     /// Positions cached so far (uniform across layers between steps).
     len: usize,
-    /// Reserved rows per layer.
+    /// Position allowance: standalone caches keep the requested capacity
+    /// exactly (strict overflow panics); pool-backed caches track
+    /// `pages.len() * page_size` and grow between steps.
     capacity: usize,
+    page_size: usize,
+    n_layers: usize,
+    hidden: usize,
+    /// Positions pre-populated by shared prefix pages at allocation —
+    /// appends below this mark skip the write (the content is already
+    /// there, and writing would break the physical sharing).
+    shared_prefix: usize,
+    /// Chain hashes of the prompt's full blocks (index = page index) —
+    /// what [`KvCache::seal`] registers in the share map.
+    block_keys: Vec<u64>,
+    /// Pages already processed by [`KvCache::seal`].
+    sealed_pages: usize,
 }
 
 impl SeqKv {
-    /// Reserve a cache of `capacity` positions for a model with `layers`
-    /// transformer layers and `hidden` channels.
+    /// Reserve a standalone cache of `capacity` positions (eager pages, no
+    /// pool accounting) for a model with `layers` transformer layers and
+    /// `hidden` channels — the direct-use constructor tests and the
+    /// engine-less decode paths rely on.
     pub fn new(layers: usize, hidden: usize, capacity: usize) -> SeqKv {
+        SeqKv::with_page_size(layers, hidden, capacity, KV_PAGE_SIZE)
+    }
+
+    /// [`new`](Self::new) with an explicit page size (tests exercise tiny
+    /// pages to force many page-boundary crossings).
+    pub fn with_page_size(
+        layers: usize,
+        hidden: usize,
+        capacity: usize,
+        page_size: usize,
+    ) -> SeqKv {
+        assert!(layers >= 1 && hidden >= 1 && page_size >= 1);
+        let n_pages = capacity.div_ceil(page_size);
         SeqKv {
-            layers: (0..layers)
-                .map(|_| LayerKv {
-                    k: Matrix::zeros(capacity, hidden),
-                    v: Matrix::zeros(capacity, hidden),
-                })
+            pages: (0..n_pages)
+                .map(|_| Arc::new(PageData::new(layers, hidden, page_size)))
                 .collect(),
             len: 0,
             capacity,
+            page_size,
+            n_layers: layers,
+            hidden,
+            shared_prefix: 0,
+            block_keys: Vec::new(),
+            sealed_pages: 0,
         }
     }
 
@@ -69,16 +285,33 @@ impl SeqKv {
     }
 
     pub fn n_layers(&self) -> usize {
-        self.layers.len()
+        self.n_layers
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Pages currently in the table.
+    pub fn pages_held(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Positions pre-populated by shared prefix pages at allocation.
+    pub fn shared_prefix(&self) -> usize {
+        self.shared_prefix
     }
 
     /// Append `k_new`/`v_new` (`[s, hidden]`, post-RoPE keys) to `layer`'s
-    /// cache. Every layer of a step must append the same number of rows;
-    /// [`advance`](Self::advance) commits the shared length afterwards.
+    /// cache at positions `len..len + s`. Every layer of a step must
+    /// append the same number of rows; [`advance`](Self::advance) commits
+    /// the shared length afterwards. Rows that land on positions a shared
+    /// prefix page already holds are *skipped* — the content is a pure
+    /// function of the token prefix, so the freshly computed rows are the
+    /// rows already there (bit-identical in fp32 mode, debug-asserted).
     pub fn append(&mut self, layer: usize, k_new: &Matrix, v_new: &Matrix) {
         assert_eq!(k_new.rows, v_new.rows);
-        let l = &mut self.layers[layer];
-        assert_eq!(k_new.cols, l.k.cols, "hidden mismatch");
+        assert_eq!(k_new.cols, self.hidden, "hidden mismatch");
         assert!(
             self.len + k_new.rows <= self.capacity,
             "kv overflow: {} + {} > {}",
@@ -86,120 +319,412 @@ impl SeqKv {
             k_new.rows,
             self.capacity
         );
-        let h = l.k.cols;
-        l.k.data[self.len * h..(self.len + k_new.rows) * h].copy_from_slice(&k_new.data);
-        l.v.data[self.len * h..(self.len + v_new.rows) * h].copy_from_slice(&v_new.data);
+        let (h, ps) = (self.hidden, self.page_size);
+        for r in 0..k_new.rows {
+            let pos = self.len + r;
+            let (pi, slot) = (pos / ps, pos % ps);
+            if self.pages[pi].filled > slot {
+                // pre-populated by a shared prefix page: skip the write so
+                // the physical copy stays shared
+                #[cfg(debug_assertions)]
+                if matches!(self.pages[pi].mode, PageMode::Fp32) {
+                    let have = self.pages[pi].k_row(layer, slot);
+                    debug_assert!(
+                        have.iter()
+                            .zip(k_new.row(r))
+                            .all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "shared prefix page diverged from recomputed keys"
+                    );
+                }
+                continue;
+            }
+            // private page in practice (only sealed full pages are ever
+            // shared); make_mut is the copy-on-write backstop
+            let page = Arc::make_mut(&mut self.pages[pi]);
+            let o = page.row_off(layer, slot);
+            page.k[o..o + h].copy_from_slice(k_new.row(r));
+            page.v[o..o + h].copy_from_slice(v_new.row(r));
+        }
     }
 
     /// Commit `s` appended positions after every layer has appended its
-    /// rows for the step.
+    /// rows for the step, bumping the fill level of the pages covered.
     pub fn advance(&mut self, s: usize) {
         assert!(self.len + s <= self.capacity);
+        let from = self.len / self.page_size;
         self.len += s;
+        for pi in from..self.len.div_ceil(self.page_size) {
+            let fill = (self.len - pi * self.page_size).min(self.page_size);
+            if self.pages[pi].filled < fill {
+                Arc::make_mut(&mut self.pages[pi]).filled = fill;
+            }
+        }
     }
 
-    /// Cached key rows of `layer` (`[len + pending, hidden]` view,
-    /// `pending` = rows appended this step but not yet advanced — the
-    /// attention of the appending step reads them through `upto`).
-    pub fn keys(&self, layer: usize, upto: usize) -> &[f32] {
-        let l = &self.layers[layer];
-        &l.k.data[..upto * l.k.cols]
-    }
-
-    pub fn values(&self, layer: usize, upto: usize) -> &[f32] {
-        let l = &self.layers[layer];
-        &l.v.data[..upto * l.v.cols]
-    }
-
-    /// One cached key row.
+    /// One cached key row, gathered through the page table.
+    #[inline]
     pub fn key_row(&self, layer: usize, pos: usize) -> &[f32] {
-        self.layers[layer].k.row(pos)
+        self.pages[pos / self.page_size].k_row(layer, pos % self.page_size)
     }
 
+    #[inline]
     pub fn value_row(&self, layer: usize, pos: usize) -> &[f32] {
-        self.layers[layer].v.row(pos)
+        self.pages[pos / self.page_size].v_row(layer, pos % self.page_size)
+    }
+
+    /// The contiguous run of key rows starting at `pos` within its page,
+    /// clipped to `upto` (exclusive): `(rows, n)` with `n ≥ 1` row of
+    /// `hidden` floats each. The attention gather walks the cached prefix
+    /// page-run-by-page-run in position order — same rows, same order,
+    /// fewer page lookups than a per-position gather.
+    #[inline]
+    pub fn key_run(&self, layer: usize, pos: usize, upto: usize) -> (&[f32], usize) {
+        let (pi, slot) = (pos / self.page_size, pos % self.page_size);
+        let n = (upto - pos).min(self.page_size - slot);
+        let page = &self.pages[pi];
+        let o = page.row_off(layer, slot);
+        (&page.k[o..o + n * self.hidden], n)
+    }
+
+    #[inline]
+    pub fn value_run(&self, layer: usize, pos: usize, upto: usize) -> (&[f32], usize) {
+        let (pi, slot) = (pos / self.page_size, pos % self.page_size);
+        let n = (upto - pos).min(self.page_size - slot);
+        let page = &self.pages[pi];
+        let o = page.row_off(layer, slot);
+        (&page.v[o..o + n * self.hidden], n)
     }
 }
 
-/// Occupancy snapshot of a [`KvCache`] pool.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+/// Occupancy snapshot of a [`KvCache`] pool. `reserved_tokens` counts
+/// *physical* page tokens (shared pages once), `used_tokens` the positions
+/// actually appended by live sequences — the gap between the two is the
+/// laziness win, and `shared_tokens` the extra logical tokens served by
+/// shared physical pages (the prefix-reuse win).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct KvOccupancy {
-    /// Tokens reserved by live sequences.
+    /// Physical tokens held by live pages.
     pub reserved_tokens: usize,
     /// Reservation budget of the pool.
     pub budget_tokens: usize,
-    /// Live sequences holding a reservation.
+    /// Live sequences holding pages.
     pub seqs: usize,
     /// High-water mark of `reserved_tokens` over the pool's lifetime.
     pub peak_tokens: usize,
+    /// Positions actually appended by live sequences (real fill; overlaid
+    /// by the decode scheduler, which owns the sequence lengths).
+    pub used_tokens: usize,
+    /// Extra logical tokens served by shared physical pages.
+    pub shared_tokens: usize,
+    /// Sequences freed over the pool's lifetime (exact-accounting check:
+    /// every alloc is matched by exactly one free).
+    pub freed_seqs: usize,
+    /// Mean stored bits per live KV value (32.0 = everything fp32).
+    pub avg_kv_bits: f64,
 }
 
 impl KvOccupancy {
-    /// Reserved fraction of the budget, in `[0, 1]`.
+    /// Reserved fraction of the budget, in `[0, 1]` (can exceed 1 while a
+    /// single oversized generation runs on the oversized-when-alone rule).
     pub fn ratio(&self) -> f64 {
         if self.budget_tokens == 0 {
             return 0.0;
         }
         self.reserved_tokens as f64 / self.budget_tokens as f64
     }
+
+    /// Used fraction of the budget, in `[0, 1]` — the real fill.
+    pub fn used_ratio(&self) -> f64 {
+        if self.budget_tokens == 0 {
+            return 0.0;
+        }
+        self.used_tokens as f64 / self.budget_tokens as f64
+    }
 }
 
-/// Replica-local KV reservation pool. Token-budgeted rather than
-/// slot-counted: a sequence reserves its worst-case length (prompt +
-/// max_new_tokens) at admission, so a generation admitted to the decode
-/// loop can always run to completion — backpressure happens *before*
-/// prefill, never mid-decode.
+/// EWMA step for the page-release rate (admission backpressure derives
+/// `retry_after` from it).
+const RELEASE_ALPHA: f64 = 0.3;
+
+/// Replica-local paged KV pool: token-budgeted in whole pages, with lazy
+/// growth, prefix sharing, and sealed-page quantization (module docs).
 pub struct KvCache {
     n_layers: usize,
     hidden: usize,
+    page_size: usize,
     budget_tokens: usize,
-    reserved_tokens: usize,
+    budget_pages: usize,
+    physical_pages: usize,
+    peak_pages: usize,
     seqs: usize,
-    peak_tokens: usize,
+    freed_seqs: usize,
+    /// Extra refs outstanding on shared pages (Σ over pages of refs − 1).
+    shared_refs: usize,
+    quant: Option<KvQuantConfig>,
+    quant_pages: usize,
+    quant_bits_sum: f64,
+    /// Content hash → sealed page, per share epoch. `Weak`: the map never
+    /// keeps a page alive — physical accounting stays exact, and a prefix
+    /// is reusable exactly while some live sequence still holds it.
+    share: HashMap<u64, Weak<PageData>>,
+    /// Plan generation the share map is valid for — K/V computed under an
+    /// old plan must not seed prefills under a new one.
+    epoch: u64,
+    /// EWMA of page-release throughput, tokens/second (0 until the first
+    /// free) — the admission front door turns pool-full rejections into
+    /// `retry_after` hints with it.
+    release_tps: f64,
+    last_free_at: Option<Instant>,
 }
 
 impl KvCache {
+    /// Pool with the default page size and no sealed-page quantization —
+    /// fp32 paging, bit-identical to the pre-paging decode.
     pub fn new(n_layers: usize, hidden: usize, budget_tokens: usize) -> KvCache {
-        assert!(n_layers >= 1 && hidden >= 1 && budget_tokens >= 1);
+        KvCache::with_config(n_layers, hidden, budget_tokens, KV_PAGE_SIZE, None)
+    }
+
+    pub fn with_config(
+        n_layers: usize,
+        hidden: usize,
+        budget_tokens: usize,
+        page_size: usize,
+        quant: Option<KvQuantConfig>,
+    ) -> KvCache {
+        assert!(n_layers >= 1 && hidden >= 1 && budget_tokens >= 1 && page_size >= 1);
+        if let Some(q) = &quant {
+            assert_eq!(q.schemes.len(), n_layers, "one KV scheme per transformer layer");
+        }
         KvCache {
             n_layers,
             hidden,
+            page_size,
             budget_tokens,
-            reserved_tokens: 0,
+            budget_pages: (budget_tokens / page_size).max(1),
+            physical_pages: 0,
+            peak_pages: 0,
             seqs: 0,
-            peak_tokens: 0,
+            freed_seqs: 0,
+            shared_refs: 0,
+            quant,
+            quant_pages: 0,
+            quant_bits_sum: 0.0,
+            share: HashMap::new(),
+            epoch: 0,
+            release_tps: 0.0,
+            last_free_at: None,
         }
     }
 
-    /// Try to reserve a `capacity`-position cache. `None` when the budget
-    /// cannot hold it (the caller keeps the sequence pending). A single
-    /// over-budget sequence is still granted when the pool is empty —
-    /// an oversized generation must run eventually, exactly like the
-    /// batcher's oversized-single-request rule.
-    pub fn alloc(&mut self, capacity: usize) -> Option<SeqKv> {
-        assert!(capacity >= 1);
-        if self.reserved_tokens + capacity > self.budget_tokens && self.seqs > 0 {
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Unclaimed pages under the budget.
+    pub fn free_pages(&self) -> usize {
+        self.budget_pages.saturating_sub(self.physical_pages)
+    }
+
+    /// Unclaimed tokens under the budget.
+    pub fn free_tokens(&self) -> usize {
+        self.free_pages() * self.page_size
+    }
+
+    /// EWMA page-release rate, tokens/second (0 until the first free).
+    pub fn release_tps(&self) -> f64 {
+        self.release_tps
+    }
+
+    /// Invalidate the prefix-share map when the serving plan generation
+    /// moves (hot-swap): pages computed under the old plan are no longer
+    /// bit-compatible with fresh prefills.
+    pub fn set_share_epoch(&mut self, epoch: u64) {
+        if epoch != self.epoch {
+            self.epoch = epoch;
+            self.share.clear();
+        }
+    }
+
+    fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_size).max(1)
+    }
+
+    fn claim_pages(&mut self, n: usize) {
+        self.physical_pages += n;
+        self.peak_pages = self.peak_pages.max(self.physical_pages);
+    }
+
+    /// Lazily allocate a sequence cache covering `capacity` positions
+    /// (prompt + decode headroom — NOT the worst case; later pages come
+    /// from [`grow`](Self::grow)). Full prompt blocks whose chained
+    /// content hash matches a sealed page in the share map reuse that
+    /// physical page. `None` when the fresh pages needed don't fit the
+    /// budget (the caller keeps the sequence pending) — unless the pool is
+    /// empty, where an oversized claim is still granted so every
+    /// generation eventually runs (the batcher's oversized-single rule).
+    pub fn alloc_seq(&mut self, prompt: &[u32], capacity: usize) -> Option<SeqKv> {
+        let capacity = capacity.max(1);
+        let total_pages = self.pages_for(capacity);
+        // chained hashes of the prompt's full blocks
+        let full_blocks = (prompt.len() / self.page_size).min(total_pages);
+        let mut block_keys = Vec::with_capacity(full_blocks);
+        let mut h = self.epoch ^ 0x9e37_79b9_7f4a_7c15;
+        for b in 0..full_blocks {
+            h = chain_hash(h, &prompt[b * self.page_size..(b + 1) * self.page_size]);
+            block_keys.push(h);
+        }
+        // contiguous shared prefix: stop at the first miss
+        let mut shared: Vec<Arc<PageData>> = Vec::new();
+        for key in &block_keys {
+            let Some(page) = self.share.get(key).and_then(Weak::upgrade) else { break };
+            if page.filled < self.page_size {
+                break;
+            }
+            shared.push(page);
+        }
+        let fresh = total_pages - shared.len();
+        if fresh > self.free_pages() && self.seqs > 0 {
             return None;
         }
-        self.reserved_tokens += capacity;
+        self.claim_pages(fresh);
+        self.shared_refs += shared.len();
         self.seqs += 1;
-        self.peak_tokens = self.peak_tokens.max(self.reserved_tokens);
-        Some(SeqKv::new(self.n_layers, self.hidden, capacity))
+        let shared_prefix = shared.len() * self.page_size;
+        let mut pages = shared;
+        pages.extend(
+            (0..fresh).map(|_| Arc::new(PageData::new(self.n_layers, self.hidden, self.page_size))),
+        );
+        Some(SeqKv {
+            pages,
+            len: 0,
+            capacity: total_pages * self.page_size,
+            page_size: self.page_size,
+            n_layers: self.n_layers,
+            hidden: self.hidden,
+            shared_prefix,
+            block_keys,
+            sealed_pages: 0,
+        })
     }
 
-    /// Return a sequence's reservation to the pool (finished, cancelled or
-    /// failed generations — the step scheduler calls this between steps).
+    /// Grow `kv`'s page table until it covers `positions`. `false` when
+    /// the budget cannot hold the next page (the scheduler preempts the
+    /// youngest sequence and retries, or defers the rows).
+    pub fn grow(&mut self, kv: &mut SeqKv, positions: usize) -> bool {
+        while kv.capacity < positions {
+            if self.free_pages() == 0 {
+                return false;
+            }
+            self.claim_pages(1);
+            kv.pages
+                .push(Arc::new(PageData::new(self.n_layers, self.hidden, self.page_size)));
+            kv.capacity = kv.pages.len() * self.page_size;
+        }
+        true
+    }
+
+    /// [`grow`](Self::grow) past the budget — the no-deadlock escape hatch
+    /// for the *oldest* sequence once no younger victim remains. Bounded:
+    /// at most one sequence can be over budget, exactly like the
+    /// oversized-when-empty admission rule.
+    pub fn grow_force(&mut self, kv: &mut SeqKv, positions: usize) {
+        while kv.capacity < positions {
+            self.claim_pages(1);
+            kv.pages
+                .push(Arc::new(PageData::new(self.n_layers, self.hidden, self.page_size)));
+            kv.capacity = kv.pages.len() * self.page_size;
+        }
+    }
+
+    /// Seal `kv`'s newly completed pages (between steps): quantize them in
+    /// place when a [`KvQuantConfig`] is set (pages still being appended
+    /// to stay fp32), and publish prompt-block pages in the share map so
+    /// later identical prompts hold the same physical copy.
+    pub fn seal(&mut self, kv: &mut SeqKv) {
+        let complete = kv.len / self.page_size;
+        for pi in kv.sealed_pages..complete {
+            if pi * self.page_size >= kv.shared_prefix {
+                // freshly filled by this sequence (shared-prefix pages were
+                // sealed by their origin sequence)
+                if let Some(cfg) = &self.quant {
+                    if let Some(page) = Arc::get_mut(&mut kv.pages[pi]) {
+                        page.quantize(cfg);
+                        self.quant_pages += 1;
+                        self.quant_bits_sum += cfg.avg_bits();
+                    }
+                }
+                if let Some(&key) = kv.block_keys.get(pi) {
+                    self.share.insert(key, Arc::downgrade(&kv.pages[pi]));
+                }
+            }
+            kv.sealed_pages = pi + 1;
+        }
+    }
+
+    /// Return a sequence's pages to the pool (finished, cancelled, failed
+    /// or preempted generations — the step scheduler calls this between
+    /// steps). Accounting is exact: a physical page is released only when
+    /// its last holder drops it; dropping an extra ref to a shared page
+    /// releases a share, not a page. Underflow debug-asserts (the
+    /// double-free class `saturating_sub` used to mask).
     pub fn free(&mut self, kv: SeqKv) {
-        self.reserved_tokens = self.reserved_tokens.saturating_sub(kv.capacity());
+        let mut released = 0usize;
+        for page in &kv.pages {
+            if Arc::strong_count(page) == 1 {
+                released += 1;
+                if let PageMode::Quantized { avg_bits } = page.mode {
+                    debug_assert!(self.quant_pages > 0, "quantized-page accounting underflow");
+                    self.quant_pages = self.quant_pages.saturating_sub(1);
+                    self.quant_bits_sum = (self.quant_bits_sum - avg_bits).max(0.0);
+                }
+            } else {
+                debug_assert!(self.shared_refs > 0, "shared-ref accounting underflow");
+                self.shared_refs = self.shared_refs.saturating_sub(1);
+            }
+        }
+        debug_assert!(
+            self.physical_pages >= released,
+            "page accounting underflow: freeing {released} of {}",
+            self.physical_pages
+        );
+        self.physical_pages = self.physical_pages.saturating_sub(released);
+        debug_assert!(self.seqs > 0, "freeing a sequence the pool never allocated");
         self.seqs = self.seqs.saturating_sub(1);
+        self.freed_seqs += 1;
+        // release-rate EWMA (tokens/second) for admission retry hints
+        let now = Instant::now();
+        if let Some(t0) = self.last_free_at {
+            let dt = now.duration_since(t0).as_secs_f64().max(1e-3);
+            let sample = (released * self.page_size) as f64 / dt;
+            self.release_tps = if self.release_tps == 0.0 {
+                sample
+            } else {
+                (1.0 - RELEASE_ALPHA) * self.release_tps + RELEASE_ALPHA * sample
+            };
+        }
+        self.last_free_at = Some(now);
+        drop(kv);
+    }
+
+    /// Mean stored bits per live KV value (32.0 when empty or all-fp32).
+    pub fn avg_kv_bits(&self) -> f64 {
+        if self.physical_pages == 0 {
+            return 32.0;
+        }
+        let fp32 = (self.physical_pages - self.quant_pages.min(self.physical_pages)) as f64;
+        (self.quant_bits_sum + 32.0 * fp32) / self.physical_pages as f64
     }
 
     pub fn occupancy(&self) -> KvOccupancy {
         KvOccupancy {
-            reserved_tokens: self.reserved_tokens,
+            reserved_tokens: self.physical_pages * self.page_size,
             budget_tokens: self.budget_tokens,
             seqs: self.seqs,
-            peak_tokens: self.peak_tokens,
+            peak_tokens: self.peak_pages * self.page_size,
+            used_tokens: 0, // overlaid by the scheduler (owner of seq lengths)
+            shared_tokens: self.shared_refs * self.page_size,
+            freed_seqs: self.freed_seqs,
+            avg_kv_bits: self.avg_kv_bits(),
         }
     }
 }
@@ -219,8 +744,8 @@ mod tests {
         let v0 = Matrix::randn(3, 8, 1.0, &mut rng);
         kv.append(0, &k0, &v0);
         kv.append(1, &k0, &v0);
-        // before advance the appended rows are visible through `upto`
-        assert_eq!(kv.keys(0, 3), &k0.data[..]);
+        // before advance the appended rows are visible per position
+        assert_eq!(kv.key_row(0, 2), k0.row(2));
         kv.advance(3);
         assert_eq!(kv.len(), 3);
         assert_eq!(kv.key_row(0, 1), k0.row(1));
@@ -232,7 +757,33 @@ mod tests {
         kv.advance(1);
         assert_eq!(kv.len(), 4);
         assert_eq!(kv.key_row(0, 3), k1.row(0));
-        assert_eq!(kv.keys(0, 4).len(), 4 * 8);
+    }
+
+    #[test]
+    fn seqkv_paged_rows_cross_page_boundaries() {
+        // page size 2, 7 positions → 4 pages; every row lands in the right
+        // page slot and runs clip at page boundaries
+        let mut rng = Rng::new(0xCAFF);
+        let mut kv = SeqKv::with_page_size(1, 4, 7, 2);
+        assert_eq!(kv.pages_held(), 4);
+        let k = Matrix::randn(7, 4, 1.0, &mut rng);
+        let v = Matrix::randn(7, 4, 1.0, &mut rng);
+        kv.append(0, &k, &v);
+        kv.advance(7);
+        for pos in 0..7 {
+            assert_eq!(kv.key_row(0, pos), k.row(pos), "pos {pos}");
+            assert_eq!(kv.value_row(0, pos), v.row(pos), "pos {pos}");
+        }
+        // key_run walks page runs in position order, covering every row
+        let mut pos = 0usize;
+        let mut gathered: Vec<f32> = Vec::new();
+        while pos < 7 {
+            let (rows, n) = kv.key_run(0, pos, 7);
+            assert!(n >= 1 && n <= 2, "runs clip at the 2-position page");
+            gathered.extend_from_slice(rows);
+            pos += n;
+        }
+        assert_eq!(gathered, k.data);
     }
 
     #[test]
@@ -244,32 +795,155 @@ mod tests {
     }
 
     #[test]
-    fn pool_budget_reserves_and_frees() {
-        let mut pool = KvCache::new(2, 8, 100);
-        let a = pool.alloc(60).expect("fits");
-        assert_eq!(pool.occupancy().reserved_tokens, 60);
-        assert!(pool.alloc(60).is_none(), "61..120 > budget");
-        let b = pool.alloc(40).expect("exactly fills the budget");
+    fn pool_lazy_alloc_and_exact_free_accounting() {
+        let mut pool = KvCache::with_config(2, 8, 64, 16, None);
+        // a 40-position prompt claims 3 pages (48 tokens), not 40+max_new
+        let prompt: Vec<u32> = (0..40).collect();
+        let a = pool.alloc_seq(&prompt, 40).expect("fits");
         let occ = pool.occupancy();
-        assert_eq!((occ.reserved_tokens, occ.seqs), (100, 2));
-        assert!((occ.ratio() - 1.0).abs() < 1e-12);
+        assert_eq!((occ.reserved_tokens, occ.seqs), (48, 1));
+        // the 4th page exists under the budget; the 5th does not
+        let mut a = a;
+        assert!(pool.grow(&mut a, 64));
+        assert_eq!(pool.occupancy().reserved_tokens, 64);
+        assert!(!pool.grow(&mut a, 65), "budget exhausted");
         pool.free(a);
-        assert_eq!(pool.occupancy().reserved_tokens, 40);
-        let c = pool.alloc(60).expect("freed reservation is reusable");
-        pool.free(b);
-        pool.free(c);
         let occ = pool.occupancy();
-        assert_eq!((occ.reserved_tokens, occ.seqs), (0, 0));
-        assert_eq!(occ.peak_tokens, 100, "high-water mark survives frees");
+        assert_eq!((occ.reserved_tokens, occ.seqs, occ.freed_seqs), (0, 0, 1));
+        assert_eq!(occ.peak_tokens, 64, "high-water mark survives frees");
     }
 
     #[test]
     fn pool_grants_one_oversized_sequence_when_empty() {
-        let mut pool = KvCache::new(1, 4, 10);
-        let big = pool.alloc(50).expect("oversized single sequence must run");
-        assert_eq!(pool.occupancy().reserved_tokens, 50);
-        assert!(pool.alloc(1).is_none(), "pool over budget: nothing else fits");
+        let mut pool = KvCache::with_config(1, 4, 16, 16, None);
+        let prompt: Vec<u32> = (0..50).collect();
+        let big = pool.alloc_seq(&prompt, 50).expect("oversized single sequence must run");
+        assert_eq!(pool.occupancy().reserved_tokens, 64, "4 pages of 16");
+        assert!(pool.alloc_seq(&[1, 2], 3).is_none(), "pool over budget: nothing else fits");
         pool.free(big);
-        assert!(pool.alloc(10).is_some());
+        assert!(pool.alloc_seq(&[1, 2], 3).is_some());
+    }
+
+    /// Fill a pool-backed cache with deterministic rows for `n` positions
+    /// (stand-in for real prefill; content is any pure function of the
+    /// position so shared-page skip-writes stay consistent).
+    fn fill(kv: &mut SeqKv, layers: usize, hidden: usize, n: usize) {
+        for _ in 0..n {
+            let pos = kv.len();
+            let row: Vec<f32> = (0..hidden).map(|c| (pos * hidden + c) as f32).collect();
+            let m = Matrix { rows: 1, cols: hidden, data: row };
+            for l in 0..layers {
+                kv.append(l, &m, &m);
+            }
+            kv.advance(1);
+        }
+    }
+
+    #[test]
+    fn identical_prompt_prefixes_share_physical_pages() {
+        let mut pool = KvCache::with_config(1, 4, 16 * 16, 16, None);
+        let prompt: Vec<u32> = (0..32).map(|t| t as u32).collect();
+        // sequence A prefills and seals both prompt pages
+        let mut a = pool.alloc_seq(&prompt, 33).expect("alloc a");
+        assert_eq!(a.shared_prefix(), 0, "nothing to share yet");
+        fill(&mut a, 1, 4, 32);
+        pool.seal(&mut a);
+        let before = pool.occupancy().reserved_tokens;
+        // sequence B with the same prompt holds A's physical pages
+        let mut b = pool.alloc_seq(&prompt, 33).expect("alloc b");
+        assert_eq!(b.shared_prefix(), 32, "both full prompt blocks shared");
+        assert_eq!(
+            pool.occupancy().reserved_tokens,
+            before + 16,
+            "only B's tail page is new physical memory"
+        );
+        assert_eq!(pool.occupancy().shared_tokens, 32);
+        // B prefilling over the shared pages skips the writes but reads the
+        // same content
+        fill(&mut b, 1, 4, 32);
+        assert_eq!(b.key_row(0, 5), a.key_row(0, 5));
+        // frees in either order keep the accounting exact
+        pool.free(a);
+        assert_eq!(pool.occupancy().shared_tokens, 0, "B's copy is now the only ref");
+        assert!(pool.occupancy().reserved_tokens >= 48 - 16);
+        pool.free(b);
+        assert_eq!(pool.occupancy().reserved_tokens, 0);
+    }
+
+    #[test]
+    fn diverging_prompts_copy_at_the_divergent_block() {
+        let mut pool = KvCache::with_config(1, 4, 16 * 16, 16, None);
+        let a_prompt: Vec<u32> = (0..32).collect();
+        let mut b_prompt = a_prompt.clone();
+        b_prompt[20] = 999; // diverges inside block 1
+        let mut a = pool.alloc_seq(&a_prompt, 32).unwrap();
+        fill(&mut a, 1, 4, 32);
+        pool.seal(&mut a);
+        let b = pool.alloc_seq(&b_prompt, 32).unwrap();
+        assert_eq!(b.shared_prefix(), 16, "block 0 shared, block 1 private");
+        // divergent content never reaches A's page
+        let mut b = b;
+        fill(&mut b, 1, 4, 32);
+        assert_eq!(b.key_row(0, 3), a.key_row(0, 3), "shared block identical");
+        pool.free(a);
+        pool.free(b);
+        assert_eq!(pool.occupancy().reserved_tokens, 0);
+    }
+
+    #[test]
+    fn share_map_epoch_invalidates_on_plan_swap() {
+        let mut pool = KvCache::with_config(1, 4, 256, 16, None);
+        let prompt: Vec<u32> = (0..16).collect();
+        let mut a = pool.alloc_seq(&prompt, 17).unwrap();
+        fill(&mut a, 1, 4, 16);
+        pool.seal(&mut a);
+        pool.set_share_epoch(1);
+        let b = pool.alloc_seq(&prompt, 17).unwrap();
+        assert_eq!(b.shared_prefix(), 0, "old-plan pages must not seed new prefills");
+        pool.free(a);
+        pool.free(b);
+    }
+
+    #[test]
+    fn sealed_pages_quantize_and_report_avg_bits() {
+        let quant = KvQuantConfig::uniform(2, 4, -1);
+        let mut pool = KvCache::with_config(2, 8, 256, 16, Some(quant));
+        let prompt: Vec<u32> = (0..16).collect();
+        let mut a = pool.alloc_seq(&prompt, 20).unwrap();
+        assert_eq!(pool.avg_kv_bits(), 32.0, "nothing sealed yet");
+        fill(&mut a, 2, 8, 18);
+        pool.seal(&mut a);
+        // one of two pages sealed+quantized: avg = (4 + 32) / 2
+        assert!((pool.avg_kv_bits() - 18.0).abs() < 1e-9);
+        let occ = pool.occupancy();
+        assert!((occ.avg_kv_bits - 18.0).abs() < 1e-9);
+        // quantized rows are decodable approximations, not the raw values
+        let raw: Vec<f32> = (0..8).map(|c| (5 * 8 + c) as f32).collect();
+        assert_ne!(a.key_row(0, 5), &raw[..], "sealed page was fake-quantized");
+        pool.free(a);
+        assert_eq!(pool.avg_kv_bits(), 32.0, "quant accounting drains with the page");
+    }
+
+    #[test]
+    fn quant_config_from_sensitivity_spends_bits_on_sensitive_layers() {
+        let lo = KvPageScheme { bits: 4, group: -1 };
+        let hi = KvPageScheme { bits: 8, group: -1 };
+        let cfg = KvQuantConfig::from_sensitivity(&[0.1, 0.9, 0.2, 0.8], lo, hi);
+        assert_eq!(
+            cfg.schemes.iter().map(|s| s.bits).collect::<Vec<_>>(),
+            vec![4, 8, 4, 8]
+        );
+        assert!((cfg.avg_bits() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn release_rate_warms_after_frees() {
+        let mut pool = KvCache::with_config(1, 4, 256, 16, None);
+        assert_eq!(pool.release_tps(), 0.0);
+        let a = pool.alloc_seq(&[1, 2, 3], 4).unwrap();
+        let b = pool.alloc_seq(&[4, 5, 6], 4).unwrap();
+        pool.free(a);
+        pool.free(b);
+        assert!(pool.release_tps() > 0.0, "EWMA warmed by the second free");
     }
 }

@@ -45,9 +45,12 @@ pub mod replica;
 pub mod request;
 pub mod telemetry;
 
-pub use decode::{DecodePolicy, DecodeScheduler, DecodeStats, FinishedGen, StepOutcome};
+pub use decode::{
+    kv_quant_from_allocation, DecodePolicy, DecodeScheduler, DecodeStats, FinishedGen,
+    StepOutcome,
+};
 pub use hotswap::{SlotChange, SlotTable, StagedSwap};
-pub use kvcache::{KvCache, KvOccupancy, SeqKv};
+pub use kvcache::{KvCache, KvOccupancy, KvPageScheme, KvQuantConfig, SeqKv, KV_PAGE_SIZE};
 pub use queue::{
     BatchPolicy, ContinuousBatcher, GenSpec, Request, RequestKind, Response, ShedInfo,
 };

@@ -324,6 +324,17 @@ pub struct ReplicaStatus {
     pub decode_seqs: usize,
     /// Tokens generated and streamed so far.
     pub generated_tokens: usize,
+    /// Unclaimed tokens under the decode KV page budget (0 until the
+    /// replica publishes — the front door's KV backpressure gate only
+    /// engages once `kv_budget_tokens > 0`).
+    pub kv_free_tokens: usize,
+    /// The replica's KV page-pool budget in tokens.
+    pub kv_budget_tokens: usize,
+    /// Positions per KV page (lazy admission claims round up to this).
+    pub kv_page_size: usize,
+    /// EWMA KV page-release rate, tokens/second (0 until warmed) — what
+    /// `retry_after` is derived from when the pool is the bottleneck.
+    pub kv_release_tps: f64,
 }
 
 impl ReplicaStatus {
@@ -348,6 +359,10 @@ impl ReplicaStatus {
             scheme_rows: Vec::new(),
             decode_seqs: 0,
             generated_tokens: 0,
+            kv_free_tokens: 0,
+            kv_budget_tokens: 0,
+            kv_page_size: 0,
+            kv_release_tps: 0.0,
         }
     }
 }
@@ -437,7 +452,7 @@ pub fn replica_main(
             engine.set_telemetry_alpha(a);
         }
     }
-    let mut decoder = DecodeScheduler::new(&spec.cfg, spec.decode);
+    let mut decoder = DecodeScheduler::new(&spec.cfg, spec.decode.clone());
     let mut staging: Option<ReplanStaging> = None;
     let mut published_gen = publish(&spec, &engine, &decoder, &status, 0, None);
     let mut batches_done = 0usize;
@@ -608,6 +623,9 @@ fn run_decode_step(
     decoder: &mut DecodeScheduler,
     admission: &AdmissionState,
 ) {
+    // keep the prefix-share map keyed to the live plan generation: a
+    // hot-swap invalidates sealed pages for new prefills
+    decoder.set_share_epoch(engine.generation());
     let t0 = Instant::now();
     let outcome = decoder.step(|inputs| engine.forward_step_batch(inputs));
     let elapsed = t0.elapsed();
@@ -636,6 +654,22 @@ fn run_decode_step(
                     prefill_rows: outcome.prefill_rows,
                     decode_rows: outcome.decode_rows,
                     tokens: outcome.tokens_emitted,
+                    kv_reserved: occ.reserved_tokens,
+                    kv_used: occ.used_tokens,
+                    kv_budget: occ.budget_tokens,
+                },
+            );
+        }
+    }
+    if !outcome.preempted.is_empty() {
+        let occ = decoder.occupancy();
+        let metrics = engine.metrics_mut();
+        metrics.record_kv_preemptions(outcome.preempted.len());
+        let tracer = metrics.tracer();
+        for &id in &outcome.preempted {
+            tracer.instant(
+                id,
+                EventKind::KvPreempt {
                     kv_reserved: occ.reserved_tokens,
                     kv_budget: occ.budget_tokens,
                 },
@@ -759,6 +793,11 @@ fn publish(
     s.scheme_rows = measured_scheme_rows(engine);
     s.decode_seqs = decoder.load();
     s.generated_tokens = engine.metrics().generated_tokens;
+    let occ = decoder.occupancy();
+    s.kv_free_tokens = decoder.free_kv_tokens();
+    s.kv_budget_tokens = occ.budget_tokens;
+    s.kv_page_size = decoder.kv_page_size();
+    s.kv_release_tps = decoder.kv_release_tps();
     generation
 }
 
@@ -923,6 +962,10 @@ fn collect_report(
         step_latency: m.step_latency_summary(),
         kv_peak_tokens: m.kv_peak_tokens,
         kv_budget_tokens: m.kv_budget_tokens,
+        kv_used_tokens: m.kv_used_tokens,
+        kv_shared_tokens: m.kv_shared_tokens,
+        kv_avg_bits: m.kv_avg_bits,
+        kv_preemptions: m.kv_preemptions,
         elapsed_s: m.elapsed(),
         trace,
         trace_dropped,

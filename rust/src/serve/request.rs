@@ -224,6 +224,11 @@ pub enum RejectReason {
     /// ([`AdmissionConfig::privileged_reserve`]), so this unprivileged
     /// request is shed even though the queue is not yet at its full bound.
     ClassQuota,
+    /// Every replica's KV page pool is too full for the generation's
+    /// prompt while decode backlogs exist: queueing it would only deepen
+    /// the decode pending FIFO, so it is shed with a `retry_after` derived
+    /// from the observed page-release rate.
+    KvExhausted,
 }
 
 impl RejectReason {
@@ -233,6 +238,7 @@ impl RejectReason {
             RejectReason::QueueFull => "queue-full",
             RejectReason::DeadlineUnmeetable => "deadline-unmeetable",
             RejectReason::ClassQuota => "class-quota",
+            RejectReason::KvExhausted => "kv-exhausted",
         }
     }
 }
@@ -445,6 +451,10 @@ pub struct AdmissionReport {
     /// Unprivileged requests shed by the class quota while reserved slots
     /// remained (admission fairness).
     pub rejected_quota: usize,
+    /// Generations shed because every replica's KV page pool was full
+    /// while decode backlogs existed (KV backpressure — `retry_after`
+    /// comes from the observed page-release rate).
+    pub rejected_kv: usize,
     /// Admitted requests that never produced a response because they were
     /// cancelled: shed at a batch cut, shed at a replica pop, or
     /// suppressed at reply time after a late cancel.
@@ -456,7 +466,7 @@ pub struct AdmissionReport {
 
 impl AdmissionReport {
     pub fn rejected(&self) -> usize {
-        self.rejected_queue_full + self.rejected_deadline + self.rejected_quota
+        self.rejected_queue_full + self.rejected_deadline + self.rejected_quota + self.rejected_kv
     }
 
     /// Every admitted request is accounted for exactly once at a drained
@@ -693,6 +703,22 @@ impl AdmissionState {
         );
         drop(g);
         self.freed.notify_all();
+    }
+
+    /// Record a KV-backpressure rejection decided by the cluster front
+    /// door (the page-pool check lives outside the admission queue
+    /// bookkeeping): assigns the request an id, traces the rejection, and
+    /// returns the triple `try_submit` turns into `Admission::Rejected`.
+    /// `retry_after` should come from the shortfall over the observed
+    /// page-release rate; it is clamped like every other retry hint.
+    pub fn reject_kv(&self, retry: Duration) -> (RejectReason, Duration, u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.report.rejected_kv += 1;
+        let id = g.next_id;
+        g.next_id += 1;
+        g.tracer
+            .instant(id, EventKind::Rejected { reason: RejectReason::KvExhausted.name() });
+        (RejectReason::KvExhausted, clamp_retry(retry), id)
     }
 
     /// Swap in a live admission-track collector (called once at cluster

@@ -105,22 +105,27 @@ fn native_prefill_decode_bit_identical_to_forward_capture() {
     let tokens = seq(&cfg, &mut rng, 12);
     let (full, caps) = lm.forward_capture(&tokens);
     assert_eq!(caps.len(), cfg.layers);
-    for split in [1usize, 4, 11] {
-        let mut cache = SeqKv::new(cfg.layers, cfg.hidden, tokens.len());
-        let prefill = lm.forward_step(&tokens[..split], &mut cache);
-        for pos in 0..split {
-            for c in 0..cfg.vocab {
-                assert_eq!(prefill.at(pos, c).to_bits(), full.at(pos, c).to_bits());
+    // every (page size, split) combination must land on the same bits:
+    // fp32 paging moves rows between pages, never an arithmetic operation
+    for page in [2usize, 16] {
+        for split in [1usize, 4, 11] {
+            let mut cache =
+                SeqKv::with_page_size(cfg.layers, cfg.hidden, tokens.len(), page);
+            let prefill = lm.forward_step(&tokens[..split], &mut cache);
+            for pos in 0..split {
+                for c in 0..cfg.vocab {
+                    assert_eq!(prefill.at(pos, c).to_bits(), full.at(pos, c).to_bits());
+                }
             }
-        }
-        for pos in split..tokens.len() {
-            let step = lm.forward_step(&tokens[pos..pos + 1], &mut cache);
-            for c in 0..cfg.vocab {
-                assert_eq!(
-                    step.at(0, c).to_bits(),
-                    full.at(pos, c).to_bits(),
-                    "split {split}: decode logits diverged at ({pos}, {c})"
-                );
+            for pos in split..tokens.len() {
+                let step = lm.forward_step(&tokens[pos..pos + 1], &mut cache);
+                for c in 0..cfg.vocab {
+                    assert_eq!(
+                        step.at(0, c).to_bits(),
+                        full.at(pos, c).to_bits(),
+                        "page {page}, split {split}: decode logits diverged at ({pos}, {c})"
+                    );
+                }
             }
         }
     }
@@ -261,6 +266,7 @@ fn cluster_generation_bit_identical_to_engine_reference_at_1_and_4_replicas() {
         );
         assert!(flat.decode_steps > 0 && flat.p50_step_s >= 0.0);
         assert!(flat.kv_peak_tokens > 0, "KV reservations surfaced in the report");
+        assert_eq!(flat.kv_preemptions, 0, "an uncontended pool never preempts");
         assert!(flat.decode_tps > 0.0);
     }
     let _ = std::fs::remove_file(&weights);

@@ -1,0 +1,390 @@
+//! Integration: the paged KV cache under serving load (DESIGN.md
+//! §KV-Paging).
+//!
+//! The paging invariant anchors everything: fp32 paging changes where KV
+//! rows live, never one arithmetic operation, so a cluster generation on
+//! 4-token pages must reproduce the default-page engine reference bit for
+//! bit, at 1 and 4 replicas. On top of that: refcounted prefix sharing
+//! between generations of the same prompt (driven natively so the step
+//! sequence is deterministic), liveness of a page pool half the naive
+//! worst-case reservation, KV-exhausted admission backpressure with a
+//! retry hint, sealed-page quantization end to end, and the occupancy
+//! gauges flowing through to the Prometheus export.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use mxmoe::coordinator::{Cluster, ClusterConfig, ServeConfig, ServingEngine};
+use mxmoe::harness::{mixed_runtime_plan, require_artifacts, save_model_mxt};
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::obs::export::prometheus_text;
+use mxmoe::serve::{
+    Admission, DecodePolicy, DecodeScheduler, FinishReason, GenSpec, KvQuantConfig,
+    RejectReason, Request, RequestKind, Response, ServeRequest, StepOutcome, StreamEvent,
+    Ticket,
+};
+use mxmoe::util::Rng;
+
+const WAIT: Duration = Duration::from_secs(300);
+
+/// Serving-shape model (hidden=128, inter=64 — what the AOT export ships).
+fn serving_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "kvpage-test".into(),
+        vocab: 64,
+        hidden: 128,
+        layers: 2,
+        heads: 4,
+        n_experts: 4,
+        n_shared: 1,
+        topk: 2,
+        inter: 64,
+        dense_first: false,
+        seq_len: 16,
+    }
+}
+
+fn seq(cfg: &ModelConfig, rng: &mut Rng, len: usize) -> Vec<u32> {
+    (0..len).map(|_| rng.below(cfg.vocab as u64) as u32).collect()
+}
+
+fn boot_weights(name: &str, seed: u64) -> (ModelConfig, MoeLm, PathBuf) {
+    let cfg = serving_cfg();
+    let weights = std::env::temp_dir().join(format!("mxmoe_kvpage_{name}.mxt"));
+    let lm = MoeLm::random(&cfg, &mut Rng::new(seed));
+    save_model_mxt(&lm, &weights).unwrap();
+    (cfg, lm, weights)
+}
+
+fn start_cluster(
+    cfg: &ModelConfig,
+    weights: &PathBuf,
+    artifacts: &PathBuf,
+    replicas: usize,
+    decode: DecodePolicy,
+) -> Cluster {
+    Cluster::start(
+        cfg.clone(),
+        weights.clone(),
+        artifacts.clone(),
+        mixed_runtime_plan(cfg),
+        ClusterConfig {
+            replicas,
+            serve: ServeConfig {
+                max_batch_seqs: 1,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            decode,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn collect_generation(ticket: &Ticket) -> (Vec<u32>, FinishReason, (u32, u64)) {
+    let (tokens, reason) = ticket.collect_tokens(WAIT).expect("token stream");
+    let resp = ticket.wait_timeout(WAIT).expect("final response");
+    (tokens, reason, (resp.next_token, resp.mean_nll.to_bits()))
+}
+
+// ---------------------------------------------------------------- native
+
+struct GenHandle {
+    stream: mpsc::Receiver<StreamEvent>,
+    _reply: mpsc::Receiver<Response>,
+}
+
+fn gen_request(prompt: Vec<u32>, max_new: usize) -> (Request, GenHandle) {
+    let (reply, reply_rx) = mpsc::channel();
+    let (stream, stream_rx) = mpsc::channel();
+    let req = Request {
+        kind: RequestKind::Generate(GenSpec { max_new_tokens: max_new, stop: vec![], stream }),
+        ..Request::new(prompt, reply)
+    };
+    (req, GenHandle { stream: stream_rx, _reply: reply_rx })
+}
+
+/// One scheduler step against the native model (no PJRT).
+fn native_step(sched: &mut DecodeScheduler, lm: &MoeLm) -> StepOutcome {
+    sched.step(|inputs| {
+        Ok(lm.forward_step_batch_with_moe(inputs, |_, block, x| block.forward(x)))
+    })
+}
+
+fn drain(h: &GenHandle) -> (Vec<u32>, Option<FinishReason>) {
+    let mut tokens = Vec::new();
+    let mut reason = None;
+    while let Ok(ev) = h.stream.try_recv() {
+        match ev {
+            StreamEvent::Token { token, .. } => tokens.push(token),
+            StreamEvent::Done { reason: r, .. } => reason = Some(r),
+        }
+    }
+    (tokens, reason)
+}
+
+#[test]
+fn shared_prefix_pages_are_refcounted_and_reclaimed() {
+    // two generations whose prompts share an 8-token (= two full 4-token
+    // pages) prefix: the second admission must resolve those pages to the
+    // first sequence's sealed pages (one physical copy), generate exactly
+    // what a solo run generates, and release everything on retirement
+    let cfg = serving_cfg();
+    let lm = MoeLm::random(&cfg, &mut Rng::new(0x9A6E));
+    let mut rng = Rng::new(0x9A6F);
+    let prompt = seq(&cfg, &mut rng, 8);
+    let mut longer = prompt.clone();
+    longer.push((prompt[0] + 1) % cfg.vocab as u32);
+    let policy = DecodePolicy { kv_page_size: 4, ..DecodePolicy::default() };
+
+    // solo reference for the longer prompt
+    let mut solo = DecodeScheduler::new(&cfg, policy.clone());
+    let (req, h) = gen_request(longer.clone(), 3);
+    solo.admit(req);
+    while solo.has_work() {
+        native_step(&mut solo, &lm);
+    }
+    let (want, want_reason) = drain(&h);
+    assert_eq!(want.len(), 3);
+    assert_eq!(want_reason, Some(FinishReason::Length));
+
+    let mut sched = DecodeScheduler::new(&cfg, policy);
+    let (req_a, ha) = gen_request(prompt.clone(), 3);
+    sched.admit(req_a);
+    // step 1: A prefills its prompt; both full prompt pages seal and
+    // register their content hash in the share map
+    native_step(&mut sched, &lm);
+    let (req_b, hb) = gen_request(longer.clone(), 3);
+    sched.admit(req_b);
+    // step 2: B is promoted — its two full prompt blocks resolve to A's
+    // sealed pages; only the divergent tail gets a fresh page
+    native_step(&mut sched, &lm);
+    let occ = sched.occupancy();
+    assert_eq!(occ.shared_tokens, 8, "two 4-token pages shared: {occ:?}");
+    assert_eq!(
+        occ.reserved_tokens, 16,
+        "B added one private page to A's three, not three more: {occ:?}"
+    );
+    while sched.has_work() {
+        native_step(&mut sched, &lm);
+    }
+    let (got_b, reason_b) = drain(&hb);
+    assert_eq!(got_b, want, "shared-prefix generation diverged from the solo run");
+    assert_eq!(reason_b, Some(FinishReason::Length));
+    let (got_a, reason_a) = drain(&ha);
+    assert_eq!(got_a.len(), 3);
+    assert_eq!(reason_a, Some(FinishReason::Length));
+    let end = sched.occupancy();
+    assert_eq!(
+        (end.reserved_tokens, end.shared_tokens, end.seqs),
+        (0, 0, 0),
+        "retirement must return every page: {end:?}"
+    );
+    assert_eq!(end.freed_seqs, 2);
+}
+
+// ---------------------------------------------------------------- cluster
+
+/// Drive a generation through a locally-owned engine + decode scheduler
+/// with the *default* (16-token-page) policy — the reference the paged
+/// cluster runs are compared against bit for bit.
+fn engine_reference_generation(
+    cfg: &ModelConfig,
+    weights: &PathBuf,
+    artifacts: &PathBuf,
+    prompt: &[u32],
+    max_new: usize,
+) -> (Vec<u32>, FinishReason, (u32, u64)) {
+    let weights_file = mxmoe::ser::MxtFile::load(weights).unwrap();
+    let lm = MoeLm::load_mxt(cfg, &weights_file).unwrap();
+    let mut engine = ServingEngine::new(lm, artifacts, &mixed_runtime_plan(cfg)).unwrap();
+    let mut sched = DecodeScheduler::new(cfg, DecodePolicy::default());
+    let (reply, reply_rx) = mpsc::channel();
+    let (stream, stream_rx) = mpsc::channel();
+    sched.admit(Request {
+        kind: RequestKind::Generate(GenSpec { max_new_tokens: max_new, stop: vec![], stream }),
+        ..Request::new(prompt.to_vec(), reply)
+    });
+    let mut finished = Vec::new();
+    while sched.has_work() {
+        let out = sched.step(|inputs| engine.forward_step_batch(inputs));
+        finished.extend(out.finished);
+    }
+    drop(reply_rx);
+    assert_eq!(finished.len(), 1);
+    let fin = &finished[0];
+    let mut tokens = Vec::new();
+    let mut reason = None;
+    while let Ok(ev) = stream_rx.try_recv() {
+        match ev {
+            StreamEvent::Token { token, .. } => tokens.push(token),
+            StreamEvent::Done { reason: r, generated } => {
+                assert_eq!(generated, tokens.len());
+                reason = Some(r);
+            }
+        }
+    }
+    (
+        tokens,
+        reason.expect("terminal event"),
+        (fin.last_token.unwrap_or(0), fin.mean_prompt_nll.to_bits()),
+    )
+}
+
+#[test]
+fn small_page_cluster_bit_identical_to_default_page_reference_at_1_and_4_replicas() {
+    // the tentpole invariant end to end: a cluster storing KV in 4-token
+    // pages (4× more page-table traversals, different physical layout)
+    // must reproduce the 16-token-page engine reference bit for bit
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (cfg, _, weights) = boot_weights("smallpage", 0x9A60);
+    let mut rng = Rng::new(0x9A61);
+    let prompts: Vec<Vec<u32>> = vec![seq(&cfg, &mut rng, 9), seq(&cfg, &mut rng, 14)];
+    let max_new = 6usize;
+    let reference: Vec<_> = prompts
+        .iter()
+        .map(|p| engine_reference_generation(&cfg, &weights, &artifacts, p, max_new))
+        .collect();
+    let decode = DecodePolicy { kv_page_size: 4, ..DecodePolicy::default() };
+    for replicas in [1usize, 4] {
+        let cluster = start_cluster(&cfg, &weights, &artifacts, replicas, decode.clone());
+        for (p, want) in prompts.iter().zip(&reference) {
+            let ticket = cluster.generate(p.clone(), max_new, vec![]).unwrap();
+            let got = collect_generation(&ticket);
+            assert_eq!(got.0, want.0, "{replicas}-replica paged token stream diverged");
+            assert_eq!(got.1, want.1);
+            assert_eq!(got.2, want.2, "{replicas}-replica paged response bits diverged");
+        }
+        let report = cluster.shutdown();
+        let flat = report.flatten();
+        assert_eq!(flat.generations, prompts.len());
+        assert!(flat.kv_peak_tokens > 0);
+        assert_eq!(flat.kv_preemptions, 0, "an uncontended pool never preempts");
+    }
+    let _ = std::fs::remove_file(&weights);
+}
+
+#[test]
+fn tight_page_pool_serves_concurrent_generations_to_completion() {
+    // three concurrent generations, each growing to 16 tokens (48-token
+    // naive worst case), on a 24-token page pool: lazy claiming, deferral
+    // and preempt-youngest must drive all three to completion
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (cfg, _, weights) = boot_weights("tightpool", 0x9A62);
+    let mut rng = Rng::new(0x9A63);
+    let max_new = 8usize;
+    let decode =
+        DecodePolicy { kv_budget_tokens: 24, kv_page_size: 4, ..DecodePolicy::default() };
+    let cluster = start_cluster(&cfg, &weights, &artifacts, 1, decode);
+    let tickets: Vec<Ticket> = (0..3)
+        .map(|_| cluster.generate(seq(&cfg, &mut rng, 8), max_new, vec![]).unwrap())
+        .collect();
+    for ticket in &tickets {
+        let (tokens, reason, _) = collect_generation(ticket);
+        assert_eq!(tokens.len(), max_new, "every generation runs to its budget");
+        assert_eq!(reason, FinishReason::Length);
+    }
+    let report = cluster.shutdown();
+    assert_eq!(report.admission.admitted, 3);
+    let flat = report.flatten();
+    assert_eq!(flat.generations, 3);
+    assert_eq!(flat.generated_tokens, 3 * max_new);
+    let _ = std::fs::remove_file(&weights);
+}
+
+#[test]
+fn kv_exhausted_generations_shed_with_retry_hint() {
+    // a page-starved pool must turn `try_submit` generations away at the
+    // front door (reason `KvExhausted`, retry hint > 0) instead of
+    // deepening the decode FIFO — and keep serving once pages free up
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (cfg, _, weights) = boot_weights("kvshed", 0x9A64);
+    let mut rng = Rng::new(0x9A65);
+    let prompt = seq(&cfg, &mut rng, 8);
+    let decode =
+        DecodePolicy { kv_budget_tokens: 32, kv_page_size: 16, ..DecodePolicy::default() };
+    let cluster = start_cluster(&cfg, &weights, &artifacts, 1, decode);
+    let long = cluster.generate(prompt.clone(), 256, vec![]).unwrap();
+    // wait until the long generation demonstrably holds pages…
+    let mut seen = 0usize;
+    while seen < 3 {
+        match long.wait_event(WAIT).unwrap() {
+            StreamEvent::Token { .. } => seen += 1,
+            StreamEvent::Done { .. } => panic!("256-token generation finished too early"),
+        }
+    }
+    // …then the follow-up needs prompt + headroom = 32 tokens of pages,
+    // more than the pool has left: shed, not queued
+    let verdict =
+        cluster.try_submit(ServeRequest::generate(prompt.clone(), 4, vec![])).unwrap();
+    match verdict {
+        Admission::Rejected { reason, retry_after, .. } => {
+            assert_eq!(reason, RejectReason::KvExhausted);
+            assert!(retry_after >= Duration::from_millis(1), "retry hint: {retry_after:?}");
+        }
+        Admission::Admitted(_) => panic!("page-starved pool must shed the generation"),
+    }
+    // cancel the page holder: the freed pool serves the next generation
+    long.cancel();
+    let next = cluster.generate(prompt, 4, vec![]).unwrap();
+    let (tokens, reason, _) = collect_generation(&next);
+    assert_eq!(tokens.len(), 4);
+    assert_eq!(reason, FinishReason::Length);
+    let report = cluster.shutdown();
+    assert_eq!(report.admission.admitted, 2);
+    assert_eq!(report.admission.cancelled, 1);
+    let flat = report.flatten();
+    assert_eq!(flat.rejected_kv, 1, "the shed generation lands in the KV reject counter");
+    assert_eq!(flat.generations, 1);
+    let _ = std::fs::remove_file(&weights);
+}
+
+#[test]
+fn quantized_kv_policy_serves_and_exports_occupancy_gauges() {
+    // sealed-page quantization through the full serving stack: an 8-bit
+    // uniform KV plan still completes generations, and the new occupancy
+    // gauges/counters appear in the Prometheus rendering of the report
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (cfg, _, weights) = boot_weights("kvquant", 0x9A66);
+    let mut rng = Rng::new(0x9A67);
+    let prompt = seq(&cfg, &mut rng, 8);
+    let decode = DecodePolicy {
+        kv_page_size: 4,
+        kv_quant: Some(KvQuantConfig::uniform(cfg.layers, 8, -1)),
+        ..DecodePolicy::default()
+    };
+    let cluster = start_cluster(&cfg, &weights, &artifacts, 1, decode);
+    let ticket = cluster.generate(prompt, 6, vec![]).unwrap();
+    let (tokens, reason, (_, nll_bits)) = collect_generation(&ticket);
+    assert_eq!(tokens.len(), 6, "quantized KV pages still complete the generation");
+    assert_eq!(reason, FinishReason::Length);
+    assert!(f64::from_bits(nll_bits).is_finite());
+    let report = cluster.shutdown();
+    let flat = report.flatten();
+    assert_eq!(flat.generations, 1);
+    let text = prometheus_text(&flat);
+    for needle in [
+        "mxmoe_kv_used_tokens",
+        "mxmoe_kv_shared_tokens",
+        "mxmoe_kv_avg_bits",
+        "mxmoe_kv_preemptions_total",
+        "mxmoe_rejected_total{reason=\"kv_exhausted\"}",
+    ] {
+        assert!(text.contains(needle), "prometheus export missing {needle}");
+    }
+    let _ = std::fs::remove_file(&weights);
+}
