@@ -7,7 +7,7 @@
 PYTHON ?= python3
 CARGO  ?= cargo
 
-.PHONY: all artifacts corpus models mini-model build test bench-smoke trace-validate pytest clean
+.PHONY: all artifacts corpus models mini-model build test bench-smoke scenario-smoke bench-validate trace-validate pytest clean
 
 all: build
 
@@ -51,6 +51,19 @@ bench-smoke:
 	$(CARGO) bench --bench bench_decode -- --smoke
 	$(CARGO) bench --bench bench_kvcache -- --smoke
 	$(CARGO) bench --bench bench_trace_overhead -- --smoke
+
+# The scenario suite (scenarios/*.json) replayed end to end in smoke
+# mode: accounting and determinism checks enforced, wall-clock SLO bars
+# reported but not gated. One BENCH_scenario_<name>.json per spec plus
+# the suite roll-up; exits non-zero on any fail verdict.
+scenario-smoke:
+	$(CARGO) bench --bench bench_scenarios -- --smoke
+
+# Shared schema check over every BENCH_*.json in the workspace (envelope
+# for all benches, full ledger/SLO/verdict block for scenario files);
+# exits non-zero on a malformed file or a fail verdict.
+bench-validate:
+	$(CARGO) run --release --bin mxmoe -- bench-validate --dir .
 
 # CI-grade structural check of the Chrome trace the smoke benches export
 # (well-formed JSON, monotonic timestamps, matched async begin/end pairs).

@@ -184,7 +184,11 @@ fn main() -> Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
     println!("# §Serving-API — bounded admission vs unbounded queue at 2× capacity");
 
-    let mut results = vec![("smoke", Json::Bool(smoke))];
+    let mut results = vec![
+        ("schema", Json::str("mxmoe-bench-v1")),
+        ("bench", Json::str("admission")),
+        ("smoke", Json::Bool(smoke)),
+    ];
     let Some(artifacts) = require_artifacts() else {
         eprintln!("skipping admission bench: artifacts not built (run `make artifacts`)");
         std::fs::write(

@@ -112,7 +112,11 @@ fn main() -> Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
     println!("# §Sharded-Serving — N-replica cluster vs single replica");
 
-    let mut results = vec![("smoke", Json::Bool(smoke))];
+    let mut results = vec![
+        ("schema", Json::str("mxmoe-bench-v1")),
+        ("bench", Json::str("cluster")),
+        ("smoke", Json::Bool(smoke)),
+    ];
     let Some(artifacts) = require_artifacts() else {
         eprintln!("skipping cluster bench: artifacts not built (run `make artifacts`)");
         std::fs::write(

@@ -162,7 +162,11 @@ fn main() -> Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
     println!("# §Decode-Loop — KV-cached continuous decode vs naive re-forward-per-token");
 
-    let mut results = vec![("smoke", Json::Bool(smoke))];
+    let mut results = vec![
+        ("schema", Json::str("mxmoe-bench-v1")),
+        ("bench", Json::str("decode")),
+        ("smoke", Json::Bool(smoke)),
+    ];
     let Some(artifacts) = require_artifacts() else {
         eprintln!("skipping decode bench: artifacts not built (run `make artifacts`)");
         std::fs::write(

@@ -134,9 +134,11 @@ fn main() -> Result<()> {
     );
 
     let mut results = vec![
+        ("schema", Json::str("mxmoe-bench-v1")),
+        ("bench", Json::str("group_dispatch")),
+        ("smoke", Json::Bool(smoke)),
         ("lit_f32_bulk_ns", Json::num(bulk_ns)),
         ("lit_f32_per_element_ns", Json::num(per_ns)),
-        ("smoke", Json::Bool(smoke)),
     ];
 
     let Some(artifacts) = require_artifacts() else {

@@ -175,6 +175,8 @@ fn main() -> Result<()> {
     }
 
     let results = vec![
+        ("schema", Json::str("mxmoe-bench-v1")),
+        ("bench", Json::str("kvcache")),
         ("smoke", Json::Bool(smoke)),
         ("budget_tokens", Json::num(budget as f64)),
         ("page_tokens", Json::num(PAGE as f64)),

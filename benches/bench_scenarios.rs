@@ -1,0 +1,106 @@
+//! §Scenario-Engine — the checked-in scenario suite, replayed end to end.
+//!
+//! Runs every spec under `scenarios/` through the trace-driven replay
+//! driver (`harness::scenario::run_scenario`): arrival curves, QoS-mix
+//! schedules, cancel storms, routing drift with online replanning, and
+//! mid-run replica kill/restart, all against a mini-model cluster. Each
+//! scenario writes its own `BENCH_scenario_<name>.json` with the ledger,
+//! per-class SLO stats, and a pass/fail verdict; this runner additionally
+//! writes a `BENCH_scenario_suite.json` roll-up and exits non-zero if any
+//! verdict fails.
+//!
+//! `--smoke` keeps every determinism and accounting check enforced but
+//! reports wall-clock checks (deadline-hit rate, per-class p99 bounds)
+//! without gating on them — shared CI runners can't hold latency bars.
+
+use anyhow::{bail, Result};
+use mxmoe::harness::require_artifacts;
+use mxmoe::harness::scenario::{list_specs, run_scenario, RunOptions};
+use mxmoe::ser::Json;
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!("# §Scenario-Engine — trace-driven workload suite with SLO verdicts");
+
+    let results = vec![
+        ("schema", Json::str("mxmoe-bench-v1")),
+        ("bench", Json::str("scenario-suite")),
+        ("smoke", Json::Bool(smoke)),
+    ];
+    if require_artifacts().is_none() {
+        eprintln!("skipping scenario suite: artifacts not built (run `make artifacts`)");
+        let mut stub = results;
+        stub.push(("skipped", Json::Bool(true)));
+        std::fs::write(
+            "BENCH_scenario_suite.json",
+            Json::obj(stub.iter().map(|(k, v)| (*k, v.clone())).collect()).pretty(),
+        )?;
+        return Ok(());
+    }
+
+    let specs = list_specs()?;
+    assert!(specs.len() >= 6, "scenario suite shrank: {} specs", specs.len());
+    let opts = RunOptions { smoke, dispatch_threads: None };
+    let mut rows = Vec::new();
+    let mut failed = Vec::new();
+    for spec in &specs {
+        let outcome = run_scenario(spec, &opts)?;
+        let path = outcome.write(std::path::Path::new("."))?;
+        let l = &outcome.ledger;
+        // bar: one '#' per ten arrivals so relative load is visible at a glance
+        let bar = "#".repeat((l.arrivals / 10).max(1));
+        println!(
+            "| {:18} | {:4} | {:3} arrivals | {:3} served | {:3} shed | {:2} cancelled | \
+             {:2} failed | {:2} replans | {:6.1}s | {}",
+            spec.name,
+            outcome.verdict.status().to_uppercase(),
+            l.arrivals,
+            l.responses,
+            l.shed(),
+            l.cancelled,
+            l.failed,
+            outcome.slo.replans,
+            outcome.elapsed_s,
+            bar,
+        );
+        for c in outcome.verdict.checks.iter().filter(|c| !c.pass) {
+            println!(
+                "|   {} '{}': {} {} {}",
+                if c.enforced { "FAIL" } else { "warn" },
+                c.name,
+                c.value,
+                c.op,
+                c.bound
+            );
+        }
+        if !outcome.verdict.passed() {
+            failed.push(spec.name.clone());
+        }
+        rows.push((
+            spec.name.clone(),
+            Json::obj(vec![
+                ("status", Json::str(outcome.verdict.status())),
+                ("arrivals", Json::num(l.arrivals as f64)),
+                ("served", Json::num(l.responses as f64)),
+                ("shed", Json::num(l.shed() as f64)),
+                ("elapsed_s", Json::num(outcome.elapsed_s)),
+                ("file", Json::str(&path.display().to_string())),
+            ]),
+        ));
+    }
+
+    let mut out = results;
+    out.push(("scenarios", Json::num(specs.len() as f64)));
+    out.push(("failed", Json::num(failed.len() as f64)));
+    out.push(("suite", Json::Obj(rows.into_iter().collect())));
+    std::fs::write(
+        "BENCH_scenario_suite.json",
+        Json::obj(out.iter().map(|(k, v)| (*k, v.clone())).collect()).pretty(),
+    )?;
+    println!("\nwrote BENCH_scenario_suite.json + {} per-scenario files", specs.len());
+
+    if !failed.is_empty() {
+        bail!("{} scenario verdict(s) failed: {}", failed.len(), failed.join(", "));
+    }
+    Ok(())
+}

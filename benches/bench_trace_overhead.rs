@@ -115,7 +115,11 @@ fn main() -> Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
     println!("# §Observability — lifecycle-tracing overhead");
 
-    let mut results = vec![("smoke", Json::Bool(smoke))];
+    let mut results = vec![
+        ("schema", Json::str("mxmoe-bench-v1")),
+        ("bench", Json::str("trace_overhead")),
+        ("smoke", Json::Bool(smoke)),
+    ];
     let Some(artifacts) = require_artifacts() else {
         eprintln!("skipping trace-overhead bench: artifacts not built (run `make artifacts`)");
         std::fs::write(

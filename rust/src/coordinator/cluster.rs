@@ -33,7 +33,9 @@ use anyhow::Result;
 
 use crate::alloc::Allocation;
 use crate::moe::ModelConfig;
-use crate::obs::{Deadline, EventKind, Outcome, SpanCollector, TraceClock, TraceLog, Track};
+use crate::obs::{
+    Deadline, EventKind, Outcome, SpanCollector, TraceClock, TraceConfig, TraceLog, Track,
+};
 use crate::runtime::dispatch;
 use crate::runtime::RuntimeScheme;
 use crate::ser::MxtFile;
@@ -44,7 +46,7 @@ use crate::serve::replica::{
     replica_main, ReplicaOnline, ReplicaSpec, ReplicaStatus, RoutedBatch, WorkQueues,
 };
 use crate::serve::request::{
-    Admission, AdmissionConfig, AdmissionState, ServeKind, ServeRequest, Ticket,
+    Admission, AdmissionConfig, AdmissionState, AdmitArgs, ServeKind, ServeRequest, Ticket,
 };
 use crate::serve::{Request, Response};
 
@@ -331,8 +333,62 @@ pub struct Cluster {
     /// front door reads each replica's published KV pool headroom to gate
     /// Generate admissions when the page pool is the bottleneck.
     status: Arc<Vec<Mutex<ReplicaStatus>>>,
+    /// Shared work deques — retained so the front door can kill and
+    /// revive individual replicas mid-run (scenario fault injection).
+    queues: Arc<WorkQueues>,
+    /// Boot-time spawn ingredients, kept so a killed replica can be
+    /// restarted under its original id with an identical [`ReplicaSpec`].
+    respawn: RespawnContext,
     router: Option<thread::JoinHandle<RouterStats>>,
-    workers: Vec<thread::JoinHandle<ReplicaReport>>,
+    workers: Vec<(usize, thread::JoinHandle<ReplicaReport>)>,
+    /// Reports from workers joined before shutdown (replica restarts) —
+    /// merged into the final [`ClusterReport`] alongside the live set.
+    finished: Vec<ReplicaReport>,
+}
+
+/// Everything a worker thread is built from, beyond the shared handles.
+/// One copy lives on the [`Cluster`] so `restart_replica` can rebuild a
+/// [`ReplicaSpec`] identical to the boot-time one.
+struct RespawnContext {
+    cfg: ModelConfig,
+    weights: Arc<MxtFile>,
+    artifacts: PathBuf,
+    allocation: Allocation,
+    online: Option<Arc<ReplicaOnline>>,
+    dispatch_threads: Option<usize>,
+    decode: DecodePolicy,
+    clock: TraceClock,
+    trace: TraceConfig,
+}
+
+impl RespawnContext {
+    fn spawn_worker(
+        &self,
+        id: usize,
+        queues: &Arc<WorkQueues>,
+        status: &Arc<Vec<Mutex<ReplicaStatus>>>,
+        admission: &Arc<AdmissionState>,
+    ) -> thread::JoinHandle<ReplicaReport> {
+        let spec = ReplicaSpec {
+            id,
+            cfg: self.cfg.clone(),
+            weights: self.weights.clone(),
+            artifacts: self.artifacts.clone(),
+            allocation: self.allocation.clone(),
+            online: self.online.clone(),
+            dispatch_threads: self.dispatch_threads,
+            decode: self.decode.clone(),
+            clock: self.clock.clone(),
+            trace: self.trace,
+        };
+        let q = queues.clone();
+        let st = status.clone();
+        let adm = admission.clone();
+        thread::Builder::new()
+            .name(format!("mxmoe-replica-{id}"))
+            .spawn(move || replica_main(spec, q, st, adm))
+            .expect("spawn replica thread")
+    }
 }
 
 impl Cluster {
@@ -395,48 +451,45 @@ impl Cluster {
         let status: Arc<Vec<Mutex<ReplicaStatus>>> = Arc::new(
             (0..n).map(|_| Mutex::new(ReplicaStatus::boot(&cfg, &allocation))).collect(),
         );
+        let respawn = RespawnContext {
+            cfg,
+            weights,
+            artifacts,
+            allocation,
+            online,
+            dispatch_threads: cluster_cfg.dispatch_threads,
+            decode: cluster_cfg.decode.clone(),
+            clock: clock.clone(),
+            trace,
+        };
         let mut workers = Vec::with_capacity(n);
         for id in 0..n {
-            let spec = ReplicaSpec {
-                id,
-                cfg: cfg.clone(),
-                weights: weights.clone(),
-                artifacts: artifacts.clone(),
-                allocation: allocation.clone(),
-                online: online.clone(),
-                dispatch_threads: cluster_cfg.dispatch_threads,
-                decode: cluster_cfg.decode.clone(),
-                clock: clock.clone(),
-                trace,
-            };
-            let q = queues.clone();
-            let st = status.clone();
-            let adm = admission.clone();
-            workers.push(
-                thread::Builder::new()
-                    .name(format!("mxmoe-replica-{id}"))
-                    .spawn(move || replica_main(spec, q, st, adm))
-                    .expect("spawn replica thread"),
-            );
+            workers.push((id, respawn.spawn_worker(id, &queues, &status, &admission)));
         }
         let (tx, rx) = mpsc::channel::<Request>();
         let policy = cluster_cfg.serve.policy();
         let affinity = cluster_cfg.affinity;
-        let topk = cfg.topk;
+        let topk = respawn.cfg.topk;
         let adm = admission.clone();
         let tracer = SpanCollector::new(clock, Track::Router, trace);
         let status_board = status.clone();
+        let router_queues = queues.clone();
         let router = thread::Builder::new()
             .name("mxmoe-router".into())
-            .spawn(move || router_loop(rx, policy, &queues, &status, &adm, affinity, topk, tracer))
+            .spawn(move || {
+                router_loop(rx, policy, &router_queues, &status, &adm, affinity, topk, tracer)
+            })
             .expect("spawn router thread");
         Ok(Cluster {
             tx,
             admission,
             admission_cfg: cluster_cfg.admission,
             status: status_board,
+            queues,
+            respawn,
             router: Some(router),
             workers,
+            finished: Vec::new(),
         })
     }
 
@@ -508,6 +561,63 @@ impl Cluster {
             Err((reason, retry_after, id)) => Ok(Admission::Rejected { id, reason, retry_after }),
             Ok(id) => self.enqueue(req, id).map(Admission::Admitted),
         }
+    }
+
+    /// Burst-atomic submission (the scenario replay driver's front door):
+    /// every request in `reqs` is decided under **one** admission lock
+    /// acquisition, in order, so no concurrent cut/drain can interleave
+    /// with the burst — the admit/reject pattern is a pure function of
+    /// the pre-burst queue state and the burst itself. Per-request
+    /// outcomes come back positionally. The Generate KV gate runs per
+    /// request *before* the burst lock (it reads the replica status
+    /// board, not the admission queue), mirroring
+    /// [`try_submit`](Self::try_submit).
+    pub fn try_submit_burst(&self, reqs: Vec<ServeRequest>) -> Result<Vec<Admission>> {
+        for req in &reqs {
+            Cluster::validate(req)?;
+        }
+        let kv: Vec<_> = reqs
+            .iter()
+            .map(|req| {
+                if matches!(req.kind, ServeKind::Generate { .. }) {
+                    self.kv_backpressure(req.tokens.len())
+                        .map(|retry| self.admission.reject_kv(retry))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let args: Vec<AdmitArgs> = reqs
+            .iter()
+            .zip(&kv)
+            .filter(|(_, kv)| kv.is_none())
+            .map(|(req, _)| AdmitArgs {
+                tokens: req.tokens.len(),
+                ttl: req.ttl,
+                privileged: req.is_privileged(),
+                qos: req.qos.map_or("none", |q| q.name()),
+                priority: req.priority.name(),
+            })
+            .collect();
+        let mut decisions =
+            self.admission.try_admit_burst(&self.admission_cfg, &args).into_iter();
+        let mut out = Vec::with_capacity(reqs.len());
+        for (req, kv) in reqs.into_iter().zip(kv) {
+            if let Some((reason, retry_after, id)) = kv {
+                out.push(Admission::Rejected { id, reason, retry_after });
+                continue;
+            }
+            match decisions.next().expect("one decision per KV-passed request") {
+                Err((reason, retry_after, id)) => {
+                    out.push(Admission::Rejected { id, reason, retry_after })
+                }
+                // an enqueue error (cluster closed mid-burst) aborts this
+                // request's admission inside enqueue and propagates; later
+                // burst entries are moot once the router is gone
+                Ok(id) => out.push(Admission::Admitted(self.enqueue(req, id)?)),
+            }
+        }
+        Ok(out)
     }
 
     /// Typed submission that blocks for queue room up to the admission
@@ -588,6 +698,57 @@ impl Cluster {
         self.admission.report()
     }
 
+    /// Admission queue occupancy right now, as `(seqs, tokens)`. Reaches
+    /// `(0, 0)` only once every admitted request has been cut into a batch
+    /// *and* cancelled stragglers have been shed — the scenario replay
+    /// driver polls this to quiesce between virtual ticks.
+    pub fn queued(&self) -> (usize, usize) {
+        self.admission.queued()
+    }
+
+    /// Number of replica slots (live or dead).
+    pub fn replicas(&self) -> usize {
+        self.status.len()
+    }
+
+    /// Fault injection: ask replica `id`'s worker to stop serving. The
+    /// worker observes the kill flag at its loop top (or is woken out of
+    /// a blocked pop), fails its in-flight decode sequences through the
+    /// normal accounting ([`crate::serve::decode::DecodeScheduler::evict_all`]),
+    /// marks itself dead, and exits. Batches still queued on the killed
+    /// deque stay stealable by the survivors. Idempotent; does not wait
+    /// for the worker — [`restart_replica`](Self::restart_replica) or
+    /// [`shutdown`](Self::shutdown) joins it.
+    pub fn kill_replica(&self, id: usize) {
+        assert!(id < self.status.len(), "replica {id} out of range");
+        self.queues.request_kill(id);
+    }
+
+    /// Restart a killed replica under its original id: join the old
+    /// worker (its report is retained and merged at shutdown), reset the
+    /// status-board entry to boot state, clear the dead/kill flags, and
+    /// spawn a fresh worker from the boot-time spawn ingredients. The
+    /// join is mandatory — two workers must never share a replica id.
+    pub fn restart_replica(&mut self, id: usize) -> Result<()> {
+        anyhow::ensure!(id < self.status.len(), "replica {id} out of range");
+        anyhow::ensure!(
+            self.queues.kill_requested(id),
+            "replica {id} was not killed; nothing to restart"
+        );
+        if let Some(pos) = self.workers.iter().position(|(wid, _)| *wid == id) {
+            let (_, handle) = self.workers.remove(pos);
+            self.finished.push(handle.join().expect("replica thread panicked"));
+        }
+        *self.status[id].lock().unwrap() =
+            ReplicaStatus::boot(&self.respawn.cfg, &self.respawn.allocation);
+        self.queues.revive(id);
+        self.workers.push((
+            id,
+            self.respawn.spawn_worker(id, &self.queues, &self.status, &self.admission),
+        ));
+        Ok(())
+    }
+
     /// Close admission, drain every queue, and collect the cluster report.
     /// The per-thread span rings (admission, router, every replica) are
     /// merged here into one time-ordered [`TraceLog`] — the only place
@@ -596,11 +757,12 @@ impl Cluster {
         drop(self.tx);
         let router =
             self.router.take().unwrap().join().expect("router thread panicked");
-        let mut replicas: Vec<ReplicaReport> = self
-            .workers
-            .drain(..)
-            .map(|h| h.join().expect("replica thread panicked"))
-            .collect();
+        let mut replicas: Vec<ReplicaReport> = self.finished.drain(..).collect();
+        replicas.extend(
+            self.workers.drain(..).map(|(_, h)| h.join().expect("replica thread panicked")),
+        );
+        // a restarted id yields two reports (pre-kill + post-restart);
+        // the stable sort keeps them adjacent in lifetime order
         replicas.sort_by_key(|r| r.id);
         let mut parts = vec![
             self.admission.take_trace(),

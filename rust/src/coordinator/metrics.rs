@@ -142,6 +142,12 @@ pub struct Metrics {
     /// [`QUEUE_WAIT_WINDOW`]).
     queue_waits_by_priority: [Vec<f64>; 3],
     queue_wait_priority_cursors: [usize; 3],
+    /// Request-latency samples split by SLO class (same clock as
+    /// `latencies`; index = [`slo_class_index`]; each ring bounded by
+    /// [`REQUEST_LATENCY_WINDOW`]) — feeds the per-class percentiles the
+    /// scenario verdicts judge.
+    latencies_by_class: [Vec<f64>; SLO_CLASSES],
+    latency_class_cursors: [usize; SLO_CLASSES],
     /// Requests served per QoS class (`None` counts as `Standard`).
     pub qos_served: [usize; 3],
     /// Per-class SLO accounting (index = [`slo_class_index`]).
@@ -258,6 +264,8 @@ impl Metrics {
             queue_wait_cursor: 0,
             queue_waits_by_priority: [Vec::new(), Vec::new(), Vec::new()],
             queue_wait_priority_cursors: [0; 3],
+            latencies_by_class: std::array::from_fn(|_| Vec::new()),
+            latency_class_cursors: [0; SLO_CLASSES],
             qos_served: [0; 3],
             slo: [SloClassStats::default(); SLO_CLASSES],
             served_by_generation: BTreeMap::new(),
@@ -480,6 +488,28 @@ impl Metrics {
         );
     }
 
+    /// Record a served request's end-to-end latency against its SLO class
+    /// (ring-bounded; same clock as the overall latency ring — callers
+    /// pair this with [`record_request`](Self::record_request)).
+    pub fn record_class_latency(&mut self, qos: Option<QosClass>, latency_s: f64) {
+        let c = slo_class_index(qos);
+        push_ring(
+            &mut self.latencies_by_class[c],
+            &mut self.latency_class_cursors[c],
+            REQUEST_LATENCY_WINDOW,
+            latency_s,
+        );
+    }
+
+    /// Latency distribution per SLO class (`None` where a class saw no
+    /// traffic). What [`ReplicaReport`] ships instead of samples.
+    pub fn latency_by_class_summary(&self) -> [Option<Summary>; SLO_CLASSES] {
+        std::array::from_fn(|i| {
+            let v = &self.latencies_by_class[i];
+            (!v.is_empty()).then(|| Summary::of(v))
+        })
+    }
+
     /// Queue-wait samples per priority level (index = `Priority::index()`).
     pub fn queue_waits_by_priority(&self) -> &[Vec<f64>; 3] {
         &self.queue_waits_by_priority
@@ -632,6 +662,9 @@ pub struct ReplicaReport {
     pub served_by_generation: Vec<(u64, usize)>,
     /// Queue-wait distribution per priority (index = `Priority::index()`).
     pub queue_wait_by_priority: [Option<Summary>; 3],
+    /// End-to-end latency distribution per SLO class (index =
+    /// [`slo_class_index`]; `None` where a class saw no traffic).
+    pub latency_by_class: [Option<Summary>; SLO_CLASSES],
     /// Final hot-swap generation of this replica's plan.
     pub generation: u64,
     pub scheme_counts: Vec<(RuntimeScheme, usize)>,
@@ -755,6 +788,21 @@ impl ClusterReport {
             }
         }
         out
+    }
+
+    /// End-to-end latency distribution per SLO class, per-replica
+    /// summaries merged (`None` where a class saw no traffic). Index =
+    /// [`slo_class_index`]. The scenario verdicts read p50/p99 from here.
+    pub fn latency_by_class(&self) -> [Option<Summary>; SLO_CLASSES] {
+        std::array::from_fn(|i| {
+            let parts: Vec<Summary> = self
+                .replicas
+                .iter()
+                .filter_map(|r| r.latency_by_class[i].clone())
+                .collect();
+            let m = Summary::merge(&parts);
+            (m.n > 0).then_some(m)
+        })
     }
 
     /// Cluster-wide per-class SLO accounting (summed over replicas).
@@ -1159,6 +1207,7 @@ mod tests {
                 Some(Summary::of(&[0.001])),
                 Some(Summary::of(&[0.0005])),
             ],
+            latency_by_class: [None, Some(Summary::of(&[lat, lat])), None, None],
             generation: id as u64,
             scheme_counts: vec![(RuntimeScheme::Fp16, 4)],
             latency: Some(Summary::of(&[lat, lat])),
@@ -1259,6 +1308,13 @@ mod tests {
         assert!((flat.slo_by_class[1].hit_rate() - 0.5).abs() < 1e-12);
         assert_eq!(flat.slo_by_class[0].served, 0);
         assert!((flat.slo_by_class[0].hit_rate() - 1.0).abs() < 1e-12);
+        // per-class latency merges replica summaries; untouched classes
+        // stay None
+        let by_class = report.latency_by_class();
+        assert!(by_class[0].is_none() && by_class[2].is_none() && by_class[3].is_none());
+        let standard = by_class[1].as_ref().unwrap();
+        assert_eq!(standard.n, 4);
+        assert!(standard.p99 >= 0.010 && standard.p99 <= 0.030);
         assert_eq!(flat.served_by_generation, vec![(0, 2), (1, 2)]);
         assert!(flat.trace.is_empty(), "no tracing in this synthetic report");
     }
@@ -1387,6 +1443,15 @@ mod tests {
         assert_eq!(m.served_by_generation(), vec![(0, 1), (1, 2)]);
         assert_eq!(slo_class_name(0), "interactive");
         assert_eq!(slo_class_name(SLO_CLASSES - 1), "none");
+        // per-class latency rings: samples land on the request's class,
+        // unclassified traffic on the last slot
+        m.record_class_latency(Some(QosClass::Interactive), 0.010);
+        m.record_class_latency(Some(QosClass::Interactive), 0.020);
+        m.record_class_latency(None, 0.030);
+        let by_class = m.latency_by_class_summary();
+        assert_eq!(by_class[0].as_ref().unwrap().n, 2);
+        assert!(by_class[1].is_none() && by_class[2].is_none());
+        assert!((by_class[SLO_CLASSES - 1].as_ref().unwrap().mean - 0.030).abs() < 1e-12);
     }
 
     #[test]

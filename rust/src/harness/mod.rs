@@ -1,6 +1,8 @@
 //! Shared experiment harness: artifact loading, quantized-model
 //! construction, and evaluation helpers used by `benches/` and `examples/`.
 
+pub mod scenario;
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

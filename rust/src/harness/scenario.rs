@@ -1,0 +1,1762 @@
+//! Scenario engine (DESIGN.md §Scenario-Engine): trace-driven workload
+//! simulation with SLO verdicts.
+//!
+//! A **scenario** is a declarative JSON spec (checked into `scenarios/`)
+//! describing an offered workload against a mini-model [`Cluster`]:
+//! arrival curves (constant / diurnal / flash-crowd spike), a QoS-class
+//! mix schedule, prompt-length and score-vs-generate distributions, a
+//! routing-distribution drift schedule (prompt tokens sampled from a
+//! moving vocab band, which deterministically skews expert routing),
+//! cancel storms, and mid-run replica kill/restart events.
+//!
+//! The replay driver is **tick-quiesced**: virtual time advances in
+//! integer ticks, and between ticks the cluster is drained to a known
+//! state (every non-cancelled admitted request has reached a terminal,
+//! the admission queue is empty). Arrivals inside a tick are submitted
+//! **burst-atomically** ([`Cluster::try_submit_burst`]), so the
+//! admit/reject pattern is a pure function of the spec and its seed —
+//! not of thread scheduling. That is the determinism contract:
+//!
+//! * `deterministic: true` specs (no cancels, no kills, no deadlines)
+//!   reproduce the **entire ledger** — same spec + seed ⇒ identical
+//!   admission and termination counts across runs and across dispatch
+//!   thread counts.
+//! * Specs with cancels or kills still pin the admission-side ledger and
+//!   the accounting identity `admitted == responses + cancelled +
+//!   failed`; only the served/cancelled *split* may move (a cancel can
+//!   race an already-sent reply).
+//!
+//! Each run emits one `BENCH_scenario_<name>.json` with the shared
+//! `mxmoe-bench-v1` envelope plus an **SLO verdict block**: per-class
+//! latency percentiles, deadline-hit rate, shed/reject counts by reason,
+//! replan count, KV preemptions and average bits served, and a list of
+//! pass/fail checks. Ledger-derived checks are always enforced;
+//! wall-clock checks (latency, hit rate) are reported always but only
+//! enforced in full (non-smoke) mode, so shared CI runners cannot flake
+//! the gate.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::{
+    slo_class_name, Cluster, ClusterConfig, ClusterReport, OnlineConfig, ServeConfig, SLO_CLASSES,
+};
+use crate::moe::{ModelConfig, MoeLm};
+use crate::runtime::RuntimeScheme;
+use crate::ser::Json;
+use crate::serve::{Admission, AdmissionConfig, Priority, QosClass, ServeRequest};
+use crate::util::Rng;
+
+use super::{artifacts_dir, mixed_runtime_plan, require_artifacts, save_model_mxt, MINI_MODEL_SEED};
+
+/// Spec schema tag (`"schema"` key of every scenario file).
+pub const SCENARIO_SCHEMA: &str = "mxmoe-scenario-v1";
+/// Envelope schema tag shared by every `BENCH_*.json` the repo emits.
+pub const BENCH_SCHEMA: &str = "mxmoe-bench-v1";
+
+/// Per-ticket and per-tick drain budget: a quiesce that outlives this is
+/// a stall (lost request, router wedge), not a slow machine.
+const QUIESCE_BUDGET: Duration = Duration::from_secs(120);
+
+// ---------------------------------------------------------------------------
+// Spec types
+// ---------------------------------------------------------------------------
+
+/// Offered-load curve, in requests per tick (fractional rates accumulate
+/// across ticks via a carry, so e.g. 0.5/tick yields one arrival every
+/// other tick).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalCurve {
+    /// Flat rate.
+    Constant { rate: f64 },
+    /// `rate · (1 + amplitude · sin(2π·tick/period))`, clamped at 0.
+    Diurnal { rate: f64, amplitude: f64, period: f64 },
+    /// `rate` outside the spike window, `spike_rate` inside
+    /// `[spike_start, spike_start + spike_len)`.
+    Spike { rate: f64, spike_rate: f64, spike_start: usize, spike_len: usize },
+}
+
+impl ArrivalCurve {
+    /// Offered rate at `tick`, requests per tick.
+    pub fn rate_at(&self, tick: usize) -> f64 {
+        match *self {
+            ArrivalCurve::Constant { rate } => rate,
+            ArrivalCurve::Diurnal { rate, amplitude, period } => {
+                let phase = 2.0 * std::f64::consts::PI * tick as f64 / period;
+                (rate * (1.0 + amplitude * phase.sin())).max(0.0)
+            }
+            ArrivalCurve::Spike { rate, spike_rate, spike_start, spike_len } => {
+                if tick >= spike_start && tick < spike_start + spike_len {
+                    spike_rate
+                } else {
+                    rate
+                }
+            }
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            ArrivalCurve::Constant { .. } => "constant",
+            ArrivalCurve::Diurnal { .. } => "diurnal",
+            ArrivalCurve::Spike { .. } => "spike",
+        }
+    }
+}
+
+/// QoS-class mix from `from_tick` until the next phase: relative weights
+/// of Interactive / Standard / Batch arrivals.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MixPhase {
+    pub from_tick: usize,
+    pub interactive: f64,
+    pub standard: f64,
+    pub batch: f64,
+}
+
+/// Routing-drift phase: from `from_tick` on, prompt tokens are sampled
+/// uniformly from the vocab band `[band.0, band.1)` (fractions of the
+/// vocab). Narrowing or moving the band deterministically shifts which
+/// experts the router activates — the drift signal the online replanner
+/// reacts to.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftPhase {
+    pub from_tick: usize,
+    pub band: (f64, f64),
+}
+
+/// Cancel storm: at `tick`, each arrival is cancelled right after
+/// admission with probability `fraction` (decided by the schedule RNG,
+/// so the *requested* cancels are deterministic).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CancelStorm {
+    pub tick: usize,
+    pub fraction: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaAction {
+    Kill,
+    Restart,
+}
+
+/// Mid-run fault injection: kill or restart replica `replica` at the
+/// start of `tick` (before that tick's arrivals).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplicaEvent {
+    pub tick: usize,
+    pub action: ReplicaAction,
+    pub replica: usize,
+}
+
+/// Online-replan knobs; presence turns the scenario's cluster into
+/// [`Cluster::start_online`] (calibration + sensitivity + MCKP replanner,
+/// mirroring `mxmoe trace-dump`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OnlineKnobs {
+    pub drift_threshold: f64,
+    pub min_tokens_between: usize,
+}
+
+/// Admission front-door knobs the scenario runs under.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmissionKnobs {
+    pub max_queued_seqs: usize,
+    pub max_queued_tokens: usize,
+    pub privileged_reserve: f64,
+    pub auto_reserve: bool,
+}
+
+impl Default for AdmissionKnobs {
+    fn default() -> AdmissionKnobs {
+        AdmissionKnobs {
+            max_queued_seqs: 64,
+            max_queued_tokens: 8192,
+            privileged_reserve: 0.0,
+            auto_reserve: false,
+        }
+    }
+}
+
+/// SLO bounds of the verdict block. Ledger-derived bounds are enforced
+/// in every mode; `min_hit_rate` / `max_p99_ms` are wall-clock and only
+/// enforced in full (non-smoke) runs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SloBounds {
+    pub max_shed_rate: Option<f64>,
+    pub min_served: Option<usize>,
+    pub min_replans: Option<usize>,
+    pub min_queue_full: Option<usize>,
+    pub min_quota: Option<usize>,
+    pub min_hit_rate: Option<f64>,
+    /// `(QosClass index, bound in ms)` pairs.
+    pub max_p99_ms: Vec<(usize, f64)>,
+}
+
+/// One declarative workload scenario (`scenarios/<name>.json`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub description: String,
+    pub seed: u64,
+    pub ticks: usize,
+    pub replicas: usize,
+    /// `true` promises full-ledger reproducibility; [`validate`] then
+    /// forbids the racy ingredients (cancels, kills, deadlines, online
+    /// replan).
+    pub deterministic: bool,
+    pub arrival: ArrivalCurve,
+    pub mix: Vec<MixPhase>,
+    /// Inclusive prompt-length range.
+    pub prompt_tokens: (usize, usize),
+    /// Fraction of arrivals that are KV-cached generations (the rest
+    /// score).
+    pub generate_fraction: f64,
+    pub max_new_tokens: usize,
+    /// Per-QoS-class deadline (ms), indexed by [`QosClass::index`].
+    pub deadline_ms: [Option<u64>; 3],
+    pub cancel_storms: Vec<CancelStorm>,
+    pub drift: Vec<DriftPhase>,
+    pub replica_events: Vec<ReplicaEvent>,
+    pub online: Option<OnlineKnobs>,
+    pub admission: AdmissionKnobs,
+    pub slo: SloBounds,
+}
+
+// ---------------------------------------------------------------------------
+// Spec JSON I/O
+// ---------------------------------------------------------------------------
+
+fn opt_f64(j: &Json, key: &str) -> Result<Option<f64>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(v.as_f64().with_context(|| format!("'{key}' must be a number"))?)),
+    }
+}
+
+fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(
+            v.as_usize().with_context(|| format!("'{key}' must be a non-negative integer"))?,
+        )),
+    }
+}
+
+fn opt_bool(j: &Json, key: &str) -> Result<Option<bool>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(v.as_bool().with_context(|| format!("'{key}' must be a bool"))?)),
+    }
+}
+
+fn req_arr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json]> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("'{key}' must be an array"))
+}
+
+fn known_keys(j: &Json, what: &str, allowed: &[&str]) -> Result<()> {
+    if let Json::Obj(m) = j {
+        for k in m.keys() {
+            ensure!(allowed.contains(&k.as_str()), "unknown {what} key '{k}'");
+        }
+        Ok(())
+    } else {
+        bail!("{what} must be an object")
+    }
+}
+
+impl ScenarioSpec {
+    /// Parse a spec from JSON text; structural errors (wrong types,
+    /// unknown keys, missing fields) surface here, semantic errors in
+    /// [`validate`](Self::validate) — `parse` runs both.
+    pub fn parse(text: &str) -> Result<ScenarioSpec> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("scenario JSON: {e}"))?;
+        let spec = ScenarioSpec::from_json(&j)?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ScenarioSpec> {
+        known_keys(
+            j,
+            "scenario",
+            &[
+                "schema", "name", "description", "seed", "ticks", "replicas", "deterministic",
+                "arrival", "mix", "prompt_tokens", "generate_fraction", "max_new_tokens",
+                "deadline_ms", "cancel_storms", "drift", "replica_events", "online", "admission",
+                "slo",
+            ],
+        )?;
+        let schema = j.req_str("schema")?;
+        ensure!(schema == SCENARIO_SCHEMA, "schema must be '{SCENARIO_SCHEMA}', got '{schema}'");
+
+        let arrival = {
+            let a = j.get("arrival").context("'arrival' is required")?;
+            known_keys(
+                a,
+                "arrival",
+                &["curve", "rate", "amplitude", "period", "spike_rate", "spike_start", "spike_len"],
+            )?;
+            let rate = a.req_f64("rate")?;
+            match a.req_str("curve")? {
+                "constant" => ArrivalCurve::Constant { rate },
+                "diurnal" => ArrivalCurve::Diurnal {
+                    rate,
+                    amplitude: a.req_f64("amplitude")?,
+                    period: a.req_f64("period")?,
+                },
+                "spike" => ArrivalCurve::Spike {
+                    rate,
+                    spike_rate: a.req_f64("spike_rate")?,
+                    spike_start: a.req_usize("spike_start")?,
+                    spike_len: a.req_usize("spike_len")?,
+                },
+                c => bail!("unknown arrival curve '{c}' (constant|diurnal|spike)"),
+            }
+        };
+
+        let mix = req_arr(j, "mix")?
+            .iter()
+            .map(|p| {
+                known_keys(p, "mix phase", &["from_tick", "interactive", "standard", "batch"])?;
+                Ok(MixPhase {
+                    from_tick: p.req_usize("from_tick")?,
+                    interactive: opt_f64(p, "interactive")?.unwrap_or(0.0),
+                    standard: opt_f64(p, "standard")?.unwrap_or(0.0),
+                    batch: opt_f64(p, "batch")?.unwrap_or(0.0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let prompt_tokens = {
+            let p = j.get("prompt_tokens").context("'prompt_tokens' is required")?;
+            known_keys(p, "prompt_tokens", &["min", "max"])?;
+            (p.req_usize("min")?, p.req_usize("max")?)
+        };
+
+        let mut deadline_ms = [None; 3];
+        if let Some(d) = j.get("deadline_ms") {
+            known_keys(d, "deadline_ms", &["interactive", "standard", "batch"])?;
+            for q in QosClass::ALL {
+                deadline_ms[q.index()] = opt_usize(d, q.name())?.map(|ms| ms as u64);
+            }
+        }
+
+        let cancel_storms = match j.get("cancel_storms") {
+            None => Vec::new(),
+            Some(_) => req_arr(j, "cancel_storms")?
+                .iter()
+                .map(|s| {
+                    known_keys(s, "cancel storm", &["tick", "fraction"])?;
+                    Ok(CancelStorm { tick: s.req_usize("tick")?, fraction: s.req_f64("fraction")? })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+
+        let drift = match j.get("drift") {
+            None => Vec::new(),
+            Some(_) => req_arr(j, "drift")?
+                .iter()
+                .map(|p| {
+                    known_keys(p, "drift phase", &["from_tick", "band"])?;
+                    let band = p
+                        .get("band")
+                        .and_then(Json::as_arr)
+                        .filter(|b| b.len() == 2)
+                        .context("'band' must be a [lo, hi] array")?;
+                    let lo = band[0].as_f64().context("band lo must be a number")?;
+                    let hi = band[1].as_f64().context("band hi must be a number")?;
+                    Ok(DriftPhase { from_tick: p.req_usize("from_tick")?, band: (lo, hi) })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+
+        let replica_events = match j.get("replica_events") {
+            None => Vec::new(),
+            Some(_) => req_arr(j, "replica_events")?
+                .iter()
+                .map(|e| {
+                    known_keys(e, "replica event", &["tick", "action", "replica"])?;
+                    let action = match e.req_str("action")? {
+                        "kill" => ReplicaAction::Kill,
+                        "restart" => ReplicaAction::Restart,
+                        a => bail!("unknown replica action '{a}' (kill|restart)"),
+                    };
+                    Ok(ReplicaEvent {
+                        tick: e.req_usize("tick")?,
+                        action,
+                        replica: e.req_usize("replica")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+
+        let online = match j.get("online") {
+            None => None,
+            Some(o) => {
+                known_keys(o, "online", &["drift_threshold", "min_tokens_between"])?;
+                Some(OnlineKnobs {
+                    drift_threshold: opt_f64(o, "drift_threshold")?.unwrap_or(0.0),
+                    min_tokens_between: opt_usize(o, "min_tokens_between")?.unwrap_or(1),
+                })
+            }
+        };
+
+        let admission = match j.get("admission") {
+            None => AdmissionKnobs::default(),
+            Some(a) => {
+                known_keys(
+                    a,
+                    "admission",
+                    &["max_queued_seqs", "max_queued_tokens", "privileged_reserve", "auto_reserve"],
+                )?;
+                let d = AdmissionKnobs::default();
+                AdmissionKnobs {
+                    max_queued_seqs: opt_usize(a, "max_queued_seqs")?.unwrap_or(d.max_queued_seqs),
+                    max_queued_tokens: opt_usize(a, "max_queued_tokens")?
+                        .unwrap_or(d.max_queued_tokens),
+                    privileged_reserve: opt_f64(a, "privileged_reserve")?
+                        .unwrap_or(d.privileged_reserve),
+                    auto_reserve: opt_bool(a, "auto_reserve")?.unwrap_or(d.auto_reserve),
+                }
+            }
+        };
+
+        let slo = match j.get("slo") {
+            None => SloBounds::default(),
+            Some(s) => {
+                known_keys(
+                    s,
+                    "slo",
+                    &[
+                        "max_shed_rate", "min_served", "min_replans", "min_queue_full",
+                        "min_quota", "min_hit_rate", "max_p99_ms",
+                    ],
+                )?;
+                let mut max_p99_ms = Vec::new();
+                if let Some(p) = s.get("max_p99_ms") {
+                    known_keys(p, "max_p99_ms", &["interactive", "standard", "batch", "none"])?;
+                    for i in 0..SLO_CLASSES {
+                        if let Some(ms) = opt_f64(p, slo_class_name(i))? {
+                            max_p99_ms.push((i, ms));
+                        }
+                    }
+                }
+                SloBounds {
+                    max_shed_rate: opt_f64(s, "max_shed_rate")?,
+                    min_served: opt_usize(s, "min_served")?,
+                    min_replans: opt_usize(s, "min_replans")?,
+                    min_queue_full: opt_usize(s, "min_queue_full")?,
+                    min_quota: opt_usize(s, "min_quota")?,
+                    min_hit_rate: opt_f64(s, "min_hit_rate")?,
+                    max_p99_ms,
+                }
+            }
+        };
+
+        Ok(ScenarioSpec {
+            name: j.req_str("name")?.to_string(),
+            description: j.get("description").and_then(Json::as_str).unwrap_or("").to_string(),
+            seed: j.req_usize("seed")? as u64,
+            ticks: j.req_usize("ticks")?,
+            replicas: j.req_usize("replicas")?,
+            deterministic: opt_bool(j, "deterministic")?.unwrap_or(false),
+            arrival,
+            mix,
+            prompt_tokens,
+            generate_fraction: opt_f64(j, "generate_fraction")?.unwrap_or(0.0),
+            max_new_tokens: opt_usize(j, "max_new_tokens")?.unwrap_or(4),
+            deadline_ms,
+            cancel_storms,
+            drift,
+            replica_events,
+            online,
+            admission,
+            slo,
+        })
+    }
+
+    /// Inverse of [`from_json`](Self::from_json); `scenario validate`
+    /// round-trips every checked-in spec through this.
+    pub fn to_json(&self) -> Json {
+        let arrival = match self.arrival {
+            ArrivalCurve::Constant { rate } => {
+                Json::obj(vec![("curve", Json::str("constant")), ("rate", Json::num(rate))])
+            }
+            ArrivalCurve::Diurnal { rate, amplitude, period } => Json::obj(vec![
+                ("curve", Json::str("diurnal")),
+                ("rate", Json::num(rate)),
+                ("amplitude", Json::num(amplitude)),
+                ("period", Json::num(period)),
+            ]),
+            ArrivalCurve::Spike { rate, spike_rate, spike_start, spike_len } => Json::obj(vec![
+                ("curve", Json::str("spike")),
+                ("rate", Json::num(rate)),
+                ("spike_rate", Json::num(spike_rate)),
+                ("spike_start", Json::num(spike_start as f64)),
+                ("spike_len", Json::num(spike_len as f64)),
+            ]),
+        };
+        let mut pairs = vec![
+            ("schema", Json::str(SCENARIO_SCHEMA)),
+            ("name", Json::str(&self.name)),
+            ("description", Json::str(&self.description)),
+            ("seed", Json::num(self.seed as f64)),
+            ("ticks", Json::num(self.ticks as f64)),
+            ("replicas", Json::num(self.replicas as f64)),
+            ("deterministic", Json::Bool(self.deterministic)),
+            ("arrival", arrival),
+            (
+                "mix",
+                Json::arr(self.mix.iter().map(|p| {
+                    Json::obj(vec![
+                        ("from_tick", Json::num(p.from_tick as f64)),
+                        ("interactive", Json::num(p.interactive)),
+                        ("standard", Json::num(p.standard)),
+                        ("batch", Json::num(p.batch)),
+                    ])
+                })),
+            ),
+            (
+                "prompt_tokens",
+                Json::obj(vec![
+                    ("min", Json::num(self.prompt_tokens.0 as f64)),
+                    ("max", Json::num(self.prompt_tokens.1 as f64)),
+                ]),
+            ),
+            ("generate_fraction", Json::num(self.generate_fraction)),
+            ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
+        ];
+        if self.deadline_ms.iter().any(Option::is_some) {
+            let mut d = Vec::new();
+            for q in QosClass::ALL {
+                if let Some(ms) = self.deadline_ms[q.index()] {
+                    d.push((q.name(), Json::num(ms as f64)));
+                }
+            }
+            pairs.push(("deadline_ms", Json::obj(d)));
+        }
+        if !self.cancel_storms.is_empty() {
+            pairs.push((
+                "cancel_storms",
+                Json::arr(self.cancel_storms.iter().map(|s| {
+                    Json::obj(vec![
+                        ("tick", Json::num(s.tick as f64)),
+                        ("fraction", Json::num(s.fraction)),
+                    ])
+                })),
+            ));
+        }
+        if !self.drift.is_empty() {
+            pairs.push((
+                "drift",
+                Json::arr(self.drift.iter().map(|p| {
+                    Json::obj(vec![
+                        ("from_tick", Json::num(p.from_tick as f64)),
+                        ("band", Json::arr(vec![Json::num(p.band.0), Json::num(p.band.1)])),
+                    ])
+                })),
+            ));
+        }
+        if !self.replica_events.is_empty() {
+            pairs.push((
+                "replica_events",
+                Json::arr(self.replica_events.iter().map(|e| {
+                    Json::obj(vec![
+                        ("tick", Json::num(e.tick as f64)),
+                        (
+                            "action",
+                            Json::str(match e.action {
+                                ReplicaAction::Kill => "kill",
+                                ReplicaAction::Restart => "restart",
+                            }),
+                        ),
+                        ("replica", Json::num(e.replica as f64)),
+                    ])
+                })),
+            ));
+        }
+        if let Some(o) = self.online {
+            pairs.push((
+                "online",
+                Json::obj(vec![
+                    ("drift_threshold", Json::num(o.drift_threshold)),
+                    ("min_tokens_between", Json::num(o.min_tokens_between as f64)),
+                ]),
+            ));
+        }
+        pairs.push((
+            "admission",
+            Json::obj(vec![
+                ("max_queued_seqs", Json::num(self.admission.max_queued_seqs as f64)),
+                ("max_queued_tokens", Json::num(self.admission.max_queued_tokens as f64)),
+                ("privileged_reserve", Json::num(self.admission.privileged_reserve)),
+                ("auto_reserve", Json::Bool(self.admission.auto_reserve)),
+            ]),
+        ));
+        let mut slo = Vec::new();
+        if let Some(x) = self.slo.max_shed_rate {
+            slo.push(("max_shed_rate", Json::num(x)));
+        }
+        if let Some(x) = self.slo.min_served {
+            slo.push(("min_served", Json::num(x as f64)));
+        }
+        if let Some(x) = self.slo.min_replans {
+            slo.push(("min_replans", Json::num(x as f64)));
+        }
+        if let Some(x) = self.slo.min_queue_full {
+            slo.push(("min_queue_full", Json::num(x as f64)));
+        }
+        if let Some(x) = self.slo.min_quota {
+            slo.push(("min_quota", Json::num(x as f64)));
+        }
+        if let Some(x) = self.slo.min_hit_rate {
+            slo.push(("min_hit_rate", Json::num(x)));
+        }
+        if !self.slo.max_p99_ms.is_empty() {
+            slo.push((
+                "max_p99_ms",
+                Json::obj(
+                    self.slo
+                        .max_p99_ms
+                        .iter()
+                        .map(|(i, ms)| (slo_class_name(*i), Json::num(*ms)))
+                        .collect(),
+                ),
+            ));
+        }
+        if !slo.is_empty() {
+            pairs.push(("slo", Json::obj(slo)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Semantic validation — and the home of the determinism contract:
+    /// a `deterministic: true` spec may not carry cancel storms, replica
+    /// events, deadlines, or online replan, because each of those makes
+    /// part of the ledger timing-dependent.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.name.is_empty(), "name must be non-empty");
+        ensure!(
+            self.name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+            "name '{}' must be [a-z0-9_]+ (it names the BENCH file)",
+            self.name
+        );
+        ensure!(self.ticks >= 1, "ticks must be >= 1");
+        ensure!(self.replicas >= 1, "replicas must be >= 1");
+        match self.arrival {
+            ArrivalCurve::Constant { rate } => ensure!(rate > 0.0, "arrival rate must be > 0"),
+            ArrivalCurve::Diurnal { rate, amplitude, period } => {
+                ensure!(rate > 0.0, "arrival rate must be > 0");
+                ensure!((0.0..=1.0).contains(&amplitude), "amplitude must be in [0, 1]");
+                ensure!(period > 0.0, "period must be > 0");
+            }
+            ArrivalCurve::Spike { rate, spike_rate, spike_start, spike_len } => {
+                ensure!(rate >= 0.0 && spike_rate > 0.0, "spike rates must be non-negative");
+                ensure!(spike_len >= 1, "spike_len must be >= 1");
+                ensure!(spike_start < self.ticks, "spike_start must be inside the run");
+            }
+        }
+        ensure!(!self.mix.is_empty(), "mix needs at least one phase");
+        ensure!(self.mix[0].from_tick == 0, "first mix phase must start at tick 0");
+        for (i, p) in self.mix.iter().enumerate() {
+            ensure!(
+                p.interactive >= 0.0 && p.standard >= 0.0 && p.batch >= 0.0,
+                "mix weights must be non-negative"
+            );
+            ensure!(p.interactive + p.standard + p.batch > 0.0, "mix phase {i} has zero mass");
+            if i > 0 {
+                ensure!(
+                    p.from_tick > self.mix[i - 1].from_tick,
+                    "mix phases must be in strictly increasing tick order"
+                );
+            }
+        }
+        ensure!(
+            self.prompt_tokens.0 >= 1 && self.prompt_tokens.0 <= self.prompt_tokens.1,
+            "prompt_tokens must satisfy 1 <= min <= max"
+        );
+        ensure!(
+            (0.0..=1.0).contains(&self.generate_fraction),
+            "generate_fraction must be in [0, 1]"
+        );
+        if self.generate_fraction > 0.0 {
+            ensure!(self.max_new_tokens >= 1, "max_new_tokens must be >= 1 when generating");
+        }
+        for s in &self.cancel_storms {
+            ensure!(s.tick < self.ticks, "cancel storm tick {} outside the run", s.tick);
+            ensure!((0.0..=1.0).contains(&s.fraction), "cancel fraction must be in [0, 1]");
+        }
+        for (i, p) in self.drift.iter().enumerate() {
+            ensure!(
+                0.0 <= p.band.0 && p.band.0 < p.band.1 && p.band.1 <= 1.0,
+                "drift band must satisfy 0 <= lo < hi <= 1"
+            );
+            if i > 0 {
+                ensure!(
+                    p.from_tick > self.drift[i - 1].from_tick,
+                    "drift phases must be in strictly increasing tick order"
+                );
+            }
+        }
+        // replay the kill/restart timeline: events must be tick-ordered,
+        // kill only live replicas, restart only dead ones, and at least
+        // one replica must stay alive (a fully dead cluster closes the
+        // router and the rest of the scenario cannot run)
+        let mut dead = vec![false; self.replicas];
+        let mut last_tick = 0usize;
+        for e in &self.replica_events {
+            ensure!(e.tick < self.ticks, "replica event tick {} outside the run", e.tick);
+            ensure!(
+                e.replica < self.replicas,
+                "replica event targets replica {} of {}",
+                e.replica,
+                self.replicas
+            );
+            ensure!(e.tick >= last_tick, "replica events must be in tick order");
+            last_tick = e.tick;
+            match e.action {
+                ReplicaAction::Kill => {
+                    ensure!(!dead[e.replica], "replica {} killed twice", e.replica);
+                    dead[e.replica] = true;
+                }
+                ReplicaAction::Restart => {
+                    ensure!(dead[e.replica], "replica {} restarted while alive", e.replica);
+                    dead[e.replica] = false;
+                }
+            }
+            ensure!(
+                dead.iter().any(|d| !d),
+                "every replica dead at tick {} — at least one must stay alive",
+                e.tick
+            );
+        }
+        ensure!(
+            (0.0..1.0).contains(&self.admission.privileged_reserve),
+            "privileged_reserve must be in [0, 1)"
+        );
+        if let Some(r) = self.slo.max_shed_rate {
+            ensure!((0.0..=1.0).contains(&r), "max_shed_rate must be in [0, 1]");
+        }
+        if let Some(r) = self.slo.min_hit_rate {
+            ensure!((0.0..=1.0).contains(&r), "min_hit_rate must be in [0, 1]");
+        }
+        if self.deterministic {
+            ensure!(
+                self.cancel_storms.is_empty(),
+                "deterministic scenario cannot have cancel storms (served/cancelled split races)"
+            );
+            ensure!(
+                self.replica_events.is_empty(),
+                "deterministic scenario cannot have replica events (eviction timing races)"
+            );
+            ensure!(
+                self.deadline_ms.iter().all(Option::is_none),
+                "deterministic scenario cannot set deadlines (projected-miss sheds are wall-clock)"
+            );
+            ensure!(
+                self.online.is_none(),
+                "deterministic scenario cannot replan online (replan timing is wall-clock)"
+            );
+            ensure!(
+                self.slo.min_replans.is_none(),
+                "deterministic scenario cannot bound replans"
+            );
+        } else if self.slo.min_replans.is_some() {
+            ensure!(self.online.is_some(), "min_replans needs 'online' replanning enabled");
+        }
+        Ok(())
+    }
+
+    /// Kills/restarts the spec schedules — the verdict pins the ledger to
+    /// these counts.
+    fn expected_faults(&self) -> (usize, usize) {
+        let kills = self
+            .replica_events
+            .iter()
+            .filter(|e| e.action == ReplicaAction::Kill)
+            .count();
+        (kills, self.replica_events.len() - kills)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic schedule
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+struct ArrivalPlan {
+    tokens: Vec<u32>,
+    qos: QosClass,
+    generate: bool,
+    cancel: bool,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+struct TickPlan {
+    arrivals: Vec<ArrivalPlan>,
+    events: Vec<ReplicaEvent>,
+}
+
+fn mix_at(spec: &ScenarioSpec, tick: usize) -> &MixPhase {
+    spec.mix.iter().rev().find(|p| p.from_tick <= tick).unwrap_or(&spec.mix[0])
+}
+
+fn band_at(spec: &ScenarioSpec, tick: usize) -> (f64, f64) {
+    spec.drift
+        .iter()
+        .rev()
+        .find(|p| p.from_tick <= tick)
+        .map(|p| p.band)
+        .unwrap_or((0.0, 1.0))
+}
+
+/// Expand a spec into its per-tick arrival/cancel/fault plan. Pure
+/// function of (spec, vocab): a single sequentially-consumed RNG seeded
+/// from `spec.seed`, fractional-rate carry accumulation, and schedules
+/// resolved per tick — this is where determinism is manufactured.
+fn build_schedule(spec: &ScenarioSpec, vocab: usize) -> Vec<TickPlan> {
+    let mut rng = Rng::new(spec.seed);
+    let mut carry = 0.0f64;
+    (0..spec.ticks)
+        .map(|tick| {
+            carry += spec.arrival.rate_at(tick);
+            let n = carry.floor() as usize;
+            carry -= n as f64;
+            let mix = *mix_at(spec, tick);
+            let (blo, bhi) = band_at(spec, tick);
+            let lo_tok = (blo * vocab as f64) as u32;
+            let hi_tok = ((bhi * vocab as f64) as u32).clamp(lo_tok + 1, vocab as u32);
+            let storm = spec.cancel_storms.iter().find(|s| s.tick == tick);
+            let arrivals = (0..n)
+                .map(|_| {
+                    let qos = QosClass::ALL
+                        [rng.weighted(&[mix.interactive, mix.standard, mix.batch])];
+                    let span = (spec.prompt_tokens.1 - spec.prompt_tokens.0 + 1) as u64;
+                    let len = spec.prompt_tokens.0 + rng.below(span) as usize;
+                    let tokens = (0..len)
+                        .map(|_| lo_tok + rng.below((hi_tok - lo_tok) as u64) as u32)
+                        .collect();
+                    let generate = rng.next_f64() < spec.generate_fraction;
+                    let cancel = storm.is_some_and(|s| rng.next_f64() < s.fraction);
+                    ArrivalPlan { tokens, qos, generate, cancel }
+                })
+                .collect();
+            let events =
+                spec.replica_events.iter().filter(|e| e.tick == tick).copied().collect();
+            TickPlan { arrivals, events }
+        })
+        .collect()
+}
+
+fn to_request(spec: &ScenarioSpec, a: &ArrivalPlan) -> ServeRequest {
+    let mut req = if a.generate {
+        ServeRequest::generate(a.tokens.clone(), spec.max_new_tokens, vec![])
+    } else {
+        ServeRequest::new(a.tokens.clone())
+    };
+    req = req.qos(a.qos);
+    if a.qos == QosClass::Batch {
+        req = req.priority(Priority::Low);
+    }
+    if let Some(ms) = spec.deadline_ms[a.qos.index()] {
+        req = req.deadline(Duration::from_millis(ms));
+    }
+    req
+}
+
+// ---------------------------------------------------------------------------
+// Ledger, verdict, outcome
+// ---------------------------------------------------------------------------
+
+/// Admission/termination accounting of one scenario run. For
+/// `deterministic: true` specs the whole struct reproduces bit-for-bit;
+/// for cancel/kill specs the admission-side fields and the identity
+/// `admitted == responses + cancelled + failed` are still pinned.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Ledger {
+    pub arrivals: usize,
+    pub admitted: usize,
+    pub rejected_queue_full: usize,
+    pub rejected_deadline: usize,
+    pub rejected_quota: usize,
+    pub rejected_kv: usize,
+    pub cancel_requested: usize,
+    pub responses: usize,
+    pub cancelled: usize,
+    pub failed: usize,
+    pub kills: usize,
+    pub restarts: usize,
+}
+
+impl Ledger {
+    /// Shed at the front door, all reject reasons.
+    pub fn shed(&self) -> usize {
+        self.rejected_queue_full + self.rejected_deadline + self.rejected_quota + self.rejected_kv
+    }
+
+    /// Requests that reached *some* terminal past admission.
+    pub fn terminated(&self) -> usize {
+        self.responses + self.cancelled + self.failed
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arrivals", Json::num(self.arrivals as f64)),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("rejected_queue_full", Json::num(self.rejected_queue_full as f64)),
+            ("rejected_deadline", Json::num(self.rejected_deadline as f64)),
+            ("rejected_quota", Json::num(self.rejected_quota as f64)),
+            ("rejected_kv", Json::num(self.rejected_kv as f64)),
+            ("cancel_requested", Json::num(self.cancel_requested as f64)),
+            ("responses", Json::num(self.responses as f64)),
+            ("cancelled", Json::num(self.cancelled as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("kills", Json::num(self.kills as f64)),
+            ("restarts", Json::num(self.restarts as f64)),
+        ])
+    }
+}
+
+/// One verdict line: `value op bound`. Unenforced checks (wall-clock
+/// bounds in smoke mode) are reported but cannot fail the verdict.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Check {
+    pub name: String,
+    pub value: f64,
+    pub bound: f64,
+    pub op: &'static str,
+    pub pass: bool,
+    pub enforced: bool,
+}
+
+impl Check {
+    fn new(
+        name: impl Into<String>,
+        value: f64,
+        bound: f64,
+        op: &'static str,
+        enforced: bool,
+    ) -> Check {
+        let pass = match op {
+            "<=" => value <= bound,
+            ">=" => value >= bound,
+            "==" => value == bound,
+            _ => unreachable!("check op"),
+        };
+        Check { name: name.into(), value, bound, op, pass, enforced }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("value", Json::num(self.value)),
+            ("bound", Json::num(self.bound)),
+            ("op", Json::str(self.op)),
+            ("pass", Json::Bool(self.pass)),
+            ("enforced", Json::Bool(self.enforced)),
+        ])
+    }
+}
+
+/// SLO verdict: fails iff any *enforced* check fails.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Verdict {
+    pub checks: Vec<Check>,
+}
+
+impl Verdict {
+    pub fn passed(&self) -> bool {
+        self.checks.iter().all(|c| c.pass || !c.enforced)
+    }
+
+    pub fn status(&self) -> &'static str {
+        if self.passed() {
+            "pass"
+        } else {
+            "fail"
+        }
+    }
+}
+
+/// Per-QoS-class slice of the SLO block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassSlo {
+    pub class: &'static str,
+    pub served: usize,
+    pub deadline_hit: usize,
+    pub deadline_miss: usize,
+    pub p50_ms: Option<f64>,
+    pub p99_ms: Option<f64>,
+}
+
+/// Everything a scenario run reports besides the ledger.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloBlock {
+    pub per_class: Vec<ClassSlo>,
+    /// Hit rate over every deadline-judged request; 1.0 when nothing was
+    /// judged.
+    pub deadline_hit_rate: f64,
+    pub replans: usize,
+    pub kv_preemptions: usize,
+    /// Slot-weighted average weight bits of the final serving plans.
+    pub avg_weight_bits: f64,
+    pub kv_avg_bits: f64,
+}
+
+/// Result of one scenario run, ready for JSON emission.
+#[derive(Clone, Debug)]
+pub struct ScenarioOutcome {
+    pub name: String,
+    pub seed: u64,
+    pub deterministic: bool,
+    pub smoke: bool,
+    pub ticks: usize,
+    pub replicas: usize,
+    pub ledger: Ledger,
+    pub slo: SloBlock,
+    pub verdict: Verdict,
+    pub elapsed_s: f64,
+}
+
+fn scheme_weight_bits(s: RuntimeScheme) -> f64 {
+    match s {
+        RuntimeScheme::Fp16 => 16.0,
+        RuntimeScheme::W4A16 => 4.0,
+        RuntimeScheme::W8A8 => 8.0,
+        RuntimeScheme::W4A4 => 4.0,
+    }
+}
+
+fn avg_plan_bits(report: &ClusterReport) -> f64 {
+    let (mut num, mut den) = (0.0f64, 0usize);
+    for r in &report.replicas {
+        for (s, n) in &r.scheme_counts {
+            num += scheme_weight_bits(*s) * *n as f64;
+            den += n;
+        }
+    }
+    if den == 0 {
+        0.0
+    } else {
+        num / den as f64
+    }
+}
+
+fn build_slo_block(report: &ClusterReport) -> SloBlock {
+    let flat = report.flatten();
+    let slo = report.slo_by_class();
+    let lat = report.latency_by_class();
+    let per_class = (0..SLO_CLASSES)
+        .map(|i| ClassSlo {
+            class: slo_class_name(i),
+            served: slo[i].served,
+            deadline_hit: slo[i].deadline_hit,
+            deadline_miss: slo[i].deadline_miss,
+            p50_ms: lat[i].as_ref().map(|s| s.p50 * 1e3),
+            p99_ms: lat[i].as_ref().map(|s| s.p99 * 1e3),
+        })
+        .collect();
+    let judged: usize = slo.iter().map(|s| s.deadline_hit + s.deadline_miss).sum();
+    let hits: usize = slo.iter().map(|s| s.deadline_hit).sum();
+    SloBlock {
+        per_class,
+        deadline_hit_rate: if judged == 0 { 1.0 } else { hits as f64 / judged as f64 },
+        replans: flat.replans,
+        kv_preemptions: flat.kv_preemptions,
+        avg_weight_bits: avg_plan_bits(report),
+        kv_avg_bits: flat.kv_avg_bits,
+    }
+}
+
+fn compute_verdict(spec: &ScenarioSpec, smoke: bool, ledger: &Ledger, slo: &SloBlock) -> Verdict {
+    let mut checks = Vec::new();
+    // the accounting identity is the anchor: every admitted request must
+    // reach exactly one terminal (response, cancelled, failed)
+    checks.push(Check::new(
+        "ledger_balanced",
+        ledger.terminated() as f64,
+        ledger.admitted as f64,
+        "==",
+        true,
+    ));
+    let (kills, restarts) = spec.expected_faults();
+    checks.push(Check::new("kills", ledger.kills as f64, kills as f64, "==", true));
+    checks.push(Check::new("restarts", ledger.restarts as f64, restarts as f64, "==", true));
+    if let Some(x) = spec.slo.max_shed_rate {
+        let rate = ledger.shed() as f64 / ledger.arrivals.max(1) as f64;
+        checks.push(Check::new("shed_rate", rate, x, "<=", true));
+    }
+    if let Some(x) = spec.slo.min_served {
+        checks.push(Check::new("served", ledger.responses as f64, x as f64, ">=", true));
+    }
+    if let Some(x) = spec.slo.min_queue_full {
+        checks.push(Check::new(
+            "queue_full_rejects",
+            ledger.rejected_queue_full as f64,
+            x as f64,
+            ">=",
+            true,
+        ));
+    }
+    if let Some(x) = spec.slo.min_quota {
+        checks.push(Check::new(
+            "quota_rejects",
+            ledger.rejected_quota as f64,
+            x as f64,
+            ">=",
+            true,
+        ));
+    }
+    if let Some(x) = spec.slo.min_replans {
+        checks.push(Check::new("replans", slo.replans as f64, x as f64, ">=", true));
+    }
+    // wall-clock bounds: reported in every mode, enforced only in full
+    // runs (shared CI runners must not flake the gate)
+    if let Some(x) = spec.slo.min_hit_rate {
+        checks.push(Check::new("deadline_hit_rate", slo.deadline_hit_rate, x, ">=", !smoke));
+    }
+    for (i, ms) in &spec.slo.max_p99_ms {
+        let value = slo.per_class[*i].p99_ms.unwrap_or(0.0);
+        checks.push(Check::new(format!("p99_{}_ms", slo_class_name(*i)), value, *ms, "<=", !smoke));
+    }
+    Verdict { checks }
+}
+
+// ---------------------------------------------------------------------------
+// Replay driver
+// ---------------------------------------------------------------------------
+
+/// Driver knobs that are not part of the spec (and deliberately excluded
+/// from the determinism contract's inputs — the ledger must not depend
+/// on them).
+#[derive(Clone, Debug, Default)]
+pub struct RunOptions {
+    /// Smoke mode: wall-clock checks reported but not enforced.
+    pub smoke: bool,
+    /// Per-replica dispatch-pool override; the determinism test sweeps
+    /// this to prove thread-count independence.
+    pub dispatch_threads: Option<usize>,
+}
+
+/// Model under test: the cached `ci-mini` checkpoint when present
+/// (CI path), else the identical checkpoint re-derived in-process from
+/// [`MINI_MODEL_SEED`] and written to a per-scenario temp file.
+fn model_source(scenario: &str) -> Result<(ModelConfig, MoeLm, PathBuf)> {
+    let mini = artifacts_dir().join("model_ci-mini.mxt");
+    if mini.exists() {
+        let (cfg, lm) = super::load_model("ci-mini")?;
+        return Ok((cfg, lm, mini));
+    }
+    if std::env::var("MXMOE_REQUIRE_MINI_MODEL").map(|v| v == "1").unwrap_or(false) {
+        bail!("MXMOE_REQUIRE_MINI_MODEL=1 but {mini:?} missing — run `make mini-model`");
+    }
+    let cfg = ModelConfig::by_name("ci-mini")?;
+    let lm = MoeLm::random(&cfg, &mut Rng::new(MINI_MODEL_SEED));
+    let path = std::env::temp_dir().join(format!("mxmoe_scenario_{scenario}.mxt"));
+    save_model_mxt(&lm, &path)?;
+    Ok((cfg, lm, path))
+}
+
+/// Replay `spec` against a fresh mini-model cluster and compute its
+/// verdict. Requires the AOT artifacts (`make artifacts`); callers gate
+/// with [`require_artifacts`] to self-skip locally.
+pub fn run_scenario(spec: &ScenarioSpec, opts: &RunOptions) -> Result<ScenarioOutcome> {
+    spec.validate()?;
+    let Some(artifacts) = require_artifacts() else {
+        bail!("AOT artifacts not built — run `make artifacts` first");
+    };
+    let (cfg, lm, weights) = model_source(&spec.name)?;
+    let schedule = build_schedule(spec, cfg.vocab);
+
+    let cluster_cfg = ClusterConfig {
+        replicas: spec.replicas,
+        serve: ServeConfig {
+            max_batch_seqs: 4,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+        admission: AdmissionConfig {
+            max_queued_seqs: spec.admission.max_queued_seqs,
+            max_queued_tokens: spec.admission.max_queued_tokens,
+            privileged_reserve: spec.admission.privileged_reserve,
+            auto_reserve: spec.admission.auto_reserve,
+            // projected-miss sheds depend on a wall-clock service-rate
+            // EWMA; deterministic specs must not take that path
+            shed_on_projected_miss: !spec.deterministic,
+            ..Default::default()
+        },
+        dispatch_threads: opts.dispatch_threads,
+        ..Default::default()
+    };
+
+    let t0 = Instant::now();
+    let mut cluster = match spec.online {
+        Some(knobs) => {
+            // calibration → sensitivity → replanner, as `mxmoe trace-dump`
+            use crate::alloc::{
+                activation_frequencies, calibrate, measure_sensitivity, AllocatorConfig,
+                Granularity,
+            };
+            use crate::costmodel::GpuSpec;
+            use crate::quant::SchemeRegistry;
+            use crate::serve::{ReplanConfig, Replanner};
+
+            let mut crng = Rng::new(spec.seed ^ 0xCA11_B8A7);
+            let calib: Vec<Vec<u32>> = (0..8)
+                .map(|_| (0..cfg.seq_len).map(|_| crng.below(cfg.vocab as u64) as u32).collect())
+                .collect();
+            let calib_refs: Vec<&[u32]> = calib.iter().map(|s| s.as_slice()).collect();
+            let stats = calibrate(&lm, &calib_refs, None)?;
+            let registry = SchemeRegistry::weight_activation();
+            let sens = measure_sensitivity(&lm, &stats, &registry)?;
+            let replanner = Replanner {
+                gpu: GpuSpec::rtx4090(),
+                registry,
+                sens,
+                cfg: ReplanConfig {
+                    drift_threshold: knobs.drift_threshold,
+                    min_tokens_between: knobs.min_tokens_between,
+                    alloc: AllocatorConfig {
+                        r: 0.75,
+                        target_avg_bits: 5.0,
+                        granularity: Granularity::LinearBlock,
+                        batch_tokens: 512,
+                    },
+                },
+            };
+            Cluster::start_online(
+                cfg.clone(),
+                weights,
+                artifacts,
+                mixed_runtime_plan(&cfg),
+                cluster_cfg,
+                OnlineConfig {
+                    replanner,
+                    baseline: activation_frequencies(&stats),
+                    ewma_alpha: Some(0.25),
+                },
+            )?
+        }
+        None => Cluster::start(
+            cfg.clone(),
+            weights,
+            artifacts,
+            mixed_runtime_plan(&cfg),
+            cluster_cfg,
+        )?,
+    };
+    drop(lm);
+
+    let mut arrivals = 0usize;
+    let mut cancel_requested = 0usize;
+    let mut kills = 0usize;
+    let mut restarts = 0usize;
+    for plan in &schedule {
+        for ev in &plan.events {
+            match ev.action {
+                ReplicaAction::Kill => {
+                    cluster.kill_replica(ev.replica);
+                    kills += 1;
+                }
+                ReplicaAction::Restart => {
+                    cluster.restart_replica(ev.replica)?;
+                    restarts += 1;
+                }
+            }
+        }
+        arrivals += plan.arrivals.len();
+        let reqs: Vec<ServeRequest> = plan.arrivals.iter().map(|a| to_request(spec, a)).collect();
+        let mut live = Vec::new();
+        for (a, adm) in plan.arrivals.iter().zip(cluster.try_submit_burst(reqs)?) {
+            match adm {
+                Admission::Admitted(t) => {
+                    if a.cancel {
+                        t.cancel();
+                        cancel_requested += 1;
+                        // keep the ticket alive until the tick drains so
+                        // the replica's reply (if the cancel lost the
+                        // race) has a live channel
+                        live.push((t, true));
+                    } else {
+                        live.push((t, false));
+                    }
+                }
+                Admission::Rejected { .. } => {} // counted by the admission report
+            }
+        }
+        // quiesce, half 1: every non-cancelled admitted request reaches a
+        // terminal. A disconnected reply channel is a terminal too — the
+        // kill path drops evicted requests (reply senders close).
+        for (t, cancelled) in &live {
+            if *cancelled {
+                continue;
+            }
+            match t.rx.recv_timeout(QUIESCE_BUDGET) {
+                Ok(_) | Err(RecvTimeoutError::Disconnected) => {}
+                Err(RecvTimeoutError::Timeout) => {
+                    bail!("scenario '{}' stalled waiting on request {}", spec.name, t.id())
+                }
+            }
+        }
+        // quiesce, half 2: cancelled stragglers hold admission-queue
+        // slots until the router sheds them at the next batch cut
+        let drain_t0 = Instant::now();
+        while cluster.queued() != (0, 0) {
+            ensure!(
+                drain_t0.elapsed() < QUIESCE_BUDGET,
+                "scenario '{}' admission queue failed to drain (queued {:?})",
+                spec.name,
+                cluster.queued()
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let report = cluster.shutdown();
+
+    let flat = report.flatten();
+    let ledger = Ledger {
+        arrivals,
+        admitted: flat.admitted,
+        rejected_queue_full: flat.rejected_queue_full,
+        rejected_deadline: flat.rejected_deadline,
+        rejected_quota: flat.rejected_quota,
+        rejected_kv: flat.rejected_kv,
+        cancel_requested,
+        responses: report.total_requests(),
+        cancelled: flat.cancelled,
+        failed: flat.failed,
+        kills,
+        restarts,
+    };
+    let slo = build_slo_block(&report);
+    let verdict = compute_verdict(spec, opts.smoke, &ledger, &slo);
+    Ok(ScenarioOutcome {
+        name: spec.name.clone(),
+        seed: spec.seed,
+        deterministic: spec.deterministic,
+        smoke: opts.smoke,
+        ticks: spec.ticks,
+        replicas: spec.replicas,
+        ledger,
+        slo,
+        verdict,
+        elapsed_s,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// BENCH emission + shared bench-file validation
+// ---------------------------------------------------------------------------
+
+impl ScenarioOutcome {
+    /// Full `BENCH_scenario_<name>.json` body (the `mxmoe-bench-v1`
+    /// envelope plus ledger, SLO block, and verdict).
+    pub fn to_json(&self) -> Json {
+        let per_class = Json::arr(self.slo.per_class.iter().map(|c| {
+            Json::obj(vec![
+                ("class", Json::str(c.class)),
+                ("served", Json::num(c.served as f64)),
+                ("deadline_hit", Json::num(c.deadline_hit as f64)),
+                ("deadline_miss", Json::num(c.deadline_miss as f64)),
+                ("p50_ms", c.p50_ms.map_or(Json::Null, Json::num)),
+                ("p99_ms", c.p99_ms.map_or(Json::Null, Json::num)),
+            ])
+        }));
+        Json::obj(vec![
+            ("schema", Json::str(BENCH_SCHEMA)),
+            ("bench", Json::str("scenario")),
+            ("smoke", Json::Bool(self.smoke)),
+            ("scenario", Json::str(&self.name)),
+            ("seed", Json::num(self.seed as f64)),
+            ("deterministic", Json::Bool(self.deterministic)),
+            ("ticks", Json::num(self.ticks as f64)),
+            ("replicas", Json::num(self.replicas as f64)),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+            ("ledger", self.ledger.to_json()),
+            (
+                "slo",
+                Json::obj(vec![
+                    ("per_class", per_class),
+                    ("deadline_hit_rate", Json::num(self.slo.deadline_hit_rate)),
+                    ("shed", Json::num(self.ledger.shed() as f64)),
+                    (
+                        "shed_rate",
+                        Json::num(
+                            self.ledger.shed() as f64 / self.ledger.arrivals.max(1) as f64,
+                        ),
+                    ),
+                    ("replans", Json::num(self.slo.replans as f64)),
+                    ("kv_preemptions", Json::num(self.slo.kv_preemptions as f64)),
+                    ("avg_weight_bits", Json::num(self.slo.avg_weight_bits)),
+                    ("kv_avg_bits", Json::num(self.slo.kv_avg_bits)),
+                ]),
+            ),
+            (
+                "verdict",
+                Json::obj(vec![
+                    ("status", Json::str(self.verdict.status())),
+                    ("checks", Json::arr(self.verdict.checks.iter().map(Check::to_json))),
+                ]),
+            ),
+        ])
+    }
+
+    /// Write `BENCH_scenario_<name>.json` into `dir`.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        let path = dir.join(format!("BENCH_scenario_{}.json", self.name));
+        std::fs::write(&path, self.to_json().pretty())
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// What `mxmoe bench-validate` learned about one `BENCH_*.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchFileCheck {
+    pub bench: String,
+    pub smoke: bool,
+    /// `Some("pass" | "fail")` for scenario files, `None` for plain
+    /// metric benches.
+    pub verdict: Option<String>,
+}
+
+/// Shared schema check for every `BENCH_*.json` the repo emits: the
+/// `mxmoe-bench-v1` envelope (all benches) plus the ledger/SLO/verdict
+/// block (scenario benches). A file with `"skipped": true` (artifacts
+/// not built) only needs the envelope.
+pub fn validate_bench_json(text: &str) -> Result<BenchFileCheck> {
+    let j = Json::parse(text).map_err(|e| anyhow::anyhow!("bench JSON: {e}"))?;
+    let schema = j.req_str("schema")?;
+    ensure!(schema == BENCH_SCHEMA, "schema must be '{BENCH_SCHEMA}', got '{schema}'");
+    let bench = j.req_str("bench")?.to_string();
+    let smoke = j
+        .get("smoke")
+        .and_then(Json::as_bool)
+        .context("'smoke' must be a bool")?;
+    let skipped = opt_bool(&j, "skipped")?.unwrap_or(false);
+    if bench != "scenario" || skipped {
+        return Ok(BenchFileCheck { bench, smoke, verdict: None });
+    }
+    j.req_str("scenario")?;
+    j.req_usize("seed")?;
+    let ledger = j.get("ledger").context("scenario bench needs a 'ledger' object")?;
+    for k in [
+        "arrivals", "admitted", "rejected_queue_full", "rejected_deadline", "rejected_quota",
+        "rejected_kv", "cancel_requested", "responses", "cancelled", "failed", "kills", "restarts",
+    ] {
+        ledger.req_usize(k)?;
+    }
+    let slo = j.get("slo").context("scenario bench needs an 'slo' object")?;
+    slo.req_f64("deadline_hit_rate")?;
+    slo.req_usize("replans")?;
+    slo.req_usize("kv_preemptions")?;
+    let verdict = j.get("verdict").context("scenario bench needs a 'verdict' object")?;
+    let status = verdict.req_str("status")?;
+    ensure!(
+        status == "pass" || status == "fail",
+        "verdict status must be pass|fail, got '{status}'"
+    );
+    let checks = verdict
+        .get("checks")
+        .and_then(Json::as_arr)
+        .context("'verdict.checks' must be an array")?;
+    for c in checks {
+        c.req_str("name")?;
+        c.req_f64("value")?;
+        c.req_f64("bound")?;
+        c.req_str("op")?;
+        c.get("pass").and_then(Json::as_bool).context("check 'pass' must be a bool")?;
+        c.get("enforced").and_then(Json::as_bool).context("check 'enforced' must be a bool")?;
+    }
+    Ok(BenchFileCheck { bench, smoke, verdict: Some(status.to_string()) })
+}
+
+// ---------------------------------------------------------------------------
+// Spec discovery
+// ---------------------------------------------------------------------------
+
+/// Repo-relative `scenarios/` directory (the checked-in spec suite).
+pub fn scenarios_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+}
+
+/// Load and fully validate one spec file.
+pub fn load_spec(path: &Path) -> Result<ScenarioSpec> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+    ScenarioSpec::parse(&text).with_context(|| format!("invalid scenario {}", path.display()))
+}
+
+/// Load spec `name` from [`scenarios_dir`].
+pub fn load_named_spec(name: &str) -> Result<ScenarioSpec> {
+    load_spec(&scenarios_dir().join(format!("{name}.json")))
+}
+
+/// Every checked-in spec, sorted by file name.
+pub fn list_specs() -> Result<Vec<ScenarioSpec>> {
+    let dir = scenarios_dir();
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .with_context(|| format!("read {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    paths.sort();
+    paths.iter().map(|p| load_spec(p)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Tests (pure — the cluster-driving tests live in tests/scenario_replay.rs)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal_spec() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "unit".into(),
+            description: "unit fixture".into(),
+            seed: 7,
+            ticks: 10,
+            replicas: 1,
+            deterministic: true,
+            arrival: ArrivalCurve::Constant { rate: 2.5 },
+            mix: vec![MixPhase { from_tick: 0, interactive: 0.5, standard: 0.3, batch: 0.2 }],
+            prompt_tokens: (4, 12),
+            generate_fraction: 0.25,
+            max_new_tokens: 4,
+            deadline_ms: [None; 3],
+            cancel_storms: vec![],
+            drift: vec![],
+            replica_events: vec![],
+            online: None,
+            admission: AdmissionKnobs::default(),
+            slo: SloBounds { max_shed_rate: Some(0.0), min_served: Some(25), ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn spec_round_trips_through_json() {
+        let mut spec = minimal_spec();
+        spec.deterministic = false;
+        spec.deadline_ms[QosClass::Interactive.index()] = Some(30_000);
+        spec.cancel_storms = vec![CancelStorm { tick: 4, fraction: 0.5 }];
+        spec.drift = vec![
+            DriftPhase { from_tick: 0, band: (0.0, 1.0) },
+            DriftPhase { from_tick: 5, band: (0.0, 0.25) },
+        ];
+        spec.replica_events = vec![
+            ReplicaEvent { tick: 2, action: ReplicaAction::Kill, replica: 1 },
+            ReplicaEvent { tick: 5, action: ReplicaAction::Restart, replica: 1 },
+        ];
+        spec.replicas = 2;
+        spec.online = Some(OnlineKnobs { drift_threshold: 0.0, min_tokens_between: 1 });
+        spec.slo.max_p99_ms = vec![(0, 2000.0)];
+        spec.validate().unwrap();
+        let text = spec.to_json().pretty();
+        let back = ScenarioSpec::parse(&text).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        // not JSON at all
+        assert!(ScenarioSpec::parse("{nope").is_err());
+        // wrong schema tag
+        let bad = minimal_spec().to_json().pretty().replace(SCENARIO_SCHEMA, "bogus-v9");
+        assert!(ScenarioSpec::parse(&bad).unwrap_err().to_string().contains("schema"));
+        // unknown key
+        let mut j = minimal_spec().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("typo_key".into(), Json::num(1.0));
+        }
+        let err = ScenarioSpec::parse(&j.pretty()).unwrap_err();
+        assert!(format!("{err:#}").contains("typo_key"));
+        // wrong type for a field
+        let bad = minimal_spec().to_json().pretty().replace("\"ticks\": 10", "\"ticks\": \"ten\"");
+        assert!(ScenarioSpec::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn determinism_contract_is_validated() {
+        let mut spec = minimal_spec();
+        spec.cancel_storms = vec![CancelStorm { tick: 1, fraction: 0.5 }];
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("deterministic"), "{err}");
+        spec.cancel_storms.clear();
+        spec.deadline_ms[0] = Some(1000);
+        assert!(spec.validate().is_err());
+        spec.deadline_ms[0] = None;
+        spec.online = Some(OnlineKnobs { drift_threshold: 0.0, min_tokens_between: 1 });
+        assert!(spec.validate().is_err());
+        spec.deterministic = false;
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn replica_event_timeline_is_validated() {
+        let mut spec = minimal_spec();
+        spec.deterministic = false;
+        spec.replicas = 2;
+        // killing both replicas leaves nobody alive
+        spec.replica_events = vec![
+            ReplicaEvent { tick: 1, action: ReplicaAction::Kill, replica: 0 },
+            ReplicaEvent { tick: 2, action: ReplicaAction::Kill, replica: 1 },
+        ];
+        assert!(spec.validate().unwrap_err().to_string().contains("alive"));
+        // restart-before-kill is incoherent
+        spec.replica_events =
+            vec![ReplicaEvent { tick: 1, action: ReplicaAction::Restart, replica: 0 }];
+        assert!(spec.validate().is_err());
+        // kill then restart is fine
+        spec.replica_events = vec![
+            ReplicaEvent { tick: 1, action: ReplicaAction::Kill, replica: 1 },
+            ReplicaEvent { tick: 3, action: ReplicaAction::Restart, replica: 1 },
+        ];
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn arrival_curves_and_carry_accumulate_exactly() {
+        let c = ArrivalCurve::Constant { rate: 2.5 };
+        assert_eq!(c.rate_at(0), 2.5);
+        let s = ArrivalCurve::Spike { rate: 1.0, spike_rate: 12.0, spike_start: 3, spike_len: 2 };
+        assert_eq!(s.rate_at(2), 1.0);
+        assert_eq!(s.rate_at(3), 12.0);
+        assert_eq!(s.rate_at(4), 12.0);
+        assert_eq!(s.rate_at(5), 1.0);
+        let d = ArrivalCurve::Diurnal { rate: 4.0, amplitude: 1.0, period: 8.0 };
+        assert_eq!(d.rate_at(0), 4.0); // sin(0) = 0
+        assert!(d.rate_at(2) > 7.9); // peak of the sine
+        // fractional carry: 2.5/tick × 10 ticks = exactly 25 arrivals
+        let spec = minimal_spec();
+        let total: usize = build_schedule(&spec, 64).iter().map(|t| t.arrivals.len()).sum();
+        assert_eq!(total, 25);
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_honors_phases() {
+        let mut spec = minimal_spec();
+        spec.deterministic = false;
+        spec.drift = vec![
+            DriftPhase { from_tick: 0, band: (0.0, 0.5) },
+            DriftPhase { from_tick: 5, band: (0.5, 1.0) },
+        ];
+        spec.cancel_storms = vec![CancelStorm { tick: 7, fraction: 1.0 }];
+        let a = build_schedule(&spec, 64);
+        let b = build_schedule(&spec, 64);
+        assert_eq!(a, b, "same spec + seed must yield the identical schedule");
+        // drift bands bound the sampled tokens
+        for (tick, plan) in a.iter().enumerate() {
+            for arr in &plan.arrivals {
+                for &t in &arr.tokens {
+                    if tick < 5 {
+                        assert!(t < 32, "tick {tick}: token {t} outside band [0, 0.5)");
+                    } else {
+                        assert!((32..64).contains(&t), "tick {tick}: token {t} outside band");
+                    }
+                }
+            }
+        }
+        // a fraction-1.0 storm flags every arrival of its tick, no other
+        for (tick, plan) in a.iter().enumerate() {
+            for arr in &plan.arrivals {
+                assert_eq!(arr.cancel, tick == 7);
+            }
+        }
+    }
+
+    #[test]
+    fn verdict_enforces_ledger_checks_and_defers_wall_clock_in_smoke() {
+        let mut spec = minimal_spec();
+        spec.slo.min_hit_rate = Some(0.99);
+        spec.deterministic = false;
+        let ledger = Ledger {
+            arrivals: 25,
+            admitted: 25,
+            responses: 25,
+            ..Default::default()
+        };
+        let slo = SloBlock {
+            per_class: (0..SLO_CLASSES)
+                .map(|i| ClassSlo {
+                    class: slo_class_name(i),
+                    served: 0,
+                    deadline_hit: 0,
+                    deadline_miss: 0,
+                    p50_ms: None,
+                    p99_ms: None,
+                })
+                .collect(),
+            deadline_hit_rate: 0.5, // violates min_hit_rate
+            replans: 0,
+            kv_preemptions: 0,
+            avg_weight_bits: 8.0,
+            kv_avg_bits: 8.0,
+        };
+        // smoke: wall-clock miss reported but not enforced
+        let v = compute_verdict(&spec, true, &ledger, &slo);
+        assert_eq!(v.status(), "pass");
+        let hr = v.checks.iter().find(|c| c.name == "deadline_hit_rate").unwrap();
+        assert!(!hr.pass && !hr.enforced);
+        // full mode: enforced, so the verdict fails
+        assert_eq!(compute_verdict(&spec, false, &ledger, &slo).status(), "fail");
+        // a broken ledger fails in any mode
+        let broken = Ledger { responses: 24, ..ledger };
+        let v = compute_verdict(&spec, true, &broken, &slo);
+        assert_eq!(v.status(), "fail");
+        assert!(!v.checks.iter().find(|c| c.name == "ledger_balanced").unwrap().pass);
+    }
+
+    #[test]
+    fn bench_json_validation_accepts_outcomes_and_rejects_garbage() {
+        let spec = minimal_spec();
+        let outcome = ScenarioOutcome {
+            name: spec.name.clone(),
+            seed: spec.seed,
+            deterministic: true,
+            smoke: true,
+            ticks: spec.ticks,
+            replicas: 1,
+            ledger: Ledger { arrivals: 25, admitted: 25, responses: 25, ..Default::default() },
+            slo: SloBlock {
+                per_class: vec![],
+                deadline_hit_rate: 1.0,
+                replans: 0,
+                kv_preemptions: 0,
+                avg_weight_bits: 8.0,
+                kv_avg_bits: 8.0,
+            },
+            verdict: Verdict {
+                checks: vec![Check::new("ledger_balanced", 25.0, 25.0, "==", true)],
+            },
+            elapsed_s: 0.1,
+        };
+        let checked = validate_bench_json(&outcome.to_json().pretty()).unwrap();
+        assert_eq!(checked.bench, "scenario");
+        assert_eq!(checked.verdict.as_deref(), Some("pass"));
+        // a plain metric bench only needs the envelope
+        let legacy = Json::obj(vec![
+            ("schema", Json::str(BENCH_SCHEMA)),
+            ("bench", Json::str("admission")),
+            ("smoke", Json::Bool(true)),
+            ("p99_s", Json::num(0.01)),
+        ]);
+        assert_eq!(validate_bench_json(&legacy.pretty()).unwrap().verdict, None);
+        // missing envelope → rejected
+        assert!(validate_bench_json("{\"bench\": \"x\"}").is_err());
+        // scenario bench without a verdict → rejected
+        let mut j = outcome.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("verdict");
+        }
+        assert!(validate_bench_json(&j.pretty()).is_err());
+    }
+}

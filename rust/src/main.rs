@@ -12,6 +12,13 @@
 //!   trace-dump      run a traced serving pipeline (online replan + decode)
 //!                   and export the Chrome trace / JSONL / Prometheus text
 //!   trace-validate  validate a Chrome trace-event file the way CI does
+//!   scenario        run | list | validate the declarative workload
+//!                   scenarios in scenarios/ (DESIGN.md §Scenario-Engine);
+//!                   `run` emits BENCH_scenario_<name>.json with an SLO
+//!                   verdict and exits non-zero on a fail verdict
+//!   bench-validate  schema-check every BENCH_*.json in a directory
+//!                   (shared mxmoe-bench-v1 envelope + scenario verdict
+//!                   blocks) and fail on any fail verdict
 //!   info            print model registry + environment
 
 use std::collections::HashMap;
@@ -41,8 +48,16 @@ struct Args {
 
 impl Args {
     fn parse() -> Result<Args> {
-        let mut it = std::env::args().skip(1);
-        let cmd = it.next().unwrap_or_else(|| "info".to_string());
+        let mut it = std::env::args().skip(1).peekable();
+        let mut cmd = it.next().unwrap_or_else(|| "info".to_string());
+        // command groups take one bare subaction ("scenario run") before
+        // the strict --flag pairs
+        if cmd == "scenario" {
+            if let Some(sub) = it.peek().filter(|a| !a.starts_with("--")).cloned() {
+                it.next();
+                cmd = format!("{cmd} {sub}");
+            }
+        }
         let mut flags = HashMap::new();
         while let Some(k) = it.next() {
             let key = k
@@ -86,6 +101,11 @@ fn run() -> Result<()> {
         }
         "trace-dump" => cmd_trace_dump(&args),
         "trace-validate" => cmd_trace_validate(&args),
+        "scenario run" => cmd_scenario_run(&args),
+        "scenario list" => cmd_scenario_list(),
+        "scenario validate" => cmd_scenario_validate(&args),
+        "scenario" => bail!("scenario needs a subaction: run | list | validate"),
+        "bench-validate" => cmd_bench_validate(&args),
         "info" | "--help" | "-h" => {
             println!("mxmoe {} — MxMoE reproduction (see README.md)", mxmoe::version());
             println!("\nmodels:");
@@ -103,7 +123,8 @@ fn run() -> Result<()> {
             }
             println!(
                 "\ncommands: gen-corpus | gen-mini-model | allocate | serve | \
-                 trace-dump | trace-validate | info"
+                 trace-dump | trace-validate | scenario run|list|validate | \
+                 bench-validate | info"
             );
             Ok(())
         }
@@ -356,6 +377,163 @@ fn cmd_trace_validate(args: &Args) -> Result<()> {
         check.completes,
         check.instants
     );
+    Ok(())
+}
+
+/// `scenario run`: replay one spec (`--name`) or the whole checked-in
+/// suite against a mini-model cluster, write one
+/// `BENCH_scenario_<name>.json` per scenario into `--out-dir`, and exit
+/// non-zero if any SLO verdict fails. `--mode smoke` reports wall-clock
+/// checks without enforcing them (the CI setting); the default `full`
+/// mode enforces everything.
+fn cmd_scenario_run(args: &Args) -> Result<()> {
+    use mxmoe::harness::scenario::{list_specs, load_named_spec, run_scenario, RunOptions};
+
+    let smoke = match args.get("mode", "full").as_str() {
+        "full" => false,
+        "smoke" => true,
+        m => bail!("unknown --mode '{m}' (full|smoke)"),
+    };
+    let out_dir = PathBuf::from(args.get("out-dir", "."));
+    std::fs::create_dir_all(&out_dir)?;
+    let specs = match args.flags.get("name") {
+        Some(name) => vec![load_named_spec(name)?],
+        None => list_specs()?,
+    };
+    ensure_artifacts_for_scenarios()?;
+    let opts = RunOptions { smoke, dispatch_threads: None };
+    let mut failed = Vec::new();
+    for spec in &specs {
+        eprintln!(
+            "running scenario '{}' ({} ticks, {} replica(s))...",
+            spec.name, spec.ticks, spec.replicas
+        );
+        let outcome = run_scenario(spec, &opts)?;
+        let path = outcome.write(&out_dir)?;
+        let l = &outcome.ledger;
+        println!(
+            "{:18} {:4}  arrivals {:3}  admitted {:3}  served {:3}  shed {:3}  \
+             cancelled {:2}  failed {:2}  replans {:2}  ({:.1}s) -> {}",
+            spec.name,
+            outcome.verdict.status().to_uppercase(),
+            l.arrivals,
+            l.admitted,
+            l.responses,
+            l.shed(),
+            l.cancelled,
+            l.failed,
+            outcome.slo.replans,
+            outcome.elapsed_s,
+            path.display()
+        );
+        for c in outcome.verdict.checks.iter().filter(|c| !c.pass) {
+            println!(
+                "  {} check '{}': {} {} {}",
+                if c.enforced { "FAIL" } else { "warn (unenforced)" },
+                c.name,
+                c.value,
+                c.op,
+                c.bound
+            );
+        }
+        if !outcome.verdict.passed() {
+            failed.push(spec.name.clone());
+        }
+    }
+    if !failed.is_empty() {
+        bail!("{} scenario verdict(s) failed: {}", failed.len(), failed.join(", "));
+    }
+    Ok(())
+}
+
+fn ensure_artifacts_for_scenarios() -> Result<()> {
+    if mxmoe::harness::require_artifacts().is_none() {
+        bail!("AOT artifacts not built — run `make artifacts` first");
+    }
+    Ok(())
+}
+
+/// `scenario list`: one line per checked-in spec.
+fn cmd_scenario_list() -> Result<()> {
+    use mxmoe::harness::scenario::{list_specs, scenarios_dir};
+
+    let specs = list_specs()?;
+    println!("{} scenario(s) in {}:", specs.len(), scenarios_dir().display());
+    for s in &specs {
+        println!(
+            "  {:20} seed {:4}  ticks {:3}  replicas {}  {}  {}",
+            s.name,
+            s.seed,
+            s.ticks,
+            s.replicas,
+            if s.deterministic { "deterministic " } else { "best-effort   " },
+            s.description
+        );
+    }
+    Ok(())
+}
+
+/// `scenario validate`: parse + semantic-validate every spec (or one via
+/// `--spec <path>`) and round-trip it through its JSON encoding.
+fn cmd_scenario_validate(args: &Args) -> Result<()> {
+    use mxmoe::harness::scenario::{list_specs, load_spec, scenarios_dir, ScenarioSpec};
+
+    let specs = match args.flags.get("spec") {
+        Some(p) => vec![load_spec(&PathBuf::from(p))?],
+        None => list_specs()?,
+    };
+    for s in &specs {
+        let back = ScenarioSpec::parse(&s.to_json().pretty())
+            .with_context(|| format!("scenario '{}' does not round-trip", s.name))?;
+        if back != *s {
+            bail!("scenario '{}' round-trips to a different spec", s.name);
+        }
+        println!("{:20} OK", s.name);
+    }
+    println!("{} scenario(s) valid (dir: {})", specs.len(), scenarios_dir().display());
+    Ok(())
+}
+
+/// `bench-validate`: schema-check every `BENCH_*.json` under `--dir`
+/// against the shared `mxmoe-bench-v1` envelope (plus the full
+/// ledger/SLO/verdict block for scenario benches) and exit non-zero on a
+/// malformed file or a `fail` verdict.
+fn cmd_bench_validate(args: &Args) -> Result<()> {
+    use mxmoe::harness::scenario::validate_bench_json;
+
+    let dir = PathBuf::from(args.get("dir", "."));
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .with_context(|| format!("read {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        })
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        bail!("no BENCH_*.json files under {}", dir.display());
+    }
+    let mut fail_verdicts = Vec::new();
+    for p in &paths {
+        let name = p.file_name().unwrap().to_string_lossy().to_string();
+        let text = std::fs::read_to_string(p)?;
+        let check =
+            validate_bench_json(&text).with_context(|| format!("{name} failed validation"))?;
+        let verdict = check.verdict.as_deref().unwrap_or("-");
+        println!(
+            "{name:40} bench={:24} smoke={:5} verdict={verdict}",
+            check.bench, check.smoke
+        );
+        if check.verdict.as_deref() == Some("fail") {
+            fail_verdicts.push(name);
+        }
+    }
+    if !fail_verdicts.is_empty() {
+        bail!("{} fail verdict(s): {}", fail_verdicts.len(), fail_verdicts.join(", "));
+    }
+    println!("{} bench file(s) valid", paths.len());
     Ok(())
 }
 

@@ -326,6 +326,50 @@ impl DecodeScheduler {
         self.pending.push_back(req);
     }
 
+    /// Evict every generation — pending, preempted and active — freeing
+    /// all KV pages and closing each stream with `Done { Failed }`. The
+    /// replica-kill path: the caller fails the returned requests through
+    /// the normal admission accounting, so
+    /// `admitted == responses + cancelled + failed` stays exact across a
+    /// mid-run kill.
+    pub fn evict_all(&mut self) -> Vec<Request> {
+        let mut out = Vec::with_capacity(self.load());
+        let pending: Vec<Request> = self.pending.drain(..).collect();
+        for r in pending {
+            if let RequestKind::Generate(spec) = &r.kind {
+                let _ = spec
+                    .stream
+                    .send(StreamEvent::Done { reason: FinishReason::Failed, generated: 0 });
+            }
+            self.stats.failed += 1;
+            out.push(r);
+        }
+        let preempted: Vec<PreemptedSeq> = self.preempted.drain(..).collect();
+        for p in preempted {
+            if let RequestKind::Generate(spec) = &p.req.kind {
+                let _ = spec.stream.send(StreamEvent::Done {
+                    reason: FinishReason::Failed,
+                    generated: p.generated.len(),
+                });
+            }
+            self.stats.failed += 1;
+            out.push(p.req);
+        }
+        let active: Vec<ActiveSeq> = self.active.drain(..).collect();
+        for a in active {
+            self.pool.free(a.kv);
+            if let RequestKind::Generate(spec) = &a.req.kind {
+                let _ = spec.stream.send(StreamEvent::Done {
+                    reason: FinishReason::Failed,
+                    generated: a.generated.len(),
+                });
+            }
+            self.stats.failed += 1;
+            out.push(a.req);
+        }
+        out
+    }
+
     /// True while any generation is pending, preempted or mid-decode — the
     /// replica must keep stepping (and must not block on its work deque).
     pub fn has_work(&self) -> bool {

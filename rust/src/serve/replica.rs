@@ -103,6 +103,11 @@ struct QueuesInner {
     /// queued batches are stolen by the living; they never count as
     /// capacity.
     dead: Vec<bool>,
+    /// Kill requests ([`WorkQueues::request_kill`]): the replica's pop
+    /// flavors stop handing out work so its main loop notices promptly,
+    /// fails what its decode scheduler still holds, and marks itself
+    /// dead. Cleared by [`WorkQueues::revive`] on restart.
+    kill: Vec<bool>,
     closed: bool,
 }
 
@@ -125,6 +130,7 @@ impl WorkQueues {
                 inflight: vec![0; replicas],
                 decode: vec![0; replicas],
                 dead: vec![false; replicas],
+                kill: vec![false; replicas],
                 closed: false,
             }),
             available: Condvar::new(),
@@ -170,6 +176,9 @@ impl WorkQueues {
     pub fn pop(&self, replica: usize) -> Option<(RoutedBatch, bool)> {
         let mut g = self.inner.lock().unwrap();
         loop {
+            if g.kill[replica] {
+                return None; // killed: stop handing this replica work
+            }
             if let Some(got) = WorkQueues::take_locked(&mut g, replica) {
                 return Some(got);
             }
@@ -186,6 +195,9 @@ impl WorkQueues {
     /// counts as in-flight until [`done`](WorkQueues::done).
     pub fn try_pop(&self, replica: usize) -> TryPop {
         let mut g = self.inner.lock().unwrap();
+        if g.kill[replica] {
+            return TryPop::Closed; // killed: stop handing this replica work
+        }
         match WorkQueues::take_locked(&mut g, replica) {
             Some((b, stolen)) => TryPop::Batch(b, stolen),
             None if g.closed => TryPop::Closed,
@@ -202,6 +214,9 @@ impl WorkQueues {
         let deadline = Instant::now() + timeout;
         let mut g = self.inner.lock().unwrap();
         loop {
+            if g.kill[replica] {
+                return TryPop::Closed; // killed: stop handing this replica work
+            }
             if let Some((b, stolen)) = WorkQueues::take_locked(&mut g, replica) {
                 return TryPop::Batch(b, stolen);
             }
@@ -237,6 +252,36 @@ impl WorkQueues {
     /// woken so the router can notice a fully-dead cluster.
     pub fn mark_dead(&self, replica: usize) {
         self.inner.lock().unwrap().dead[replica] = true;
+        self.available.notify_all();
+    }
+
+    /// Ask `replica`'s worker to stop serving (mid-run kill — the scenario
+    /// engine's replica-flap hook). Its pop flavors stop handing out work,
+    /// so a blocked worker wakes immediately; the worker's main loop then
+    /// fails its outstanding generations through the normal accounting and
+    /// marks itself dead. Queued batches stay stealable by the survivors.
+    pub fn request_kill(&self, replica: usize) {
+        self.inner.lock().unwrap().kill[replica] = true;
+        self.available.notify_all();
+    }
+
+    /// True once [`request_kill`](Self::request_kill) was called for
+    /// `replica` (and not yet cleared by [`revive`](Self::revive)).
+    pub fn kill_requested(&self, replica: usize) -> bool {
+        self.inner.lock().unwrap().kill[replica]
+    }
+
+    /// Clear `replica`'s dead and kill flags and reset its load counters —
+    /// the restart path, called before a fresh worker thread is spawned
+    /// under the same id. Batches still queued for the replica are kept;
+    /// the respawned worker drains them.
+    pub fn revive(&self, replica: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.dead[replica] = false;
+        g.kill[replica] = false;
+        g.inflight[replica] = 0;
+        g.decode[replica] = 0;
+        drop(g);
         self.available.notify_all();
     }
 
@@ -458,6 +503,22 @@ pub fn replica_main(
     let mut batches_done = 0usize;
     let mut stolen = 0usize;
     loop {
+        // ---- kill hook (scenario replica-flap): stop taking work, fail
+        // everything the decode scheduler still holds through the normal
+        // accounting (admitted == responses + cancelled + failed stays
+        // exact), and mark this replica dead — its queued batches stay
+        // stealable and a later revive + respawn restarts service ----
+        if queues.kill_requested(spec.id) {
+            let evicted = decoder.evict_all();
+            admission.note_failed(evicted.len());
+            let tracer = engine.metrics_mut().tracer();
+            for r in &evicted {
+                trace_terminal(tracer, r, Outcome::Failed);
+            }
+            queues.note_decode_load(spec.id, 0);
+            queues.mark_dead(spec.id);
+            break;
+        }
         // ---- acquire work: block only when the decode loop is idle AND
         // no staged swap is waiting. Mid-generation the pop is
         // non-blocking and bounded to one batch per turn, so a sustained
@@ -485,6 +546,7 @@ pub fn replica_main(
                     handle_batch(&mut engine, &mut decoder, &queues, &admission, spec.id, batch);
                 }
                 TryPop::Empty => {} // fall through to the staging poll
+                TryPop::Closed if queues.kill_requested(spec.id) => continue, // kill hook runs
                 TryPop::Closed => break,
             }
         } else {
@@ -496,6 +558,9 @@ pub fn replica_main(
                     batches_done += 1;
                     handle_batch(&mut engine, &mut decoder, &queues, &admission, spec.id, batch);
                 }
+                // a kill wakes the blocked pop: loop back so the kill hook
+                // at the top runs (mark dead, fail decode work)
+                None if queues.kill_requested(spec.id) => continue,
                 None => break, // closed, drained, and no generation in flight
             }
         }
@@ -702,6 +767,7 @@ fn run_decode_step(
         let deadline = deadline_verdict(fin.request.deadline, now);
         let metrics = engine.metrics_mut();
         metrics.record_request(latency.as_secs_f64(), fin.request.tokens.len() + fin.generated);
+        metrics.record_class_latency(fin.request.qos, latency.as_secs_f64());
         metrics.record_queue_wait(fin.queue_wait.as_secs_f64(), fin.request.priority);
         metrics.note_qos(fin.request.qos);
         metrics.note_slo(
@@ -869,6 +935,7 @@ pub fn process_batch(engine: &mut ServingEngine, batch: RoutedBatch) -> (usize, 
                 let deadline = deadline_verdict(req.deadline, now);
                 let metrics = engine.metrics_mut();
                 metrics.record_request(latency.as_secs_f64(), req.tokens.len());
+                metrics.record_class_latency(req.qos, latency.as_secs_f64());
                 metrics.record_queue_wait(queue_wait.as_secs_f64(), req.priority);
                 metrics.note_qos(req.qos);
                 metrics.note_slo(
@@ -949,6 +1016,7 @@ fn collect_report(
         slo: m.slo,
         served_by_generation: m.served_by_generation(),
         queue_wait_by_priority: m.queue_wait_by_priority_summary(),
+        latency_by_class: m.latency_by_class_summary(),
         generation: engine.generation(),
         scheme_counts: engine.scheme_counts(),
         latency: m.latency_summary(),
@@ -1159,6 +1227,41 @@ mod tests {
         thread::sleep(Duration::from_millis(20));
         q.close();
         assert!(t.join().unwrap(), "close wakes blocked pop with None");
+    }
+
+    #[test]
+    fn kill_wakes_blocked_pop_and_revive_restores_service() {
+        let q = WorkQueues::new(2);
+        assert!(!q.kill_requested(0));
+        // a blocked pop wakes with None on kill (not close)
+        let q2 = q.clone();
+        let t = thread::spawn(move || q2.pop(0).is_none());
+        thread::sleep(Duration::from_millis(20));
+        q.request_kill(0);
+        assert!(t.join().unwrap(), "kill wakes the blocked pop with None");
+        assert!(q.kill_requested(0));
+        // killed replicas get no work, even with batches queued for them…
+        q.push(0, batch(4));
+        assert!(matches!(q.try_pop(0), TryPop::Closed));
+        assert!(matches!(q.pop_timeout(0, Duration::from_millis(1)), TryPop::Closed));
+        // …but the survivors can still steal the backlog
+        let (b, stolen) = q.pop(1).unwrap();
+        assert!(stolen);
+        assert_eq!(b.tokens(), 4);
+        q.done(1);
+        // dead + killed: no capacity once the peer dies too
+        q.mark_dead(0);
+        q.mark_dead(1);
+        assert!(!q.wait_for_capacity());
+        // revive clears both flags and restores the replica as capacity
+        q.revive(0);
+        assert!(!q.kill_requested(0));
+        assert!(q.wait_for_capacity(), "revived replica counts as capacity again");
+        q.push(0, batch(6));
+        let (b, stolen) = q.pop(0).unwrap();
+        assert!(!stolen);
+        assert_eq!(b.tokens(), 6, "revived replica serves its own queue");
+        q.done(0);
     }
 
     #[test]

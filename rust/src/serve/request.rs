@@ -415,6 +415,13 @@ pub struct AdmissionConfig {
     /// least one unreserved slot always remains so unprivileged traffic is
     /// delayed, never locked out.
     pub privileged_reserve: f64,
+    /// Derive the privileged reserve from the live QoS mix instead of the
+    /// static knob: admission keeps an EWMA of the privileged share of
+    /// arrivals and reserves that fraction (capped at
+    /// [`MAX_AUTO_RESERVE`]), so the front door self-tunes — a mostly
+    /// interactive mix holds back more slots, a batch-only mix holds back
+    /// none. `privileged_reserve` seeds the EWMA as the prior.
+    pub auto_reserve: bool,
 }
 
 impl Default for AdmissionConfig {
@@ -427,6 +434,7 @@ impl Default for AdmissionConfig {
             submit_budget: Duration::from_secs(30),
             shed_on_projected_miss: true,
             privileged_reserve: 0.0,
+            auto_reserve: false,
         }
     }
 }
@@ -435,10 +443,32 @@ impl AdmissionConfig {
     /// Sequence bound for unprivileged traffic: the full bound minus the
     /// privileged reservation, floored at one slot.
     pub fn unprivileged_seq_bound(&self) -> usize {
-        let reserve = (self.max_queued_seqs as f64 * self.privileged_reserve.clamp(0.0, 1.0))
-            .ceil() as usize;
+        self.unprivileged_seq_bound_for(self.privileged_reserve)
+    }
+
+    /// [`unprivileged_seq_bound`](Self::unprivileged_seq_bound) for an
+    /// explicit reserve fraction (the auto-reserve path passes the live
+    /// privileged-share EWMA here).
+    pub fn unprivileged_seq_bound_for(&self, reserve: f64) -> usize {
+        let reserve = (self.max_queued_seqs as f64 * reserve.clamp(0.0, 1.0)).ceil() as usize;
         self.max_queued_seqs.saturating_sub(reserve).max(1)
     }
+}
+
+/// One request of a burst admission
+/// ([`AdmissionState::try_admit_burst`]): the per-request inputs of
+/// [`AdmissionState::try_admit_for`], batched so a whole arrival burst is
+/// decided under one lock acquisition.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmitArgs {
+    pub tokens: usize,
+    pub ttl: Option<Duration>,
+    pub privileged: bool,
+    /// QoS name for the trace (see [`QosClass::name`]; the cluster passes
+    /// "none" when unset).
+    pub qos: &'static str,
+    /// Priority name for the trace (see [`Priority::name`]).
+    pub priority: &'static str,
 }
 
 /// Admission counters reported at shutdown ([`crate::coordinator::metrics::ClusterReport`]).
@@ -484,6 +514,12 @@ struct AdmissionInner {
     /// Replicas fold their per-batch samples into a single estimate; the
     /// cluster drain rate is this times the replica count.
     service_rate_tps: f64,
+    /// EWMA of the privileged share of arrivals (negative = no sample
+    /// yet). Drives the class-quota bound when
+    /// [`AdmissionConfig::auto_reserve`] is on; updated on every admission
+    /// decision, so it is a pure function of the arrival sequence
+    /// (deterministic under burst-atomic submission).
+    privileged_share: f64,
     report: AdmissionReport,
     next_id: u64,
     /// Admission-track span collector — admit/reject events ride the
@@ -509,6 +545,13 @@ pub struct AdmissionState {
 
 /// Service-rate EWMA step for [`AdmissionState::note_service`].
 const RATE_ALPHA: f64 = 0.3;
+/// Privileged-share EWMA step (per admission decision) for
+/// [`AdmissionConfig::auto_reserve`].
+const SHARE_ALPHA: f64 = 0.05;
+/// Auto-reserve cap: even an all-privileged mix leaves this much of the
+/// queue open to unprivileged traffic (delay, never lock out — the same
+/// contract as the static knob's one-slot floor, but proportional).
+pub const MAX_AUTO_RESERVE: f64 = 0.9;
 /// `retry_after` clamp.
 const RETRY_MIN: Duration = Duration::from_millis(1);
 const RETRY_MAX: Duration = Duration::from_secs(5);
@@ -526,6 +569,7 @@ impl AdmissionState {
                 queued_seqs: 0,
                 queued_tokens: 0,
                 service_rate_tps: 0.0,
+                privileged_share: -1.0,
                 report: AdmissionReport::default(),
                 next_id: 1,
                 tracer: SpanCollector::disabled(Track::Admission),
@@ -572,6 +616,26 @@ impl AdmissionState {
     ) -> Result<u64, (RejectReason, Duration, u64)> {
         let mut g = self.inner.lock().unwrap();
         self.admit_locked(&mut g, cfg, tokens, ttl, privileged, qos, priority)
+    }
+
+    /// Admit a whole burst under ONE lock acquisition: decisions are made
+    /// in item order against queue state no concurrent drain or submit can
+    /// interleave with, so the outcome vector is a pure function of the
+    /// queue state at entry plus the items — the determinism anchor the
+    /// scenario replay driver leans on. Each item gets the same decision
+    /// `try_admit_for` would have made.
+    pub fn try_admit_burst(
+        &self,
+        cfg: &AdmissionConfig,
+        items: &[AdmitArgs],
+    ) -> Vec<Result<u64, (RejectReason, Duration, u64)>> {
+        let mut g = self.inner.lock().unwrap();
+        items
+            .iter()
+            .map(|a| {
+                self.admit_locked(&mut g, cfg, a.tokens, a.ttl, a.privileged, a.qos, a.priority)
+            })
+            .collect()
     }
 
     /// Blocking admission: wait up to `cfg.submit_budget` for queue room.
@@ -646,12 +710,27 @@ impl AdmissionState {
             g.tracer.instant(id, EventKind::Rejected { reason: reason.name() });
             (reason, retry, id)
         };
+        // fold this arrival into the privileged-share EWMA before the
+        // quota decision, so an auto reserve tracks the mix including the
+        // request being decided (pure function of the arrival sequence)
+        let sample = if privileged { 1.0 } else { 0.0 };
+        g.privileged_share = if g.privileged_share < 0.0 {
+            // first arrival: seed from the static knob as the prior
+            (1.0 - SHARE_ALPHA) * cfg.privileged_reserve.clamp(0.0, 1.0) + SHARE_ALPHA * sample
+        } else {
+            (1.0 - SHARE_ALPHA) * g.privileged_share + SHARE_ALPHA * sample
+        };
         if g.queued_seqs + 1 > cfg.max_queued_seqs || g.queued_tokens + tokens > cfg.max_queued_tokens
         {
             g.report.rejected_queue_full += 1;
             return Err(reject(g, RejectReason::QueueFull, backlog_retry));
         }
-        if !privileged && g.queued_seqs + 1 > cfg.unprivileged_seq_bound() {
+        let unprivileged_bound = if cfg.auto_reserve {
+            cfg.unprivileged_seq_bound_for(g.privileged_share.min(MAX_AUTO_RESERVE))
+        } else {
+            cfg.unprivileged_seq_bound()
+        };
+        if !privileged && g.queued_seqs + 1 > unprivileged_bound {
             // inside the full bound but past the unreserved share: the
             // remaining slots are held for High/Interactive arrivals
             g.report.rejected_quota += 1;
@@ -810,6 +889,15 @@ impl AdmissionState {
         self.inner.lock().unwrap().service_rate_tps
     }
 
+    /// Smoothed privileged share of arrivals (`None` before any admission
+    /// decision). This is the fraction [`AdmissionConfig::auto_reserve`]
+    /// holds back for `High`/`Interactive` traffic, capped at
+    /// [`MAX_AUTO_RESERVE`].
+    pub fn privileged_share(&self) -> Option<f64> {
+        let g = self.inner.lock().unwrap();
+        (g.privileged_share >= 0.0).then_some(g.privileged_share)
+    }
+
     pub fn report(&self) -> AdmissionReport {
         self.inner.lock().unwrap().report
     }
@@ -827,7 +915,12 @@ mod tests {
             submit_budget: Duration::from_millis(50),
             shed_on_projected_miss: true,
             privileged_reserve: 0.0,
+            auto_reserve: false,
         }
+    }
+
+    fn args(tokens: usize, privileged: bool) -> AdmitArgs {
+        AdmitArgs { tokens, ttl: None, privileged, qos: "standard", priority: "normal" }
     }
 
     #[test]
@@ -1039,6 +1132,85 @@ mod tests {
             a.try_admit(&all, 10, None, false).unwrap_err().0,
             RejectReason::ClassQuota
         );
+    }
+
+    #[test]
+    fn burst_admission_decides_in_order_under_one_lock() {
+        let a = AdmissionState::new(1);
+        let c = cfg(3, 1_000_000);
+        let out = a.try_admit_burst(&c, &[args(10, false); 5]);
+        assert_eq!(out.len(), 5);
+        let ids: Vec<u64> = out[..3].iter().map(|r| *r.as_ref().unwrap()).collect();
+        assert!(ids.windows(2).all(|w| w[1] == w[0] + 1), "ids dense in item order: {ids:?}");
+        for r in &out[3..] {
+            assert_eq!(r.as_ref().unwrap_err().0, RejectReason::QueueFull, "overflow shed");
+        }
+        assert_eq!(a.queued(), (3, 30));
+        let r = a.report();
+        assert_eq!((r.admitted, r.rejected_queue_full), (3, 2));
+        // an empty burst is a no-op
+        assert!(a.try_admit_burst(&c, &[]).is_empty());
+    }
+
+    #[test]
+    fn auto_reserve_tracks_the_privileged_share() {
+        let a = AdmissionState::new(1);
+        let c = AdmissionConfig { auto_reserve: true, ..cfg(100, 1_000_000) };
+        assert!(a.privileged_share().is_none(), "no samples yet");
+        // all-batch mix: the EWMA decays toward 0 from the 0.0 prior, so
+        // the quota never engages below the full bound
+        for _ in 0..50 {
+            a.try_admit(&c, 1, None, false).unwrap();
+        }
+        let share = a.privileged_share().unwrap();
+        assert!(share < 0.05, "batch-only mix drives the reserve down: {share}");
+        // swing to all-interactive: the share climbs and unprivileged
+        // arrivals start being quota-shed while privileged still fit
+        for _ in 0..200 {
+            let _ = a.try_admit(&c, 1, None, true);
+        }
+        let share = a.privileged_share().unwrap();
+        assert!(share > 0.9, "interactive swing lifts the share: {share}");
+        // drain below the full bound but above the unreserved share: the
+        // quota (not queue-full) is what sheds unprivileged traffic now
+        a.note_cut(80, 80);
+        let (reason, _) = a.try_admit(&c, 1, None, false).unwrap_err();
+        assert_eq!(reason, RejectReason::ClassQuota, "reserve now protects interactive slots");
+        // the static knob still rules when auto_reserve is off
+        let s = AdmissionState::new(1);
+        let fixed = cfg(100, 1_000_000);
+        for _ in 0..99 {
+            s.try_admit(&fixed, 1, None, true).unwrap();
+        }
+        let ok = s.try_admit(&fixed, 1, None, false).is_ok();
+        assert!(ok, "no quota without auto/static reserve");
+    }
+
+    #[test]
+    fn auto_reserve_seeds_from_the_static_prior_and_stays_capped() {
+        let a = AdmissionState::new(1);
+        let c = AdmissionConfig {
+            auto_reserve: true,
+            privileged_reserve: 0.5,
+            ..cfg(4, 1_000_000)
+        };
+        // first decision: EWMA ≈ the 0.5 prior ⇒ unprivileged bound 2,
+        // same as the static knob would give
+        a.try_admit(&c, 1, None, false).unwrap();
+        let share = a.privileged_share().unwrap();
+        assert!((share - 0.475).abs() < 1e-9, "seeded from the prior: {share}");
+        // a long all-privileged run saturates at the cap, never 1.0-locks
+        // unprivileged traffic out (bound floors at 1 slot via the clamp)
+        let b = AdmissionState::new(1);
+        let big = AdmissionConfig { auto_reserve: true, ..cfg(10, 1_000_000) };
+        for _ in 0..500 {
+            let _ = b.try_admit(&big, 1, None, true);
+        }
+        assert_eq!(big.unprivileged_seq_bound_for(MAX_AUTO_RESERVE), 1);
+        // queue is full of privileged work; drain it all, then an
+        // unprivileged request still finds its floor slot
+        b.note_cut(10, 10);
+        assert!(b.try_admit(&big, 1, None, false).is_ok(), "floor slot survives the cap");
     }
 
     #[test]

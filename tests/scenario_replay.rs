@@ -1,0 +1,133 @@
+//! Integration: the scenario engine end to end — the checked-in spec
+//! suite parses, validates, and round-trips; malformed specs are
+//! rejected; and the determinism anchor holds: same spec + same seed
+//! produce an identical admission/termination ledger across repeated
+//! runs and across dispatch-thread counts. A replica-kill replay pins
+//! the fault-accounting identity the verdict gates on.
+
+use mxmoe::harness::require_artifacts;
+use mxmoe::harness::scenario::{
+    list_specs, load_named_spec, run_scenario, RunOptions, ScenarioSpec,
+};
+
+// ---- spec surface (no artifacts needed) --------------------------------
+
+#[test]
+fn checked_in_suite_parses_and_round_trips() {
+    let specs = list_specs().expect("scenarios/ must parse");
+    assert!(specs.len() >= 6, "suite shrank: {} specs", specs.len());
+    for spec in &specs {
+        let text = spec.to_json().pretty();
+        let back = ScenarioSpec::parse(&text)
+            .unwrap_or_else(|e| panic!("{} does not round-trip: {e:#}", spec.name));
+        assert_eq!(&back, spec, "{} round-trips to a different spec", spec.name);
+    }
+    // the suite must exercise every workload axis the engine supports
+    assert!(specs.iter().any(|s| s.deterministic), "no deterministic spec");
+    assert!(specs.iter().any(|s| !s.cancel_storms.is_empty()), "no cancel-storm spec");
+    assert!(specs.iter().any(|s| !s.replica_events.is_empty()), "no replica-fault spec");
+    assert!(specs.iter().any(|s| s.online.is_some()), "no online-replan spec");
+}
+
+#[test]
+fn malformed_specs_are_rejected() {
+    let good = load_named_spec("steady_interactive").unwrap().to_json().pretty();
+
+    // not JSON at all
+    assert!(ScenarioSpec::parse("not json {").is_err());
+    // wrong schema tag
+    let wrong = good.replace("mxmoe-scenario-v1", "mxmoe-scenario-v9");
+    assert!(ScenarioSpec::parse(&wrong).is_err(), "wrong schema must be rejected");
+    // present-but-wrong-type field
+    let wrong = good.replace("\"ticks\": 10", "\"ticks\": \"ten\"");
+    assert!(ScenarioSpec::parse(&wrong).is_err(), "string ticks must be rejected");
+    // determinism contract: a deterministic spec may not carry cancel storms
+    let wrong = good.replace(
+        "\"deterministic\": true",
+        "\"deterministic\": true, \"cancel_storms\": [{\"tick\": 1, \"fraction\": 0.5}]",
+    );
+    assert!(ScenarioSpec::parse(&wrong).is_err(), "deterministic + storms must be rejected");
+}
+
+// ---- replay determinism (artifact-gated) -------------------------------
+
+/// A deliberately small deterministic spec so three full replays stay
+/// cheap: 6 ticks × 2 arrivals on one replica.
+fn tiny_deterministic_spec() -> ScenarioSpec {
+    ScenarioSpec::parse(
+        r#"{
+          "schema": "mxmoe-scenario-v1",
+          "name": "tiny_replay",
+          "description": "determinism anchor for the integration test",
+          "seed": 9901,
+          "ticks": 6,
+          "replicas": 1,
+          "deterministic": true,
+          "arrival": {"curve": "constant", "rate": 2.0},
+          "mix": [{"from_tick": 0, "interactive": 0.5, "standard": 0.3, "batch": 0.2}],
+          "prompt_tokens": {"min": 4, "max": 12},
+          "generate_fraction": 0.25,
+          "max_new_tokens": 4,
+          "admission": {"max_queued_seqs": 16, "max_queued_tokens": 4096,
+                        "privileged_reserve": 0.0, "auto_reserve": false},
+          "slo": {"max_shed_rate": 0.0, "min_served": 12}
+        }"#,
+    )
+    .expect("tiny spec parses")
+}
+
+#[test]
+fn same_seed_reproduces_ledger_across_runs_and_thread_counts() {
+    if require_artifacts().is_none() {
+        eprintln!("skipping scenario replay test: artifacts not built");
+        return;
+    }
+    let spec = tiny_deterministic_spec();
+
+    let base = run_scenario(&spec, &RunOptions { smoke: true, dispatch_threads: None })
+        .expect("run 1");
+    let rerun = run_scenario(&spec, &RunOptions { smoke: true, dispatch_threads: None })
+        .expect("run 2");
+    let threaded = run_scenario(&spec, &RunOptions { smoke: true, dispatch_threads: Some(2) })
+        .expect("run 3 (2 dispatch threads)");
+
+    assert_eq!(base.ledger, rerun.ledger, "same seed must reproduce the ledger");
+    assert_eq!(
+        base.ledger, threaded.ledger,
+        "ledger must be independent of dispatch-thread count"
+    );
+    assert_eq!(base.verdict.status(), rerun.verdict.status());
+    assert_eq!(base.verdict.status(), threaded.verdict.status());
+    assert_eq!(base.verdict.status(), "pass", "tiny replay must pass its own SLOs");
+
+    // 6 ticks × rate 2.0 with fractional carry is exactly 12 arrivals,
+    // all admitted and served (no storms, no faults, no deadlines)
+    assert_eq!(base.ledger.arrivals, 12);
+    assert_eq!(base.ledger.admitted, 12);
+    assert_eq!(base.ledger.responses, 12);
+    assert_eq!(base.ledger.shed(), 0);
+}
+
+#[test]
+fn replica_kill_replay_keeps_accounting_identity() {
+    if require_artifacts().is_none() {
+        eprintln!("skipping replica-kill replay test: artifacts not built");
+        return;
+    }
+    let spec = load_named_spec("replica_flap").expect("replica_flap spec");
+    let outcome = run_scenario(&spec, &RunOptions { smoke: true, dispatch_threads: None })
+        .expect("replica_flap replay");
+
+    let l = &outcome.ledger;
+    assert_eq!(l.kills, 1, "exactly one kill event");
+    assert_eq!(l.restarts, 1, "exactly one restart event");
+    // every admitted request terminates exactly once, even across the
+    // kill (evicted in-flight work surfaces as `failed`, stolen queued
+    // batches as `responses`)
+    assert_eq!(
+        l.admitted,
+        l.responses + l.cancelled + l.failed,
+        "admitted must equal responses + cancelled + failed across a kill"
+    );
+    assert_eq!(outcome.verdict.status(), "pass", "replica_flap verdict must pass in smoke");
+}
