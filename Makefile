@@ -51,6 +51,7 @@ bench-smoke:
 	$(CARGO) bench --bench bench_decode -- --smoke
 	$(CARGO) bench --bench bench_kvcache -- --smoke
 	$(CARGO) bench --bench bench_trace_overhead -- --smoke
+	$(CARGO) bench --bench bench_http -- --smoke
 
 # The scenario suite (scenarios/*.json) replayed end to end in smoke
 # mode: accounting and determinism checks enforced, wall-clock SLO bars

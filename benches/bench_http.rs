@@ -1,0 +1,669 @@
+//! §HTTP-Front-Door — connection-scale load bench for the streaming
+//! front door.
+//!
+//! Three phases against live mini-model clusters on loopback:
+//!
+//! 1. **Bit-identity** — the same prompts generated in-process (direct
+//!    [`Ticket`] streaming) and over HTTP SSE must stream the exact same
+//!    token ids with the same finish reason: the wire format is a
+//!    transport, not a reinterpretation.
+//! 2. **Connection storm** — N concurrent SSE clients (1000 full,
+//!    64 smoke) held simultaneously live on a barrier, with ≥25%
+//!    disconnecting mid-stream. Disconnects must reconcile *exactly* as
+//!    cancellations: the admission ledger identity
+//!    `admitted == responses + cancelled + failed` is asserted on the
+//!    drained cluster report.
+//! 3. **Shed semantics** — against a deliberately tiny cluster
+//!    (queue bound 2, KV pool 4 pages), queue sheds must come back as
+//!    HTTP 429 and KV exhaustion as 503, both carrying `Retry-After`.
+//!
+//! Writes `BENCH_http.json` (mxmoe-bench-v1 envelope). `--smoke` shrinks
+//! the storm; every correctness assertion stays enforced. Self-skips
+//! (with a `skipped` stub) when the AOT artifacts are not built.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use mxmoe::coordinator::{Cluster, ClusterConfig, ServeConfig};
+use mxmoe::harness::{self, mixed_runtime_plan, save_model_mxt, MINI_MODEL_SEED};
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::ser::Json;
+use mxmoe::serve::{
+    AdmissionConfig, DecodePolicy, FinishReason, HttpConfig, HttpServer, KV_PAGE_SIZE,
+};
+use mxmoe::util::Rng;
+
+/// Generous server-side budgets: a 1-core runner decoding behind 1000
+/// queued generations is slow, not wrong.
+const LONG: Duration = Duration::from_secs(600);
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!("# §HTTP-Front-Door — SSE streaming, disconnect-as-cancel, connection-scale load");
+
+    let envelope = vec![
+        ("schema", Json::str("mxmoe-bench-v1")),
+        ("bench", Json::str("http")),
+        ("smoke", Json::Bool(smoke)),
+    ];
+    let Some(artifacts) = harness::require_artifacts() else {
+        eprintln!("skipping http bench: artifacts not built (run `make artifacts`)");
+        let mut stub = envelope;
+        stub.push(("skipped", Json::Bool(true)));
+        std::fs::write(
+            "BENCH_http.json",
+            Json::obj(stub.iter().map(|(k, v)| (*k, v.clone())).collect()).pretty(),
+        )?;
+        return Ok(());
+    };
+
+    let t0 = Instant::now();
+    let (cfg, weights) = model_source()?;
+    let clients = if smoke { 64 } else { 1000 };
+    let disconnectors = clients / 4; // ≥25% of the storm drops mid-stream
+    let max_new = if smoke { 8 } else { 16 };
+
+    // ---- phases 1+2 share one cluster sized to hold the whole storm ----
+    let cluster = Arc::new(Cluster::start(
+        cfg.clone(),
+        weights.clone(),
+        artifacts.clone(),
+        mixed_runtime_plan(&cfg),
+        ClusterConfig {
+            replicas: 2,
+            serve: ServeConfig {
+                max_batch_seqs: 4,
+                max_wait: Duration::from_millis(2),
+                ..Default::default()
+            },
+            admission: AdmissionConfig {
+                max_queued_seqs: 2 * clients + 64,
+                max_queued_tokens: 1 << 20,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )?);
+    let server = HttpServer::start(
+        cluster.clone(),
+        HttpConfig {
+            max_connections: 2 * clients + 64,
+            request_timeout: LONG,
+            stream_event_timeout: LONG,
+            ..HttpConfig::default()
+        },
+    )?;
+    let addr = server.addr();
+
+    // ---- phase 1: streamed tokens bit-identical to in-process tickets ----
+    let n_prompts = 8;
+    let mut rng = Rng::new(0xB17_1DE7);
+    for i in 0..n_prompts {
+        let prompt: Vec<u32> =
+            (0..4 + i % 8).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+        let ticket = cluster.generate(prompt.clone(), max_new, vec![])?;
+        let (want, want_reason) = ticket.collect_tokens(LONG)?;
+        let got = sse_generate(addr, &prompt, max_new)?;
+        ensure!(
+            got.tokens == want,
+            "prompt {i}: HTTP stream diverged from in-process ticket \
+             (http {:?} vs direct {:?})",
+            got.tokens,
+            want
+        );
+        ensure!(
+            got.reason.as_deref() == Some(finish_name(want_reason)),
+            "prompt {i}: finish reason diverged ({:?} vs {})",
+            got.reason,
+            finish_name(want_reason)
+        );
+    }
+    println!("| bit-identity      | {n_prompts} prompts | HTTP SSE == in-process Ticket |");
+
+    // ---- phase 2: the storm ----
+    let barrier = Arc::new(Barrier::new(clients));
+    let outcomes: Arc<Mutex<Vec<StormOutcome>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut rng = Rng::new(0x5707_4131);
+    let mut handles = Vec::with_capacity(clients);
+    for i in 0..clients {
+        let prompt: Vec<u32> =
+            (0..4 + i % 5).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+        let barrier = barrier.clone();
+        let outcomes = outcomes.clone();
+        let disconnect = i < disconnectors;
+        let h = thread::Builder::new()
+            .name(format!("storm-{i}"))
+            .stack_size(256 * 1024)
+            .spawn(move || {
+                let out = storm_client(addr, &prompt, max_new, disconnect, &barrier);
+                outcomes.lock().unwrap().push(out);
+            })
+            .context("spawn storm client")?;
+        handles.push(h);
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("storm client panicked"))?;
+    }
+    let outs = outcomes.lock().unwrap();
+    let served = outs.iter().filter(|o| matches!(o, StormOutcome::Served)).count();
+    let dropped = outs.iter().filter(|o| matches!(o, StormOutcome::Disconnected)).count();
+    let shed = outs.iter().filter(|o| matches!(o, StormOutcome::Shed(_))).count();
+    let errors: Vec<&String> = outs
+        .iter()
+        .filter_map(|o| match o {
+            StormOutcome::Error(e) => Some(e),
+            _ => None,
+        })
+        .collect();
+    ensure!(errors.is_empty(), "{} storm client error(s): {:?}", errors.len(), &errors[..1]);
+    ensure!(dropped == disconnectors, "every disconnector dropped mid-stream");
+    ensure!(served + dropped + shed == clients, "every client accounted for");
+    drop(outs);
+
+    // every admitted request must reach a terminal before the ledger can
+    // balance: poll the live report until it does
+    settle(&cluster)?;
+    let http = server.shutdown();
+    let cluster = Arc::try_unwrap(cluster)
+        .map_err(|_| anyhow::anyhow!("server shutdown left a live backend reference"))?;
+    let report = cluster.shutdown();
+    let admitted = report.admission.admitted;
+    let responses = report.total_requests();
+    let cancelled = report.admission.cancelled;
+    let failed = report.admission.failed;
+    ensure!(
+        admitted == responses + cancelled + failed,
+        "storm ledger must reconcile exactly: admitted {admitted} != \
+         responses {responses} + cancelled {cancelled} + failed {failed}"
+    );
+    ensure!(failed == 0, "no engine failures expected, got {failed}");
+    ensure!(
+        cancelled >= 1,
+        "a ≥25% disconnect storm must shed at least one generation as cancelled"
+    );
+    ensure!(http.disconnects >= 1, "the server must observe mid-stream disconnects");
+    ensure!(
+        http.peak_connections >= clients,
+        "storm never held {clients} concurrent streams (peak {})",
+        http.peak_connections
+    );
+    println!(
+        "| storm             | {clients} clients | peak {} conns | {served} served | \
+         {dropped} dropped | {cancelled} cancelled | ledger exact |",
+        http.peak_connections
+    );
+
+    // ---- phase 3: shed semantics on a deliberately tiny cluster ----
+    let shed_stats = shed_phase(&cfg, &weights, &artifacts)?;
+    println!(
+        "| shed semantics    | {} x 429 | {} x 503 | Retry-After on both |",
+        shed_stats.seen_429, shed_stats.seen_503
+    );
+
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let mut out = envelope;
+    out.push(("clients", Json::num(clients as f64)));
+    out.push(("elapsed_s", Json::num(elapsed_s)));
+    out.push((
+        "bit_identity",
+        Json::obj(vec![
+            ("prompts", Json::num(n_prompts as f64)),
+            ("identical", Json::Bool(true)),
+        ]),
+    ));
+    out.push((
+        "storm",
+        Json::obj(vec![
+            ("clients", Json::num(clients as f64)),
+            ("disconnectors", Json::num(disconnectors as f64)),
+            ("peak_connections", Json::num(http.peak_connections as f64)),
+            ("served", Json::num(served as f64)),
+            ("dropped", Json::num(dropped as f64)),
+            ("shed", Json::num(shed as f64)),
+            ("admitted", Json::num(admitted as f64)),
+            ("responses", Json::num(responses as f64)),
+            ("cancelled", Json::num(cancelled as f64)),
+            ("failed", Json::num(failed as f64)),
+            ("ledger_balanced", Json::Bool(true)),
+            ("server_disconnects", Json::num(http.disconnects as f64)),
+            ("sse_events", Json::num(http.sse_events as f64)),
+            ("bytes_out", Json::num(http.bytes_out as f64)),
+        ]),
+    ));
+    out.push((
+        "shed",
+        Json::obj(vec![
+            ("rejected_429", Json::num(shed_stats.seen_429 as f64)),
+            ("rejected_503", Json::num(shed_stats.seen_503 as f64)),
+            ("retry_after_seen", Json::Bool(true)),
+        ]),
+    ));
+    std::fs::write(
+        "BENCH_http.json",
+        Json::obj(out.iter().map(|(k, v)| (*k, v.clone())).collect()).pretty(),
+    )?;
+    println!("\nwrote BENCH_http.json ({elapsed_s:.1}s)");
+    Ok(())
+}
+
+/// Same checkpoint policy as the scenario engine: cached `ci-mini` when
+/// built, else a seeded random one in a temp path.
+fn model_source() -> Result<(ModelConfig, PathBuf)> {
+    let mini = harness::artifacts_dir().join("model_ci-mini.mxt");
+    if mini.exists() {
+        let (cfg, _) = harness::load_model("ci-mini")?;
+        return Ok((cfg, mini));
+    }
+    let cfg = ModelConfig::by_name("ci-mini")?;
+    let lm = MoeLm::random(&cfg, &mut Rng::new(MINI_MODEL_SEED));
+    let path = std::env::temp_dir().join("mxmoe_bench_http.mxt");
+    save_model_mxt(&lm, &path)?;
+    Ok((cfg, path))
+}
+
+fn finish_name(r: FinishReason) -> &'static str {
+    match r {
+        FinishReason::Stop => "stop",
+        FinishReason::Length => "length",
+        FinishReason::Cancelled => "cancelled",
+        FinishReason::Failed => "failed",
+    }
+}
+
+/// Poll the live report until every admitted request reached a terminal
+/// and the admission queue drained.
+fn settle(cluster: &Cluster) -> Result<()> {
+    let t0 = Instant::now();
+    loop {
+        let r = cluster.live_report();
+        if cluster.queued() == (0, 0) && r.admitted == r.requests + r.cancelled + r.failed {
+            return Ok(());
+        }
+        ensure!(
+            t0.elapsed() < LONG,
+            "cluster failed to settle: admitted {} vs responses {} + cancelled {} + failed {}",
+            r.admitted,
+            r.requests,
+            r.cancelled,
+            r.failed
+        );
+        thread::sleep(Duration::from_millis(10));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Minimal HTTP/SSE client (std-only, mirrors the server's hand-rolled wire)
+// ---------------------------------------------------------------------------
+
+struct Reply {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Reply {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Send raw bytes, read to EOF (the server closes every connection), and
+/// split the reply.
+fn roundtrip(addr: SocketAddr, raw: &[u8]) -> Result<Reply> {
+    let mut s = TcpStream::connect(addr).context("connect")?;
+    s.set_read_timeout(Some(LONG))?;
+    s.write_all(raw).context("send request")?;
+    let mut bytes = Vec::new();
+    s.read_to_end(&mut bytes).context("read reply")?;
+    parse_reply(&bytes)
+}
+
+fn parse_reply(bytes: &[u8]) -> Result<Reply> {
+    let text = String::from_utf8_lossy(bytes);
+    let (head, body) =
+        text.split_once("\r\n\r\n").context("reply has no header/body separator")?;
+    let mut lines = head.lines();
+    let status_line = lines.next().context("empty reply")?;
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad status line '{status_line}'"))?;
+    let headers = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    Ok(Reply { status, headers, body: body.to_string() })
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> Result<Reply> {
+    roundtrip(
+        addr,
+        format!(
+            "POST {path} HTTP/1.1\r\nhost: bench\r\ncontent-length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )
+}
+
+fn generate_body(prompt: &[u32], max_new: usize) -> String {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!("{{\"tokens\":[{}],\"max_new_tokens\":{max_new}}}", toks.join(","))
+}
+
+/// Parsed SSE generation stream.
+struct SseOutcome {
+    id: u64,
+    tokens: Vec<u32>,
+    reason: Option<String>,
+}
+
+fn parse_sse(body: &str) -> Result<SseOutcome> {
+    let mut out = SseOutcome { id: 0, tokens: Vec::new(), reason: None };
+    for frame in body.split("\n\n").filter(|f| !f.is_empty()) {
+        let mut lines = frame.lines();
+        let event = lines
+            .next()
+            .and_then(|l| l.strip_prefix("event: "))
+            .with_context(|| format!("frame without event line: {frame:?}"))?;
+        let data = lines
+            .next()
+            .and_then(|l| l.strip_prefix("data: "))
+            .with_context(|| format!("frame without data line: {frame:?}"))?;
+        ensure!(lines.next().is_none(), "multi-line SSE data: {frame:?}");
+        let j = Json::parse(data).with_context(|| format!("bad frame JSON: {data:?}"))?;
+        match event {
+            "start" => out.id = j.req_usize("id")? as u64,
+            "token" => {
+                let tok = j.req_usize("token")?;
+                let index = j.req_usize("index")?;
+                ensure!(index == out.tokens.len(), "token index gap at {index}");
+                out.tokens.push(tok as u32);
+            }
+            "done" => {
+                ensure!(out.reason.is_none(), "two terminal events in one stream");
+                out.reason = Some(j.req_str("reason")?.to_string());
+                ensure!(j.req_usize("generated")? == out.tokens.len(), "generated count");
+                ensure!(j.get("response").is_some(), "done event without response field");
+            }
+            other => bail!("unknown SSE event '{other}'"),
+        }
+    }
+    ensure!(out.id != 0, "stream missing start event");
+    ensure!(out.reason.is_some(), "stream missing terminal done event");
+    Ok(out)
+}
+
+/// Full HTTP SSE generation: POST, stream to EOF, parse every frame.
+fn sse_generate(addr: SocketAddr, prompt: &[u32], max_new: usize) -> Result<SseOutcome> {
+    let reply = post(addr, "/v1/generate", &generate_body(prompt, max_new))?;
+    ensure!(reply.status == 200, "generate returned {}: {}", reply.status, reply.body);
+    parse_sse(&reply.body)
+}
+
+// ---------------------------------------------------------------------------
+// Storm clients
+// ---------------------------------------------------------------------------
+
+enum StormOutcome {
+    /// Streamed to the terminal `done` event.
+    Served,
+    /// Deliberately dropped the connection mid-stream.
+    Disconnected,
+    /// Admission shed the request (HTTP status).
+    Shed(u16),
+    Error(String),
+}
+
+/// One storm client. Every path reaches the barrier exactly once, after
+/// the connection is live (post-admission, pre-token), so the whole storm
+/// is simultaneously connected when it releases.
+fn storm_client(
+    addr: SocketAddr,
+    prompt: &[u32],
+    max_new: usize,
+    disconnect: bool,
+    barrier: &Barrier,
+) -> StormOutcome {
+    match storm_connect(addr, prompt, max_new) {
+        Err(e) => {
+            barrier.wait();
+            StormOutcome::Error(format!("{e:#}"))
+        }
+        Ok(Conn::Shed(status)) => {
+            barrier.wait();
+            StormOutcome::Shed(status)
+        }
+        Ok(Conn::Streaming(mut s, mut buf)) => {
+            barrier.wait();
+            if disconnect {
+                // read up to the first token frame, then vanish
+                while !buf.contains("event: token") {
+                    let mut chunk = [0u8; 1024];
+                    match s.read(&mut chunk) {
+                        Ok(0) => break, // tiny generation already finished
+                        Ok(n) => buf.push_str(&String::from_utf8_lossy(&chunk[..n])),
+                        Err(e) => return StormOutcome::Error(format!("mid-stream read: {e}")),
+                    }
+                }
+                drop(s);
+                return StormOutcome::Disconnected;
+            }
+            let mut rest = String::new();
+            if let Err(e) = s.read_to_string(&mut rest) {
+                return StormOutcome::Error(format!("stream read: {e}"));
+            }
+            buf.push_str(&rest);
+            match parse_sse(&buf) {
+                Ok(out) if out.reason.as_deref() == Some("stop")
+                    || out.reason.as_deref() == Some("length") =>
+                {
+                    StormOutcome::Served
+                }
+                Ok(out) => StormOutcome::Error(format!("unexpected finish {:?}", out.reason)),
+                Err(e) => StormOutcome::Error(format!("{e:#}")),
+            }
+        }
+    }
+}
+
+enum Conn {
+    /// Admitted: live SSE socket + everything read so far (headers
+    /// stripped, ends just past the `start` frame).
+    Streaming(TcpStream, String),
+    Shed(u16),
+}
+
+fn storm_connect(addr: SocketAddr, prompt: &[u32], max_new: usize) -> Result<Conn> {
+    let body = generate_body(prompt, max_new);
+    let mut s = TcpStream::connect(addr).context("connect")?;
+    s.set_read_timeout(Some(LONG))?;
+    s.write_all(
+        format!(
+            "POST /v1/generate HTTP/1.1\r\nhost: bench\r\ncontent-length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )?;
+    // read headers + the start frame (proof of admission)
+    let mut buf = String::new();
+    loop {
+        if let Some(head_end) = buf.find("\r\n\r\n") {
+            let status: u16 = buf
+                .lines()
+                .next()
+                .and_then(|l| l.split(' ').nth(1))
+                .and_then(|c| c.parse().ok())
+                .context("bad status line")?;
+            if status != 200 {
+                // drain the shed reply so the server's write completes
+                let mut rest = String::new();
+                let _ = s.read_to_string(&mut rest);
+                return Ok(Conn::Shed(status));
+            }
+            if buf[head_end..].contains("\n\n") {
+                return Ok(Conn::Streaming(s, buf.split_off(head_end + 4)));
+            }
+        }
+        let mut chunk = [0u8; 1024];
+        let n = s.read(&mut chunk).context("read stream head")?;
+        ensure!(n > 0, "stream closed before start event");
+        buf.push_str(&String::from_utf8_lossy(&chunk[..n]));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shed-semantics phase
+// ---------------------------------------------------------------------------
+
+struct ShedStats {
+    seen_429: usize,
+    seen_503: usize,
+}
+
+/// Tiny cluster: admission queue of 2 sequences / 256 tokens, KV pool of
+/// 4 pages. Concurrent scores must overflow the queue into 429s; a long
+/// generation holding the KV pool must turn later prompts into 503s.
+/// Both must carry `Retry-After`.
+fn shed_phase(cfg: &ModelConfig, weights: &PathBuf, artifacts: &PathBuf) -> Result<ShedStats> {
+    let cluster = Arc::new(Cluster::start(
+        cfg.clone(),
+        weights.clone(),
+        artifacts.clone(),
+        mixed_runtime_plan(cfg),
+        ClusterConfig {
+            replicas: 1,
+            serve: ServeConfig {
+                max_batch_seqs: 2,
+                max_wait: Duration::from_millis(2),
+                ..Default::default()
+            },
+            admission: AdmissionConfig {
+                max_queued_seqs: 2,
+                max_queued_tokens: 256,
+                ..Default::default()
+            },
+            decode: DecodePolicy {
+                kv_budget_tokens: 4 * KV_PAGE_SIZE,
+                kv_page_size: KV_PAGE_SIZE,
+                max_active_seqs: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )?);
+    let server = HttpServer::start(
+        cluster.clone(),
+        HttpConfig { request_timeout: LONG, stream_event_timeout: LONG, ..HttpConfig::default() },
+    )?;
+    let addr = server.addr();
+
+    // 429: flood the bounded queue with concurrent scores
+    let mut rng = Rng::new(0x5EED_0429);
+    let mut seen_429 = 0usize;
+    let mut floods = Vec::new();
+    for _ in 0..16 {
+        let toks: Vec<String> =
+            (0..64).map(|_| rng.below(cfg.vocab as u64).to_string()).collect();
+        let body = format!("{{\"tokens\":[{}]}}", toks.join(","));
+        floods.push(thread::spawn(move || post(addr, "/v1/score", &body)));
+    }
+    for f in floods {
+        let reply = f.join().map_err(|_| anyhow::anyhow!("flood client panicked"))??;
+        match reply.status {
+            200 => {}
+            429 => {
+                let retry: u64 = reply
+                    .header("retry-after")
+                    .context("429 without Retry-After")?
+                    .parse()
+                    .context("Retry-After must be integral seconds")?;
+                ensure!(retry >= 1, "Retry-After must be at least 1s");
+                let j = Json::parse(&reply.body)?;
+                ensure!(j.req_str("reason")? == "queue-full", "429 reason");
+                j.req_usize("retry_after_ms")?;
+                seen_429 += 1;
+            }
+            other => bail!("unexpected flood status {other}: {}", reply.body),
+        }
+    }
+    ensure!(seen_429 >= 1, "queue flood produced no 429s");
+
+    // 503: park a generation that grows to fill the 4-page KV pool
+    // (1 prompt page + headroom + 32 decode tokens = the whole budget),
+    // then probe with prompts that cannot fit next to it
+    let parked = thread::Builder::new()
+        .name("kv-parker".into())
+        .spawn(move || {
+            let prompt: Vec<u32> = (0..KV_PAGE_SIZE as u32).collect();
+            // a probe may transiently hold the pool; retry until parked
+            let mut last = sse_generate(addr, &prompt, 2 * KV_PAGE_SIZE);
+            for _ in 0..100 {
+                if last.is_ok() {
+                    break;
+                }
+                thread::sleep(Duration::from_millis(20));
+                last = sse_generate(addr, &prompt, 2 * KV_PAGE_SIZE);
+            }
+            last
+        })
+        .context("spawn kv parker")?;
+    let mut seen_503 = 0usize;
+    let probe: Vec<u32> = (0..(3 * KV_PAGE_SIZE) as u32).collect();
+    for _ in 0..100 {
+        let reply = post(addr, "/v1/generate", &generate_body(&probe, 2))?;
+        match reply.status {
+            503 => {
+                let retry: u64 = reply
+                    .header("retry-after")
+                    .context("503 without Retry-After")?
+                    .parse()
+                    .context("Retry-After must be integral seconds")?;
+                ensure!(retry >= 1, "Retry-After must be at least 1s");
+                let j = Json::parse(&reply.body)?;
+                ensure!(j.req_str("reason")? == "kv-exhausted", "503 reason");
+                seen_503 += 1;
+                break;
+            }
+            200 => {
+                // probe squeezed in before the parked generation claimed
+                // the pool — let its stream finish and try again
+                parse_sse(&reply.body)?;
+            }
+            429 => {} // queue-full race with the parked generation
+            other => bail!("unexpected probe status {other}: {}", reply.body),
+        }
+        thread::sleep(Duration::from_millis(20));
+    }
+    ensure!(seen_503 >= 1, "KV-pool probes never saw a 503");
+
+    let out = parked
+        .join()
+        .map_err(|_| anyhow::anyhow!("kv parker panicked"))?
+        .context("parked generation failed")?;
+    ensure!(
+        matches!(out.reason.as_deref(), Some("length") | Some("stop")),
+        "parked generation should finish served, got {:?}",
+        out.reason
+    );
+
+    settle(&cluster)?;
+    server.shutdown();
+    let cluster = Arc::try_unwrap(cluster)
+        .map_err(|_| anyhow::anyhow!("server shutdown left a live backend reference"))?;
+    let report = cluster.shutdown();
+    let a = &report.admission;
+    ensure!(
+        a.admitted == report.total_requests() + a.cancelled + a.failed,
+        "shed-phase ledger must reconcile exactly"
+    );
+    ensure!(a.rejected_kv >= 1, "admission must account the KV sheds");
+    Ok(ShedStats { seen_429, seen_503 })
+}

@@ -1,0 +1,138 @@
+//! `serve-http`: stand up a mini-model cluster behind the HTTP streaming
+//! front door (DESIGN.md §HTTP-Front-Door) and serve until killed.
+//!
+//! ```text
+//! cargo run --release --bin serve-http -- --replicas 2 --addr 127.0.0.1:8080
+//! curl -s localhost:8080/healthz
+//! curl -sN localhost:8080/v1/generate -d '{"tokens":[1,2,3],"max_new_tokens":8}'
+//! ```
+//!
+//! Requires the AOT artifacts (`make artifacts`). Uses the cached
+//! `ci-mini` checkpoint when present (`make mini-model`), else a seeded
+//! random one — same model-source policy as the scenario engine.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use mxmoe::coordinator::{Cluster, ClusterConfig, ServeConfig};
+use mxmoe::harness::{self, mixed_runtime_plan, save_model_mxt, MINI_MODEL_SEED};
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::obs::TraceConfig;
+use mxmoe::serve::{HttpConfig, HttpServer};
+use mxmoe::util::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// `--key value` pairs, same shape as the `mxmoe` CLI.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let mut flags = HashMap::new();
+        while let Some(k) = it.next() {
+            if k == "--help" || k == "-h" {
+                println!(
+                    "serve-http: HTTP front door over a mini-model cluster\n\n\
+                     flags:\n  \
+                     --addr ADDR             bind address (default 127.0.0.1:8080)\n  \
+                     --replicas N            engine replicas (default 2)\n  \
+                     --max-connections N     concurrent connection bound (default 2048)\n  \
+                     --trace on|off          http-track span collection (default off)"
+                );
+                std::process::exit(0);
+            }
+            let key = k
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got '{k}'"))?
+                .to_string();
+            let v = it.next().with_context(|| format!("--{key} needs a value"))?;
+            flags.insert(key, v);
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+}
+
+/// Same checkpoint policy as the scenario engine: the cached `ci-mini`
+/// MXT when built, else a seeded random one written to a temp path.
+fn model_source() -> Result<(ModelConfig, PathBuf)> {
+    let mini = harness::artifacts_dir().join("model_ci-mini.mxt");
+    if mini.exists() {
+        let (cfg, _) = harness::load_model("ci-mini")?;
+        return Ok((cfg, mini));
+    }
+    let cfg = ModelConfig::by_name("ci-mini")?;
+    let lm = MoeLm::random(&cfg, &mut Rng::new(MINI_MODEL_SEED));
+    let path = std::env::temp_dir().join("mxmoe_serve_http.mxt");
+    save_model_mxt(&lm, &path)?;
+    Ok((cfg, path))
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    let Some(artifacts) = harness::require_artifacts() else {
+        bail!("AOT artifacts not built — run `make artifacts` first");
+    };
+    let addr = args.get("addr", "127.0.0.1:8080");
+    let replicas = args.get_usize("replicas", 2)?;
+    let max_connections = args.get_usize("max-connections", 2048)?;
+    let trace = match args.get("trace", "off").as_str() {
+        "on" => TraceConfig::on(),
+        "off" => TraceConfig::default(),
+        other => bail!("unknown --trace '{other}' (on|off)"),
+    };
+
+    let (cfg, weights) = model_source()?;
+    eprintln!("starting {replicas}-replica cluster ({})...", cfg.name);
+    let cluster = Cluster::start(
+        cfg.clone(),
+        weights,
+        artifacts,
+        mixed_runtime_plan(&cfg),
+        ClusterConfig {
+            replicas,
+            serve: ServeConfig {
+                max_batch_seqs: 4,
+                max_wait: Duration::from_millis(2),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )?;
+
+    let server = HttpServer::start(
+        Arc::new(cluster),
+        HttpConfig { addr, max_connections, trace, ..HttpConfig::default() },
+    )?;
+    println!("serving on http://{}", server.addr());
+    println!("  GET  /healthz");
+    println!("  GET  /metrics");
+    println!("  POST /v1/score          {{\"tokens\":[...]}}");
+    println!("  POST /v1/generate       {{\"tokens\":[...],\"max_new_tokens\":N}}  (SSE)");
+    println!("  POST /v1/cancel/<id>");
+    loop {
+        std::thread::park();
+    }
+}

@@ -50,7 +50,7 @@ use crate::serve::request::{
 };
 use crate::serve::{Request, Response};
 
-use super::metrics::{ClusterReport, ReplicaReport, RouterStats};
+use super::metrics::{ClusterReport, ReplicaReport, RouterStats, ServerReport};
 use super::server::ServeConfig;
 
 /// Everything the online loop needs beyond the static plans: the
@@ -696,6 +696,17 @@ impl Cluster {
     /// Front-door accounting so far (admitted / rejected / cancelled).
     pub fn admission_report(&self) -> crate::serve::request::AdmissionReport {
         self.admission.report()
+    }
+
+    /// Live mid-run [`ServerReport`] snapshot — admission counters plus
+    /// the replica status board ([`ServerReport::live`]). The full report
+    /// (latency percentiles, wave telemetry, trace) still only exists at
+    /// [`shutdown`](Self::shutdown); this one backs the HTTP front door's
+    /// `GET /metrics` scrape, which cannot wait for the run to end.
+    pub fn live_report(&self) -> ServerReport {
+        let statuses: Vec<ReplicaStatus> =
+            self.status.iter().map(|s| s.lock().unwrap().clone()).collect();
+        ServerReport::live(&self.admission.report(), &statuses)
     }
 
     /// Admission queue occupancy right now, as `(seqs, tokens)`. Reaches

@@ -19,6 +19,7 @@ use std::time::Instant;
 use crate::obs::{Deadline, EventKind, SpanCollector, Track, TraceEvent, TraceLog};
 use crate::runtime::{RuntimeScheme, WaveReport};
 use crate::serve::kvcache::KvOccupancy;
+use crate::serve::replica::ReplicaStatus;
 use crate::serve::request::{AdmissionReport, Priority, QosClass};
 use crate::util::stats::Summary;
 
@@ -965,15 +966,37 @@ impl ClusterReport {
             },
             slo_by_class: self.slo_by_class(),
             served_by_generation: self.served_by_generation(),
+            http: HttpReport::default(),
             trace: self.trace.clone(),
         }
     }
 }
 
+/// HTTP front-door counters (DESIGN.md §HTTP-Front-Door). Zero unless the
+/// report passed through a running [`crate::serve::http::HttpServer`] —
+/// in-process clusters have no wire, so [`ClusterReport::flatten`] leaves
+/// the default.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HttpReport {
+    /// Connections accepted and handled.
+    pub connections: usize,
+    /// Connections turned away at the handler-pool bound (503 + Retry-After
+    /// before the request line is even read).
+    pub rejected_busy: usize,
+    /// Client disconnects observed mid-response (each cancels its ticket).
+    pub disconnects: usize,
+    /// SSE events written across all streams.
+    pub sse_events: usize,
+    /// Response bytes written (headers + bodies + SSE frames).
+    pub bytes_out: usize,
+    /// Peak concurrently live connections.
+    pub peak_connections: usize,
+}
+
 /// Final statistics returned at shutdown — the cluster-wide view in the
 /// shape the single-engine server has always reported (a 1-replica cluster
 /// reproduces the old numbers).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct ServerReport {
     pub requests: usize,
     pub tokens: usize,
@@ -1064,8 +1087,50 @@ pub struct ServerReport {
     pub slo_by_class: [SloClassStats; SLO_CLASSES],
     /// Served-bits attribution: plan generation → requests it served.
     pub served_by_generation: Vec<(u64, usize)>,
+    /// HTTP front-door counters (default/zero for in-process clusters).
+    pub http: HttpReport,
     /// Merged lifecycle trace (empty when tracing was off).
     pub trace: TraceLog,
+}
+
+impl ServerReport {
+    /// A live mid-run snapshot for scrape-shaped consumers (the HTTP front
+    /// door's `GET /metrics`): admission counters from the front door plus
+    /// progress counters from the replica status board. Distribution
+    /// fields (latency percentiles, wave telemetry, per-class SLO stats)
+    /// are only assembled at shutdown and read zero here; `kv_avg_bits`
+    /// reports full precision, matching the idle-cluster convention.
+    pub fn live(admission: &AdmissionReport, statuses: &[ReplicaStatus]) -> ServerReport {
+        ServerReport {
+            requests: statuses.iter().map(|s| s.requests_done).sum(),
+            tokens: statuses.iter().map(|s| s.tokens_done).sum(),
+            swaps: statuses.iter().map(|s| s.swaps).sum(),
+            replans: statuses.iter().map(|s| s.replans).sum(),
+            generation: statuses.iter().map(|s| s.generation).max().unwrap_or(0),
+            replicas: statuses.len(),
+            admitted: admission.admitted,
+            rejected_queue_full: admission.rejected_queue_full,
+            rejected_deadline: admission.rejected_deadline,
+            rejected_quota: admission.rejected_quota,
+            rejected_kv: admission.rejected_kv,
+            cancelled: admission.cancelled,
+            failed: admission.failed,
+            generated_tokens: statuses.iter().map(|s| s.generated_tokens).sum(),
+            generations: statuses.iter().map(|s| s.generations_done).sum(),
+            kv_preemptions: statuses.iter().map(|s| s.kv_preemptions).sum(),
+            kv_avg_bits: 32.0,
+            qos_served: {
+                let mut q = [0usize; 3];
+                for s in statuses {
+                    for (a, b) in q.iter_mut().zip(&s.qos_served) {
+                        *a += b;
+                    }
+                }
+                q
+            },
+            ..ServerReport::default()
+        }
+    }
 }
 
 #[cfg(test)]

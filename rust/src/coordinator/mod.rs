@@ -26,7 +26,7 @@ pub use cluster::{
 };
 pub use engine::{uniform_engine, ReplanStaging, ServingEngine};
 pub use metrics::{
-    slo_class_index, slo_class_name, ClusterReport, Metrics, ReplanEvent, ReplicaReport,
-    RouterStats, ServerReport, SloClassStats, SLO_CLASSES,
+    slo_class_index, slo_class_name, ClusterReport, HttpReport, Metrics, ReplanEvent,
+    ReplicaReport, RouterStats, ServerReport, SloClassStats, SLO_CLASSES,
 };
 pub use server::{Request, Response, ServeConfig, Server};

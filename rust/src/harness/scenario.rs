@@ -47,7 +47,7 @@ use crate::coordinator::{
 use crate::moe::{ModelConfig, MoeLm};
 use crate::runtime::RuntimeScheme;
 use crate::ser::Json;
-use crate::serve::{Admission, AdmissionConfig, Priority, QosClass, ServeRequest};
+use crate::serve::{Admission, AdmissionConfig, DecodePolicy, Priority, QosClass, ServeRequest};
 use crate::util::Rng;
 
 use super::{artifacts_dir, mixed_runtime_plan, require_artifacts, save_model_mxt, MINI_MODEL_SEED};
@@ -60,6 +60,11 @@ pub const BENCH_SCHEMA: &str = "mxmoe-bench-v1";
 /// Per-ticket and per-tick drain budget: a quiesce that outlives this is
 /// a stall (lost request, router wedge), not a slow machine.
 const QUIESCE_BUDGET: Duration = Duration::from_secs(120);
+
+/// Real-time gap between the sub-bursts of one tick (`sub_bursts > 1`):
+/// long enough for the previous sub-burst's admitted work to start
+/// decoding and claim KV pages, short enough that a tick stays cheap.
+const SUB_BURST_GAP: Duration = Duration::from_millis(20);
 
 // ---------------------------------------------------------------------------
 // Spec types
@@ -181,9 +186,33 @@ impl Default for AdmissionKnobs {
     }
 }
 
+/// Decode/KV-pool knobs the scenario's replicas run under; defaults
+/// mirror [`DecodePolicy`]. Shrinking the pool is how the KV-exhaustion
+/// scenarios trip the admission backpressure gate and the decode
+/// scheduler's preempt-youngest path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecodeKnobs {
+    pub kv_budget_tokens: usize,
+    pub kv_page_size: usize,
+    pub max_active_seqs: usize,
+}
+
+impl Default for DecodeKnobs {
+    fn default() -> DecodeKnobs {
+        let d = DecodePolicy::default();
+        DecodeKnobs {
+            kv_budget_tokens: d.kv_budget_tokens,
+            kv_page_size: d.kv_page_size,
+            max_active_seqs: d.max_active_seqs,
+        }
+    }
+}
+
 /// SLO bounds of the verdict block. Ledger-derived bounds are enforced
 /// in every mode; `min_hit_rate` / `max_p99_ms` are wall-clock and only
-/// enforced in full (non-smoke) runs.
+/// enforced in full (non-smoke) runs, as are `min_kv_shed` /
+/// `min_preemptions` (whether the KV gate trips depends on how much
+/// decode is still in flight when a sub-burst lands).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct SloBounds {
     pub max_shed_rate: Option<f64>,
@@ -191,6 +220,8 @@ pub struct SloBounds {
     pub min_replans: Option<usize>,
     pub min_queue_full: Option<usize>,
     pub min_quota: Option<usize>,
+    pub min_kv_shed: Option<usize>,
+    pub min_preemptions: Option<usize>,
     pub min_hit_rate: Option<f64>,
     /// `(QosClass index, bound in ms)` pairs.
     pub max_p99_ms: Vec<(usize, f64)>,
@@ -209,6 +240,13 @@ pub struct ScenarioSpec {
     /// replan).
     pub deterministic: bool,
     pub arrival: ArrivalCurve,
+    /// Sub-bursts a tick's arrivals are split into, landing
+    /// [`SUB_BURST_GAP`] apart with **no quiesce between them** — later
+    /// sub-bursts see whatever KV the earlier ones still hold, which is
+    /// the only way the kv-exhausted admission gate can trip in a
+    /// scenario. `1` (the default) is the classic burst-atomic tick;
+    /// `deterministic: true` requires it.
+    pub sub_bursts: usize,
     pub mix: Vec<MixPhase>,
     /// Inclusive prompt-length range.
     pub prompt_tokens: (usize, usize),
@@ -223,6 +261,7 @@ pub struct ScenarioSpec {
     pub replica_events: Vec<ReplicaEvent>,
     pub online: Option<OnlineKnobs>,
     pub admission: AdmissionKnobs,
+    pub decode: DecodeKnobs,
     pub slo: SloBounds,
 }
 
@@ -287,9 +326,9 @@ impl ScenarioSpec {
             "scenario",
             &[
                 "schema", "name", "description", "seed", "ticks", "replicas", "deterministic",
-                "arrival", "mix", "prompt_tokens", "generate_fraction", "max_new_tokens",
-                "deadline_ms", "cancel_storms", "drift", "replica_events", "online", "admission",
-                "slo",
+                "arrival", "sub_bursts", "mix", "prompt_tokens", "generate_fraction",
+                "max_new_tokens", "deadline_ms", "cancel_storms", "drift", "replica_events",
+                "online", "admission", "decode", "slo",
             ],
         )?;
         let schema = j.req_str("schema")?;
@@ -427,6 +466,20 @@ impl ScenarioSpec {
             }
         };
 
+        let decode = match j.get("decode") {
+            None => DecodeKnobs::default(),
+            Some(d) => {
+                known_keys(d, "decode", &["kv_budget_tokens", "kv_page_size", "max_active_seqs"])?;
+                let dd = DecodeKnobs::default();
+                DecodeKnobs {
+                    kv_budget_tokens: opt_usize(d, "kv_budget_tokens")?
+                        .unwrap_or(dd.kv_budget_tokens),
+                    kv_page_size: opt_usize(d, "kv_page_size")?.unwrap_or(dd.kv_page_size),
+                    max_active_seqs: opt_usize(d, "max_active_seqs")?.unwrap_or(dd.max_active_seqs),
+                }
+            }
+        };
+
         let slo = match j.get("slo") {
             None => SloBounds::default(),
             Some(s) => {
@@ -435,7 +488,8 @@ impl ScenarioSpec {
                     "slo",
                     &[
                         "max_shed_rate", "min_served", "min_replans", "min_queue_full",
-                        "min_quota", "min_hit_rate", "max_p99_ms",
+                        "min_quota", "min_kv_shed", "min_preemptions", "min_hit_rate",
+                        "max_p99_ms",
                     ],
                 )?;
                 let mut max_p99_ms = Vec::new();
@@ -453,6 +507,8 @@ impl ScenarioSpec {
                     min_replans: opt_usize(s, "min_replans")?,
                     min_queue_full: opt_usize(s, "min_queue_full")?,
                     min_quota: opt_usize(s, "min_quota")?,
+                    min_kv_shed: opt_usize(s, "min_kv_shed")?,
+                    min_preemptions: opt_usize(s, "min_preemptions")?,
                     min_hit_rate: opt_f64(s, "min_hit_rate")?,
                     max_p99_ms,
                 }
@@ -467,6 +523,7 @@ impl ScenarioSpec {
             replicas: j.req_usize("replicas")?,
             deterministic: opt_bool(j, "deterministic")?.unwrap_or(false),
             arrival,
+            sub_bursts: opt_usize(j, "sub_bursts")?.unwrap_or(1),
             mix,
             prompt_tokens,
             generate_fraction: opt_f64(j, "generate_fraction")?.unwrap_or(0.0),
@@ -477,6 +534,7 @@ impl ScenarioSpec {
             replica_events,
             online,
             admission,
+            decode,
             slo,
         })
     }
@@ -532,6 +590,9 @@ impl ScenarioSpec {
             ("generate_fraction", Json::num(self.generate_fraction)),
             ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
         ];
+        if self.sub_bursts != 1 {
+            pairs.push(("sub_bursts", Json::num(self.sub_bursts as f64)));
+        }
         if self.deadline_ms.iter().any(Option::is_some) {
             let mut d = Vec::new();
             for q in QosClass::ALL {
@@ -599,6 +660,16 @@ impl ScenarioSpec {
                 ("auto_reserve", Json::Bool(self.admission.auto_reserve)),
             ]),
         ));
+        if self.decode != DecodeKnobs::default() {
+            pairs.push((
+                "decode",
+                Json::obj(vec![
+                    ("kv_budget_tokens", Json::num(self.decode.kv_budget_tokens as f64)),
+                    ("kv_page_size", Json::num(self.decode.kv_page_size as f64)),
+                    ("max_active_seqs", Json::num(self.decode.max_active_seqs as f64)),
+                ]),
+            ));
+        }
         let mut slo = Vec::new();
         if let Some(x) = self.slo.max_shed_rate {
             slo.push(("max_shed_rate", Json::num(x)));
@@ -614,6 +685,12 @@ impl ScenarioSpec {
         }
         if let Some(x) = self.slo.min_quota {
             slo.push(("min_quota", Json::num(x as f64)));
+        }
+        if let Some(x) = self.slo.min_kv_shed {
+            slo.push(("min_kv_shed", Json::num(x as f64)));
+        }
+        if let Some(x) = self.slo.min_preemptions {
+            slo.push(("min_preemptions", Json::num(x as f64)));
         }
         if let Some(x) = self.slo.min_hit_rate {
             slo.push(("min_hit_rate", Json::num(x)));
@@ -649,6 +726,9 @@ impl ScenarioSpec {
         );
         ensure!(self.ticks >= 1, "ticks must be >= 1");
         ensure!(self.replicas >= 1, "replicas must be >= 1");
+        ensure!(self.sub_bursts >= 1, "sub_bursts must be >= 1");
+        ensure!(self.decode.kv_page_size >= 1, "decode.kv_page_size must be >= 1");
+        ensure!(self.decode.max_active_seqs >= 1, "decode.max_active_seqs must be >= 1");
         match self.arrival {
             ArrivalCurve::Constant { rate } => ensure!(rate > 0.0, "arrival rate must be > 0"),
             ArrivalCurve::Diurnal { rate, amplitude, period } => {
@@ -766,6 +846,16 @@ impl ScenarioSpec {
             ensure!(
                 self.slo.min_replans.is_none(),
                 "deterministic scenario cannot bound replans"
+            );
+            ensure!(
+                self.sub_bursts == 1,
+                "deterministic scenario cannot split ticks into sub-bursts \
+                 (burst-atomic admission is the determinism anchor)"
+            );
+            ensure!(
+                self.slo.min_kv_shed.is_none() && self.slo.min_preemptions.is_none(),
+                "deterministic scenario cannot bound KV sheds or preemptions \
+                 (pool occupancy at admission time is wall-clock)"
             );
         } else if self.slo.min_replans.is_some() {
             ensure!(self.online.is_some(), "min_replans needs 'online' replanning enabled");
@@ -1116,6 +1206,27 @@ fn compute_verdict(spec: &ScenarioSpec, smoke: bool, ledger: &Ledger, slo: &SloB
     if let Some(x) = spec.slo.min_replans {
         checks.push(Check::new("replans", slo.replans as f64, x as f64, ">=", true));
     }
+    // KV-pressure bounds: whether the gate trips (and how often decode
+    // preempts) depends on how much earlier work is still holding pages
+    // when a sub-burst lands — wall-clock, so enforced only in full runs
+    if let Some(x) = spec.slo.min_kv_shed {
+        checks.push(Check::new(
+            "kv_shed_rejects",
+            ledger.rejected_kv as f64,
+            x as f64,
+            ">=",
+            !smoke,
+        ));
+    }
+    if let Some(x) = spec.slo.min_preemptions {
+        checks.push(Check::new(
+            "kv_preemptions",
+            slo.kv_preemptions as f64,
+            x as f64,
+            ">=",
+            !smoke,
+        ));
+    }
     // wall-clock bounds: reported in every mode, enforced only in full
     // runs (shared CI runners must not flake the gate)
     if let Some(x) = spec.slo.min_hit_rate {
@@ -1192,6 +1303,12 @@ pub fn run_scenario(spec: &ScenarioSpec, opts: &RunOptions) -> Result<ScenarioOu
             ..Default::default()
         },
         dispatch_threads: opts.dispatch_threads,
+        decode: DecodePolicy {
+            kv_budget_tokens: spec.decode.kv_budget_tokens,
+            kv_page_size: spec.decode.kv_page_size,
+            max_active_seqs: spec.decode.max_active_seqs,
+            ..Default::default()
+        },
         ..Default::default()
     };
 
@@ -1271,23 +1388,33 @@ pub fn run_scenario(spec: &ScenarioSpec, opts: &RunOptions) -> Result<ScenarioOu
             }
         }
         arrivals += plan.arrivals.len();
-        let reqs: Vec<ServeRequest> = plan.arrivals.iter().map(|a| to_request(spec, a)).collect();
+        // `sub_bursts == 1` is the classic burst-atomic tick; more split
+        // the arrivals into chunks landing SUB_BURST_GAP apart with no
+        // quiesce between, so later chunks contend with whatever KV the
+        // earlier ones still hold (the kv-exhausted gate's trigger)
+        let chunk_len = plan.arrivals.len().div_ceil(spec.sub_bursts).max(1);
         let mut live = Vec::new();
-        for (a, adm) in plan.arrivals.iter().zip(cluster.try_submit_burst(reqs)?) {
-            match adm {
-                Admission::Admitted(t) => {
-                    if a.cancel {
-                        t.cancel();
-                        cancel_requested += 1;
-                        // keep the ticket alive until the tick drains so
-                        // the replica's reply (if the cancel lost the
-                        // race) has a live channel
-                        live.push((t, true));
-                    } else {
-                        live.push((t, false));
+        for (bi, chunk) in plan.arrivals.chunks(chunk_len).enumerate() {
+            if bi > 0 {
+                std::thread::sleep(SUB_BURST_GAP);
+            }
+            let reqs: Vec<ServeRequest> = chunk.iter().map(|a| to_request(spec, a)).collect();
+            for (a, adm) in chunk.iter().zip(cluster.try_submit_burst(reqs)?) {
+                match adm {
+                    Admission::Admitted(t) => {
+                        if a.cancel {
+                            t.cancel();
+                            cancel_requested += 1;
+                            // keep the ticket alive until the tick drains
+                            // so the replica's reply (if the cancel lost
+                            // the race) has a live channel
+                            live.push((t, true));
+                        } else {
+                            live.push((t, false));
+                        }
                     }
+                    Admission::Rejected { .. } => {} // counted by the admission report
                 }
-                Admission::Rejected { .. } => {} // counted by the admission report
             }
         }
         // quiesce, half 1: every non-cancelled admitted request reaches a
@@ -1528,6 +1655,7 @@ mod tests {
             replicas: 1,
             deterministic: true,
             arrival: ArrivalCurve::Constant { rate: 2.5 },
+            sub_bursts: 1,
             mix: vec![MixPhase { from_tick: 0, interactive: 0.5, standard: 0.3, batch: 0.2 }],
             prompt_tokens: (4, 12),
             generate_fraction: 0.25,
@@ -1538,6 +1666,7 @@ mod tests {
             replica_events: vec![],
             online: None,
             admission: AdmissionKnobs::default(),
+            decode: DecodeKnobs::default(),
             slo: SloBounds { max_shed_rate: Some(0.0), min_served: Some(25), ..Default::default() },
         }
     }
@@ -1559,6 +1688,10 @@ mod tests {
         spec.replicas = 2;
         spec.online = Some(OnlineKnobs { drift_threshold: 0.0, min_tokens_between: 1 });
         spec.slo.max_p99_ms = vec![(0, 2000.0)];
+        spec.sub_bursts = 4;
+        spec.decode = DecodeKnobs { kv_budget_tokens: 64, kv_page_size: 16, max_active_seqs: 2 };
+        spec.slo.min_kv_shed = Some(1);
+        spec.slo.min_preemptions = Some(1);
         spec.validate().unwrap();
         let text = spec.to_json().pretty();
         let back = ScenarioSpec::parse(&text).unwrap();
@@ -1596,7 +1729,20 @@ mod tests {
         spec.deadline_ms[0] = None;
         spec.online = Some(OnlineKnobs { drift_threshold: 0.0, min_tokens_between: 1 });
         assert!(spec.validate().is_err());
+        spec.online = None;
+        // sub-bursts break burst-atomic admission; KV-pressure bounds are
+        // wall-clock — both are deterministic-mode contraband
+        spec.sub_bursts = 2;
+        assert!(spec.validate().unwrap_err().to_string().contains("sub-bursts"));
+        spec.sub_bursts = 1;
+        spec.slo.min_kv_shed = Some(1);
+        assert!(spec.validate().unwrap_err().to_string().contains("KV"));
+        spec.slo.min_kv_shed = None;
+        spec.online = Some(OnlineKnobs { drift_threshold: 0.0, min_tokens_between: 1 });
         spec.deterministic = false;
+        spec.validate().unwrap();
+        spec.sub_bursts = 2;
+        spec.slo.min_preemptions = Some(1);
         spec.validate().unwrap();
     }
 

@@ -124,7 +124,8 @@ impl TraceLog {
                 }
                 EventKind::Rejected { .. }
                 | EventKind::BatchCut { .. }
-                | EventKind::Routed { .. } => {
+                | EventKind::Routed { .. }
+                | EventKind::KvPreempt { .. } => {
                     fields.push(("ph", Json::str("i")));
                     fields.push(("s", Json::str("t")));
                 }
@@ -132,7 +133,8 @@ impl TraceLog {
                 | EventKind::DecodeStep { .. }
                 | EventKind::ReplanSolve { .. }
                 | EventKind::SwapStage { .. }
-                | EventKind::SwapInstall { .. } => {
+                | EventKind::SwapInstall { .. }
+                | EventKind::HttpConn { .. } => {
                     fields.push(("ph", Json::str("X")));
                     fields.push(("dur", Json::num(e.dur_us as f64)));
                 }
@@ -262,6 +264,14 @@ fn event_args(e: &TraceEvent) -> Json {
             ("swapped", Json::num(*swapped as f64)),
             ("generation", Json::num(*generation as f64)),
         ]),
+        EventKind::HttpConn { endpoint, status, bytes, events, disconnected } => Json::obj(vec![
+            req,
+            ("endpoint", Json::str(endpoint)),
+            ("status", Json::num(*status as f64)),
+            ("bytes", Json::num(*bytes as f64)),
+            ("events", Json::num(*events as f64)),
+            ("disconnected", Json::Bool(*disconnected)),
+        ]),
     }
 }
 
@@ -379,6 +389,23 @@ pub fn prometheus_text(r: &ServerReport) -> String {
     counter("mxmoe_decode_steps_total", "Mixed prefill/decode steps", r.decode_steps as f64);
     counter("mxmoe_generated_tokens_total", "Tokens generated and streamed", r.generated_tokens as f64);
     counter("mxmoe_generations_total", "Generations completed", r.generations as f64);
+    counter(
+        "mxmoe_http_connections_total",
+        "HTTP connections accepted",
+        r.http.connections as f64,
+    );
+    counter(
+        "mxmoe_http_rejected_busy_total",
+        "HTTP connections shed at the handler-pool bound",
+        r.http.rejected_busy as f64,
+    );
+    counter(
+        "mxmoe_http_disconnects_total",
+        "HTTP client disconnects observed mid-response",
+        r.http.disconnects as f64,
+    );
+    counter("mxmoe_http_sse_events_total", "SSE events streamed", r.http.sse_events as f64);
+    counter("mxmoe_http_bytes_out_total", "HTTP response bytes written", r.http.bytes_out as f64);
     s.push_str("# HELP mxmoe_rejected_total Requests rejected at admission\n");
     s.push_str("# TYPE mxmoe_rejected_total counter\n");
     s.push_str(&format!(
@@ -423,6 +450,11 @@ pub fn prometheus_text(r: &ServerReport) -> String {
         r.kv_shared_tokens as f64,
     );
     gauge("mxmoe_kv_avg_bits", "Average bits per stored KV element", r.kv_avg_bits);
+    gauge(
+        "mxmoe_http_peak_connections",
+        "Peak concurrently live HTTP connections",
+        r.http.peak_connections as f64,
+    );
     s.push_str("# HELP mxmoe_queue_wait_p99_seconds Queue wait p99 per priority\n");
     s.push_str("# TYPE mxmoe_queue_wait_p99_seconds gauge\n");
     for (name, v) in ["low", "normal", "high"].iter().zip(r.queue_wait_p99_by_priority) {

@@ -36,6 +36,9 @@ pub enum Track {
     Admission,
     /// The router thread (batch cuts, routing decisions, cut-time sheds).
     Router,
+    /// The HTTP front door (connection lifecycle spans; handler threads
+    /// share one lane — connections are short relative to lane zoom).
+    Http,
     /// A replica worker thread (execution, decode, replan, terminals).
     Replica(usize),
 }
@@ -46,6 +49,7 @@ impl Track {
         match self {
             Track::Admission => 0,
             Track::Router => 1,
+            Track::Http => 2,
             Track::Replica(i) => 10 + *i as u64,
         }
     }
@@ -54,6 +58,7 @@ impl Track {
         match self {
             Track::Admission => "admission".to_string(),
             Track::Router => "router".to_string(),
+            Track::Http => "http".to_string(),
             Track::Replica(i) => format!("replica-{i}"),
         }
     }
@@ -173,6 +178,17 @@ pub enum EventKind {
     SwapStage { changes: usize },
     /// Generation-counted slot flip on the serving thread (complete span).
     SwapInstall { swapped: usize, generation: u64 },
+    /// One HTTP connection served (complete span on the http track):
+    /// endpoint, response status, bytes written, SSE events streamed, and
+    /// whether the client disconnected mid-stream. `req` carries the
+    /// admission-assigned id when the connection reached admission.
+    HttpConn {
+        endpoint: &'static str,
+        status: u16,
+        bytes: usize,
+        events: usize,
+        disconnected: bool,
+    },
 }
 
 impl EventKind {
@@ -189,6 +205,7 @@ impl EventKind {
             EventKind::ReplanSolve { .. } => "replan-solve",
             EventKind::SwapStage { .. } => "swap-stage",
             EventKind::SwapInstall { .. } => "swap-install",
+            EventKind::HttpConn { .. } => "http-conn",
         }
     }
 
@@ -214,8 +231,13 @@ mod tests {
 
     #[test]
     fn track_tids_are_distinct() {
-        let tracks =
-            [Track::Admission, Track::Router, Track::Replica(0), Track::Replica(1)];
+        let tracks = [
+            Track::Admission,
+            Track::Router,
+            Track::Http,
+            Track::Replica(0),
+            Track::Replica(1),
+        ];
         for (i, a) in tracks.iter().enumerate() {
             for b in &tracks[i + 1..] {
                 assert_ne!(a.tid(), b.tid());

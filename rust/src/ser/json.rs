@@ -1,5 +1,6 @@
-//! Minimal strict JSON implementation (RFC 8259 subset: no surrogate-pair
-//! escapes beyond BMP handling, numbers parsed as f64).
+//! Minimal strict JSON implementation (RFC 8259 subset: numbers parsed as
+//! f64; `\uXXXX` escapes combine surrogate pairs and reject lone
+//! surrogates).
 //!
 //! Used for: model/deployment configs, allocation-plan dumps (Table 7),
 //! experiment records in EXPERIMENTS.md generation, and coordinator metrics.
@@ -111,7 +112,7 @@ impl Json {
 
     // ----- parsing -----
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: text.as_bytes(), pos: 0 };
+        let mut p = Parser { b: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -223,14 +224,34 @@ fn write_str(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Recursion cap for nested arrays/objects. The parser recurses once per
+/// nesting level, so without a cap a small hostile body (`[[[[…`) can
+/// overflow the stack of whatever thread parses it — HTTP handler
+/// threads run on deliberately small stacks.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError { pos: self.pos, msg: msg.to_string() }
+    }
+
+    /// Parse exactly four hex digits starting at byte offset `at`.
+    fn hex4(&self, at: usize) -> Result<u32, JsonError> {
+        if at + 4 > self.b.len() {
+            return Err(self.err("truncated \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.b[at..at + 4])
+            .map_err(|_| self.err("bad \\u escape"))?;
+        if !hex.bytes().all(|c| c.is_ascii_hexdigit()) {
+            return Err(self.err("bad \\u escape"));
+        }
+        u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))
     }
 
     fn peek(&self) -> Option<u8> {
@@ -274,12 +295,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -290,6 +321,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -299,10 +331,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -318,6 +352,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(map));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -347,15 +382,33 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            if self.pos + 5 > self.b.len() {
-                                return Err(self.err("truncated \\u escape"));
+                            let cp = self.hex4(self.pos + 1)?;
+                            match cp {
+                                0xD800..=0xDBFF => {
+                                    // High surrogate: must be immediately
+                                    // followed by an escaped low surrogate.
+                                    if self.b.get(self.pos + 5) != Some(&b'\\')
+                                        || self.b.get(self.pos + 6) != Some(&b'u')
+                                    {
+                                        return Err(self.err("unpaired high surrogate"));
+                                    }
+                                    let low = self.hex4(self.pos + 7)?;
+                                    if !(0xDC00..=0xDFFF).contains(&low) {
+                                        return Err(self.err("unpaired high surrogate"));
+                                    }
+                                    let combined =
+                                        0x10000 + ((cp - 0xD800) << 10) + (low - 0xDC00);
+                                    s.push(char::from_u32(combined).expect("valid supplementary"));
+                                    self.pos += 10;
+                                }
+                                0xDC00..=0xDFFF => {
+                                    return Err(self.err("unpaired low surrogate"));
+                                }
+                                _ => {
+                                    s.push(char::from_u32(cp).expect("non-surrogate BMP scalar"));
+                                    self.pos += 4;
+                                }
                             }
-                            let hex = std::str::from_utf8(&self.b[self.pos + 1..self.pos + 5])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            s.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
-                            self.pos += 4;
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -430,6 +483,44 @@ mod tests {
     fn unicode_escapes() {
         let v = Json::parse(r#""Aé""#).unwrap();
         assert_eq!(v, Json::Str("Aé".to_string()));
+        let v = Json::parse(r#""Aé""#).unwrap();
+        assert_eq!(v, Json::Str("Aé".to_string()));
+    }
+
+    #[test]
+    fn surrogate_pairs_combine() {
+        // U+1F600 GRINNING FACE via its UTF-16 escape pair.
+        let v = Json::parse(r#""\uD83D\uDE00""#).unwrap();
+        assert_eq!(v, Json::Str("\u{1F600}".to_string()));
+        // Pair at the end of a longer string, mixed-case hex digits.
+        let v = Json::parse(r#""x\ud83d\ude00""#).unwrap();
+        assert_eq!(v, Json::Str("x\u{1F600}".to_string()));
+    }
+
+    #[test]
+    fn lone_surrogates_rejected() {
+        assert!(Json::parse(r#""\ud83d""#).is_err()); // high, nothing after
+        assert!(Json::parse(r#""\ud83d!""#).is_err()); // high, raw char after
+        assert!(Json::parse(r#""\ud83dA""#).is_err()); // high + non-low
+        assert!(Json::parse(r#""\ude00""#).is_err()); // bare low
+        assert!(Json::parse(r#""\ud83d\ud83d""#).is_err()); // high + high
+    }
+
+    #[test]
+    fn nesting_depth_capped() {
+        // A deep-but-legal document parses…
+        let deep = "[".repeat(100) + &"]".repeat(100);
+        assert!(Json::parse(&deep).is_ok());
+        // …a hostile one errors instead of overflowing the stack.
+        let hostile = "[".repeat(100_000);
+        let err = Json::parse(&hostile).unwrap_err();
+        assert!(err.to_string().contains("nesting too deep"));
+        let hostile_obj = r#"{"a":"#.repeat(100_000) + "1";
+        assert!(Json::parse(&hostile_obj).is_err());
+        // depth is released on the way out: siblings at depth 1 don't
+        // accumulate
+        let wide = "[".to_string() + &"[],".repeat(300) + "[]]";
+        assert!(Json::parse(&wide).is_ok());
     }
 
     #[test]

@@ -1,0 +1,289 @@
+//! Incremental JSON wire writer (DESIGN.md §HTTP-Front-Door).
+//!
+//! [`crate::ser::Json::dump`] builds a value tree and then serializes it —
+//! fine for configs and reports, wasteful on the token-streaming hot path
+//! where the HTTP front door emits one small event object per generated
+//! token across thousands of live connections. [`JsonWriter`] is the
+//! streaming complement: push-style begin/key/value calls appending
+//! straight into a reusable buffer, one allocation amortized across a
+//! whole connection.
+//!
+//! Escaping is stricter than the tree writer's: the wire output is
+//! **ASCII-safe**. Every control character becomes `\uXXXX` (or the short
+//! `\n`/`\r`/`\t` forms), and every non-ASCII scalar is escaped too —
+//! BMP chars as one `\uXXXX`, astral-plane chars as a UTF-16 surrogate
+//! pair (`\ud83d\ude00` for U+1F600). The emitted bytes are therefore 7-bit clean:
+//! immune to transport re-encoding, safe to embed in SSE `data:` lines
+//! (no raw newlines can appear inside a string), and exactly inverse to
+//! the strict surrogate-pair parsing in [`crate::ser::json`].
+
+use std::fmt::Write as _;
+
+/// One open container on the writer stack.
+#[derive(Clone, Copy, PartialEq)]
+enum Frame {
+    /// Object: commas are emitted by [`JsonWriter::key`].
+    Obj { first: bool },
+    /// Array: commas are emitted before each value.
+    Arr { first: bool },
+}
+
+/// Push-style JSON writer over a reusable `String` buffer.
+///
+/// Usage: `begin_obj` / `key` + one value call / `end_obj`, then
+/// [`JsonWriter::finish`] to borrow the bytes. [`JsonWriter::reset`]
+/// clears the buffer for the next message without freeing it.
+///
+/// Misuse (a value where a key is required, unbalanced `end_*`) panics:
+/// the server composes messages from static shapes, so a malformed
+/// emission is a programming error, not an input error.
+pub struct JsonWriter {
+    out: String,
+    stack: Vec<Frame>,
+}
+
+impl Default for JsonWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonWriter {
+    pub fn new() -> Self {
+        JsonWriter { out: String::with_capacity(256), stack: Vec::with_capacity(8) }
+    }
+
+    /// Clear the buffer for the next message, keeping its allocation.
+    pub fn reset(&mut self) {
+        self.out.clear();
+        self.stack.clear();
+    }
+
+    /// Borrow the finished message. Panics if a container is still open.
+    pub fn finish(&self) -> &str {
+        assert!(self.stack.is_empty(), "JsonWriter: unclosed container");
+        &self.out
+    }
+
+    // ----- containers -----
+
+    pub fn begin_obj(&mut self) {
+        self.value_prelude();
+        self.out.push('{');
+        self.stack.push(Frame::Obj { first: true });
+    }
+
+    pub fn end_obj(&mut self) {
+        match self.stack.pop() {
+            Some(Frame::Obj { .. }) => self.out.push('}'),
+            _ => panic!("JsonWriter: end_obj without open object"),
+        }
+    }
+
+    pub fn begin_arr(&mut self) {
+        self.value_prelude();
+        self.out.push('[');
+        self.stack.push(Frame::Arr { first: true });
+    }
+
+    pub fn end_arr(&mut self) {
+        match self.stack.pop() {
+            Some(Frame::Arr { .. }) => self.out.push(']'),
+            _ => panic!("JsonWriter: end_arr without open array"),
+        }
+    }
+
+    /// Object key; must be followed by exactly one value call.
+    pub fn key(&mut self, k: &str) {
+        match self.stack.last_mut() {
+            Some(Frame::Obj { first }) => {
+                if !*first {
+                    self.out.push(',');
+                }
+                *first = false;
+            }
+            _ => panic!("JsonWriter: key outside object"),
+        }
+        escape_into(&mut self.out, k);
+        self.out.push(':');
+    }
+
+    // ----- scalar values -----
+
+    pub fn str_val(&mut self, s: &str) {
+        self.value_prelude();
+        escape_into(&mut self.out, s);
+    }
+
+    pub fn u64_val(&mut self, x: u64) {
+        self.value_prelude();
+        let _ = write!(self.out, "{x}");
+    }
+
+    pub fn f64_val(&mut self, x: f64) {
+        self.value_prelude();
+        if x.is_finite() {
+            if x.fract() == 0.0 && x.abs() < 1e15 {
+                let _ = write!(self.out, "{}", x as i64);
+            } else {
+                let _ = write!(self.out, "{x}");
+            }
+        } else {
+            // JSON has no NaN/Inf; same lossy rule as the tree writer.
+            self.out.push_str("null");
+        }
+    }
+
+    pub fn bool_val(&mut self, b: bool) {
+        self.value_prelude();
+        self.out.push_str(if b { "true" } else { "false" });
+    }
+
+    pub fn null_val(&mut self) {
+        self.value_prelude();
+        self.out.push_str("null");
+    }
+
+    // ----- key+value shorthands -----
+
+    pub fn field_str(&mut self, k: &str, v: &str) {
+        self.key(k);
+        self.str_val(v);
+    }
+
+    pub fn field_u64(&mut self, k: &str, v: u64) {
+        self.key(k);
+        self.u64_val(v);
+    }
+
+    pub fn field_f64(&mut self, k: &str, v: f64) {
+        self.key(k);
+        self.f64_val(v);
+    }
+
+    pub fn field_bool(&mut self, k: &str, v: bool) {
+        self.key(k);
+        self.bool_val(v);
+    }
+
+    /// Comma separation for a value in array context. Object values are
+    /// separated by [`JsonWriter::key`]; a bare top-level value needs
+    /// nothing.
+    fn value_prelude(&mut self) {
+        if let Some(Frame::Arr { first }) = self.stack.last_mut() {
+            if !*first {
+                self.out.push(',');
+            }
+            *first = false;
+        }
+    }
+}
+
+/// Append `s` as a quoted JSON string with ASCII-safe escaping: control
+/// chars and every non-ASCII scalar as `\uXXXX`, astral-plane scalars as
+/// surrogate pairs. Output contains only printable ASCII.
+pub fn escape_into(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{20}'..='\u{7e}' => out.push(c),
+            c => {
+                let mut units = [0u16; 2];
+                for u in c.encode_utf16(&mut units) {
+                    let _ = write!(out, "\\u{:04x}", u);
+                }
+            }
+        }
+    }
+    out.push('"');
+}
+
+/// Convenience: escape `s` into a fresh String.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    escape_into(&mut out, s);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::Json;
+
+    #[test]
+    fn writer_output_parses_back() {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.field_str("event", "token");
+        w.field_u64("index", 3);
+        w.key("tokens");
+        w.begin_arr();
+        w.u64_val(1);
+        w.u64_val(2);
+        w.end_arr();
+        w.field_f64("nll", 0.25);
+        w.field_bool("done", false);
+        w.key("extra");
+        w.null_val();
+        w.end_obj();
+        let v = Json::parse(w.finish()).unwrap();
+        assert_eq!(v.req_str("event").unwrap(), "token");
+        assert_eq!(v.req_usize("index").unwrap(), 3);
+        assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("done").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("extra"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn reset_reuses_buffer() {
+        let mut w = JsonWriter::new();
+        for i in 0..3u64 {
+            w.reset();
+            w.begin_obj();
+            w.field_u64("i", i);
+            w.end_obj();
+            assert_eq!(w.finish(), format!("{{\"i\":{i}}}"));
+        }
+    }
+
+    #[test]
+    fn nested_arrays_and_objects_separate_correctly() {
+        let mut w = JsonWriter::new();
+        w.begin_arr();
+        w.begin_obj();
+        w.field_u64("a", 1);
+        w.end_obj();
+        w.begin_obj();
+        w.field_u64("a", 2);
+        w.end_obj();
+        w.begin_arr();
+        w.end_arr();
+        w.end_arr();
+        assert_eq!(w.finish(), r#"[{"a":1},{"a":2},[]]"#);
+    }
+
+    #[test]
+    fn escape_is_ascii_safe_and_roundtrips() {
+        // Every control char, the JSON specials, BMP + astral non-ASCII.
+        let mut src = String::new();
+        for b in 0u8..0x20 {
+            src.push(b as char);
+        }
+        src.push_str("\"\\/ plain ASCII é Ω \u{1F600} \u{10FFFF}");
+        let wire = escape(&src);
+        assert!(wire.bytes().all(|b| (0x20..0x7f).contains(&b)), "ascii-safe: {wire}");
+        let back = Json::parse(&wire).unwrap();
+        assert_eq!(back, Json::Str(src));
+    }
+
+    #[test]
+    fn astral_chars_become_surrogate_pairs() {
+        assert_eq!(escape("\u{1F600}"), r#""\ud83d\ude00""#);
+        assert_eq!(escape("\u{e9}"), r#""\u00e9""#);
+    }
+}

@@ -2,12 +2,16 @@
 //!
 //! * [`json`] — a small, strict JSON value model + parser + writer used for
 //!   configs, allocation plans, and experiment records.
+//! * [`jsonwire`] — an incremental, ASCII-safe JSON writer for the HTTP
+//!   front door's streaming wire format (DESIGN.md §HTTP-Front-Door).
 //! * [`mxt`] — the MXT binary tensor container: the interchange format
 //!   between the build-time Python side (`python/compile/io_mxt.py`) and the
 //!   rust runtime (trained weights, calibration corpora).
 
 pub mod json;
+pub mod jsonwire;
 pub mod mxt;
 
 pub use json::Json;
+pub use jsonwire::JsonWriter;
 pub use mxt::{MxtFile, MxtTensor};

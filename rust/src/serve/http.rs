@@ -1,0 +1,1360 @@
+//! HTTP/1.1 streaming front door (DESIGN.md §HTTP-Front-Door).
+//!
+//! A hand-rolled server on [`std::net::TcpListener`] — the crate carries
+//! no async runtime or web framework, and the serving stack underneath is
+//! thread-per-replica already, so the front door follows the same idiom:
+//! one bounded accept loop, one short-stack handler thread per live
+//! connection, gated by an active-connection bound rather than a small
+//! fixed pool (an SSE stream holds its connection for the whole
+//! generation, so the bound must cover thousands of concurrent streams,
+//! not a worker count).
+//!
+//! Endpoints:
+//!
+//! * `POST /v1/score` — score a token sequence; blocks for the
+//!   [`Response`] and returns it as JSON.
+//! * `POST /v1/generate` — KV-cached generation streamed as Server-Sent
+//!   Events: a `start` event carrying the admission id, one `token` event
+//!   per [`StreamEvent::Token`], and a terminal `done` event carrying the
+//!   [`FinishReason`] plus the final [`Response`] (or `null` when the
+//!   generation ended cancelled/failed).
+//! * `POST /v1/cancel/{id}` — step-granular cancellation by admission id.
+//! * `GET /healthz`, `GET /metrics` — liveness and a Prometheus scrape of
+//!   the live [`ServerReport`] ([`crate::obs::export::prometheus_text`]).
+//!
+//! **Disconnect is cancel.** A failed write onto a streaming connection
+//! cancels the ticket, so the decode loop sheds the sequence at the next
+//! step boundary and the admission ledger's accounting identity
+//! (`admitted == responses + cancelled + failed`) keeps holding with
+//! clients that vanish mid-stream — the same path `/v1/cancel` takes,
+//! just triggered by the socket instead of a request.
+//!
+//! **Load shedding speaks HTTP.** [`Admission::Rejected`] maps onto 429
+//! (queue/deadline/quota sheds) and 503 (KV exhaustion), both carrying a
+//! `Retry-After` header derived from the admission controller's
+//! `retry_after` estimate; connections beyond the active bound get an
+//! immediate 503 before the request line is even read.
+//!
+//! Wire rigor: responses and SSE `data:` payloads are emitted through the
+//! ASCII-safe incremental [`JsonWriter`] (no raw newline or non-ASCII
+//! byte can appear inside a frame), and request bodies go through the
+//! strict [`Json`] parser (depth-capped, surrogate-validating) behind a
+//! per-endpoint field allowlist — unknown or ill-typed fields are a 400,
+//! not a silent default.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Cluster, HttpReport, ServerReport};
+use crate::obs::{EventKind, SpanCollector, Track, TraceClock, TraceConfig, TraceEvent};
+use crate::ser::{Json, JsonWriter};
+
+use super::queue::Response;
+use super::request::{
+    Admission, FinishReason, Priority, QosClass, RejectReason, ServeRequest, StreamEvent, Ticket,
+};
+
+/// Request/header line bound: longer lines are a 400, not a bigger buffer.
+const MAX_LINE: u64 = 8 * 1024;
+/// Header count bound.
+const MAX_HEADERS: usize = 64;
+/// Handler thread stack. Deliberately small — thousands of concurrent
+/// streams each hold one — and safe because the JSON parser caps its
+/// recursion depth.
+const HANDLER_STACK: usize = 512 * 1024;
+/// Socket write budget: a client that stops reading its stream for this
+/// long counts as disconnected (and is therefore cancelled).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+// ---------------------------------------------------------------------------
+// Backend abstraction
+// ---------------------------------------------------------------------------
+
+/// What the front door needs from the serving stack: typed non-blocking
+/// submission and a live metrics snapshot. [`Cluster`] is the production
+/// implementation; tests substitute mocks (in-crate, since fabricating
+/// [`Ticket`]s needs crate-private fields) or always-rejecting stubs.
+pub trait HttpBackend: Send + Sync {
+    fn try_submit(&self, req: ServeRequest) -> Result<Admission>;
+    fn live_report(&self) -> ServerReport;
+    fn replicas(&self) -> usize;
+}
+
+impl HttpBackend for Cluster {
+    fn try_submit(&self, req: ServeRequest) -> Result<Admission> {
+        Cluster::try_submit(self, req)
+    }
+
+    fn live_report(&self) -> ServerReport {
+        Cluster::live_report(self)
+    }
+
+    fn replicas(&self) -> usize {
+        Cluster::replicas(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Config, stats, server handle
+// ---------------------------------------------------------------------------
+
+/// Front-door knobs.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Bind address; port 0 picks a free port (see [`HttpServer::addr`]).
+    pub addr: String,
+    /// Active-connection bound: accepts beyond it get an immediate
+    /// 503 + `Retry-After: 1` without reading the request.
+    pub max_connections: usize,
+    /// Request body bound (413 beyond it).
+    pub max_body_bytes: usize,
+    /// Score-wait budget, socket read budget, and the wait for the final
+    /// generation [`Response`] after the stream's `Done`.
+    pub request_timeout: Duration,
+    /// Per-event budget on a generation stream; a stream silent for this
+    /// long is cancelled and closed with a `failed` terminal event.
+    pub stream_event_timeout: Duration,
+    /// Span collection for the http track ([`EventKind::HttpConn`]).
+    pub trace: TraceConfig,
+    /// Trace timebase — pass the cluster's clock so http spans align with
+    /// admission/router/replica spans in the merged trace.
+    pub clock: TraceClock,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_connections: 2048,
+            max_body_bytes: 1 << 20,
+            request_timeout: Duration::from_secs(120),
+            stream_event_timeout: Duration::from_secs(120),
+            trace: TraceConfig::default(),
+            clock: TraceClock::new(),
+        }
+    }
+}
+
+/// Lock-free front-door counters ([`HttpReport`] is the snapshot).
+#[derive(Default)]
+struct HttpStats {
+    connections: AtomicUsize,
+    rejected_busy: AtomicUsize,
+    disconnects: AtomicUsize,
+    sse_events: AtomicUsize,
+    bytes_out: AtomicUsize,
+    active: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl HttpStats {
+    fn snapshot(&self) -> HttpReport {
+        HttpReport {
+            connections: self.connections.load(Ordering::SeqCst),
+            rejected_busy: self.rejected_busy.load(Ordering::SeqCst),
+            disconnects: self.disconnects.load(Ordering::SeqCst),
+            sse_events: self.sse_events.load(Ordering::SeqCst),
+            bytes_out: self.bytes_out.load(Ordering::SeqCst),
+            peak_connections: self.peak.load(Ordering::SeqCst),
+        }
+    }
+
+    fn enter(&self) {
+        let now = self.active.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    fn exit(&self) {
+        self.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// State shared by the accept loop and every handler thread.
+struct Shared {
+    backend: Arc<dyn HttpBackend>,
+    cfg: HttpConfig,
+    stats: HttpStats,
+    /// Admission id → cancel flag of every request currently being
+    /// served over HTTP — what `POST /v1/cancel/{id}` flips. Entries are
+    /// removed when their handler finishes, so a cancel for a finished id
+    /// is a 404, matching ticket semantics (cancel is step-granular and
+    /// only meaningful while the request is live).
+    cancels: Mutex<HashMap<u64, Arc<AtomicBool>>>,
+    tracer: Mutex<SpanCollector>,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    fn register_cancel(&self, ticket: &Ticket) {
+        self.cancels.lock().unwrap().insert(ticket.id(), ticket.cancel.clone());
+    }
+
+    fn unregister_cancel(&self, id: u64) {
+        self.cancels.lock().unwrap().remove(&id);
+    }
+}
+
+/// Handle to a running front door. [`shutdown`](Self::shutdown) is
+/// graceful: it stops accepting, then joins every in-flight handler —
+/// after it returns, no clone of the backend `Arc` survives on a server
+/// thread (a bench can `Arc::try_unwrap` its cluster back).
+pub struct HttpServer {
+    addr: SocketAddr,
+    accept: Option<thread::JoinHandle<Vec<thread::JoinHandle<()>>>>,
+    shared: Arc<Shared>,
+}
+
+impl HttpServer {
+    /// Bind `cfg.addr` and start serving `backend`.
+    pub fn start(backend: Arc<dyn HttpBackend>, cfg: HttpConfig) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+        let addr = listener.local_addr().context("listener local_addr")?;
+        let tracer = SpanCollector::new(cfg.clock.clone(), Track::Http, cfg.trace);
+        let shared = Arc::new(Shared {
+            backend,
+            cfg,
+            stats: HttpStats::default(),
+            cancels: Mutex::new(HashMap::new()),
+            tracer: Mutex::new(tracer),
+            shutdown: AtomicBool::new(false),
+        });
+        let sh = shared.clone();
+        let accept = thread::Builder::new()
+            .name("mxmoe-http-accept".to_string())
+            .spawn(move || accept_loop(listener, sh))
+            .context("spawn http accept thread")?;
+        Ok(HttpServer { addr, accept: Some(accept), shared })
+    }
+
+    /// The bound address (the actual port when `addr` asked for port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Front-door counters so far.
+    pub fn http_report(&self) -> HttpReport {
+        self.shared.stats.snapshot()
+    }
+
+    /// Live cluster report with the http block filled in — the same
+    /// snapshot `GET /metrics` serves.
+    pub fn report(&self) -> ServerReport {
+        let mut r = self.shared.backend.live_report();
+        r.http = self.shared.stats.snapshot();
+        r
+    }
+
+    /// Drain the http-track span ring (`(events, dropped)`).
+    pub fn take_trace(&self) -> (Vec<TraceEvent>, usize) {
+        self.shared.tracer.lock().unwrap().drain()
+    }
+
+    /// Stop accepting, join the accept loop and every handler thread,
+    /// and return the final front-door counters.
+    pub fn shutdown(mut self) -> HttpReport {
+        self.stop();
+        self.shared.stats.snapshot()
+    }
+
+    fn stop(&mut self) {
+        let Some(accept) = self.accept.take() else {
+            return;
+        };
+        self.shared.shutdown.store(true, Ordering::Release);
+        // wake the blocked accept(2) with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        let handlers = accept.join().expect("http accept thread panicked");
+        for h in handlers {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Accept loop
+// ---------------------------------------------------------------------------
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) -> Vec<thread::JoinHandle<()>> {
+    let mut handlers: Vec<thread::JoinHandle<()>> = Vec::new();
+    let mut conn_seq = 0u64;
+    for incoming in listener.incoming() {
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        let mut stream = match incoming {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        // bound memory on a long-running server: drop finished handles
+        handlers.retain(|h| !h.is_finished());
+        if shared.stats.active.load(Ordering::SeqCst) >= shared.cfg.max_connections {
+            shared.stats.rejected_busy.fetch_add(1, Ordering::SeqCst);
+            let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+            let _ = write_response(
+                &mut stream,
+                503,
+                "application/json",
+                &[("retry-after", "1".to_string())],
+                &error_body("server at connection capacity"),
+            );
+            continue;
+        }
+        shared.stats.connections.fetch_add(1, Ordering::SeqCst);
+        // enter BEFORE spawn so the bound can never overshoot between
+        // accept and handler start
+        shared.stats.enter();
+        conn_seq += 1;
+        let sh = shared.clone();
+        let spawned = thread::Builder::new()
+            .name(format!("mxmoe-http-{conn_seq}"))
+            .stack_size(HANDLER_STACK)
+            .spawn(move || {
+                let t0 = sh.cfg.clock.now_us();
+                let out = handle_conn(&sh, stream);
+                let dur = sh.cfg.clock.now_us().saturating_sub(t0);
+                sh.stats.bytes_out.fetch_add(out.bytes, Ordering::SeqCst);
+                sh.stats.sse_events.fetch_add(out.events, Ordering::SeqCst);
+                if out.disconnected {
+                    sh.stats.disconnects.fetch_add(1, Ordering::SeqCst);
+                }
+                sh.tracer.lock().unwrap().span(
+                    t0,
+                    dur,
+                    out.req,
+                    EventKind::HttpConn {
+                        endpoint: out.endpoint,
+                        status: out.status,
+                        bytes: out.bytes,
+                        events: out.events,
+                        disconnected: out.disconnected,
+                    },
+                );
+                sh.stats.exit();
+            });
+        match spawned {
+            Ok(h) => handlers.push(h),
+            Err(_) => shared.stats.exit(),
+        }
+    }
+    handlers
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection handling
+// ---------------------------------------------------------------------------
+
+/// What one connection came to: the span payload plus the request id (0
+/// when the request never reached admission).
+struct ConnOutcome {
+    endpoint: &'static str,
+    status: u16,
+    bytes: usize,
+    events: usize,
+    disconnected: bool,
+    req: u64,
+}
+
+/// Structured failure on the way to a response: an HTTP status plus a
+/// JSON error message (and the `Allow` header for 405s).
+struct HttpError {
+    status: u16,
+    msg: String,
+    allow: Option<&'static str>,
+}
+
+fn fail(status: u16, msg: impl Into<String>) -> HttpError {
+    HttpError { status, msg: msg.into(), allow: None }
+}
+
+fn handle_conn(shared: &Shared, mut stream: TcpStream) -> ConnOutcome {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(shared.cfg.request_timeout));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut out = ConnOutcome {
+        endpoint: "bad-request",
+        status: 0,
+        bytes: 0,
+        events: 0,
+        disconnected: false,
+        req: 0,
+    };
+    match read_request(&mut stream, shared.cfg.max_body_bytes) {
+        Err(e) => write_error(&mut stream, &mut out, &e),
+        Ok(req) => {
+            if let Err(e) = route(shared, &mut stream, &req, &mut out) {
+                write_error(&mut stream, &mut out, &e);
+            }
+        }
+    }
+    out
+}
+
+fn route(
+    shared: &Shared,
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    out: &mut ConnOutcome,
+) -> Result<(), HttpError> {
+    let method = req.method.as_str();
+    let path = req.path.as_str();
+    match path {
+        "/healthz" => {
+            out.endpoint = "healthz";
+            require_method(method, "GET")?;
+            let mut w = JsonWriter::new();
+            w.begin_obj();
+            w.field_str("status", "ok");
+            w.field_u64("replicas", shared.backend.replicas() as u64);
+            w.end_obj();
+            send(stream, out, 200, "application/json", &[], w.finish());
+            Ok(())
+        }
+        "/metrics" => {
+            out.endpoint = "metrics";
+            require_method(method, "GET")?;
+            let mut r = shared.backend.live_report();
+            r.http = shared.stats.snapshot();
+            let text = crate::obs::export::prometheus_text(&r);
+            send(stream, out, 200, "text/plain; version=0.0.4", &[], &text);
+            Ok(())
+        }
+        "/v1/score" => {
+            out.endpoint = "score";
+            require_method(method, "POST")?;
+            score(shared, stream, &req.body, out)
+        }
+        "/v1/generate" => {
+            out.endpoint = "generate";
+            require_method(method, "POST")?;
+            generate(shared, stream, &req.body, out)
+        }
+        p if p.starts_with("/v1/cancel/") => {
+            out.endpoint = "cancel";
+            require_method(method, "POST")?;
+            cancel(shared, stream, &p["/v1/cancel/".len()..], out)
+        }
+        p => {
+            out.endpoint = "not-found";
+            Err(fail(404, format!("no such endpoint: {p}")))
+        }
+    }
+}
+
+fn require_method(method: &str, want: &'static str) -> Result<(), HttpError> {
+    if method == want {
+        Ok(())
+    } else {
+        Err(HttpError {
+            status: 405,
+            msg: format!("method {method} not allowed"),
+            allow: Some(want),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Endpoints
+// ---------------------------------------------------------------------------
+
+fn score(
+    shared: &Shared,
+    stream: &mut TcpStream,
+    body: &[u8],
+    out: &mut ConnOutcome,
+) -> Result<(), HttpError> {
+    let req = parse_score_body(body)?;
+    let ticket = match submit(shared, req)? {
+        Submitted::Rejected => return Ok(()), // reply already written by submit()
+        Submitted::Ticket(t) => t,
+    };
+    out.req = ticket.id();
+    shared.register_cancel(&ticket);
+    let waited = ticket.wait_timeout(shared.cfg.request_timeout);
+    shared.unregister_cancel(ticket.id());
+    match waited {
+        Ok(resp) => {
+            let mut w = JsonWriter::new();
+            w.begin_obj();
+            w.field_u64("id", ticket.id());
+            response_fields(&mut w, &resp);
+            w.end_obj();
+            send(stream, out, 200, "application/json", &[], w.finish());
+            Ok(())
+        }
+        Err(_) if ticket.is_cancelled() => {
+            Err(fail(409, format!("request {} cancelled", ticket.id())))
+        }
+        Err(e) => Err(fail(504, format!("request {}: {e}", ticket.id()))),
+    }
+}
+
+fn generate(
+    shared: &Shared,
+    stream: &mut TcpStream,
+    body: &[u8],
+    out: &mut ConnOutcome,
+) -> Result<(), HttpError> {
+    let req = parse_generate_body(body)?;
+    let ticket = match submit(shared, req)? {
+        Submitted::Rejected => return Ok(()),
+        Submitted::Ticket(t) => t,
+    };
+    out.req = ticket.id();
+    shared.register_cancel(&ticket);
+    stream_generation(shared, stream, &ticket, out);
+    shared.unregister_cancel(ticket.id());
+    Ok(())
+}
+
+/// Everything after admission on a generation connection: SSE headers,
+/// `start`, one `token` per stream event, and exactly one terminal
+/// `done`. A failed socket write anywhere flips the ticket's cancel flag
+/// (disconnect-as-cancel) and stops the stream.
+fn stream_generation(
+    shared: &Shared,
+    stream: &mut TcpStream,
+    ticket: &Ticket,
+    out: &mut ConnOutcome,
+) {
+    let head = "HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\ncache-control: no-cache\r\nconnection: close\r\n\r\n";
+    if stream.write_all(head.as_bytes()).is_err() {
+        out.disconnected = true;
+        ticket.cancel();
+        return;
+    }
+    out.status = 200;
+    out.bytes += head.len();
+
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.field_u64("id", ticket.id());
+    w.end_obj();
+    if !write_sse(stream, out, "start", w.finish()) {
+        ticket.cancel();
+        return;
+    }
+
+    let mut streamed = 0u64;
+    loop {
+        match ticket.wait_event(shared.cfg.stream_event_timeout) {
+            Ok(StreamEvent::Token { token, index }) => {
+                w.reset();
+                w.begin_obj();
+                w.field_u64("token", u64::from(token));
+                w.field_u64("index", index as u64);
+                w.end_obj();
+                if !write_sse(stream, out, "token", w.finish()) {
+                    ticket.cancel();
+                    return;
+                }
+                streamed += 1;
+            }
+            Ok(StreamEvent::Done { reason, generated }) => {
+                // the final Response only exists for served generations;
+                // cancelled/failed ones never get one (ticket contract)
+                let resp = if matches!(reason, FinishReason::Stop | FinishReason::Length) {
+                    ticket.wait_timeout(shared.cfg.request_timeout).ok()
+                } else {
+                    None
+                };
+                w.reset();
+                w.begin_obj();
+                w.field_str("reason", finish_name(reason));
+                w.field_u64("generated", generated as u64);
+                w.key("response");
+                match resp {
+                    Some(r) => {
+                        w.begin_obj();
+                        response_fields(&mut w, &r);
+                        w.end_obj();
+                    }
+                    None => w.null_val(),
+                }
+                w.end_obj();
+                if !write_sse(stream, out, "done", w.finish()) {
+                    ticket.cancel();
+                }
+                return;
+            }
+            Err(_) => {
+                // cancelled (`/v1/cancel` or a prior disconnect), the
+                // stream closed without Done (replica died), or the
+                // per-event budget expired — cancel so the serving side
+                // sheds, then tell the client which it was
+                let reason = if ticket.is_cancelled() { "cancelled" } else { "failed" };
+                ticket.cancel();
+                w.reset();
+                w.begin_obj();
+                w.field_str("reason", reason);
+                w.field_u64("generated", streamed);
+                w.key("response");
+                w.null_val();
+                w.end_obj();
+                if !write_sse(stream, out, "done", w.finish()) {
+                    // already cancelled above; just note the disconnect
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn cancel(
+    shared: &Shared,
+    stream: &mut TcpStream,
+    id_text: &str,
+    out: &mut ConnOutcome,
+) -> Result<(), HttpError> {
+    let id: u64 = id_text
+        .parse()
+        .map_err(|_| fail(400, format!("bad request id '{id_text}'")))?;
+    let flag = shared.cancels.lock().unwrap().get(&id).cloned();
+    match flag {
+        Some(flag) => {
+            flag.store(true, Ordering::Release);
+            let mut w = JsonWriter::new();
+            w.begin_obj();
+            w.field_u64("id", id);
+            w.field_bool("cancelled", true);
+            w.end_obj();
+            send(stream, out, 200, "application/json", &[], w.finish());
+            Ok(())
+        }
+        None => Err(fail(404, format!("no live request {id}"))),
+    }
+}
+
+/// Outcome of [`submit`]: a ticket, or a rejection whose HTTP reply was
+/// already written.
+enum Submitted {
+    Ticket(Ticket),
+    Rejected,
+}
+
+/// Run a [`ServeRequest`] through the backend and translate load shedding
+/// into HTTP: 429 for queue-side sheds, 503 for KV exhaustion, both with
+/// `Retry-After` from the admission controller's estimate.
+fn submit(shared: &Shared, req: ServeRequest) -> Result<Submitted, HttpError> {
+    // the stream is not available here; rejection replies are written by
+    // the caller via the returned error/outcome. To keep replies near the
+    // mapping, submit() only classifies; see score()/generate().
+    match shared.backend.try_submit(req) {
+        Err(e) => Err(fail(400, format!("rejected: {e}"))),
+        Ok(Admission::Admitted(t)) => Ok(Submitted::Ticket(t)),
+        Ok(Admission::Rejected { id, reason, retry_after }) => {
+            let status = match reason {
+                RejectReason::KvExhausted => 503,
+                _ => 429,
+            };
+            let mut e = fail(status, String::new());
+            e.msg = shed_body(id, reason, retry_after);
+            Err(e)
+        }
+    }
+}
+
+/// Marker prefix telling [`write_error`] the message is a pre-built JSON
+/// body with a Retry-After hint, not a plain error string.
+const SHED_MARK: &str = "\u{1}shed:";
+
+fn shed_body(id: u64, reason: RejectReason, retry_after: Duration) -> String {
+    let retry_secs = (retry_after.as_secs_f64().ceil() as u64).max(1);
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.field_str("error", "rejected");
+    w.field_str("reason", reason.name());
+    w.field_u64("retry_after_ms", retry_after.as_millis() as u64);
+    w.field_u64("id", id);
+    w.end_obj();
+    format!("{SHED_MARK}{retry_secs}:{}", w.finish())
+}
+
+// ---------------------------------------------------------------------------
+// Body parsing (strict, allowlisted)
+// ---------------------------------------------------------------------------
+
+fn parse_body_json(body: &[u8]) -> Result<Json, HttpError> {
+    let text =
+        std::str::from_utf8(body).map_err(|_| fail(400, "body is not valid UTF-8"))?;
+    Json::parse(text).map_err(|e| fail(400, format!("body: {e}")))
+}
+
+fn allow_keys(j: &Json, allowed: &[&str]) -> Result<(), HttpError> {
+    match j {
+        Json::Obj(m) => {
+            for k in m.keys() {
+                if !allowed.contains(&k.as_str()) {
+                    return Err(fail(400, format!("unknown field '{k}'")));
+                }
+            }
+            Ok(())
+        }
+        _ => Err(fail(400, "body must be a JSON object")),
+    }
+}
+
+fn parse_token_array(j: &Json, key: &str, required: bool) -> Result<Vec<u32>, HttpError> {
+    let Some(v) = j.get(key) else {
+        return if required {
+            Err(fail(400, format!("'{key}' is required")))
+        } else {
+            Ok(Vec::new())
+        };
+    };
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| fail(400, format!("'{key}' must be an array of token ids")))?;
+    arr.iter()
+        .map(|t| {
+            t.as_usize()
+                .filter(|&x| x <= u32::MAX as usize)
+                .map(|x| x as u32)
+                .ok_or_else(|| fail(400, format!("'{key}' entries must be u32 token ids")))
+        })
+        .collect()
+}
+
+fn apply_knobs(mut req: ServeRequest, j: &Json) -> Result<ServeRequest, HttpError> {
+    if let Some(p) = j.get("priority") {
+        let p = p.as_str().ok_or_else(|| fail(400, "'priority' must be a string"))?;
+        req = req.priority(match p {
+            "low" => Priority::Low,
+            "normal" => Priority::Normal,
+            "high" => Priority::High,
+            other => return Err(fail(400, format!("unknown priority '{other}'"))),
+        });
+    }
+    if let Some(q) = j.get("qos") {
+        let q = q.as_str().ok_or_else(|| fail(400, "'qos' must be a string"))?;
+        req = req.qos(match q {
+            "interactive" => QosClass::Interactive,
+            "standard" => QosClass::Standard,
+            "batch" => QosClass::Batch,
+            other => return Err(fail(400, format!("unknown qos '{other}'"))),
+        });
+    }
+    if let Some(d) = j.get("deadline_ms") {
+        let ms = d
+            .as_usize()
+            .filter(|&ms| ms >= 1)
+            .ok_or_else(|| fail(400, "'deadline_ms' must be a positive integer"))?;
+        req = req.deadline(Duration::from_millis(ms as u64));
+    }
+    Ok(req)
+}
+
+fn parse_score_body(body: &[u8]) -> Result<ServeRequest, HttpError> {
+    let j = parse_body_json(body)?;
+    allow_keys(&j, &["tokens", "priority", "qos", "deadline_ms"])?;
+    let tokens = parse_token_array(&j, "tokens", true)?;
+    if tokens.is_empty() {
+        return Err(fail(400, "'tokens' must be non-empty"));
+    }
+    apply_knobs(ServeRequest::new(tokens), &j)
+}
+
+fn parse_generate_body(body: &[u8]) -> Result<ServeRequest, HttpError> {
+    let j = parse_body_json(body)?;
+    allow_keys(&j, &["tokens", "max_new_tokens", "stop", "priority", "qos", "deadline_ms"])?;
+    let tokens = parse_token_array(&j, "tokens", true)?;
+    if tokens.is_empty() {
+        return Err(fail(400, "'tokens' must be non-empty"));
+    }
+    let max_new = j
+        .get("max_new_tokens")
+        .and_then(Json::as_usize)
+        .filter(|&n| n >= 1)
+        .ok_or_else(|| fail(400, "'max_new_tokens' must be a positive integer"))?;
+    let stop = parse_token_array(&j, "stop", false)?;
+    apply_knobs(ServeRequest::generate(tokens, max_new, stop), &j)
+}
+
+// ---------------------------------------------------------------------------
+// HTTP reading
+// ---------------------------------------------------------------------------
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl HttpRequest {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// One bounded CRLF line; `None` at clean EOF. An unterminated line at
+/// the bound is malformed, not a bigger buffer.
+fn read_line<R: BufRead>(r: &mut R) -> Result<Option<String>, HttpError> {
+    let mut buf = Vec::new();
+    let n = r
+        .by_ref()
+        .take(MAX_LINE)
+        .read_until(b'\n', &mut buf)
+        .map_err(|e| fail(400, format!("read: {e}")))?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() != Some(&b'\n') {
+        return Err(fail(400, "header line too long or truncated"));
+    }
+    buf.pop();
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf)
+        .map(Some)
+        .map_err(|_| fail(400, "header line is not valid UTF-8"))
+}
+
+fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<HttpRequest, HttpError> {
+    let mut reader = BufReader::new(
+        stream.try_clone().map_err(|e| fail(500, format!("clone stream: {e}")))?,
+    );
+    let line = read_line(&mut reader)?.ok_or_else(|| fail(400, "empty request"))?;
+    let mut parts = line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) if !m.is_empty() && p.starts_with('/') => {
+            (m.to_string(), p.to_string(), v)
+        }
+        _ => return Err(fail(400, "malformed request line")),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(fail(400, format!("unsupported protocol '{version}'")));
+    }
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(&mut reader)?.ok_or_else(|| fail(400, "truncated headers"))?;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(fail(400, "too many headers"));
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| fail(400, format!("malformed header line '{line}'")))?;
+        if name.is_empty() || name.contains(' ') {
+            return Err(fail(400, format!("malformed header name '{name}'")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let mut req = HttpRequest { method, path, headers, body: Vec::new() };
+    if req.method == "POST" {
+        if req.header("transfer-encoding").is_some() {
+            return Err(fail(400, "chunked bodies not supported"));
+        }
+        let len: usize = req
+            .header("content-length")
+            .ok_or_else(|| fail(411, "Content-Length required"))?
+            .parse()
+            .map_err(|_| fail(400, "bad Content-Length"))?;
+        if len > max_body {
+            return Err(fail(413, format!("body exceeds {max_body} bytes")));
+        }
+        let mut body = vec![0u8; len];
+        reader
+            .read_exact(&mut body)
+            .map_err(|_| fail(400, "truncated body"))?;
+        req.body = body;
+    }
+    Ok(req)
+}
+
+// ---------------------------------------------------------------------------
+// HTTP writing
+// ---------------------------------------------------------------------------
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Error",
+    }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    extra: &[(&str, String)],
+    body: &str,
+) -> std::io::Result<usize> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: close\r\n",
+        reason_phrase(status),
+        body.len(),
+    );
+    for (k, v) in extra {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    Ok(head.len() + body.len())
+}
+
+/// Write a response and fold the result into the connection outcome.
+fn send(
+    stream: &mut TcpStream,
+    out: &mut ConnOutcome,
+    status: u16,
+    content_type: &str,
+    extra: &[(&str, String)],
+    body: &str,
+) {
+    out.status = status;
+    match write_response(stream, status, content_type, extra, body) {
+        Ok(n) => out.bytes += n,
+        Err(_) => out.disconnected = true,
+    }
+}
+
+/// One SSE frame (`event:` + `data:` + blank line); `false` when the
+/// client is gone. The payload is ASCII-safe JSON, so no raw newline can
+/// break the framing.
+fn write_sse(stream: &mut TcpStream, out: &mut ConnOutcome, event: &str, data: &str) -> bool {
+    let frame = format!("event: {event}\ndata: {data}\n\n");
+    match stream.write_all(frame.as_bytes()) {
+        Ok(()) => {
+            out.bytes += frame.len();
+            out.events += 1;
+            true
+        }
+        Err(_) => {
+            out.disconnected = true;
+            false
+        }
+    }
+}
+
+fn write_error(stream: &mut TcpStream, out: &mut ConnOutcome, e: &HttpError) {
+    // shed rejections carry a prebuilt JSON body + Retry-After hint
+    if let Some(rest) = e.msg.strip_prefix(SHED_MARK) {
+        if let Some((secs, body)) = rest.split_once(':') {
+            send(
+                stream,
+                out,
+                e.status,
+                "application/json",
+                &[("retry-after", secs.to_string())],
+                body,
+            );
+            return;
+        }
+    }
+    let mut extra: Vec<(&str, String)> = Vec::new();
+    if let Some(allow) = e.allow {
+        extra.push(("allow", allow.to_string()));
+    }
+    send(stream, out, e.status, "application/json", &extra, &error_body(&e.msg));
+}
+
+fn error_body(msg: &str) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.field_str("error", msg);
+    w.end_obj();
+    w.finish().to_string()
+}
+
+fn response_fields(w: &mut JsonWriter, resp: &Response) {
+    w.field_u64("next_token", u64::from(resp.next_token));
+    w.field_f64("mean_nll", resp.mean_nll);
+    w.field_f64("latency_ms", resp.latency.as_secs_f64() * 1e3);
+    w.field_f64("queue_wait_ms", resp.queue_wait.as_secs_f64() * 1e3);
+    w.field_u64("generation", resp.generation);
+}
+
+fn finish_name(reason: FinishReason) -> &'static str {
+    match reason {
+        FinishReason::Stop => "stop",
+        FinishReason::Length => "length",
+        FinishReason::Cancelled => "cancelled",
+        FinishReason::Failed => "failed",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests (in-crate: fabricating Tickets needs crate-private fields).
+// The malformed-HTTP/body catalog and the real-cluster integration tests
+// live in tests/http_serve.rs.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    /// Scripted backend: one canned behaviour per submission, in order.
+    enum Script {
+        /// Admit a scoring ticket and reply immediately.
+        Score(Response),
+        /// Admit a generation ticket and stream these events, then (for
+        /// served finishes) the response.
+        Generate(Vec<StreamEvent>, Option<Response>),
+        /// Admit a generation ticket and keep streaming tokens until
+        /// cancelled — the replier thread watches the cancel flag like a
+        /// decode loop watches it between steps, then sends Done.
+        GenerateUntilCancel,
+        /// Reject with this reason.
+        Reject(RejectReason),
+    }
+
+    struct MockBackend {
+        script: Mutex<Vec<Script>>,
+        next_id: AtomicUsize,
+    }
+
+    impl MockBackend {
+        fn new(script: Vec<Script>) -> Arc<MockBackend> {
+            Arc::new(MockBackend { script: Mutex::new(script), next_id: AtomicUsize::new(1) })
+        }
+    }
+
+    fn resp(next_token: u32) -> Response {
+        Response {
+            next_token,
+            mean_nll: 0.25,
+            latency: Duration::from_millis(2),
+            queue_wait: Duration::from_millis(1),
+            generation: 0,
+        }
+    }
+
+    impl HttpBackend for MockBackend {
+        fn try_submit(&self, _req: ServeRequest) -> Result<Admission> {
+            let mut script = self.script.lock().unwrap();
+            anyhow::ensure!(!script.is_empty(), "mock script exhausted");
+            let step = script.remove(0);
+            let id = self.next_id.fetch_add(1, Ordering::SeqCst) as u64;
+            let cancel = Arc::new(AtomicBool::new(false));
+            match step {
+                Script::Reject(reason) => Ok(Admission::Rejected {
+                    id,
+                    reason,
+                    retry_after: Duration::from_millis(1500),
+                }),
+                Script::Score(r) => {
+                    let (tx, rx) = mpsc::channel();
+                    tx.send(r).unwrap();
+                    Ok(Admission::Admitted(Ticket { rx, cancel, id, stream: None }))
+                }
+                Script::Generate(events, response) => {
+                    let (tx, rx) = mpsc::channel();
+                    let (stx, srx) = mpsc::channel();
+                    for ev in events {
+                        stx.send(ev).unwrap();
+                    }
+                    if let Some(r) = response {
+                        tx.send(r).unwrap();
+                    }
+                    // keep the senders alive past the handler by leaking
+                    // them into the ticket's lifetime via a holder thread
+                    std::mem::forget(tx);
+                    std::mem::forget(stx);
+                    Ok(Admission::Admitted(Ticket { rx, cancel, id, stream: Some(srx) }))
+                }
+                Script::GenerateUntilCancel => {
+                    let (tx, rx) = mpsc::channel();
+                    let (stx, srx) = mpsc::channel();
+                    let flag = cancel.clone();
+                    thread::spawn(move || {
+                        let mut index = 0usize;
+                        while !flag.load(Ordering::Acquire) {
+                            if stx.send(StreamEvent::Token { token: 7, index }).is_err() {
+                                return;
+                            }
+                            index += 1;
+                            thread::sleep(Duration::from_millis(2));
+                        }
+                        // serving side observed the cancel between steps
+                        let _ = stx.send(StreamEvent::Done {
+                            reason: FinishReason::Cancelled,
+                            generated: index,
+                        });
+                        drop(tx);
+                    });
+                    Ok(Admission::Admitted(Ticket { rx, cancel, id, stream: Some(srx) }))
+                }
+            }
+        }
+
+        fn live_report(&self) -> ServerReport {
+            ServerReport::default()
+        }
+
+        fn replicas(&self) -> usize {
+            1
+        }
+    }
+
+    fn start(script: Vec<Script>) -> HttpServer {
+        let backend = MockBackend::new(script);
+        HttpServer::start(backend, HttpConfig::default()).unwrap()
+    }
+
+    /// Plain-text HTTP client for tests: send raw bytes, read to EOF.
+    fn roundtrip(addr: SocketAddr, raw: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn post(addr: SocketAddr, path: &str, body: &str) -> String {
+        roundtrip(
+            addr,
+            &format!(
+                "POST {path} HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{body}",
+                body.len()
+            ),
+        )
+    }
+
+    fn status_of(reply: &str) -> u16 {
+        reply
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("no status in {reply:?}"))
+    }
+
+    fn body_of(reply: &str) -> &str {
+        reply.split("\r\n\r\n").nth(1).unwrap_or("")
+    }
+
+    #[test]
+    fn healthz_and_metrics_respond() {
+        let server = start(vec![]);
+        let reply = roundtrip(server.addr(), "GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n");
+        assert_eq!(status_of(&reply), 200);
+        let j = Json::parse(body_of(&reply)).unwrap();
+        assert_eq!(j.req_str("status").unwrap(), "ok");
+        assert_eq!(j.req_usize("replicas").unwrap(), 1);
+        let reply = roundtrip(server.addr(), "GET /metrics HTTP/1.1\r\nhost: t\r\n\r\n");
+        assert_eq!(status_of(&reply), 200);
+        assert!(body_of(&reply).contains("mxmoe_http_connections_total"));
+        let report = server.shutdown();
+        assert_eq!(report.connections, 2);
+        assert_eq!(report.disconnects, 0);
+    }
+
+    #[test]
+    fn score_roundtrip_and_reject_mapping() {
+        let server = start(vec![
+            Script::Score(resp(42)),
+            Script::Reject(RejectReason::QueueFull),
+            Script::Reject(RejectReason::KvExhausted),
+        ]);
+        let reply = post(server.addr(), "/v1/score", r#"{"tokens":[1,2,3]}"#);
+        assert_eq!(status_of(&reply), 200);
+        let j = Json::parse(body_of(&reply)).unwrap();
+        assert_eq!(j.req_usize("next_token").unwrap(), 42);
+        assert!(j.req_f64("latency_ms").unwrap() > 0.0);
+
+        let reply = post(server.addr(), "/v1/score", r#"{"tokens":[1]}"#);
+        assert_eq!(status_of(&reply), 429, "queue-side shed is 429: {reply}");
+        assert!(reply.to_lowercase().contains("retry-after: 2"), "ceil(1.5s)=2: {reply}");
+        let j = Json::parse(body_of(&reply)).unwrap();
+        assert_eq!(j.req_str("reason").unwrap(), "queue-full");
+        assert_eq!(j.req_usize("retry_after_ms").unwrap(), 1500);
+
+        let reply = post(server.addr(), "/v1/generate", r#"{"tokens":[1],"max_new_tokens":4}"#);
+        assert_eq!(status_of(&reply), 503, "KV exhaustion is 503: {reply}");
+        let j = Json::parse(body_of(&reply)).unwrap();
+        assert_eq!(j.req_str("reason").unwrap(), "kv-exhausted");
+        server.shutdown();
+    }
+
+    #[test]
+    fn sse_stream_is_well_formed() {
+        let server = start(vec![Script::Generate(
+            vec![
+                StreamEvent::Token { token: 5, index: 0 },
+                StreamEvent::Token { token: 6, index: 1 },
+                StreamEvent::Done { reason: FinishReason::Length, generated: 2 },
+            ],
+            Some(resp(6)),
+        )]);
+        let reply = post(server.addr(), "/v1/generate", r#"{"tokens":[9],"max_new_tokens":2}"#);
+        assert_eq!(status_of(&reply), 200);
+        assert!(reply.contains("content-type: text/event-stream"));
+        let frames: Vec<&str> = body_of(&reply).split("\n\n").filter(|f| !f.is_empty()).collect();
+        assert_eq!(frames.len(), 4, "start + 2 tokens + done: {frames:?}");
+        let parse = |frame: &str| {
+            let mut lines = frame.lines();
+            let ev = lines.next().unwrap().strip_prefix("event: ").unwrap().to_string();
+            let data = lines.next().unwrap().strip_prefix("data: ").unwrap().to_string();
+            assert!(lines.next().is_none(), "one data line per frame");
+            (ev, Json::parse(&data).unwrap())
+        };
+        let (ev, j) = parse(frames[0]);
+        assert_eq!(ev, "start");
+        assert!(j.req_usize("id").unwrap() >= 1);
+        let (ev, j) = parse(frames[1]);
+        assert_eq!((ev.as_str(), j.req_usize("token").unwrap()), ("token", 5));
+        assert_eq!(j.req_usize("index").unwrap(), 0);
+        let (ev, j) = parse(frames[2]);
+        assert_eq!((ev.as_str(), j.req_usize("token").unwrap()), ("token", 6));
+        let (ev, j) = parse(frames[3]);
+        assert_eq!(ev, "done");
+        assert_eq!(j.req_str("reason").unwrap(), "length");
+        assert_eq!(j.req_usize("generated").unwrap(), 2);
+        assert_eq!(j.get("response").unwrap().req_usize("next_token").unwrap(), 6);
+        let report = server.shutdown();
+        assert_eq!(report.sse_events, 4);
+        assert_eq!(report.disconnects, 0);
+    }
+
+    #[test]
+    fn cancel_endpoint_flips_the_ticket_and_stream_terminates() {
+        let server = start(vec![Script::GenerateUntilCancel]);
+        let addr = server.addr();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let body = r#"{"tokens":[1],"max_new_tokens":100}"#;
+        s.write_all(
+            format!(
+                "POST /v1/generate HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        // read until the first token frame so the id is known & live
+        let mut seen = Vec::new();
+        let mut buf = [0u8; 1024];
+        while !String::from_utf8_lossy(&seen).contains("event: token") {
+            let n = s.read(&mut buf).unwrap();
+            assert!(n > 0, "stream closed early");
+            seen.extend_from_slice(&buf[..n]);
+        }
+        let text = String::from_utf8_lossy(&seen).to_string();
+        let start_data =
+            text.lines().find(|l| l.starts_with("data: ")).unwrap().trim_start_matches("data: ");
+        let id = Json::parse(start_data).unwrap().req_usize("id").unwrap();
+        let reply = post(addr, &format!("/v1/cancel/{id}"), "{}");
+        assert_eq!(status_of(&reply), 200);
+        // the stream must now terminate with a cancelled done event
+        let mut rest = String::new();
+        s.read_to_string(&mut rest).unwrap();
+        assert!(rest.contains("event: done"), "terminal frame after cancel: {rest}");
+        assert!(rest.contains("\"reason\":\"cancelled\""), "{rest}");
+        // the id is gone from the registry now
+        let reply = post(addr, &format!("/v1/cancel/{id}"), "{}");
+        assert_eq!(status_of(&reply), 404, "finished ids are unknown");
+        server.shutdown();
+    }
+
+    #[test]
+    fn disconnect_mid_stream_cancels_the_ticket() {
+        let server = start(vec![Script::GenerateUntilCancel]);
+        let addr = server.addr();
+        {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let body = r#"{"tokens":[1],"max_new_tokens":100}"#;
+            s.write_all(
+                format!(
+                    "POST /v1/generate HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{body}",
+                    body.len()
+                )
+                .as_bytes(),
+            )
+            .unwrap();
+            let mut buf = [0u8; 256];
+            let n = s.read(&mut buf).unwrap();
+            assert!(n > 0);
+            // drop the connection mid-stream
+        }
+        // the mock keeps streaming tokens, so the handler's next write
+        // onto the dead socket fails and flips the cancel flag
+        let t0 = std::time::Instant::now();
+        let report = loop {
+            let r = server.http_report();
+            if r.disconnects >= 1 || t0.elapsed() > Duration::from_secs(20) {
+                break r;
+            }
+            thread::sleep(Duration::from_millis(5));
+        };
+        assert_eq!(report.disconnects, 1, "disconnect observed and counted");
+        server.shutdown();
+    }
+
+    #[test]
+    fn busy_shed_replies_503_with_retry_after() {
+        let backend = MockBackend::new(vec![]);
+        let cfg = HttpConfig { max_connections: 0, ..HttpConfig::default() };
+        let server = HttpServer::start(backend, cfg).unwrap();
+        let reply = roundtrip(server.addr(), "GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n");
+        assert_eq!(status_of(&reply), 503);
+        assert!(reply.to_lowercase().contains("retry-after: 1"), "{reply}");
+        let report = server.shutdown();
+        assert_eq!(report.rejected_busy, 1);
+        assert_eq!(report.connections, 0, "shed connections are not handled ones");
+    }
+
+    #[test]
+    fn http_trace_spans_record_connections() {
+        let backend = MockBackend::new(vec![Script::Score(resp(1))]);
+        let cfg = HttpConfig { trace: TraceConfig::on(), ..HttpConfig::default() };
+        let server = HttpServer::start(backend, cfg).unwrap();
+        let reply = post(server.addr(), "/v1/score", r#"{"tokens":[1]}"#);
+        assert_eq!(status_of(&reply), 200);
+        let reply = roundtrip(server.addr(), "GET /nope HTTP/1.1\r\nhost: t\r\n\r\n");
+        assert_eq!(status_of(&reply), 404);
+        // handlers may still be folding their span in; poll briefly
+        let t0 = std::time::Instant::now();
+        let events = loop {
+            let (events, dropped) = server.take_trace();
+            assert_eq!(dropped, 0);
+            if !events.is_empty() || t0.elapsed() > Duration::from_secs(10) {
+                break events;
+            }
+            thread::sleep(Duration::from_millis(5));
+        };
+        let score = events
+            .iter()
+            .find(|e| matches!(e.kind, EventKind::HttpConn { endpoint: "score", .. }))
+            .expect("score span recorded");
+        assert!(score.req >= 1, "span carries the admission id");
+        match score.kind {
+            EventKind::HttpConn { status, disconnected, bytes, .. } => {
+                assert_eq!(status, 200);
+                assert!(!disconnected);
+                assert!(bytes > 0);
+            }
+            _ => unreachable!(),
+        }
+        server.shutdown();
+    }
+}

@@ -32,12 +32,15 @@
 //! sequence's per-layer K/V state, and [`decode`] schedules mixed
 //! prefill/decode steps (tile-budget cut, token streaming, step-granular
 //! cancellation) between queue pops — so decode-time expert routing
-//! reaches the telemetry the replanner solves on. Everything except the
-//! worker body is engine-agnostic and unit-testable without a PJRT
-//! runtime.
+//! reaches the telemetry the replanner solves on. Since DESIGN.md
+//! §HTTP-Front-Door, [`http`] exposes the whole stack over the network:
+//! SSE token streaming, disconnect-as-cancel, and admission sheds as
+//! 429/503 + `Retry-After`. Everything except the worker body is
+//! engine-agnostic and unit-testable without a PJRT runtime.
 
 pub mod decode;
 pub mod hotswap;
+pub mod http;
 pub mod kvcache;
 pub mod queue;
 pub mod replan;
@@ -50,6 +53,7 @@ pub use decode::{
     StepOutcome,
 };
 pub use hotswap::{SlotChange, SlotTable, StagedSwap};
+pub use http::{HttpBackend, HttpConfig, HttpServer};
 pub use kvcache::{KvCache, KvOccupancy, KvPageScheme, KvQuantConfig, SeqKv, KV_PAGE_SIZE};
 pub use queue::{
     BatchPolicy, ContinuousBatcher, GenSpec, Request, RequestKind, Response, ShedInfo,

@@ -369,6 +369,16 @@ pub struct ReplicaStatus {
     pub decode_seqs: usize,
     /// Tokens generated and streamed so far.
     pub generated_tokens: usize,
+    /// Scoring requests this replica has answered (live counter for the
+    /// HTTP front door's `/metrics` scrape — reports otherwise only exist
+    /// at shutdown).
+    pub requests_done: usize,
+    /// Prompt tokens processed by answered requests.
+    pub tokens_done: usize,
+    /// Generations completed (stop-token or length).
+    pub generations_done: usize,
+    /// Generations preempted for KV pages and replayed.
+    pub kv_preemptions: usize,
     /// Unclaimed tokens under the decode KV page budget (0 until the
     /// replica publishes — the front door's KV backpressure gate only
     /// engages once `kv_budget_tokens > 0`).
@@ -404,6 +414,10 @@ impl ReplicaStatus {
             scheme_rows: Vec::new(),
             decode_seqs: 0,
             generated_tokens: 0,
+            requests_done: 0,
+            tokens_done: 0,
+            generations_done: 0,
+            kv_preemptions: 0,
             kv_free_tokens: 0,
             kv_budget_tokens: 0,
             kv_page_size: 0,
@@ -859,6 +873,10 @@ fn publish(
     s.scheme_rows = measured_scheme_rows(engine);
     s.decode_seqs = decoder.load();
     s.generated_tokens = engine.metrics().generated_tokens;
+    s.requests_done = engine.metrics().requests;
+    s.tokens_done = engine.metrics().tokens;
+    s.generations_done = engine.metrics().generations;
+    s.kv_preemptions = engine.metrics().kv_preemptions;
     let occ = decoder.occupancy();
     s.kv_free_tokens = decoder.free_kv_tokens();
     s.kv_budget_tokens = occ.budget_tokens;

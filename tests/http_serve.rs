@@ -1,0 +1,414 @@
+//! Integration: the HTTP front door's wire rigor (DESIGN.md
+//! §HTTP-Front-Door) from outside the crate — the malformed-HTTP and
+//! malformed-body catalogs, the JSON escape/parse inverse pair on every
+//! hostile string class, and the RejectReason → 429/503 + `Retry-After`
+//! mapping. Everything here runs against an always-rejecting stub
+//! backend (no engine needed); the final test drives a real mini-model
+//! cluster end to end and self-skips without the AOT artifacts.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use mxmoe::coordinator::ServerReport;
+use mxmoe::ser::json::Json;
+use mxmoe::ser::jsonwire;
+use mxmoe::serve::{Admission, HttpBackend, HttpConfig, HttpServer, RejectReason, ServeRequest};
+
+// ---------------------------------------------------------------------------
+// Stub backend: every submission is shed with the next scripted reason
+// ---------------------------------------------------------------------------
+
+struct RejectingBackend {
+    reasons: Mutex<VecDeque<RejectReason>>,
+}
+
+impl RejectingBackend {
+    fn server(reasons: Vec<RejectReason>) -> HttpServer {
+        let backend = Arc::new(RejectingBackend { reasons: Mutex::new(reasons.into()) });
+        HttpServer::start(backend, HttpConfig::default()).unwrap()
+    }
+}
+
+impl HttpBackend for RejectingBackend {
+    fn try_submit(&self, _req: ServeRequest) -> anyhow::Result<Admission> {
+        let reason = self
+            .reasons
+            .lock()
+            .unwrap()
+            .pop_front()
+            .expect("request reached the backend unexpectedly");
+        Ok(Admission::Rejected { id: 7, reason, retry_after: Duration::from_millis(2500) })
+    }
+
+    fn live_report(&self) -> ServerReport {
+        ServerReport::default()
+    }
+
+    fn replicas(&self) -> usize {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tiny raw client
+// ---------------------------------------------------------------------------
+
+fn raw(addr: SocketAddr, bytes: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(bytes).unwrap();
+    let mut out = Vec::new();
+    s.read_to_end(&mut out).unwrap();
+    String::from_utf8_lossy(&out).to_string()
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> String {
+    raw(
+        addr,
+        format!(
+            "POST {path} HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )
+}
+
+fn status_of(reply: &str) -> u16 {
+    reply
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("no status in {reply:?}"))
+}
+
+fn header<'a>(reply: &'a str, name: &str) -> Option<&'a str> {
+    reply
+        .split("\r\n\r\n")
+        .next()?
+        .lines()
+        .skip(1)
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.eq_ignore_ascii_case(name))
+        .map(|(_, v)| v.trim())
+}
+
+fn body_of(reply: &str) -> &str {
+    reply.split("\r\n\r\n").nth(1).unwrap_or("")
+}
+
+// ---------------------------------------------------------------------------
+// Malformed-HTTP catalog: nothing here may reach the backend
+// ---------------------------------------------------------------------------
+
+#[test]
+fn malformed_http_catalog() {
+    let server = RejectingBackend::server(vec![]);
+    let addr = server.addr();
+    let catalog: Vec<(&str, String, u16)> = vec![
+        ("garbage request line", "GARBAGE\r\n\r\n".into(), 400),
+        ("too many request-line parts", "POST /v1/score HTTP/1.1 extra\r\n\r\n".into(), 400),
+        ("path without leading slash", "POST v1/score HTTP/1.1\r\n\r\n".into(), 400),
+        ("unsupported protocol", "POST /v1/score SPDY/3\r\n\r\n".into(), 400),
+        ("header without colon", "POST /v1/score HTTP/1.1\r\nbadheader\r\n\r\n".into(), 400),
+        (
+            "header name with space",
+            "POST /v1/score HTTP/1.1\r\nbad name: x\r\ncontent-length: 2\r\n\r\n{}".into(),
+            400,
+        ),
+        ("post without content-length", "POST /v1/score HTTP/1.1\r\nhost: t\r\n\r\n".into(), 411),
+        (
+            "unparseable content-length",
+            "POST /v1/score HTTP/1.1\r\ncontent-length: banana\r\n\r\n".into(),
+            400,
+        ),
+        (
+            "chunked transfer-encoding",
+            "POST /v1/score HTTP/1.1\r\ntransfer-encoding: chunked\r\ncontent-length: 2\r\n\r\n{}"
+                .into(),
+            400,
+        ),
+        (
+            "oversized declared body",
+            format!("POST /v1/score HTTP/1.1\r\ncontent-length: {}\r\n\r\n", 1 << 30),
+            413,
+        ),
+        (
+            "truncated body",
+            "POST /v1/score HTTP/1.1\r\ncontent-length: 100\r\n\r\n{\"tokens\":[1]}".into(),
+            400,
+        ),
+        (
+            "request line over the bound",
+            format!("POST /{} HTTP/1.1\r\n\r\n", "a".repeat(10_000)),
+            400,
+        ),
+        (
+            "too many headers",
+            format!(
+                "POST /v1/score HTTP/1.1\r\n{}content-length: 2\r\n\r\n{{}}",
+                "x-h: v\r\n".repeat(100)
+            ),
+            400,
+        ),
+    ];
+    for (name, req, want) in catalog {
+        let reply = raw(addr, req.as_bytes());
+        assert_eq!(status_of(&reply), want, "case '{name}': {reply}");
+    }
+    // routing errors, same guarantee
+    let reply = raw(addr, "GET /nope HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(status_of(&reply), 404);
+    let reply = raw(addr, "GET /v1/score HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(status_of(&reply), 405, "wrong method is 405: {reply}");
+    assert_eq!(header(&reply, "allow"), Some("POST"), "405 carries Allow");
+    let reply = post(addr, "/v1/cancel/notanumber", "{}");
+    assert_eq!(status_of(&reply), 400);
+    let reply = post(addr, "/v1/cancel/12345", "{}");
+    assert_eq!(status_of(&reply), 404, "unknown id is 404");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Malformed-body catalog: parsed strictly, still never reaches the backend
+// ---------------------------------------------------------------------------
+
+#[test]
+fn malformed_body_catalog() {
+    let server = RejectingBackend::server(vec![]);
+    let addr = server.addr();
+    let catalog: Vec<(&str, &str, String)> = vec![
+        ("not json", "/v1/score", "tokens=1,2,3".into()),
+        ("json array body", "/v1/score", "[1,2,3]".into()),
+        ("unknown field", "/v1/score", r#"{"tokens":[1],"temperature":0.7}"#.into()),
+        ("missing tokens", "/v1/score", r#"{"priority":"high"}"#.into()),
+        ("empty tokens", "/v1/score", r#"{"tokens":[]}"#.into()),
+        ("tokens not an array", "/v1/score", r#"{"tokens":"abc"}"#.into()),
+        ("fractional token id", "/v1/score", r#"{"tokens":[1.5]}"#.into()),
+        ("negative token id", "/v1/score", r#"{"tokens":[-1]}"#.into()),
+        ("token above u32", "/v1/score", r#"{"tokens":[4294967296]}"#.into()),
+        ("unknown priority", "/v1/score", r#"{"tokens":[1],"priority":"urgent"}"#.into()),
+        ("ill-typed qos", "/v1/score", r#"{"tokens":[1],"qos":3}"#.into()),
+        ("zero deadline", "/v1/score", r#"{"tokens":[1],"deadline_ms":0}"#.into()),
+        ("generate without max_new", "/v1/generate", r#"{"tokens":[1]}"#.into()),
+        ("zero max_new", "/v1/generate", r#"{"tokens":[1],"max_new_tokens":0}"#.into()),
+        ("stop not array", "/v1/generate", r#"{"tokens":[1],"max_new_tokens":2,"stop":5}"#.into()),
+        ("score with generate field", "/v1/score", r#"{"tokens":[1],"max_new_tokens":4}"#.into()),
+        ("lone high surrogate escape", "/v1/score", r#"{"tokens":[1],"qos":"\ud83d"}"#.into()),
+        ("lone low surrogate escape", "/v1/score", r#"{"tokens":[1],"qos":"\udca9"}"#.into()),
+        ("truncated unicode escape", "/v1/score", r#"{"tokens":[1],"qos":"\u12"}"#.into()),
+        ("raw control char in string", "/v1/score", "{\"tokens\":[1],\"qos\":\"\u{1}\"}".into()),
+        (
+            "nesting bomb",
+            "/v1/score",
+            format!("{}1{}", "[".repeat(100_000), "]".repeat(100_000)),
+        ),
+        ("invalid utf-8", "/v1/score", String::from_utf8_lossy(b"{\"tokens\":[1]}").into_owned()),
+    ];
+    for (name, path, body) in &catalog {
+        // the invalid-utf-8 case needs raw bytes
+        let reply = if *name == "invalid utf-8" {
+            let bytes = b"{\"tokens\":[\xff\xfe]}";
+            raw(
+                addr,
+                format!("POST {path} HTTP/1.1\r\ncontent-length: {}\r\n\r\n", bytes.len())
+                    .into_bytes()
+                    .into_iter()
+                    .chain(bytes.iter().copied())
+                    .collect::<Vec<u8>>()
+                    .as_slice(),
+            )
+        } else {
+            post(addr, path, body)
+        };
+        assert_eq!(status_of(&reply), 400, "case '{name}': {reply}");
+        assert!(
+            Json::parse(body_of(&reply)).is_ok(),
+            "error body must itself be valid JSON: {reply}"
+        );
+    }
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// RejectReason → HTTP status + Retry-After
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reject_mapping_and_retry_after() {
+    let server = RejectingBackend::server(vec![
+        RejectReason::QueueFull,
+        RejectReason::DeadlineUnmeetable,
+        RejectReason::ClassQuota,
+        RejectReason::KvExhausted,
+    ]);
+    let addr = server.addr();
+    let cases = [
+        ("queue-full", 429u16),
+        ("deadline-unmeetable", 429),
+        ("class-quota", 429),
+        ("kv-exhausted", 503),
+    ];
+    for (want_reason, want_status) in cases {
+        let reply = post(addr, "/v1/score", r#"{"tokens":[1,2]}"#);
+        assert_eq!(status_of(&reply), want_status, "{want_reason}: {reply}");
+        // 2500ms rounds up to a whole-second Retry-After
+        assert_eq!(header(&reply, "retry-after"), Some("3"), "{want_reason}: {reply}");
+        let j = Json::parse(body_of(&reply)).unwrap();
+        assert_eq!(j.req_str("error").unwrap(), "rejected");
+        assert_eq!(j.req_str("reason").unwrap(), want_reason);
+        assert_eq!(j.req_usize("retry_after_ms").unwrap(), 2500);
+        assert_eq!(j.req_usize("id").unwrap(), 7);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn healthz_and_metrics_work_without_an_engine() {
+    let server = RejectingBackend::server(vec![]);
+    let addr = server.addr();
+    let reply = raw(addr, "GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(status_of(&reply), 200);
+    let reply = raw(addr, "GET /metrics HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(status_of(&reply), 200);
+    for metric in [
+        "mxmoe_http_connections_total",
+        "mxmoe_http_disconnects_total",
+        "mxmoe_http_sse_events_total",
+        "mxmoe_http_peak_connections",
+        "mxmoe_rejected_total",
+    ] {
+        assert!(body_of(&reply).contains(metric), "metrics must export {metric}");
+    }
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Escape path properties: jsonwire::escape must be the exact inverse of
+// the strict parser, for every hostile string class
+// ---------------------------------------------------------------------------
+
+fn roundtrips(s: &str) {
+    let quoted = format!("\"{}\"", jsonwire::escape(s));
+    assert!(quoted.is_ascii(), "escaped form must be pure ASCII: {quoted:?}");
+    assert!(
+        !quoted.bytes().any(|b| b < 0x20),
+        "escaped form may not contain raw control bytes: {quoted:?}"
+    );
+    match Json::parse(&quoted) {
+        Ok(Json::Str(back)) => assert_eq!(back, s, "escape/parse must be inverse for {s:?}"),
+        other => panic!("parse of {quoted:?} gave {other:?}"),
+    }
+}
+
+#[test]
+fn escape_every_control_char() {
+    for b in 0u8..0x20 {
+        roundtrips(&format!("a{}b", b as char));
+    }
+    roundtrips("\u{7f}"); // DEL survives too
+}
+
+#[test]
+fn escape_quotes_backslashes_and_separators() {
+    roundtrips(r#"quote " backslash \ slash / done"#);
+    roundtrips("line\nfeed\rreturn\ttab");
+    // U+2028/U+2029 are legal raw in JSON but must still round-trip
+    roundtrips("para\u{2028}sep\u{2029}end");
+}
+
+#[test]
+fn escape_astral_and_bmp_unicode() {
+    roundtrips("caf\u{e9} na\u{ef}ve");
+    roundtrips("\u{1F600}\u{1F680}"); // astral: must emit surrogate pairs
+    roundtrips("\u{FFFD}\u{FFFF}"); // BMP edge
+    roundtrips("mixed \u{1F410} ascii \u{430}\u{431} end");
+    // boundary of the astral plane
+    roundtrips("\u{FFFF}\u{10000}\u{10FFFF}");
+}
+
+#[test]
+fn parser_rejects_lone_surrogates_writer_never_emits_them() {
+    assert!(Json::parse(r#""\ud800""#).is_err(), "lone high surrogate");
+    assert!(Json::parse(r#""\udfff""#).is_err(), "lone low surrogate");
+    assert!(Json::parse(r#""\ud800\ud800""#).is_err(), "high followed by high");
+    assert!(Json::parse(r#""\ud83dx""#).is_err(), "high then garbage");
+    // a correct pair parses to the astral char, and re-escaping it gives
+    // back a pair (not a lone unit)
+    match Json::parse(r#""😀""#) {
+        Ok(Json::Str(s)) => {
+            assert_eq!(s, "\u{1F600}");
+            let re = jsonwire::escape(&s);
+            assert_eq!(re, "\\ud83d\\ude00");
+        }
+        other => panic!("surrogate pair should parse, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Real cluster end to end (self-skips without AOT artifacts)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn real_cluster_http_roundtrip() {
+    use mxmoe::coordinator::{Cluster, ClusterConfig, ServeConfig};
+    use mxmoe::harness::{self, mixed_runtime_plan, save_model_mxt, MINI_MODEL_SEED};
+    use mxmoe::moe::{ModelConfig, MoeLm};
+    use mxmoe::util::Rng;
+
+    let Some(artifacts) = harness::require_artifacts() else {
+        eprintln!("skipping real_cluster_http_roundtrip: artifacts not built");
+        return;
+    };
+    let cfg = ModelConfig::by_name("ci-mini").unwrap();
+    let lm = MoeLm::random(&cfg, &mut Rng::new(MINI_MODEL_SEED));
+    let weights = std::env::temp_dir().join("mxmoe_http_serve_test.mxt");
+    save_model_mxt(&lm, &weights).unwrap();
+    drop(lm);
+    let cluster = Arc::new(
+        Cluster::start(
+            cfg.clone(),
+            weights,
+            artifacts,
+            mixed_runtime_plan(&cfg),
+            ClusterConfig {
+                replicas: 1,
+                serve: ServeConfig {
+                    max_batch_seqs: 4,
+                    max_wait: Duration::from_millis(2),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let server = HttpServer::start(cluster.clone(), HttpConfig::default()).unwrap();
+    let addr = server.addr();
+
+    let reply = post(addr, "/v1/score", r#"{"tokens":[3,1,4,1,5],"qos":"interactive"}"#);
+    assert_eq!(status_of(&reply), 200, "{reply}");
+    let j = Json::parse(body_of(&reply)).unwrap();
+    assert!(j.req_usize("id").unwrap() >= 1);
+    j.req_usize("next_token").unwrap();
+    j.req_f64("mean_nll").unwrap();
+
+    let reply = post(addr, "/v1/generate", r#"{"tokens":[2,7,1],"max_new_tokens":4}"#);
+    assert_eq!(status_of(&reply), 200, "{reply}");
+    let frames: Vec<&str> = body_of(&reply).split("\n\n").filter(|f| !f.is_empty()).collect();
+    assert!(frames.len() >= 3, "start + tokens + done: {frames:?}");
+    assert!(frames[0].starts_with("event: start"));
+    assert!(frames.last().unwrap().starts_with("event: done"), "{frames:?}");
+
+    server.shutdown();
+    let cluster = Arc::try_unwrap(cluster).ok().expect("backend still referenced");
+    let report = cluster.shutdown();
+    let a = &report.admission;
+    assert_eq!(
+        a.admitted,
+        report.total_requests() + a.cancelled + a.failed,
+        "HTTP round-trips must keep the ledger exact"
+    );
+}
