@@ -1,14 +1,16 @@
-//! §Observability — lifecycle-tracing overhead on the serving hot path.
+//! §Observability — lifecycle-tracing and observatory-sampler overhead on
+//! the serving hot path.
 //!
 //! Scenario: a serving-shape model with a mixed-precision plan serves the
-//! same fixed scoring trace twice — tracing off, then tracing on. Tracing
-//! must be a pure observer: responses bit-identical, and the traced run's
-//! throughput within 3% of the untraced run (the per-thread ring
-//! collectors add no locks, only a bounded push per event). The traced
-//! run's merged trace is exported to `trace.json` (Chrome trace-event
-//! JSON, loadable at <https://ui.perfetto.dev>) and structurally
-//! validated, so CI can upload it as an artifact. Results land in
-//! `BENCH_trace_overhead.json`.
+//! same fixed scoring trace three times — tracing off, tracing on, and
+//! observatory sampler on. Both observers must be pure: responses
+//! bit-identical to the baseline, and each instrumented run's throughput
+//! within 3% of it (the trace collectors are lock-free per-thread rings;
+//! the sampler is one polling thread reading already-published state).
+//! The traced run's merged trace is exported to `trace.json` (Chrome
+//! trace-event JSON, loadable at <https://ui.perfetto.dev>) and
+//! structurally validated, so CI can upload it as an artifact. Results
+//! land in `BENCH_trace_overhead.json`.
 //!
 //! `--smoke` shrinks the trace and measures without gating (shared CI
 //! runners are too noisy for a 3% bound); bit-identity and trace validity
@@ -21,7 +23,7 @@ use anyhow::Result;
 use mxmoe::coordinator::{Cluster, ClusterConfig, ClusterReport, ServeConfig};
 use mxmoe::harness::{mixed_runtime_plan, require_artifacts, save_model_mxt};
 use mxmoe::moe::{ModelConfig, MoeLm};
-use mxmoe::obs::{validate_chrome_trace, TraceConfig};
+use mxmoe::obs::{validate_chrome_trace, SampleConfig, TraceConfig};
 use mxmoe::ser::Json;
 use mxmoe::util::Rng;
 
@@ -60,17 +62,20 @@ struct RunResult {
     elapsed_s: f64,
     tokens: usize,
     responses: Vec<(u32, u64)>,
+    /// Time-series points the observatory sampler pushed (0 when off).
+    samples: u64,
     report: ClusterReport,
 }
 
-/// Serve `reqs` on a 2-replica cluster with the given trace switch: a
-/// warmup round (engine build, executable compilation) then the timed
-/// trace.
+/// Serve `reqs` on a 2-replica cluster with the given trace and sampler
+/// switches: a warmup round (engine build, executable compilation) then
+/// the timed trace.
 fn run_cluster(
     cfg: &ModelConfig,
     weights: &PathBuf,
     artifacts: &PathBuf,
     trace: TraceConfig,
+    sample: SampleConfig,
     reqs: &[Vec<u32>],
 ) -> Result<RunResult> {
     let cluster = Cluster::start(
@@ -81,14 +86,15 @@ fn run_cluster(
         ClusterConfig {
             replicas: 2,
             // one request per batch: identical batch composition whether
-            // tracing is on or off, which is what makes bit-identity (and
-            // a fair overhead comparison) well-defined
+            // the observers are on or off, which is what makes
+            // bit-identity (and a fair overhead comparison) well-defined
             serve: ServeConfig {
                 max_batch_seqs: 1,
                 max_wait: Duration::from_millis(1),
                 trace,
                 ..Default::default()
             },
+            sample,
             ..Default::default()
         },
     )?;
@@ -108,7 +114,8 @@ fn run_cluster(
         .collect();
     let elapsed_s = start.elapsed().as_secs_f64();
     let tokens: usize = reqs.iter().map(|r| r.len()).sum();
-    Ok(RunResult { elapsed_s, tokens, responses, report: cluster.shutdown() })
+    let samples: u64 = cluster.observatory().snapshot().series.iter().map(|s| s.pushed).sum();
+    Ok(RunResult { elapsed_s, tokens, responses, samples, report: cluster.shutdown() })
 }
 
 fn main() -> Result<()> {
@@ -138,17 +145,44 @@ fn main() -> Result<()> {
     // noise (cache state, frequency scaling) hits both switches equally
     let rounds = if smoke { 1 } else { 3 };
 
+    // a tight interval so even a short run collects real samples; the
+    // production default (250ms) is strictly cheaper
+    let sampler_cfg = SampleConfig { enabled: true, interval_ms: 10, ..Default::default() };
+
     let mut off_best: Option<RunResult> = None;
     let mut on_best: Option<RunResult> = None;
+    let mut sampled_best: Option<RunResult> = None;
     for round in 0..rounds {
-        let off = run_cluster(&cfg, &weights, &artifacts, TraceConfig::default(), &reqs)?;
-        let on = run_cluster(&cfg, &weights, &artifacts, TraceConfig::on(), &reqs)?;
+        let off = run_cluster(
+            &cfg,
+            &weights,
+            &artifacts,
+            TraceConfig::default(),
+            SampleConfig::default(),
+            &reqs,
+        )?;
+        let on = run_cluster(
+            &cfg,
+            &weights,
+            &artifacts,
+            TraceConfig::on(),
+            SampleConfig::default(),
+            &reqs,
+        )?;
+        let sampled =
+            run_cluster(&cfg, &weights, &artifacts, TraceConfig::default(), sampler_cfg, &reqs)?;
         assert_eq!(
             on.responses, off.responses,
             "round {round}: tracing changed a served bit — it must be a pure observer"
         );
+        assert_eq!(
+            sampled.responses, off.responses,
+            "round {round}: the sampler changed a served bit — it must be a pure observer"
+        );
         assert!(off.report.trace.is_empty(), "tracing off must record nothing");
         assert!(!on.report.trace.is_empty(), "tracing on must record the run");
+        assert_eq!(off.samples, 0, "sampler off must record no series points");
+        assert!(sampled.samples > 0, "sampler on must record series points");
         let off_better = match &off_best {
             None => true,
             Some(b) => off.elapsed_s < b.elapsed_s,
@@ -163,9 +197,17 @@ fn main() -> Result<()> {
         if on_better {
             on_best = Some(on);
         }
+        let sampled_better = match &sampled_best {
+            None => true,
+            Some(b) => sampled.elapsed_s < b.elapsed_s,
+        };
+        if sampled_better {
+            sampled_best = Some(sampled);
+        }
     }
     let off = off_best.expect("at least one round");
     let on = on_best.expect("at least one round");
+    let sampled = sampled_best.expect("at least one round");
     let _ = std::fs::remove_file(&weights);
 
     // export + validate the traced run the same way `mxmoe trace-dump`
@@ -177,23 +219,38 @@ fn main() -> Result<()> {
 
     let t_off = off.tokens as f64 / off.elapsed_s;
     let t_on = on.tokens as f64 / on.elapsed_s;
+    let t_sampled = sampled.tokens as f64 / sampled.elapsed_s;
     let overhead = on.elapsed_s / off.elapsed_s - 1.0;
+    let sampler_overhead = sampled.elapsed_s / off.elapsed_s - 1.0;
     println!(
-        "| trace off | {:>4} req | {:>6} tok | {:>8.3} s | {:>9.1} tok/s |",
+        "| trace off  | {:>4} req | {:>6} tok | {:>8.3} s | {:>9.1} tok/s |",
         reqs.len(),
         off.tokens,
         off.elapsed_s,
         t_off
     );
     println!(
-        "| trace on  | {:>4} req | {:>6} tok | {:>8.3} s | {:>9.1} tok/s | {} events |",
+        "| trace on   | {:>4} req | {:>6} tok | {:>8.3} s | {:>9.1} tok/s | {} events |",
         reqs.len(),
         on.tokens,
         on.elapsed_s,
         t_on,
         on.report.trace.len()
     );
-    println!("overhead: {:.2}% (bound {:.0}%)", 100.0 * overhead, 100.0 * OVERHEAD_BOUND);
+    println!(
+        "| sampler on | {:>4} req | {:>6} tok | {:>8.3} s | {:>9.1} tok/s | {} points |",
+        reqs.len(),
+        sampled.tokens,
+        sampled.elapsed_s,
+        t_sampled,
+        sampled.samples
+    );
+    println!("trace overhead: {:.2}% (bound {:.0}%)", 100.0 * overhead, 100.0 * OVERHEAD_BOUND);
+    println!(
+        "sampler overhead: {:.2}% (bound {:.0}%)",
+        100.0 * sampler_overhead,
+        100.0 * OVERHEAD_BOUND
+    );
     println!("wrote trace.json ({} chrome events, validated)", check.events);
 
     if !smoke {
@@ -201,6 +258,12 @@ fn main() -> Result<()> {
             overhead <= OVERHEAD_BOUND,
             "tracing overhead {:.2}% exceeds the {:.0}% acceptance bound",
             100.0 * overhead,
+            100.0 * OVERHEAD_BOUND
+        );
+        assert!(
+            sampler_overhead <= OVERHEAD_BOUND,
+            "sampler overhead {:.2}% exceeds the {:.0}% acceptance bound",
+            100.0 * sampler_overhead,
             100.0 * OVERHEAD_BOUND
         );
     }
@@ -215,6 +278,10 @@ fn main() -> Result<()> {
         ("trace_on_tok_per_s", Json::num(t_on)),
         ("overhead_frac", Json::num(overhead)),
         ("overhead_bound", Json::num(OVERHEAD_BOUND)),
+        ("sampler_on_s", Json::num(sampled.elapsed_s)),
+        ("sampler_on_tok_per_s", Json::num(t_sampled)),
+        ("sampler_overhead_frac", Json::num(sampler_overhead)),
+        ("sampler_points", Json::num(sampled.samples as f64)),
         ("trace_events", Json::num(on.report.trace.len() as f64)),
         ("trace_dropped", Json::num(on.report.trace.dropped as f64)),
         ("chrome_events", Json::num(check.events as f64)),

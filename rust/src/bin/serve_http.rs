@@ -21,7 +21,7 @@ use anyhow::{bail, Context, Result};
 use mxmoe::coordinator::{Cluster, ClusterConfig, ServeConfig};
 use mxmoe::harness::{self, mixed_runtime_plan, save_model_mxt, MINI_MODEL_SEED};
 use mxmoe::moe::{ModelConfig, MoeLm};
-use mxmoe::obs::TraceConfig;
+use mxmoe::obs::{SampleConfig, TraceConfig};
 use mxmoe::serve::{HttpConfig, HttpServer};
 use mxmoe::util::Rng;
 
@@ -49,7 +49,8 @@ impl Args {
                      --addr ADDR             bind address (default 127.0.0.1:8080)\n  \
                      --replicas N            engine replicas (default 2)\n  \
                      --max-connections N     concurrent connection bound (default 2048)\n  \
-                     --trace on|off          http-track span collection (default off)"
+                     --trace on|off          http-track span collection (default off)\n  \
+                     --sample-ms N           observatory sampler interval, ms (default 0 = off)"
                 );
                 std::process::exit(0);
             }
@@ -103,6 +104,10 @@ fn run() -> Result<()> {
         "off" => TraceConfig::default(),
         other => bail!("unknown --trace '{other}' (on|off)"),
     };
+    let sample = match args.get_usize("sample-ms", 0)? {
+        0 => SampleConfig::default(),
+        ms => SampleConfig { enabled: true, interval_ms: ms as u64, ..Default::default() },
+    };
 
     let (cfg, weights) = model_source()?;
     eprintln!("starting {replicas}-replica cluster ({})...", cfg.name);
@@ -118,6 +123,7 @@ fn run() -> Result<()> {
                 max_wait: Duration::from_millis(2),
                 ..Default::default()
             },
+            sample,
             ..Default::default()
         },
     )?;
@@ -129,6 +135,8 @@ fn run() -> Result<()> {
     println!("serving on http://{}", server.addr());
     println!("  GET  /healthz");
     println!("  GET  /metrics");
+    println!("  GET  /v1/status");
+    println!("  GET  /debug");
     println!("  POST /v1/score          {{\"tokens\":[...]}}");
     println!("  POST /v1/generate       {{\"tokens\":[...],\"max_new_tokens\":N}}  (SSE)");
     println!("  POST /v1/cancel/<id>");

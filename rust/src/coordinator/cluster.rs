@@ -34,7 +34,8 @@ use anyhow::Result;
 use crate::alloc::Allocation;
 use crate::moe::ModelConfig;
 use crate::obs::{
-    Deadline, EventKind, Outcome, SpanCollector, TraceClock, TraceConfig, TraceLog, Track,
+    record_sample, Deadline, EventKind, Observatory, Outcome, ProvenanceLedger, SampleConfig,
+    Sampler, SpanCollector, TraceClock, TraceConfig, TraceLog, Track,
 };
 use crate::runtime::dispatch;
 use crate::runtime::RuntimeScheme;
@@ -98,6 +99,9 @@ pub struct ClusterConfig {
     /// Per-replica decode-loop sizing (step row budget, active-sequence
     /// cap, KV reservation budget).
     pub decode: DecodePolicy,
+    /// Observatory sampler switch + cadence (off by default: no sampler
+    /// thread is spawned and the registry stays empty).
+    pub sample: SampleConfig,
 }
 
 impl Default for ClusterConfig {
@@ -109,6 +113,7 @@ impl Default for ClusterConfig {
             admission: AdmissionConfig::default(),
             dispatch_threads: None,
             decode: DecodePolicy::default(),
+            sample: SampleConfig::default(),
         }
     }
 }
@@ -344,6 +349,14 @@ pub struct Cluster {
     /// Reports from workers joined before shutdown (replica restarts) —
     /// merged into the final [`ClusterReport`] alongside the live set.
     finished: Vec<ReplicaReport>,
+    /// Time-series registry the sampler thread (when enabled) folds live
+    /// snapshots into; always allocated so `/v1/status` has a stable shape.
+    observatory: Arc<Observatory>,
+    /// Plan-provenance ledger shared with every replica's engine.
+    provenance: Arc<ProvenanceLedger>,
+    /// The polling thread behind [`Self::observatory`]; `None` when
+    /// sampling is off (the off path spawns nothing).
+    sampler: Option<Sampler>,
 }
 
 /// Everything a worker thread is built from, beyond the shared handles.
@@ -359,6 +372,7 @@ struct RespawnContext {
     decode: DecodePolicy,
     clock: TraceClock,
     trace: TraceConfig,
+    provenance: Arc<ProvenanceLedger>,
 }
 
 impl RespawnContext {
@@ -380,6 +394,7 @@ impl RespawnContext {
             decode: self.decode.clone(),
             clock: self.clock.clone(),
             trace: self.trace,
+            provenance: Some(self.provenance.clone()),
         };
         let q = queues.clone();
         let st = status.clone();
@@ -451,6 +466,8 @@ impl Cluster {
         let status: Arc<Vec<Mutex<ReplicaStatus>>> = Arc::new(
             (0..n).map(|_| Mutex::new(ReplicaStatus::boot(&cfg, &allocation))).collect(),
         );
+        let observatory = Arc::new(Observatory::new(cluster_cfg.sample.capacity));
+        let provenance = Arc::new(ProvenanceLedger::default());
         let respawn = RespawnContext {
             cfg,
             weights,
@@ -461,6 +478,7 @@ impl Cluster {
             decode: cluster_cfg.decode.clone(),
             clock: clock.clone(),
             trace,
+            provenance: provenance.clone(),
         };
         let mut workers = Vec::with_capacity(n);
         for id in 0..n {
@@ -480,6 +498,29 @@ impl Cluster {
                 router_loop(rx, policy, &router_queues, &status, &adm, affinity, topk, tracer)
             })
             .expect("spawn router thread");
+        // Sampler thread: polls the same live surfaces the HTTP scrape
+        // reads (status board + admission counters) — serving threads
+        // never see it. Off by default: nothing is spawned.
+        let sampler = if cluster_cfg.sample.enabled {
+            let obs = observatory.clone();
+            let st = status_board.clone();
+            let adm = admission.clone();
+            let q = queues.clone();
+            Some(Sampler::spawn(cluster_cfg.sample.interval(), move |t_s| {
+                let statuses: Vec<ReplicaStatus> =
+                    st.iter().map(|s| s.lock().unwrap().clone()).collect();
+                let report = ServerReport::live(&adm.report(), &statuses);
+                let mut rows: Vec<(RuntimeScheme, usize, f64)> = Vec::new();
+                for s in &statuses {
+                    rows.extend_from_slice(&s.scheme_rows);
+                }
+                let (queued_requests, _queued_tokens) = adm.queued();
+                let queued_batches: usize = q.depths().iter().sum();
+                record_sample(&obs, t_s, &report, queued_requests, queued_batches, &rows);
+            }))
+        } else {
+            None
+        };
         Ok(Cluster {
             tx,
             admission,
@@ -490,6 +531,9 @@ impl Cluster {
             router: Some(router),
             workers,
             finished: Vec::new(),
+            observatory,
+            provenance,
+            sampler,
         })
     }
 
@@ -709,6 +753,20 @@ impl Cluster {
         ServerReport::live(&self.admission.report(), &statuses)
     }
 
+    /// The cluster's time-series registry: populated by the sampler when
+    /// [`ClusterConfig::sample`] is enabled, otherwise empty (but always
+    /// present, so status surfaces have a stable shape).
+    pub fn observatory(&self) -> Arc<Observatory> {
+        self.observatory.clone()
+    }
+
+    /// The cluster's plan-provenance ledger: one record per installed
+    /// plan (boot + every replan), answering "why does expert (l,e) run
+    /// at its scheme right now?" via [`ProvenanceLedger::explain`].
+    pub fn provenance(&self) -> Arc<ProvenanceLedger> {
+        self.provenance.clone()
+    }
+
     /// Admission queue occupancy right now, as `(seqs, tokens)`. Reaches
     /// `(0, 0)` only once every admitted request has been cut into a batch
     /// *and* cancelled stragglers have been shed — the scenario replay
@@ -765,6 +823,11 @@ impl Cluster {
     /// merged here into one time-ordered [`TraceLog`] — the only place
     /// trace events from different threads ever meet.
     pub fn shutdown(mut self) -> ClusterReport {
+        // Stop sampling first: a final deterministic teardown tick is not
+        // worth racing the replica joins below.
+        if let Some(sampler) = self.sampler.take() {
+            sampler.stop();
+        }
         drop(self.tx);
         let router =
             self.router.take().unwrap().join().expect("router thread panicked");

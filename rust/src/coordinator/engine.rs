@@ -5,14 +5,16 @@
 //! closes the telemetry → drift → re-solve → hot-swap loop.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::thread;
 
 use anyhow::Result;
 
-use crate::alloc::Allocation;
+use crate::alloc::{Allocation, SensitivityTable};
 use crate::moe::block::MoeBlock;
 use crate::moe::router::Routing;
 use crate::moe::{route, ModelConfig, MoeLm, StepSeq};
+use crate::obs::provenance::{self, PlanContext, PlanRecord, PlanTrigger, ProvenanceLedger};
 use crate::obs::EventKind;
 use crate::runtime::dispatch::{self, ExpertInput};
 use crate::runtime::{
@@ -201,6 +203,9 @@ pub struct ServingEngine {
     block_pos: std::collections::HashMap<usize, usize>,
     /// `telemetry.observed_tokens` at the last replan (hysteresis anchor).
     tokens_at_last_replan: usize,
+    /// Shared plan-provenance ledger + this engine's replica id (fleet
+    /// observatory; `None` = no recording, zero cost).
+    provenance: Option<(Arc<ProvenanceLedger>, usize)>,
 }
 
 impl ServingEngine {
@@ -233,7 +238,56 @@ impl ServingEngine {
             },
             block_pos,
             tokens_at_last_replan: 0,
+            provenance: None,
         })
+    }
+
+    /// Attach the shared plan-provenance ledger; `replica` stamps this
+    /// engine's records. Until attached, nothing is recorded.
+    pub fn set_provenance(&mut self, ledger: Arc<ProvenanceLedger>, replica: usize) {
+        self.provenance = Some((ledger, replica));
+    }
+
+    /// Measured useful rows/s per runtime family from wave telemetry
+    /// (families that have not executed a wave yet are absent).
+    fn measured_scheme_speeds(&self) -> Vec<(RuntimeScheme, f64)> {
+        let stats = self.dispatch.metrics.scheme_wave_stats();
+        RuntimeScheme::ALL
+            .iter()
+            .filter_map(|s| {
+                stats
+                    .get(s.name())
+                    .filter(|st| st.busy_s > 0.0)
+                    .map(|st| (*s, st.useful_rows as f64 / st.busy_s))
+            })
+            .collect()
+    }
+
+    /// Record the boot plan into the provenance ledger so "why does expert
+    /// (l,e) run at its scheme?" is answerable before any replan fires.
+    /// No-op unless [`set_provenance`](Self::set_provenance) was called.
+    pub fn record_boot_provenance(&self, sens: Option<&SensitivityTable>, r: f64) {
+        let Some((ledger, replica)) = &self.provenance else {
+            return;
+        };
+        let speeds = self.measured_scheme_speeds();
+        let mut rec = provenance::build_record(
+            *replica,
+            PlanTrigger::Boot,
+            &PlanContext {
+                cfg: &self.lm.cfg,
+                alloc: &self.allocation,
+                prev: None,
+                freqs: self.dispatch.telemetry.live(),
+                sens,
+                speeds: &speeds,
+                r,
+                drift: 0.0,
+            },
+        );
+        rec.generation = self.generation();
+        rec.at_s = self.dispatch.metrics.elapsed();
+        ledger.record(rec);
     }
 
     pub fn platform(&self) -> String {
@@ -479,6 +533,26 @@ impl ServingEngine {
             .name("mxmoe-swap-staging".into())
             .spawn(move || job.run())
             .expect("spawn staging thread");
+        // Decompose the solve's score terms now, while the inputs it
+        // actually weighed (live freqs, sensitivity, wave speeds, blended
+        // r) are in hand; generation/time are stamped at install.
+        let provenance = self.provenance.as_ref().map(|(_, replica)| {
+            let speeds = self.measured_scheme_speeds();
+            provenance::build_record(
+                *replica,
+                PlanTrigger::Replan,
+                &PlanContext {
+                    cfg: &self.lm.cfg,
+                    alloc: &new_alloc,
+                    prev: Some(&self.allocation),
+                    freqs: &freqs,
+                    sens: Some(&replanner.sens),
+                    speeds: &speeds,
+                    r,
+                    drift,
+                },
+            )
+        });
         Ok(Some(ReplanStaging {
             handle,
             drift,
@@ -487,6 +561,7 @@ impl ServingEngine {
             bits_before: self.allocation.avg_weight_bits(&self.lm.cfg),
             bits_after: new_alloc.avg_weight_bits(&self.lm.cfg),
             allocation: new_alloc,
+            provenance,
         }))
     }
 
@@ -496,8 +571,16 @@ impl ServingEngine {
     /// quantizing — poll [`ReplanStaging::finished`] to avoid that. On
     /// error the old plan keeps serving untouched.
     pub fn finish_replan(&mut self, staging: ReplanStaging) -> Result<ReplanOutcome> {
-        let ReplanStaging { handle, drift, r, changes, bits_before, bits_after, allocation } =
-            staging;
+        let ReplanStaging {
+            handle,
+            drift,
+            r,
+            changes,
+            bits_before,
+            bits_after,
+            allocation,
+            provenance,
+        } = staging;
         let staged: StagedSwap = handle
             .join()
             .map_err(|_| anyhow::anyhow!("swap staging thread panicked"))??;
@@ -538,6 +621,11 @@ impl ServingEngine {
             0,
             EventKind::SwapInstall { swapped, generation },
         );
+        if let (Some((ledger, _)), Some(mut rec)) = (&self.provenance, provenance) {
+            rec.generation = generation;
+            rec.at_s = at_s;
+            ledger.record(rec);
+        }
         Ok(ReplanOutcome { drift, changes, swapped })
     }
 }
@@ -553,6 +641,9 @@ pub struct ReplanStaging {
     bits_before: f64,
     bits_after: f64,
     allocation: Allocation,
+    /// Decomposed per-slot score terms for the provenance ledger
+    /// (`None` when no ledger is attached).
+    provenance: Option<PlanRecord>,
 }
 
 impl ReplanStaging {

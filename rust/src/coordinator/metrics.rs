@@ -938,6 +938,7 @@ impl ClusterReport {
             kv_peak_tokens: self.replicas.iter().map(|r| r.kv_peak_tokens).max().unwrap_or(0),
             kv_used_tokens: self.replicas.iter().map(|r| r.kv_used_tokens).sum(),
             kv_shared_tokens: self.replicas.iter().map(|r| r.kv_shared_tokens).sum(),
+            kv_budget_tokens: self.replicas.iter().map(|r| r.kv_budget_tokens).sum(),
             kv_avg_bits: {
                 // Weight each replica's average by its materialized tokens;
                 // an idle cluster reports full-precision (32.0).
@@ -1069,6 +1070,8 @@ pub struct ServerReport {
     /// Tokens served from refcount-shared prefix pages, summed (each extra
     /// reference to a physical page counts its filled positions once).
     pub kv_shared_tokens: usize,
+    /// KV page-pool capacity, summed over replicas (0 = unpaged decode).
+    pub kv_budget_tokens: usize,
     /// Average bits per stored KV element, weighted by each replica's
     /// materialized tokens (32.0 when no pages were live).
     pub kv_avg_bits: f64,
@@ -1095,12 +1098,15 @@ pub struct ServerReport {
 
 impl ServerReport {
     /// A live mid-run snapshot for scrape-shaped consumers (the HTTP front
-    /// door's `GET /metrics`): admission counters from the front door plus
-    /// progress counters from the replica status board. Distribution
-    /// fields (latency percentiles, wave telemetry, per-class SLO stats)
-    /// are only assembled at shutdown and read zero here; `kv_avg_bits`
-    /// reports full precision, matching the idle-cluster convention.
+    /// door's `GET /metrics` and the observatory sampler): admission
+    /// counters from the front door plus progress counters, KV occupancy
+    /// and SLO accounting from the replica status board. Distribution
+    /// fields (latency percentiles, wave telemetry) are only assembled at
+    /// shutdown and read zero here; `kv_avg_bits` is used-token-weighted
+    /// across replicas and reports full precision when nothing is
+    /// resident, matching the idle-cluster convention.
     pub fn live(admission: &AdmissionReport, statuses: &[ReplicaStatus]) -> ServerReport {
+        let kv_used: usize = statuses.iter().map(|s| s.kv_used_tokens).sum();
         ServerReport {
             requests: statuses.iter().map(|s| s.requests_done).sum(),
             tokens: statuses.iter().map(|s| s.tokens_done).sum(),
@@ -1118,7 +1124,27 @@ impl ServerReport {
             generated_tokens: statuses.iter().map(|s| s.generated_tokens).sum(),
             generations: statuses.iter().map(|s| s.generations_done).sum(),
             kv_preemptions: statuses.iter().map(|s| s.kv_preemptions).sum(),
-            kv_avg_bits: 32.0,
+            kv_used_tokens: kv_used,
+            kv_shared_tokens: statuses.iter().map(|s| s.kv_shared_tokens).sum(),
+            kv_budget_tokens: statuses.iter().map(|s| s.kv_budget_tokens).sum(),
+            kv_avg_bits: if kv_used == 0 {
+                32.0
+            } else {
+                statuses
+                    .iter()
+                    .map(|s| s.kv_avg_bits * s.kv_used_tokens as f64)
+                    .sum::<f64>()
+                    / kv_used as f64
+            },
+            slo_by_class: {
+                let mut slo = [SloClassStats::default(); SLO_CLASSES];
+                for s in statuses {
+                    for (a, b) in slo.iter_mut().zip(&s.slo) {
+                        a.accumulate(b);
+                    }
+                }
+                slo
+            },
             qos_served: {
                 let mut q = [0usize; 3];
                 for s in statuses {

@@ -45,6 +45,7 @@ use crate::coordinator::{
     slo_class_name, Cluster, ClusterConfig, ClusterReport, OnlineConfig, ServeConfig, SLO_CLASSES,
 };
 use crate::moe::{ModelConfig, MoeLm};
+use crate::obs::{ObservatorySnapshot, SampleConfig};
 use crate::runtime::RuntimeScheme;
 use crate::ser::Json;
 use crate::serve::{Admission, AdmissionConfig, DecodePolicy, Priority, QosClass, ServeRequest};
@@ -260,6 +261,12 @@ pub struct ScenarioSpec {
     pub drift: Vec<DriftPhase>,
     pub replica_events: Vec<ReplicaEvent>,
     pub online: Option<OnlineKnobs>,
+    /// Observatory sampler interval (ms); presence turns the cluster's
+    /// time-series sampler on and adds a `timeseries` block to the bench
+    /// JSON. The sampler only reads cluster state, so it is allowed in
+    /// deterministic specs — the ledger must be bit-identical either way
+    /// (asserted in `tests/observatory.rs`).
+    pub sample_interval_ms: Option<u64>,
     pub admission: AdmissionKnobs,
     pub decode: DecodeKnobs,
     pub slo: SloBounds,
@@ -328,7 +335,7 @@ impl ScenarioSpec {
                 "schema", "name", "description", "seed", "ticks", "replicas", "deterministic",
                 "arrival", "sub_bursts", "mix", "prompt_tokens", "generate_fraction",
                 "max_new_tokens", "deadline_ms", "cancel_storms", "drift", "replica_events",
-                "online", "admission", "decode", "slo",
+                "online", "sample_interval_ms", "admission", "decode", "slo",
             ],
         )?;
         let schema = j.req_str("schema")?;
@@ -533,6 +540,7 @@ impl ScenarioSpec {
             drift,
             replica_events,
             online,
+            sample_interval_ms: opt_usize(j, "sample_interval_ms")?.map(|ms| ms as u64),
             admission,
             decode,
             slo,
@@ -651,6 +659,9 @@ impl ScenarioSpec {
                 ]),
             ));
         }
+        if let Some(ms) = self.sample_interval_ms {
+            pairs.push(("sample_interval_ms", Json::num(ms as f64)));
+        }
         pairs.push((
             "admission",
             Json::obj(vec![
@@ -727,6 +738,9 @@ impl ScenarioSpec {
         ensure!(self.ticks >= 1, "ticks must be >= 1");
         ensure!(self.replicas >= 1, "replicas must be >= 1");
         ensure!(self.sub_bursts >= 1, "sub_bursts must be >= 1");
+        if let Some(ms) = self.sample_interval_ms {
+            ensure!(ms >= 1, "sample_interval_ms must be >= 1");
+        }
         ensure!(self.decode.kv_page_size >= 1, "decode.kv_page_size must be >= 1");
         ensure!(self.decode.max_active_seqs >= 1, "decode.max_active_seqs must be >= 1");
         match self.arrival {
@@ -1112,6 +1126,10 @@ pub struct ScenarioOutcome {
     pub slo: SloBlock,
     pub verdict: Verdict,
     pub elapsed_s: f64,
+    /// Observatory snapshot taken just before shutdown; `Some` iff the
+    /// spec set `sample_interval_ms`. Serialised as the bench JSON's
+    /// `timeseries` block.
+    pub timeseries: Option<ObservatorySnapshot>,
 }
 
 fn scheme_weight_bits(s: RuntimeScheme) -> f64 {
@@ -1303,6 +1321,10 @@ pub fn run_scenario(spec: &ScenarioSpec, opts: &RunOptions) -> Result<ScenarioOu
             ..Default::default()
         },
         dispatch_threads: opts.dispatch_threads,
+        sample: match spec.sample_interval_ms {
+            Some(ms) => SampleConfig { enabled: true, interval_ms: ms, ..Default::default() },
+            None => SampleConfig::default(),
+        },
         decode: DecodePolicy {
             kv_budget_tokens: spec.decode.kv_budget_tokens,
             kv_page_size: spec.decode.kv_page_size,
@@ -1445,7 +1467,9 @@ pub fn run_scenario(spec: &ScenarioSpec, opts: &RunOptions) -> Result<ScenarioOu
         }
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
+    let obs = spec.sample_interval_ms.map(|_| cluster.observatory());
     let report = cluster.shutdown();
+    let timeseries = obs.map(|o| o.snapshot());
 
     let flat = report.flatten();
     let ledger = Ledger {
@@ -1475,12 +1499,44 @@ pub fn run_scenario(spec: &ScenarioSpec, opts: &RunOptions) -> Result<ScenarioOu
         slo,
         verdict,
         elapsed_s,
+        timeseries,
     })
 }
 
 // ---------------------------------------------------------------------------
 // BENCH emission + shared bench-file validation
 // ---------------------------------------------------------------------------
+
+/// `timeseries` block of a sampled run: every recorded series with its
+/// full `[t_s, v]` point list (ring-bounded, so a scenario's worth fits
+/// comfortably) plus the fixed-bucket histograms.
+fn timeseries_json(snap: &ObservatorySnapshot) -> Json {
+    let series = Json::arr(snap.series.iter().map(|s| {
+        Json::obj(vec![
+            ("name", Json::str(&s.name)),
+            ("kind", Json::str(s.kind.name())),
+            ("pushed", Json::num(s.pushed as f64)),
+            (
+                "points",
+                Json::arr(
+                    s.points
+                        .iter()
+                        .map(|p| Json::arr(vec![Json::num(p.t_s), Json::num(p.v)])),
+                ),
+            ),
+        ])
+    }));
+    let histograms = Json::arr(snap.histograms.iter().map(|h| {
+        Json::obj(vec![
+            ("name", Json::str(&h.name)),
+            ("bounds", Json::arr(h.bounds.iter().map(|b| Json::num(*b)))),
+            ("counts", Json::arr(h.counts.iter().map(|c| Json::num(*c as f64)))),
+            ("sum", Json::num(h.sum)),
+            ("count", Json::num(h.count as f64)),
+        ])
+    }));
+    Json::obj(vec![("series", series), ("histograms", histograms)])
+}
 
 impl ScenarioOutcome {
     /// Full `BENCH_scenario_<name>.json` body (the `mxmoe-bench-v1`
@@ -1496,7 +1552,7 @@ impl ScenarioOutcome {
                 ("p99_ms", c.p99_ms.map_or(Json::Null, Json::num)),
             ])
         }));
-        Json::obj(vec![
+        let mut pairs = vec![
             ("schema", Json::str(BENCH_SCHEMA)),
             ("bench", Json::str("scenario")),
             ("smoke", Json::Bool(self.smoke)),
@@ -1532,7 +1588,11 @@ impl ScenarioOutcome {
                     ("checks", Json::arr(self.verdict.checks.iter().map(Check::to_json))),
                 ]),
             ),
-        ])
+        ];
+        if let Some(ts) = &self.timeseries {
+            pairs.push(("timeseries", timeseries_json(ts)));
+        }
+        Json::obj(pairs)
     }
 
     /// Write `BENCH_scenario_<name>.json` into `dir`.
@@ -1665,6 +1725,7 @@ mod tests {
             drift: vec![],
             replica_events: vec![],
             online: None,
+            sample_interval_ms: None,
             admission: AdmissionKnobs::default(),
             decode: DecodeKnobs::default(),
             slo: SloBounds { max_shed_rate: Some(0.0), min_served: Some(25), ..Default::default() },
@@ -1692,6 +1753,7 @@ mod tests {
         spec.decode = DecodeKnobs { kv_budget_tokens: 64, kv_page_size: 16, max_active_seqs: 2 };
         spec.slo.min_kv_shed = Some(1);
         spec.slo.min_preemptions = Some(1);
+        spec.sample_interval_ms = Some(50);
         spec.validate().unwrap();
         let text = spec.to_json().pretty();
         let back = ScenarioSpec::parse(&text).unwrap();
@@ -1884,6 +1946,7 @@ mod tests {
                 checks: vec![Check::new("ledger_balanced", 25.0, 25.0, "==", true)],
             },
             elapsed_s: 0.1,
+            timeseries: Some(ObservatorySnapshot::default()),
         };
         let checked = validate_bench_json(&outcome.to_json().pretty()).unwrap();
         assert_eq!(checked.bench, "scenario");

@@ -19,6 +19,10 @@
 //!   bench-validate  schema-check every BENCH_*.json in a directory
 //!                   (shared mxmoe-bench-v1 envelope + scenario verdict
 //!                   blocks) and fail on any fail verdict
+//!   bench-compare   diff two mxmoe-bench-v1 files metric by metric with a
+//!                   regression threshold; warn-only unless --enforce true
+//!   status          fetch /v1/status from a running server and render the
+//!                   fleet snapshot + latest plan provenance
 //!   info            print model registry + environment
 
 use std::collections::HashMap;
@@ -43,6 +47,9 @@ fn main() {
 /// Minimal flag parser: `--key value` pairs after the subcommand.
 struct Args {
     cmd: String,
+    /// Bare positional operands; only `bench-compare` takes any
+    /// (`<old.json> <new.json>`), every other command is flags-only.
+    pos: Vec<String>,
     flags: HashMap<String, String>,
 }
 
@@ -58,6 +65,13 @@ impl Args {
                 cmd = format!("{cmd} {sub}");
             }
         }
+        let mut pos = Vec::new();
+        if cmd == "bench-compare" {
+            while let Some(a) = it.peek().filter(|a| !a.starts_with("--")).cloned() {
+                it.next();
+                pos.push(a);
+            }
+        }
         let mut flags = HashMap::new();
         while let Some(k) = it.next() {
             let key = k
@@ -67,7 +81,7 @@ impl Args {
             let v = it.next().with_context(|| format!("--{key} needs a value"))?;
             flags.insert(key, v);
         }
-        Ok(Args { cmd, flags })
+        Ok(Args { cmd, pos, flags })
     }
 
     fn get(&self, key: &str, default: &str) -> String {
@@ -106,6 +120,8 @@ fn run() -> Result<()> {
         "scenario validate" => cmd_scenario_validate(&args),
         "scenario" => bail!("scenario needs a subaction: run | list | validate"),
         "bench-validate" => cmd_bench_validate(&args),
+        "bench-compare" => cmd_bench_compare(&args),
+        "status" => cmd_status(&args),
         "info" | "--help" | "-h" => {
             println!("mxmoe {} — MxMoE reproduction (see README.md)", mxmoe::version());
             println!("\nmodels:");
@@ -124,7 +140,7 @@ fn run() -> Result<()> {
             println!(
                 "\ncommands: gen-corpus | gen-mini-model | allocate | serve | \
                  trace-dump | trace-validate | scenario run|list|validate | \
-                 bench-validate | info"
+                 bench-validate | bench-compare | status | info"
             );
             Ok(())
         }
@@ -534,6 +550,281 @@ fn cmd_bench_validate(args: &Args) -> Result<()> {
         bail!("{} fail verdict(s): {}", fail_verdicts.len(), fail_verdicts.join(", "));
     }
     println!("{} bench file(s) valid", paths.len());
+    Ok(())
+}
+
+/// Numeric leaves of a bench JSON as dotted paths (`slo.per_class[0]
+/// .p99_ms`). Subtrees that are not point-comparable metrics — the
+/// `timeseries` block, per-check verdict rows, the seed — are skipped,
+/// as are non-finite values (`Json::num` serialises those as null
+/// anyway).
+fn flatten_metrics(j: &mxmoe::ser::Json, prefix: &str, out: &mut Vec<(String, f64)>) {
+    use mxmoe::ser::Json;
+
+    match j {
+        Json::Num(x) => {
+            if x.is_finite() {
+                out.push((prefix.to_string(), *x));
+            }
+        }
+        Json::Obj(m) => {
+            for (k, v) in m {
+                if matches!(k.as_str(), "schema" | "seed" | "timeseries" | "checks") {
+                    continue;
+                }
+                let path = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                flatten_metrics(v, &path, out);
+            }
+        }
+        Json::Arr(v) => {
+            for (i, item) in v.iter().enumerate() {
+                flatten_metrics(item, &format!("{prefix}[{i}]"), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Direction a metric regresses in, by name: `Some(true)` = higher is
+/// worse (latency-like), `Some(false)` = lower is worse
+/// (throughput-like), `None` = no known direction (reported, never a
+/// regression). Worse-if-up is checked first so e.g. `shed_rate` reads
+/// as a shed metric despite the `rate` suffix.
+fn higher_is_worse(path: &str) -> Option<bool> {
+    const WORSE_UP: &[&str] = &[
+        "p50", "p99", "latency", "elapsed", "overhead", "wait", "miss", "shed", "rejected",
+        "failed", "cancelled", "preempt", "dropped", "kills",
+    ];
+    const WORSE_DOWN: &[&str] =
+        &["tps", "throughput", "rate", "hit", "served", "admitted", "responses", "tokens"];
+    let p = path.to_ascii_lowercase();
+    if WORSE_UP.iter().any(|w| p.contains(w)) {
+        return Some(true);
+    }
+    if WORSE_DOWN.iter().any(|w| p.contains(w)) {
+        return Some(false);
+    }
+    None
+}
+
+/// `bench-compare <old.json> <new.json>`: metric-by-metric diff of two
+/// `mxmoe-bench-v1` files. Numeric leaves are flattened to dotted paths
+/// and compared wherever both files carry them; a metric whose name
+/// implies a direction moving the wrong way by more than `--threshold`
+/// percent is a regression. Warn-only by default (CI runs it against the
+/// previous run's artifacts on a best-effort basis); `--enforce true`
+/// exits non-zero on any regression.
+fn cmd_bench_compare(args: &Args) -> Result<()> {
+    use std::collections::HashSet;
+
+    use mxmoe::harness::scenario::BENCH_SCHEMA;
+    use mxmoe::ser::Json;
+
+    let [old_path, new_path] = args.pos.as_slice() else {
+        bail!("bench-compare needs exactly two files: <old.json> <new.json>");
+    };
+    let threshold = args.get_f64("threshold", 10.0)?;
+    let enforce = matches!(args.get("enforce", "false").as_str(), "true" | "1");
+    let load = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let schema = j.get("schema").and_then(Json::as_str).unwrap_or("<missing>");
+        if schema != BENCH_SCHEMA {
+            bail!("{path}: schema '{schema}' is not '{BENCH_SCHEMA}'");
+        }
+        Ok(j)
+    };
+    let old = load(old_path)?;
+    let new = load(new_path)?;
+    let kind = |j: &Json| j.get("bench").and_then(Json::as_str).unwrap_or("?").to_string();
+    let (ok, nk) = (kind(&old), kind(&new));
+    if ok != nk {
+        bail!("cannot compare bench '{ok}' against bench '{nk}'");
+    }
+
+    let mut old_m = Vec::new();
+    flatten_metrics(&old, "", &mut old_m);
+    let mut new_m = Vec::new();
+    flatten_metrics(&new, "", &mut new_m);
+    let old_map: HashMap<&str, f64> = old_m.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let new_keys: HashSet<&str> = new_m.iter().map(|(k, _)| k.as_str()).collect();
+
+    println!("bench '{ok}': {old_path} -> {new_path} (threshold {threshold}%)");
+    let mut regressions = Vec::new();
+    let mut compared = 0usize;
+    for (path, n) in &new_m {
+        let Some(&o) = old_map.get(path.as_str()) else { continue };
+        compared += 1;
+        let delta_pct = if o == *n {
+            0.0
+        } else if o == 0.0 {
+            f64::INFINITY * (*n - o).signum()
+        } else {
+            100.0 * (*n - o) / o.abs()
+        };
+        let verdict = match higher_is_worse(path) {
+            Some(true) if delta_pct > threshold => "REGRESSION",
+            Some(false) if delta_pct < -threshold => "REGRESSION",
+            Some(_) if delta_pct.abs() > threshold => "improved",
+            _ => "ok",
+        };
+        if verdict == "REGRESSION" {
+            regressions.push(path.clone());
+        }
+        println!("  {verdict:10} {path:44} {o} -> {n} ({delta_pct:+.1}%)");
+    }
+    let added = new_m.len() - compared;
+    let removed = old_m.iter().filter(|(k, _)| !new_keys.contains(k.as_str())).count();
+    println!(
+        "compared {compared} metric(s), {added} new, {removed} removed: {} regression(s)",
+        regressions.len()
+    );
+    if regressions.is_empty() {
+        println!("verdict: pass");
+    } else if enforce {
+        bail!("{} metric regression(s): {}", regressions.len(), regressions.join(", "));
+    } else {
+        println!("verdict: warn (not enforced — pass `--enforce true` to fail on regressions)");
+    }
+    Ok(())
+}
+
+/// `status`: fetch `/v1/status` from a running mxmoe HTTP server and
+/// render the fleet snapshot — admission/decode/KV counters, per-class
+/// SLO, the sampled time series' latest values, and the latest plan's
+/// provenance (which experts changed scheme and why).
+fn cmd_status(args: &Args) -> Result<()> {
+    use std::io::{Read as _, Write as _};
+    use std::net::TcpStream;
+
+    use mxmoe::ser::Json;
+
+    let url = args.get("url", "127.0.0.1:8080");
+    let addr = url.strip_prefix("http://").unwrap_or(&url).trim_end_matches('/').to_string();
+    let mut stream =
+        TcpStream::connect(&addr).with_context(|| format!("connect to {addr} (is it serving?)"))?;
+    write!(stream, "GET /v1/status HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n\r\n")?;
+    let mut reply = String::new();
+    stream.read_to_string(&mut reply).context("read /v1/status reply")?;
+    let status = reply.split(' ').nth(1).unwrap_or("<none>");
+    if status != "200" {
+        bail!("GET /v1/status returned HTTP {status}");
+    }
+    let body = reply.split_once("\r\n\r\n").map_or("", |(_, b)| b);
+    let j = Json::parse(body).map_err(|e| anyhow::anyhow!("status JSON: {e}"))?;
+    let version = j.get("version").and_then(Json::as_str).unwrap_or("<missing>");
+    if version != "mxmoe-status-v1" {
+        bail!("unexpected status version '{version}' (want mxmoe-status-v1)");
+    }
+
+    let report = j.get("report").context("status JSON has no 'report' object")?;
+    let num = |k: &str| report.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    println!("{addr} — generation {:.0}, {:.0} replica(s)", num("generation"), num("replicas"));
+    println!(
+        "  requests {:.0}  admitted {:.0}  cancelled {:.0}  failed {:.0}  generations {:.0}",
+        num("requests"),
+        num("admitted"),
+        num("cancelled"),
+        num("failed"),
+        num("generations")
+    );
+    println!(
+        "  rejected: queue_full {:.0}  deadline {:.0}  quota {:.0}  kv {:.0}",
+        num("rejected_queue_full"),
+        num("rejected_deadline"),
+        num("rejected_quota"),
+        num("rejected_kv")
+    );
+    println!(
+        "  decode {:.1} tok/s  throughput {:.1} tok/s  replans {:.0}  swaps {:.0}",
+        num("decode_tps"),
+        num("throughput_tps"),
+        num("replans"),
+        num("swaps")
+    );
+    println!(
+        "  kv {:.0}/{:.0} tokens ({:.0} shared) @ {:.1} bits  preemptions {:.0}",
+        num("kv_used_tokens"),
+        num("kv_budget_tokens"),
+        num("kv_shared_tokens"),
+        num("kv_avg_bits"),
+        num("kv_preemptions")
+    );
+    for c in report.get("slo").and_then(Json::as_arr).unwrap_or(&[]) {
+        let served = c.get("served").and_then(Json::as_f64).unwrap_or(0.0);
+        if served == 0.0 {
+            continue;
+        }
+        println!(
+            "  slo[{:11}] served {:4.0}  hit-rate {:.2}",
+            c.get("class").and_then(Json::as_str).unwrap_or("?"),
+            served,
+            c.get("hit_rate").and_then(Json::as_f64).unwrap_or(1.0)
+        );
+    }
+
+    let series = j.get("series").and_then(Json::as_arr).unwrap_or(&[]);
+    if series.is_empty() {
+        println!("series: none (sampler off — enable the cluster sample config)");
+    } else {
+        println!("series ({}):", series.len());
+        for s in series {
+            let name = s.get("name").and_then(Json::as_str).unwrap_or("?");
+            let points = s.get("points").and_then(Json::as_arr).unwrap_or(&[]);
+            let last = points
+                .last()
+                .and_then(Json::as_arr)
+                .and_then(|p| p.get(1))
+                .and_then(Json::as_f64);
+            match last {
+                Some(v) => println!("  {name:28} last {v:10.2}  ({} point(s))", points.len()),
+                None => println!("  {name:28} (no samples)"),
+            }
+        }
+    }
+
+    let plans = j.get("plans").and_then(Json::as_arr).unwrap_or(&[]);
+    match plans.last() {
+        None => println!("plans: none recorded"),
+        Some(p) => {
+            let pn = |k: &str| p.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            println!(
+                "latest plan: replica {:.0} generation {:.0} trigger {} drift {:.3} r {:.2}  \
+                 {:.2} -> {:.2} bits  {:.0}/{:.0} slot(s) changed",
+                pn("replica"),
+                pn("generation"),
+                p.get("trigger").and_then(Json::as_str).unwrap_or("?"),
+                pn("drift"),
+                pn("r"),
+                pn("bits_before"),
+                pn("bits_after"),
+                pn("changed"),
+                pn("slots")
+            );
+            let decisions = p.get("decisions").and_then(Json::as_arr).unwrap_or(&[]);
+            for d in decisions {
+                if !d.get("changed").and_then(Json::as_bool).unwrap_or(false) {
+                    continue;
+                }
+                let dn = |k: &str| d.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                println!(
+                    "  layer {:.0} expert {:.0}{}: {} -> {}  (sens {:.4}, freq {:.4}, {:.1} bits)",
+                    dn("layer"),
+                    dn("expert"),
+                    if d.get("shared").and_then(Json::as_bool).unwrap_or(false) {
+                        " (shared)"
+                    } else {
+                        ""
+                    },
+                    d.get("prev").and_then(Json::as_str).unwrap_or("—"),
+                    d.get("scheme").and_then(Json::as_str).unwrap_or("?"),
+                    dn("sensitivity"),
+                    dn("freq"),
+                    dn("bits")
+                );
+            }
+        }
+    }
     Ok(())
 }
 

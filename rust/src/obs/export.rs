@@ -1,15 +1,19 @@
 //! Trace export: Chrome trace-event JSON (Perfetto-loadable), JSONL
-//! structured events, a Prometheus-style counter snapshot, and the
-//! validator CI runs over emitted traces (DESIGN.md §Observability).
+//! structured events, a Prometheus text snapshot (with a conformance
+//! linter), the `/v1/status` JSON and `/debug` HTML renderers of the
+//! fleet observatory, and the validator CI runs over emitted traces
+//! (DESIGN.md §Observability, §Fleet-Observatory).
 
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::metrics::ServerReport;
-use crate::ser::Json;
+use crate::coordinator::metrics::{slo_class_name, ServerReport};
+use crate::ser::{Json, JsonWriter};
 
+use super::provenance::PlanRecord;
 use super::span::{EventKind, Track, TraceEvent};
+use super::timeseries::{ObservatorySnapshot, Point};
 
 /// The merged, time-sorted event log of one serving run: every collector's
 /// ring drained into one timeline at shutdown.
@@ -369,9 +373,34 @@ pub fn validate_chrome_trace(text: &str) -> Result<TraceCheck> {
     Ok(check)
 }
 
+/// Escape a Prometheus label value: backslash, double-quote and newline
+/// are the three characters the text exposition format requires escaping
+/// (everything else passes through verbatim).
+pub fn prom_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
 /// Prometheus-style text snapshot of the final server counters — the
 /// third export, for scrape-shaped consumers.
 pub fn prometheus_text(r: &ServerReport) -> String {
+    prometheus_text_with(r, None)
+}
+
+/// [`prometheus_text`] plus the observatory's sampled histograms rendered
+/// as native Prometheus histogram families (cumulative `_bucket{le=...}`
+/// samples, `_sum`, `_count`). Every family carries `# HELP`/`# TYPE`,
+/// label values are escaped, and non-finite gauges are suppressed rather
+/// than emitted as `NaN` — [`lint_prometheus`] holds this to account.
+pub fn prometheus_text_with(r: &ServerReport, obs: Option<&ObservatorySnapshot>) -> String {
     let mut s = String::new();
     let mut counter = |name: &str, help: &str, v: f64| {
         s.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
@@ -408,13 +437,14 @@ pub fn prometheus_text(r: &ServerReport) -> String {
     counter("mxmoe_http_bytes_out_total", "HTTP response bytes written", r.http.bytes_out as f64);
     s.push_str("# HELP mxmoe_rejected_total Requests rejected at admission\n");
     s.push_str("# TYPE mxmoe_rejected_total counter\n");
-    s.push_str(&format!(
-        "mxmoe_rejected_total{{reason=\"queue_full\"}} {}\n",
-        r.rejected_queue_full
-    ));
-    s.push_str(&format!("mxmoe_rejected_total{{reason=\"deadline\"}} {}\n", r.rejected_deadline));
-    s.push_str(&format!("mxmoe_rejected_total{{reason=\"quota\"}} {}\n", r.rejected_quota));
-    s.push_str(&format!("mxmoe_rejected_total{{reason=\"kv_exhausted\"}} {}\n", r.rejected_kv));
+    for (reason, v) in [
+        ("queue_full", r.rejected_queue_full),
+        ("deadline", r.rejected_deadline),
+        ("quota", r.rejected_quota),
+        ("kv_exhausted", r.rejected_kv),
+    ] {
+        s.push_str(&format!("mxmoe_rejected_total{{reason=\"{}\"}} {v}\n", prom_label(reason)));
+    }
     s.push_str(
         "# HELP mxmoe_kv_preemptions_total Generations preempted for KV pages and replayed\n",
     );
@@ -423,9 +453,14 @@ pub fn prometheus_text(r: &ServerReport) -> String {
     s.push_str("# HELP mxmoe_qos_served_total Requests served per QoS class\n");
     s.push_str("# TYPE mxmoe_qos_served_total counter\n");
     for (name, v) in ["interactive", "standard", "batch"].iter().zip(r.qos_served) {
-        s.push_str(&format!("mxmoe_qos_served_total{{class=\"{name}\"}} {v}\n"));
+        s.push_str(&format!("mxmoe_qos_served_total{{class=\"{}\"}} {v}\n", prom_label(name)));
     }
+    // Non-finite gauges are suppressed (family and sample) instead of
+    // being exposed as `NaN`, which scrapers reject.
     let mut gauge = |name: &str, help: &str, v: f64| {
+        if !v.is_finite() {
+            return;
+        }
         s.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
     };
     gauge("mxmoe_throughput_tps", "Tokens per second", r.throughput_tps);
@@ -449,6 +484,11 @@ pub fn prometheus_text(r: &ServerReport) -> String {
         "Tokens served from shared prefix pages",
         r.kv_shared_tokens as f64,
     );
+    gauge(
+        "mxmoe_kv_budget_tokens",
+        "KV page-pool capacity in tokens",
+        r.kv_budget_tokens as f64,
+    );
     gauge("mxmoe_kv_avg_bits", "Average bits per stored KV element", r.kv_avg_bits);
     gauge(
         "mxmoe_http_peak_connections",
@@ -458,8 +498,602 @@ pub fn prometheus_text(r: &ServerReport) -> String {
     s.push_str("# HELP mxmoe_queue_wait_p99_seconds Queue wait p99 per priority\n");
     s.push_str("# TYPE mxmoe_queue_wait_p99_seconds gauge\n");
     for (name, v) in ["low", "normal", "high"].iter().zip(r.queue_wait_p99_by_priority) {
-        s.push_str(&format!("mxmoe_queue_wait_p99_seconds{{priority=\"{name}\"}} {v}\n"));
+        if v.is_finite() {
+            s.push_str(&format!(
+                "mxmoe_queue_wait_p99_seconds{{priority=\"{}\"}} {v}\n",
+                prom_label(name)
+            ));
+        }
     }
+    if let Some(snap) = obs {
+        for h in &snap.histograms {
+            let name = format!("mxmoe_{}", h.name);
+            s.push_str(&format!(
+                "# HELP {name} Sampled distribution recorded by the observatory\n"
+            ));
+            s.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (b, c) in h.bounds.iter().zip(&h.counts) {
+                cum += c;
+                s.push_str(&format!("{name}_bucket{{le=\"{b}\"}} {cum}\n"));
+            }
+            s.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            if h.sum.is_finite() {
+                s.push_str(&format!("{name}_sum {}\n", h.sum));
+            } else {
+                s.push_str(&format!("{name}_sum 0\n"));
+            }
+            s.push_str(&format!("{name}_count {}\n", h.count));
+        }
+    }
+    s
+}
+
+/// Lint a Prometheus text exposition the way a strict scraper would:
+/// every sample's family must carry `# HELP` and `# TYPE` (HELP first),
+/// counter names must end in `_total`, sample values must parse and must
+/// not be `NaN`, label sets must follow the `key="value"` grammar with
+/// only `\\`, `\"` and `\n` escapes, and histogram families must expose
+/// monotone cumulative buckets ending in `le="+Inf"` plus `_sum`/`_count`.
+pub fn lint_prometheus(text: &str) -> Result<()> {
+    use std::collections::{BTreeMap, BTreeSet};
+    #[derive(Default)]
+    struct HistState {
+        inf: bool,
+        sum: bool,
+        count: bool,
+        last_cum: f64,
+    }
+    let mut helps: BTreeSet<String> = BTreeSet::new();
+    let mut types: BTreeMap<String, &'static str> = BTreeMap::new();
+    let mut hists: BTreeMap<String, HistState> = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        let n = i + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest
+                .split_whitespace()
+                .next()
+                .with_context(|| format!("line {n}: HELP without a metric name"))?;
+            if rest.len() <= name.len() + 1 {
+                bail!("line {n}: HELP without help text for '{name}'");
+            }
+            if !helps.insert(name.to_string()) {
+                bail!("line {n}: duplicate HELP for '{name}'");
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name =
+                it.next().with_context(|| format!("line {n}: TYPE without a metric name"))?;
+            let ty = match it.next() {
+                Some("counter") => "counter",
+                Some("gauge") => "gauge",
+                Some("histogram") => {
+                    hists.entry(name.to_string()).or_default();
+                    "histogram"
+                }
+                other => bail!("line {n}: unsupported TYPE {other:?} for '{name}'"),
+            };
+            if !helps.contains(name) {
+                bail!("line {n}: TYPE for '{name}' precedes its HELP");
+            }
+            if types.insert(name.to_string(), ty).is_some() {
+                bail!("line {n}: duplicate TYPE for '{name}'");
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // free-form comments are legal
+        }
+        let (series, value) =
+            line.rsplit_once(' ').with_context(|| format!("line {n}: sample without a value"))?;
+        let v: f64 =
+            value.parse().with_context(|| format!("line {n}: unparseable value '{value}'"))?;
+        if v.is_nan() {
+            bail!("line {n}: NaN sample value for '{series}'");
+        }
+        let (name, labels) = match series.split_once('{') {
+            Some((base, rest)) => {
+                let body = rest
+                    .strip_suffix('}')
+                    .with_context(|| format!("line {n}: unterminated label set"))?;
+                (base, Some(body))
+            }
+            None => (series, None),
+        };
+        if !valid_metric_name(name) {
+            bail!("line {n}: invalid metric name '{name}'");
+        }
+        if let Some(body) = labels {
+            lint_labels(body, n)?;
+        }
+        let hist_part = ["_bucket", "_sum", "_count"].iter().find_map(|suf| {
+            name.strip_suffix(suf)
+                .filter(|base| types.get(*base).copied() == Some("histogram"))
+                .map(|base| (base, *suf))
+        });
+        match hist_part {
+            Some((base, "_bucket")) => {
+                let le = labels
+                    .and_then(|b| b.strip_prefix("le=\""))
+                    .and_then(|b| b.strip_suffix('"'))
+                    .with_context(|| format!("line {n}: histogram bucket without an le label"))?;
+                let st = hists.get_mut(base).unwrap();
+                if v + 1e-9 < st.last_cum {
+                    bail!("line {n}: cumulative bucket counts regress for '{base}'");
+                }
+                st.last_cum = v;
+                if le == "+Inf" {
+                    st.inf = true;
+                } else {
+                    le.parse::<f64>()
+                        .with_context(|| format!("line {n}: unparseable le bound '{le}'"))?;
+                }
+            }
+            Some((base, "_sum")) => hists.get_mut(base).unwrap().sum = true,
+            Some((base, _)) => hists.get_mut(base).unwrap().count = true,
+            None => {
+                let ty = types
+                    .get(name)
+                    .with_context(|| format!("line {n}: sample '{name}' has no # TYPE"))?;
+                if !helps.contains(name) {
+                    bail!("line {n}: sample '{name}' has no # HELP");
+                }
+                if *ty == "counter" && !name.ends_with("_total") {
+                    bail!("line {n}: counter '{name}' does not end in _total");
+                }
+                if *ty == "histogram" {
+                    bail!("line {n}: bare sample for histogram family '{name}'");
+                }
+            }
+        }
+    }
+    for (name, st) in &hists {
+        if !st.inf {
+            bail!("histogram '{name}' lacks an le=\"+Inf\" bucket");
+        }
+        if !st.sum || !st.count {
+            bail!("histogram '{name}' lacks _sum/_count samples");
+        }
+    }
+    Ok(())
+}
+
+fn valid_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Check one `key="value",...` label-set body against the exposition
+/// grammar (shared by [`lint_prometheus`]).
+fn lint_labels(body: &str, n: usize) -> Result<()> {
+    let mut rest = body;
+    loop {
+        let eq = rest.find('=').with_context(|| format!("line {n}: label without '='"))?;
+        let key = &rest[..eq];
+        if !valid_metric_name(key) {
+            bail!("line {n}: invalid label name '{key}'");
+        }
+        rest = &rest[eq + 1..];
+        if !rest.starts_with('"') {
+            bail!("line {n}: label value for '{key}' is not quoted");
+        }
+        let mut end = None;
+        let mut escaped = false;
+        for (i, c) in rest.char_indices().skip(1) {
+            if escaped {
+                if !matches!(c, '\\' | '"' | 'n') {
+                    bail!("line {n}: unsupported escape '\\{c}' in label '{key}'");
+                }
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                end = Some(i);
+                break;
+            }
+        }
+        let end = end.with_context(|| format!("line {n}: unterminated value for '{key}'"))?;
+        rest = &rest[end + 1..];
+        if rest.is_empty() {
+            return Ok(());
+        }
+        rest = rest
+            .strip_prefix(',')
+            .with_context(|| format!("line {n}: expected ',' between labels"))?;
+    }
+}
+
+/// The `GET /v1/status` document: a versioned JSON snapshot of the live
+/// server report, every recorded time series (as `[t_s, value]` pairs),
+/// the sampled histograms, and the plan-provenance ledger. Only the
+/// newest plan carries its full per-slot decision list; older entries
+/// are summarized (slots/changed counts) to bound the payload.
+pub fn status_json(
+    r: &ServerReport,
+    obs: Option<&ObservatorySnapshot>,
+    plans: &[PlanRecord],
+) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.field_str("version", "mxmoe-status-v1");
+    w.key("report");
+    w.begin_obj();
+    w.field_u64("requests", r.requests as u64);
+    w.field_u64("tokens", r.tokens as u64);
+    w.field_u64("admitted", r.admitted as u64);
+    w.field_u64("rejected_queue_full", r.rejected_queue_full as u64);
+    w.field_u64("rejected_deadline", r.rejected_deadline as u64);
+    w.field_u64("rejected_quota", r.rejected_quota as u64);
+    w.field_u64("rejected_kv", r.rejected_kv as u64);
+    w.field_u64("cancelled", r.cancelled as u64);
+    w.field_u64("failed", r.failed as u64);
+    w.field_u64("generated_tokens", r.generated_tokens as u64);
+    w.field_u64("generations", r.generations as u64);
+    w.field_u64("replans", r.replans as u64);
+    w.field_u64("swaps", r.swaps as u64);
+    w.field_u64("kv_preemptions", r.kv_preemptions as u64);
+    w.field_u64("generation", r.generation);
+    w.field_u64("replicas", r.replicas as u64);
+    w.field_f64("throughput_tps", r.throughput_tps);
+    w.field_f64("decode_tps", r.decode_tps);
+    w.field_u64("kv_used_tokens", r.kv_used_tokens as u64);
+    w.field_u64("kv_shared_tokens", r.kv_shared_tokens as u64);
+    w.field_u64("kv_budget_tokens", r.kv_budget_tokens as u64);
+    w.field_f64("kv_avg_bits", r.kv_avg_bits);
+    w.key("qos_served");
+    w.begin_arr();
+    for v in r.qos_served {
+        w.u64_val(v as u64);
+    }
+    w.end_arr();
+    w.key("slo");
+    w.begin_arr();
+    for (i, c) in r.slo_by_class.iter().enumerate() {
+        w.begin_obj();
+        w.field_str("class", slo_class_name(i));
+        w.field_u64("served", c.served as u64);
+        w.field_u64("deadline_hit", c.deadline_hit as u64);
+        w.field_u64("deadline_miss", c.deadline_miss as u64);
+        w.field_f64("hit_rate", c.hit_rate());
+        w.end_obj();
+    }
+    w.end_arr();
+    w.end_obj();
+    w.key("series");
+    w.begin_arr();
+    if let Some(snap) = obs {
+        for sr in &snap.series {
+            w.begin_obj();
+            w.field_str("name", &sr.name);
+            w.field_str("kind", sr.kind.name());
+            w.field_u64("pushed", sr.pushed);
+            w.field_u64("total", sr.total);
+            w.key("points");
+            w.begin_arr();
+            for p in &sr.points {
+                w.begin_arr();
+                w.f64_val(p.t_s);
+                w.f64_val(p.v);
+                w.end_arr();
+            }
+            w.end_arr();
+            w.end_obj();
+        }
+    }
+    w.end_arr();
+    w.key("histograms");
+    w.begin_arr();
+    if let Some(snap) = obs {
+        for h in &snap.histograms {
+            w.begin_obj();
+            w.field_str("name", &h.name);
+            w.key("bounds");
+            w.begin_arr();
+            for b in &h.bounds {
+                w.f64_val(*b);
+            }
+            w.end_arr();
+            w.key("counts");
+            w.begin_arr();
+            for c in &h.counts {
+                w.u64_val(*c);
+            }
+            w.end_arr();
+            w.field_f64("sum", h.sum);
+            w.field_u64("count", h.count);
+            w.end_obj();
+        }
+    }
+    w.end_arr();
+    w.key("plans");
+    w.begin_arr();
+    for (i, p) in plans.iter().enumerate() {
+        w.begin_obj();
+        w.field_u64("replica", p.replica as u64);
+        w.field_u64("generation", p.generation);
+        w.field_f64("at_s", p.at_s);
+        w.field_str("trigger", p.trigger.name());
+        w.field_f64("drift", p.drift);
+        w.field_f64("r", p.r);
+        w.field_f64("bits_before", p.bits_before);
+        w.field_f64("bits_after", p.bits_after);
+        w.field_u64("slots", p.decisions.len() as u64);
+        w.field_u64("changed", p.changed() as u64);
+        if i + 1 == plans.len() {
+            w.key("decisions");
+            w.begin_arr();
+            for d in &p.decisions {
+                w.begin_obj();
+                w.field_u64("layer", d.layer as u64);
+                w.field_u64("expert", d.expert as u64);
+                w.field_bool("shared", d.shared);
+                w.field_str("scheme", d.scheme.name());
+                w.field_str("quant", &d.quant);
+                w.key("prev");
+                match d.prev {
+                    Some(prev) => w.str_val(prev.name()),
+                    None => w.null_val(),
+                }
+                w.field_bool("changed", d.changed);
+                w.field_f64("sensitivity", d.sensitivity);
+                w.field_f64("freq", d.freq);
+                w.field_f64("bits", d.bits);
+                w.key("speed_rows_per_s");
+                match d.speed_rows_per_s {
+                    Some(v) => w.f64_val(v),
+                    None => w.null_val(),
+                }
+                w.end_obj();
+            }
+            w.end_arr();
+        }
+        w.end_obj();
+    }
+    w.end_arr();
+    w.end_obj();
+    w.finish().to_string()
+}
+
+/// Escape text for HTML element/attribute context.
+fn html_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '&' => out.push_str("&amp;"),
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            '"' => out.push_str("&quot;"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// An inline SVG sparkline over a series' points — no external assets,
+/// no scripts; the dashboard stays a single self-contained document.
+fn sparkline_svg(points: &[Point]) -> String {
+    const W: f64 = 140.0;
+    const H: f64 = 28.0;
+    if points.is_empty() {
+        return "<span class=\"dim\">no samples</span>".to_string();
+    }
+    if points.len() == 1 {
+        return format!(
+            "<svg width=\"{W}\" height=\"{H}\"><circle cx=\"3\" cy=\"{:.1}\" r=\"1.5\" \
+             fill=\"#7ee0a3\"/></svg>",
+            H / 2.0
+        );
+    }
+    let t0 = points[0].t_s;
+    let dt = (points[points.len() - 1].t_s - t0).max(1e-9);
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for p in points {
+        lo = lo.min(p.v);
+        hi = hi.max(p.v);
+    }
+    if !(hi - lo).is_finite() || hi - lo < 1e-12 {
+        lo -= 0.5;
+        hi += 0.5;
+    }
+    let mut path = String::new();
+    for p in points {
+        let x = 2.0 + (p.t_s - t0) / dt * (W - 4.0);
+        let y = H - 2.0 - (p.v - lo) / (hi - lo) * (H - 4.0);
+        if !path.is_empty() {
+            path.push(' ');
+        }
+        path.push_str(&format!("{x:.1},{y:.1}"));
+    }
+    format!(
+        "<svg width=\"{W}\" height=\"{H}\"><polyline fill=\"none\" stroke=\"#7ee0a3\" \
+         stroke-width=\"1.2\" points=\"{path}\"/></svg>"
+    )
+}
+
+/// Inline SVG bucket bars for a sampled histogram.
+fn bars_svg(counts: &[u64]) -> String {
+    const H: f64 = 28.0;
+    const BW: f64 = 7.0;
+    let max = counts.iter().copied().max().unwrap_or(0).max(1) as f64;
+    let w = BW * counts.len() as f64;
+    let mut bars = String::new();
+    for (i, c) in counts.iter().enumerate() {
+        let h = (*c as f64 / max) * (H - 2.0);
+        bars.push_str(&format!(
+            "<rect x=\"{:.1}\" y=\"{:.1}\" width=\"{:.1}\" height=\"{h:.1}\" fill=\"#8ab4f8\"/>",
+            i as f64 * BW,
+            H - h,
+            BW - 1.0
+        ));
+    }
+    format!("<svg width=\"{w}\" height=\"{H}\">{bars}</svg>")
+}
+
+/// How many per-slot decision rows the `/debug` dashboard renders for the
+/// latest plan before deferring the rest to `/v1/status`.
+const DEBUG_MAX_DECISION_ROWS: usize = 64;
+
+/// The `GET /debug` dashboard: one self-contained HTML document — inline
+/// CSS, inline SVG sparklines, a 2-second meta refresh, and zero external
+/// asset references — rendering the live report, every recorded time
+/// series, sampled histograms, and the plan-provenance ledger (changed
+/// slots first).
+pub fn debug_html(
+    r: &ServerReport,
+    obs: Option<&ObservatorySnapshot>,
+    plans: &[PlanRecord],
+) -> String {
+    let mut s = String::with_capacity(16 * 1024);
+    s.push_str("<!doctype html>\n<html lang=\"en\">\n<head>\n<meta charset=\"utf-8\">\n");
+    s.push_str("<meta http-equiv=\"refresh\" content=\"2\">\n<title>mxmoe observatory</title>\n");
+    s.push_str("<style>\n");
+    s.push_str("body{font-family:monospace;margin:1.5em;background:#101418;color:#d8dee4}\n");
+    s.push_str("h1,h2{font-weight:normal;color:#8ab4f8}\n");
+    s.push_str("table{border-collapse:collapse;margin:.5em 0}\n");
+    s.push_str("td,th{border:1px solid #2a3138;padding:2px 8px;text-align:right}\n");
+    s.push_str("th{color:#9aa5b1}\ntd.l,th.l{text-align:left}\n");
+    s.push_str("svg{vertical-align:middle}\n.dim{color:#788391}\n");
+    s.push_str("</style>\n</head>\n<body>\n<h1>mxmoe fleet observatory</h1>\n");
+    s.push_str(&format!(
+        "<p class=\"dim\">generation {} · {} replica(s) · {} admitted · {} served · \
+         decode {:.1} tok/s · kv {}/{} tokens @ {:.1} bits · {} replans · {} swaps</p>\n",
+        r.generation,
+        r.replicas,
+        r.admitted,
+        r.requests,
+        r.decode_tps,
+        r.kv_used_tokens,
+        r.kv_budget_tokens,
+        r.kv_avg_bits,
+        r.replans,
+        r.swaps
+    ));
+    s.push_str("<h2>time series</h2>\n");
+    match obs {
+        Some(snap) if !snap.series.is_empty() => {
+            s.push_str(
+                "<table>\n<tr><th class=\"l\">series</th><th>kind</th><th>last</th><th>min</th>\
+                 <th>max</th><th class=\"l\">trend</th><th>pushed</th></tr>\n",
+            );
+            for sr in &snap.series {
+                let last = sr.points.last().map(|p| p.v).unwrap_or(0.0);
+                let lo = sr.points.iter().map(|p| p.v).fold(f64::INFINITY, f64::min);
+                let hi = sr.points.iter().map(|p| p.v).fold(f64::NEG_INFINITY, f64::max);
+                s.push_str(&format!(
+                    "<tr><td class=\"l\">{}</td><td>{}</td><td>{:.3}</td><td>{:.3}</td>\
+                     <td>{:.3}</td><td class=\"l\">{}</td><td>{}</td></tr>\n",
+                    html_escape(&sr.name),
+                    sr.kind.name(),
+                    last,
+                    if lo.is_finite() { lo } else { 0.0 },
+                    if hi.is_finite() { hi } else { 0.0 },
+                    sparkline_svg(&sr.points),
+                    sr.pushed
+                ));
+            }
+            s.push_str("</table>\n");
+        }
+        _ => s.push_str(
+            "<p class=\"dim\">sampling off — enable the cluster sample config to record \
+             time series.</p>\n",
+        ),
+    }
+    if let Some(snap) = obs {
+        if !snap.histograms.is_empty() {
+            s.push_str(
+                "<h2>histograms</h2>\n<table>\n<tr><th class=\"l\">histogram</th><th>count</th>\
+                 <th>mean</th><th class=\"l\">buckets</th></tr>\n",
+            );
+            for h in &snap.histograms {
+                let mean = if h.count == 0 { 0.0 } else { h.sum / h.count as f64 };
+                s.push_str(&format!(
+                    "<tr><td class=\"l\">{}</td><td>{}</td><td>{:.2}</td>\
+                     <td class=\"l\">{}</td></tr>\n",
+                    html_escape(&h.name),
+                    h.count,
+                    mean,
+                    bars_svg(&h.counts)
+                ));
+            }
+            s.push_str("</table>\n");
+        }
+    }
+    s.push_str("<h2>plan provenance</h2>\n");
+    if plans.is_empty() {
+        s.push_str("<p class=\"dim\">no plans recorded yet.</p>\n");
+    } else {
+        s.push_str(
+            "<table>\n<tr><th>replica</th><th>gen</th><th>at (s)</th><th class=\"l\">trigger\
+             </th><th>drift</th><th>r</th><th class=\"l\">bits</th><th>changed</th></tr>\n",
+        );
+        for p in plans {
+            s.push_str(&format!(
+                "<tr><td>{}</td><td>{}</td><td>{:.2}</td><td class=\"l\">{}</td><td>{:.3}</td>\
+                 <td>{:.2}</td><td class=\"l\">{:.2} → {:.2}</td><td>{}/{}</td></tr>\n",
+                p.replica,
+                p.generation,
+                p.at_s,
+                p.trigger.name(),
+                p.drift,
+                p.r,
+                p.bits_before,
+                p.bits_after,
+                p.changed(),
+                p.decisions.len()
+            ));
+        }
+        s.push_str("</table>\n");
+    }
+    if let Some(p) = plans.last() {
+        s.push_str(&format!(
+            "<h2>latest plan — replica {}, generation {}</h2>\n",
+            p.replica, p.generation
+        ));
+        s.push_str(
+            "<table>\n<tr><th>layer</th><th>expert</th><th class=\"l\">scheme</th>\
+             <th class=\"l\">prev</th><th>sens</th><th>freq</th><th>bits</th>\
+             <th>rows/s</th></tr>\n",
+        );
+        let changed = p.decisions.iter().filter(|d| d.changed);
+        let unchanged = p.decisions.iter().filter(|d| !d.changed);
+        for (shown, d) in changed.chain(unchanged).enumerate() {
+            if shown == DEBUG_MAX_DECISION_ROWS {
+                break;
+            }
+            s.push_str(&format!(
+                "<tr><td>{}</td><td>{}{}</td><td class=\"l\">{}</td><td class=\"l\">{}</td>\
+                 <td>{:.4}</td><td>{:.3}</td><td>{:.2}</td><td class=\"l\">{}</td></tr>\n",
+                d.layer,
+                d.expert,
+                if d.shared { " (shared)" } else { "" },
+                html_escape(&d.quant),
+                d.prev.map(|sch| sch.name()).unwrap_or("—"),
+                d.sensitivity,
+                d.freq,
+                d.bits,
+                d.speed_rows_per_s.map(|v| format!("{v:.0}")).unwrap_or_else(|| "—".to_string())
+            ));
+        }
+        s.push_str("</table>\n");
+        if p.decisions.len() > DEBUG_MAX_DECISION_ROWS {
+            s.push_str(&format!(
+                "<p class=\"dim\">… {} more slots — the full decision list is in \
+                 /v1/status.</p>\n",
+                p.decisions.len() - DEBUG_MAX_DECISION_ROWS
+            ));
+        }
+    }
+    s.push_str("</body>\n</html>\n");
     s
 }
 
@@ -582,5 +1216,127 @@ mod tests {
             assert!(v.get("ts_us").is_some());
             assert!(v.get("event").is_some());
         }
+    }
+
+    use super::super::provenance::{PlanTrigger, SlotDecision};
+    use super::super::timeseries::Observatory;
+    use crate::runtime::RuntimeScheme;
+
+    fn plan_record() -> PlanRecord {
+        PlanRecord {
+            replica: 0,
+            generation: 1,
+            at_s: 0.5,
+            trigger: PlanTrigger::Replan,
+            drift: 0.1,
+            r: 0.5,
+            bits_before: 16.0,
+            bits_after: 6.0,
+            decisions: vec![SlotDecision {
+                layer: 0,
+                expert: 1,
+                shared: false,
+                scheme: RuntimeScheme::W4A16,
+                quant: "w4a16".to_string(),
+                prev: Some(RuntimeScheme::Fp16),
+                changed: true,
+                sensitivity: 0.01,
+                freq: 0.2,
+                bits: 4.5,
+                speed_rows_per_s: None,
+            }],
+        }
+    }
+
+    #[test]
+    fn prometheus_text_lints_clean() {
+        lint_prometheus(&prometheus_text(&ServerReport::default())).expect("conformant");
+    }
+
+    #[test]
+    fn prometheus_histograms_lint_clean() {
+        let obs = Observatory::new(8);
+        for v in [0.5, 2.0, 9.0, 40.0] {
+            obs.observe("queue_depth_hist", &[1.0, 4.0, 16.0], v);
+        }
+        let snap = obs.snapshot();
+        let text = prometheus_text_with(&ServerReport::default(), Some(&snap));
+        assert!(text.contains("mxmoe_queue_depth_hist_bucket{le=\"+Inf\"} 4"), "{text}");
+        assert!(text.contains("mxmoe_queue_depth_hist_count 4"), "{text}");
+        lint_prometheus(&text).expect("conformant with histograms");
+    }
+
+    #[test]
+    fn nan_gauges_are_suppressed() {
+        let r = ServerReport { kv_avg_bits: f64::NAN, ..Default::default() };
+        let text = prometheus_text(&r);
+        assert!(!text.contains("NaN"), "{text}");
+        assert!(!text.contains("mxmoe_kv_avg_bits"), "{text}");
+        lint_prometheus(&text).expect("still conformant");
+    }
+
+    #[test]
+    fn label_values_escape() {
+        assert_eq!(prom_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        let ok = "# HELP y g\n# TYPE y gauge\ny{k=\"a\\\"b\"} 1\n";
+        lint_prometheus(ok).expect("escaped label value accepted");
+    }
+
+    #[test]
+    fn lint_rejects_nonconformant_text() {
+        // sample with no HELP/TYPE
+        assert!(lint_prometheus("foo_total 1\n").is_err());
+        // NaN sample value
+        let nan = "# HELP x_total h\n# TYPE x_total counter\nx_total NaN\n";
+        assert!(lint_prometheus(nan).is_err());
+        // counter not ending in _total
+        let bare = "# HELP x h\n# TYPE x counter\nx 1\n";
+        assert!(lint_prometheus(bare).is_err());
+        // histogram missing _count
+        let hist = "# HELP h_x h\n# TYPE h_x histogram\nh_x_bucket{le=\"+Inf\"} 1\nh_x_sum 1\n";
+        assert!(lint_prometheus(hist).is_err());
+        // unescaped quote in a label value
+        let label = "# HELP y g\n# TYPE y gauge\ny{k=\"a\"b\"} 1\n";
+        assert!(lint_prometheus(label).is_err());
+    }
+
+    #[test]
+    fn status_json_parses_and_carries_sections() {
+        let obs = Observatory::new(8);
+        obs.gauge("queue_depth", 0.0, 1.0);
+        obs.gauge("queue_depth", 0.25, 3.0);
+        let snap = obs.snapshot();
+        let r = ServerReport { admitted: 7, ..Default::default() };
+        let text = status_json(&r, Some(&snap), &[plan_record()]);
+        let doc = Json::parse(&text).expect("valid JSON");
+        assert_eq!(doc.req_str("version").unwrap(), "mxmoe-status-v1");
+        let report = doc.get("report").expect("report object");
+        assert_eq!(report.req_usize("admitted").unwrap(), 7);
+        let series = doc.get("series").and_then(Json::as_arr).expect("series array");
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0].req_str("name").unwrap(), "queue_depth");
+        let points = series[0].get("points").and_then(Json::as_arr).unwrap();
+        assert_eq!(points.len(), 2);
+        let plans = doc.get("plans").and_then(Json::as_arr).expect("plans array");
+        assert_eq!(plans.len(), 1);
+        let decisions = plans[0].get("decisions").and_then(Json::as_arr).expect("decisions");
+        assert_eq!(decisions[0].req_str("scheme").unwrap(), "w4a16");
+        assert_eq!(decisions[0].req_str("prev").unwrap(), "fp16");
+    }
+
+    #[test]
+    fn debug_html_is_self_contained() {
+        let obs = Observatory::new(8);
+        obs.gauge("decode_tps", 0.0, 5.0);
+        obs.gauge("decode_tps", 0.5, 6.0);
+        obs.observe("queue_depth_hist", &[1.0, 4.0], 2.0);
+        let snap = obs.snapshot();
+        let html = debug_html(&ServerReport::default(), Some(&snap), &[plan_record()]);
+        assert!(html.starts_with("<!doctype html>"), "doctype first");
+        assert!(html.contains("<svg"), "inline sparkline");
+        assert!(html.contains("decode_tps"), "series listed");
+        assert!(html.contains("w4a16"), "provenance listed");
+        assert!(!html.contains("http://") && !html.contains("https://"), "no external assets");
+        assert!(!html.contains("<script"), "no scripts");
     }
 }

@@ -19,11 +19,30 @@
 //! lock-free on the serving threads: every collector is *owned* by exactly
 //! one thread (admission events ride the admission mutex the front door
 //! already takes), so tracing adds no contention to the hot path.
+//!
+//! Two companion subsystems extend tracing from per-request depth to
+//! fleet breadth (DESIGN.md §Fleet-Observatory): [`timeseries`] — an
+//! [`Observatory`] registry of bounded ring series fed by an
+//! off-by-default [`Sampler`] thread — and [`provenance`] — a
+//! [`ProvenanceLedger`] recording every installed plan with the
+//! per-(layer, expert) score terms that chose each scheme. Both surface
+//! through `GET /v1/status`, the `GET /debug` dashboard, and
+//! `mxmoe status`.
 
 pub mod collector;
 pub mod export;
+pub mod provenance;
 pub mod span;
+pub mod timeseries;
 
 pub use collector::{SpanCollector, TraceConfig};
 pub use export::{validate_chrome_trace, TraceCheck, TraceLog};
+pub use provenance::{
+    build_record, Explanation, PlanContext, PlanRecord, PlanTrigger, ProvenanceLedger,
+    SlotDecision, PROVENANCE_HISTORY,
+};
 pub use span::{Deadline, EventKind, Outcome, Track, TraceClock, TraceEvent};
+pub use timeseries::{
+    record_sample, HistogramSnapshot, Observatory, ObservatorySnapshot, Point, SampleConfig,
+    Sampler, SeriesKind, SeriesSnapshot,
+};

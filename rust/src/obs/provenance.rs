@@ -1,0 +1,368 @@
+//! Plan-provenance ledger (DESIGN.md §Fleet-Observatory).
+//!
+//! A replan event says *that* the plan changed; it does not say *why a
+//! given (layer, expert) ended up at its scheme*. This module records, at
+//! boot and at every replan install, the full per-slot decision with the
+//! decomposed MCKP score terms — calibration sensitivity, live routing
+//! frequency, measured scheme speed, stored weight bits, and the
+//! QoS-blended `r` the solve ran with — plus the diff against the
+//! previous plan. The ledger is a bounded deque shared between the
+//! replica threads (writers, once per replan — cold path) and the status
+//! endpoint / dashboard / CLI (readers), queryable as "why does expert
+//! (l,e) run at W4A8 right now?" via [`ProvenanceLedger::explain`].
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::alloc::{Allocation, SensitivityTable};
+use crate::moe::ModelConfig;
+use crate::runtime::RuntimeScheme;
+
+/// What produced a plan record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanTrigger {
+    /// The boot allocation a replica started serving with.
+    Boot,
+    /// A drift-triggered MCKP re-solve whose staged swap was installed.
+    Replan,
+}
+
+impl PlanTrigger {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanTrigger::Boot => "boot",
+            PlanTrigger::Replan => "replan",
+        }
+    }
+}
+
+/// One (layer, expert) slot's chosen scheme with its decomposed score
+/// terms — everything the MCKP objective `L^r · T^(1−r)` weighed.
+#[derive(Clone, Debug)]
+pub struct SlotDecision {
+    /// Transformer layer index of the MoE block.
+    pub layer: usize,
+    /// Expert slot (routed experts first, then shared).
+    pub expert: usize,
+    /// Shared-expert slot (always active; frequency pinned to 1.0).
+    pub shared: bool,
+    /// Runtime family the slot executes under.
+    pub scheme: RuntimeScheme,
+    /// Exact allocator scheme of the gate linear (e.g. `w4a4_g128_sym`).
+    pub quant: String,
+    /// Family under the previous plan (`None` for a boot record).
+    pub prev: Option<RuntimeScheme>,
+    /// Did this replan change the slot's family?
+    pub changed: bool,
+    /// Calibration sensitivity Δ summed over the slot's three linears
+    /// (0.0 when no sensitivity table was available — offline replicas).
+    pub sensitivity: f64,
+    /// Live routing frequency the solve saw (1.0 for shared slots).
+    pub freq: f64,
+    /// Mean stored weight bits across the slot's three linears.
+    pub bits: f64,
+    /// Measured useful rows/s of the slot's family from wave telemetry
+    /// (`None` before the family has executed any wave).
+    pub speed_rows_per_s: Option<f64>,
+}
+
+/// One installed plan: solve-level context plus every slot's decision.
+#[derive(Clone, Debug)]
+pub struct PlanRecord {
+    pub replica: usize,
+    /// Hot-swap generation serving this plan (0 = boot).
+    pub generation: u64,
+    /// Seconds since the replica's engine started.
+    pub at_s: f64,
+    pub trigger: PlanTrigger,
+    /// TV drift that triggered the solve (0.0 at boot).
+    pub drift: f64,
+    /// QoS-blended accuracy/perf exponent the solve ran with.
+    pub r: f64,
+    pub bits_before: f64,
+    pub bits_after: f64,
+    pub decisions: Vec<SlotDecision>,
+}
+
+impl PlanRecord {
+    /// Slots whose runtime family changed vs the previous plan.
+    pub fn changed(&self) -> usize {
+        self.decisions.iter().filter(|d| d.changed).count()
+    }
+}
+
+/// Inputs to [`build_record`]: the installed plan plus everything the
+/// solve weighed. `speeds` is (family, measured useful rows/s).
+pub struct PlanContext<'a> {
+    pub cfg: &'a ModelConfig,
+    pub alloc: &'a Allocation,
+    pub prev: Option<&'a Allocation>,
+    pub freqs: &'a [Vec<f64>],
+    pub sens: Option<&'a SensitivityTable>,
+    pub speeds: &'a [(RuntimeScheme, f64)],
+    pub r: f64,
+    pub drift: f64,
+}
+
+/// Decompose an installed allocation into per-slot decisions.
+pub fn build_record(replica: usize, trigger: PlanTrigger, ctx: &PlanContext) -> PlanRecord {
+    let bits_after = ctx.alloc.avg_weight_bits(ctx.cfg);
+    let bits_before = ctx.prev.map_or(bits_after, |p| p.avg_weight_bits(ctx.cfg));
+    let mut decisions = Vec::new();
+    for (pos, experts) in ctx.alloc.schemes.iter().enumerate() {
+        let layer = ctx.alloc.layers.get(pos).copied().unwrap_or(pos);
+        for (e, linears) in experts.iter().enumerate() {
+            let scheme = RuntimeScheme::from_quant(&linears[0]);
+            let prev = ctx
+                .prev
+                .and_then(|p| p.schemes.get(pos))
+                .and_then(|block| block.get(e))
+                .map(|l| RuntimeScheme::from_quant(&l[0]));
+            let shared = e >= ctx.cfg.n_experts;
+            let freq = if shared {
+                1.0
+            } else {
+                ctx.freqs.get(pos).and_then(|f| f.get(e)).copied().unwrap_or(0.0)
+            };
+            let sensitivity = ctx
+                .sens
+                .filter(|t| pos < t.delta.len() && e < t.delta[pos].len())
+                .map_or(0.0, |t| (0..3).map(|j| t.delta(pos, e, j, &linears[j])).sum::<f64>());
+            let bits = linears.iter().map(|s| s.wbits as f64).sum::<f64>() / 3.0;
+            let speed_rows_per_s =
+                ctx.speeds.iter().find(|(s, _)| *s == scheme).map(|(_, v)| *v);
+            decisions.push(SlotDecision {
+                layer,
+                expert: e,
+                shared,
+                scheme,
+                quant: linears[0].name(),
+                prev,
+                changed: prev.is_some_and(|p| p != scheme),
+                sensitivity,
+                freq,
+                bits,
+                speed_rows_per_s,
+            });
+        }
+    }
+    PlanRecord {
+        replica,
+        generation: 0,
+        at_s: 0.0,
+        trigger,
+        drift: ctx.drift,
+        r: ctx.r,
+        bits_before,
+        bits_after,
+        decisions,
+    }
+}
+
+/// The answer to "why does expert (l,e) run at its scheme?": the newest
+/// recorded decision for that slot plus its solve context.
+#[derive(Clone, Debug)]
+pub struct Explanation {
+    pub replica: usize,
+    pub generation: u64,
+    pub at_s: f64,
+    pub trigger: PlanTrigger,
+    pub r: f64,
+    pub drift: f64,
+    pub decision: SlotDecision,
+}
+
+impl Explanation {
+    /// One-line human rendering for the CLI and dashboard.
+    pub fn describe(&self) -> String {
+        let d = &self.decision;
+        let speed = d
+            .speed_rows_per_s
+            .map_or("unmeasured".to_string(), |v| format!("{v:.0} rows/s"));
+        format!(
+            "layer {} expert {}{} runs {} ({}) since {} at {:.2}s (gen {}): \
+             sensitivity {:.4e}, live freq {:.3}, speed {}, {:.2} bits, r {:.2}, drift {:.3}",
+            d.layer,
+            d.expert,
+            if d.shared { " (shared)" } else { "" },
+            d.scheme.name(),
+            d.quant,
+            self.trigger.name(),
+            self.at_s,
+            self.generation,
+            d.sensitivity,
+            d.freq,
+            speed,
+            d.bits,
+            self.r,
+            self.drift,
+        )
+    }
+}
+
+/// Plan records retained per cluster (bounded deque, newest kept).
+pub const PROVENANCE_HISTORY: usize = 16;
+
+/// Bounded, shared ledger of installed plans. Written once per replan —
+/// far off the serving hot path — so a plain mutex is plenty.
+pub struct ProvenanceLedger {
+    cap: usize,
+    inner: Mutex<VecDeque<PlanRecord>>,
+}
+
+impl Default for ProvenanceLedger {
+    fn default() -> Self {
+        ProvenanceLedger::new(PROVENANCE_HISTORY)
+    }
+}
+
+impl ProvenanceLedger {
+    pub fn new(cap: usize) -> ProvenanceLedger {
+        ProvenanceLedger { cap: cap.max(1), inner: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Append a record, evicting the oldest past the capacity.
+    pub fn record(&self, rec: PlanRecord) {
+        let mut g = self.inner.lock().unwrap();
+        if g.len() >= self.cap {
+            g.pop_front();
+        }
+        g.push_back(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
+    }
+
+    /// All retained records, oldest first.
+    pub fn records(&self) -> Vec<PlanRecord> {
+        self.inner.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// The newest record (any replica).
+    pub fn latest(&self) -> Option<PlanRecord> {
+        self.inner.lock().unwrap().back().cloned()
+    }
+
+    /// Why does expert (`layer`, `expert`) run at its current scheme? The
+    /// newest record holding a decision for that slot, newest-plan wins.
+    pub fn explain(&self, layer: usize, expert: usize) -> Option<Explanation> {
+        let g = self.inner.lock().unwrap();
+        g.iter().rev().find_map(|rec| {
+            rec.decisions
+                .iter()
+                .find(|d| d.layer == layer && d.expert == expert)
+                .map(|d| Explanation {
+                    replica: rec.replica,
+                    generation: rec.generation,
+                    at_s: rec.at_s,
+                    trigger: rec.trigger,
+                    r: rec.r,
+                    drift: rec.drift,
+                    decision: d.clone(),
+                })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::ModelConfig;
+    use crate::quant::scheme::QuantScheme;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            vocab: 32,
+            hidden: 32,
+            layers: 2,
+            heads: 2,
+            n_experts: 2,
+            n_shared: 1,
+            topk: 1,
+            inter: 16,
+            dense_first: false,
+            seq_len: 16,
+        }
+    }
+
+    #[test]
+    fn build_record_decomposes_slots_and_diffs() {
+        let cfg = tiny_cfg();
+        let prev = Allocation::uniform(&cfg, QuantScheme::FP16);
+        let mut alloc = prev.clone();
+        alloc.schemes[0][1] = [QuantScheme::W4A4; 3];
+        let freqs = vec![vec![0.25, 0.75], vec![0.5, 0.5]];
+        let rec = build_record(
+            3,
+            PlanTrigger::Replan,
+            &PlanContext {
+                cfg: &cfg,
+                alloc: &alloc,
+                prev: Some(&prev),
+                freqs: &freqs,
+                sens: None,
+                speeds: &[(RuntimeScheme::W4A4, 1e6)],
+                r: 0.75,
+                drift: 0.2,
+            },
+        );
+        assert_eq!(rec.decisions.len(), 2 * 3, "2 blocks x (2 routed + 1 shared)");
+        assert_eq!(rec.changed(), 1);
+        let d = rec
+            .decisions
+            .iter()
+            .find(|d| d.layer == alloc.layers[0] && d.expert == 1)
+            .unwrap();
+        assert_eq!(d.scheme, RuntimeScheme::W4A4);
+        assert_eq!(d.prev, Some(RuntimeScheme::Fp16));
+        assert!(d.changed);
+        assert!((d.freq - 0.75).abs() < 1e-12);
+        assert!((d.bits - 4.0).abs() < 1e-12);
+        assert_eq!(d.speed_rows_per_s, Some(1e6));
+        let shared = rec.decisions.iter().find(|d| d.expert == 2).unwrap();
+        assert!(shared.shared && (shared.freq - 1.0).abs() < 1e-12);
+        assert!(rec.bits_before > rec.bits_after, "one slot dropped to 4 bits");
+    }
+
+    #[test]
+    fn ledger_is_bounded_and_explains_the_newest_plan() {
+        let cfg = tiny_cfg();
+        let ledger = ProvenanceLedger::new(2);
+        let freqs = vec![vec![0.5, 0.5], vec![0.5, 0.5]];
+        for gen in 0..3u64 {
+            let scheme = if gen == 2 { QuantScheme::W8A8 } else { QuantScheme::FP16 };
+            let alloc = Allocation::uniform(&cfg, scheme);
+            let mut rec = build_record(
+                0,
+                if gen == 0 { PlanTrigger::Boot } else { PlanTrigger::Replan },
+                &PlanContext {
+                    cfg: &cfg,
+                    alloc: &alloc,
+                    prev: None,
+                    freqs: &freqs,
+                    sens: None,
+                    speeds: &[],
+                    r: 0.75,
+                    drift: 0.0,
+                },
+            );
+            rec.generation = gen;
+            rec.at_s = gen as f64;
+            ledger.record(rec);
+        }
+        assert_eq!(ledger.len(), 2, "oldest record evicted");
+        assert_eq!(ledger.records()[0].generation, 1);
+        assert_eq!(ledger.latest().unwrap().generation, 2);
+        let why = ledger.explain(cfg.moe_layers()[0], 0).unwrap();
+        assert_eq!(why.generation, 2, "newest plan wins");
+        assert_eq!(why.decision.scheme, RuntimeScheme::W8A8);
+        assert!(why.describe().contains("w8a8"));
+        assert!(ledger.explain(9999, 0).is_none());
+    }
+}

@@ -1,0 +1,544 @@
+//! Fleet observatory: bounded ring-buffer time series (DESIGN.md
+//! §Fleet-Observatory).
+//!
+//! Point-in-time reports show *where the cluster is*; they cannot show
+//! *how it got there*. The [`Observatory`] is a registry of named series —
+//! gauges, monotone counters (stored as per-sample deltas, wraparound
+//! safe), and fixed-bucket histograms — each bounded by the same
+//! fill-then-overwrite cursor ring the metric latency windows use. A
+//! [`Sampler`] thread polls `Cluster::live_report()` on a configurable
+//! interval and folds the snapshot in through [`record_sample`]; nothing
+//! on the serving hot path ever touches the registry, so — like tracing —
+//! the sampler is off by default and overhead-free when off (gated ≤3%
+//! with bit-identical outputs in `benches/bench_trace_overhead.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::{slo_class_name, ServerReport};
+use crate::runtime::RuntimeScheme;
+
+/// Sampler on/off switch + cadence + per-series ring capacity. Mirrors
+/// [`crate::obs::TraceConfig`]: compile-free, off by default, and the off
+/// path costs nothing (no thread is even spawned).
+#[derive(Clone, Copy, Debug)]
+pub struct SampleConfig {
+    pub enabled: bool,
+    /// Poll interval, milliseconds.
+    pub interval_ms: u64,
+    /// Points retained per series; older points are overwritten.
+    pub capacity: usize,
+}
+
+impl Default for SampleConfig {
+    fn default() -> Self {
+        SampleConfig { enabled: false, interval_ms: 250, capacity: 512 }
+    }
+}
+
+impl SampleConfig {
+    /// Sampling on with the default cadence and capacity.
+    pub fn on() -> SampleConfig {
+        SampleConfig { enabled: true, ..SampleConfig::default() }
+    }
+
+    pub fn interval(&self) -> Duration {
+        Duration::from_millis(self.interval_ms.max(1))
+    }
+}
+
+/// One observation: seconds since sampler start, value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Point {
+    pub t_s: f64,
+    pub v: f64,
+}
+
+/// What a series measures — fixes how its points are read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeriesKind {
+    /// Point-in-time level; each point is the level at that sample.
+    Gauge,
+    /// Monotone total; each point is the *delta* since the previous
+    /// sample (wraparound-safe), so a point is already a per-interval rate.
+    Counter,
+}
+
+impl SeriesKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SeriesKind::Gauge => "gauge",
+            SeriesKind::Counter => "counter",
+        }
+    }
+}
+
+/// One bounded series: cursor ring of points plus counter state.
+struct Series {
+    kind: SeriesKind,
+    points: Vec<Point>,
+    cursor: usize,
+    /// Points ever pushed (eviction accounting: retained = min(pushed, cap)).
+    pushed: u64,
+    /// Counters: last raw total seen, for wrapping deltas.
+    last_raw: u64,
+    has_raw: bool,
+    last_t_s: f64,
+}
+
+impl Series {
+    fn new(kind: SeriesKind) -> Series {
+        Series {
+            kind,
+            points: Vec::new(),
+            cursor: 0,
+            pushed: 0,
+            last_raw: 0,
+            has_raw: false,
+            last_t_s: 0.0,
+        }
+    }
+
+    fn push(&mut self, cap: usize, p: Point) {
+        if self.points.len() < cap.max(1) {
+            self.points.push(p);
+        } else {
+            self.points[self.cursor] = p;
+            self.cursor = (self.cursor + 1) % self.points.len();
+        }
+        self.pushed += 1;
+    }
+
+    /// Points oldest-first (un-rotates the cursor ring).
+    fn ordered(&self) -> Vec<Point> {
+        let mut out = Vec::with_capacity(self.points.len());
+        out.extend_from_slice(&self.points[self.cursor..]);
+        out.extend_from_slice(&self.points[..self.cursor]);
+        out
+    }
+}
+
+/// Fixed-bucket cumulative histogram (Prometheus-shaped: `bounds` are the
+/// inclusive `le` upper bounds; one implicit +Inf bucket at the end).
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    pub name: String,
+    pub bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; `len() == bounds.len() + 1`.
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let slot = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[slot] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+}
+
+/// A full copy of one series, oldest point first.
+#[derive(Clone, Debug)]
+pub struct SeriesSnapshot {
+    pub name: String,
+    pub kind: SeriesKind,
+    pub points: Vec<Point>,
+    /// Counters: the last raw total observed (0 for gauges).
+    pub total: u64,
+    /// Points ever pushed (≥ `points.len()`; the difference was evicted).
+    pub pushed: u64,
+}
+
+/// Everything the observatory holds, copied out at snapshot time.
+#[derive(Clone, Debug, Default)]
+pub struct ObservatorySnapshot {
+    pub series: Vec<SeriesSnapshot>,
+    pub histograms: Vec<HistogramSnapshot>,
+}
+
+/// Registry of bounded time series. One mutex around the whole map —
+/// "lock-light" because only the sampler thread (a few Hz) and the
+/// occasional status/dashboard reader ever take it; serving threads never
+/// touch it.
+pub struct Observatory {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    series: BTreeMap<String, Series>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl Observatory {
+    pub fn new(capacity: usize) -> Observatory {
+        Observatory { capacity: capacity.max(1), inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Points retained per series.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Record a gauge level. Non-finite values are dropped — a series
+    /// never holds NaN/Inf, so exports never emit them.
+    pub fn gauge(&self, name: &str, t_s: f64, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let s = g
+            .series
+            .entry(name.to_string())
+            .or_insert_with(|| Series::new(SeriesKind::Gauge));
+        s.push(self.capacity, Point { t_s, v });
+        s.last_t_s = t_s;
+    }
+
+    /// Record a monotone counter's raw total; stores the delta since the
+    /// previous sample (`wrapping_sub`, so a u64 wraparound still yields
+    /// the true increment). Returns the per-second rate over the elapsed
+    /// interval (0.0 on the first sample).
+    pub fn counter(&self, name: &str, t_s: f64, raw: u64) -> f64 {
+        let mut g = self.inner.lock().unwrap();
+        let s = g
+            .series
+            .entry(name.to_string())
+            .or_insert_with(|| Series::new(SeriesKind::Counter));
+        let (delta, rate) = if s.has_raw {
+            let d = raw.wrapping_sub(s.last_raw);
+            let dt = t_s - s.last_t_s;
+            (d, if dt > 0.0 { d as f64 / dt } else { 0.0 })
+        } else {
+            (raw, 0.0)
+        };
+        s.push(self.capacity, Point { t_s, v: delta as f64 });
+        s.last_raw = raw;
+        s.has_raw = true;
+        s.last_t_s = t_s;
+        rate
+    }
+
+    /// Fold one observation into a fixed-bucket histogram (created on
+    /// first use with `bounds` as its `le` upper bounds).
+    pub fn observe(&self, name: &str, bounds: &[f64], v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.hists
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(bounds))
+            .observe(v);
+    }
+
+    /// All series names, sorted.
+    pub fn series_names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().series.keys().cloned().collect()
+    }
+
+    /// One series' points, oldest first (empty if unknown).
+    pub fn points(&self, name: &str) -> Vec<Point> {
+        self.inner
+            .lock()
+            .unwrap()
+            .series
+            .get(name)
+            .map(|s| s.ordered())
+            .unwrap_or_default()
+    }
+
+    /// Points ever pushed into a series (retained = min(pushed, capacity)).
+    pub fn pushed(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().series.get(name).map(|s| s.pushed).unwrap_or(0)
+    }
+
+    /// The series value at time `t_s`: the newest point at-or-before that
+    /// instant. `None` if the series is unknown or started after `t_s`.
+    /// This is the "what was queue depth at tick T?" query.
+    pub fn value_at(&self, name: &str, t_s: f64) -> Option<f64> {
+        let pts = self.points(name);
+        pts.iter().rev().find(|p| p.t_s <= t_s + 1e-9).map(|p| p.v)
+    }
+
+    /// Copy everything out (status endpoint / dashboard / CLI).
+    pub fn snapshot(&self) -> ObservatorySnapshot {
+        let g = self.inner.lock().unwrap();
+        ObservatorySnapshot {
+            series: g
+                .series
+                .iter()
+                .map(|(name, s)| SeriesSnapshot {
+                    name: name.clone(),
+                    kind: s.kind,
+                    points: s.ordered(),
+                    total: if s.kind == SeriesKind::Counter { s.last_raw } else { 0 },
+                    pushed: s.pushed,
+                })
+                .collect(),
+            histograms: g
+                .hists
+                .iter()
+                .map(|(name, h)| HistogramSnapshot {
+                    name: name.clone(),
+                    bounds: h.bounds.clone(),
+                    counts: h.counts.clone(),
+                    sum: h.sum,
+                    count: h.count,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Queue-depth histogram buckets (requests waiting at a sample).
+pub const QUEUE_DEPTH_BUCKETS: [f64; 10] =
+    [0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0];
+
+/// Fold one live snapshot into the observatory's named series. Called by
+/// the cluster's sampler thread each tick; `t_s` is seconds since the
+/// sampler started, `scheme_rows` is (family, useful rows, busy seconds)
+/// aggregated across replicas.
+pub fn record_sample(
+    obs: &Observatory,
+    t_s: f64,
+    report: &ServerReport,
+    queued_requests: usize,
+    queued_batches: usize,
+    scheme_rows: &[(RuntimeScheme, usize, f64)],
+) {
+    obs.gauge("queue_depth", t_s, queued_requests as f64);
+    obs.gauge("queued_batches", t_s, queued_batches as f64);
+    obs.observe("queue_depth_hist", &QUEUE_DEPTH_BUCKETS, queued_requests as f64);
+    obs.gauge("generation", t_s, report.generation as f64);
+
+    // Admission & shed rates by reason: counters store per-interval deltas.
+    obs.counter("admitted_total", t_s, report.admitted as u64);
+    obs.counter("rejected_queue_full_total", t_s, report.rejected_queue_full as u64);
+    obs.counter("rejected_deadline_total", t_s, report.rejected_deadline as u64);
+    obs.counter("rejected_quota_total", t_s, report.rejected_quota as u64);
+    obs.counter("rejected_kv_total", t_s, report.rejected_kv as u64);
+    obs.counter("cancelled_total", t_s, report.cancelled as u64);
+    obs.counter("failed_total", t_s, report.failed as u64);
+
+    // Progress counters + the decode-rate gauge derived from one of them.
+    obs.counter("requests_total", t_s, report.requests as u64);
+    obs.counter("tokens_total", t_s, report.tokens as u64);
+    let decode_rate = obs.counter("generated_tokens_total", t_s, report.generated_tokens as u64);
+    obs.gauge("decode_tps", t_s, decode_rate);
+    obs.counter("generations_total", t_s, report.generations as u64);
+    obs.counter("replans_total", t_s, report.replans as u64);
+    obs.counter("swaps_total", t_s, report.swaps as u64);
+
+    // KV occupancy: used/shared/budget levels plus preemption rate.
+    obs.gauge("kv_used_tokens", t_s, report.kv_used_tokens as f64);
+    obs.gauge("kv_shared_tokens", t_s, report.kv_shared_tokens as f64);
+    obs.gauge("kv_budget_tokens", t_s, report.kv_budget_tokens as f64);
+    if report.kv_used_tokens > 0 {
+        obs.gauge("kv_avg_bits", t_s, report.kv_avg_bits);
+    }
+    obs.counter("kv_preemptions_total", t_s, report.kv_preemptions as u64);
+
+    // Per-QoS SLO hit rate (1.0 where no deadline was judged).
+    for (i, slo) in report.slo_by_class.iter().enumerate() {
+        obs.gauge(&format!("slo_hit_rate_{}", slo_class_name(i)), t_s, slo.hit_rate());
+    }
+
+    // Per-scheme wave work: useful-row counters (delta = occupancy per
+    // interval) + cumulative busy-seconds gauges.
+    for (scheme, useful_rows, busy_s) in scheme_rows {
+        obs.counter(&format!("wave_rows_{}_total", scheme.name()), t_s, *useful_rows as u64);
+        obs.gauge(&format!("wave_busy_s_{}", scheme.name()), t_s, *busy_s);
+    }
+}
+
+/// A stoppable interval thread driving a sampling closure. The closure
+/// receives seconds since the sampler started. Generic over the closure so
+/// the start/stop lifecycle is unit-testable without a cluster.
+pub struct Sampler {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<u64>>,
+}
+
+impl Sampler {
+    /// Spawn the sampler thread: tick immediately, then every `interval`
+    /// until stopped.
+    pub fn spawn<F>(interval: Duration, mut tick: F) -> Sampler
+    where
+        F: FnMut(f64) + Send + 'static,
+    {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let handle = thread::Builder::new()
+            .name("mxmoe-sampler".into())
+            .spawn(move || {
+                let start = Instant::now();
+                let mut ticks = 0u64;
+                while !flag.load(Ordering::Relaxed) {
+                    tick(start.elapsed().as_secs_f64());
+                    ticks += 1;
+                    // Sleep in short slices so stop() returns promptly
+                    // even with a long interval.
+                    let mut left = interval;
+                    let slice = Duration::from_millis(20);
+                    while left > Duration::ZERO && !flag.load(Ordering::Relaxed) {
+                        let d = left.min(slice);
+                        thread::sleep(d);
+                        left = left.saturating_sub(d);
+                    }
+                }
+                ticks
+            })
+            .expect("spawn mxmoe-sampler");
+        Sampler { stop, handle: Some(handle) }
+    }
+
+    /// Signal the thread to exit and join it; returns ticks executed.
+    pub fn stop(mut self) -> u64 {
+        self.stop.store(true, Ordering::Relaxed);
+        self.handle.take().map(|h| h.join().unwrap_or(0)).unwrap_or(0)
+    }
+}
+
+impl Drop for Sampler {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauge_ring_bounds_and_orders_points() {
+        let obs = Observatory::new(4);
+        for i in 0..10 {
+            obs.gauge("depth", i as f64, (i * 10) as f64);
+        }
+        let pts = obs.points("depth");
+        assert_eq!(pts.len(), 4, "ring is bounded");
+        let ts: Vec<f64> = pts.iter().map(|p| p.t_s).collect();
+        assert_eq!(ts, vec![6.0, 7.0, 8.0, 9.0], "oldest evicted, order kept");
+        assert_eq!(obs.pushed("depth"), 10, "eviction is counted, not silent");
+    }
+
+    #[test]
+    fn counter_deltas_survive_wraparound() {
+        let obs = Observatory::new(8);
+        obs.counter("c", 0.0, u64::MAX - 5);
+        obs.counter("c", 1.0, u64::MAX - 1);
+        let rate = obs.counter("c", 2.0, 5); // wrapped: true delta = 7
+        let pts = obs.points("c");
+        assert_eq!(pts[1].v, 4.0);
+        assert_eq!(pts[2].v, 7.0, "wrapping_sub recovers the increment");
+        assert!((rate - 7.0).abs() < 1e-9, "rate over the 1 s interval");
+    }
+
+    #[test]
+    fn gauges_never_store_non_finite() {
+        let obs = Observatory::new(8);
+        obs.gauge("g", 0.0, f64::NAN);
+        obs.gauge("g", 1.0, f64::INFINITY);
+        assert!(obs.points("g").is_empty());
+        obs.gauge("g", 2.0, 1.5);
+        assert_eq!(obs.points("g").len(), 1);
+    }
+
+    #[test]
+    fn value_at_reads_nearest_at_or_before() {
+        let obs = Observatory::new(16);
+        obs.gauge("g", 1.0, 10.0);
+        obs.gauge("g", 3.0, 30.0);
+        assert_eq!(obs.value_at("g", 0.5), None, "before the first sample");
+        assert_eq!(obs.value_at("g", 1.0), Some(10.0));
+        assert_eq!(obs.value_at("g", 2.9), Some(10.0));
+        assert_eq!(obs.value_at("g", 3.0), Some(30.0));
+        assert_eq!(obs.value_at("g", 99.0), Some(30.0));
+        assert_eq!(obs.value_at("missing", 1.0), None);
+    }
+
+    #[test]
+    fn histogram_buckets_and_totals() {
+        let obs = Observatory::new(8);
+        let bounds = [1.0, 4.0, 16.0];
+        for v in [0.0, 1.0, 3.0, 20.0] {
+            obs.observe("h", &bounds, v);
+        }
+        let snap = obs.snapshot();
+        let h = &snap.histograms[0];
+        assert_eq!(h.name, "h");
+        assert_eq!(h.counts, vec![2, 1, 0, 1], "le buckets + overflow");
+        assert_eq!(h.count, 4);
+        assert!((h.sum - 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampler_lifecycle_ticks_then_stops() {
+        use std::sync::atomic::AtomicU64;
+        let n = Arc::new(AtomicU64::new(0));
+        let n2 = Arc::clone(&n);
+        let s = Sampler::spawn(Duration::from_millis(1), move |t_s| {
+            assert!(t_s >= 0.0);
+            n2.fetch_add(1, Ordering::Relaxed);
+        });
+        while n.load(Ordering::Relaxed) < 3 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        let ticks = s.stop();
+        assert!(ticks >= 3);
+        let frozen = n.load(Ordering::Relaxed);
+        assert_eq!(ticks, frozen, "every tick ran the closure");
+        thread::sleep(Duration::from_millis(10));
+        assert_eq!(n.load(Ordering::Relaxed), frozen, "no ticks after stop");
+    }
+
+    #[test]
+    fn record_sample_populates_the_standard_series() {
+        let obs = Observatory::new(32);
+        let mut r = ServerReport { admitted: 5, generated_tokens: 100, ..Default::default() };
+        record_sample(&obs, 0.0, &r, 7, 2, &[(RuntimeScheme::Fp16, 64, 0.5)]);
+        r.admitted = 9;
+        r.generated_tokens = 300;
+        record_sample(&obs, 1.0, &r, 3, 1, &[(RuntimeScheme::Fp16, 128, 0.9)]);
+        assert_eq!(obs.value_at("queue_depth", 0.5), Some(7.0));
+        assert_eq!(obs.value_at("queue_depth", 1.0), Some(3.0));
+        let adm = obs.points("admitted_total");
+        assert_eq!(adm[0].v, 5.0, "first sample seeds the delta with the raw total");
+        assert_eq!(adm[1].v, 4.0);
+        assert_eq!(obs.value_at("decode_tps", 1.0), Some(200.0), "tokens/s from the delta");
+        assert_eq!(obs.points("wave_rows_fp16_total")[1].v, 64.0);
+        assert!(
+            obs.value_at("kv_avg_bits", 1.0).is_none(),
+            "no KV pool -> no avg-bits gauge, never a stale 32.0"
+        );
+        let snap = obs.snapshot();
+        assert_eq!(snap.histograms[0].count, 2);
+        assert!(snap.series.iter().any(|s| s.name == "slo_hit_rate_interactive"));
+    }
+}

@@ -53,7 +53,10 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{Cluster, HttpReport, ServerReport};
-use crate::obs::{EventKind, SpanCollector, Track, TraceClock, TraceConfig, TraceEvent};
+use crate::obs::{
+    EventKind, Observatory, ProvenanceLedger, SpanCollector, Track, TraceClock, TraceConfig,
+    TraceEvent,
+};
 use crate::ser::{Json, JsonWriter};
 
 use super::queue::Response;
@@ -85,6 +88,15 @@ pub trait HttpBackend: Send + Sync {
     fn try_submit(&self, req: ServeRequest) -> Result<Admission>;
     fn live_report(&self) -> ServerReport;
     fn replicas(&self) -> usize;
+    /// Time-series registry behind `/v1/status` and `/debug` (None = the
+    /// backend records no series; both pages degrade gracefully).
+    fn observatory(&self) -> Option<Arc<Observatory>> {
+        None
+    }
+    /// Plan-provenance ledger behind the same pages (None = no ledger).
+    fn provenance(&self) -> Option<Arc<ProvenanceLedger>> {
+        None
+    }
 }
 
 impl HttpBackend for Cluster {
@@ -98,6 +110,14 @@ impl HttpBackend for Cluster {
 
     fn replicas(&self) -> usize {
         Cluster::replicas(self)
+    }
+
+    fn observatory(&self) -> Option<Arc<Observatory>> {
+        Some(Cluster::observatory(self))
+    }
+
+    fn provenance(&self) -> Option<Arc<ProvenanceLedger>> {
+        Some(Cluster::provenance(self))
     }
 }
 
@@ -428,8 +448,31 @@ fn route(
             require_method(method, "GET")?;
             let mut r = shared.backend.live_report();
             r.http = shared.stats.snapshot();
-            let text = crate::obs::export::prometheus_text(&r);
+            let snap = shared.backend.observatory().map(|o| o.snapshot());
+            let text = crate::obs::export::prometheus_text_with(&r, snap.as_ref());
             send(stream, out, 200, "text/plain; version=0.0.4", &[], &text);
+            Ok(())
+        }
+        "/v1/status" => {
+            out.endpoint = "status";
+            require_method(method, "GET")?;
+            let mut r = shared.backend.live_report();
+            r.http = shared.stats.snapshot();
+            let snap = shared.backend.observatory().map(|o| o.snapshot());
+            let plans = shared.backend.provenance().map(|p| p.records()).unwrap_or_default();
+            let text = crate::obs::export::status_json(&r, snap.as_ref(), &plans);
+            send(stream, out, 200, "application/json", &[], &text);
+            Ok(())
+        }
+        "/debug" => {
+            out.endpoint = "debug";
+            require_method(method, "GET")?;
+            let mut r = shared.backend.live_report();
+            r.http = shared.stats.snapshot();
+            let snap = shared.backend.observatory().map(|o| o.snapshot());
+            let plans = shared.backend.provenance().map(|p| p.records()).unwrap_or_default();
+            let html = crate::obs::export::debug_html(&r, snap.as_ref(), &plans);
+            send(stream, out, 200, "text/html; charset=utf-8", &[], &html);
             Ok(())
         }
         "/v1/score" => {
@@ -1168,6 +1211,32 @@ mod tests {
         let report = server.shutdown();
         assert_eq!(report.connections, 2);
         assert_eq!(report.disconnects, 0);
+    }
+
+    #[test]
+    fn status_and_debug_respond_without_an_observatory() {
+        // MockBackend keeps the default trait impls (no observatory, no
+        // ledger): both pages must still render, with empty sections.
+        let server = start(vec![]);
+        let reply = roundtrip(server.addr(), "GET /v1/status HTTP/1.1\r\nhost: t\r\n\r\n");
+        assert_eq!(status_of(&reply), 200);
+        assert!(reply.contains("content-type: application/json"), "{reply}");
+        let j = Json::parse(body_of(&reply)).unwrap();
+        assert_eq!(j.req_str("version").unwrap(), "mxmoe-status-v1");
+        assert_eq!(j.get("series").and_then(Json::as_arr).unwrap().len(), 0);
+        assert_eq!(j.get("plans").and_then(Json::as_arr).unwrap().len(), 0);
+        // the status page reports the front door's own live counters
+        assert!(j.get("report").is_some());
+        let reply = roundtrip(server.addr(), "GET /debug HTTP/1.1\r\nhost: t\r\n\r\n");
+        assert_eq!(status_of(&reply), 200);
+        assert!(reply.contains("content-type: text/html"), "{reply}");
+        let body = body_of(&reply);
+        assert!(body.starts_with("<!doctype html>"), "{body}");
+        assert!(!body.contains("http://") && !body.contains("https://"), "self-contained");
+        let raw = "POST /debug HTTP/1.1\r\nhost: t\r\ncontent-length: 0\r\n\r\n";
+        let reply = roundtrip(server.addr(), raw);
+        assert_eq!(status_of(&reply), 405, "GET-only: {reply}");
+        server.shutdown();
     }
 
     #[test]

@@ -29,9 +29,11 @@ use std::time::{Duration, Instant};
 
 use crate::alloc::Allocation;
 use crate::coordinator::engine::{ReplanStaging, ServingEngine};
-use crate::coordinator::metrics::ReplicaReport;
+use crate::coordinator::metrics::{ReplicaReport, SloClassStats, SLO_CLASSES};
 use crate::moe::{ModelConfig, MoeLm};
-use crate::obs::{Deadline, EventKind, Outcome, SpanCollector, TraceClock, TraceConfig, Track};
+use crate::obs::{
+    Deadline, EventKind, Outcome, ProvenanceLedger, SpanCollector, TraceClock, TraceConfig, Track,
+};
 use crate::runtime::RuntimeScheme;
 use crate::ser::MxtFile;
 use crate::serve::decode::{DecodePolicy, DecodeScheduler};
@@ -390,6 +392,17 @@ pub struct ReplicaStatus {
     /// EWMA KV page-release rate, tokens/second (0 until warmed) — what
     /// `retry_after` is derived from when the pool is the bottleneck.
     pub kv_release_tps: f64,
+    /// KV tokens currently reserved by live generations.
+    pub kv_used_tokens: usize,
+    /// KV tokens served from shared prefix pages (counted once).
+    pub kv_shared_tokens: usize,
+    /// Live average KV-cache bits/value across resident sequences (32.0
+    /// when the pool is empty — fp32 reference, never NaN).
+    pub kv_avg_bits: f64,
+    /// Live per-QoS-class SLO accounting — what the cluster sampler reads
+    /// for longitudinal hit-rate series (reports otherwise only exist at
+    /// shutdown).
+    pub slo: [SloClassStats; SLO_CLASSES],
 }
 
 impl ReplicaStatus {
@@ -422,6 +435,10 @@ impl ReplicaStatus {
             kv_budget_tokens: 0,
             kv_page_size: 0,
             kv_release_tps: 0.0,
+            kv_used_tokens: 0,
+            kv_shared_tokens: 0,
+            kv_avg_bits: 32.0,
+            slo: [SloClassStats::default(); SLO_CLASSES],
         }
     }
 }
@@ -458,6 +475,10 @@ pub struct ReplicaSpec {
     pub clock: TraceClock,
     /// Lifecycle-span tracing switch + ring capacity for this replica.
     pub trace: TraceConfig,
+    /// Cluster-shared plan-provenance ledger: the replica records a boot
+    /// plan on engine build and every replan/hot-swap decision thereafter
+    /// (`None` = provenance off, zero work on the replan path).
+    pub provenance: Option<Arc<ProvenanceLedger>>,
 }
 
 /// Replica thread body: build the engine (own PJRT client, own plan), then
@@ -510,6 +531,17 @@ pub fn replica_main(
         if let Some(a) = online.ewma_alpha {
             engine.set_telemetry_alpha(a);
         }
+    }
+    if let Some(ledger) = &spec.provenance {
+        engine.set_provenance(Arc::clone(ledger), spec.id);
+        // Record the boot plan so "why does (l,e) run at this scheme?" has
+        // an answer before the first replan. Offline replicas have no
+        // replanner (no sensitivity, no QoS blend) — record structure only.
+        let (sens, r) = match &spec.online {
+            Some(o) => (Some(&o.replanner.sens), o.replanner.cfg.alloc.r),
+            None => (None, 0.5),
+        };
+        engine.record_boot_provenance(sens, r);
     }
     let mut decoder = DecodeScheduler::new(&spec.cfg, spec.decode.clone());
     let mut staging: Option<ReplanStaging> = None;
@@ -882,6 +914,10 @@ fn publish(
     s.kv_budget_tokens = occ.budget_tokens;
     s.kv_page_size = decoder.kv_page_size();
     s.kv_release_tps = decoder.kv_release_tps();
+    s.kv_used_tokens = occ.used_tokens;
+    s.kv_shared_tokens = occ.shared_tokens;
+    s.kv_avg_bits = occ.avg_kv_bits;
+    s.slo = engine.metrics().slo;
     generation
 }
 

@@ -266,6 +266,28 @@ fn reject_mapping_and_retry_after() {
 }
 
 #[test]
+fn status_and_debug_work_without_an_engine() {
+    let server = RejectingBackend::server(vec![]);
+    let addr = server.addr();
+    // the stub keeps the trait's default observatory()/provenance()
+    // (both None): the pages must degrade, not 500
+    let reply = raw(addr, "GET /v1/status HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(status_of(&reply), 200, "{reply}");
+    let j = Json::parse(body_of(&reply)).unwrap();
+    assert_eq!(j.req_str("version").unwrap(), "mxmoe-status-v1");
+    assert!(j.get("report").is_some(), "live counters must always be present");
+    assert_eq!(j.get("series").and_then(Json::as_arr).unwrap().len(), 0);
+    assert_eq!(j.get("plans").and_then(Json::as_arr).unwrap().len(), 0);
+    let reply = raw(addr, "GET /debug HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(status_of(&reply), 200, "{reply}");
+    let body = body_of(&reply);
+    assert!(body.starts_with("<!doctype html>"), "{body}");
+    assert!(!body.contains("http://") && !body.contains("https://"), "self-contained");
+    assert!(!body.contains("<script"), "no scripts");
+    server.shutdown();
+}
+
+#[test]
 fn healthz_and_metrics_work_without_an_engine() {
     let server = RejectingBackend::server(vec![]);
     let addr = server.addr();
@@ -356,6 +378,7 @@ fn real_cluster_http_roundtrip() {
     use mxmoe::coordinator::{Cluster, ClusterConfig, ServeConfig};
     use mxmoe::harness::{self, mixed_runtime_plan, save_model_mxt, MINI_MODEL_SEED};
     use mxmoe::moe::{ModelConfig, MoeLm};
+    use mxmoe::obs::SampleConfig;
     use mxmoe::util::Rng;
 
     let Some(artifacts) = harness::require_artifacts() else {
@@ -380,6 +403,8 @@ fn real_cluster_http_roundtrip() {
                     max_wait: Duration::from_millis(2),
                     ..Default::default()
                 },
+                // sampler on, so /v1/status and /debug carry real series
+                sample: SampleConfig { enabled: true, interval_ms: 5, ..Default::default() },
                 ..Default::default()
             },
         )
@@ -401,6 +426,28 @@ fn real_cluster_http_roundtrip() {
     assert!(frames.len() >= 3, "start + tokens + done: {frames:?}");
     assert!(frames[0].starts_with("event: start"));
     assert!(frames.last().unwrap().starts_with("event: done"), "{frames:?}");
+
+    // with the sampler on, both observability pages carry recorded state:
+    // series with points, the boot plan, and inline SVG sparklines
+    std::thread::sleep(Duration::from_millis(15));
+    let reply = raw(addr, "GET /v1/status HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(status_of(&reply), 200, "{reply}");
+    let j = Json::parse(body_of(&reply)).unwrap();
+    assert_eq!(j.req_str("version").unwrap(), "mxmoe-status-v1");
+    let series = j.get("series").and_then(Json::as_arr).unwrap();
+    assert!(!series.is_empty(), "sampled cluster must report series");
+    assert!(
+        series.iter().any(|s| s.req_str("name").map(|n| n == "queue_depth").unwrap_or(false)),
+        "queue_depth series must be present"
+    );
+    let plans = j.get("plans").and_then(Json::as_arr).unwrap();
+    assert!(!plans.is_empty(), "boot plan must be in the provenance block");
+    let reply = raw(addr, "GET /debug HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(status_of(&reply), 200, "{reply}");
+    let body = body_of(&reply);
+    assert!(body.starts_with("<!doctype html>"), "{body}");
+    assert!(body.contains("<svg"), "sampled series must render sparklines");
+    assert!(!body.contains("http://") && !body.contains("https://"), "self-contained");
 
     server.shutdown();
     let cluster = Arc::try_unwrap(cluster).ok().expect("backend still referenced");

@@ -1,0 +1,249 @@
+//! Integration: the fleet observatory end to end — ring-bounded series
+//! semantics (eviction, counter wraparound, point-in-time queries), the
+//! sampler thread's start/stop lifecycle, and — artifact-gated — a
+//! sampled cluster run answering "what was queue depth / KV occupancy at
+//! time T?" and "why does expert (l, e) run at its scheme?" purely from
+//! recorded data, plus the determinism anchor: a deterministic scenario's
+//! ledger is bit-identical with the sampler on and off.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use mxmoe::coordinator::{Cluster, ClusterConfig, ServeConfig};
+use mxmoe::harness::scenario::{run_scenario, validate_bench_json, RunOptions, ScenarioSpec};
+use mxmoe::harness::{mixed_runtime_plan, require_artifacts, save_model_mxt};
+use mxmoe::moe::{ModelConfig, MoeLm};
+use mxmoe::obs::{Observatory, SampleConfig, Sampler};
+use mxmoe::util::Rng;
+
+// ---- series core (no artifacts needed) ---------------------------------
+
+#[test]
+fn ring_bounds_series_and_evicts_oldest() {
+    let obs = Observatory::new(4);
+    for i in 0..10 {
+        obs.gauge("depth", i as f64, (i * 10) as f64);
+    }
+    let pts = obs.points("depth");
+    assert_eq!(pts.len(), 4, "ring must retain exactly `capacity` points");
+    assert_eq!(obs.pushed("depth"), 10, "evictions are counted, not silent");
+    let times: Vec<f64> = pts.iter().map(|p| p.t_s).collect();
+    assert_eq!(times, vec![6.0, 7.0, 8.0, 9.0], "oldest points must go first, order kept");
+    assert_eq!(pts[0].v, 60.0);
+}
+
+#[test]
+fn counter_stores_deltas_and_survives_wraparound() {
+    let obs = Observatory::new(16);
+    obs.counter("reqs_total", 0.0, 5);
+    let rate = obs.counter("reqs_total", 2.0, 12);
+    let pts = obs.points("reqs_total");
+    assert_eq!(pts[0].v, 5.0, "first sample stores the raw total");
+    assert_eq!(pts[1].v, 7.0, "later samples store the delta");
+    assert!((rate - 3.5).abs() < 1e-9, "per-second rate over the 2 s interval");
+    // a u64 wraparound still yields the true increment
+    obs.counter("wrap_total", 0.0, u64::MAX - 1);
+    obs.counter("wrap_total", 1.0, 2);
+    let pts = obs.points("wrap_total");
+    assert_eq!(pts[1].v, 4.0, "wrapping_sub must recover the increment across the wrap");
+}
+
+#[test]
+fn value_at_answers_point_in_time_queries() {
+    let obs = Observatory::new(16);
+    obs.gauge("depth", 1.0, 3.0);
+    obs.gauge("depth", 2.0, 8.0);
+    obs.gauge("depth", 3.0, 2.0);
+    assert_eq!(obs.value_at("depth", 2.5), Some(8.0), "newest point at-or-before T");
+    assert_eq!(obs.value_at("depth", 2.0), Some(8.0), "an exact-time sample counts");
+    assert_eq!(obs.value_at("depth", 99.0), Some(2.0));
+    assert_eq!(obs.value_at("depth", 0.5), None, "before the first sample");
+    assert_eq!(obs.value_at("unknown", 2.0), None);
+}
+
+#[test]
+fn sampler_lifecycle_ticks_then_stops() {
+    let ticks = Arc::new(AtomicU64::new(0));
+    let seen = Arc::clone(&ticks);
+    let sampler = Sampler::spawn(Duration::from_millis(1), move |t_s| {
+        assert!(t_s >= 0.0);
+        seen.fetch_add(1, Ordering::SeqCst);
+    });
+    // the first tick fires immediately; wait for a few more
+    while ticks.load(Ordering::SeqCst) < 3 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let reported = sampler.stop();
+    let frozen = ticks.load(Ordering::SeqCst);
+    assert!(reported >= 3, "sampler must keep ticking until stopped");
+    assert_eq!(reported, frozen, "stop() must report exactly the ticks that ran");
+    std::thread::sleep(Duration::from_millis(10));
+    assert_eq!(ticks.load(Ordering::SeqCst), frozen, "no ticks after stop()");
+}
+
+// ---- sampled cluster queries (artifact-gated) --------------------------
+
+/// Serving-shape model (hidden=128, inter=64 — the tile shapes the AOT
+/// export ships).
+fn observatory_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "observatory-test".into(),
+        vocab: 64,
+        hidden: 128,
+        layers: 2,
+        heads: 4,
+        n_experts: 4,
+        n_shared: 1,
+        topk: 2,
+        inter: 64,
+        dense_first: false,
+        seq_len: 16,
+    }
+}
+
+#[test]
+fn sampled_cluster_answers_time_and_provenance_queries() {
+    let Some(artifacts) = require_artifacts() else {
+        eprintln!("skipping sampled-cluster test: artifacts not built");
+        return;
+    };
+    let cfg = observatory_cfg();
+    let mut rng = Rng::new(0x0B5E_7A70);
+    let lm = MoeLm::random(&cfg, &mut rng);
+    let weights = std::env::temp_dir().join("mxmoe_test_observatory.mxt");
+    save_model_mxt(&lm, &weights).expect("save weights");
+
+    let cluster = Cluster::start(
+        cfg.clone(),
+        weights.clone(),
+        artifacts,
+        mixed_runtime_plan(&cfg),
+        ClusterConfig {
+            replicas: 1,
+            serve: ServeConfig {
+                max_batch_seqs: 2,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            sample: SampleConfig { enabled: true, interval_ms: 5, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .expect("cluster start");
+
+    let receivers: Vec<_> = (0..12)
+        .map(|_| {
+            let seq: Vec<u32> =
+                (0..cfg.seq_len).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+            cluster.submit(seq).expect("submit")
+        })
+        .collect();
+    for rx in receivers {
+        rx.recv_timeout(Duration::from_secs(600)).expect("response");
+    }
+    // at least two full sampler intervals after the work drained, so the
+    // post-drain state is definitely on record
+    std::thread::sleep(Duration::from_millis(25));
+
+    // "what was queue depth / shed rate / kv occupancy at time T?" — all
+    // answered from recorded data alone
+    let obs = cluster.observatory();
+    let names = obs.series_names();
+    for required in ["queue_depth", "admitted_total", "kv_used_tokens", "rejected_kv_total"] {
+        assert!(names.iter().any(|n| n == required), "series '{required}' missing: {names:?}");
+    }
+    let pts = obs.points("queue_depth");
+    assert!(!pts.is_empty(), "sampler must have recorded queue depth");
+    let t_last = pts.last().unwrap().t_s;
+    assert_eq!(obs.value_at("queue_depth", t_last), Some(pts.last().unwrap().v));
+    assert_eq!(obs.value_at("queue_depth", t_last + 60.0), Some(pts.last().unwrap().v));
+    assert!(obs.value_at("queue_depth", -1.0).is_none(), "no data before the sampler started");
+    assert!(obs.value_at("kv_used_tokens", t_last).is_some());
+    assert!(obs.value_at("rejected_queue_full_total", t_last).is_some());
+    let snap = obs.snapshot();
+    let admitted = snap.series.iter().find(|s| s.name == "admitted_total").unwrap();
+    assert_eq!(admitted.total, 12, "counter raw total must match the requests admitted");
+    assert!(
+        snap.histograms.iter().any(|h| h.name == "queue_depth_hist" && h.count > 0),
+        "queue-depth histogram must have observations"
+    );
+
+    // "why does expert (l, e) run at its scheme?" — from the ledger alone
+    let ledger = cluster.provenance();
+    let rec = ledger.latest().expect("boot plan must be recorded");
+    assert_eq!(rec.generation, 0, "first record is the boot plan");
+    assert!(!rec.decisions.is_empty(), "boot plan must carry per-slot decisions");
+    let d = &rec.decisions[0];
+    let why = ledger.explain(d.layer, d.expert).expect("slot must be explainable");
+    assert_eq!(why.decision.scheme, d.scheme);
+    let text = why.describe();
+    assert!(
+        text.contains(d.scheme.name()) && text.contains("boot"),
+        "explanation must name the scheme and the trigger: {text}"
+    );
+    assert!(ledger.explain(usize::MAX, usize::MAX).is_none());
+
+    cluster.shutdown();
+    let _ = std::fs::remove_file(&weights);
+}
+
+// ---- sampler determinism (artifact-gated) ------------------------------
+
+fn tiny_deterministic_spec() -> ScenarioSpec {
+    ScenarioSpec::parse(
+        r#"{
+          "schema": "mxmoe-scenario-v1",
+          "name": "observatory_anchor",
+          "description": "sampler on/off determinism anchor",
+          "seed": 4242,
+          "ticks": 6,
+          "replicas": 1,
+          "deterministic": true,
+          "arrival": {"curve": "constant", "rate": 2.0},
+          "mix": [{"from_tick": 0, "interactive": 0.5, "standard": 0.3, "batch": 0.2}],
+          "prompt_tokens": {"min": 4, "max": 12},
+          "generate_fraction": 0.25,
+          "max_new_tokens": 4,
+          "admission": {"max_queued_seqs": 16, "max_queued_tokens": 4096,
+                        "privileged_reserve": 0.0, "auto_reserve": false},
+          "slo": {"max_shed_rate": 0.0, "min_served": 12}
+        }"#,
+    )
+    .expect("tiny spec parses")
+}
+
+#[test]
+fn deterministic_ledger_is_bit_identical_with_sampler_on() {
+    if require_artifacts().is_none() {
+        eprintln!("skipping sampler-determinism test: artifacts not built");
+        return;
+    }
+    let spec_off = tiny_deterministic_spec();
+    let mut spec_on = spec_off.clone();
+    spec_on.sample_interval_ms = Some(5);
+    spec_on.validate().expect("sampling is allowed in deterministic specs");
+
+    let opts = RunOptions { smoke: true, dispatch_threads: None };
+    let off = run_scenario(&spec_off, &opts).expect("sampler-off run");
+    let on = run_scenario(&spec_on, &opts).expect("sampler-on run");
+
+    // the sampler is a pure observer: the entire ledger must not move
+    assert_eq!(off.ledger, on.ledger, "sampling must not change the ledger by a single bit");
+    assert_eq!(off.verdict.status(), "pass");
+    assert_eq!(on.verdict.status(), "pass");
+
+    // ...but only the sampled run carries the recorded series
+    assert!(off.timeseries.is_none(), "no sample_interval_ms → no timeseries block");
+    let ts = on.timeseries.as_ref().expect("sampled run must carry its series");
+    assert!(
+        ts.series.iter().any(|s| s.name == "queue_depth" && !s.points.is_empty()),
+        "sampled run must have queue-depth points"
+    );
+
+    // the bench JSON gains a `timeseries` block and still validates
+    let j = on.to_json();
+    assert!(j.get("timeseries").is_some(), "bench JSON must carry the timeseries block");
+    let check = validate_bench_json(&j.pretty()).expect("bench JSON with timeseries validates");
+    assert_eq!(check.verdict.as_deref(), Some("pass"));
+}
