@@ -218,6 +218,31 @@ pub fn measured_speeds(status: &[Mutex<ReplicaStatus>]) -> SchemeSpeeds {
     SchemeSpeeds::from_measurements(&rows)
 }
 
+/// Per-scheme wave totals summed across replica statuses: at most one
+/// `(family, useful_rows, busy_s)` tuple per runtime family. The
+/// observatory sampler needs this shape — `record_sample` feeds each
+/// family into a single `wave_rows_*_total` / `wave_busy_s_*` series, so
+/// a raw concat of per-replica rows would push several different
+/// "totals" into one series at the same instant and corrupt its deltas.
+pub fn sum_scheme_rows(statuses: &[ReplicaStatus]) -> Vec<(RuntimeScheme, usize, f64)> {
+    let mut agg = [(0usize, 0.0f64); 4]; // (rows, busy_s) per family
+    let mut seen = [false; 4];
+    for st in statuses {
+        for &(s, r, busy) in &st.scheme_rows {
+            let i = scheme_index(s);
+            agg[i].0 += r;
+            agg[i].1 += busy;
+            seen[i] = true;
+        }
+    }
+    RuntimeScheme::ALL
+        .iter()
+        .copied()
+        .filter(|&s| seen[scheme_index(s)])
+        .map(|s| (s, agg[scheme_index(s)].0, agg[scheme_index(s)].1))
+        .collect()
+}
+
 /// Expert-affinity score of routing a `batch_tokens`-token batch to a
 /// replica whose plan is `schemes` (`[block_pos][slot]`, routed then
 /// shared), given the cluster's live routed-expert frequencies `freqs`
@@ -510,10 +535,7 @@ impl Cluster {
                 let statuses: Vec<ReplicaStatus> =
                     st.iter().map(|s| s.lock().unwrap().clone()).collect();
                 let report = ServerReport::live(&adm.report(), &statuses);
-                let mut rows: Vec<(RuntimeScheme, usize, f64)> = Vec::new();
-                for s in &statuses {
-                    rows.extend_from_slice(&s.scheme_rows);
-                }
+                let rows = sum_scheme_rows(&statuses);
                 let (queued_requests, _queued_tokens) = adm.queued();
                 let queued_batches: usize = q.depths().iter().sum();
                 record_sample(&obs, t_s, &report, queued_requests, queued_batches, &rows);
@@ -1114,6 +1136,38 @@ mod tests {
         );
         let m = measured_speeds(&status);
         assert!((m.speed(RuntimeScheme::Fp16) - 1.0).abs() < 1e-12, "anchored at fp16");
+    }
+
+    #[test]
+    fn sum_scheme_rows_totals_each_family_once() {
+        use crate::quant::QuantScheme;
+        let cfg = ModelConfig {
+            name: "rows".into(),
+            vocab: 32,
+            hidden: 16,
+            layers: 2,
+            heads: 2,
+            n_experts: 2,
+            n_shared: 0,
+            topk: 1,
+            inter: 8,
+            dense_first: false,
+            seq_len: 8,
+        };
+        let alloc = Allocation::uniform(&cfg, QuantScheme::FP16);
+        let mut a = ReplicaStatus::boot(&cfg, &alloc);
+        let mut b = ReplicaStatus::boot(&cfg, &alloc);
+        a.scheme_rows =
+            vec![(RuntimeScheme::Fp16, 100, 0.5), (RuntimeScheme::W4A4, 40, 0.1)];
+        b.scheme_rows = vec![(RuntimeScheme::Fp16, 60, 0.25)];
+        let rows = sum_scheme_rows(&[a, b]);
+        // one tuple per family — the sampler feeds each family into one
+        // counter series, so duplicates would corrupt its deltas
+        assert_eq!(
+            rows,
+            vec![(RuntimeScheme::Fp16, 160, 0.75), (RuntimeScheme::W4A4, 40, 0.1)]
+        );
+        assert!(sum_scheme_rows(&[]).is_empty());
     }
 
     #[test]

@@ -3,8 +3,8 @@
 //!
 //! Point-in-time reports show *where the cluster is*; they cannot show
 //! *how it got there*. The [`Observatory`] is a registry of named series —
-//! gauges, monotone counters (stored as per-sample deltas, wraparound
-//! safe), and fixed-bucket histograms — each bounded by the same
+//! gauges, monotone counters (stored as per-sample deltas, wraparound-
+//! and reset-safe), and fixed-bucket histograms — each bounded by the same
 //! fill-then-overwrite cursor ring the metric latency windows use. A
 //! [`Sampler`] thread polls `Cluster::live_report()` on a configurable
 //! interval and folds the snapshot in through [`record_sample`]; nothing
@@ -63,7 +63,8 @@ pub enum SeriesKind {
     /// Point-in-time level; each point is the level at that sample.
     Gauge,
     /// Monotone total; each point is the *delta* since the previous
-    /// sample (wraparound-safe), so a point is already a per-interval rate.
+    /// sample (wraparound- and reset-safe), so a point is already a
+    /// per-interval rate.
     Counter,
 }
 
@@ -218,9 +219,16 @@ impl Observatory {
     }
 
     /// Record a monotone counter's raw total; stores the delta since the
-    /// previous sample (`wrapping_sub`, so a u64 wraparound still yields
-    /// the true increment). Returns the per-second rate over the elapsed
-    /// interval (0.0 on the first sample).
+    /// previous sample. A genuine u64 wraparound (previous total near
+    /// `u64::MAX`) still yields the true increment via `wrapping_sub`;
+    /// any other decrease is treated as a counter reset — Prometheus
+    /// `rate()` style — and records a zero delta. Cluster-summed totals
+    /// reset partially when a replica respawns (`ReplicaStatus::boot`
+    /// zeroes its slot), so crediting the post-reset raw total as the
+    /// increment would double-count the surviving replicas; dropping one
+    /// interval's increment is the bounded error. Returns the per-second
+    /// rate over the elapsed interval (0.0 on the first sample and on a
+    /// reset).
     pub fn counter(&self, name: &str, t_s: f64, raw: u64) -> f64 {
         let mut g = self.inner.lock().unwrap();
         let s = g
@@ -228,7 +236,14 @@ impl Observatory {
             .entry(name.to_string())
             .or_insert_with(|| Series::new(SeriesKind::Counter));
         let (delta, rate) = if s.has_raw {
-            let d = raw.wrapping_sub(s.last_raw);
+            let d = if raw >= s.last_raw {
+                raw - s.last_raw
+            } else if s.last_raw - raw > u64::MAX / 2 {
+                // the old total sat near u64::MAX: a true wraparound
+                raw.wrapping_sub(s.last_raw)
+            } else {
+                0 // reset (e.g. replica respawn shrank the summed total)
+            };
             let dt = t_s - s.last_t_s;
             (d, if dt > 0.0 { d as f64 / dt } else { 0.0 })
         } else {
@@ -458,6 +473,22 @@ mod tests {
         assert_eq!(pts[1].v, 4.0);
         assert_eq!(pts[2].v, 7.0, "wrapping_sub recovers the increment");
         assert!((rate - 7.0).abs() < 1e-9, "rate over the 1 s interval");
+    }
+
+    #[test]
+    fn counter_reset_records_zero_delta() {
+        let obs = Observatory::new(8);
+        obs.counter("c", 0.0, 1000);
+        obs.counter("c", 1.0, 2000);
+        // a replica respawn shrinks the cluster-summed total: not a
+        // wraparound, must not be credited as a ~u64::MAX increment
+        let rate = obs.counter("c", 2.0, 600);
+        let pts = obs.points("c");
+        assert_eq!(pts[2].v, 0.0, "reset records a zero delta, not a wrapped one");
+        assert_eq!(rate, 0.0, "no rate across a reset");
+        // deltas resume from the post-reset baseline
+        obs.counter("c", 3.0, 700);
+        assert_eq!(obs.points("c")[3].v, 100.0);
     }
 
     #[test]

@@ -50,6 +50,22 @@ fn counter_stores_deltas_and_survives_wraparound() {
 }
 
 #[test]
+fn counter_treats_restart_shrinkage_as_reset_not_wraparound() {
+    // a replica respawn zeroes its ReplicaStatus slot, so cluster-summed
+    // totals can shrink without wrapping; the series must record a zero
+    // delta, not a ~u64::MAX one
+    let obs = Observatory::new(16);
+    obs.counter("reqs_total", 0.0, 500);
+    obs.counter("reqs_total", 1.0, 900);
+    obs.counter("reqs_total", 2.0, 450); // one of two replicas respawned
+    let rate = obs.counter("reqs_total", 3.0, 520);
+    let pts = obs.points("reqs_total");
+    assert_eq!(pts[2].v, 0.0, "shrinkage is a reset: zero delta");
+    assert_eq!(pts[3].v, 70.0, "deltas resume from the post-reset baseline");
+    assert!((rate - 70.0).abs() < 1e-9);
+}
+
+#[test]
 fn value_at_answers_point_in_time_queries() {
     let obs = Observatory::new(16);
     obs.gauge("depth", 1.0, 3.0);
@@ -120,7 +136,9 @@ fn sampled_cluster_answers_time_and_provenance_queries() {
         artifacts,
         mixed_runtime_plan(&cfg),
         ClusterConfig {
-            replicas: 1,
+            // two replicas: the sampler must sum per-replica wave rows and
+            // counters into one total per series, not interleave them
+            replicas: 2,
             serve: ServeConfig {
                 max_batch_seqs: 2,
                 max_wait: Duration::from_millis(1),
@@ -168,6 +186,19 @@ fn sampled_cluster_answers_time_and_provenance_queries() {
         snap.histograms.iter().any(|h| h.name == "queue_depth_hist" && h.count > 0),
         "queue-depth histogram must have observations"
     );
+    // with >1 replica, interleaving per-replica totals into one series
+    // would wrap into ~1.8e19 deltas; every recorded delta must stay sane
+    for s in &snap.series {
+        for p in &s.points {
+            assert!(
+                p.v.is_finite() && p.v >= 0.0 && p.v < 1e15,
+                "series '{}' holds a garbage delta {} — per-replica totals \
+                 must be summed before sampling",
+                s.name,
+                p.v
+            );
+        }
+    }
 
     // "why does expert (l, e) run at its scheme?" — from the ledger alone
     let ledger = cluster.provenance();
